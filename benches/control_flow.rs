@@ -1,0 +1,76 @@
+//! Bench A1 (Eq. 1): cost aggregation over deep control-flow structures —
+//! nested for/parfor/while/if and function calls — both the estimator's
+//! correct weighting (printed) and its latency on deep programs.
+
+use std::collections::HashMap;
+
+use systemds::api::{compile_with_meta, CompileOptions};
+use systemds::conf::CostConstants;
+use systemds::cost;
+use systemds::ir::build::StaticMeta;
+use systemds::matrix::{Format, MatrixCharacteristics};
+use systemds::util::bench::Bencher;
+
+fn meta() -> StaticMeta {
+    StaticMeta::default().with(
+        "data/X",
+        MatrixCharacteristics::dense(10_000, 1_000, 1000),
+        Format::BinaryBlock,
+    )
+}
+
+fn args() -> HashMap<usize, String> {
+    let mut m = HashMap::new();
+    m.insert(1, "data/X".to_string());
+    m.insert(4, "data/out".to_string());
+    m
+}
+
+fn cost_of(src: &str) -> f64 {
+    let opts = CompileOptions::default();
+    let c = compile_with_meta(src, &args(), &meta(), &opts).unwrap();
+    cost::cost_program(&c.runtime, &opts.cfg, &opts.cc.0, &CostConstants::default()).total
+}
+
+fn main() {
+    println!("== control_flow: Eq. 1 weights ==");
+    let body = "s = s + sum(X);";
+    let base = cost_of(&format!("X = read($1);\ns = 0;\n{body}\nwrite(s, $4);"));
+    let for10 = cost_of(&format!(
+        "X = read($1);\ns = 0;\nfor (i in 1:10) {{ {body} }}\nwrite(s, $4);"
+    ));
+    let parfor24 = cost_of(&format!(
+        "X = read($1);\ns = 0;\nparfor (i in 1:24) {{ {body} }}\nwrite(s, $4);"
+    ));
+    let while_loop = cost_of(&format!(
+        "X = read($1);\ns = 0;\nwhile (s < 100) {{ {body} }}\nwrite(s, $4);"
+    ));
+    let branch = cost_of(&format!(
+        "X = read($1);\ns = 0;\nc = sum(X);\nif (c > 0) {{ {body} }} else {{ s = 1; }}\nwrite(s, $4);"
+    ));
+    println!("single body:          {base:.4}s");
+    println!("for 1:10 (w=N):       {for10:.4}s");
+    println!("parfor 1:24 (w=⌈N/k⌉): {parfor24:.4}s");
+    println!("while (w=N̂=10):       {while_loop:.4}s");
+    println!("if (w=1/2):           {branch:.4}s");
+
+    println!("\n== deep-nesting estimator latency ==");
+    let mut b = Bencher::new();
+    for depth in [2usize, 4, 6] {
+        let mut src = String::from("X = read($1);\ns = 0;\n");
+        for d in 0..depth {
+            src.push_str(&format!("for (i{d} in 1:5) {{\n"));
+        }
+        src.push_str("s = s + sum(X);\n");
+        for _ in 0..depth {
+            src.push_str("}\n");
+        }
+        src.push_str("write(s, $4);");
+        let opts = CompileOptions::default();
+        let c = compile_with_meta(&src, &args(), &meta(), &opts).unwrap();
+        b.bench(&format!("cost nested-for depth {depth}"), || {
+            cost::cost_program(&c.runtime, &opts.cfg, &opts.cc.0, &CostConstants::default())
+                .total
+        });
+    }
+}

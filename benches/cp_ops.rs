@@ -1,0 +1,68 @@
+//! CP hot-path kernels: native Rust (single/multi-threaded) vs the
+//! AOT-compiled PJRT artifacts — the L3/L1 performance surface of the
+//! §Perf pass. Run `make artifacts` first to include the PJRT rows.
+
+use systemds::matrix::{ops, DenseMatrix};
+use systemds::runtime::{kernel_key, KernelRegistry};
+use systemds::util::bench::Bencher;
+
+fn main() {
+    println!("== cp_ops: tsmm / matmult / solve kernels ==");
+    let registry = KernelRegistry::load(std::path::Path::new("artifacts")).ok();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+    let mut b = Bencher::new();
+
+    for (m, n) in [(2048usize, 128usize), (4096, 256)] {
+        let x = DenseMatrix::rand(m, n, -1.0, 1.0, 1.0, 1);
+        let flops = 0.5 * m as f64 * (n * n) as f64;
+        let s1 = b.bench(&format!("tsmm {m}x{n} native 1t"), || ops::tsmm_left(&x, 1)).clone();
+        let st = b
+            .bench(&format!("tsmm {m}x{n} native {threads}t"), || ops::tsmm_left(&x, threads))
+            .clone();
+        println!(
+            "   -> native {:.2} GFLOP/s (1t), {:.2} GFLOP/s ({threads}t)",
+            flops / s1.median.as_secs_f64() / 1e9,
+            flops / st.median.as_secs_f64() / 1e9
+        );
+        if let Some(reg) = &registry {
+            let key = kernel_key("tsmm", &[(m, n)]);
+            if reg.has(&key) {
+                // warm-compile before measuring
+                let _ = reg.execute(&key, &[&x]);
+                let sp =
+                    b.bench(&format!("tsmm {m}x{n} PJRT"), || reg.execute(&key, &[&x])).clone();
+                println!("   -> PJRT {:.2} GFLOP/s", flops / sp.median.as_secs_f64() / 1e9);
+            }
+        }
+    }
+
+    // matvec (the (y'X)' rewrite path) + solve
+    let x = DenseMatrix::rand(4096, 256, -1.0, 1.0, 1.0, 2);
+    let yt = DenseMatrix::rand(1, 4096, -1.0, 1.0, 1.0, 3);
+    b.bench("matmult 1x4096 * 4096x256 native", || ops::matmult(&yt, &x, threads));
+    if let Some(reg) = &registry {
+        let key = kernel_key("matmult", &[(1, 4096), (4096, 256)]);
+        if reg.has(&key) {
+            let _ = reg.execute(&key, &[&yt, &x]);
+            b.bench("matmult 1x4096 * 4096x256 PJRT", || reg.execute(&key, &[&yt, &x]));
+        }
+    }
+    let a = {
+        let mut a = ops::tsmm_left(&DenseMatrix::rand(512, 256, -1.0, 1.0, 1.0, 4), threads);
+        for i in 0..256 {
+            a.values[i * 256 + i] += 1.0;
+        }
+        a
+    };
+    let rhs = DenseMatrix::rand(256, 1, -1.0, 1.0, 1.0, 5);
+    b.bench("solve 256 native", || ops::solve(&a, &rhs).unwrap());
+    if let Some(reg) = &registry {
+        let key = kernel_key("solve", &[(256, 256), (256, 1)]);
+        if reg.has(&key) {
+            let _ = reg.execute(&key, &[&a, &rhs]);
+            b.bench("solve 256 PJRT", || reg.execute(&key, &[&a, &rhs]));
+        }
+    }
+
+    b.bench("transpose 4096x256", || ops::transpose(&x));
+}

@@ -1,0 +1,60 @@
+//! End-to-end throughput: compile + cost + execute the LinReg pipeline on
+//! real data for both a pure-CP plan and a forced-MR plan — the workload
+//! of examples/cost_accuracy.rs as a repeatable benchmark.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use systemds::api::{compile, CompileOptions, LINREG_DS};
+use systemds::conf::{ClusterConfig, CostConstants, MB};
+use systemds::cost;
+use systemds::cp::interp::Executor;
+use systemds::matrix::{io, ops, DenseMatrix};
+use systemds::runtime::KernelRegistry;
+use systemds::util::bench::Bencher;
+
+fn main() {
+    println!("== e2e: compile + cost + execute LinReg DS ==");
+    let dir = std::env::temp_dir().join("sysds_bench_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+    let registry = KernelRegistry::load(std::path::Path::new("artifacts")).ok();
+
+    let x = DenseMatrix::rand(4096, 256, -1.0, 1.0, 1.0, 1);
+    let y = ops::matmult(&x, &DenseMatrix::rand(256, 1, -0.5, 0.5, 1.0, 2), threads);
+    let xp = dir.join("X").to_string_lossy().to_string();
+    let yp = dir.join("y").to_string_lossy().to_string();
+    io::write_binary_block(&xp, &x, 1000).unwrap();
+    io::write_binary_block(&yp, &y, 1000).unwrap();
+    let mut args = HashMap::new();
+    args.insert(1, xp);
+    args.insert(2, yp);
+    args.insert(3, "0".to_string());
+    args.insert(4, dir.join("beta").to_string_lossy().to_string());
+
+    let mut b = Bencher::new().with_budget(Duration::from_millis(500), Duration::from_secs(4));
+    for (name, heap_mb) in [("CP plan", 2048.0), ("MR plan", 0.12)] {
+        let mut cc = ClusterConfig::local(threads, heap_mb * MB);
+        cc.hdfs_block_bytes = 2.0 * MB;
+        let opts =
+            CompileOptions { cc: systemds::api::ClusterConfigOpt(cc), ..Default::default() };
+        let compiled = compile(LINREG_DS, &args, &opts).unwrap();
+        let jobs = compiled.runtime.mr_job_count();
+        b.bench(&format!("{name} ({jobs} MR jobs): compile"), || {
+            compile(LINREG_DS, &args, &opts).unwrap()
+        });
+        b.bench(&format!("{name}: cost"), || {
+            cost::cost_program(&compiled.runtime, &opts.cfg, &opts.cc.0, &CostConstants::default())
+                .total
+        });
+        b.bench(&format!("{name}: execute 4096x256"), || {
+            let mut exec = Executor::new(
+                &opts.cfg,
+                &opts.cc.0,
+                registry.as_ref(),
+                dir.join("scratch"),
+            );
+            exec.run(&compiled.runtime).unwrap()
+        });
+    }
+}

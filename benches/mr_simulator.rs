@@ -1,0 +1,85 @@
+//! MR-simulator throughput: the Figure-3 job (tsmm + r' + mapmm, two ak+)
+//! at varying split counts, plus a cpmm MMCJ job — validates the simulator
+//! is not the bottleneck of the end-to-end accuracy runs and exposes its
+//! per-task overhead.
+
+use std::sync::Arc;
+
+use systemds::conf::{ClusterConfig, SystemConfig, MB};
+use systemds::cp::interp::Executor;
+use systemds::matrix::{DenseMatrix, Format, MatrixCharacteristics};
+use systemds::rtprog::{Instr, JobType, MrInst, MrJob, MrOp};
+use systemds::util::bench::Bencher;
+
+fn mc(r: i64, c: i64) -> MatrixCharacteristics {
+    MatrixCharacteristics::new(r, c, 1000, -1)
+}
+
+fn fig3_job() -> MrJob {
+    MrJob {
+        job_type: JobType::Gmr,
+        inputs: vec!["X".into(), "ypart".into()],
+        dcache: vec!["ypart".into()],
+        map_insts: vec![
+            MrInst { op: MrOp::Tsmm { left: true }, inputs: vec![0], output: 2, mc: mc(64, 64) },
+            MrInst { op: MrOp::Transpose, inputs: vec![0], output: 3, mc: mc(64, 8192) },
+            MrInst {
+                op: MrOp::MapMM { right_part: true },
+                inputs: vec![3, 1],
+                output: 4,
+                mc: mc(64, 1),
+            },
+        ],
+        shuffle_insts: vec![],
+        agg_insts: vec![
+            MrInst { op: MrOp::Agg { kahan: true }, inputs: vec![2], output: 5, mc: mc(64, 64) },
+            MrInst { op: MrOp::Agg { kahan: true }, inputs: vec![4], output: 6, mc: mc(64, 1) },
+        ],
+        other_insts: vec![],
+        outputs: vec!["outA".into(), "outb".into()],
+        result_indices: vec![5, 6],
+        num_reducers: 4,
+        replication: 1,
+    }
+}
+
+fn main() {
+    println!("== mr_simulator: Figure-3 job at varying split counts ==");
+    let cfg = SystemConfig::default();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+    let mut bench = Bencher::new();
+    let x = DenseMatrix::rand(8192, 64, -1.0, 1.0, 1.0, 1);
+    let y = DenseMatrix::rand(8192, 1, -1.0, 1.0, 1.0, 2);
+    for block_kb in [4096.0, 512.0, 64.0] {
+        let mut cc = ClusterConfig::local(threads, 2048.0 * MB);
+        cc.hdfs_block_bytes = block_kb * 1024.0;
+        let splits = ((8192.0 * 64.0 * 8.0) / cc.hdfs_block_bytes).ceil() as usize;
+        let scratch = std::env::temp_dir().join("sysds_bench_mr");
+        let stats = bench
+            .bench(&format!("GMR tsmm+r'+mapmm, {splits} tasks"), || {
+                let mut exec = Executor::new(&cfg, &cc, None, scratch.clone());
+                exec.symbols
+                    .bind_matrix("X", Arc::new(x.clone()), 1000, &mut exec.pool)
+                    .unwrap();
+                exec.symbols
+                    .bind_matrix("ypart", Arc::new(y.clone()), 1000, &mut exec.pool)
+                    .unwrap();
+                for (name, m) in [("outA", mc(64, 64)), ("outb", mc(64, 1))] {
+                    exec.exec_inst(&Instr::CreateVar {
+                        var: name.into(),
+                        path: String::new(),
+                        temp: true,
+                        format: Format::BinaryBlock,
+                        mc: m,
+                    })
+                    .unwrap();
+                }
+                systemds::mr::simulate(&fig3_job(), &mut exec).unwrap()
+            })
+            .clone();
+        println!(
+            "   -> {:.1} µs/task",
+            stats.median.as_secs_f64() * 1e6 / splits as f64
+        );
+    }
+}

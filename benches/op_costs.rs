@@ -1,0 +1,53 @@
+//! Bench A2 (Eq. 2): the white-box FLOP models across the
+//! dense/sparse regimes, plus estimator throughput per instruction —
+//! the cost model must stay cheap enough to be called inside optimizer
+//! search loops (resource optimization recompiles per configuration).
+
+use systemds::api::{CompileOptions, Scenario};
+use systemds::conf::CostConstants;
+use systemds::cost::{self, flops};
+use systemds::matrix::MatrixCharacteristics;
+use systemds::util::bench::Bencher;
+
+fn main() {
+    println!("== op_costs: Eq. 2 cost functions (tsmm dense/sparse sweep) ==");
+    let clock = 2.15e9;
+    println!("{:>10} {:>14} {:>12}", "sparsity", "FLOPs", "est. time");
+    for s in [1.0, 0.5, 0.39, 0.1, 0.01, 0.001] {
+        let mut mc = MatrixCharacteristics::dense(100_000_000, 1_000, 1000);
+        mc.nnz = (mc.rows as f64 * mc.cols as f64 * s) as i64;
+        let f = flops::tsmm(&mc);
+        println!("{:>10} {:>14.3e} {:>11.2}s", s, f, f / clock / 72.0);
+    }
+
+    println!("\n== estimator micro-benchmarks ==");
+    let mut b = Bencher::new();
+    b.bench("flops::tsmm", || {
+        flops::tsmm(&MatrixCharacteristics::dense(100_000_000, 1_000, 1000))
+    });
+    b.bench("flops::matmult", || {
+        flops::matmult(
+            &MatrixCharacteristics::dense(1_000, 100_000_000, 1000),
+            &MatrixCharacteristics::dense(100_000_000, 1, 1000),
+        )
+    });
+    b.bench("flops::solve", || {
+        flops::solve(
+            &MatrixCharacteristics::dense(1_000, 1_000, 1000),
+            &MatrixCharacteristics::dense(1_000, 1, 1000),
+        )
+    });
+
+    // whole-plan costing throughput (instructions/second)
+    let opts = CompileOptions::default();
+    for s in [Scenario::xs(), Scenario::xl1()] {
+        let compiled = s.compile(&opts);
+        let (cp, mr) = compiled.runtime.size();
+        let stats = b.bench(&format!("cost_program {} ({cp} CP/{mr} MR)", s.name), || {
+            cost::cost_program(&compiled.runtime, &opts.cfg, &opts.cc.0, &CostConstants::default())
+                .total
+        });
+        let per_inst = stats.median.as_secs_f64() / (cp + mr) as f64;
+        println!("   -> {:.1} ns/instruction", per_inst * 1e9);
+    }
+}

@@ -1,0 +1,53 @@
+//! Bench C2 (§2 claim): "generating runtime plans from HOP DAGs is rather
+//! efficient (<0.5 ms for common DAG sizes), which makes the generation
+//! and costing of runtime plans feasible."
+//!
+//! Measures each compilation phase separately plus generation-only and
+//! costing-only on the pre-compiled HOP program.
+
+use systemds::api::{CompileOptions, Scenario};
+use systemds::conf::CostConstants;
+use systemds::cost;
+use systemds::dml;
+use systemds::ir;
+use systemds::lop::SelectionHints;
+use systemds::rtprog;
+use systemds::util::bench::Bencher;
+
+fn main() {
+    println!("== plan_generation: per-phase latency (paper: <0.5ms/DAG) ==");
+    let mut b = Bencher::new();
+    for s in [Scenario::xs(), Scenario::xl1(), Scenario::xl4()] {
+        let opts = CompileOptions::default();
+        let args = s.args();
+        let meta = s.meta(opts.cfg.blocksize);
+        let script = dml::frontend(s.script()).unwrap();
+
+        b.bench(&format!("{}: parse+validate", s.name), || {
+            dml::frontend(s.script()).unwrap()
+        });
+        b.bench(&format!("{}: build HOPs", s.name), || {
+            ir::build::build_program(&script, &args, &meta, opts.cfg.blocksize).unwrap()
+        });
+        // full prepared HOP program for the generation-only measurement
+        let mut prog = ir::build::build_program(&script, &args, &meta, opts.cfg.blocksize).unwrap();
+        ir::rewrites::rewrite_program(&mut prog);
+        ir::size_prop::propagate(&mut prog, opts.cfg.blocksize);
+        ir::memory::annotate(&mut prog, &opts.cfg);
+        ir::exec_type::select(&mut prog, &opts.cfg, &opts.cc.0);
+        let stats = b.bench(&format!("{}: generate runtime plan", s.name), || {
+            rtprog::gen::generate(&prog, &opts.cfg, &opts.cc.0, &SelectionHints::default())
+        });
+        let med = stats.median;
+        let rt = rtprog::gen::generate(&prog, &opts.cfg, &opts.cc.0, &SelectionHints::default());
+        b.bench(&format!("{}: cost runtime plan", s.name), || {
+            cost::cost_program(&rt, &opts.cfg, &opts.cc.0, &CostConstants::default()).total
+        });
+        let ok = med.as_secs_f64() < 0.5e-3;
+        println!(
+            "   -> {}: generation {} the paper's 0.5ms budget\n",
+            s.name,
+            if ok { "WITHIN" } else { "ABOVE" }
+        );
+    }
+}

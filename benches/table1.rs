@@ -1,0 +1,41 @@
+//! Bench T1 (Table 1): full compile + cost of every input-size scenario —
+//! the optimizer-side work the paper's cost model enables. Regenerates the
+//! Table-1 rows with plan characteristics and estimated cost.
+
+use systemds::api::{CompileOptions, Scenario};
+use systemds::conf::CostConstants;
+use systemds::cost;
+use systemds::util::bench::Bencher;
+
+fn main() {
+    println!("== table1: compile + cost per scenario (paper Table 1) ==");
+    let opts = CompileOptions::default();
+    let mut b = Bencher::new();
+    for s in Scenario::all() {
+        b.bench(&format!("compile+cost {}", s.name), || {
+            let compiled = s.compile(&opts);
+            cost::cost_program(&compiled.runtime, &opts.cfg, &opts.cc.0, &CostConstants::default())
+                .total
+        });
+    }
+    println!("\n-- regenerated table --");
+    println!("{:<6} {:>16} {:>10} {:>8} {:>12}", "name", "X", "input", "MR jobs", "est. cost");
+    for s in Scenario::all() {
+        let compiled = s.compile(&opts);
+        let c = cost::cost_program(
+            &compiled.runtime,
+            &opts.cfg,
+            &opts.cc.0,
+            &CostConstants::default(),
+        );
+        println!(
+            "{:<6} {:>9}x{:<6} {:>10} {:>8} {:>11.1}s",
+            s.name,
+            s.x_rows,
+            s.x_cols,
+            systemds::util::fmt::fmt_bytes(s.input_bytes),
+            compiled.runtime.mr_job_count(),
+            c.total
+        );
+    }
+}

@@ -1,0 +1,65 @@
+//! Table 1 + §2 reproduction: compile all five input-size scenarios and
+//! report the generated plan characteristics the paper discusses —
+//! operator selection (tsmm / mapmm / cpmm), the (yᵀX)ᵀ rewrite, broadcast
+//! partitioning, and the piggybacked MR-job counts (XL1 = 1, XL2–XL4 = 3).
+//!
+//! ```sh
+//! cargo run --release --example linreg_scenarios
+//! ```
+
+use systemds::api::{CompileOptions, Scenario};
+use systemds::conf::CostConstants;
+use systemds::cost;
+use systemds::util::fmt::fmt_bytes;
+
+fn main() {
+    let opts = CompileOptions::default();
+    println!(
+        "{:<6} {:>16} {:>9} | {:>7} {:>22} {:>10} {:>11}",
+        "name", "X dims", "size", "MR jobs", "X'X / X'y operators", "partition", "est. cost"
+    );
+    println!("{}", "-".repeat(92));
+    for s in Scenario::all() {
+        let compiled = s.compile(&opts);
+        let plan = compiled.explain_runtime();
+        let mr_jobs = compiled.runtime.mr_job_count();
+        let xtx = if plan.contains("cpmm") && s.x_cols > 1000 {
+            "cpmm"
+        } else if mr_jobs > 0 && plan.contains("MR tsmm") {
+            "MR tsmm"
+        } else {
+            "CP tsmm"
+        };
+        let xty = if plan.contains("mapmm") {
+            "mapmm"
+        } else if mr_jobs > 0 && plan.matches("cpmm").count() >= 1 && !plan.contains("mapmm") {
+            "cpmm"
+        } else {
+            "CP (y'X)'"
+        };
+        let partition = plan.contains("CP partition");
+        let report = cost::cost_program(
+            &compiled.runtime,
+            &opts.cfg,
+            &opts.cc.0,
+            &CostConstants::default(),
+        );
+        println!(
+            "{:<6} {:>9}x{:<6} {:>9} | {:>7} {:>11} / {:<8} {:>10} {:>10.1}s",
+            s.name,
+            s.x_rows,
+            s.x_cols,
+            fmt_bytes(s.input_bytes),
+            mr_jobs,
+            xtx,
+            xty,
+            if partition { "yes" } else { "no" },
+            report.total,
+        );
+    }
+    println!();
+    println!("paper §2 expectations: XS all-CP; XL1 one GMR job (tsmm+r'+mapmm");
+    println!("piggybacked, partitioned broadcast of y); XL2 cpmm for X'X (wide rows);");
+    println!("XL3 cpmm for X'y (broadcast exceeds map budget); XL4 both cpmm —");
+    println!("each of XL2-XL4 compiling to exactly three MR jobs.");
+}

@@ -1,0 +1,70 @@
+//! Quickstart: compile the paper's LinReg DS script, look at every
+//! compilation level (HOPs → runtime plan → costed plan), then execute a
+//! real small instance end to end.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use std::collections::HashMap;
+
+use systemds::api::{compile, CompileOptions, Scenario, LINREG_DS};
+use systemds::conf::{ClusterConfig, CostConstants, MB};
+use systemds::cost;
+use systemds::cp::interp::Executor;
+use systemds::matrix::{io, ops, DenseMatrix};
+use systemds::runtime::KernelRegistry;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. compile the paper's XS scenario against the paper's cluster
+    let opts = CompileOptions::default();
+    let xs = Scenario::xs();
+    let compiled = xs.compile(&opts);
+
+    println!("=== HOP EXPLAIN (paper Figure 1) ===");
+    println!("{}", compiled.explain_hops(&opts));
+
+    println!("=== Runtime plan (paper Figure 2) ===");
+    println!("{}", compiled.explain_runtime());
+
+    println!("=== Costed plan (paper Figure 4) ===");
+    let report =
+        cost::cost_program(&compiled.runtime, &opts.cfg, &opts.cc.0, &CostConstants::default());
+    println!("{}", cost::explain_costed(&report));
+    println!("estimated C(P,cc) = {:.2}s (paper: 3.31s)\n", report.total);
+
+    // ---- 2. run a real instance: 2048x128 data on this machine
+    let dir = std::env::temp_dir().join("sysds_quickstart");
+    std::fs::create_dir_all(&dir)?;
+    let x = DenseMatrix::rand(2048, 128, -1.0, 1.0, 1.0, 11);
+    let beta_true = DenseMatrix::rand(128, 1, -0.5, 0.5, 1.0, 12);
+    let y = ops::matmult(&x, &beta_true, 4);
+    let xp = dir.join("X").to_string_lossy().to_string();
+    let yp = dir.join("y").to_string_lossy().to_string();
+    io::write_binary_block(&xp, &x, 1000)?;
+    io::write_binary_block(&yp, &y, 1000)?;
+
+    let mut args = HashMap::new();
+    args.insert(1, xp);
+    args.insert(2, yp);
+    args.insert(3, "0".to_string());
+    args.insert(4, dir.join("beta").to_string_lossy().to_string());
+
+    let local = CompileOptions {
+        cc: systemds::api::ClusterConfigOpt(ClusterConfig::local(8, 2048.0 * MB)),
+        ..Default::default()
+    };
+    let prog = compile(LINREG_DS, &args, &local).map_err(|e| anyhow::anyhow!(e))?;
+    let registry = KernelRegistry::load(std::path::Path::new("artifacts")).ok();
+    let mut exec = Executor::new(&local.cfg, &local.cc.0, registry.as_ref(), dir.join("scratch"));
+    let stats = exec.run(&prog.runtime)?;
+    println!(
+        "executed LinReg 2048x128: {} CP insts, {} PJRT kernel calls, {:.3}s",
+        stats.cp_insts, stats.pjrt_calls, stats.elapsed_secs
+    );
+
+    let beta = io::read_matrix(args.get(&4).unwrap())?;
+    let err = beta.max_abs_diff(&beta_true);
+    println!("max |beta - beta_true| = {err:.2e} (lambda-regularised)");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Resource-optimization use case (paper §1): sweep memory budgets,
+//! recompile + cost the generated plans under each, and report the
+//! cost-vs-resources frontier. Plan shape flips (MR → hybrid → CP) as the
+//! budget crosses operator memory estimates — the reason a plan-level
+//! analytical cost model is required.
+//!
+//! ```sh
+//! cargo run --release --example resource_opt
+//! ```
+
+use systemds::api::Scenario;
+use systemds::conf::{ClusterConfig, MB};
+use systemds::opt::{compare, resource};
+
+fn main() {
+    let heaps = [256.0, 512.0, 1024.0, 2048.0, 4096.0, 8192.0, 16384.0];
+    for s in [Scenario::xs(), Scenario::xl1()] {
+        println!("=== scenario {} ({}x{}) ===", s.name, s.x_rows, s.x_cols);
+        let choice = resource::optimize(
+            s.script(),
+            &s.args(),
+            &s.meta(1000),
+            &ClusterConfig::paper_cluster(),
+            &heaps,
+        )
+        .expect("sweep");
+        println!("{:>10} {:>8} {:>14}", "heap", "MR jobs", "est. cost");
+        for p in &choice.frontier {
+            let marker = if p.heap_bytes == choice.best.heap_bytes { "  <= best" } else { "" };
+            println!(
+                "{:>8}MB {:>8} {:>13.1}s{marker}",
+                (p.heap_bytes / MB) as i64,
+                p.mr_jobs,
+                p.cost_secs
+            );
+        }
+        println!();
+    }
+
+    // global plan comparison: what would forcing each physical operator cost?
+    println!("=== plan alternatives, scenario XL1 (ablation of §2 choices) ===");
+    let s = Scenario::xl1();
+    let alts = compare::compare_plans(
+        s.script(),
+        &s.args(),
+        &s.meta(1000),
+        &Default::default(),
+    )
+    .expect("compare");
+    println!("{:<24} {:>8} {:>14}", "variant", "MR jobs", "est. cost");
+    for a in &alts {
+        println!("{:<24} {:>8} {:>13.1}s", a.name, a.mr_jobs, a.cost_secs);
+    }
+}

@@ -1,0 +1,106 @@
+"""AOT pipeline: lower the L2/L1 functions to HLO *text* artifacts for the
+Rust PJRT runtime (`rust/src/runtime/`).
+
+Interchange format is HLO text, NOT ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md and aot_recipe.md).
+
+Artifact naming matches the Rust kernel registry
+(``runtime::kernel_key``): ``<op>_<rows>x<cols>[_<rows>x<cols>].hlo.txt``.
+
+Usage: python -m compile.aot [--out ../artifacts]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(m, n):
+    return jax.ShapeDtypeStruct((m, n), jnp.float64)
+
+
+def shape_key(op, *shapes):
+    return op + "".join(f"_{m}x{n}" for (m, n) in shapes)
+
+
+# Shapes compiled ahead of time. These cover the executable scenarios of
+# examples/cost_accuracy.rs plus the registry smoke test.
+TSMM_SHAPES = [(256, 64), (2048, 128), (4096, 256), (8192, 256)]
+MATMULT_SHAPES = [
+    ((1, 2048), (2048, 128)),
+    ((1, 4096), (4096, 256)),
+    ((1, 8192), (8192, 256)),
+]
+SOLVE_SHAPES = [(64, 1), (128, 1), (256, 1)]
+LINREG_SHAPES = [(2048, 128), (4096, 256)]
+
+
+def build_artifacts(out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+
+    def emit(key, fn, *args):
+        path = os.path.join(out_dir, key + ".hlo.txt")
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        written.append(key)
+
+    for (m, n) in TSMM_SHAPES:
+        emit(shape_key("tsmm", (m, n)), lambda x: (model.tsmm(x),), spec(m, n))
+    for ((am, an), (bm, bn)) in MATMULT_SHAPES:
+        emit(
+            shape_key("matmult", (am, an), (bm, bn)),
+            lambda a, b: (model.matmult(a, b),),
+            spec(am, an),
+            spec(bm, bn),
+        )
+    for (n, r) in SOLVE_SHAPES:
+        emit(
+            shape_key("solve", (n, n), (n, r)),
+            lambda a, b: (model.solve(a, b),),
+            spec(n, n),
+            spec(n, r),
+        )
+    for (m, n) in LINREG_SHAPES:
+        emit(
+            shape_key("linreg", (m, n)),
+            lambda x, y: (model.linreg_ds(x, y),),
+            spec(m, n),
+            spec(m, 1),
+        )
+    return written
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    args = ap.parse_args()
+    written = build_artifacts(args.out)
+    print(f"wrote {len(written)} artifacts to {args.out}:")
+    for k in written:
+        print(f"  {k}")
+
+
+if __name__ == "__main__":
+    main()

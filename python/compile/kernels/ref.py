@@ -1,0 +1,31 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the L2 model.
+
+Every kernel in this package is validated against these references by
+``python/tests/`` (pytest + hypothesis) before the AOT artifacts are built.
+"""
+
+import jax.numpy as jnp
+import jax.scipy.linalg as jla
+
+
+def tsmm_ref(x):
+    """Transpose-self matrix multiply: t(X) %*% X."""
+    return x.T @ x
+
+
+def matmult_ref(a, b):
+    """General matrix multiply."""
+    return a @ b
+
+
+def solve_ref(a, b):
+    """Dense linear system solve."""
+    return jla.solve(a, b)
+
+
+def linreg_ds_ref(x, y, lam=0.001):
+    """The paper's LinReg DS pipeline (§1): beta = solve(X'X + lam*I, X'y)."""
+    n = x.shape[1]
+    a = x.T @ x + lam * jnp.eye(n, dtype=x.dtype)
+    b = x.T @ y
+    return jla.solve(a, b)

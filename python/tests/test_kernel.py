@@ -1,0 +1,91 @@
+"""L1 correctness: the Pallas tsmm kernel against the pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes and block sizes; this is the CORE
+correctness signal for the kernel before artifacts are built.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import ref  # noqa: E402
+from compile.kernels import tsmm as tk  # noqa: E402
+
+
+def _rand(m, n, seed, dtype):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((m, n)), dtype=dtype)
+
+
+@pytest.mark.parametrize("m,n", [(8, 8), (64, 32), (256, 64), (300, 50), (128, 128)])
+def test_tsmm_matches_ref(m, n):
+    x = _rand(m, n, 0, jnp.float64)
+    got = tk.tsmm(x)
+    np.testing.assert_allclose(got, ref.tsmm_ref(x), rtol=1e-10, atol=1e-10)
+
+
+@pytest.mark.parametrize("bm,bn", [(32, 16), (64, 64), (128, 32), (256, 128)])
+def test_tsmm_block_shapes(bm, bn):
+    x = _rand(200, 96, 1, jnp.float64)
+    got = tk.tsmm(x, bm=bm, bn=bn)
+    np.testing.assert_allclose(got, ref.tsmm_ref(x), rtol=1e-10, atol=1e-10)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=160),
+    n=st.integers(min_value=1, max_value=96),
+    bm=st.sampled_from([16, 32, 64, 128]),
+    bn=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_tsmm_hypothesis_shapes(m, n, bm, bn, seed):
+    x = _rand(m, n, seed, jnp.float64)
+    got = tk.tsmm(x, bm=bm, bn=bn)
+    np.testing.assert_allclose(got, ref.tsmm_ref(x), rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(min_value=4, max_value=96),
+    n=st.integers(min_value=4, max_value=48),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_tsmm_float32(m, n, seed):
+    x = _rand(m, n, seed, jnp.float32)
+    got = tk.tsmm(x)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(got, ref.tsmm_ref(x), rtol=1e-4, atol=1e-4)
+
+
+def test_tsmm_result_symmetric():
+    x = _rand(123, 37, 3, jnp.float64)
+    got = np.asarray(tk.tsmm(x))
+    np.testing.assert_allclose(got, got.T, rtol=0, atol=0)
+
+
+def test_tsmm_zero_and_identity():
+    z = jnp.zeros((16, 8), dtype=jnp.float64)
+    np.testing.assert_array_equal(tk.tsmm(z), jnp.zeros((8, 8)))
+    i = jnp.eye(32, dtype=jnp.float64)
+    np.testing.assert_allclose(tk.tsmm(i), jnp.eye(32), atol=1e-12)
+
+
+def test_vmem_footprint_model():
+    # 256x128 f64 blocks: 2 inputs + 128x128 accumulator
+    b = tk.vmem_footprint_bytes(256, 128)
+    assert b == (2 * 256 * 128 + 128 * 128) * 8
+    # must fit a 16 MiB VMEM budget
+    assert b < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_bounds():
+    u = tk.mxu_utilization_estimate(4096, 256, 256, 128)
+    assert 0.0 < u <= 1.0
+    # aligned shapes waste nothing beyond the symmetric skip's diagonal
+    u_aligned = tk.mxu_utilization_estimate(256, 256, 128, 128)
+    assert u_aligned > 0.4

@@ -1,0 +1,76 @@
+"""L2 correctness: the linreg model (which calls the Pallas kernel) against
+the closed-form oracle, plus AOT lowering smoke tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import aot, model  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+
+def _data(m, n, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, n)))
+    beta = jnp.asarray(rng.standard_normal((n, 1)))
+    y = x @ beta
+    return x, y, beta
+
+
+@pytest.mark.parametrize("m,n", [(128, 16), (512, 64), (1024, 32)])
+def test_linreg_matches_ref(m, n):
+    x, y, _ = _data(m, n)
+    got = model.linreg_ds(x, y)
+    np.testing.assert_allclose(got, ref.linreg_ds_ref(x, y), rtol=1e-8, atol=1e-8)
+
+
+def test_linreg_recovers_true_beta():
+    x, y, beta = _data(1024, 32, seed=7)
+    got = model.linreg_ds(x, y, lam=1e-9)
+    np.testing.assert_allclose(got, beta, rtol=1e-6, atol=1e-6)
+
+
+def test_model_ops_match_refs():
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.standard_normal((1, 64)))
+    b = jnp.asarray(rng.standard_normal((64, 16)))
+    np.testing.assert_allclose(model.matmult(a, b), ref.matmult_ref(a, b), rtol=1e-12)
+    s = jnp.asarray(rng.standard_normal((16, 16))) + 16 * jnp.eye(16)
+    rhs = jnp.asarray(rng.standard_normal((16, 1)))
+    np.testing.assert_allclose(model.solve(s, rhs), ref.solve_ref(s, rhs), rtol=1e-9)
+
+
+def test_hlo_text_lowering_roundtrips():
+    lowered = jax.jit(lambda x: (model.tsmm(x),)).lower(
+        jax.ShapeDtypeStruct((64, 16), jnp.float64)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f64" in text
+
+
+def test_shape_key_matches_rust_registry():
+    assert aot.shape_key("tsmm", (4096, 256)) == "tsmm_4096x256"
+    assert (
+        aot.shape_key("matmult", (1, 4096), (4096, 256))
+        == "matmult_1x4096_4096x256"
+    )
+
+
+def test_build_artifacts(tmp_path):
+    # restrict to one tiny shape for speed
+    old = (aot.TSMM_SHAPES, aot.MATMULT_SHAPES, aot.SOLVE_SHAPES, aot.LINREG_SHAPES)
+    aot.TSMM_SHAPES = [(64, 16)]
+    aot.MATMULT_SHAPES = [((1, 64), (64, 16))]
+    aot.SOLVE_SHAPES = [(16, 1)]
+    aot.LINREG_SHAPES = [(64, 16)]
+    try:
+        written = aot.build_artifacts(str(tmp_path))
+    finally:
+        (aot.TSMM_SHAPES, aot.MATMULT_SHAPES, aot.SOLVE_SHAPES, aot.LINREG_SHAPES) = old
+    assert "tsmm_64x16" in written
+    content = (tmp_path / "tsmm_64x16.hlo.txt").read_text()
+    assert "HloModule" in content

@@ -1,0 +1,420 @@
+//! High-level compilation pipeline: DML source → HOP program → runtime
+//! plan, plus the paper's Table-1 scenarios as ready-made inputs.
+//!
+//! ```no_run
+//! use systemds::api::{CompileOptions, Scenario};
+//!
+//! let opts = CompileOptions::default();
+//! let compiled = Scenario::xs().compile(&opts);
+//! println!("{}", compiled.explain_hops(&opts));
+//! ```
+
+use std::collections::HashMap;
+
+use crate::conf::{ClusterConfig, SystemConfig};
+use crate::dml;
+use crate::ir::{self, build::MetaProvider, build::StaticMeta, Program};
+use crate::lop::SelectionHints;
+use crate::matrix::{Format, MatrixCharacteristics};
+use crate::rtprog::{self, RtProgram};
+
+/// Compilation options: system config + cluster characteristics + hints.
+#[derive(Clone, Debug, Default)]
+pub struct CompileOptions {
+    pub cfg: SystemConfig,
+    pub cc: ClusterConfigOpt,
+    pub hints: SelectionHints,
+}
+
+/// Wrapper defaulting to the paper's cluster.
+#[derive(Clone, Debug)]
+pub struct ClusterConfigOpt(pub ClusterConfig);
+
+impl Default for ClusterConfigOpt {
+    fn default() -> Self {
+        ClusterConfigOpt(ClusterConfig::paper_cluster())
+    }
+}
+
+/// A fully compiled program: HOP level + runtime plan.
+#[derive(Clone, Debug)]
+pub struct CompiledProgram {
+    pub hops: Program,
+    pub runtime: RtProgram,
+}
+
+impl CompiledProgram {
+    /// HOP-level EXPLAIN (Figure 1).
+    pub fn explain_hops(&self, opts: &CompileOptions) -> String {
+        ir::explain::explain_hops(&self.hops, &opts.cfg, &opts.cc.0)
+    }
+
+    /// Runtime-level EXPLAIN (Figures 2 and 3).
+    pub fn explain_runtime(&self) -> String {
+        rtprog::explain::explain_runtime(&self.runtime, rtprog::explain::ExplainOpts::default())
+    }
+}
+
+/// Compile a DML script with `$N` argument bindings, reading matrix
+/// metadata from `.mtd` sidecar files.
+pub fn compile(
+    src: &str,
+    args: &HashMap<usize, String>,
+    opts: &CompileOptions,
+) -> Result<CompiledProgram, String> {
+    compile_with_meta(src, args, &ir::build::FileMeta, opts)
+}
+
+/// Compile with explicit metadata (used by the paper-scale scenarios where
+/// no data exists on disk).
+pub fn compile_with_meta(
+    src: &str,
+    args: &HashMap<usize, String>,
+    meta: &dyn MetaProvider,
+    opts: &CompileOptions,
+) -> Result<CompiledProgram, String> {
+    let script = dml::frontend(src)?;
+    let mut prog = ir::build::build_program(&script, args, meta, opts.cfg.blocksize)?;
+    ir::rewrites::rewrite_program(&mut prog);
+    ir::size_prop::propagate(&mut prog, opts.cfg.blocksize);
+    ir::memory::annotate(&mut prog, &opts.cfg);
+    ir::exec_type::select(&mut prog, &opts.cfg, &opts.cc.0);
+    let runtime = rtprog::gen::generate(&prog, &opts.cfg, &opts.cc.0, &opts.hints);
+    Ok(CompiledProgram { hops: prog, runtime })
+}
+
+// ---------------------------------------------------------------------
+// Paper scenarios (Table 1)
+// ---------------------------------------------------------------------
+
+/// The paper's running example: closed-form linear regression (LinReg DS).
+pub const LINREG_DS: &str = r#"X = read($1);
+y = read($2);
+intercept = $3; lambda = 0.001;
+if( intercept == 1 ) {
+  ones = matrix(1, nrow(X), 1);
+  X = append(X, ones);
+}
+I = matrix(1, ncol(X), 1);
+A = t(X) %*% X + diag(I)*lambda;
+b = t(X) %*% y;
+beta = solve(A, b);
+write(beta, $4);"#;
+
+/// One of the paper's Table-1 input-size scenarios.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub x_rows: i64,
+    pub x_cols: i64,
+    /// Input size in bytes (decimal, as Table 1 reports).
+    pub input_bytes: f64,
+}
+
+impl Scenario {
+    pub fn xs() -> Self {
+        Scenario { name: "XS", x_rows: 10_000, x_cols: 1_000, input_bytes: 80e6 }
+    }
+    pub fn xl1() -> Self {
+        Scenario { name: "XL1", x_rows: 100_000_000, x_cols: 1_000, input_bytes: 800e9 }
+    }
+    pub fn xl2() -> Self {
+        Scenario { name: "XL2", x_rows: 100_000_000, x_cols: 2_000, input_bytes: 1.6e12 }
+    }
+    pub fn xl3() -> Self {
+        Scenario { name: "XL3", x_rows: 200_000_000, x_cols: 1_000, input_bytes: 1.6e12 }
+    }
+    pub fn xl4() -> Self {
+        Scenario { name: "XL4", x_rows: 200_000_000, x_cols: 2_000, input_bytes: 3.2e12 }
+    }
+
+    pub fn all() -> Vec<Scenario> {
+        vec![Self::xs(), Self::xl1(), Self::xl2(), Self::xl3(), Self::xl4()]
+    }
+
+    pub fn script(&self) -> &'static str {
+        LINREG_DS
+    }
+
+    /// `$N` bindings (intercept = 0, abstract paths).
+    pub fn args(&self) -> HashMap<usize, String> {
+        let mut m = HashMap::new();
+        m.insert(1, "data/X".to_string());
+        m.insert(2, "data/y".to_string());
+        m.insert(3, "0".to_string());
+        m.insert(4, "data/beta".to_string());
+        m
+    }
+
+    /// Static metadata matching Table 1 (dense binary-block).
+    pub fn meta(&self, blocksize: i64) -> StaticMeta {
+        StaticMeta::default()
+            .with(
+                "data/X",
+                MatrixCharacteristics::dense(self.x_rows, self.x_cols, blocksize),
+                Format::BinaryBlock,
+            )
+            .with(
+                "data/y",
+                MatrixCharacteristics::dense(self.x_rows, 1, blocksize),
+                Format::BinaryBlock,
+            )
+    }
+
+    /// Compile this scenario.
+    pub fn compile(&self, opts: &CompileOptions) -> CompiledProgram {
+        compile_with_meta(self.script(), &self.args(), &self.meta(opts.cfg.blocksize), opts)
+            .expect("scenario compiles")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtprog::{CpOp, Instr, JobType, MrOp, RtBlock};
+
+    fn insts_of(prog: &RtProgram, idx: usize) -> &[Instr] {
+        match &prog.blocks[idx] {
+            RtBlock::Generic { insts, .. } => insts,
+            other => panic!("expected generic block, got {other:?}"),
+        }
+    }
+
+    fn cp_codes(insts: &[Instr]) -> Vec<String> {
+        insts
+            .iter()
+            .filter_map(|i| match i {
+                Instr::Cp(c) => Some(c.op.code()),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn xs_runtime_plan_matches_figure2() {
+        let opts = CompileOptions::default();
+        let c = Scenario::xs().compile(&opts);
+        let (cp, mr) = c.runtime.size();
+        assert_eq!(mr, 0, "XS is pure CP (Figure 2: size CP/MR = 34/0)");
+        assert!(cp > 10);
+        // Block 2 instructions (Figure 2): tsmm, rand, r'(y), rdiag, ba+*,
+        // +, r', solve, write — same multiset; interleaving of independent
+        // chains may differ from SystemML's emission order.
+        let mut codes = cp_codes(insts_of(&c.runtime, 1));
+        let mut expect =
+            vec!["tsmm", "rand", "r'", "rdiag", "ba+*", "+", "r'", "solve", "write"];
+        let ordered = codes.clone();
+        codes.sort();
+        expect.sort();
+        assert_eq!(codes, expect, "Figure 2 instruction multiset");
+        // key data dependencies must be respected
+        let pos = |c: &str| ordered.iter().position(|x| x == c).unwrap();
+        assert!(pos("tsmm") < pos("+"), "{ordered:?}");
+        assert!(pos("rand") < pos("rdiag"));
+        assert!(pos("ba+*") < pos("solve"));
+        assert!(pos("+") < pos("solve"));
+        assert!(pos("solve") < pos("write"));
+        // the (y'X)' rewrite: no transpose of X (only of y and the product)
+        let text = c.explain_runtime();
+        assert!(text.contains("CP tsmm X.MATRIX.DOUBLE"), "{text}");
+        assert!(text.contains("LEFT"));
+        assert!(text.contains("CP r' y.MATRIX.DOUBLE"));
+    }
+
+    #[test]
+    fn xs_block1_bookkeeping_matches_figure2() {
+        let opts = CompileOptions::default();
+        let c = Scenario::xs().compile(&opts);
+        let insts = insts_of(&c.runtime, 0);
+        let rendered: Vec<String> =
+            insts.iter().map(crate::rtprog::explain::render_inst).collect();
+        assert!(rendered.iter().any(|s| s.starts_with("CP createvar pREADX")), "{rendered:?}");
+        assert!(rendered.iter().any(|s| s.contains("assignvar 0.SCALAR.INT.true intercept")));
+        assert!(rendered.iter().any(|s| s.contains("assignvar 0.001.SCALAR.DOUBLE.true lambda")));
+        assert!(rendered.iter().any(|s| s == "CP cpvar pREADX X"));
+        assert!(rendered.iter().any(|s| s == "CP cpvar pREADy y"));
+    }
+
+    #[test]
+    fn xl1_runtime_plan_matches_figure3() {
+        let opts = CompileOptions::default();
+        let c = Scenario::xl1().compile(&opts);
+        let (_, mr) = c.runtime.size();
+        assert_eq!(mr, 1, "XL1 packs into a single MR job (Figure 3)");
+        let insts = insts_of(&c.runtime, 1);
+        // CP partition of y before the job (partitioned broadcast)
+        let codes = cp_codes(insts);
+        assert!(codes.contains(&"partition".to_string()), "{codes:?}");
+        // find the job
+        let job = insts
+            .iter()
+            .find_map(|i| match i {
+                Instr::MrJob(j) => Some(j),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(job.job_type, JobType::Gmr);
+        assert_eq!(job.map_insts.len(), 3, "tsmm, r', mapmm share the job");
+        assert!(job.map_insts.iter().any(|i| matches!(i.op, MrOp::Tsmm { left: true })));
+        assert!(job.map_insts.iter().any(|i| i.op == MrOp::Transpose));
+        assert!(job.map_insts.iter().any(|i| matches!(i.op, MrOp::MapMM { right_part: true })));
+        assert_eq!(job.agg_insts.len(), 2, "ak+ for tsmm and mapmm");
+        assert_eq!(job.num_reducers, 12);
+        assert_eq!(job.replication, 1);
+        // solve and + remain CP after the job
+        assert!(codes.contains(&"+".to_string()));
+        assert!(codes.contains(&"solve".to_string()));
+    }
+
+    #[test]
+    fn xl2_three_jobs_with_cpmm() {
+        let opts = CompileOptions::default();
+        let c = Scenario::xl2().compile(&opts);
+        assert_eq!(c.runtime.mr_job_count(), 3, "XL2: MMCJ + 2 GMR");
+        let insts = insts_of(&c.runtime, 1);
+        let jobs: Vec<_> = insts
+            .iter()
+            .filter_map(|i| match i {
+                Instr::MrJob(j) => Some(j),
+                _ => None,
+            })
+            .collect();
+        assert!(jobs.iter().any(|j| j.job_type == JobType::Mmcj));
+        // transpose replicated into both the MMCJ and the mapmm GMR
+        let transposes: usize = jobs
+            .iter()
+            .map(|j| j.all_insts().filter(|i| i.op == MrOp::Transpose).count())
+            .sum();
+        assert_eq!(transposes, 2, "transpose of X replicated into both jobs");
+    }
+
+    #[test]
+    fn xl3_three_jobs() {
+        let opts = CompileOptions::default();
+        let c = Scenario::xl3().compile(&opts);
+        assert_eq!(c.runtime.mr_job_count(), 3);
+        // tsmm still map-side; X'y via cpmm
+        let insts = insts_of(&c.runtime, 1);
+        let jobs: Vec<_> = insts
+            .iter()
+            .filter_map(|i| match i {
+                Instr::MrJob(j) => Some(j),
+                _ => None,
+            })
+            .collect();
+        assert!(jobs.iter().any(|j| j.all_insts().any(|i| matches!(i.op, MrOp::Tsmm { .. }))));
+        assert!(jobs.iter().any(|j| j.all_insts().any(|i| i.op == MrOp::Cpmm)));
+        assert!(!jobs.iter().any(|j| j.all_insts().any(|i| matches!(i.op, MrOp::MapMM { .. }))));
+    }
+
+    #[test]
+    fn xl4_three_jobs_shared_agg() {
+        let opts = CompileOptions::default();
+        let c = Scenario::xl4().compile(&opts);
+        assert_eq!(c.runtime.mr_job_count(), 3, "2 MMCJ + shared agg GMR");
+        let insts = insts_of(&c.runtime, 1);
+        let jobs: Vec<_> = insts
+            .iter()
+            .filter_map(|i| match i {
+                Instr::MrJob(j) => Some(j),
+                _ => None,
+            })
+            .collect();
+        let mmcj = jobs.iter().filter(|j| j.job_type == JobType::Mmcj).count();
+        assert_eq!(mmcj, 2);
+        let shared = jobs.iter().find(|j| j.job_type == JobType::Gmr).unwrap();
+        assert_eq!(shared.agg_insts.len(), 2, "both cpmm aggregations shared");
+    }
+
+    #[test]
+    fn explain_runtime_contains_figure3_sections() {
+        let opts = CompileOptions::default();
+        let c = Scenario::xl1().compile(&opts);
+        let text = c.explain_runtime();
+        assert!(text.contains("PROGRAM ( size CP/MR ="), "{text}");
+        assert!(text.contains("MR-Job["));
+        assert!(text.contains("jobtype        = GMR"));
+        assert!(text.contains("num reducers   = 12"));
+        assert!(text.contains("CP partition"));
+        assert!(text.contains("mapmm"));
+        assert!(text.contains("RIGHT_PART"));
+        assert!(text.contains("ak+"));
+    }
+
+    #[test]
+    fn intercept_branch_compiles_with_append() {
+        let mut args = Scenario::xs().args();
+        args.insert(3, "1".to_string());
+        let opts = CompileOptions::default();
+        let c = compile_with_meta(LINREG_DS, &args, &Scenario::xs().meta(1000), &opts).unwrap();
+        let text = c.explain_runtime();
+        assert!(text.contains("append"), "{text}");
+    }
+
+    #[test]
+    fn control_flow_compiles_to_rt_blocks() {
+        let src = r#"
+X = read($1);
+s = 0;
+for (i in 1:10) { s = s + sum(X); }
+while (s < 100) { s = s * 2; }
+if (s > 5) { s = s - 1; }
+write(s, $4);
+"#;
+        let opts = CompileOptions::default();
+        let c = compile_with_meta(src, &Scenario::xs().args(), &Scenario::xs().meta(1000), &opts)
+            .unwrap();
+        let kinds: Vec<&str> = c
+            .runtime
+            .blocks
+            .iter()
+            .map(|b| match b {
+                RtBlock::Generic { .. } => "g",
+                RtBlock::If { .. } => "if",
+                RtBlock::For { .. } => "for",
+                RtBlock::While { .. } => "while",
+                RtBlock::FCall { .. } => "fcall",
+            })
+            .collect();
+        assert!(kinds.contains(&"for"));
+        assert!(kinds.contains(&"while"));
+        assert!(kinds.contains(&"if"));
+    }
+
+    #[test]
+    fn rmvar_inserted_after_last_use() {
+        let opts = CompileOptions::default();
+        let c = Scenario::xs().compile(&opts);
+        let insts = insts_of(&c.runtime, 1);
+        // every _mVar temp must be rmvar'd eventually
+        let created: Vec<String> = insts
+            .iter()
+            .filter_map(|i| match i {
+                Instr::CreateVar { var, temp: true, .. } => Some(var.clone()),
+                _ => None,
+            })
+            .collect();
+        let removed: Vec<String> = insts
+            .iter()
+            .filter_map(|i| match i {
+                Instr::RmVar { vars } => Some(vars.clone()),
+                _ => None,
+            })
+            .flatten()
+            .collect();
+        for v in created {
+            assert!(removed.contains(&v), "{v} never removed");
+        }
+    }
+
+    #[test]
+    fn write_op_emitted_with_path() {
+        let opts = CompileOptions::default();
+        let c = Scenario::xs().compile(&opts);
+        let insts = insts_of(&c.runtime, 1);
+        let has_write = insts.iter().any(|i| {
+            matches!(i, Instr::Cp(c) if matches!(&c.op, CpOp::Write { path, .. } if path == "data/beta"))
+        });
+        assert!(has_write);
+    }
+}

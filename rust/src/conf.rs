@@ -1,0 +1,249 @@
+//! Cluster, system and cost-model configuration.
+//!
+//! The paper's cost model `C(P, cc)` is explicitly parameterised by a
+//! cluster configuration `cc` (§3, R3). [`ClusterConfig`] captures the
+//! paper's 1+6-node Hadoop testbed as its default; [`CostConstants`]
+//! collects the white-box model constants (IO bandwidths, latencies, FLOP
+//! correction factors) calibrated in DESIGN.md; [`SystemConfig`] holds the
+//! compiler-level knobs (block size, memory budget ratio, #reducers).
+
+/// Cluster characteristics `cc` used by the optimizer and the cost model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    /// Max/initial JVM heap size of the client (control program), bytes.
+    pub cp_heap_bytes: f64,
+    /// Max/initial JVM heap size of each map task, bytes.
+    pub map_heap_bytes: f64,
+    /// Max/initial JVM heap size of each reduce task, bytes.
+    pub reduce_heap_bytes: f64,
+    /// Degree of parallelism of the local control program (`k_l`).
+    pub k_local: usize,
+    /// Available map slots in the cluster (`k_m`).
+    pub k_map: usize,
+    /// Available reduce slots in the cluster (`k_r`).
+    pub k_reduce: usize,
+    /// HDFS block size in bytes (also the input-split size).
+    pub hdfs_block_bytes: f64,
+    /// Number of worker nodes (used by YARN-style resource correction).
+    pub nodes: usize,
+    /// Per-node virtual cores (YARN correction input).
+    pub vcores_per_node: usize,
+    /// Per-node memory available to YARN containers, bytes.
+    pub yarn_mem_per_node: f64,
+    /// Processor clock in Hz used to convert FLOPs to seconds (paper §3.3:
+    /// "assuming 1 FLOP per cycle"). Calibrated to 2.15 GHz, which
+    /// reproduces the paper's Figure 4/5 compute times exactly (see
+    /// DESIGN.md §Constants-calibration).
+    pub clock_hz: f64,
+}
+
+impl ClusterConfig {
+    /// The paper's 1+6-node cluster (§2): 2 GB heaps, 128 MB HDFS blocks,
+    /// 24 local vcores, 144 map / 72 reduce slots.
+    pub fn paper_cluster() -> Self {
+        ClusterConfig {
+            cp_heap_bytes: 2048.0 * MB,
+            map_heap_bytes: 2048.0 * MB,
+            reduce_heap_bytes: 2048.0 * MB,
+            k_local: 24,
+            k_map: 144,
+            k_reduce: 72,
+            hdfs_block_bytes: 128.0 * MB,
+            nodes: 6,
+            vcores_per_node: 24,
+            yarn_mem_per_node: 96.0 * 1024.0 * MB,
+            clock_hz: 2.15e9,
+        }
+    }
+
+    /// A single-node "local" configuration sized for this machine; used by
+    /// the executable scenarios and the cost-accuracy experiment.
+    pub fn local(threads: usize, heap_bytes: f64) -> Self {
+        ClusterConfig {
+            cp_heap_bytes: heap_bytes,
+            map_heap_bytes: heap_bytes / 4.0,
+            reduce_heap_bytes: heap_bytes / 4.0,
+            k_local: threads,
+            k_map: threads,
+            k_reduce: threads / 2,
+            hdfs_block_bytes: 32.0 * MB,
+            nodes: 1,
+            vcores_per_node: threads,
+            yarn_mem_per_node: heap_bytes * 2.0,
+            clock_hz: 2.4e9,
+        }
+    }
+
+    /// YARN-style correction of map parallelism (§3.1): the effective map
+    /// slots are limited by both vcores and container memory.
+    pub fn effective_k_map(&self) -> usize {
+        let by_vcores = self.nodes * self.vcores_per_node;
+        let by_mem = ((self.yarn_mem_per_node / self.map_heap_bytes) as usize).max(1) * self.nodes;
+        self.k_map.min(by_vcores).min(by_mem).max(1)
+    }
+
+    /// YARN-style correction of reduce parallelism.
+    pub fn effective_k_reduce(&self) -> usize {
+        let by_vcores = self.nodes * self.vcores_per_node;
+        let by_mem =
+            ((self.yarn_mem_per_node / self.reduce_heap_bytes) as usize).max(1) * self.nodes;
+        self.k_reduce.min(by_vcores).min(by_mem).max(1)
+    }
+}
+
+pub const KB: f64 = 1024.0;
+pub const MB: f64 = 1024.0 * 1024.0;
+pub const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Compiler/system configuration (SystemML defaults from §2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemConfig {
+    /// Matrix block size for the binary-block format (rows and cols).
+    pub blocksize: i64,
+    /// Fraction of heap available as the optimizer memory budget (0.70).
+    pub mem_budget_ratio: f64,
+    /// Default number of reducers (2x number of worker nodes).
+    pub num_reducers: usize,
+    /// Replication factor for MR job outputs.
+    pub replication: usize,
+    /// Sparsity threshold below which matrices are stored sparse in memory.
+    pub sparse_threshold: f64,
+    /// Assumed iterations for loops with unknown trip count (§3.5, `N̂`).
+    pub unknown_iterations: f64,
+    /// Partition size for partitioned broadcasts (32 MB, §2).
+    pub partition_bytes: f64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            blocksize: 1000,
+            mem_budget_ratio: 0.70,
+            num_reducers: 12,
+            replication: 1,
+            sparse_threshold: 0.4,
+            unknown_iterations: 10.0,
+            partition_bytes: 32.0 * MB,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Local (CP) memory budget in bytes: ratio * client heap.
+    pub fn cp_budget(&self, cc: &ClusterConfig) -> f64 {
+        self.mem_budget_ratio * cc.cp_heap_bytes
+    }
+
+    /// Remote map-task memory budget in bytes.
+    pub fn map_budget(&self, cc: &ClusterConfig) -> f64 {
+        self.mem_budget_ratio * cc.map_heap_bytes
+    }
+
+    /// Remote reduce-task memory budget in bytes.
+    pub fn reduce_budget(&self, cc: &ClusterConfig) -> f64 {
+        self.mem_budget_ratio * cc.reduce_heap_bytes
+    }
+}
+
+/// White-box cost-model constants (§3.3). IO bandwidths are per-thread;
+/// latencies are per-job/per-task; FLOP correction factors are per-op.
+/// Defaults are calibrated against the paper's Figures 4 and 5 (see
+/// DESIGN.md §Constants-calibration for the derivations).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostConstants {
+    /// Single-threaded HDFS read bandwidth for binary-block format, B/s.
+    pub hdfs_read_binaryblock: f64,
+    /// Single-threaded HDFS read bandwidth for text formats, B/s.
+    pub hdfs_read_text: f64,
+    /// Single-threaded HDFS write bandwidth for binary-block, B/s.
+    pub hdfs_write_binaryblock: f64,
+    /// Single-threaded HDFS write bandwidth for text formats, B/s.
+    pub hdfs_write_text: f64,
+    /// Local-disk read bandwidth (scratch space / buffer-pool evictions).
+    pub local_read: f64,
+    /// Local-disk write bandwidth.
+    pub local_write: f64,
+    /// Distributed-cache read bandwidth per task, B/s.
+    pub dcache_read: f64,
+    /// Shuffle end-to-end bandwidth (map write + transfer + reduce merge).
+    pub shuffle_bw: f64,
+    /// Main-memory bandwidth (per thread) used for memory-bound ops, B/s.
+    pub mem_bw: f64,
+    /// MR job submission latency, seconds (Hadoop job startup ~20 s).
+    pub job_latency: f64,
+    /// Per-task startup latency, seconds.
+    pub task_latency: f64,
+    /// Fixed cost of bookkeeping instructions (createvar etc.), seconds.
+    pub bookkeeping: f64,
+    /// Scale factor applied to the parallelism minimum when computing the
+    /// effective degree of parallelism of MR phases (§3.3 "scaled minimum";
+    /// accounts for stragglers and slot contention).
+    pub dop_scale: f64,
+}
+
+impl Default for CostConstants {
+    fn default() -> Self {
+        CostConstants {
+            hdfs_read_binaryblock: 150.0 * MB,
+            hdfs_read_text: 75.0 * MB,
+            hdfs_write_binaryblock: 120.0 * MB,
+            hdfs_write_text: 60.0 * MB,
+            local_read: 200.0 * MB,
+            local_write: 160.0 * MB,
+            dcache_read: 215.0 * MB,
+            shuffle_bw: 96.0 * MB,
+            mem_bw: 2.5 * GB,
+            job_latency: 20.0,
+            task_latency: 1.5,
+            bookkeeping: 4.7e-9,
+            dop_scale: 0.5,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cluster_budget_matches_figure1_header() {
+        // Figure 1: "Memory Budget local/remote = 1434MB/1434MB".
+        let cc = ClusterConfig::paper_cluster();
+        let sc = SystemConfig::default();
+        let budget_mb = sc.cp_budget(&cc) / MB;
+        assert_eq!(budget_mb.round() as i64, 1434);
+        assert_eq!((sc.map_budget(&cc) / MB).round() as i64, 1434);
+    }
+
+    #[test]
+    fn paper_cluster_parallelism_matches_figure1_header() {
+        // Figure 1: "Degree of Parallelism (vcores) local/remote = 24/144/72".
+        let cc = ClusterConfig::paper_cluster();
+        assert_eq!(cc.k_local, 24);
+        assert_eq!(cc.effective_k_map(), 144);
+        assert_eq!(cc.effective_k_reduce(), 72);
+    }
+
+    #[test]
+    fn yarn_memory_correction_limits_slots() {
+        let mut cc = ClusterConfig::paper_cluster();
+        cc.yarn_mem_per_node = 4.0 * 1024.0 * MB; // only 2 containers/node
+        assert_eq!(cc.effective_k_map(), 12);
+    }
+
+    #[test]
+    fn default_system_config_matches_paper() {
+        let sc = SystemConfig::default();
+        assert_eq!(sc.blocksize, 1000);
+        assert_eq!(sc.num_reducers, 12);
+        assert!((sc.mem_budget_ratio - 0.70).abs() < 1e-12);
+        assert_eq!(sc.partition_bytes, 32.0 * MB);
+    }
+
+    #[test]
+    fn local_cluster_is_single_node() {
+        let cc = ClusterConfig::local(8, 4.0 * GB);
+        assert_eq!(cc.nodes, 1);
+        assert!(cc.effective_k_map() <= 8);
+    }
+}

@@ -1,0 +1,201 @@
+//! White-box FLOP models per instruction (paper §3.3, Eq. 2 family).
+//!
+//! Floating-point requirements are counted as multiply-accumulate
+//! operations with operation-specific correction factors, calibrated so
+//! that the paper's Figure 4/5 compute times reproduce at a 2.15 GHz
+//! effective clock (DESIGN.md §Constants-calibration):
+//!
+//! * `tsmm`:  `MMD_corr · m · n² · s` with `MMD_corr = 0.5` (symmetry —
+//!   "only half the computation"), sparse `MMS_corr · m · n² · s²`.
+//! * `ba+*`:  `m · k · n · s` MACs.
+//! * `solve`: `n³` (LU + triangular solves).
+//! * elementwise/unary: `cells · c_op` with small per-op constants.
+
+use crate::ir::{AggOp, BinOp, UnOp};
+use crate::matrix::MatrixCharacteristics;
+
+/// tsmm correction, dense (Eq. 2).
+pub const MMD_CORR: f64 = 0.5;
+/// tsmm correction, sparse (Eq. 2).
+pub const MMS_CORR: f64 = 0.5;
+/// rand generation cost per cell (cycles).
+pub const RAND_CORR: f64 = 8.0;
+/// partition cost per cell (copy + block regrouping).
+pub const PART_CORR: f64 = 137.0;
+/// text serialisation cost per cell (number formatting).
+pub const TEXT_CORR: f64 = 430.0;
+/// Kahan-compensated addition (ak+) cost per cell [4].
+pub const KAHAN_CORR: f64 = 4.0;
+
+fn cells(mc: &MatrixCharacteristics) -> f64 {
+    mc.cells().unwrap_or(0.0)
+}
+
+/// FLOPs of a transpose-self matmult over X (m x n, sparsity s).
+pub fn tsmm(x: &MatrixCharacteristics) -> f64 {
+    if !x.dims_known() {
+        return 0.0;
+    }
+    let (m, n, s) = (x.rows as f64, x.cols as f64, x.sparsity());
+    if s < 0.4 {
+        MMS_CORR * m * n * n * s * s
+    } else {
+        MMD_CORR * m * n * n * s
+    }
+}
+
+/// FLOPs of a general matmult A(m x k) * B(k x n): MAC count.
+pub fn matmult(a: &MatrixCharacteristics, b: &MatrixCharacteristics) -> f64 {
+    if !a.dims_known() || !b.dims_known() {
+        return 0.0;
+    }
+    a.rows as f64 * a.cols as f64 * b.cols as f64 * a.sparsity()
+}
+
+/// FLOPs of `solve(A, b)` (LU with partial pivoting + substitutions).
+pub fn solve(a: &MatrixCharacteristics, b: &MatrixCharacteristics) -> f64 {
+    if !a.dims_known() {
+        return 0.0;
+    }
+    let n = a.cols as f64;
+    let r = if b.dims_known() { b.cols as f64 } else { 1.0 };
+    n * n * n + n * n * r
+}
+
+/// FLOPs of a transpose (per-cell move).
+pub fn transpose(x: &MatrixCharacteristics) -> f64 {
+    cells(x)
+}
+
+/// FLOPs of diag (touches the diagonal / vector only).
+pub fn diag(x: &MatrixCharacteristics) -> f64 {
+    if x.rows < 0 {
+        0.0
+    } else {
+        x.rows as f64
+    }
+}
+
+/// FLOPs of rand/matrix datagen.
+pub fn rand(out: &MatrixCharacteristics) -> f64 {
+    cells(out) * RAND_CORR
+}
+
+/// FLOPs of a partition op (row-block-wise regrouping).
+pub fn partition(x: &MatrixCharacteristics) -> f64 {
+    cells(x) * PART_CORR
+}
+
+/// FLOPs of an elementwise binary op over the output shape.
+pub fn binary(op: BinOp, out: &MatrixCharacteristics) -> f64 {
+    let c = cells(out);
+    match op {
+        BinOp::Pow => c * 20.0, // pow is much heavier than +/*
+        BinOp::Div => c * 4.0,
+        _ => c,
+    }
+}
+
+/// FLOPs of an elementwise unary op.
+pub fn unary(op: UnOp, out: &MatrixCharacteristics) -> f64 {
+    let c = cells(out);
+    match op {
+        UnOp::Exp | UnOp::Log => c * 20.0,
+        UnOp::Sqrt => c * 8.0,
+        _ => c,
+    }
+}
+
+/// FLOPs of a unary aggregate over the input.
+pub fn agg_unary(op: AggOp, input: &MatrixCharacteristics) -> f64 {
+    let c = cells(input);
+    match op {
+        AggOp::Sum | AggOp::Mean => c * KAHAN_CORR, // uak+ uses Kahan
+        AggOp::Trace => input.rows.max(0) as f64 * KAHAN_CORR,
+        _ => c,
+    }
+}
+
+/// FLOPs of the final `ak+` aggregation over `n_partials` partial results
+/// of the given shape.
+pub fn agg_kahan(n_partials: f64, partial: &MatrixCharacteristics) -> f64 {
+    n_partials * cells(partial) * KAHAN_CORR
+}
+
+/// FLOPs of append (copy cost).
+pub fn append(out: &MatrixCharacteristics) -> f64 {
+    cells(out)
+}
+
+/// FLOPs of serialising to text (write textcell/csv).
+pub fn text_write(x: &MatrixCharacteristics) -> f64 {
+    cells(x) * TEXT_CORR
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CLOCK: f64 = 2.15e9;
+
+    #[test]
+    fn tsmm_flops_match_figure4() {
+        // XS: X 1e4 x 1e3 dense -> 0.5 * 1e4 * 1e6 = 5e9 MACs = 2.33 s.
+        let x = MatrixCharacteristics::dense(10_000, 1_000, 1000);
+        let f = tsmm(&x);
+        assert_eq!(f, 5e9);
+        let t = f / CLOCK;
+        assert!((t - 2.32).abs() < 0.01, "t={t}");
+    }
+
+    #[test]
+    fn tsmm_sparse_uses_squared_sparsity() {
+        let mut x = MatrixCharacteristics::dense(10_000, 1_000, 1000);
+        x.nnz = 1_000_000; // s = 0.1
+        let f = tsmm(&x);
+        assert_eq!(f, 0.5 * 1e4 * 1e6 * 0.01);
+    }
+
+    #[test]
+    fn solve_flops_match_figure4() {
+        // 1000x1000 solve -> ~1e9+1e6 MACs = 0.466 s.
+        let a = MatrixCharacteristics::dense(1000, 1000, 1000);
+        let b = MatrixCharacteristics::dense(1000, 1, 1000);
+        let t = solve(&a, &b) / CLOCK;
+        assert!((t - 0.466).abs() < 0.01, "t={t}");
+    }
+
+    #[test]
+    fn matvec_flops_match_figure4() {
+        // y'X: 1 x 1e4 times 1e4 x 1e3 -> 1e7 MACs = 0.00465 s.
+        let a = MatrixCharacteristics::dense(1, 10_000, 1000);
+        let b = MatrixCharacteristics::dense(10_000, 1_000, 1000);
+        let t = matmult(&a, &b) / CLOCK;
+        assert!((t - 0.00465).abs() < 1e-4, "t={t}");
+    }
+
+    #[test]
+    fn elementwise_add_matches_figure4() {
+        // 1000x1000 add -> 1e6 ops = 4.65e-4 s.
+        let o = MatrixCharacteristics::dense(1000, 1000, 1000);
+        let t = binary(BinOp::Add, &o) / CLOCK;
+        assert!((t - 4.65e-4).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rand_matches_figure4() {
+        // 1000x1 rand -> 8e3 cycles = 3.7e-6 s.
+        let o = MatrixCharacteristics::dense(1000, 1, 1000);
+        let t = rand(&o) / CLOCK;
+        assert!((t - 3.7e-6).abs() < 2e-7, "t={t}");
+    }
+
+    #[test]
+    fn unknown_dims_cost_zero() {
+        // §3.5: unknowns cannot be costed -> 0 (documented underestimation)
+        let u = MatrixCharacteristics::unknown();
+        assert_eq!(tsmm(&u), 0.0);
+        assert_eq!(matmult(&u, &u), 0.0);
+        assert_eq!(binary(BinOp::Add, &u), 0.0);
+    }
+}

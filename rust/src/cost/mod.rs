@@ -1,0 +1,612 @@
+//! The paper's contribution: a white-box analytical cost model that costs
+//! *generated runtime plans* (§3). A single pass in execution order tracks
+//! live-variable sizes and in-memory state, computes a time estimate per
+//! instruction (latency + IO + compute, linearised into seconds), and
+//! aggregates over control flow with Eq. 1:
+//!
+//! ```text
+//! T̂(b) = w_b · Σ T̂(cᵢ),   w_b = ⌈N̂/k⌉ (parfor) | N̂ (for/while)
+//!                               | 1/|c(n)| (if) | 1 (otherwise)
+//! ```
+//!
+//! `C(P, cc) = T̂(P)`.
+
+pub mod flops;
+pub mod mr;
+pub mod vars;
+
+use crate::conf::{ClusterConfig, CostConstants, SystemConfig};
+use crate::ir::BinOp;
+use crate::matrix::{Format, MatrixCharacteristics};
+use crate::rtprog::*;
+use vars::{DataState, VarTracker};
+
+/// Cost of one instruction, split IO / compute (Figure 4's `C=[io, comp]`).
+#[derive(Clone, Debug, Default)]
+pub struct InstCost {
+    pub io: f64,
+    pub compute: f64,
+    /// MR jobs carry a full breakdown instead.
+    pub mr: Option<mr::MrJobCost>,
+}
+
+impl InstCost {
+    pub fn total(&self) -> f64 {
+        match &self.mr {
+            Some(m) => m.total(),
+            None => self.io + self.compute,
+        }
+    }
+}
+
+/// Cost annotation tree, parallel to the runtime program structure.
+#[derive(Clone, Debug)]
+pub enum CostNode {
+    Block { label: String, total: f64, children: Vec<CostNode> },
+    Inst { rendered: String, cost: InstCost },
+}
+
+impl CostNode {
+    pub fn total(&self) -> f64 {
+        match self {
+            CostNode::Block { total, .. } => *total,
+            CostNode::Inst { cost, .. } => cost.total(),
+        }
+    }
+}
+
+/// Full cost report for a program.
+#[derive(Clone, Debug)]
+pub struct CostReport {
+    /// `C(P, cc)` — estimated execution time in seconds.
+    pub total: f64,
+    pub nodes: Vec<CostNode>,
+}
+
+/// Cost a runtime program against a cluster configuration (the paper's
+/// `C(P, cc) = T̂(P)`).
+pub fn cost_program(
+    rt: &RtProgram,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    k: &CostConstants,
+) -> CostReport {
+    let mut est = Estimator {
+        cfg,
+        cc,
+        k,
+        funcs: &rt.funcs,
+        call_stack: Vec::new(),
+    };
+    let mut tracker = VarTracker::default();
+    let (total, nodes) = est.cost_blocks(&rt.blocks, &mut tracker);
+    CostReport { total, nodes }
+}
+
+struct Estimator<'a> {
+    cfg: &'a SystemConfig,
+    cc: &'a ClusterConfig,
+    k: &'a CostConstants,
+    funcs: &'a std::collections::BTreeMap<String, RtFunction>,
+    call_stack: Vec<String>,
+}
+
+impl<'a> Estimator<'a> {
+    fn cost_blocks(&mut self, blocks: &[RtBlock], t: &mut VarTracker) -> (f64, Vec<CostNode>) {
+        let mut total = 0.0;
+        let mut nodes = Vec::new();
+        for b in blocks {
+            let node = self.cost_block(b, t);
+            total += node.total();
+            nodes.push(node);
+        }
+        (total, nodes)
+    }
+
+    fn cost_block(&mut self, b: &RtBlock, t: &mut VarTracker) -> CostNode {
+        match b {
+            RtBlock::Generic { insts, lines, .. } => {
+                let mut children = Vec::new();
+                let mut total = 0.0;
+                for inst in insts {
+                    let cost = self.cost_inst(inst, t);
+                    total += cost.total();
+                    children.push(CostNode::Inst {
+                        rendered: explain::render_inst(inst),
+                        cost,
+                    });
+                }
+                CostNode::Block {
+                    label: format!("GENERIC (lines {}-{})", lines.0, lines.1),
+                    total,
+                    children,
+                }
+            }
+            RtBlock::If { pred, then_blocks, else_blocks, lines } => {
+                // Eq. 1: weighted sum over branches, w = 1/|c(n)|.
+                let (pt, mut children) = self.cost_insts(&pred.insts, t);
+                let mut then_t = t.clone();
+                let (tt, tn) = self.cost_blocks(then_blocks, &mut then_t);
+                let mut else_t = t.clone();
+                let (et, en) = self.cost_blocks(else_blocks, &mut else_t);
+                let branches = if else_blocks.is_empty() { 2.0 } else { 2.0 };
+                let total = pt + (tt + et) / branches;
+                children.extend(tn);
+                children.extend(en);
+                then_t.merge(&else_t);
+                *t = then_t;
+                CostNode::Block {
+                    label: format!("IF (lines {}-{})", lines.0, lines.1),
+                    total,
+                    children,
+                }
+            }
+            RtBlock::For { from, to, by, body, parfor, known_trip, lines, .. } => {
+                let mut pred_cost = 0.0;
+                let mut children = Vec::new();
+                for p in [Some(from), Some(to), by.as_ref()].into_iter().flatten() {
+                    let (c, n) = self.cost_insts(&p.insts, t);
+                    pred_cost += c;
+                    children.extend(n);
+                }
+                let n_iter = known_trip.unwrap_or(self.cfg.unknown_iterations).max(0.0);
+                // Eq. 1: parfor scales by ceil(N/k).
+                let w = if *parfor {
+                    (n_iter / self.cc.k_local as f64).ceil()
+                } else {
+                    n_iter
+                };
+                // Loop read-cost correction (§3.2): the first iteration pays
+                // persistent reads, subsequent iterations see warm state.
+                let mut first_t = t.clone();
+                let (first, body_nodes) = self.cost_blocks(body, &mut first_t);
+                let (steady, _) = self.cost_blocks(body, &mut first_t);
+                let total = pred_cost
+                    + if w >= 1.0 { first + (w - 1.0) * steady } else { w * first };
+                children.extend(body_nodes);
+                *t = first_t;
+                let kind = if *parfor { "PARFOR" } else { "FOR" };
+                CostNode::Block {
+                    label: format!("{kind} (lines {}-{}) [N={n_iter}, w={w}]", lines.0, lines.1),
+                    total,
+                    children,
+                }
+            }
+            RtBlock::While { pred, body, lines } => {
+                let (pt, mut children) = self.cost_insts(&pred.insts, t);
+                let n_iter = self.cfg.unknown_iterations;
+                let mut first_t = t.clone();
+                let (first, body_nodes) = self.cost_blocks(body, &mut first_t);
+                let (steady, _) = self.cost_blocks(body, &mut first_t);
+                // predicate evaluated each iteration
+                let total = pt * (n_iter + 1.0) + first + (n_iter - 1.0).max(0.0) * steady;
+                children.extend(body_nodes);
+                *t = first_t;
+                CostNode::Block {
+                    label: format!("WHILE (lines {}-{}) [N̂={n_iter}]", lines.0, lines.1),
+                    total,
+                    children,
+                }
+            }
+            RtBlock::FCall { fname, args, outputs, lines } => {
+                // Function call stack prevents cycles (§3.2).
+                if self.call_stack.contains(fname) {
+                    return CostNode::Block {
+                        label: format!("FCALL {fname} (recursive, lines {}-{})", lines.0, lines.1),
+                        total: 0.0,
+                        children: vec![],
+                    };
+                }
+                let Some(f) = self.funcs.get(fname) else {
+                    return CostNode::Block {
+                        label: format!("FCALL {fname} (unknown)"),
+                        total: 0.0,
+                        children: vec![],
+                    };
+                };
+                self.call_stack.push(fname.clone());
+                // bind arguments into a fresh tracker
+                let mut ft = VarTracker::default();
+                for (p, a) in f.params.iter().zip(args.iter()) {
+                    if let Some(info) = t.get(a) {
+                        ft.create(p, info.mc, info.format, info.state == DataState::Hdfs);
+                    }
+                }
+                let (total, children) = self.cost_blocks(&f.blocks, &mut ft);
+                self.call_stack.pop();
+                for (caller, callee) in outputs.iter().zip(f.outputs.iter()) {
+                    if let Some(info) = ft.get(callee) {
+                        t.create(caller, info.mc, info.format, info.state == DataState::Hdfs);
+                    }
+                }
+                CostNode::Block {
+                    label: format!("FCALL {fname} (lines {}-{})", lines.0, lines.1),
+                    total,
+                    children,
+                }
+            }
+        }
+    }
+
+    fn cost_insts(&mut self, insts: &[Instr], t: &mut VarTracker) -> (f64, Vec<CostNode>) {
+        let mut total = 0.0;
+        let mut nodes = Vec::new();
+        for inst in insts {
+            let cost = self.cost_inst(inst, t);
+            total += cost.total();
+            nodes.push(CostNode::Inst { rendered: explain::render_inst(inst), cost });
+        }
+        (total, nodes)
+    }
+
+    /// Cost one instruction and update the live-variable state.
+    fn cost_inst(&mut self, inst: &Instr, t: &mut VarTracker) -> InstCost {
+        let book = InstCost { io: 0.0, compute: self.k.bookkeeping, mr: None };
+        match inst {
+            Instr::CreateVar { var, temp, format, mc, .. } => {
+                t.create(var, *mc, *format, !*temp);
+                book
+            }
+            Instr::AssignVar { .. } => book,
+            Instr::CpVar { src, dst } => {
+                t.alias(src, dst);
+                book
+            }
+            Instr::RmVar { vars } => {
+                for v in vars {
+                    t.remove(v);
+                }
+                InstCost::default() // not counted (display-suppressed)
+            }
+            Instr::Cp(c) => self.cost_cp(c, t),
+            Instr::MrJob(j) => {
+                let jc = mr::cost_mr_job(j, t, self.cfg, self.cc, self.k);
+                InstCost { io: 0.0, compute: 0.0, mr: Some(jc) }
+            }
+        }
+    }
+
+    /// CP instruction: IO time (state-dependent) + compute time
+    /// `max(mem-bandwidth, FLOPs/clock)` (§3.3).
+    fn cost_cp(&mut self, c: &CpInst, t: &mut VarTracker) -> InstCost {
+        let mut io = 0.0;
+        // Inputs: HDFS-resident matrices pay format-specific read time once.
+        for inp in &c.inputs {
+            if let Operand::Mat(name) = inp {
+                let info = t.get(name).cloned();
+                if let Some(info) = info {
+                    if info.state == DataState::Hdfs {
+                        io += self.read_time(&info.mc, info.format);
+                    }
+                    t.touch_mem(name);
+                }
+            }
+        }
+        let in_mc: Vec<MatrixCharacteristics> = c
+            .inputs
+            .iter()
+            .map(|o| match o {
+                Operand::Mat(n) => t.mc(n),
+                _ => MatrixCharacteristics::scalar(),
+            })
+            .collect();
+        let out_mc = match &c.output {
+            Operand::Mat(n) => t.mc(n),
+            _ => MatrixCharacteristics::scalar(),
+        };
+        let unknown = MatrixCharacteristics::unknown;
+        let a = in_mc.first().copied().unwrap_or_else(unknown);
+        let b = in_mc.get(1).copied().unwrap_or_else(unknown);
+        let mut flops = match &c.op {
+            CpOp::Tsmm { .. } => flops::tsmm(&a),
+            CpOp::MatMult => flops::matmult(&a, &b),
+            CpOp::Transpose => flops::transpose(&a),
+            CpOp::Diag => flops::diag(&a),
+            CpOp::Rand { .. } => flops::rand(&out_mc),
+            CpOp::Seq { .. } => flops::rand(&out_mc),
+            CpOp::Binary(BinOp::Solve) => flops::solve(&a, &b),
+            CpOp::Binary(op) => {
+                let shape = if a.dims_known() && !a.is_scalar() { a } else { b };
+                flops::binary(*op, &if out_mc.dims_known() { out_mc } else { shape })
+            }
+            CpOp::Unary(op) => flops::unary(*op, &a),
+            CpOp::AggUnary(op, _) => flops::agg_unary(*op, &a),
+            CpOp::Append => flops::append(&out_mc),
+            CpOp::Partition => flops::partition(&a),
+            CpOp::Write { format, .. } => match format {
+                Format::TextCell | Format::Csv => flops::text_write(&a),
+                Format::BinaryBlock => flops::transpose(&a), // copy cost
+            },
+            CpOp::Print => 1.0,
+        };
+        // multi-threaded CP ops exploit local parallelism for the heavy
+        // kernels (matmult family); SystemML 2015-era CP ops were largely
+        // single-threaded, which the paper's figures reflect -> factor 1.
+        flops = flops.max(0.0);
+        let mem_bytes: f64 = in_mc
+            .iter()
+            .chain(std::iter::once(&out_mc))
+            .map(|m| m.mem_estimate(self.cfg.sparse_threshold))
+            .filter(|m| m.is_finite())
+            .sum();
+        let compute = (flops / self.cc.clock_hz).max(mem_bytes / self.k.mem_bw);
+
+        // Output IO: persistent writes / partition copies.
+        match &c.op {
+            CpOp::Write { format, .. } => {
+                io += self.write_time(&a, *format);
+            }
+            CpOp::Partition => {
+                // writes the partitioned copy back to HDFS
+                io += self.write_time(&a, Format::BinaryBlock);
+                if let Operand::Mat(out) = &c.output {
+                    t.set_hdfs(out);
+                }
+            }
+            _ => {}
+        }
+        // outputs of in-memory instructions are in-memory
+        if let Operand::Mat(out) = &c.output {
+            if !matches!(c.op, CpOp::Partition) {
+                t.touch_mem(out);
+            }
+        }
+        InstCost { io, compute, mr: None }
+    }
+
+    fn read_time(&self, mc: &MatrixCharacteristics, format: Format) -> f64 {
+        let size = mc.serialized_size(format);
+        if !size.is_finite() {
+            return 0.0; // unknowns cannot be costed (§3.5)
+        }
+        let bw = match format {
+            Format::BinaryBlock => self.k.hdfs_read_binaryblock,
+            _ => self.k.hdfs_read_text,
+        };
+        size / bw
+    }
+
+    fn write_time(&self, mc: &MatrixCharacteristics, format: Format) -> f64 {
+        let size = mc.serialized_size(format);
+        if !size.is_finite() {
+            return 0.0;
+        }
+        let bw = match format {
+            Format::BinaryBlock => self.k.hdfs_write_binaryblock,
+            _ => self.k.hdfs_write_text,
+        };
+        size / bw
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cost-annotated EXPLAIN (Figures 4 and 5)
+// ---------------------------------------------------------------------
+
+/// Render the cost-annotated runtime plan (paper Figures 4/5).
+pub fn explain_costed(report: &CostReport) -> String {
+    use crate::util::fmt::fmt_secs;
+    let mut out = format!("PROGRAM                              # total cost C={}\n", fmt_secs(report.total));
+    out.push_str("--MAIN PROGRAM\n");
+    fn walk(nodes: &[CostNode], out: &mut String, indent: usize) {
+        for n in nodes {
+            match n {
+                CostNode::Block { label, total, children } => {
+                    out.push_str(&format!(
+                        "{}{label}  # C={}\n",
+                        "-".repeat(indent),
+                        crate::util::fmt::fmt_secs(*total)
+                    ));
+                    walk(children, out, indent + 2);
+                }
+                CostNode::Inst { rendered, cost } => {
+                    let annot = match &cost.mr {
+                        Some(m) => m.annotate(),
+                        None => format!(
+                            "# C=[{}, {}]",
+                            crate::util::fmt::fmt_secs(cost.io),
+                            crate::util::fmt::fmt_secs(cost.compute)
+                        ),
+                    };
+                    let first_line = rendered.lines().next().unwrap_or("");
+                    out.push_str(&format!("{}{first_line}  {annot}\n", "-".repeat(indent)));
+                    for extra in rendered.lines().skip(1) {
+                        out.push_str(&format!("{}{extra}\n", "-".repeat(indent)));
+                    }
+                }
+            }
+        }
+    }
+    walk(&report.nodes, &mut out, 4);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{CompileOptions, Scenario};
+
+    fn cost_scenario(s: Scenario) -> CostReport {
+        let opts = CompileOptions::default();
+        let c = s.compile(&opts);
+        cost_program(&c.runtime, &opts.cfg, &opts.cc.0, &CostConstants::default())
+    }
+
+    #[test]
+    fn xs_total_cost_matches_figure4() {
+        // Figure 4: total C = 3.31 s.
+        let r = cost_scenario(Scenario::xs());
+        assert!(
+            (r.total - 3.31).abs() < 0.25,
+            "XS total {} != paper 3.31s",
+            r.total
+        );
+    }
+
+    #[test]
+    fn xs_tsmm_dominates() {
+        // Figure 4 discussion: tsmm computation dominates; next heavy
+        // hitters are the initial read of X and solve.
+        let r = cost_scenario(Scenario::xs());
+        let mut inst_costs: Vec<(String, f64)> = Vec::new();
+        fn collect(nodes: &[CostNode], out: &mut Vec<(String, f64)>) {
+            for n in nodes {
+                match n {
+                    CostNode::Block { children, .. } => collect(children, out),
+                    CostNode::Inst { rendered, cost } => {
+                        out.push((rendered.clone(), cost.total()))
+                    }
+                }
+            }
+        }
+        collect(&r.nodes, &mut inst_costs);
+        inst_costs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        assert!(inst_costs[0].0.contains("tsmm"), "top: {:?}", &inst_costs[..3]);
+        assert!(inst_costs[1].0.contains("solve"), "{:?}", &inst_costs[..3]);
+        // tsmm io ~0.51, compute ~2.33
+        let tsmm = &inst_costs[0];
+        assert!((tsmm.1 - 2.83).abs() < 0.1, "tsmm total {}", tsmm.1);
+    }
+
+    #[test]
+    fn xl1_total_cost_matches_figure5() {
+        // Figure 5: total C = 606.9 s, MR job 589.8 s.
+        let r = cost_scenario(Scenario::xl1());
+        assert!(
+            (r.total - 606.9).abs() < 45.0,
+            "XL1 total {} != paper 606.9s",
+            r.total
+        );
+    }
+
+    #[test]
+    fn xl1_mr_breakdown_matches_figure5() {
+        let r = cost_scenario(Scenario::xl1());
+        let mut mr_cost = None;
+        fn find_mr(nodes: &[CostNode], out: &mut Option<mr::MrJobCost>) {
+            for n in nodes {
+                match n {
+                    CostNode::Block { children, .. } => find_mr(children, out),
+                    CostNode::Inst { cost, .. } => {
+                        if let Some(m) = &cost.mr {
+                            *out = Some(m.clone());
+                        }
+                    }
+                }
+            }
+        }
+        find_mr(&r.nodes, &mut mr_cost);
+        let m = mr_cost.expect("XL1 has an MR job");
+        // Figure 5: nmap=5967, nred=1, latency 144.5, hdfsread 70.7,
+        // mapexec 324.7, dcread 12.6, shuffle 19.7, redexec 11.1.
+        assert_eq!(m.n_map, 5967, "nmap");
+        assert_eq!(m.n_red, 1, "nred");
+        assert!((m.latency - 144.5).abs() < 8.0, "latency {}", m.latency);
+        assert!((m.hdfs_read - 70.7).abs() < 4.0, "hdfsread {}", m.hdfs_read);
+        assert!((m.map_exec - 324.7).abs() < 16.0, "mapexec {}", m.map_exec);
+        assert!((m.dcache_read - 12.6).abs() < 2.0, "dcread {}", m.dcache_read);
+        assert!((m.shuffle - 19.7).abs() < 4.0, "shuffle {}", m.shuffle);
+        assert!((m.red_exec - 11.1).abs() < 2.0, "redexec {}", m.red_exec);
+        assert!((m.total() - 589.8).abs() < 30.0, "job total {}", m.total());
+    }
+
+    #[test]
+    fn first_use_pays_io_second_is_free() {
+        // §3.2: "only the first instruction will pay the costs of reading".
+        let r = cost_scenario(Scenario::xs());
+        let mut costs = Vec::new();
+        fn collect(nodes: &[CostNode], out: &mut Vec<(String, f64)>) {
+            for n in nodes {
+                match n {
+                    CostNode::Block { children, .. } => collect(children, out),
+                    CostNode::Inst { rendered, cost } => out.push((rendered.clone(), cost.io)),
+                }
+            }
+        }
+        collect(&r.nodes, &mut costs);
+        let tsmm_io = costs.iter().find(|(s, _)| s.contains("tsmm")).unwrap().1;
+        let bamm_io = costs.iter().find(|(s, _)| s.contains("ba+*")).unwrap().1;
+        assert!(tsmm_io > 0.4, "tsmm pays X read: {tsmm_io}");
+        assert_eq!(bamm_io, 0.0, "ba+* reuses in-memory X");
+    }
+
+    #[test]
+    fn for_loop_scales_body_cost() {
+        use crate::api::compile_with_meta;
+        let src = "X = read($1);\ns = 0;\nfor (i in 1:10) { s = s + sum(X); }\nwrite(s, $4);";
+        let opts = CompileOptions::default();
+        let sc = Scenario::xs();
+        let c = compile_with_meta(src, &sc.args(), &sc.meta(1000), &opts).unwrap();
+        let r = cost_program(&c.runtime, &opts.cfg, &opts.cc.0, &CostConstants::default());
+        // body ~ sum over 1e7 cells * 4 / 2.15e9 = 18.6ms; 10 iters ~186ms
+        // plus one X read 0.51s (first iteration only!)
+        assert!(r.total > 0.5 + 0.15, "total {}", r.total);
+        assert!(r.total < 0.5 + 0.35, "read cost must not repeat: {}", r.total);
+    }
+
+    #[test]
+    fn parfor_divides_by_parallelism() {
+        use crate::api::compile_with_meta;
+        let mk = |parfor: &str| {
+            let src = format!(
+                "X = read($1);\ns = 0;\n{parfor} (i in 1:24) {{ s = s + sum(X); }}\nwrite(s, $4);"
+            );
+            let opts = CompileOptions::default();
+            let sc = Scenario::xs();
+            let c = compile_with_meta(&src, &sc.args(), &sc.meta(1000), &opts).unwrap();
+            cost_program(&c.runtime, &opts.cfg, &opts.cc.0, &CostConstants::default()).total
+        };
+        let serial = mk("for");
+        let parallel = mk("parfor");
+        assert!(parallel < serial, "parfor {parallel} < for {serial}");
+    }
+
+    #[test]
+    fn while_uses_unknown_iteration_constant() {
+        use crate::api::compile_with_meta;
+        let src = "s = 1;\nwhile (s < 10) { s = s * 2; }\nwrite(s, $4);";
+        let opts = CompileOptions::default();
+        let sc = Scenario::xs();
+        let c = compile_with_meta(src, &sc.args(), &sc.meta(1000), &opts).unwrap();
+        let r = cost_program(&c.runtime, &opts.cfg, &opts.cc.0, &CostConstants::default());
+        assert!(r.total > 0.0);
+        let label_ok = r.nodes.iter().any(|n| match n {
+            CostNode::Block { label, .. } => label.contains("WHILE") && label.contains("=10"),
+            _ => false,
+        });
+        assert!(label_ok, "{:?}", r.nodes);
+    }
+
+    #[test]
+    fn recursive_function_costing_terminates() {
+        use crate::api::compile_with_meta;
+        let src = r#"
+f = function(a) return (b) { b = f(a); }
+x = 3;
+y = f(x);
+write(y, $4);
+"#;
+        let opts = CompileOptions::default();
+        let sc = Scenario::xs();
+        let c = compile_with_meta(src, &sc.args(), &sc.meta(1000), &opts).unwrap();
+        let r = cost_program(&c.runtime, &opts.cfg, &opts.cc.0, &CostConstants::default());
+        assert!(r.total.is_finite());
+    }
+
+    #[test]
+    fn explain_costed_matches_figure4_format() {
+        let r = cost_scenario(Scenario::xs());
+        let text = explain_costed(&r);
+        assert!(text.contains("total cost C="), "{text}");
+        assert!(text.contains("# C=["));
+        assert!(text.contains("CP tsmm"));
+    }
+
+    #[test]
+    fn cheaper_scenario_costs_less() {
+        let xs = cost_scenario(Scenario::xs()).total;
+        let xl1 = cost_scenario(Scenario::xl1()).total;
+        let xl4 = cost_scenario(Scenario::xl4()).total;
+        assert!(xs < xl1 && xl1 < xl4, "{xs} < {xl1} < {xl4}");
+    }
+}

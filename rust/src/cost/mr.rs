@@ -1,0 +1,408 @@
+//! MR-job instruction costing (paper §3.3): job/task latency, in-memory
+//! variable export, map read/compute/write, distributed-cache read,
+//! shuffle, reduce compute, and final HDFS write — each normalised by the
+//! *effective degree of parallelism* (a scaled minimum of available slots
+//! and the number of tasks).
+
+use super::vars::{DataState, VarTracker};
+use super::flops;
+use crate::conf::{ClusterConfig, CostConstants, SystemConfig};
+use crate::matrix::{Format, MatrixCharacteristics};
+use crate::rtprog::*;
+
+/// Full cost breakdown of one MR job (the annotations of Figure 5).
+#[derive(Clone, Debug, Default)]
+pub struct MrJobCost {
+    pub n_map: usize,
+    pub n_red: usize,
+    /// job + task latency, normalised by effective parallelism
+    pub latency: f64,
+    /// export of in-memory inputs to HDFS
+    pub export: f64,
+    pub hdfs_read: f64,
+    pub dcache_read: f64,
+    pub map_exec: f64,
+    pub shuffle: f64,
+    pub red_exec: f64,
+    pub hdfs_write: f64,
+}
+
+impl MrJobCost {
+    pub fn total(&self) -> f64 {
+        self.latency
+            + self.export
+            + self.hdfs_read
+            + self.dcache_read
+            + self.map_exec
+            + self.shuffle
+            + self.red_exec
+            + self.hdfs_write
+    }
+
+    /// Figure-5-style annotation.
+    pub fn annotate(&self) -> String {
+        use crate::util::fmt::fmt_secs;
+        format!(
+            "# C=[{}] nmap={} nred={} latency=[{}] hdfsread=[{}] mapexec=[{}] dcread=[{}] shuffle=[{}] redexec=[{}] hdfswrite=[{}]",
+            fmt_secs(self.total()),
+            self.n_map,
+            self.n_red,
+            fmt_secs(self.latency),
+            fmt_secs(self.hdfs_read),
+            fmt_secs(self.map_exec),
+            fmt_secs(self.dcache_read),
+            fmt_secs(self.shuffle),
+            fmt_secs(self.red_exec),
+            fmt_secs(self.hdfs_write),
+        )
+    }
+}
+
+/// Cost one MR job and update variable states (outputs land on HDFS).
+pub fn cost_mr_job(
+    j: &MrJob,
+    t: &mut VarTracker,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    k: &CostConstants,
+) -> MrJobCost {
+    let mut c = MrJobCost::default();
+
+    // ---- export in-memory inputs to HDFS (hybrid-plan data exchange)
+    for v in &j.inputs {
+        if let Some(info) = t.get(v) {
+            if info.state == DataState::Mem {
+                let size = info.mc.serialized_size(Format::BinaryBlock);
+                if size.is_finite() {
+                    c.export += size / k.hdfs_write_binaryblock;
+                }
+                t.set_hdfs(v);
+            }
+        }
+    }
+
+    // ---- task counts
+    let input_mc: Vec<MatrixCharacteristics> = j.inputs.iter().map(|v| t.mc(v)).collect();
+    let mut n_map = 0usize;
+    for (v, mc) in j.inputs.iter().zip(&input_mc) {
+        let size = mc.serialized_size(Format::BinaryBlock);
+        if size.is_finite() {
+            let _ = v;
+            n_map += (size / cc.hdfs_block_bytes).ceil() as usize;
+        }
+    }
+    c.n_map = n_map.max(1);
+    // reducers: bounded by the number of distinct output groups (blocks)
+    let has_reduce =
+        !j.shuffle_insts.is_empty() || !j.agg_insts.is_empty() || !j.other_insts.is_empty();
+    c.n_red = if has_reduce {
+        let max_groups = j
+            .agg_insts
+            .iter()
+            .chain(&j.shuffle_insts)
+            .chain(&j.other_insts)
+            .map(|i| output_groups(i, cfg))
+            .max()
+            .unwrap_or(1);
+        j.num_reducers.min(max_groups).max(1)
+    } else {
+        0
+    };
+
+    // ---- effective parallelism: "scaled minimum of k_m and #tasks" (§3.3)
+    let k_map_eff =
+        ((cc.effective_k_map().min(c.n_map) as f64) * k.dop_scale).max(1.0);
+    let k_red_eff = if c.n_red > 0 {
+        ((cc.effective_k_reduce().min(c.n_red) as f64) * k.dop_scale).max(1.0)
+    } else {
+        1.0
+    };
+
+    // ---- latency
+    c.latency = k.job_latency
+        + k.task_latency * (c.n_map as f64 / k_map_eff)
+        + k.task_latency * (c.n_red as f64 / k_red_eff);
+
+    // ---- HDFS read of map inputs (dcache inputs read separately)
+    for (v, mc) in j.inputs.iter().zip(&input_mc) {
+        if j.dcache.contains(v) {
+            continue;
+        }
+        let size = mc.serialized_size(Format::BinaryBlock);
+        if size.is_finite() {
+            c.hdfs_read += size / k.hdfs_read_binaryblock / k_map_eff;
+        }
+    }
+
+    // ---- distributed-cache read: partitions are read on demand per task
+    for v in &j.dcache {
+        let mc = t.mc(v);
+        let size = mc.serialized_size(Format::BinaryBlock);
+        if size.is_finite() {
+            let per_task = size.min(cfg.partition_bytes);
+            c.dcache_read += c.n_map as f64 * per_task / k.dcache_read / k_map_eff;
+        }
+    }
+
+    // ---- map compute
+    let inst_mc = resolve_inst_mcs(j, &input_mc);
+    for inst in j.map_insts.iter().chain(&j.shuffle_insts) {
+        c.map_exec += inst_flops(inst, &inst_mc) / cc.clock_hz / k_map_eff;
+    }
+
+    // ---- shuffle: map write + transfer + reduce merge (3 passes, §3.4)
+    let mut shuffle_bytes = 0.0;
+    for agg in &j.agg_insts {
+        // each map task emits one combined partial of the aggregate shape
+        let partial = inst_mc.get(&agg.output).or_else(|| inst_mc.get(&agg.inputs[0]));
+        if let Some(mc) = partial {
+            let size = mc.serialized_size(Format::BinaryBlock);
+            if size.is_finite() {
+                // aggregations of job inputs (cpmm follow-up): the full
+                // input is shuffled, not per-task partials
+                if agg.inputs[0] < j.inputs.len() {
+                    shuffle_bytes += input_mc[agg.inputs[0]]
+                        .serialized_size(Format::BinaryBlock)
+                        .min(f64::MAX);
+                } else {
+                    shuffle_bytes += c.n_map as f64 * size;
+                }
+            }
+        }
+    }
+    for sh in &j.shuffle_insts {
+        // cpmm/rmm shuffle both inputs entirely
+        for &i in &sh.inputs {
+            if let Some(mc) = inst_mc.get(&i) {
+                let size = mc.serialized_size(Format::BinaryBlock);
+                if size.is_finite() {
+                    shuffle_bytes += size;
+                }
+            }
+        }
+    }
+    for ot in &j.other_insts {
+        for &i in &ot.inputs {
+            if let Some(mc) = inst_mc.get(&i) {
+                let size = mc.serialized_size(Format::BinaryBlock);
+                if size.is_finite() {
+                    shuffle_bytes += size;
+                }
+            }
+        }
+    }
+    let shuffle_par = if c.n_red > 0 { k_map_eff } else { 1.0 };
+    c.shuffle = 3.0 * shuffle_bytes / k.shuffle_bw / shuffle_par;
+
+    // ---- reduce compute
+    for agg in &j.agg_insts {
+        let partial = inst_mc.get(&agg.output).copied().unwrap_or_else(MatrixCharacteristics::unknown);
+        let n_partials = if agg.inputs[0] < j.inputs.len() {
+            // aggregating a prior job's full output: partials = blocks rows
+            let in_mc = input_mc[agg.inputs[0]];
+            let total = in_mc.serialized_size(Format::BinaryBlock);
+            let each = partial.serialized_size(Format::BinaryBlock).max(1.0);
+            if total.is_finite() {
+                (total / each).max(1.0)
+            } else {
+                1.0
+            }
+        } else {
+            c.n_map as f64
+        };
+        c.red_exec += flops::agg_kahan(n_partials, &partial) / cc.clock_hz / k_red_eff;
+    }
+    for sh in &j.shuffle_insts {
+        // cpmm multiply happens reduce-side
+        let a = inst_mc.get(&sh.inputs[0]).copied().unwrap_or_else(MatrixCharacteristics::unknown);
+        let b = inst_mc
+            .get(sh.inputs.get(1).unwrap_or(&usize::MAX))
+            .copied()
+            .unwrap_or_else(MatrixCharacteristics::unknown);
+        c.red_exec += flops::matmult(&a, &b) / cc.clock_hz / k_red_eff;
+    }
+    for ot in &j.other_insts {
+        let a = inst_mc.get(&ot.output).copied().unwrap_or_else(MatrixCharacteristics::unknown);
+        c.red_exec += a.cells().unwrap_or(0.0) / cc.clock_hz / k_red_eff;
+    }
+
+    // ---- HDFS write of outputs
+    for (v, &ri) in j.outputs.iter().zip(&j.result_indices) {
+        let mc = inst_mc.get(&ri).copied().unwrap_or_else(|| t.mc(v));
+        let size = mc.serialized_size(Format::BinaryBlock);
+        if size.is_finite() {
+            c.hdfs_write +=
+                size * j.replication as f64 / k.hdfs_write_binaryblock / k_red_eff.max(1.0);
+        }
+        // output state: on HDFS with the instruction's characteristics
+        t.set_mc(v, mc);
+        t.set_hdfs(v);
+    }
+
+    c
+}
+
+/// Resolve per-byte-index characteristics: job inputs then instruction
+/// outputs.
+fn resolve_inst_mcs(
+    j: &MrJob,
+    input_mc: &[MatrixCharacteristics],
+) -> std::collections::HashMap<usize, MatrixCharacteristics> {
+    let mut m = std::collections::HashMap::new();
+    for (i, mc) in input_mc.iter().enumerate() {
+        m.insert(i, *mc);
+    }
+    for inst in j.all_insts() {
+        m.insert(inst.output, inst.mc);
+    }
+    m
+}
+
+/// Number of distinct output groups (blocks) of a reduce-side instruction,
+/// which bounds useful reducer parallelism.
+fn output_groups(inst: &MrInst, _cfg: &SystemConfig) -> usize {
+    let rb = inst.mc.row_blocks();
+    let cb = inst.mc.col_blocks();
+    if rb < 0 || cb < 0 {
+        return usize::MAX; // unknown: don't constrain
+    }
+    (rb as usize).saturating_mul(cb as usize).max(1)
+}
+
+/// FLOPs of one MR instruction given resolved input characteristics.
+fn inst_flops(
+    inst: &MrInst,
+    mcs: &std::collections::HashMap<usize, MatrixCharacteristics>,
+) -> f64 {
+    let unknown = MatrixCharacteristics::unknown;
+    let in0 = inst.inputs.first().and_then(|i| mcs.get(i)).copied().unwrap_or_else(unknown);
+    let in1 = inst.inputs.get(1).and_then(|i| mcs.get(i)).copied().unwrap_or_else(unknown);
+    match &inst.op {
+        MrOp::Tsmm { .. } => flops::tsmm(&in0),
+        MrOp::MapMM { .. } => flops::matmult(&in0, &in1),
+        MrOp::Cpmm | MrOp::Rmm => {
+            // partial products computed in reduce; map side only tags
+            0.0
+        }
+        MrOp::Transpose => flops::transpose(&in0),
+        MrOp::Diag => flops::diag(&in0),
+        MrOp::DataGen { rows, cols, .. } => {
+            flops::rand(&MatrixCharacteristics::new(*rows, *cols, 1000, -1))
+        }
+        MrOp::Binary(op) | MrOp::ScalarBin { op, .. } => flops::binary(*op, &inst.mc),
+        MrOp::Unary(op) => flops::unary(*op, &in0),
+        MrOp::AggUnaryMap(op, _) => flops::agg_unary(*op, &in0),
+        MrOp::Agg { .. } => 0.0, // costed in red_exec
+        MrOp::Append { .. } => flops::append(&inst.mc),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_env() -> (SystemConfig, ClusterConfig, CostConstants) {
+        (SystemConfig::default(), ClusterConfig::paper_cluster(), CostConstants::default())
+    }
+
+    fn xl1_job() -> (MrJob, VarTracker) {
+        // Hand-built Figure-3 job: inputs [X, _mVar3(y, partitioned)].
+        let x_mc = MatrixCharacteristics::dense(100_000_000, 1_000, 1000);
+        let y_mc = MatrixCharacteristics::dense(100_000_000, 1, 1000);
+        let a_mc = MatrixCharacteristics::new(1000, 1000, 1000, -1);
+        let tx_mc = MatrixCharacteristics::dense(1_000, 100_000_000, 1000);
+        let b_mc = MatrixCharacteristics::new(1000, 1, 1000, -1);
+        let mut t = VarTracker::default();
+        t.create("X", x_mc, Format::BinaryBlock, true);
+        t.create("_mVar3", y_mc, Format::BinaryBlock, true);
+        t.create("_mVar5", a_mc, Format::BinaryBlock, false);
+        t.create("_mVar6", b_mc, Format::BinaryBlock, false);
+        let job = MrJob {
+            job_type: JobType::Gmr,
+            inputs: vec!["X".into(), "_mVar3".into()],
+            dcache: vec!["_mVar3".into()],
+            map_insts: vec![
+                MrInst { op: MrOp::Tsmm { left: true }, inputs: vec![0], output: 2, mc: a_mc },
+                MrInst { op: MrOp::Transpose, inputs: vec![0], output: 3, mc: tx_mc },
+                MrInst {
+                    op: MrOp::MapMM { right_part: true },
+                    inputs: vec![3, 1],
+                    output: 4,
+                    mc: b_mc,
+                },
+            ],
+            shuffle_insts: vec![],
+            agg_insts: vec![
+                MrInst { op: MrOp::Agg { kahan: true }, inputs: vec![2], output: 5, mc: a_mc },
+                MrInst { op: MrOp::Agg { kahan: true }, inputs: vec![4], output: 6, mc: b_mc },
+            ],
+            other_insts: vec![],
+            outputs: vec!["_mVar5".into(), "_mVar6".into()],
+            result_indices: vec![5, 6],
+            num_reducers: 12,
+            replication: 1,
+        };
+        (job, t)
+    }
+
+    #[test]
+    fn xl1_job_breakdown_matches_figure5() {
+        let (job, mut t) = xl1_job();
+        let (cfg, cc, k) = paper_env();
+        let c = cost_mr_job(&job, &mut t, &cfg, &cc, &k);
+        assert_eq!(c.n_map, 5967, "Figure 5: nmap=5967");
+        assert_eq!(c.n_red, 1, "Figure 5: nred=1");
+        assert!((c.latency - 144.5).abs() < 8.0, "latency {}", c.latency);
+        assert!((c.hdfs_read - 70.7).abs() < 3.0, "hdfsread {}", c.hdfs_read);
+        assert!((c.map_exec - 324.7).abs() < 15.0, "mapexec {}", c.map_exec);
+        assert!((c.dcache_read - 12.6).abs() < 2.0, "dcread {}", c.dcache_read);
+        assert!((c.shuffle - 19.7).abs() < 4.0, "shuffle {}", c.shuffle);
+        assert!((c.red_exec - 11.1).abs() < 2.0, "redexec {}", c.red_exec);
+        assert!(c.hdfs_write < 0.5, "hdfswrite {}", c.hdfs_write);
+        assert!((c.total() - 589.8).abs() < 25.0, "total {}", c.total());
+    }
+
+    #[test]
+    fn outputs_marked_hdfs_after_job() {
+        let (job, mut t) = xl1_job();
+        let (cfg, cc, k) = paper_env();
+        cost_mr_job(&job, &mut t, &cfg, &cc, &k);
+        assert_eq!(t.get("_mVar5").unwrap().state, DataState::Hdfs);
+        assert_eq!(t.get("_mVar6").unwrap().state, DataState::Hdfs);
+    }
+
+    #[test]
+    fn in_memory_inputs_pay_export() {
+        let (job, mut t) = xl1_job();
+        let (cfg, cc, k) = paper_env();
+        // pretend X is in memory (hybrid plan data exchange)
+        t.touch_mem("X");
+        let c = cost_mr_job(&job, &mut t, &cfg, &cc, &k);
+        assert!(c.export > 1000.0, "800GB export is expensive: {}", c.export);
+    }
+
+    #[test]
+    fn latency_dominates_tiny_jobs() {
+        let mc = MatrixCharacteristics::dense(100, 100, 100);
+        let mut t = VarTracker::default();
+        t.create("X", mc, Format::BinaryBlock, true);
+        t.create("out", mc, Format::BinaryBlock, false);
+        let job = MrJob {
+            job_type: JobType::Gmr,
+            inputs: vec!["X".into()],
+            dcache: vec![],
+            map_insts: vec![MrInst { op: MrOp::Transpose, inputs: vec![0], output: 1, mc }],
+            shuffle_insts: vec![],
+            agg_insts: vec![],
+            other_insts: vec![],
+            outputs: vec!["out".into()],
+            result_indices: vec![1],
+            num_reducers: 12,
+            replication: 1,
+        };
+        let (cfg, cc, k) = paper_env();
+        let c = cost_mr_job(&job, &mut t, &cfg, &cc, &k);
+        assert!(c.latency >= 20.0, "job latency floor");
+        assert!(c.latency / c.total() > 0.95);
+    }
+}

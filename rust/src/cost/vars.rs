@@ -1,0 +1,167 @@
+//! Live-variable state tracking (paper §3.2): sizes plus in-memory state.
+//!
+//! "Persistent read inputs and MR job outputs are known to be on HDFS,
+//! while all in-memory instructions change the state of their inputs and
+//! output to in-memory. … if a persistent dataset is used by two in-memory
+//! instructions, only the first instruction will pay the costs of reading
+//! the input."
+//!
+//! `cpvar` aliases share one underlying data entry, so touching `X` also
+//! marks its alias `pREADX` in-memory.
+
+use std::collections::HashMap;
+
+use crate::matrix::{Format, MatrixCharacteristics};
+
+/// Physical residence of a matrix variable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataState {
+    /// Serialized on (simulated) HDFS; first in-memory use pays read IO.
+    Hdfs,
+    /// Resident in the CP buffer pool.
+    Mem,
+}
+
+/// Underlying data entry (shared between aliases).
+#[derive(Clone, Debug)]
+pub struct DataInfo {
+    pub mc: MatrixCharacteristics,
+    pub format: Format,
+    pub state: DataState,
+}
+
+/// Symbol table of live variables → shared data entries.
+#[derive(Clone, Debug, Default)]
+pub struct VarTracker {
+    names: HashMap<String, usize>,
+    data: Vec<DataInfo>,
+}
+
+impl VarTracker {
+    /// Register a variable (createvar): temps start with no on-disk data
+    /// (state Mem until an MR job writes them), persistent reads are HDFS.
+    pub fn create(&mut self, name: &str, mc: MatrixCharacteristics, format: Format, on_hdfs: bool) {
+        let id = self.data.len();
+        self.data.push(DataInfo {
+            mc,
+            format,
+            state: if on_hdfs { DataState::Hdfs } else { DataState::Mem },
+        });
+        self.names.insert(name.to_string(), id);
+    }
+
+    /// Alias `dst` to `src` (cpvar).
+    pub fn alias(&mut self, src: &str, dst: &str) {
+        if let Some(&id) = self.names.get(src) {
+            self.names.insert(dst.to_string(), id);
+        }
+    }
+
+    /// Remove a name binding (rmvar). Underlying data stays for aliases.
+    pub fn remove(&mut self, name: &str) {
+        self.names.remove(name);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&DataInfo> {
+        self.names.get(name).map(|&id| &self.data[id])
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut DataInfo> {
+        let id = *self.names.get(name)?;
+        Some(&mut self.data[id])
+    }
+
+    /// Characteristics, or unknown when untracked.
+    pub fn mc(&self, name: &str) -> MatrixCharacteristics {
+        self.get(name).map(|d| d.mc).unwrap_or_else(MatrixCharacteristics::unknown)
+    }
+
+    /// Mark a variable (and aliases) in-memory; returns the previous state.
+    pub fn touch_mem(&mut self, name: &str) -> Option<DataState> {
+        let d = self.get_mut(name)?;
+        let prev = d.state;
+        d.state = DataState::Mem;
+        Some(prev)
+    }
+
+    /// Mark a variable as HDFS-resident (MR job outputs / exports).
+    pub fn set_hdfs(&mut self, name: &str) {
+        if let Some(d) = self.get_mut(name) {
+            d.state = DataState::Hdfs;
+        }
+    }
+
+    /// Update characteristics (e.g. once an MR job defines the output).
+    pub fn set_mc(&mut self, name: &str, mc: MatrixCharacteristics) {
+        if let Some(d) = self.get_mut(name) {
+            d.mc = mc;
+        }
+    }
+
+    /// Merge two trackers after a conditional: a variable stays in-memory
+    /// only if both branches leave it in memory (conservative IO costing).
+    pub fn merge(&mut self, other: &VarTracker) {
+        let names: Vec<String> = self.names.keys().cloned().collect();
+        for name in names {
+            let ours = self.get(&name).map(|d| d.state);
+            let theirs = other.get(&name).map(|d| d.state);
+            if let (Some(DataState::Mem), Some(DataState::Hdfs)) = (ours, theirs) {
+                self.set_hdfs(&name);
+            }
+        }
+        for (name, &oid) in &other.names {
+            if !self.names.contains_key(name) {
+                let info = other.data[oid].clone();
+                let id = self.data.len();
+                self.data.push(info);
+                self.names.insert(name.clone(), id);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mc() -> MatrixCharacteristics {
+        MatrixCharacteristics::dense(100, 100, 100)
+    }
+
+    #[test]
+    fn first_toucher_pays_then_memory() {
+        let mut t = VarTracker::default();
+        t.create("pREADX", mc(), Format::BinaryBlock, true);
+        t.alias("pREADX", "X");
+        assert_eq!(t.touch_mem("X"), Some(DataState::Hdfs)); // pays IO
+        assert_eq!(t.touch_mem("X"), Some(DataState::Mem)); // free
+        // alias shares state
+        assert_eq!(t.get("pREADX").unwrap().state, DataState::Mem);
+    }
+
+    #[test]
+    fn rmvar_keeps_alias_data() {
+        let mut t = VarTracker::default();
+        t.create("a", mc(), Format::BinaryBlock, false);
+        t.alias("a", "b");
+        t.remove("a");
+        assert!(t.get("a").is_none());
+        assert!(t.get("b").is_some());
+    }
+
+    #[test]
+    fn merge_demotes_memory_state() {
+        let mut a = VarTracker::default();
+        a.create("x", mc(), Format::BinaryBlock, false);
+        let mut b = VarTracker::default();
+        b.create("x", mc(), Format::BinaryBlock, true);
+        a.merge(&b);
+        assert_eq!(a.get("x").unwrap().state, DataState::Hdfs);
+    }
+
+    #[test]
+    fn unknown_variable_is_unknown_mc() {
+        let t = VarTracker::default();
+        assert!(!t.mc("nope").dims_known());
+    }
+}

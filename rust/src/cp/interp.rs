@@ -1,0 +1,585 @@
+//! Runtime-program interpreter: executes the hybrid CP/MR plan. CP
+//! instructions run in-process (hot ops dispatch to AOT-compiled PJRT
+//! kernels when an artifact matches, else the native Rust kernels); MR-job
+//! instructions run on the deterministic MapReduce simulator.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::bufferpool::BufferPool;
+use super::{MatrixObject, SymbolTable, Value};
+use crate::conf::{ClusterConfig, SystemConfig};
+use crate::ir::{AggDir, AggOp, BinOp, Lit, UnOp};
+use crate::matrix::{io, ops, DenseMatrix, Format};
+use crate::mr;
+use crate::rtprog::*;
+use crate::runtime::{kernel_key, KernelRegistry};
+
+/// Execution statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    pub cp_insts: usize,
+    pub mr_jobs: usize,
+    pub map_tasks: usize,
+    pub shuffle_bytes: f64,
+    pub hdfs_read_bytes: f64,
+    pub hdfs_write_bytes: f64,
+    pub pjrt_calls: usize,
+    pub pool_evictions: usize,
+    pub elapsed_secs: f64,
+}
+
+/// The interpreter.
+pub struct Executor<'a> {
+    pub cfg: &'a SystemConfig,
+    pub cc: &'a ClusterConfig,
+    pub registry: Option<&'a KernelRegistry>,
+    pub pool: BufferPool,
+    pub symbols: SymbolTable,
+    pub stats: ExecStats,
+    funcs: std::collections::BTreeMap<String, RtFunction>,
+    threads: usize,
+    /// Adaptive PJRT-vs-native dispatch decisions per kernel key.
+    dispatch: std::collections::HashMap<String, bool>,
+}
+
+impl<'a> Executor<'a> {
+    pub fn new(
+        cfg: &'a SystemConfig,
+        cc: &'a ClusterConfig,
+        registry: Option<&'a KernelRegistry>,
+        scratch: std::path::PathBuf,
+    ) -> Self {
+        let capacity = (cfg.mem_budget_ratio * cc.cp_heap_bytes) as usize;
+        Executor {
+            cfg,
+            cc,
+            registry,
+            pool: BufferPool::new(capacity, scratch),
+            symbols: SymbolTable::default(),
+            stats: ExecStats::default(),
+            funcs: Default::default(),
+            threads: cc.k_local.max(1),
+            dispatch: Default::default(),
+        }
+    }
+
+    /// Execute a whole runtime program; returns the stats.
+    pub fn run(&mut self, rt: &RtProgram) -> Result<ExecStats> {
+        self.funcs = rt.funcs.clone();
+        let t0 = Instant::now();
+        self.exec_blocks(&rt.blocks)?;
+        self.stats.elapsed_secs = t0.elapsed().as_secs_f64();
+        self.stats.pool_evictions = self.pool.evictions;
+        Ok(self.stats.clone())
+    }
+
+    fn exec_blocks(&mut self, blocks: &[RtBlock]) -> Result<()> {
+        for b in blocks {
+            self.exec_block(b)?;
+        }
+        Ok(())
+    }
+
+    fn exec_block(&mut self, b: &RtBlock) -> Result<()> {
+        match b {
+            RtBlock::Generic { insts, .. } => {
+                for i in insts {
+                    self.exec_inst(i)?;
+                }
+                Ok(())
+            }
+            RtBlock::If { pred, then_blocks, else_blocks, .. } => {
+                if self.eval_pred_bool(pred)? {
+                    self.exec_blocks(then_blocks)
+                } else {
+                    self.exec_blocks(else_blocks)
+                }
+            }
+            RtBlock::For { var, from, to, by, body, .. } => {
+                let from = self.eval_pred_num(from)?;
+                let to = self.eval_pred_num(to)?;
+                let by = match by {
+                    Some(p) => self.eval_pred_num(p)?,
+                    None => {
+                        if from <= to {
+                            1.0
+                        } else {
+                            -1.0
+                        }
+                    }
+                };
+                if by == 0.0 {
+                    bail!("for loop with zero step");
+                }
+                let mut i = from;
+                while (by > 0.0 && i <= to) || (by < 0.0 && i >= to) {
+                    self.symbols.set(var, Value::Scalar(Lit::Int(i as i64)));
+                    self.exec_blocks(body)?;
+                    i += by;
+                }
+                Ok(())
+            }
+            RtBlock::While { pred, body, .. } => {
+                let mut guard = 0u64;
+                while self.eval_pred_bool(pred)? {
+                    self.exec_blocks(body)?;
+                    guard += 1;
+                    if guard > 10_000_000 {
+                        bail!("while loop exceeded 1e7 iterations");
+                    }
+                }
+                Ok(())
+            }
+            RtBlock::FCall { fname, args, outputs, .. } => {
+                let f = self
+                    .funcs
+                    .get(fname)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("unknown function '{fname}'"))?;
+                // bind arguments into a fresh scope
+                let saved = std::mem::take(&mut self.symbols);
+                for (p, a) in f.params.iter().zip(args.iter()) {
+                    let v = saved.get(a)?.clone();
+                    self.symbols.set(p, v);
+                }
+                let res = self.exec_blocks(&f.blocks);
+                let fscope = std::mem::replace(&mut self.symbols, saved);
+                res?;
+                for (caller, callee) in outputs.iter().zip(f.outputs.iter()) {
+                    let v = fscope.get(callee)?.clone();
+                    self.symbols.set(caller, v);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn eval_pred_bool(&mut self, p: &PredProg) -> Result<bool> {
+        let v = self.eval_pred(p)?;
+        v.as_bool().ok_or_else(|| anyhow!("predicate is not boolean: {v:?}"))
+    }
+
+    fn eval_pred_num(&mut self, p: &PredProg) -> Result<f64> {
+        let v = self.eval_pred(p)?;
+        v.as_f64().ok_or_else(|| anyhow!("loop bound is not numeric: {v:?}"))
+    }
+
+    fn eval_pred(&mut self, p: &PredProg) -> Result<Lit> {
+        for i in &p.insts {
+            self.exec_inst(i)?;
+        }
+        let op = p.result.as_ref().ok_or_else(|| anyhow!("predicate without result"))?;
+        self.operand_scalar(op)
+    }
+
+    fn operand_scalar(&self, op: &Operand) -> Result<Lit> {
+        match op {
+            Operand::Lit(l) => Ok(l.clone()),
+            Operand::Scalar(name, _) | Operand::Mat(name) => {
+                Ok(self.symbols.get(name)?.as_scalar()?.clone())
+            }
+        }
+    }
+
+    fn operand_matrix(&mut self, op: &Operand) -> Result<Arc<DenseMatrix>> {
+        match op {
+            Operand::Mat(name) => {
+                let data = self.symbols.matrix_data(name, &mut self.pool)?;
+                Ok(data)
+            }
+            other => bail!("expected matrix operand, found {other:?}"),
+        }
+    }
+
+    fn operand_f64(&self, op: &Operand) -> Result<f64> {
+        self.operand_scalar(op)?
+            .as_f64()
+            .ok_or_else(|| anyhow!("operand is not numeric"))
+    }
+
+    /// Execute one instruction.
+    pub fn exec_inst(&mut self, inst: &Instr) -> Result<()> {
+        match inst {
+            Instr::CreateVar { var, path, temp, format, mc } => {
+                self.symbols.set(
+                    var,
+                    Value::Matrix(MatrixObject {
+                        key: format!("{var}#{}", self.pool.fresh_id()),
+                        mc: *mc,
+                        format: *format,
+                        path: if *temp { None } else { Some(path.clone()) },
+                    }),
+                );
+                Ok(())
+            }
+            Instr::AssignVar { lit, var } => {
+                self.symbols.set(var, Value::Scalar(lit.clone()));
+                Ok(())
+            }
+            Instr::CpVar { src, dst } => {
+                let v = self.symbols.get(src)?.clone();
+                self.symbols.set(dst, v);
+                Ok(())
+            }
+            Instr::RmVar { vars } => {
+                for v in vars {
+                    if let Ok(Value::Matrix(m)) = self.symbols.get(v).cloned() {
+                        // only drop pooled data when no alias still uses it
+                        let shared = self
+                            .symbols
+                            .vars
+                            .iter()
+                            .filter(|(n, val)| {
+                                n.as_str() != v
+                                    && matches!(val, Value::Matrix(o) if o.key == m.key)
+                            })
+                            .count();
+                        if shared == 0 {
+                            self.pool.remove(&m.key);
+                        }
+                    }
+                    self.symbols.remove(v);
+                }
+                Ok(())
+            }
+            Instr::Cp(c) => {
+                self.stats.cp_insts += 1;
+                self.exec_cp(c).with_context(|| format!("CP {}", c.op.code()))
+            }
+            Instr::MrJob(j) => {
+                self.stats.mr_jobs += 1;
+                let report = mr::simulate(j, self)?;
+                self.stats.map_tasks += report.map_tasks;
+                self.stats.shuffle_bytes += report.shuffle_bytes;
+                self.stats.hdfs_read_bytes += report.input_bytes;
+                Ok(())
+            }
+        }
+    }
+
+    /// Try the PJRT kernel registry; fall back to native Rust kernels.
+    ///
+    /// Adaptive dispatch: the first time a key is seen, both paths run and
+    /// are timed; subsequent calls use the winner (on TPU-class PJRT
+    /// backends the artifact wins; on the CPU plugin the SIMD-unrolled
+    /// native kernels often do — see EXPERIMENTS.md §Perf).
+    fn kernel_or<F>(&mut self, op: &str, inputs: &[&DenseMatrix], native: F) -> DenseMatrix
+    where
+        F: FnOnce(usize) -> DenseMatrix,
+    {
+        let Some(reg) = self.registry else { return native(self.threads) };
+        let shapes: Vec<(usize, usize)> = inputs.iter().map(|m| (m.rows, m.cols)).collect();
+        let key = kernel_key(op, &shapes);
+        if !reg.has(&key) {
+            return native(self.threads);
+        }
+        let decision = self.dispatch.get(&key).copied().or_else(|| reg.preference(&key));
+        match decision {
+            Some(true) => {
+                if let Some(Ok(out)) = reg.execute(&key, inputs) {
+                    self.stats.pjrt_calls += 1;
+                    return out;
+                }
+                native(self.threads)
+            }
+            Some(false) => native(self.threads),
+            None => {
+                // race both once (excluding PJRT compile time: warm first)
+                let _ = reg.execute(&key, inputs);
+                let t0 = Instant::now();
+                let pjrt = reg.execute(&key, inputs);
+                let t_pjrt = t0.elapsed();
+                let t0 = Instant::now();
+                let nat = native(self.threads);
+                let t_native = t0.elapsed();
+                let prefer_pjrt = matches!(pjrt, Some(Ok(_))) && t_pjrt < t_native;
+                self.dispatch.insert(key.clone(), prefer_pjrt);
+                reg.set_preference(&key, prefer_pjrt);
+                if prefer_pjrt {
+                    self.stats.pjrt_calls += 1;
+                    if let Some(Ok(out)) = pjrt {
+                        return out;
+                    }
+                }
+                nat
+            }
+        }
+    }
+
+    fn exec_cp(&mut self, c: &CpInst) -> Result<()> {
+        let out_name = c
+            .output
+            .name()
+            .ok_or_else(|| anyhow!("instruction output must be a variable"))?
+            .to_string();
+        // scalar-only operations
+        let all_scalar = c.inputs.iter().all(|o| !matches!(o, Operand::Mat(_)));
+        match &c.op {
+            CpOp::Binary(op) if all_scalar => {
+                let a = self.operand_scalar(&c.inputs[0])?;
+                let b = self.operand_scalar(&c.inputs[1])?;
+                let r = op.fold(&a, &b).ok_or_else(|| anyhow!("cannot fold {}", op.code()))?;
+                self.symbols.set(&out_name, Value::Scalar(r));
+                return Ok(());
+            }
+            CpOp::Unary(op) if all_scalar && !matches!(op, UnOp::CastMatrix) => {
+                let a = self.operand_scalar(&c.inputs[0])?;
+                let r = op.fold(&a).ok_or_else(|| anyhow!("cannot fold {}", op.code()))?;
+                self.symbols.set(&out_name, Value::Scalar(r));
+                return Ok(());
+            }
+            CpOp::Print => {
+                match &c.inputs[0] {
+                    Operand::Lit(l) => println!("{}", l.render()),
+                    Operand::Scalar(n, _) => {
+                        println!("{}", self.symbols.get(n)?.as_scalar()?.render())
+                    }
+                    Operand::Mat(n) => {
+                        let m = self.symbols.matrix_data(n, &mut self.pool)?;
+                        println!("matrix {}x{} (nnz {})", m.rows, m.cols, m.nnz());
+                    }
+                }
+                self.symbols.set(&out_name, Value::Scalar(Lit::Bool(true)));
+                return Ok(());
+            }
+            _ => {}
+        }
+
+        let blocksize = self.cfg.blocksize;
+        let result: DenseMatrix = match &c.op {
+            CpOp::Tsmm { left } => {
+                let x = self.operand_matrix(&c.inputs[0])?;
+                if *left {
+                    self.kernel_or("tsmm", &[&x], |t| ops::tsmm_left(&x, t))
+                } else {
+                    let xt = ops::transpose(&x);
+                    self.kernel_or("tsmm", &[&xt], |t| ops::tsmm_left(&xt, t))
+                }
+            }
+            CpOp::MatMult => {
+                let a = self.operand_matrix(&c.inputs[0])?;
+                let b = self.operand_matrix(&c.inputs[1])?;
+                self.kernel_or("matmult", &[&a, &b], |t| ops::matmult(&a, &b, t))
+            }
+            CpOp::Transpose => {
+                let a = self.operand_matrix(&c.inputs[0])?;
+                ops::transpose(&a)
+            }
+            CpOp::Diag => {
+                let a = self.operand_matrix(&c.inputs[0])?;
+                ops::diag(&a)
+            }
+            CpOp::Rand { min, max, sparsity, seed } => {
+                let rows = self.operand_f64(&c.inputs[0])? as usize;
+                let cols = self.operand_f64(&c.inputs[1])? as usize;
+                if min == max {
+                    DenseMatrix::filled(rows, cols, *min)
+                } else {
+                    let s = if *seed < 0 { 0xC0FFEE } else { *seed as u64 };
+                    DenseMatrix::rand(rows, cols, *min, *max, *sparsity, s)
+                }
+            }
+            CpOp::Seq { from, to, by } => {
+                let n = (((to - from) / by).floor() + 1.0).max(0.0) as usize;
+                let values = (0..n).map(|i| from + *by * i as f64).collect();
+                DenseMatrix::from_vec(n, 1, values)
+            }
+            CpOp::Binary(BinOp::Solve) => {
+                let a = self.operand_matrix(&c.inputs[0])?;
+                let b = self.operand_matrix(&c.inputs[1])?;
+                self.kernel_or("solve", &[&a, &b], |_| {
+                    ops::solve(&a, &b).expect("solve failed")
+                })
+            }
+            CpOp::Binary(op) => {
+                let f = bin_fn(*op)?;
+                match (&c.inputs[0], &c.inputs[1]) {
+                    (Operand::Mat(_), Operand::Mat(_)) => {
+                        let a = self.operand_matrix(&c.inputs[0])?;
+                        let b = self.operand_matrix(&c.inputs[1])?;
+                        if a.rows == b.rows && a.cols == b.cols {
+                            ops::ewise(&a, &b, f)
+                        } else {
+                            broadcast_ewise(&a, &b, f)?
+                        }
+                    }
+                    (Operand::Mat(_), s) => {
+                        let a = self.operand_matrix(&c.inputs[0])?;
+                        let sv = self.operand_f64(s)?;
+                        ops::ewise_scalar(&a, sv, f)
+                    }
+                    (s, Operand::Mat(_)) => {
+                        let b = self.operand_matrix(&c.inputs[1])?;
+                        let sv = self.operand_f64(s)?;
+                        ops::ewise_scalar(&b, sv, |x, y| f(y, x))
+                    }
+                    _ => unreachable!("scalar-scalar handled above"),
+                }
+            }
+            CpOp::Unary(op) => {
+                let a = self.operand_matrix(&c.inputs[0])?;
+                match op {
+                    UnOp::CastMatrix => (*a).clone(),
+                    _ => ops::unary(&a, un_fn(*op)?),
+                }
+            }
+            CpOp::AggUnary(op, dir) => {
+                let a = self.operand_matrix(&c.inputs[0])?;
+                let out = agg_exec(*op, *dir, &a)?;
+                match out {
+                    AggResult::Scalar(v) => {
+                        self.symbols.set(&out_name, Value::Scalar(Lit::Double(v)));
+                        return Ok(());
+                    }
+                    AggResult::Matrix(m) => m,
+                }
+            }
+            CpOp::Append => {
+                let a = self.operand_matrix(&c.inputs[0])?;
+                let b = self.operand_matrix(&c.inputs[1])?;
+                ops::cbind(&a, &b)
+            }
+            CpOp::Partition => {
+                // materialise the partitioned broadcast copy to scratch
+                let a = self.operand_matrix(&c.inputs[0])?;
+                (*a).clone()
+            }
+            CpOp::Write { path, format } => {
+                // scalar writes persist a 1x1 matrix
+                if !matches!(&c.inputs[0], Operand::Mat(n) if matches!(self.symbols.get(n), Ok(Value::Matrix(_))))
+                {
+                    if let Ok(l) = self.operand_scalar(&c.inputs[0]) {
+                        let v = l.as_f64().unwrap_or(f64::NAN);
+                        io::write_textcell(path, &DenseMatrix::from_vec(1, 1, vec![v]))?;
+                        self.stats.hdfs_write_bytes += 8.0;
+                        self.symbols.set(&out_name, Value::Scalar(Lit::Bool(true)));
+                        return Ok(());
+                    }
+                }
+                let a = self.operand_matrix(&c.inputs[0])?;
+                match format {
+                    Format::BinaryBlock => {
+                        io::write_binary_block(path, &a, blocksize as usize)?
+                    }
+                    _ => io::write_textcell(path, &a)?,
+                }
+                self.stats.hdfs_write_bytes += (a.values.len() * 8) as f64;
+                self.symbols.set(&out_name, Value::Scalar(Lit::Bool(true)));
+                return Ok(());
+            }
+            CpOp::Print => unreachable!("handled above"),
+            CpOp::Binary(_) | CpOp::Unary(_) => unreachable!(),
+        };
+        self.symbols.bind_matrix(&out_name, Arc::new(result), blocksize, &mut self.pool)?;
+        Ok(())
+    }
+}
+
+/// Broadcast elementwise op: column-vector against matrix and vice versa.
+fn broadcast_ewise(
+    a: &DenseMatrix,
+    b: &DenseMatrix,
+    f: impl Fn(f64, f64) -> f64,
+) -> Result<DenseMatrix> {
+    if b.cols == 1 && b.rows == a.rows {
+        let mut out = DenseMatrix::zeros(a.rows, a.cols);
+        for r in 0..a.rows {
+            let bv = b.values[r];
+            for c in 0..a.cols {
+                out.set(r, c, f(a.get(r, c), bv));
+            }
+        }
+        Ok(out)
+    } else if b.rows == 1 && b.cols == a.cols {
+        let mut out = DenseMatrix::zeros(a.rows, a.cols);
+        for r in 0..a.rows {
+            for c in 0..a.cols {
+                out.set(r, c, f(a.get(r, c), b.values[c]));
+            }
+        }
+        Ok(out)
+    } else {
+        bail!("incompatible shapes {}x{} vs {}x{}", a.rows, a.cols, b.rows, b.cols)
+    }
+}
+
+pub(crate) fn bin_fn(op: BinOp) -> Result<fn(f64, f64) -> f64> {
+    Ok(match op {
+        BinOp::Add => |a, b| a + b,
+        BinOp::Sub => |a, b| a - b,
+        BinOp::Mul => |a, b| a * b,
+        BinOp::Div => |a, b| a / b,
+        BinOp::Pow => |a: f64, b| a.powf(b),
+        BinOp::Min => f64::min,
+        BinOp::Max => f64::max,
+        BinOp::Lt => |a, b| (a < b) as i64 as f64,
+        BinOp::Gt => |a, b| (a > b) as i64 as f64,
+        BinOp::Le => |a, b| (a <= b) as i64 as f64,
+        BinOp::Ge => |a, b| (a >= b) as i64 as f64,
+        BinOp::Eq => |a, b| (a == b) as i64 as f64,
+        BinOp::Ne => |a, b| (a != b) as i64 as f64,
+        BinOp::And => |a, b| ((a != 0.0) && (b != 0.0)) as i64 as f64,
+        BinOp::Or => |a, b| ((a != 0.0) || (b != 0.0)) as i64 as f64,
+        BinOp::Mod => |a: f64, b: f64| a - (a / b).floor() * b,
+        BinOp::IntDiv => |a: f64, b: f64| (a / b).floor(),
+        BinOp::Solve => bail!("solve is not elementwise"),
+    })
+}
+
+pub(crate) fn un_fn(op: UnOp) -> Result<fn(f64) -> f64> {
+    Ok(match op {
+        UnOp::Sqrt => f64::sqrt,
+        UnOp::Abs => f64::abs,
+        UnOp::Exp => f64::exp,
+        UnOp::Log => f64::ln,
+        UnOp::Round => f64::round,
+        UnOp::Floor => f64::floor,
+        UnOp::Ceil => f64::ceil,
+        UnOp::Sign => f64::signum,
+        UnOp::Neg => |x| -x,
+        UnOp::Not => |x| (x == 0.0) as i64 as f64,
+        other => bail!("unary {} is not elementwise", other.code()),
+    })
+}
+
+pub(crate) enum AggResult {
+    Scalar(f64),
+    Matrix(DenseMatrix),
+}
+
+pub(crate) fn agg_exec(op: AggOp, dir: AggDir, a: &DenseMatrix) -> Result<AggResult> {
+    Ok(match (op, dir) {
+        (AggOp::Sum, AggDir::All) => AggResult::Scalar(ops::sum(a)),
+        (AggOp::Mean, AggDir::All) => {
+            AggResult::Scalar(ops::sum(a) / (a.rows * a.cols).max(1) as f64)
+        }
+        (AggOp::Min, AggDir::All) => {
+            AggResult::Scalar(a.values.iter().copied().fold(f64::INFINITY, f64::min))
+        }
+        (AggOp::Max, AggDir::All) => {
+            AggResult::Scalar(a.values.iter().copied().fold(f64::NEG_INFINITY, f64::max))
+        }
+        (AggOp::Trace, AggDir::All) => {
+            AggResult::Scalar((0..a.rows.min(a.cols)).map(|i| a.get(i, i)).sum())
+        }
+        (AggOp::Nnz, AggDir::All) => AggResult::Scalar(a.nnz() as f64),
+        (AggOp::Sum, AggDir::Row) => AggResult::Matrix(ops::row_sums(a)),
+        (AggOp::Sum, AggDir::Col) => AggResult::Matrix(ops::col_sums(a)),
+        (AggOp::Mean, AggDir::Row) => {
+            let mut m = ops::row_sums(a);
+            let n = a.cols.max(1) as f64;
+            m.values.iter_mut().for_each(|v| *v /= n);
+            AggResult::Matrix(m)
+        }
+        (AggOp::Mean, AggDir::Col) => {
+            let mut m = ops::col_sums(a);
+            let n = a.rows.max(1) as f64;
+            m.values.iter_mut().for_each(|v| *v /= n);
+            AggResult::Matrix(m)
+        }
+        (op, dir) => bail!("unsupported aggregate {op:?}/{dir:?}"),
+    })
+}

@@ -1,0 +1,169 @@
+//! Abstract syntax tree for DML.
+
+/// Binary operators, in DML surface syntax.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Pow,
+    MatMul, // %*%
+    Mod,    // %%
+    IntDiv, // %/%
+    Lt,
+    Gt,
+    Le,
+    Ge,
+    Eq,
+    Ne,
+    And,
+    Or,
+    Range, // a:b (sequence in for loops)
+}
+
+impl BinOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+            BinOp::Pow => "^",
+            BinOp::MatMul => "%*%",
+            BinOp::Mod => "%%",
+            BinOp::IntDiv => "%/%",
+            BinOp::Lt => "<",
+            BinOp::Gt => ">",
+            BinOp::Le => "<=",
+            BinOp::Ge => ">=",
+            BinOp::Eq => "==",
+            BinOp::Ne => "!=",
+            BinOp::And => "&",
+            BinOp::Or => "|",
+            BinOp::Range => ":",
+        }
+    }
+}
+
+/// Unary operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnOp {
+    Neg,
+    Not,
+}
+
+/// Expressions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    /// Numeric literal (DML doubles; integers are represented exactly).
+    Num(f64),
+    /// Integer literal.
+    Int(i64),
+    /// String literal.
+    Str(String),
+    /// Boolean literal (TRUE/FALSE).
+    Bool(bool),
+    /// Variable reference.
+    Ident(String),
+    /// Command-line argument `$1`, `$2`, ….
+    Arg(usize),
+    Unary(UnOp, Box<Expr>),
+    Binary(BinOp, Box<Expr>, Box<Expr>),
+    /// Builtin or user-defined function call, e.g. `t(X)`, `solve(A, b)`.
+    Call(String, Vec<Expr>),
+}
+
+impl Expr {
+    pub fn call(name: &str, args: Vec<Expr>) -> Expr {
+        Expr::Call(name.to_string(), args)
+    }
+}
+
+/// Statements. Every statement records its 1-based source line for the
+/// program-block line ranges shown by EXPLAIN (e.g. `GENERIC (lines 1-3)`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stmt {
+    /// `x = expr;`
+    Assign { target: String, expr: Expr, line: usize },
+    /// `[a, b] = f(...);` multi-output function call.
+    MultiAssign { targets: Vec<String>, expr: Expr, line: usize },
+    /// `if (cond) { .. } else { .. }`
+    If { cond: Expr, then_branch: Vec<Stmt>, else_branch: Vec<Stmt>, line: usize },
+    /// `for (i in from:to) { .. }` / `parfor (...) { .. }`
+    For {
+        var: String,
+        from: Expr,
+        to: Expr,
+        by: Option<Expr>,
+        body: Vec<Stmt>,
+        parfor: bool,
+        line: usize,
+    },
+    /// `while (cond) { .. }`
+    While { cond: Expr, body: Vec<Stmt>, line: usize },
+    /// `f = function(a, b) return (c, d) { .. }`
+    FuncDef {
+        name: String,
+        params: Vec<String>,
+        /// `Some(true)` = matrix, `Some(false)` = scalar, `None` = untyped.
+        param_kinds: Vec<Option<bool>>,
+        outputs: Vec<String>,
+        body: Vec<Stmt>,
+        line: usize,
+    },
+    /// `write(expr, file [, format="..."]);`
+    Write { expr: Expr, file: Expr, format: Option<String>, line: usize },
+    /// `print(expr);`
+    Print { expr: Expr, line: usize },
+}
+
+impl Stmt {
+    pub fn line(&self) -> usize {
+        match self {
+            Stmt::Assign { line, .. }
+            | Stmt::MultiAssign { line, .. }
+            | Stmt::If { line, .. }
+            | Stmt::For { line, .. }
+            | Stmt::While { line, .. }
+            | Stmt::FuncDef { line, .. }
+            | Stmt::Write { line, .. }
+            | Stmt::Print { line, .. } => *line,
+        }
+    }
+
+    /// Last source line covered by this statement (for block line ranges).
+    pub fn end_line(&self) -> usize {
+        fn last(stmts: &[Stmt], fallback: usize) -> usize {
+            stmts.last().map_or(fallback, |s| s.end_line())
+        }
+        match self {
+            Stmt::If { then_branch, else_branch, line, .. } => {
+                last(else_branch, last(then_branch, *line))
+            }
+            Stmt::For { body, line, .. }
+            | Stmt::While { body, line, .. }
+            | Stmt::FuncDef { body, line, .. } => last(body, *line),
+            _ => self.line(),
+        }
+    }
+}
+
+/// A parsed script.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Script {
+    pub stmts: Vec<Stmt>,
+}
+
+/// Names of builtin functions recognised by the compiler.
+pub const BUILTINS: &[&str] = &[
+    "read", "matrix", "rand", "seq", "nrow", "ncol", "length", "t", "diag", "solve", "append",
+    "cbind", "rbind", "sum", "mean", "rowSums", "colSums", "rowMeans", "colMeans", "min", "max",
+    "sqrt", "abs", "exp", "log", "round", "floor", "ceil", "as.scalar", "as.matrix", "trace",
+    "nnz", "sign",
+];
+
+/// Is `name` a builtin function?
+pub fn is_builtin(name: &str) -> bool {
+    BUILTINS.contains(&name)
+}

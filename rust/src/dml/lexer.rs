@@ -1,0 +1,312 @@
+//! Hand-written lexer for DML.
+
+/// Token kinds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Num(f64),
+    Int(i64),
+    Str(String),
+    Arg(usize), // $1, $2, ...
+    // punctuation / operators
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Comma,
+    Semi,
+    Assign, // = or <-
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Caret,
+    Colon,
+    MatMul, // %*%
+    Mod,    // %%
+    IntDiv, // %/%
+    Lt,
+    Gt,
+    Le,
+    Ge,
+    EqEq,
+    Ne,
+    Not,
+    And,
+    Or,
+    // keywords
+    If,
+    Else,
+    For,
+    Parfor,
+    While,
+    Function,
+    Return,
+    In,
+    True,
+    False,
+    Eof,
+}
+
+/// A token with its source line (1-based).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: usize,
+}
+
+/// Tokenize DML source. `#` starts a line comment.
+pub fn lex(src: &str) -> Result<Vec<Token>, String> {
+    let mut out = Vec::new();
+    let bytes: Vec<char> = src.chars().collect();
+    let mut i = 0;
+    let mut line = 1;
+    let n = bytes.len();
+    while i < n {
+        let c = bytes[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            ' ' | '\t' | '\r' => i += 1,
+            '#' => {
+                while i < n && bytes[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '(' => push(&mut out, Tok::LParen, line, &mut i),
+            ')' => push(&mut out, Tok::RParen, line, &mut i),
+            '{' => push(&mut out, Tok::LBrace, line, &mut i),
+            '}' => push(&mut out, Tok::RBrace, line, &mut i),
+            '[' => push(&mut out, Tok::LBracket, line, &mut i),
+            ']' => push(&mut out, Tok::RBracket, line, &mut i),
+            ',' => push(&mut out, Tok::Comma, line, &mut i),
+            ';' => push(&mut out, Tok::Semi, line, &mut i),
+            '+' => push(&mut out, Tok::Plus, line, &mut i),
+            '-' => push(&mut out, Tok::Minus, line, &mut i),
+            '*' => push(&mut out, Tok::Star, line, &mut i),
+            '/' => push(&mut out, Tok::Slash, line, &mut i),
+            '^' => push(&mut out, Tok::Caret, line, &mut i),
+            ':' => push(&mut out, Tok::Colon, line, &mut i),
+            '&' => {
+                i += if bytes.get(i + 1) == Some(&'&') { 2 } else { 1 };
+                out.push(Token { tok: Tok::And, line });
+            }
+            '|' => {
+                i += if bytes.get(i + 1) == Some(&'|') { 2 } else { 1 };
+                out.push(Token { tok: Tok::Or, line });
+            }
+            '%' => {
+                if i + 2 < n && bytes[i + 1] == '*' && bytes[i + 2] == '%' {
+                    out.push(Token { tok: Tok::MatMul, line });
+                    i += 3;
+                } else if i + 2 < n && bytes[i + 1] == '/' && bytes[i + 2] == '%' {
+                    out.push(Token { tok: Tok::IntDiv, line });
+                    i += 3;
+                } else if i + 1 < n && bytes[i + 1] == '%' {
+                    out.push(Token { tok: Tok::Mod, line });
+                    i += 2;
+                } else {
+                    return Err(format!("line {line}: stray '%'"));
+                }
+            }
+            '<' => {
+                if bytes.get(i + 1) == Some(&'=') {
+                    out.push(Token { tok: Tok::Le, line });
+                    i += 2;
+                } else if bytes.get(i + 1) == Some(&'-') {
+                    out.push(Token { tok: Tok::Assign, line });
+                    i += 2;
+                } else {
+                    out.push(Token { tok: Tok::Lt, line });
+                    i += 1;
+                }
+            }
+            '>' => {
+                if bytes.get(i + 1) == Some(&'=') {
+                    out.push(Token { tok: Tok::Ge, line });
+                    i += 2;
+                } else {
+                    out.push(Token { tok: Tok::Gt, line });
+                    i += 1;
+                }
+            }
+            '=' => {
+                if bytes.get(i + 1) == Some(&'=') {
+                    out.push(Token { tok: Tok::EqEq, line });
+                    i += 2;
+                } else {
+                    out.push(Token { tok: Tok::Assign, line });
+                    i += 1;
+                }
+            }
+            '!' => {
+                if bytes.get(i + 1) == Some(&'=') {
+                    out.push(Token { tok: Tok::Ne, line });
+                    i += 2;
+                } else {
+                    out.push(Token { tok: Tok::Not, line });
+                    i += 1;
+                }
+            }
+            '$' => {
+                let mut j = i + 1;
+                while j < n && bytes[j].is_ascii_digit() {
+                    j += 1;
+                }
+                if j == i + 1 {
+                    return Err(format!("line {line}: expected digit after '$'"));
+                }
+                let idx: usize = bytes[i + 1..j].iter().collect::<String>().parse().unwrap();
+                out.push(Token { tok: Tok::Arg(idx), line });
+                i = j;
+            }
+            '"' | '\'' => {
+                let quote = c;
+                let mut j = i + 1;
+                let mut s = String::new();
+                while j < n && bytes[j] != quote {
+                    if bytes[j] == '\n' {
+                        return Err(format!("line {line}: unterminated string"));
+                    }
+                    s.push(bytes[j]);
+                    j += 1;
+                }
+                if j >= n {
+                    return Err(format!("line {line}: unterminated string"));
+                }
+                out.push(Token { tok: Tok::Str(s), line });
+                i = j + 1;
+            }
+            c if c.is_ascii_digit() || (c == '.' && bytes.get(i + 1).is_some_and(|d| d.is_ascii_digit())) => {
+                let mut j = i;
+                let mut is_float = false;
+                while j < n
+                    && (bytes[j].is_ascii_digit()
+                        || bytes[j] == '.'
+                        || bytes[j] == 'e'
+                        || bytes[j] == 'E'
+                        || ((bytes[j] == '+' || bytes[j] == '-')
+                            && j > i
+                            && (bytes[j - 1] == 'e' || bytes[j - 1] == 'E')))
+                {
+                    if bytes[j] == '.' || bytes[j] == 'e' || bytes[j] == 'E' {
+                        is_float = true;
+                    }
+                    j += 1;
+                }
+                let text: String = bytes[i..j].iter().collect();
+                if is_float {
+                    let v: f64 =
+                        text.parse().map_err(|_| format!("line {line}: bad number '{text}'"))?;
+                    out.push(Token { tok: Tok::Num(v), line });
+                } else {
+                    let v: i64 =
+                        text.parse().map_err(|_| format!("line {line}: bad integer '{text}'"))?;
+                    out.push(Token { tok: Tok::Int(v), line });
+                }
+                i = j;
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let mut j = i;
+                while j < n
+                    && (bytes[j].is_ascii_alphanumeric() || bytes[j] == '_' || bytes[j] == '.')
+                {
+                    j += 1;
+                }
+                let word: String = bytes[i..j].iter().collect();
+                let tok = match word.as_str() {
+                    "if" => Tok::If,
+                    "else" => Tok::Else,
+                    "for" => Tok::For,
+                    "parfor" => Tok::Parfor,
+                    "while" => Tok::While,
+                    "function" => Tok::Function,
+                    "return" => Tok::Return,
+                    "in" => Tok::In,
+                    "TRUE" | "true" => Tok::True,
+                    "FALSE" | "false" => Tok::False,
+                    _ => Tok::Ident(word),
+                };
+                out.push(Token { tok, line });
+                i = j;
+            }
+            other => return Err(format!("line {line}: unexpected character '{other}'")),
+        }
+    }
+    out.push(Token { tok: Tok::Eof, line });
+    Ok(out)
+}
+
+fn push(out: &mut Vec<Token>, tok: Tok, line: usize, i: &mut usize) {
+    out.push(Token { tok, line });
+    *i += 1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn lexes_linreg_line() {
+        let toks = kinds("A = t(X) %*% X + diag(I)*lambda;");
+        assert!(toks.contains(&Tok::MatMul));
+        assert!(toks.contains(&Tok::Ident("t".into())));
+        assert!(toks.contains(&Tok::Ident("diag".into())));
+        assert_eq!(*toks.last().unwrap(), Tok::Eof);
+    }
+
+    #[test]
+    fn lexes_args_and_numbers() {
+        let toks = kinds("x = read($1); l = 0.001; n = 42; e = 1e-3;");
+        assert!(toks.contains(&Tok::Arg(1)));
+        assert!(toks.contains(&Tok::Num(0.001)));
+        assert!(toks.contains(&Tok::Int(42)));
+        assert!(toks.contains(&Tok::Num(1e-3)));
+    }
+
+    #[test]
+    fn tracks_lines_and_comments() {
+        let toks = lex("a = 1;\n# comment\nb = 2;").unwrap();
+        let b_tok = toks.iter().find(|t| t.tok == Tok::Ident("b".into())).unwrap();
+        assert_eq!(b_tok.line, 3);
+    }
+
+    #[test]
+    fn comparison_and_logical_ops() {
+        let toks = kinds("if (a <= b & c != d | !e) {}");
+        assert!(toks.contains(&Tok::Le));
+        assert!(toks.contains(&Tok::And));
+        assert!(toks.contains(&Tok::Ne));
+        assert!(toks.contains(&Tok::Or));
+        assert!(toks.contains(&Tok::Not));
+    }
+
+    #[test]
+    fn strings_and_errors() {
+        assert!(kinds("s = \"hello world\";").contains(&Tok::Str("hello world".into())));
+        assert!(lex("s = \"unterminated").is_err());
+        assert!(lex("x = 1 @ 2").is_err());
+    }
+
+    #[test]
+    fn percent_operators() {
+        let toks = kinds("a %% b %/% c %*% d");
+        assert_eq!(
+            toks[..7].iter().filter(|t| matches!(t, Tok::Mod | Tok::IntDiv | Tok::MatMul)).count(),
+            3
+        );
+    }
+
+    #[test]
+    fn arrow_assignment() {
+        assert!(kinds("x <- 3").contains(&Tok::Assign));
+    }
+}

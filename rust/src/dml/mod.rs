@@ -1,0 +1,35 @@
+//! DML language frontend: an R-like declarative ML language (SystemML's
+//! DML), sufficient for the paper's running example and far beyond it —
+//! control flow (`if`/`for`/`while`/`parfor`), user-defined functions,
+//! matrix builtins, and `$N` command-line arguments.
+//!
+//! ```text
+//! X = read($1);
+//! y = read($2);
+//! intercept = $3; lambda = 0.001;
+//! if (intercept == 1) {
+//!   ones = matrix(1, nrow(X), 1);
+//!   X = append(X, ones);
+//! }
+//! I = matrix(1, ncol(X), 1);
+//! A = t(X) %*% X + diag(I) * lambda;
+//! b = t(X) %*% y;
+//! beta = solve(A, b);
+//! write(beta, $4);
+//! ```
+
+pub mod ast;
+pub mod lexer;
+pub mod parser;
+pub mod validate;
+
+pub use ast::{BinOp, Expr, Script, Stmt, UnOp};
+pub use parser::parse;
+pub use validate::validate;
+
+/// Parse and validate a script in one step.
+pub fn frontend(src: &str) -> Result<Script, String> {
+    let script = parse(src)?;
+    validate(&script)?;
+    Ok(script)
+}

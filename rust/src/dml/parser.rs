@@ -1,0 +1,536 @@
+//! Recursive-descent parser for DML.
+//!
+//! Operator precedence (low to high), following R/DML:
+//! `|` < `&` < comparisons < `:` < `+ -` < `* /` < `%*% %% %/%` <
+//! unary `- !` < `^` < primary.
+
+use super::ast::{BinOp, Expr, Script, Stmt, UnOp};
+use super::lexer::{lex, Tok, Token};
+
+/// Parse DML source into a [`Script`].
+pub fn parse(src: &str) -> Result<Script, String> {
+    let toks = lex(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    let stmts = p.stmt_list(true)?;
+    p.expect(Tok::Eof)?;
+    Ok(Script { stmts })
+}
+
+struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].tok
+    }
+
+    fn peek2(&self) -> &Tok {
+        &self.toks[(self.pos + 1).min(self.toks.len() - 1)].tok
+    }
+
+    fn line(&self) -> usize {
+        self.toks[self.pos].line
+    }
+
+    fn bump(&mut self) -> Tok {
+        let t = self.toks[self.pos].tok.clone();
+        if self.pos < self.toks.len() - 1 {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn eat(&mut self, t: Tok) -> bool {
+        if *self.peek() == t {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, t: Tok) -> Result<(), String> {
+        if self.eat(t.clone()) {
+            Ok(())
+        } else {
+            Err(format!("line {}: expected {:?}, found {:?}", self.line(), t, self.peek()))
+        }
+    }
+
+    /// Statement list; `top` distinguishes top level (ends at EOF) from
+    /// block level (ends at `}`).
+    fn stmt_list(&mut self, top: bool) -> Result<Vec<Stmt>, String> {
+        let mut stmts = Vec::new();
+        loop {
+            while self.eat(Tok::Semi) {}
+            let end = if top { *self.peek() == Tok::Eof } else { *self.peek() == Tok::RBrace };
+            if end {
+                break;
+            }
+            stmts.push(self.stmt()?);
+        }
+        Ok(stmts)
+    }
+
+    fn block(&mut self) -> Result<Vec<Stmt>, String> {
+        self.expect(Tok::LBrace)?;
+        let stmts = self.stmt_list(false)?;
+        self.expect(Tok::RBrace)?;
+        Ok(stmts)
+    }
+
+    fn stmt(&mut self) -> Result<Stmt, String> {
+        let line = self.line();
+        match self.peek().clone() {
+            Tok::If => {
+                self.bump();
+                self.expect(Tok::LParen)?;
+                let cond = self.expr()?;
+                self.expect(Tok::RParen)?;
+                let then_branch = self.block_or_single()?;
+                let else_branch = if self.eat(Tok::Else) {
+                    if *self.peek() == Tok::If {
+                        vec![self.stmt()?] // else if
+                    } else {
+                        self.block_or_single()?
+                    }
+                } else {
+                    Vec::new()
+                };
+                Ok(Stmt::If { cond, then_branch, else_branch, line })
+            }
+            Tok::For | Tok::Parfor => {
+                let parfor = self.bump() == Tok::Parfor;
+                self.expect(Tok::LParen)?;
+                let var = self.ident()?;
+                self.expect(Tok::In)?;
+                let from = self.expr_no_range()?;
+                self.expect(Tok::Colon)?;
+                let to = self.expr_no_range()?;
+                // optional `, by` step — seq-style loops
+                let by = if self.eat(Tok::Comma) { Some(self.expr()?) } else { None };
+                self.expect(Tok::RParen)?;
+                let body = self.block_or_single()?;
+                Ok(Stmt::For { var, from, to, by, body, parfor, line })
+            }
+            Tok::While => {
+                self.bump();
+                self.expect(Tok::LParen)?;
+                let cond = self.expr()?;
+                self.expect(Tok::RParen)?;
+                let body = self.block_or_single()?;
+                Ok(Stmt::While { cond, body, line })
+            }
+            Tok::LBracket => {
+                // [a, b] = f(...)
+                self.bump();
+                let mut targets = vec![self.ident()?];
+                while self.eat(Tok::Comma) {
+                    targets.push(self.ident()?);
+                }
+                self.expect(Tok::RBracket)?;
+                self.expect(Tok::Assign)?;
+                let expr = self.expr()?;
+                Ok(Stmt::MultiAssign { targets, expr, line })
+            }
+            Tok::Ident(name) => {
+                // write(...) / print(...) statements, function defs,
+                // or plain assignment.
+                if name == "write" && *self.peek2() == Tok::LParen {
+                    self.bump();
+                    self.bump();
+                    let expr = self.expr()?;
+                    self.expect(Tok::Comma)?;
+                    let file = self.expr()?;
+                    let mut format = None;
+                    while self.eat(Tok::Comma) {
+                        // named arg: format="text"
+                        let key = self.ident()?;
+                        self.expect(Tok::Assign)?;
+                        let val = self.expr()?;
+                        if key == "format" {
+                            if let Expr::Str(s) = val {
+                                format = Some(s);
+                            }
+                        }
+                    }
+                    self.expect(Tok::RParen)?;
+                    return Ok(Stmt::Write { expr, file, format, line });
+                }
+                if name == "print" && *self.peek2() == Tok::LParen {
+                    self.bump();
+                    self.bump();
+                    let expr = self.expr()?;
+                    self.expect(Tok::RParen)?;
+                    return Ok(Stmt::Print { expr, line });
+                }
+                let target = self.ident()?;
+                self.expect(Tok::Assign)?;
+                if *self.peek() == Tok::Function {
+                    return self.func_def(target, line);
+                }
+                let expr = self.expr()?;
+                Ok(Stmt::Assign { target, expr, line })
+            }
+            other => Err(format!("line {line}: unexpected token {other:?}")),
+        }
+    }
+
+    fn block_or_single(&mut self) -> Result<Vec<Stmt>, String> {
+        if *self.peek() == Tok::LBrace {
+            self.block()
+        } else {
+            Ok(vec![self.stmt()?])
+        }
+    }
+
+    /// `function (p1, p2) return (o1, o2) { body }`; parameter type
+    /// annotations (`matrix[double] X`, `double s`) are recorded.
+    fn func_def(&mut self, name: String, line: usize) -> Result<Stmt, String> {
+        self.expect(Tok::Function)?;
+        self.expect(Tok::LParen)?;
+        let mut params = Vec::new();
+        let mut param_kinds = Vec::new();
+        if *self.peek() != Tok::RParen {
+            loop {
+                let (p, kind) = self.typed_ident()?;
+                params.push(p);
+                param_kinds.push(kind);
+                if !self.eat(Tok::Comma) {
+                    break;
+                }
+            }
+        }
+        self.expect(Tok::RParen)?;
+        let mut outputs = Vec::new();
+        if self.eat(Tok::Return) {
+            self.expect(Tok::LParen)?;
+            if *self.peek() != Tok::RParen {
+                loop {
+                    outputs.push(self.typed_ident()?.0);
+                    if !self.eat(Tok::Comma) {
+                        break;
+                    }
+                }
+            }
+            self.expect(Tok::RParen)?;
+        }
+        let body = self.block()?;
+        Ok(Stmt::FuncDef { name, params, param_kinds, outputs, body, line })
+    }
+
+    /// Identifier, optionally preceded by a type annotation like
+    /// `matrix[double]` or `double`. Returns (name, Some(is_matrix)).
+    fn typed_ident(&mut self) -> Result<(String, Option<bool>), String> {
+        let first = self.ident()?;
+        if first == "matrix" && self.eat(Tok::LBracket) {
+            // type annotation: matrix[double] X
+            self.ident()?; // value type
+            self.expect(Tok::RBracket)?;
+            return Ok((self.ident()?, Some(true)));
+        }
+        // "double x" style annotation
+        if matches!(first.as_str(), "double" | "integer" | "boolean" | "string" | "int")
+            && matches!(self.peek(), Tok::Ident(_))
+        {
+            return Ok((self.ident()?, Some(false)));
+        }
+        Ok((first, None))
+    }
+
+    fn ident(&mut self) -> Result<String, String> {
+        match self.bump() {
+            Tok::Ident(s) => Ok(s),
+            other => Err(format!("line {}: expected identifier, found {other:?}", self.line())),
+        }
+    }
+
+    // ---- expression parsing, precedence climbing ----
+
+    fn expr(&mut self) -> Result<Expr, String> {
+        self.or_expr(true)
+    }
+
+    /// Expression that stops at `:` (used in `for (i in a:b)`).
+    fn expr_no_range(&mut self) -> Result<Expr, String> {
+        self.or_expr(false)
+    }
+
+    fn or_expr(&mut self, range_ok: bool) -> Result<Expr, String> {
+        let mut lhs = self.and_expr(range_ok)?;
+        while self.eat(Tok::Or) {
+            let rhs = self.and_expr(range_ok)?;
+            lhs = Expr::Binary(BinOp::Or, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self, range_ok: bool) -> Result<Expr, String> {
+        let mut lhs = self.cmp_expr(range_ok)?;
+        while self.eat(Tok::And) {
+            let rhs = self.cmp_expr(range_ok)?;
+            lhs = Expr::Binary(BinOp::And, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn cmp_expr(&mut self, range_ok: bool) -> Result<Expr, String> {
+        let mut lhs = self.range_expr(range_ok)?;
+        loop {
+            let op = match self.peek() {
+                Tok::Lt => BinOp::Lt,
+                Tok::Gt => BinOp::Gt,
+                Tok::Le => BinOp::Le,
+                Tok::Ge => BinOp::Ge,
+                Tok::EqEq => BinOp::Eq,
+                Tok::Ne => BinOp::Ne,
+                _ => break,
+            };
+            self.bump();
+            let rhs = self.range_expr(range_ok)?;
+            lhs = Expr::Binary(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn range_expr(&mut self, range_ok: bool) -> Result<Expr, String> {
+        let lhs = self.add_expr()?;
+        if range_ok && *self.peek() == Tok::Colon {
+            self.bump();
+            let rhs = self.add_expr()?;
+            return Ok(Expr::Binary(BinOp::Range, Box::new(lhs), Box::new(rhs)));
+        }
+        Ok(lhs)
+    }
+
+    fn add_expr(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Plus => BinOp::Add,
+                Tok::Minus => BinOp::Sub,
+                _ => break,
+            };
+            self.bump();
+            let rhs = self.mul_expr()?;
+            lhs = Expr::Binary(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn mul_expr(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.matmul_expr()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Star => BinOp::Mul,
+                Tok::Slash => BinOp::Div,
+                _ => break,
+            };
+            self.bump();
+            let rhs = self.matmul_expr()?;
+            lhs = Expr::Binary(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn matmul_expr(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.unary_expr()?;
+        loop {
+            let op = match self.peek() {
+                Tok::MatMul => BinOp::MatMul,
+                Tok::Mod => BinOp::Mod,
+                Tok::IntDiv => BinOp::IntDiv,
+                _ => break,
+            };
+            self.bump();
+            let rhs = self.unary_expr()?;
+            lhs = Expr::Binary(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn unary_expr(&mut self) -> Result<Expr, String> {
+        if self.eat(Tok::Minus) {
+            let e = self.unary_expr()?;
+            return Ok(match e {
+                Expr::Int(v) => Expr::Int(-v),
+                Expr::Num(v) => Expr::Num(-v),
+                other => Expr::Unary(UnOp::Neg, Box::new(other)),
+            });
+        }
+        if self.eat(Tok::Not) {
+            let e = self.unary_expr()?;
+            return Ok(Expr::Unary(UnOp::Not, Box::new(e)));
+        }
+        self.pow_expr()
+    }
+
+    fn pow_expr(&mut self) -> Result<Expr, String> {
+        let base = self.primary()?;
+        if self.eat(Tok::Caret) {
+            // right-associative
+            let exp = self.unary_expr()?;
+            return Ok(Expr::Binary(BinOp::Pow, Box::new(base), Box::new(exp)));
+        }
+        Ok(base)
+    }
+
+    fn primary(&mut self) -> Result<Expr, String> {
+        let line = self.line();
+        match self.bump() {
+            Tok::Int(v) => Ok(Expr::Int(v)),
+            Tok::Num(v) => Ok(Expr::Num(v)),
+            Tok::Str(s) => Ok(Expr::Str(s)),
+            Tok::True => Ok(Expr::Bool(true)),
+            Tok::False => Ok(Expr::Bool(false)),
+            Tok::Arg(i) => Ok(Expr::Arg(i)),
+            Tok::LParen => {
+                let e = self.expr()?;
+                self.expect(Tok::RParen)?;
+                Ok(e)
+            }
+            Tok::Ident(name) => {
+                if *self.peek() == Tok::LParen {
+                    self.bump();
+                    let mut args = Vec::new();
+                    if *self.peek() != Tok::RParen {
+                        loop {
+                            // skip named args (rows=, cols=, ...) keeping order
+                            if let (Tok::Ident(_), Tok::Assign) = (self.peek(), self.peek2()) {
+                                self.bump();
+                                self.bump();
+                            }
+                            args.push(self.expr()?);
+                            if !self.eat(Tok::Comma) {
+                                break;
+                            }
+                        }
+                    }
+                    self.expect(Tok::RParen)?;
+                    Ok(Expr::Call(name, args))
+                } else {
+                    Ok(Expr::Ident(name))
+                }
+            }
+            other => Err(format!("line {line}: unexpected token {other:?} in expression")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's running example (§1).
+    pub const LINREG_DS: &str = r#"
+X = read($1);
+y = read($2);
+intercept = $3; lambda = 0.001;
+if( intercept == 1 ) {
+  ones = matrix(1, nrow(X), 1);
+  X = append(X, ones);
+}
+I = matrix(1, ncol(X), 1);
+A = t(X) %*% X + diag(I)*lambda;
+b = t(X) %*% y;
+beta = solve(A, b);
+write(beta, $4);
+"#;
+
+    #[test]
+    fn parses_linreg_example() {
+        let s = parse(LINREG_DS).unwrap();
+        assert_eq!(s.stmts.len(), 10);
+        assert!(matches!(&s.stmts[4], Stmt::If { .. }));
+        assert!(matches!(&s.stmts[9], Stmt::Write { .. }));
+    }
+
+    #[test]
+    fn matmul_precedence_over_add() {
+        // t(X) %*% X + diag(I)*lambda parses as (t(X)%*%X) + (diag(I)*lambda)
+        let s = parse("A = t(X) %*% X + diag(I)*lambda;").unwrap();
+        let Stmt::Assign { expr, .. } = &s.stmts[0] else { panic!() };
+        let Expr::Binary(BinOp::Add, l, r) = expr else { panic!("expected +, got {expr:?}") };
+        assert!(matches!(**l, Expr::Binary(BinOp::MatMul, _, _)));
+        assert!(matches!(**r, Expr::Binary(BinOp::Mul, _, _)));
+    }
+
+    #[test]
+    fn matmul_binds_tighter_than_scalar_mul() {
+        // a * X %*% y == a * (X %*% y)
+        let s = parse("z = a * X %*% y;").unwrap();
+        let Stmt::Assign { expr, .. } = &s.stmts[0] else { panic!() };
+        let Expr::Binary(BinOp::Mul, _, r) = expr else { panic!() };
+        assert!(matches!(**r, Expr::Binary(BinOp::MatMul, _, _)));
+    }
+
+    #[test]
+    fn parses_for_while_parfor() {
+        let src = r#"
+s = 0;
+for (i in 1:10) { s = s + i; }
+parfor (j in 1:4) { s = s + j; }
+while (s < 100) { s = s * 2; }
+"#;
+        let s = parse(src).unwrap();
+        assert!(matches!(&s.stmts[1], Stmt::For { parfor: false, .. }));
+        assert!(matches!(&s.stmts[2], Stmt::For { parfor: true, .. }));
+        assert!(matches!(&s.stmts[3], Stmt::While { .. }));
+    }
+
+    #[test]
+    fn parses_function_def_and_multi_assign() {
+        let src = r#"
+f = function(matrix[double] X, double s) return (matrix[double] Y, double z) {
+  Y = X * s;
+  z = sum(Y);
+}
+[A, v] = f(B, 2.0);
+"#;
+        let s = parse(src).unwrap();
+        let Stmt::FuncDef { params, outputs, .. } = &s.stmts[0] else { panic!() };
+        assert_eq!(params, &["X", "s"]);
+        assert_eq!(outputs, &["Y", "z"]);
+        let Stmt::MultiAssign { targets, .. } = &s.stmts[1] else { panic!() };
+        assert_eq!(targets, &["A", "v"]);
+    }
+
+    #[test]
+    fn line_numbers_recorded() {
+        let s = parse("a = 1;\nb = 2;\n\nc = 3;").unwrap();
+        assert_eq!(s.stmts.iter().map(|s| s.line()).collect::<Vec<_>>(), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn else_if_chain() {
+        let s = parse("if (a == 1) { b = 1; } else if (a == 2) { b = 2; } else { b = 3; }")
+            .unwrap();
+        let Stmt::If { else_branch, .. } = &s.stmts[0] else { panic!() };
+        assert!(matches!(&else_branch[0], Stmt::If { .. }));
+    }
+
+    #[test]
+    fn named_args_skipped() {
+        let s = parse("R = rand(rows=10, cols=20, min=0, max=1);").unwrap();
+        let Stmt::Assign { expr: Expr::Call(name, args), .. } = &s.stmts[0] else { panic!() };
+        assert_eq!(name, "rand");
+        assert_eq!(args.len(), 4);
+    }
+
+    #[test]
+    fn unary_and_pow() {
+        let s = parse("x = -a ^ 2;").unwrap(); // -(a^2) in R
+        let Stmt::Assign { expr, .. } = &s.stmts[0] else { panic!() };
+        assert!(matches!(expr, Expr::Unary(UnOp::Neg, _)));
+    }
+
+    #[test]
+    fn errors_are_reported_with_line() {
+        let err = parse("a = ;\n").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        let err = parse("if (x { }").unwrap_err();
+        assert!(err.contains("expected"), "{err}");
+    }
+}

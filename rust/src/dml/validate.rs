@@ -1,0 +1,263 @@
+//! Semantic validation: use-before-definition, builtin arity, duplicate
+//! function definitions, and `$N` argument collection.
+
+use std::collections::HashSet;
+
+use super::ast::{is_builtin, Expr, Script, Stmt};
+
+/// Validate a script; returns an error string on the first problem found.
+pub fn validate(script: &Script) -> Result<(), String> {
+    let mut funcs: HashSet<String> = HashSet::new();
+    // Pre-pass: collect function names (functions may be called before their
+    // textual definition in DML).
+    collect_funcs(&script.stmts, &mut funcs)?;
+    let mut defined: HashSet<String> = HashSet::new();
+    check_stmts(&script.stmts, &mut defined, &funcs)
+}
+
+/// Collect the maximum `$N` argument index used in the script.
+pub fn max_arg_index(script: &Script) -> usize {
+    let mut max = 0;
+    visit_exprs(&script.stmts, &mut |e| {
+        if let Expr::Arg(i) = e {
+            max = max.max(*i);
+        }
+    });
+    max
+}
+
+fn collect_funcs(stmts: &[Stmt], funcs: &mut HashSet<String>) -> Result<(), String> {
+    for s in stmts {
+        if let Stmt::FuncDef { name, line, .. } = s {
+            if !funcs.insert(name.clone()) {
+                return Err(format!("line {line}: duplicate function definition '{name}'"));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn check_stmts(
+    stmts: &[Stmt],
+    defined: &mut HashSet<String>,
+    funcs: &HashSet<String>,
+) -> Result<(), String> {
+    for s in stmts {
+        match s {
+            Stmt::Assign { target, expr, line } => {
+                check_expr(expr, defined, funcs, *line)?;
+                defined.insert(target.clone());
+            }
+            Stmt::MultiAssign { targets, expr, line } => {
+                check_expr(expr, defined, funcs, *line)?;
+                for t in targets {
+                    defined.insert(t.clone());
+                }
+            }
+            Stmt::If { cond, then_branch, else_branch, line } => {
+                check_expr(cond, defined, funcs, *line)?;
+                // Variables defined in only one branch are conditionally
+                // defined; SystemML warns, we accept (the union is visible).
+                let mut then_defined = defined.clone();
+                check_stmts(then_branch, &mut then_defined, funcs)?;
+                let mut else_defined = defined.clone();
+                check_stmts(else_branch, &mut else_defined, funcs)?;
+                defined.extend(then_defined);
+                defined.extend(else_defined);
+            }
+            Stmt::For { var, from, to, by, body, line, .. } => {
+                check_expr(from, defined, funcs, *line)?;
+                check_expr(to, defined, funcs, *line)?;
+                if let Some(by) = by {
+                    check_expr(by, defined, funcs, *line)?;
+                }
+                defined.insert(var.clone());
+                check_stmts(body, defined, funcs)?;
+            }
+            Stmt::While { cond, body, line } => {
+                check_expr(cond, defined, funcs, *line)?;
+                check_stmts(body, defined, funcs)?;
+            }
+            Stmt::FuncDef { params, outputs, body, line, .. } => {
+                let mut scope: HashSet<String> = params.iter().cloned().collect();
+                check_stmts(body, &mut scope, funcs)?;
+                for o in outputs {
+                    if !scope.contains(o) {
+                        return Err(format!(
+                            "line {line}: function output '{o}' is never assigned in body"
+                        ));
+                    }
+                }
+            }
+            Stmt::Write { expr, file, line, .. } => {
+                check_expr(expr, defined, funcs, *line)?;
+                check_expr(file, defined, funcs, *line)?;
+            }
+            Stmt::Print { expr, line } => check_expr(expr, defined, funcs, *line)?,
+        }
+    }
+    Ok(())
+}
+
+fn check_expr(
+    e: &Expr,
+    defined: &HashSet<String>,
+    funcs: &HashSet<String>,
+    line: usize,
+) -> Result<(), String> {
+    match e {
+        Expr::Ident(name) => {
+            if !defined.contains(name) {
+                return Err(format!("line {line}: use of undefined variable '{name}'"));
+            }
+            Ok(())
+        }
+        Expr::Unary(_, a) => check_expr(a, defined, funcs, line),
+        Expr::Binary(_, a, b) => {
+            check_expr(a, defined, funcs, line)?;
+            check_expr(b, defined, funcs, line)
+        }
+        Expr::Call(name, args) => {
+            if !is_builtin(name) && !funcs.contains(name) {
+                return Err(format!("line {line}: call to unknown function '{name}'"));
+            }
+            check_arity(name, args.len(), line)?;
+            for a in args {
+                check_expr(a, defined, funcs, line)?;
+            }
+            Ok(())
+        }
+        _ => Ok(()),
+    }
+}
+
+fn check_arity(name: &str, n: usize, line: usize) -> Result<(), String> {
+    let ok = match name {
+        "read" => n == 1,
+        "matrix" => n == 3,
+        "rand" => (2..=6).contains(&n),
+        "seq" => (2..=3).contains(&n),
+        "nrow" | "ncol" | "length" | "t" | "diag" | "sum" | "mean" | "rowSums" | "colSums"
+        | "rowMeans" | "colMeans" | "sqrt" | "abs" | "exp" | "log" | "round" | "floor"
+        | "ceil" | "as.scalar" | "as.matrix" | "trace" | "nnz" | "sign" => n == 1,
+        "solve" | "append" | "cbind" | "rbind" => n == 2,
+        "min" | "max" => (1..=2).contains(&n),
+        _ => return Ok(()), // user-defined: arity checked at HOP build
+    };
+    if ok {
+        Ok(())
+    } else {
+        Err(format!("line {line}: wrong number of arguments ({n}) for '{name}'"))
+    }
+}
+
+fn visit_exprs(stmts: &[Stmt], f: &mut impl FnMut(&Expr)) {
+    fn walk(e: &Expr, f: &mut impl FnMut(&Expr)) {
+        f(e);
+        match e {
+            Expr::Unary(_, a) => walk(a, f),
+            Expr::Binary(_, a, b) => {
+                walk(a, f);
+                walk(b, f);
+            }
+            Expr::Call(_, args) => args.iter().for_each(|a| walk(a, f)),
+            _ => {}
+        }
+    }
+    for s in stmts {
+        match s {
+            Stmt::Assign { expr, .. } | Stmt::MultiAssign { expr, .. } | Stmt::Print { expr, .. } => {
+                walk(expr, f)
+            }
+            Stmt::If { cond, then_branch, else_branch, .. } => {
+                walk(cond, f);
+                visit_exprs(then_branch, f);
+                visit_exprs(else_branch, f);
+            }
+            Stmt::For { from, to, by, body, .. } => {
+                walk(from, f);
+                walk(to, f);
+                if let Some(by) = by {
+                    walk(by, f);
+                }
+                visit_exprs(body, f);
+            }
+            Stmt::While { cond, body, .. } => {
+                walk(cond, f);
+                visit_exprs(body, f);
+            }
+            Stmt::FuncDef { body, .. } => visit_exprs(body, f),
+            Stmt::Write { expr, file, .. } => {
+                walk(expr, f);
+                walk(file, f);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dml::parser::parse;
+
+    #[test]
+    fn linreg_validates() {
+        let src = r#"
+X = read($1);
+y = read($2);
+intercept = $3; lambda = 0.001;
+if( intercept == 1 ) { ones = matrix(1, nrow(X), 1); X = append(X, ones); }
+I = matrix(1, ncol(X), 1);
+A = t(X) %*% X + diag(I)*lambda;
+b = t(X) %*% y;
+beta = solve(A, b);
+write(beta, $4);
+"#;
+        let s = parse(src).unwrap();
+        assert!(validate(&s).is_ok());
+        assert_eq!(max_arg_index(&s), 4);
+    }
+
+    #[test]
+    fn undefined_variable_rejected() {
+        let s = parse("a = b + 1;").unwrap();
+        let err = validate(&s).unwrap_err();
+        assert!(err.contains("undefined variable 'b'"));
+    }
+
+    #[test]
+    fn unknown_function_rejected() {
+        let s = parse("a = frobnicate(1);").unwrap();
+        assert!(validate(&s).unwrap_err().contains("unknown function"));
+    }
+
+    #[test]
+    fn bad_arity_rejected() {
+        let s = parse("a = solve(1);").unwrap();
+        assert!(validate(&s).unwrap_err().contains("wrong number of arguments"));
+    }
+
+    #[test]
+    fn branch_defined_vars_visible_after_if() {
+        let s = parse("c = 1; if (c == 1) { x = 2; } else { x = 3; } y = x;").unwrap();
+        assert!(validate(&s).is_ok());
+    }
+
+    #[test]
+    fn function_output_must_be_assigned() {
+        let s = parse("f = function(a) return (b) { c = a; }").unwrap();
+        assert!(validate(&s).unwrap_err().contains("never assigned"));
+    }
+
+    #[test]
+    fn function_called_before_definition_ok() {
+        let s = parse("y = g(1);\ng = function(a) return (b) { b = a; }").unwrap();
+        assert!(validate(&s).is_ok());
+    }
+
+    #[test]
+    fn loop_var_defined_in_body() {
+        let s = parse("s = 0; for (i in 1:10) { s = s + i; }").unwrap();
+        assert!(validate(&s).is_ok());
+    }
+}

@@ -1,0 +1,730 @@
+//! AST → HOP-DAG construction.
+//!
+//! Straight-line statement runs become generic blocks with one DAG each;
+//! control-flow statements become nested blocks. Variables live across
+//! block boundaries via `TWrite`/`TRead` pairs, exactly like the two
+//! GENERIC blocks in the paper's Figure 1.
+
+use std::collections::{BTreeMap, HashMap};
+
+use super::*;
+use crate::dml::ast as dast;
+use crate::matrix::{Format, MatrixCharacteristics};
+
+/// Source of matrix metadata for `read()` inputs: either `.mtd` sidecar
+/// files on disk, or statically provided characteristics (used to compile
+/// the paper's terabyte scenarios without materialising data).
+pub trait MetaProvider {
+    fn stats(&self, path: &str) -> Option<(MatrixCharacteristics, Format)>;
+}
+
+/// Reads `<path>.mtd` sidecars written by [`crate::matrix::io`].
+pub struct FileMeta;
+
+impl MetaProvider for FileMeta {
+    fn stats(&self, path: &str) -> Option<(MatrixCharacteristics, Format)> {
+        crate::matrix::io::read_mtd(path).ok()
+    }
+}
+
+/// Static path → characteristics map.
+#[derive(Default)]
+pub struct StaticMeta(pub HashMap<String, (MatrixCharacteristics, Format)>);
+
+impl StaticMeta {
+    pub fn with(mut self, path: &str, mc: MatrixCharacteristics, format: Format) -> Self {
+        self.0.insert(path.to_string(), (mc, format));
+        self
+    }
+}
+
+impl MetaProvider for StaticMeta {
+    fn stats(&self, path: &str) -> Option<(MatrixCharacteristics, Format)> {
+        self.0.get(path).copied()
+    }
+}
+
+/// Build a [`Program`] of HOP DAGs from a validated AST.
+///
+/// `args` provides the `$N` command-line bindings; `meta` resolves
+/// dimensions of persistent reads; `blocksize` stamps block metadata.
+pub fn build_program(
+    script: &dast::Script,
+    args: &HashMap<usize, String>,
+    meta: &dyn MetaProvider,
+    blocksize: i64,
+) -> Result<Program, String> {
+    let mut b = Builder { args, meta, blocksize, temp_counter: 0 };
+    let mut funcs = BTreeMap::new();
+    // Compile function bodies first (they cannot reference $N args directly
+    // in our subset, but can use all builtins).
+    for s in &script.stmts {
+        if let dast::Stmt::FuncDef { name, params, param_kinds, outputs, body, .. } = s {
+            let blocks = b.build_blocks(body)?;
+            funcs.insert(
+                name.clone(),
+                Function {
+                    params: params.clone(),
+                    param_kinds: param_kinds.clone(),
+                    outputs: outputs.clone(),
+                    body: blocks,
+                },
+            );
+        }
+    }
+    let blocks = b.build_blocks(&script.stmts)?;
+    Ok(Program { blocks, funcs })
+}
+
+struct Builder<'a> {
+    args: &'a HashMap<usize, String>,
+    meta: &'a dyn MetaProvider,
+    blocksize: i64,
+    temp_counter: usize,
+}
+
+/// State while building one generic block.
+struct DagCtx {
+    dag: HopDag,
+    /// variable -> defining hop in this DAG
+    vars: HashMap<String, HopId>,
+    /// variables assigned in this block, in order (need TWrite at flush)
+    assigned: Vec<String>,
+    first_line: usize,
+    last_line: usize,
+}
+
+impl DagCtx {
+    fn new() -> Self {
+        DagCtx {
+            dag: HopDag::default(),
+            vars: HashMap::new(),
+            assigned: Vec::new(),
+            first_line: 0,
+            last_line: 0,
+        }
+    }
+
+    fn touch_line(&mut self, line: usize) {
+        if self.first_line == 0 {
+            self.first_line = line;
+        }
+        self.last_line = self.last_line.max(line);
+    }
+
+    fn is_empty(&self) -> bool {
+        self.dag.hops.is_empty()
+    }
+}
+
+impl<'a> Builder<'a> {
+    fn build_blocks(&mut self, stmts: &[dast::Stmt]) -> Result<Vec<Block>, String> {
+        let mut blocks = Vec::new();
+        let mut ctx = DagCtx::new();
+        for s in stmts {
+            match s {
+                dast::Stmt::FuncDef { .. } => {} // compiled separately
+                dast::Stmt::Assign { target, expr, line } => {
+                    if let dast::Expr::Call(name, cargs) = expr {
+                        if !dast::is_builtin(name) {
+                            // user-defined function call
+                            self.emit_fcall(
+                                &mut blocks,
+                                &mut ctx,
+                                name,
+                                cargs,
+                                std::slice::from_ref(target),
+                                *line,
+                            )?;
+                            continue;
+                        }
+                    }
+                    ctx.touch_line(*line);
+                    let h = self.expr(&mut ctx, expr)?;
+                    // `X = read(...)`: SystemML names the PRead hop after the
+                    // target variable (EXPLAIN prints `PRead X`).
+                    if let HopKind::PRead { name, .. } = &mut ctx.dag.hop_mut(h).kind {
+                        *name = target.clone();
+                    }
+                    ctx.vars.insert(target.clone(), h);
+                    if !ctx.assigned.contains(target) {
+                        ctx.assigned.push(target.clone());
+                    }
+                }
+                dast::Stmt::MultiAssign { targets, expr, line } => {
+                    let dast::Expr::Call(name, cargs) = expr else {
+                        return Err(format!(
+                            "line {line}: multi-assignment requires a function call"
+                        ));
+                    };
+                    self.emit_fcall(&mut blocks, &mut ctx, name, cargs, targets, *line)?;
+                }
+                dast::Stmt::Write { expr, file, format, line } => {
+                    ctx.touch_line(*line);
+                    let h = self.expr(&mut ctx, expr)?;
+                    let path = self.path_of(&mut ctx, file)?;
+                    let fmt = format
+                        .as_deref()
+                        .and_then(Format::parse)
+                        .unwrap_or(Format::TextCell);
+                    let dt = ctx.dag.hop(h).dtype.clone();
+                    let name = match expr {
+                        dast::Expr::Ident(n) => n.clone(),
+                        _ => format!("_wtmp{}", ctx.dag.hops.len()),
+                    };
+                    let w = ctx.dag.add(HopKind::PWrite { name, path, format: fmt }, vec![h], dt);
+                    ctx.dag.roots.push(w);
+                }
+                dast::Stmt::Print { expr, line } => {
+                    ctx.touch_line(*line);
+                    let h = self.expr(&mut ctx, expr)?;
+                    let p = ctx.dag.add(HopKind::Print, vec![h], DataType::Scalar(ValueType::Str));
+                    ctx.dag.roots.push(p);
+                }
+                dast::Stmt::If { cond, then_branch, else_branch, line } => {
+                    self.flush(&mut blocks, &mut ctx);
+                    let pred = self.pred_dag(cond)?;
+                    let then_blocks = self.build_blocks(then_branch)?;
+                    let else_blocks = self.build_blocks(else_branch)?;
+                    let end = s.end_line();
+                    blocks.push(Block::If { pred, then_blocks, else_blocks, lines: (*line, end) });
+                }
+                dast::Stmt::For { var, from, to, by, body, parfor, line } => {
+                    self.flush(&mut blocks, &mut ctx);
+                    let from_dag = self.pred_dag(from)?;
+                    let to_dag = self.pred_dag(to)?;
+                    let by_dag = by.as_ref().map(|b| self.pred_dag(b)).transpose()?;
+                    let body_blocks = self.build_blocks(body)?;
+                    blocks.push(Block::For {
+                        var: var.clone(),
+                        from: from_dag,
+                        to: to_dag,
+                        by: by_dag,
+                        body: body_blocks,
+                        parfor: *parfor,
+                        known_trip: None,
+                        lines: (*line, s.end_line()),
+                    });
+                }
+                dast::Stmt::While { cond, body, line } => {
+                    self.flush(&mut blocks, &mut ctx);
+                    let pred = self.pred_dag(cond)?;
+                    let body_blocks = self.build_blocks(body)?;
+                    blocks.push(Block::While { pred, body: body_blocks, lines: (*line, s.end_line()) });
+                }
+            }
+        }
+        self.flush(&mut blocks, &mut ctx);
+        Ok(blocks)
+    }
+
+    /// Close the current generic block: add TWrites for assigned vars.
+    fn flush(&mut self, blocks: &mut Vec<Block>, ctx: &mut DagCtx) {
+        if ctx.is_empty() {
+            *ctx = DagCtx::new();
+            return;
+        }
+        let assigned = std::mem::take(&mut ctx.assigned);
+        for name in assigned {
+            let h = ctx.vars[&name];
+            let dt = ctx.dag.hop(h).dtype.clone();
+            let w = ctx.dag.add(HopKind::TWrite { name: name.clone() }, vec![h], dt);
+            ctx.dag.roots.push(w);
+        }
+        let old = std::mem::replace(ctx, DagCtx::new());
+        blocks.push(Block::Generic(GenericBlock {
+            dag: old.dag,
+            lines: (old.first_line, old.last_line),
+            recompile: false,
+        }));
+    }
+
+    /// Emit a user-function call block: ensure args are named variables
+    /// (introducing temps for expressions), then flush and add FCall.
+    fn emit_fcall(
+        &mut self,
+        blocks: &mut Vec<Block>,
+        ctx: &mut DagCtx,
+        fname: &str,
+        cargs: &[dast::Expr],
+        targets: &[String],
+        line: usize,
+    ) -> Result<(), String> {
+        let mut argnames = Vec::new();
+        for a in cargs {
+            if let dast::Expr::Ident(n) = a {
+                argnames.push(n.clone());
+            } else {
+                ctx.touch_line(line);
+                let h = self.expr(ctx, a)?;
+                let tmp = format!("_fvar{}", self.temp_counter);
+                self.temp_counter += 1;
+                ctx.vars.insert(tmp.clone(), h);
+                ctx.assigned.push(tmp.clone());
+                argnames.push(tmp);
+            }
+        }
+        self.flush(blocks, ctx);
+        blocks.push(Block::FCall {
+            fname: fname.to_string(),
+            args: argnames,
+            outputs: targets.to_vec(),
+            lines: (line, line),
+        });
+        Ok(())
+    }
+
+    /// Compile a predicate / loop-bound expression into its own small DAG;
+    /// the last hop is the DAG's single root.
+    fn pred_dag(&mut self, e: &dast::Expr) -> Result<HopDag, String> {
+        let mut ctx = DagCtx::new();
+        let h = self.expr(&mut ctx, e)?;
+        ctx.dag.roots.push(h);
+        Ok(ctx.dag)
+    }
+
+    /// Resolve a `$N`/string expression to a file path.
+    fn path_of(&mut self, ctx: &mut DagCtx, e: &dast::Expr) -> Result<String, String> {
+        match e {
+            dast::Expr::Str(s) => Ok(s.clone()),
+            dast::Expr::Arg(i) => self
+                .args
+                .get(i)
+                .cloned()
+                .ok_or_else(|| format!("missing command-line argument ${i}")),
+            other => {
+                // allow a variable holding a string literal in the same DAG
+                let h = self.expr(ctx, other)?;
+                match ctx.dag.hop(h).literal() {
+                    Some(Lit::Str(s)) => Ok(s.clone()),
+                    _ => Err("file path must be a string literal or $N argument".into()),
+                }
+            }
+        }
+    }
+
+    fn lit(&self, ctx: &mut DagCtx, l: Lit) -> HopId {
+        let dt = DataType::Scalar(l.vtype());
+        ctx.dag.add(HopKind::Literal(l), vec![], dt)
+    }
+
+    /// Fold an expression to a constant f64 if trivially possible (literals
+    /// and arithmetic on literals — full constant folding runs later as a
+    /// rewrite; this handles rand()/matrix() parameters).
+    fn const_f64(&mut self, e: &dast::Expr) -> Option<f64> {
+        match e {
+            dast::Expr::Int(v) => Some(*v as f64),
+            dast::Expr::Num(v) => Some(*v),
+            dast::Expr::Bool(b) => Some(if *b { 1.0 } else { 0.0 }),
+            dast::Expr::Arg(i) => self.args.get(i).and_then(|s| s.parse().ok()),
+            dast::Expr::Unary(dast::UnOp::Neg, a) => Some(-self.const_f64(a)?),
+            dast::Expr::Binary(op, a, b) => {
+                let (x, y) = (self.const_f64(a)?, self.const_f64(b)?);
+                match op {
+                    dast::BinOp::Add => Some(x + y),
+                    dast::BinOp::Sub => Some(x - y),
+                    dast::BinOp::Mul => Some(x * y),
+                    dast::BinOp::Div => Some(x / y),
+                    _ => None,
+                }
+            }
+            _ => None,
+        }
+    }
+
+    fn expr(&mut self, ctx: &mut DagCtx, e: &dast::Expr) -> Result<HopId, String> {
+        match e {
+            dast::Expr::Int(v) => Ok(self.lit(ctx, Lit::Int(*v))),
+            dast::Expr::Num(v) => Ok(self.lit(ctx, Lit::Double(*v))),
+            dast::Expr::Str(s) => Ok(self.lit(ctx, Lit::Str(s.clone()))),
+            dast::Expr::Bool(b) => Ok(self.lit(ctx, Lit::Bool(*b))),
+            dast::Expr::Arg(i) => {
+                let s = self
+                    .args
+                    .get(i)
+                    .ok_or_else(|| format!("missing command-line argument ${i}"))?;
+                let l = if let Ok(v) = s.parse::<i64>() {
+                    Lit::Int(v)
+                } else if let Ok(v) = s.parse::<f64>() {
+                    Lit::Double(v)
+                } else {
+                    Lit::Str(s.clone())
+                };
+                Ok(self.lit(ctx, l))
+            }
+            dast::Expr::Ident(name) => {
+                if let Some(&h) = ctx.vars.get(name) {
+                    return Ok(h);
+                }
+                // Transient read of a variable defined in an earlier block.
+                // Data type is unknown until size propagation; assume matrix
+                // (scalars are corrected by the inter-block propagation).
+                let h = ctx.dag.add(HopKind::TRead { name: name.clone() }, vec![], DataType::Matrix);
+                ctx.vars.insert(name.clone(), h);
+                Ok(h)
+            }
+            dast::Expr::Unary(op, a) => {
+                let ah = self.expr(ctx, a)?;
+                let dt = ctx.dag.hop(ah).dtype.clone();
+                let uop = match op {
+                    dast::UnOp::Neg => UnOp::Neg,
+                    dast::UnOp::Not => UnOp::Not,
+                };
+                Ok(ctx.dag.add(HopKind::Unary(uop), vec![ah], dt))
+            }
+            dast::Expr::Binary(op, a, b) => {
+                let ah = self.expr(ctx, a)?;
+                let bh = self.expr(ctx, b)?;
+                let bop = match op {
+                    dast::BinOp::Add => BinOp::Add,
+                    dast::BinOp::Sub => BinOp::Sub,
+                    dast::BinOp::Mul => BinOp::Mul,
+                    dast::BinOp::Div => BinOp::Div,
+                    dast::BinOp::Pow => BinOp::Pow,
+                    dast::BinOp::Mod => BinOp::Mod,
+                    dast::BinOp::IntDiv => BinOp::IntDiv,
+                    dast::BinOp::Lt => BinOp::Lt,
+                    dast::BinOp::Gt => BinOp::Gt,
+                    dast::BinOp::Le => BinOp::Le,
+                    dast::BinOp::Ge => BinOp::Ge,
+                    dast::BinOp::Eq => BinOp::Eq,
+                    dast::BinOp::Ne => BinOp::Ne,
+                    dast::BinOp::And => BinOp::And,
+                    dast::BinOp::Or => BinOp::Or,
+                    dast::BinOp::MatMul => {
+                        return Ok(ctx.dag.add(HopKind::MatMult, vec![ah, bh], DataType::Matrix));
+                    }
+                    dast::BinOp::Range => {
+                        return Err("':' range is only allowed in for-loop bounds".into());
+                    }
+                };
+                let dt = self.binary_dtype(ctx, bop, ah, bh);
+                Ok(ctx.dag.add(HopKind::Binary(bop), vec![ah, bh], dt))
+            }
+            dast::Expr::Call(name, args) => self.call(ctx, name, args),
+        }
+    }
+
+    fn binary_dtype(&self, ctx: &DagCtx, op: BinOp, a: HopId, b: HopId) -> DataType {
+        let am = ctx.dag.hop(a).dtype.is_matrix();
+        let bm = ctx.dag.hop(b).dtype.is_matrix();
+        if am || bm {
+            return DataType::Matrix;
+        }
+        match op {
+            BinOp::Lt | BinOp::Gt | BinOp::Le | BinOp::Ge | BinOp::Eq | BinOp::Ne | BinOp::And
+            | BinOp::Or => DataType::Scalar(ValueType::Bool),
+            BinOp::Div | BinOp::Pow => DataType::Scalar(ValueType::Double),
+            _ => {
+                let ai = matches!(ctx.dag.hop(a).dtype, DataType::Scalar(ValueType::Int));
+                let bi = matches!(ctx.dag.hop(b).dtype, DataType::Scalar(ValueType::Int));
+                if ai && bi {
+                    DataType::Scalar(ValueType::Int)
+                } else {
+                    DataType::Scalar(ValueType::Double)
+                }
+            }
+        }
+    }
+
+    fn call(&mut self, ctx: &mut DagCtx, name: &str, args: &[dast::Expr]) -> Result<HopId, String> {
+        match name {
+            "read" => {
+                let path = self.path_of(ctx, &args[0])?;
+                let (mc, format) = self
+                    .meta
+                    .stats(&path)
+                    .unwrap_or((MatrixCharacteristics::unknown(), Format::BinaryBlock));
+                let mut mc = mc;
+                if mc.brows < 0 {
+                    mc.brows = self.blocksize;
+                    mc.bcols = self.blocksize;
+                }
+                let varname = format!("pREAD{}", sanitize(&path));
+                let h = ctx.dag.add(
+                    HopKind::PRead { name: varname, path, format },
+                    vec![],
+                    DataType::Matrix,
+                );
+                ctx.dag.hop_mut(h).mc = mc;
+                Ok(h)
+            }
+            "matrix" => {
+                let v = self
+                    .const_f64(&args[0])
+                    .ok_or("matrix() fill value must be a constant")?;
+                let rows = self.expr(ctx, &args[1])?;
+                let cols = self.expr(ctx, &args[2])?;
+                Ok(ctx.dag.add(
+                    HopKind::DataGen(DataGenOp::Rand { min: v, max: v, sparsity: 1.0, seed: -1 }),
+                    vec![rows, cols],
+                    DataType::Matrix,
+                ))
+            }
+            "rand" => {
+                let rows = self.expr(ctx, &args[0])?;
+                let cols = self.expr(ctx, &args[1])?;
+                let min = args.get(2).map(|a| self.const_f64(a)).flatten().unwrap_or(0.0);
+                let max = args.get(3).map(|a| self.const_f64(a)).flatten().unwrap_or(1.0);
+                let sparsity = args.get(4).map(|a| self.const_f64(a)).flatten().unwrap_or(1.0);
+                let seed =
+                    args.get(5).map(|a| self.const_f64(a)).flatten().unwrap_or(-1.0) as i64;
+                Ok(ctx.dag.add(
+                    HopKind::DataGen(DataGenOp::Rand { min, max, sparsity, seed }),
+                    vec![rows, cols],
+                    DataType::Matrix,
+                ))
+            }
+            "seq" => {
+                let from = self.const_f64(&args[0]).ok_or("seq() bounds must be constants")?;
+                let to = self.const_f64(&args[1]).ok_or("seq() bounds must be constants")?;
+                let by = args
+                    .get(2)
+                    .map(|a| self.const_f64(a).ok_or("seq() step must be constant"))
+                    .transpose()?
+                    .unwrap_or(if from <= to { 1.0 } else { -1.0 });
+                Ok(ctx.dag.add(
+                    HopKind::DataGen(DataGenOp::Seq { from, to, by }),
+                    vec![],
+                    DataType::Matrix,
+                ))
+            }
+            "nrow" | "ncol" | "length" => {
+                let a = self.expr(ctx, &args[0])?;
+                let op = match name {
+                    "nrow" => UnOp::Nrow,
+                    "ncol" => UnOp::Ncol,
+                    _ => UnOp::Length,
+                };
+                Ok(ctx.dag.add(HopKind::Unary(op), vec![a], DataType::Scalar(ValueType::Int)))
+            }
+            "t" => {
+                let a = self.expr(ctx, &args[0])?;
+                Ok(ctx.dag.add(HopKind::Reorg(ReorgOp::Transpose), vec![a], DataType::Matrix))
+            }
+            "diag" => {
+                let a = self.expr(ctx, &args[0])?;
+                Ok(ctx.dag.add(HopKind::Reorg(ReorgOp::Diag), vec![a], DataType::Matrix))
+            }
+            "solve" => {
+                let a = self.expr(ctx, &args[0])?;
+                let b = self.expr(ctx, &args[1])?;
+                Ok(ctx.dag.add(HopKind::Binary(BinOp::Solve), vec![a, b], DataType::Matrix))
+            }
+            "append" | "cbind" => {
+                let a = self.expr(ctx, &args[0])?;
+                let b = self.expr(ctx, &args[1])?;
+                Ok(ctx.dag.add(HopKind::Append, vec![a, b], DataType::Matrix))
+            }
+            "rbind" => Err("rbind is not supported by the HOP compiler yet".into()),
+            "sum" | "mean" | "trace" | "nnz" => {
+                let a = self.expr(ctx, &args[0])?;
+                let op = match name {
+                    "sum" => AggOp::Sum,
+                    "mean" => AggOp::Mean,
+                    "trace" => AggOp::Trace,
+                    _ => AggOp::Nnz,
+                };
+                Ok(ctx.dag.add(
+                    HopKind::AggUnary(op, AggDir::All),
+                    vec![a],
+                    DataType::Scalar(ValueType::Double),
+                ))
+            }
+            "rowSums" | "rowMeans" => {
+                let a = self.expr(ctx, &args[0])?;
+                let op = if name == "rowSums" { AggOp::Sum } else { AggOp::Mean };
+                Ok(ctx.dag.add(HopKind::AggUnary(op, AggDir::Row), vec![a], DataType::Matrix))
+            }
+            "colSums" | "colMeans" => {
+                let a = self.expr(ctx, &args[0])?;
+                let op = if name == "colSums" { AggOp::Sum } else { AggOp::Mean };
+                Ok(ctx.dag.add(HopKind::AggUnary(op, AggDir::Col), vec![a], DataType::Matrix))
+            }
+            "min" | "max" => {
+                let a = self.expr(ctx, &args[0])?;
+                if args.len() == 2 {
+                    let b = self.expr(ctx, &args[1])?;
+                    let op = if name == "min" { BinOp::Min } else { BinOp::Max };
+                    let dt = self.binary_dtype(ctx, op, a, b);
+                    Ok(ctx.dag.add(HopKind::Binary(op), vec![a, b], dt))
+                } else {
+                    let op = if name == "min" { AggOp::Min } else { AggOp::Max };
+                    Ok(ctx.dag.add(
+                        HopKind::AggUnary(op, AggDir::All),
+                        vec![a],
+                        DataType::Scalar(ValueType::Double),
+                    ))
+                }
+            }
+            "sqrt" | "abs" | "exp" | "log" | "round" | "floor" | "ceil" | "sign" => {
+                let a = self.expr(ctx, &args[0])?;
+                let dt = ctx.dag.hop(a).dtype.clone();
+                let op = match name {
+                    "sqrt" => UnOp::Sqrt,
+                    "abs" => UnOp::Abs,
+                    "exp" => UnOp::Exp,
+                    "log" => UnOp::Log,
+                    "round" => UnOp::Round,
+                    "floor" => UnOp::Floor,
+                    "ceil" => UnOp::Ceil,
+                    _ => UnOp::Sign,
+                };
+                let dt = if dt.is_matrix() { dt } else { DataType::Scalar(ValueType::Double) };
+                Ok(ctx.dag.add(HopKind::Unary(op), vec![a], dt))
+            }
+            "as.scalar" => {
+                let a = self.expr(ctx, &args[0])?;
+                Ok(ctx.dag.add(
+                    HopKind::Unary(UnOp::CastScalar),
+                    vec![a],
+                    DataType::Scalar(ValueType::Double),
+                ))
+            }
+            "as.matrix" => {
+                let a = self.expr(ctx, &args[0])?;
+                Ok(ctx.dag.add(HopKind::Unary(UnOp::CastMatrix), vec![a], DataType::Matrix))
+            }
+            other => Err(format!("user-defined function '{other}' may only be called as a statement")),
+        }
+    }
+}
+
+fn sanitize(path: &str) -> String {
+    path.rsplit('/').next().unwrap_or(path).replace(['.', '-'], "_")
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+    use crate::dml;
+
+    pub const LINREG_DS: &str = r#"X = read($1);
+y = read($2);
+intercept = $3; lambda = 0.001;
+if( intercept == 1 ) {
+  ones = matrix(1, nrow(X), 1);
+  X = append(X, ones);
+}
+I = matrix(1, ncol(X), 1);
+A = t(X) %*% X + diag(I)*lambda;
+b = t(X) %*% y;
+beta = solve(A, b);
+write(beta, $4);"#;
+
+    pub fn linreg_args() -> HashMap<usize, String> {
+        let mut m = HashMap::new();
+        m.insert(1, "data/X".to_string());
+        m.insert(2, "data/y".to_string());
+        m.insert(3, "0".to_string());
+        m.insert(4, "data/beta".to_string());
+        m
+    }
+
+    pub fn xs_meta() -> StaticMeta {
+        StaticMeta::default()
+            .with("data/X", MatrixCharacteristics::dense(10_000, 1_000, 1000), Format::BinaryBlock)
+            .with("data/y", MatrixCharacteristics::dense(10_000, 1, 1000), Format::BinaryBlock)
+    }
+
+    #[test]
+    fn linreg_builds_three_blocks_before_rewrites() {
+        // Before branch removal: generic(lines 1-3), if(4-7), generic(8-12).
+        let script = dml::frontend(LINREG_DS).unwrap();
+        let prog = build_program(&script, &linreg_args(), &xs_meta(), 1000).unwrap();
+        assert_eq!(prog.blocks.len(), 3);
+        assert!(matches!(prog.blocks[0], Block::Generic(_)));
+        assert!(matches!(prog.blocks[1], Block::If { .. }));
+        assert!(matches!(prog.blocks[2], Block::Generic(_)));
+        let Block::Generic(g) = &prog.blocks[0] else { panic!() };
+        assert_eq!(g.lines, (1, 3));
+    }
+
+    #[test]
+    fn pread_gets_metadata() {
+        let script = dml::frontend("X = read($1); s = sum(X); write(s, $4);").unwrap();
+        let prog = build_program(&script, &linreg_args(), &xs_meta(), 1000).unwrap();
+        let Block::Generic(g) = &prog.blocks[0] else { panic!() };
+        let pread = g.dag.hops.iter().find(|h| matches!(h.kind, HopKind::PRead { .. })).unwrap();
+        assert_eq!(pread.mc.rows, 10_000);
+        assert_eq!(pread.mc.nnz, 10_000_000);
+    }
+
+    #[test]
+    fn arg_binds_to_literal() {
+        let script = dml::frontend("i = $3; write(i, $4);").unwrap();
+        let prog = build_program(&script, &linreg_args(), &xs_meta(), 1000).unwrap();
+        let Block::Generic(g) = &prog.blocks[0] else { panic!() };
+        assert!(g.dag.hops.iter().any(|h| h.literal() == Some(&Lit::Int(0))));
+    }
+
+    #[test]
+    fn transient_reads_created_for_cross_block_vars() {
+        let script =
+            dml::frontend("c = 1; if (c == 1) { d = 2; } e = c + 1; write(e, \"out\");").unwrap();
+        let prog = build_program(&script, &HashMap::new(), &StaticMeta::default(), 1000).unwrap();
+        // last block reads c transiently
+        let Block::Generic(g) = prog.blocks.last().unwrap() else { panic!() };
+        assert!(g
+            .dag
+            .hops
+            .iter()
+            .any(|h| matches!(&h.kind, HopKind::TRead { name } if name == "c")));
+    }
+
+    #[test]
+    fn function_call_becomes_fcall_block() {
+        let src = r#"
+f = function(a) return (b) { b = a * 2; }
+x = 3;
+y = f(x);
+write(y, "out");
+"#;
+        let script = dml::frontend(src).unwrap();
+        let prog = build_program(&script, &HashMap::new(), &StaticMeta::default(), 1000).unwrap();
+        assert!(prog.funcs.contains_key("f"));
+        assert!(prog.blocks.iter().any(|b| matches!(b, Block::FCall { fname, .. } if fname == "f")));
+    }
+
+    #[test]
+    fn fcall_with_expr_arg_introduces_temp() {
+        let src = r#"
+f = function(a) return (b) { b = a * 2; }
+x = 3;
+y = f(x + 1);
+write(y, "out");
+"#;
+        let script = dml::frontend(src).unwrap();
+        let prog = build_program(&script, &HashMap::new(), &StaticMeta::default(), 1000).unwrap();
+        let Some(Block::FCall { args, .. }) =
+            prog.blocks.iter().find(|b| matches!(b, Block::FCall { .. }))
+        else {
+            panic!()
+        };
+        assert!(args[0].starts_with("_fvar"));
+    }
+
+    #[test]
+    fn missing_arg_is_error() {
+        let script = dml::frontend("X = read($9); write(X, \"o\");").unwrap();
+        let err = build_program(&script, &linreg_args(), &xs_meta(), 1000).unwrap_err();
+        assert!(err.contains("$9"));
+    }
+
+    #[test]
+    fn twrite_roots_in_assignment_order() {
+        let script = dml::frontend("a = 1; b = 2; write(b, \"o\");").unwrap();
+        let prog = build_program(&script, &HashMap::new(), &StaticMeta::default(), 1000).unwrap();
+        let Block::Generic(g) = &prog.blocks[0] else { panic!() };
+        let names: Vec<String> = g
+            .dag
+            .roots
+            .iter()
+            .filter_map(|&r| match &g.dag.hop(r).kind {
+                HopKind::TWrite { name } => Some(name.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(names, vec!["a", "b"]);
+    }
+}

@@ -1,0 +1,184 @@
+//! Execution-type selection (paper §2): each HOP picks CP (single-node
+//! in-memory) when its operation memory estimate fits the local budget and
+//! its sizes are known; otherwise MR. Some operators are CP-only (`solve`,
+//! scalar ops, bookkeeping); persistent reads feeding MR consumers stay on
+//! HDFS (no CP read op is materialised).
+
+use super::*;
+use crate::conf::{ClusterConfig, SystemConfig};
+
+/// Select execution types for all hops in the program, and set per-block
+/// `recompile` flags (blocks with MR operators or unknowns are marked for
+/// dynamic recompilation, cf. Figure 3's `[recompile=true]`).
+pub fn select(prog: &mut Program, cfg: &SystemConfig, cc: &ClusterConfig) {
+    let budget = cfg.cp_budget(cc);
+    let mut blocks = std::mem::take(&mut prog.blocks);
+    select_blocks(&mut blocks, budget);
+    prog.blocks = blocks;
+    for f in prog.funcs.values_mut() {
+        select_blocks(&mut f.body, budget);
+    }
+}
+
+fn select_blocks(blocks: &mut [Block], budget: f64) {
+    for b in blocks {
+        match b {
+            Block::Generic(g) => {
+                select_dag(&mut g.dag, budget);
+                g.recompile = dag_needs_recompile(&g.dag);
+            }
+            Block::If { pred, then_blocks, else_blocks, .. } => {
+                select_dag(pred, budget);
+                select_blocks(then_blocks, budget);
+                select_blocks(else_blocks, budget);
+            }
+            Block::For { from, to, by, body, .. } => {
+                select_dag(from, budget);
+                select_dag(to, budget);
+                if let Some(by) = by {
+                    select_dag(by, budget);
+                }
+                select_blocks(body, budget);
+            }
+            Block::While { pred, body, .. } => {
+                select_dag(pred, budget);
+                select_blocks(body, budget);
+            }
+            Block::FCall { .. } => {}
+        }
+    }
+}
+
+/// Per-DAG selection.
+pub fn select_dag(dag: &mut HopDag, budget: f64) {
+    for id in dag.topo_order() {
+        let hop = dag.hop(id).clone();
+        let exec = choose(&hop, budget);
+        dag.hop_mut(id).exec = Some(exec);
+    }
+}
+
+fn choose(hop: &Hop, budget: f64) -> ExecType {
+    // Scalar ops, bookkeeping, prints: always CP.
+    if !hop.dtype.is_matrix() {
+        return ExecType::Cp;
+    }
+    match &hop.kind {
+        // Variable bookkeeping is CP; the data may still live on HDFS.
+        HopKind::TRead { .. } | HopKind::TWrite { .. } | HopKind::PRead { .. }
+        | HopKind::PWrite { .. } | HopKind::Literal(_) => ExecType::Cp,
+        // solve is CP-only in SystemML (LAPACK-style kernel); the optimizer
+        // must produce plans where its inputs fit in memory.
+        HopKind::Binary(BinOp::Solve) => ExecType::Cp,
+        _ => {
+            if hop.op_mem <= budget {
+                ExecType::Cp
+            } else {
+                ExecType::Mr
+            }
+        }
+    }
+}
+
+fn dag_needs_recompile(dag: &HopDag) -> bool {
+    dag.topo_order().iter().any(|&id| {
+        let h = dag.hop(id);
+        h.exec == Some(ExecType::Mr) || (h.dtype.is_matrix() && !h.mc.dims_known())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conf::{ClusterConfig, SystemConfig};
+    use crate::dml;
+    use crate::ir::build::{build_program, tests::linreg_args, StaticMeta};
+    use crate::ir::{memory, rewrites, size_prop};
+    use crate::matrix::{Format, MatrixCharacteristics};
+
+    fn compile_with_meta(meta: &StaticMeta) -> Program {
+        let script = dml::frontend(crate::ir::build::tests::LINREG_DS).unwrap();
+        let mut prog = build_program(&script, &linreg_args(), meta, 1000).unwrap();
+        rewrites::rewrite_program(&mut prog);
+        size_prop::propagate(&mut prog, 1000);
+        memory::annotate(&mut prog, &SystemConfig::default());
+        select(&mut prog, &SystemConfig::default(), &ClusterConfig::paper_cluster());
+        prog
+    }
+
+    fn exec_of(prog: &Program, pred: impl Fn(&Hop) -> bool) -> Vec<ExecType> {
+        let mut v = Vec::new();
+        for b in &prog.blocks {
+            if let Block::Generic(g) = b {
+                for id in g.dag.topo_order() {
+                    let h = g.dag.hop(id);
+                    if pred(h) {
+                        v.push(h.exec.unwrap());
+                    }
+                }
+            }
+        }
+        v
+    }
+
+    fn xs() -> StaticMeta {
+        StaticMeta::default()
+            .with("data/X", MatrixCharacteristics::dense(10_000, 1_000, 1000), Format::BinaryBlock)
+            .with("data/y", MatrixCharacteristics::dense(10_000, 1, 1000), Format::BinaryBlock)
+    }
+
+    fn xl1() -> StaticMeta {
+        StaticMeta::default()
+            .with(
+                "data/X",
+                MatrixCharacteristics::dense(100_000_000, 1_000, 1000),
+                Format::BinaryBlock,
+            )
+            .with(
+                "data/y",
+                MatrixCharacteristics::dense(100_000_000, 1, 1000),
+                Format::BinaryBlock,
+            )
+    }
+
+    #[test]
+    fn xs_is_all_cp() {
+        // Figure 1: every operator CP for the 80MB scenario.
+        let prog = compile_with_meta(&xs());
+        let execs = exec_of(&prog, |h| h.dtype.is_matrix());
+        assert!(!execs.is_empty());
+        assert!(execs.iter().all(|e| *e == ExecType::Cp));
+    }
+
+    #[test]
+    fn xl1_puts_large_ops_on_mr() {
+        // Paper §2: "memory estimates of HOPs 52, 53, and 59 are >1 TB ...
+        // hence we select the execution type MR for these operators".
+        let prog = compile_with_meta(&xl1());
+        let t = exec_of(&prog, |h| h.kind == HopKind::Reorg(ReorgOp::Transpose));
+        assert_eq!(t, vec![ExecType::Mr]);
+        let mm = exec_of(&prog, |h| h.kind == HopKind::MatMult);
+        assert_eq!(mm, vec![ExecType::Mr, ExecType::Mr]);
+        // but solve and the small add remain CP (hybrid plan)
+        let solve = exec_of(&prog, |h| h.kind == HopKind::Binary(BinOp::Solve));
+        assert_eq!(solve, vec![ExecType::Cp]);
+        let add = exec_of(&prog, |h| h.kind == HopKind::Binary(BinOp::Add) && h.dtype.is_matrix());
+        assert_eq!(add, vec![ExecType::Cp]);
+    }
+
+    #[test]
+    fn recompile_flags_set_for_mr_blocks() {
+        let prog = compile_with_meta(&xl1());
+        let Block::Generic(g1) = &prog.blocks[0] else { panic!() };
+        let Block::Generic(g2) = &prog.blocks[1] else { panic!() };
+        assert!(!g1.recompile, "read-only block stays static");
+        assert!(g2.recompile, "MR block marked for recompilation");
+    }
+
+    #[test]
+    fn scalars_always_cp() {
+        let prog = compile_with_meta(&xl1());
+        let scalars = exec_of(&prog, |h| !h.dtype.is_matrix());
+        assert!(scalars.iter().all(|e| *e == ExecType::Cp));
+    }
+}

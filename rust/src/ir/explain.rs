@@ -1,0 +1,220 @@
+//! HOP-level EXPLAIN (paper Figure 1 format):
+//!
+//! ```text
+//! # Memory Budget local/remote = 1434MB/1434MB
+//! # Degree of Parallelism (vcores) local/remote = 24/144/72
+//! PROGRAM
+//! --MAIN PROGRAM
+//! ----GENERIC (lines 1-3) [recompile=false]
+//! ------(10) PRead X [1e4,1e3,1e3,1e3,1e7] [76MB] CP
+//! ...
+//! ```
+//!
+//! HOP ids are global across the program like SystemML's.
+
+use super::*;
+use crate::conf::{ClusterConfig, SystemConfig};
+use crate::util::fmt::fmt_mb;
+
+/// Render the program at HOP level.
+pub fn explain_hops(prog: &Program, cfg: &SystemConfig, cc: &ClusterConfig) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "# Memory Budget local/remote = {}/{}\n",
+        fmt_mb(cfg.cp_budget(cc)),
+        fmt_mb(cfg.map_budget(cc))
+    ));
+    out.push_str(&format!(
+        "# Degree of Parallelism (vcores) local/remote = {}/{}/{}\n",
+        cc.k_local,
+        cc.effective_k_map(),
+        cc.effective_k_reduce()
+    ));
+    out.push_str("PROGRAM\n--MAIN PROGRAM\n");
+    let mut ids = IdGen { next: 10 };
+    explain_blocks(&prog.blocks, &mut out, 4, &mut ids);
+    for (name, f) in &prog.funcs {
+        out.push_str(&format!("--FUNCTION {name}\n"));
+        explain_blocks(&f.body, &mut out, 4, &mut ids);
+    }
+    out
+}
+
+struct IdGen {
+    next: usize,
+}
+
+impl IdGen {
+    fn take(&mut self, n: usize) -> usize {
+        let base = self.next;
+        // SystemML ids advance with internal hops; approximate the look by
+        // skipping a couple per DAG.
+        self.next += n + 2;
+        base
+    }
+}
+
+fn dashes(n: usize) -> String {
+    "-".repeat(n)
+}
+
+fn explain_blocks(blocks: &[Block], out: &mut String, indent: usize, ids: &mut IdGen) {
+    for b in blocks {
+        match b {
+            Block::Generic(g) => {
+                let (l0, l1) = g.lines;
+                out.push_str(&format!(
+                    "{}GENERIC (lines {l0}-{l1}) [recompile={}]\n",
+                    dashes(indent),
+                    g.recompile
+                ));
+                explain_dag(&g.dag, out, indent + 2, ids);
+            }
+            Block::If { pred, then_blocks, else_blocks, lines } => {
+                out.push_str(&format!(
+                    "{}IF (lines {}-{})\n",
+                    dashes(indent),
+                    lines.0,
+                    lines.1
+                ));
+                out.push_str(&format!("{}IF PREDICATE\n", dashes(indent + 2)));
+                explain_dag(pred, out, indent + 4, ids);
+                out.push_str(&format!("{}IF BODY\n", dashes(indent + 2)));
+                explain_blocks(then_blocks, out, indent + 4, ids);
+                if !else_blocks.is_empty() {
+                    out.push_str(&format!("{}ELSE BODY\n", dashes(indent + 2)));
+                    explain_blocks(else_blocks, out, indent + 4, ids);
+                }
+            }
+            Block::For { var, from, to, body, parfor, known_trip, lines, .. } => {
+                let kind = if *parfor { "PARFOR" } else { "FOR" };
+                let trip = known_trip.map_or("unknown".to_string(), |t| format!("{t}"));
+                out.push_str(&format!(
+                    "{}{kind} (lines {}-{}) [var={var}, iterations={trip}]\n",
+                    dashes(indent),
+                    lines.0,
+                    lines.1
+                ));
+                out.push_str(&format!("{}FROM\n", dashes(indent + 2)));
+                explain_dag(from, out, indent + 4, ids);
+                out.push_str(&format!("{}TO\n", dashes(indent + 2)));
+                explain_dag(to, out, indent + 4, ids);
+                out.push_str(&format!("{}BODY\n", dashes(indent + 2)));
+                explain_blocks(body, out, indent + 4, ids);
+            }
+            Block::While { pred, body, lines } => {
+                out.push_str(&format!(
+                    "{}WHILE (lines {}-{})\n",
+                    dashes(indent),
+                    lines.0,
+                    lines.1
+                ));
+                out.push_str(&format!("{}WHILE PREDICATE\n", dashes(indent + 2)));
+                explain_dag(pred, out, indent + 4, ids);
+                out.push_str(&format!("{}BODY\n", dashes(indent + 2)));
+                explain_blocks(body, out, indent + 4, ids);
+            }
+            Block::FCall { fname, args, outputs, lines } => {
+                out.push_str(&format!(
+                    "{}FCALL {fname}({}) -> ({}) (lines {}-{})\n",
+                    dashes(indent),
+                    args.join(","),
+                    outputs.join(","),
+                    lines.0,
+                    lines.1
+                ));
+            }
+        }
+    }
+}
+
+fn explain_dag(dag: &HopDag, out: &mut String, indent: usize, ids: &mut IdGen) {
+    let order = dag.topo_order();
+    let base = ids.take(order.len());
+    // local id -> printed id
+    let mut printed: std::collections::HashMap<HopId, usize> = std::collections::HashMap::new();
+    for (k, &id) in order.iter().enumerate() {
+        printed.insert(id, base + k);
+    }
+    for &id in &order {
+        let h = dag.hop(id);
+        // literals are inlined in SystemML's explain; skip bare literals
+        if h.is_literal() {
+            continue;
+        }
+        let refs: Vec<String> = h
+            .inputs
+            .iter()
+            .filter(|&&i| !dag.hop(i).is_literal())
+            .map(|i| printed[i].to_string())
+            .collect();
+        let refs = if refs.is_empty() { String::new() } else { format!(" ({})", refs.join(",")) };
+        let mem = if h.op_mem.is_finite() { fmt_mb(h.op_mem) } else { "?MB".to_string() };
+        let exec = h.exec.map(|e| e.name()).unwrap_or("");
+        out.push_str(&format!(
+            "{}({}) {}{} {} [{}] {}\n",
+            dashes(indent),
+            printed[&id],
+            h.kind.opcode(),
+            refs,
+            h.mc.explain(),
+            mem,
+            exec
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conf::{ClusterConfig, SystemConfig};
+    use crate::dml;
+    use crate::ir::build::{build_program, tests::linreg_args, tests::xs_meta, tests::LINREG_DS};
+    use crate::ir::{exec_type, memory, rewrites, size_prop};
+
+    fn compiled() -> Program {
+        let script = dml::frontend(LINREG_DS).unwrap();
+        let mut prog = build_program(&script, &linreg_args(), &xs_meta(), 1000).unwrap();
+        rewrites::rewrite_program(&mut prog);
+        size_prop::propagate(&mut prog, 1000);
+        memory::annotate(&mut prog, &SystemConfig::default());
+        exec_type::select(&mut prog, &SystemConfig::default(), &ClusterConfig::paper_cluster());
+        prog
+    }
+
+    #[test]
+    fn explain_matches_figure1_shape() {
+        let prog = compiled();
+        let text = explain_hops(&prog, &SystemConfig::default(), &ClusterConfig::paper_cluster());
+        // Header lines
+        assert!(text.contains("# Memory Budget local/remote = 1434MB/1434MB"));
+        assert!(text.contains("# Degree of Parallelism (vcores) local/remote = 24/144/72"));
+        // Program structure
+        assert!(text.contains("PROGRAM\n--MAIN PROGRAM"));
+        assert!(text.contains("GENERIC (lines 1-3) [recompile=false]"));
+        assert!(text.contains("GENERIC (lines 8-12) [recompile=false]"));
+        // Key hops with sizes and exec types
+        assert!(text.contains("PRead X [1e4,1e3,1e3,1e3,1e7] [76MB] CP"), "{text}");
+        assert!(text.contains("r(t)"));
+        assert!(text.contains("ba(+*)"));
+        assert!(text.contains("b(solve)"));
+        assert!(text.contains("dg(rand)"));
+        assert!(text.contains("r(diag)"));
+        assert!(text.contains("PWrite beta"));
+    }
+
+    #[test]
+    fn explain_references_use_printed_ids() {
+        let prog = compiled();
+        let text = explain_hops(&prog, &SystemConfig::default(), &ClusterConfig::paper_cluster());
+        // the transpose must be referenced by both matmults: its printed id
+        // appears at least three times (definition + two refs)
+        let t_line = text.lines().find(|l| l.contains("r(t)")).unwrap();
+        let t_id: String =
+            t_line.trim_start_matches('-').chars().skip(1).take_while(|c| *c != ')').collect();
+        let refs = text.matches(&format!("({t_id})")).count()
+            + text.matches(&format!("({t_id},")).count()
+            + text.matches(&format!(",{t_id})")).count();
+        assert!(refs >= 3, "transpose not shared: {refs}\n{text}");
+    }
+}

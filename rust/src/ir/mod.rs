@@ -1,0 +1,645 @@
+//! High-level operator (HOP) intermediate representation.
+//!
+//! A DML script compiles into a [`Program`]: a hierarchy of program blocks
+//! ([`Block`]) where straight-line statement sequences form *generic* blocks
+//! holding one HOP DAG each, and control-flow constructs (if/for/while/
+//! parfor/function call) nest child blocks — exactly the structure SystemML's
+//! `EXPLAIN hops` prints (paper Figure 1). Variables crossing block
+//! boundaries materialise as transient reads/writes (`TRead`/`TWrite`).
+
+pub mod build;
+pub mod exec_type;
+pub mod explain;
+pub mod memory;
+pub mod rewrites;
+pub mod size_prop;
+
+use std::collections::BTreeMap;
+
+use crate::matrix::{Format, MatrixCharacteristics};
+
+/// HOP identifier: index into the owning [`HopDag`] arena.
+pub type HopId = usize;
+
+/// Scalar value types.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ValueType {
+    Int,
+    Double,
+    Bool,
+    Str,
+}
+
+/// Literal scalar values.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Lit {
+    Int(i64),
+    Double(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Lit {
+    pub fn vtype(&self) -> ValueType {
+        match self {
+            Lit::Int(_) => ValueType::Int,
+            Lit::Double(_) => ValueType::Double,
+            Lit::Bool(_) => ValueType::Bool,
+            Lit::Str(_) => ValueType::Str,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Lit::Int(v) => Some(*v as f64),
+            Lit::Double(v) => Some(*v),
+            Lit::Bool(b) => Some(if *b { 1.0 } else { 0.0 }),
+            Lit::Str(_) => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Lit::Bool(b) => Some(*b),
+            Lit::Int(v) => Some(*v != 0),
+            Lit::Double(v) => Some(*v != 0.0),
+            Lit::Str(_) => None,
+        }
+    }
+
+    pub fn render(&self) -> String {
+        match self {
+            Lit::Int(v) => v.to_string(),
+            Lit::Double(v) => {
+                if v.fract() == 0.0 && v.abs() < 1e15 {
+                    format!("{v:.1}")
+                } else {
+                    format!("{v}")
+                }
+            }
+            Lit::Bool(b) => if *b { "true" } else { "false" }.to_string(),
+            Lit::Str(s) => s.clone(),
+        }
+    }
+}
+
+/// Data type of a HOP's output.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataType {
+    Matrix,
+    Scalar(ValueType),
+}
+
+impl DataType {
+    pub fn is_matrix(&self) -> bool {
+        matches!(self, DataType::Matrix)
+    }
+}
+
+/// Execution type chosen for a HOP (paper §2: CP = single-node in-memory
+/// control program, MR = distributed MapReduce).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ExecType {
+    Cp,
+    Mr,
+}
+
+impl ExecType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecType::Cp => "CP",
+            ExecType::Mr => "MR",
+        }
+    }
+}
+
+/// Reorganisation ops (`r(...)` in EXPLAIN).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReorgOp {
+    Transpose, // r(t)
+    Diag,      // r(diag)
+}
+
+/// Elementwise / scalar binary ops (`b(...)`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Pow,
+    Min,
+    Max,
+    Solve,
+    Lt,
+    Gt,
+    Le,
+    Ge,
+    Eq,
+    Ne,
+    And,
+    Or,
+    Mod,
+    IntDiv,
+}
+
+impl BinOp {
+    pub fn code(&self) -> &'static str {
+        match self {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+            BinOp::Pow => "^",
+            BinOp::Min => "min",
+            BinOp::Max => "max",
+            BinOp::Solve => "solve",
+            BinOp::Lt => "<",
+            BinOp::Gt => ">",
+            BinOp::Le => "<=",
+            BinOp::Ge => ">=",
+            BinOp::Eq => "==",
+            BinOp::Ne => "!=",
+            BinOp::And => "&&",
+            BinOp::Or => "||",
+            BinOp::Mod => "%%",
+            BinOp::IntDiv => "%/%",
+        }
+    }
+
+    /// Apply to two scalar literals (constant folding).
+    pub fn fold(&self, a: &Lit, b: &Lit) -> Option<Lit> {
+        use BinOp::*;
+        let (x, y) = (a.as_f64()?, b.as_f64()?);
+        let num = |v: f64| {
+            if matches!((a, b), (Lit::Int(_), Lit::Int(_)))
+                && v.fract() == 0.0
+                && !matches!(self, Div | Pow)
+            {
+                Lit::Int(v as i64)
+            } else {
+                Lit::Double(v)
+            }
+        };
+        Some(match self {
+            Add => num(x + y),
+            Sub => num(x - y),
+            Mul => num(x * y),
+            Div => Lit::Double(x / y),
+            Pow => Lit::Double(x.powf(y)),
+            Min => num(x.min(y)),
+            Max => num(x.max(y)),
+            Mod => num(x - (x / y).floor() * y),
+            IntDiv => num((x / y).floor()),
+            Lt => Lit::Bool(x < y),
+            Gt => Lit::Bool(x > y),
+            Le => Lit::Bool(x <= y),
+            Ge => Lit::Bool(x >= y),
+            Eq => Lit::Bool(x == y),
+            Ne => Lit::Bool(x != y),
+            And => Lit::Bool(x != 0.0 && y != 0.0),
+            Or => Lit::Bool(x != 0.0 || y != 0.0),
+            Solve => return None,
+        })
+    }
+}
+
+/// Unary ops (`u(...)`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnOp {
+    Nrow,
+    Ncol,
+    Length,
+    Sqrt,
+    Abs,
+    Exp,
+    Log,
+    Round,
+    Floor,
+    Ceil,
+    Sign,
+    Not,
+    Neg,
+    CastScalar, // as.scalar
+    CastMatrix, // as.matrix
+}
+
+impl UnOp {
+    pub fn code(&self) -> &'static str {
+        match self {
+            UnOp::Nrow => "nrow",
+            UnOp::Ncol => "ncol",
+            UnOp::Length => "length",
+            UnOp::Sqrt => "sqrt",
+            UnOp::Abs => "abs",
+            UnOp::Exp => "exp",
+            UnOp::Log => "log",
+            UnOp::Round => "round",
+            UnOp::Floor => "floor",
+            UnOp::Ceil => "ceil",
+            UnOp::Sign => "sign",
+            UnOp::Not => "!",
+            UnOp::Neg => "-",
+            UnOp::CastScalar => "castdts",
+            UnOp::CastMatrix => "castdtm",
+        }
+    }
+
+    pub fn fold(&self, a: &Lit) -> Option<Lit> {
+        let x = a.as_f64()?;
+        Some(match self {
+            UnOp::Sqrt => Lit::Double(x.sqrt()),
+            UnOp::Abs => Lit::Double(x.abs()),
+            UnOp::Exp => Lit::Double(x.exp()),
+            UnOp::Log => Lit::Double(x.ln()),
+            UnOp::Round => Lit::Double(x.round()),
+            UnOp::Floor => Lit::Double(x.floor()),
+            UnOp::Ceil => Lit::Double(x.ceil()),
+            UnOp::Sign => Lit::Double(x.signum()),
+            UnOp::Not => Lit::Bool(x == 0.0),
+            UnOp::Neg => match a {
+                Lit::Int(v) => Lit::Int(-v),
+                _ => Lit::Double(-x),
+            },
+            _ => return None,
+        })
+    }
+}
+
+/// Full/row/column aggregation ops (`ua(...)`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggOp {
+    Sum,
+    Mean,
+    Min,
+    Max,
+    Trace,
+    Nnz,
+}
+
+/// Aggregation direction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggDir {
+    All, // RC -> scalar
+    Row, // R  -> column vector of row aggregates? (SystemML: uark+ -> m x 1)
+    Col, // C  -> 1 x n
+}
+
+/// Data-generating ops (`dg(...)`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataGenOp {
+    /// rand(rows, cols, min, max, sparsity, seed); `matrix(v, r, c)` is
+    /// Rand with min == max == v (SystemML does the same — Figure 2 shows
+    /// `rand ... 0.0010 0.0010 1.0` for `matrix(lambda, ncol(X), 1)`).
+    Rand { min: f64, max: f64, sparsity: f64, seed: i64 },
+    /// seq(from, to, by)
+    Seq { from: f64, to: f64, by: f64 },
+}
+
+/// HOP operation kinds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HopKind {
+    /// Persistent read from (simulated) HDFS.
+    PRead { name: String, path: String, format: Format },
+    /// Persistent write; `path` may come from a `$N` argument.
+    PWrite { name: String, path: String, format: Format },
+    /// Transient read of a live variable.
+    TRead { name: String },
+    /// Transient write of a live variable (a DAG root).
+    TWrite { name: String },
+    /// Scalar literal.
+    Literal(Lit),
+    /// Data generation: inputs are [rows, cols] scalar HOPs.
+    DataGen(DataGenOp),
+    /// Reorganisation: transpose / diag.
+    Reorg(ReorgOp),
+    /// Matrix multiplication `ba(+*)`.
+    MatMult,
+    /// Elementwise or matrix-scalar binary op / solve.
+    Binary(BinOp),
+    /// Unary op (matrix elementwise or scalar meta like nrow).
+    Unary(UnOp),
+    /// Unary aggregate, e.g. `ua(+RC)` = sum.
+    AggUnary(AggOp, AggDir),
+    /// Horizontal append (cbind).
+    Append,
+    /// Print (root).
+    Print,
+}
+
+impl HopKind {
+    /// EXPLAIN operator name, matching SystemML (paper Figure 1).
+    pub fn opcode(&self) -> String {
+        match self {
+            HopKind::PRead { name, .. } => format!("PRead {name}"),
+            HopKind::PWrite { name, .. } => format!("PWrite {name}"),
+            HopKind::TRead { name } => format!("TRead {name}"),
+            HopKind::TWrite { name } => format!("TWrite {name}"),
+            HopKind::Literal(l) => format!("lit({})", l.render()),
+            HopKind::DataGen(DataGenOp::Rand { .. }) => "dg(rand)".into(),
+            HopKind::DataGen(DataGenOp::Seq { .. }) => "dg(seq)".into(),
+            HopKind::Reorg(ReorgOp::Transpose) => "r(t)".into(),
+            HopKind::Reorg(ReorgOp::Diag) => "r(diag)".into(),
+            HopKind::MatMult => "ba(+*)".into(),
+            HopKind::Binary(op) => format!("b({})", op.code()),
+            HopKind::Unary(op) => format!("u({})", op.code()),
+            HopKind::AggUnary(op, dir) => {
+                let o = match op {
+                    AggOp::Sum => "+",
+                    AggOp::Mean => "mean",
+                    AggOp::Min => "min",
+                    AggOp::Max => "max",
+                    AggOp::Trace => "trace",
+                    AggOp::Nnz => "nnz",
+                };
+                let d = match dir {
+                    AggDir::All => "RC",
+                    AggDir::Row => "R",
+                    AggDir::Col => "C",
+                };
+                format!("ua({o}{d})")
+            }
+            HopKind::Append => "append".into(),
+            HopKind::Print => "u(print)".into(),
+        }
+    }
+}
+
+/// One high-level operator.
+#[derive(Clone, Debug)]
+pub struct Hop {
+    pub id: HopId,
+    pub kind: HopKind,
+    pub inputs: Vec<HopId>,
+    pub dtype: DataType,
+    /// Output size information (rows, cols, blocking, nnz).
+    pub mc: MatrixCharacteristics,
+    /// Output memory estimate `M̂` in bytes.
+    pub out_mem: f64,
+    /// Operation memory estimate (inputs + intermediates + output).
+    pub op_mem: f64,
+    /// Selected execution type (None before selection).
+    pub exec: Option<ExecType>,
+}
+
+impl Hop {
+    pub fn is_literal(&self) -> bool {
+        matches!(self.kind, HopKind::Literal(_))
+    }
+
+    pub fn literal(&self) -> Option<&Lit> {
+        match &self.kind {
+            HopKind::Literal(l) => Some(l),
+            _ => None,
+        }
+    }
+}
+
+/// A HOP DAG stored as an arena; `roots` are outputs in program order
+/// (TWrite/PWrite/Print hops).
+#[derive(Clone, Debug, Default)]
+pub struct HopDag {
+    pub hops: Vec<Hop>,
+    pub roots: Vec<HopId>,
+}
+
+impl HopDag {
+    pub fn add(&mut self, kind: HopKind, inputs: Vec<HopId>, dtype: DataType) -> HopId {
+        let id = self.hops.len();
+        self.hops.push(Hop {
+            id,
+            kind,
+            inputs,
+            dtype,
+            mc: MatrixCharacteristics::unknown(),
+            out_mem: f64::INFINITY,
+            op_mem: f64::INFINITY,
+            exec: None,
+        });
+        id
+    }
+
+    pub fn hop(&self, id: HopId) -> &Hop {
+        &self.hops[id]
+    }
+
+    pub fn hop_mut(&mut self, id: HopId) -> &mut Hop {
+        &mut self.hops[id]
+    }
+
+    /// Topological order over live hops (those reachable from roots),
+    /// children before parents.
+    pub fn topo_order(&self) -> Vec<HopId> {
+        let mut visited = vec![false; self.hops.len()];
+        let mut order = Vec::with_capacity(self.hops.len());
+        // Iterative DFS to avoid recursion limits on deep DAGs.
+        for &root in &self.roots {
+            if visited[root] {
+                continue;
+            }
+            let mut stack = vec![(root, 0usize)];
+            visited[root] = true;
+            while let Some((id, child_idx)) = stack.pop() {
+                let inputs = &self.hops[id].inputs;
+                if child_idx < inputs.len() {
+                    stack.push((id, child_idx + 1));
+                    let c = inputs[child_idx];
+                    if !visited[c] {
+                        visited[c] = true;
+                        stack.push((c, 0));
+                    }
+                } else {
+                    order.push(id);
+                }
+            }
+        }
+        order
+    }
+
+    /// Number of live (reachable) hops.
+    pub fn live_count(&self) -> usize {
+        self.topo_order().len()
+    }
+}
+
+/// A generic (straight-line) program block holding one HOP DAG.
+#[derive(Clone, Debug)]
+pub struct GenericBlock {
+    pub dag: HopDag,
+    pub lines: (usize, usize),
+    /// Dynamic-recompilation marker, printed by EXPLAIN.
+    pub recompile: bool,
+}
+
+/// Program blocks (§3.2: "hierarchy of program blocks and instructions").
+#[derive(Clone, Debug)]
+pub enum Block {
+    Generic(GenericBlock),
+    If {
+        pred: HopDag,
+        then_blocks: Vec<Block>,
+        else_blocks: Vec<Block>,
+        lines: (usize, usize),
+    },
+    For {
+        var: String,
+        from: HopDag,
+        to: HopDag,
+        by: Option<HopDag>,
+        body: Vec<Block>,
+        parfor: bool,
+        /// Trip count when statically known.
+        known_trip: Option<f64>,
+        lines: (usize, usize),
+    },
+    While {
+        pred: HopDag,
+        body: Vec<Block>,
+        lines: (usize, usize),
+    },
+    /// Call to a user-defined function: binds `args` (live variable names)
+    /// to formals, executes the function body, binds outputs back.
+    FCall {
+        fname: String,
+        args: Vec<String>,
+        outputs: Vec<String>,
+        lines: (usize, usize),
+    },
+}
+
+impl Block {
+    pub fn lines(&self) -> (usize, usize) {
+        match self {
+            Block::Generic(g) => g.lines,
+            Block::If { lines, .. }
+            | Block::For { lines, .. }
+            | Block::While { lines, .. }
+            | Block::FCall { lines, .. } => *lines,
+        }
+    }
+}
+
+/// A user-defined function.
+#[derive(Clone, Debug)]
+pub struct Function {
+    pub params: Vec<String>,
+    /// Declared parameter kinds: `Some(true)` matrix, `Some(false)` scalar.
+    pub param_kinds: Vec<Option<bool>>,
+    pub outputs: Vec<String>,
+    pub body: Vec<Block>,
+}
+
+/// A compiled program: main block list plus function definitions.
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    pub blocks: Vec<Block>,
+    pub funcs: BTreeMap<String, Function>,
+}
+
+impl Program {
+    /// Visit every HOP DAG in the program (main + functions), in order.
+    pub fn for_each_dag_mut(&mut self, f: &mut impl FnMut(&mut HopDag)) {
+        fn walk(blocks: &mut [Block], f: &mut impl FnMut(&mut HopDag)) {
+            for b in blocks {
+                match b {
+                    Block::Generic(g) => f(&mut g.dag),
+                    Block::If { pred, then_blocks, else_blocks, .. } => {
+                        f(pred);
+                        walk(then_blocks, f);
+                        walk(else_blocks, f);
+                    }
+                    Block::For { from, to, by, body, .. } => {
+                        f(from);
+                        f(to);
+                        if let Some(by) = by {
+                            f(by);
+                        }
+                        walk(body, f);
+                    }
+                    Block::While { pred, body, .. } => {
+                        f(pred);
+                        walk(body, f);
+                    }
+                    Block::FCall { .. } => {}
+                }
+            }
+        }
+        walk(&mut self.blocks, f);
+        for func in self.funcs.values_mut() {
+            walk(&mut func.body, f);
+        }
+    }
+
+    /// Total number of live hops across all DAGs (compile statistics).
+    pub fn total_hops(&self) -> usize {
+        let mut n = 0;
+        let mut me = self.clone();
+        me.for_each_dag_mut(&mut |d| n += d.live_count());
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dag_topo_order_children_first() {
+        let mut dag = HopDag::default();
+        let x = dag.add(HopKind::TRead { name: "X".into() }, vec![], DataType::Matrix);
+        let t = dag.add(HopKind::Reorg(ReorgOp::Transpose), vec![x], DataType::Matrix);
+        let m = dag.add(HopKind::MatMult, vec![t, x], DataType::Matrix);
+        let w = dag.add(HopKind::TWrite { name: "A".into() }, vec![m], DataType::Matrix);
+        dag.roots.push(w);
+        let order = dag.topo_order();
+        let pos = |id| order.iter().position(|&h| h == id).unwrap();
+        assert!(pos(x) < pos(t));
+        assert!(pos(t) < pos(m));
+        assert!(pos(m) < pos(w));
+        assert_eq!(order.len(), 4);
+    }
+
+    #[test]
+    fn dead_hops_not_in_topo() {
+        let mut dag = HopDag::default();
+        let _dead = dag.add(HopKind::Literal(Lit::Int(1)), vec![], DataType::Scalar(ValueType::Int));
+        let live = dag.add(HopKind::Literal(Lit::Int(2)), vec![], DataType::Scalar(ValueType::Int));
+        let w = dag.add(HopKind::TWrite { name: "x".into() }, vec![live], DataType::Scalar(ValueType::Int));
+        dag.roots.push(w);
+        assert_eq!(dag.live_count(), 2);
+    }
+
+    #[test]
+    fn binop_fold_arith_and_compare() {
+        assert_eq!(BinOp::Add.fold(&Lit::Int(2), &Lit::Int(3)), Some(Lit::Int(5)));
+        assert_eq!(BinOp::Mul.fold(&Lit::Double(2.5), &Lit::Int(2)), Some(Lit::Double(5.0)));
+        assert_eq!(BinOp::Eq.fold(&Lit::Int(0), &Lit::Int(1)), Some(Lit::Bool(false)));
+        assert_eq!(BinOp::Div.fold(&Lit::Int(1), &Lit::Int(2)), Some(Lit::Double(0.5)));
+        assert_eq!(BinOp::Solve.fold(&Lit::Int(1), &Lit::Int(2)), None);
+    }
+
+    #[test]
+    fn opcodes_match_systemml_explain() {
+        assert_eq!(HopKind::MatMult.opcode(), "ba(+*)");
+        assert_eq!(HopKind::Reorg(ReorgOp::Transpose).opcode(), "r(t)");
+        assert_eq!(HopKind::Reorg(ReorgOp::Diag).opcode(), "r(diag)");
+        assert_eq!(HopKind::Binary(BinOp::Solve).opcode(), "b(solve)");
+        assert_eq!(
+            HopKind::DataGen(DataGenOp::Rand { min: 0.0, max: 0.0, sparsity: 1.0, seed: -1 })
+                .opcode(),
+            "dg(rand)"
+        );
+        assert_eq!(HopKind::AggUnary(AggOp::Sum, AggDir::All).opcode(), "ua(+RC)");
+        assert_eq!(HopKind::Unary(UnOp::Ncol).opcode(), "u(ncol)");
+    }
+
+    #[test]
+    fn lit_conversions() {
+        assert_eq!(Lit::Int(3).as_f64(), Some(3.0));
+        assert_eq!(Lit::Bool(true).as_bool(), Some(true));
+        assert_eq!(Lit::Double(0.0).as_bool(), Some(false));
+        assert_eq!(Lit::Str("x".into()).as_f64(), None);
+        assert_eq!(Lit::Double(0.001).render(), "0.001");
+        assert_eq!(Lit::Double(2.0).render(), "2.0");
+    }
+}

@@ -1,0 +1,740 @@
+//! Static HOP rewrites (paper §2, Figure 1 discussion):
+//!
+//! 1. **Constant folding + inter-block constant propagation** — `intercept
+//!    == 1` with `intercept = $3 = 0` folds to `FALSE`.
+//! 2. **Branch removal** — constant-predicate `if` blocks are spliced away
+//!    (the paper's lines 4–7 disappear from the XS plan).
+//! 3. **Dead transient-write elimination** — TWrites of variables never
+//!    read later are dropped (Figure 1's second block has no TWrites).
+//! 4. **Algebraic simplification** — e.g. `diag(matrix(1,…))*λ →
+//!    diag(matrix(λ,…))`, `t(t(X)) → X`, `X*1 → X`, "which prevents one
+//!    unnecessary intermediate".
+//! 5. **Common subexpression elimination** — `t(X)` is computed once and
+//!    shared by both matrix multiplications (HOP 52 in Figure 1).
+
+use std::collections::{HashMap, HashSet};
+
+use super::*;
+
+/// Run the full static rewrite pipeline.
+pub fn rewrite_program(prog: &mut Program) {
+    // Constant propagation and branch removal interact; iterate to fixpoint
+    // (bounded — each removal strictly shrinks the block tree).
+    for _ in 0..8 {
+        let mut consts = HashMap::new();
+        const_propagate(&mut prog.blocks, &mut consts, &prog.funcs.clone());
+        if !remove_branches(&mut prog.blocks) {
+            break;
+        }
+    }
+    remove_dead_twrites(prog);
+    prog.for_each_dag_mut(&mut |dag| {
+        algebraic_dag(dag);
+        fold_dag(dag, &HashMap::new());
+        cse_dag(dag);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Constant folding + propagation
+// ---------------------------------------------------------------------
+
+type ConstTab = HashMap<String, Lit>;
+
+/// Fold scalar expressions inside each DAG and propagate scalar literals
+/// across blocks (forward). Conservative at loops and branches.
+fn const_propagate(
+    blocks: &mut [Block],
+    consts: &mut ConstTab,
+    funcs: &std::collections::BTreeMap<String, Function>,
+) {
+    for b in blocks {
+        match b {
+            Block::Generic(g) => {
+                fold_dag(&mut g.dag, consts);
+                // harvest TWrite literals / invalidate reassigned vars
+                for &root in &g.dag.roots.clone() {
+                    if let HopKind::TWrite { name } = &g.dag.hop(root).kind.clone() {
+                        let input = g.dag.hop(root).inputs[0];
+                        match g.dag.hop(input).literal() {
+                            Some(l) => {
+                                consts.insert(name.clone(), l.clone());
+                            }
+                            None => {
+                                consts.remove(name);
+                            }
+                        }
+                    }
+                }
+            }
+            Block::If { pred, then_blocks, else_blocks, .. } => {
+                fold_dag(pred, consts);
+                let mut t_tab = consts.clone();
+                const_propagate(then_blocks, &mut t_tab, funcs);
+                let mut e_tab = consts.clone();
+                const_propagate(else_blocks, &mut e_tab, funcs);
+                // intersection of agreeing constants
+                consts.retain(|k, v| t_tab.get(k) == Some(v) && e_tab.get(k) == Some(v));
+                for (k, v) in &t_tab {
+                    if e_tab.get(k) == Some(v) {
+                        consts.entry(k.clone()).or_insert_with(|| v.clone());
+                    }
+                }
+            }
+            Block::For { from, to, by, body, var, .. } => {
+                fold_dag(from, consts);
+                fold_dag(to, consts);
+                if let Some(by) = by {
+                    fold_dag(by, consts);
+                }
+                // vars assigned in the body (plus the loop var) are not
+                // constant inside/after it
+                let mut assigned = HashSet::new();
+                collect_assigned(body, &mut assigned);
+                assigned.insert(var.clone());
+                for v in &assigned {
+                    consts.remove(v);
+                }
+                const_propagate(body, &mut consts.clone(), funcs);
+                for v in &assigned {
+                    consts.remove(v);
+                }
+            }
+            Block::While { pred, body, .. } => {
+                let mut assigned = HashSet::new();
+                collect_assigned(body, &mut assigned);
+                for v in &assigned {
+                    consts.remove(v);
+                }
+                fold_dag(pred, consts);
+                const_propagate(body, &mut consts.clone(), funcs);
+                for v in &assigned {
+                    consts.remove(v);
+                }
+            }
+            Block::FCall { outputs, .. } => {
+                for o in outputs {
+                    consts.remove(o);
+                }
+            }
+        }
+    }
+}
+
+fn collect_assigned(blocks: &[Block], out: &mut HashSet<String>) {
+    for b in blocks {
+        match b {
+            Block::Generic(g) => {
+                for &r in &g.dag.roots {
+                    if let HopKind::TWrite { name } = &g.dag.hop(r).kind {
+                        out.insert(name.clone());
+                    }
+                }
+            }
+            Block::If { then_blocks, else_blocks, .. } => {
+                collect_assigned(then_blocks, out);
+                collect_assigned(else_blocks, out);
+            }
+            Block::For { body, var, .. } => {
+                out.insert(var.clone());
+                collect_assigned(body, out);
+            }
+            Block::While { body, .. } => collect_assigned(body, out),
+            Block::FCall { outputs, .. } => out.extend(outputs.iter().cloned()),
+        }
+    }
+}
+
+/// Fold scalar constants within one DAG; `consts` supplies known literal
+/// values for transient reads.
+pub fn fold_dag(dag: &mut HopDag, consts: &ConstTab) {
+    for id in dag.topo_order() {
+        let hop = dag.hop(id).clone();
+        // Note: folding keys off *literal inputs*, not the recorded dtype —
+        // TReads of scalars are built with a provisional Matrix dtype, and a
+        // binary over two scalar literals is necessarily scalar.
+        let folded: Option<Lit> = match &hop.kind {
+            HopKind::TRead { name } => consts.get(name).cloned(),
+            HopKind::Unary(op) if !matches!(op, UnOp::CastMatrix) => {
+                dag.hop(hop.inputs[0]).literal().and_then(|l| op.fold(l))
+            }
+            HopKind::Binary(op) => {
+                match (dag.hop(hop.inputs[0]).literal(), dag.hop(hop.inputs[1]).literal()) {
+                    (Some(a), Some(b)) => op.fold(a, b),
+                    _ => None,
+                }
+            }
+            _ => None,
+        };
+        if let Some(l) = folded {
+            let h = dag.hop_mut(id);
+            h.dtype = DataType::Scalar(l.vtype());
+            h.kind = HopKind::Literal(l);
+            h.inputs.clear();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Branch removal
+// ---------------------------------------------------------------------
+
+/// Splice away `if` blocks whose predicate folded to a literal. Returns
+/// true if anything changed.
+fn remove_branches(blocks: &mut Vec<Block>) -> bool {
+    let mut changed = false;
+    let mut i = 0;
+    while i < blocks.len() {
+        // recurse first
+        match &mut blocks[i] {
+            Block::If { then_blocks, else_blocks, .. } => {
+                changed |= remove_branches(then_blocks);
+                changed |= remove_branches(else_blocks);
+            }
+            Block::For { body, .. } | Block::While { body, .. } => {
+                changed |= remove_branches(body);
+            }
+            _ => {}
+        }
+        let take = match &blocks[i] {
+            Block::If { pred, .. } => {
+                let root = pred.roots.first().copied();
+                root.and_then(|r| pred.hop(r).literal()).and_then(|l| l.as_bool())
+            }
+            _ => None,
+        };
+        if let Some(cond) = take {
+            let Block::If { then_blocks, else_blocks, .. } = blocks.remove(i) else {
+                unreachable!()
+            };
+            let taken = if cond { then_blocks } else { else_blocks };
+            let n = taken.len();
+            for (k, tb) in taken.into_iter().enumerate() {
+                blocks.insert(i + k, tb);
+            }
+            i += n;
+            changed = true;
+        } else {
+            i += 1;
+        }
+    }
+    changed
+}
+
+// ---------------------------------------------------------------------
+// Dead transient-write elimination (backward liveness)
+// ---------------------------------------------------------------------
+
+/// Remove TWrite roots for variables never read afterwards. Matches
+/// SystemML's liveness pass: Figure 1's second GENERIC block carries no
+/// TWrites because I, A, b, beta are not read by later blocks.
+fn remove_dead_twrites(prog: &mut Program) {
+    let funcs = prog.funcs.clone();
+    let mut live: HashSet<String> = HashSet::new();
+    liveness_blocks(&mut prog.blocks, &mut live, &funcs);
+    for (name, f) in funcs.clone() {
+        // function outputs are live at function end
+        let mut live: HashSet<String> = f.outputs.iter().cloned().collect();
+        if let Some(func_mut) = prog.funcs.get_mut(&name) {
+            liveness_blocks(&mut func_mut.body, &mut live, &funcs);
+        }
+    }
+}
+
+/// Backward pass; `live` is the live-out set, updated to live-in.
+fn liveness_blocks(
+    blocks: &mut [Block],
+    live: &mut HashSet<String>,
+    funcs: &std::collections::BTreeMap<String, Function>,
+) {
+    for b in blocks.iter_mut().rev() {
+        match b {
+            Block::Generic(g) => {
+                // Drop dead TWrites — except scalar literals: SystemML keeps
+                // those as cheap assignvars (Figure 1 shows TWrite intercept
+                // and TWrite lambda although constant propagation removed
+                // their readers).
+                let dead: Vec<HopId> = g
+                    .dag
+                    .roots
+                    .iter()
+                    .copied()
+                    .filter(|&r| match &g.dag.hop(r).kind {
+                        HopKind::TWrite { name } => {
+                            !live.contains(name)
+                                && !g.dag.hop(g.dag.hop(r).inputs[0]).is_literal()
+                        }
+                        _ => false,
+                    })
+                    .collect();
+                g.dag.roots.retain(|r| !dead.contains(r));
+                // update liveness: writes kill, reads gen
+                for &r in &g.dag.roots {
+                    if let HopKind::TWrite { name } = &g.dag.hop(r).kind {
+                        live.remove(name);
+                    }
+                }
+                for id in g.dag.topo_order() {
+                    if let HopKind::TRead { name } = &g.dag.hop(id).kind {
+                        live.insert(name.clone());
+                    }
+                }
+            }
+            Block::If { pred, then_blocks, else_blocks, .. } => {
+                let mut t_live = live.clone();
+                liveness_blocks(then_blocks, &mut t_live, funcs);
+                let mut e_live = live.clone();
+                liveness_blocks(else_blocks, &mut e_live, funcs);
+                *live = t_live.union(&e_live).cloned().collect();
+                add_dag_reads(pred, live);
+            }
+            Block::For { from, to, by, body, var, .. } => {
+                // anything read anywhere in the body is live at body end
+                // (next iteration); run liveness with that conservative set
+                let mut body_reads = HashSet::new();
+                collect_reads(body, &mut body_reads);
+                let mut inner: HashSet<String> =
+                    live.union(&body_reads).cloned().collect();
+                liveness_blocks(body, &mut inner, funcs);
+                *live = live.union(&inner).cloned().collect();
+                live.remove(var);
+                add_dag_reads(from, live);
+                add_dag_reads(to, live);
+                if let Some(by) = by {
+                    add_dag_reads(by, live);
+                }
+            }
+            Block::While { pred, body, .. } => {
+                let mut body_reads = HashSet::new();
+                collect_reads(body, &mut body_reads);
+                add_dag_reads(pred, &mut body_reads);
+                let mut inner: HashSet<String> = live.union(&body_reads).cloned().collect();
+                liveness_blocks(body, &mut inner, funcs);
+                *live = live.union(&inner).cloned().collect();
+                add_dag_reads(pred, live);
+            }
+            Block::FCall { args, outputs, .. } => {
+                for o in outputs.iter() {
+                    live.remove(o);
+                }
+                live.extend(args.iter().cloned());
+            }
+        }
+    }
+}
+
+fn add_dag_reads(dag: &HopDag, live: &mut HashSet<String>) {
+    for id in dag.topo_order() {
+        if let HopKind::TRead { name } = &dag.hop(id).kind {
+            live.insert(name.clone());
+        }
+    }
+}
+
+fn collect_reads(blocks: &[Block], out: &mut HashSet<String>) {
+    for b in blocks {
+        match b {
+            Block::Generic(g) => add_dag_reads(&g.dag, out),
+            Block::If { pred, then_blocks, else_blocks, .. } => {
+                add_dag_reads(pred, out);
+                collect_reads(then_blocks, out);
+                collect_reads(else_blocks, out);
+            }
+            Block::For { from, to, by, body, .. } => {
+                add_dag_reads(from, out);
+                add_dag_reads(to, out);
+                if let Some(by) = by {
+                    add_dag_reads(by, out);
+                }
+                collect_reads(body, out);
+            }
+            Block::While { pred, body, .. } => {
+                add_dag_reads(pred, out);
+                collect_reads(body, out);
+            }
+            Block::FCall { args, .. } => out.extend(args.iter().cloned()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Algebraic simplification
+// ---------------------------------------------------------------------
+
+/// Pattern-based algebraic rewrites within one DAG.
+pub fn algebraic_dag(dag: &mut HopDag) {
+    // Fixpoint over a few passes: each rewrite may expose another.
+    for _ in 0..4 {
+        let mut changed = false;
+        for id in dag.topo_order() {
+            changed |= rewrite_hop(dag, id);
+        }
+        if !changed {
+            break;
+        }
+    }
+}
+
+/// Returns true if the hop was rewritten (in place).
+fn rewrite_hop(dag: &mut HopDag, id: HopId) -> bool {
+    let hop = dag.hop(id).clone();
+    match &hop.kind {
+        // t(t(X)) -> X : replace this hop with a pass-through of X by
+        // rewiring parents. We instead rewrite this hop into an identity
+        // alias: not representable — so rewire by replacing *this* hop's
+        // kind/inputs with those of X's definition is wrong (shared). We
+        // handle it by searching parents below instead.
+        HopKind::Reorg(ReorgOp::Transpose) => {
+            let inner = dag.hop(hop.inputs[0]).clone();
+            if let HopKind::Reorg(ReorgOp::Transpose) = inner.kind {
+                // replace usages of `id` with inner's input
+                let target = inner.inputs[0];
+                replace_uses(dag, id, target);
+                return true;
+            }
+            false
+        }
+        HopKind::Binary(BinOp::Mul) => {
+            let (a, b) = (hop.inputs[0], hop.inputs[1]);
+            // X * 1 or 1 * X  ->  X
+            for (m, s) in [(a, b), (b, a)] {
+                if dag.hop(m).dtype.is_matrix() {
+                    if let Some(l) = dag.hop(s).literal() {
+                        if l.as_f64() == Some(1.0) {
+                            replace_uses(dag, id, m);
+                            return true;
+                        }
+                    }
+                }
+            }
+            // diag(rand_const c) * s  ->  diag(rand_const c*s)
+            // rand_const c * s        ->  rand_const c*s
+            for (m, s) in [(a, b), (b, a)] {
+                let Some(l) = dag.hop(s).literal() else { continue };
+                let Some(sv) = l.as_f64() else { continue };
+                // m = diag(dg) or dg
+                let (dg_id, via_diag) = match &dag.hop(m).kind {
+                    HopKind::Reorg(ReorgOp::Diag) => (dag.hop(m).inputs[0], true),
+                    HopKind::DataGen(_) => (m, false),
+                    _ => continue,
+                };
+                let HopKind::DataGen(DataGenOp::Rand { min, max, sparsity, seed }) =
+                    dag.hop(dg_id).kind.clone()
+                else {
+                    continue;
+                };
+                if min != max {
+                    continue; // only constant matrices are scaled safely
+                }
+                let rows_cols = dag.hop(dg_id).inputs.clone();
+                let new_dg = dag.add(
+                    HopKind::DataGen(DataGenOp::Rand {
+                        min: min * sv,
+                        max: max * sv,
+                        sparsity,
+                        seed,
+                    }),
+                    rows_cols,
+                    DataType::Matrix,
+                );
+                let replacement = if via_diag {
+                    dag.add(HopKind::Reorg(ReorgOp::Diag), vec![new_dg], DataType::Matrix)
+                } else {
+                    new_dg
+                };
+                replace_uses(dag, id, replacement);
+                return true;
+            }
+            false
+        }
+        HopKind::Binary(BinOp::Add) | HopKind::Binary(BinOp::Sub) => {
+            let (a, b) = (hop.inputs[0], hop.inputs[1]);
+            // X + 0 / X - 0 -> X ; 0 + X -> X
+            let candidates: &[(usize, usize)] =
+                if matches!(hop.kind, HopKind::Binary(BinOp::Add)) { &[(0, 1), (1, 0)] } else { &[(0, 1)] };
+            for &(mi, si) in candidates {
+                let (m, s) = (hop.inputs[mi], hop.inputs[si]);
+                let _ = (a, b);
+                if dag.hop(m).dtype.is_matrix() {
+                    if let Some(l) = dag.hop(s).literal() {
+                        if l.as_f64() == Some(0.0) {
+                            replace_uses(dag, id, m);
+                            return true;
+                        }
+                    }
+                }
+            }
+            false
+        }
+        HopKind::Binary(BinOp::Div) | HopKind::Binary(BinOp::Pow) => {
+            // X / 1 -> X ; X ^ 1 -> X
+            let (m, s) = (hop.inputs[0], hop.inputs[1]);
+            if dag.hop(m).dtype.is_matrix() {
+                if let Some(l) = dag.hop(s).literal() {
+                    if l.as_f64() == Some(1.0) {
+                        replace_uses(dag, id, m);
+                        return true;
+                    }
+                }
+            }
+            false
+        }
+        _ => false,
+    }
+}
+
+/// Rewire all uses of `old` (including roots) to `new`.
+fn replace_uses(dag: &mut HopDag, old: HopId, new: HopId) {
+    for h in dag.hops.iter_mut() {
+        for i in h.inputs.iter_mut() {
+            if *i == old {
+                *i = new;
+            }
+        }
+    }
+    for r in dag.roots.iter_mut() {
+        if *r == old {
+            *r = new;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Common subexpression elimination
+// ---------------------------------------------------------------------
+
+/// Merge structurally identical hops (same kind + same input ids). Roots
+/// (TWrite/PWrite/Print) and non-constant DataGen are never merged.
+pub fn cse_dag(dag: &mut HopDag) {
+    let mut canon: HashMap<String, HopId> = HashMap::new();
+    let mut remap: HashMap<HopId, HopId> = HashMap::new();
+    for id in dag.topo_order() {
+        let hop = dag.hop(id).clone();
+        // apply pending remaps to inputs first
+        let inputs: Vec<HopId> =
+            hop.inputs.iter().map(|i| *remap.get(i).unwrap_or(i)).collect();
+        dag.hop_mut(id).inputs = inputs.clone();
+        if !cse_eligible(&hop.kind) {
+            continue;
+        }
+        let key = format!("{:?}|{:?}", hop.kind, inputs);
+        match canon.get(&key) {
+            Some(&prev) => {
+                remap.insert(id, prev);
+            }
+            None => {
+                canon.insert(key, id);
+            }
+        }
+    }
+    if remap.is_empty() {
+        return;
+    }
+    for h in dag.hops.iter_mut() {
+        for i in h.inputs.iter_mut() {
+            if let Some(&n) = remap.get(i) {
+                *i = n;
+            }
+        }
+    }
+    for r in dag.roots.iter_mut() {
+        if let Some(&n) = remap.get(r) {
+            *r = n;
+        }
+    }
+}
+
+fn cse_eligible(kind: &HopKind) -> bool {
+    match kind {
+        HopKind::TWrite { .. } | HopKind::PWrite { .. } | HopKind::Print => false,
+        // rand with a true random range is not CSE-safe; constants are
+        HopKind::DataGen(DataGenOp::Rand { min, max, .. }) => min == max,
+        _ => true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dml;
+    use crate::ir::build::{build_program, tests::linreg_args, tests::xs_meta, tests::LINREG_DS};
+
+    fn compile(src: &str) -> Program {
+        let script = dml::frontend(src).unwrap();
+        let mut prog = build_program(&script, &linreg_args(), &xs_meta(), 1000).unwrap();
+        rewrite_program(&mut prog);
+        prog
+    }
+
+    #[test]
+    fn branch_removed_for_constant_predicate() {
+        // intercept = $3 = 0, so `if (intercept == 1)` disappears (Fig. 1).
+        let prog = compile(LINREG_DS);
+        assert_eq!(prog.blocks.len(), 2, "if block must be removed");
+        assert!(prog.blocks.iter().all(|b| matches!(b, Block::Generic(_))));
+        let Block::Generic(g2) = &prog.blocks[1] else { panic!() };
+        assert_eq!(g2.lines, (8, 12));
+    }
+
+    #[test]
+    fn branch_kept_when_predicate_unknown() {
+        let mut args = linreg_args();
+        args.insert(3, "1".to_string()); // intercept = 1: branch taken
+        let script = dml::frontend(LINREG_DS).unwrap();
+        let mut prog = build_program(&script, &args, &xs_meta(), 1000).unwrap();
+        rewrite_program(&mut prog);
+        // then-branch spliced in: 3 generic blocks (1-3, 5-6, 8-12)
+        assert_eq!(prog.blocks.len(), 3);
+        let Block::Generic(g) = &prog.blocks[1] else { panic!() };
+        assert!(g.dag.hops.iter().any(|h| h.kind == HopKind::Append));
+    }
+
+    #[test]
+    fn diag_lambda_rewrite_applied() {
+        // diag(matrix(1,...)) * 0.001 -> diag(matrix(0.001,...))
+        let prog = compile(LINREG_DS);
+        let Block::Generic(g) = &prog.blocks[1] else { panic!() };
+        let live = g.dag.topo_order();
+        let rands: Vec<_> = live
+            .iter()
+            .filter_map(|&id| match &g.dag.hop(id).kind {
+                HopKind::DataGen(DataGenOp::Rand { min, max, .. }) => Some((*min, *max)),
+                _ => None,
+            })
+            .collect();
+        assert!(
+            rands.contains(&(0.001, 0.001)),
+            "expected rand const 0.001, got {rands:?}"
+        );
+        // and no live b(*) with the lambda literal remains
+        let muls = live
+            .iter()
+            .filter(|&&id| g.dag.hop(id).kind == HopKind::Binary(BinOp::Mul))
+            .count();
+        assert_eq!(muls, 0, "scalar multiply should be folded into datagen");
+    }
+
+    #[test]
+    fn cse_shares_transpose() {
+        // t(X) used by both t(X)%*%X and t(X)%*%y must be a single hop.
+        let prog = compile(LINREG_DS);
+        let Block::Generic(g) = &prog.blocks[1] else { panic!() };
+        let live = g.dag.topo_order();
+        let transposes = live
+            .iter()
+            .filter(|&&id| g.dag.hop(id).kind == HopKind::Reorg(ReorgOp::Transpose))
+            .count();
+        assert_eq!(transposes, 1);
+    }
+
+    #[test]
+    fn dead_twrites_removed() {
+        // I, A, b, beta are never read later: block 2 has only PWrite root.
+        let prog = compile(LINREG_DS);
+        let Block::Generic(g) = &prog.blocks[1] else { panic!() };
+        let twrites = g
+            .dag
+            .roots
+            .iter()
+            .filter(|&&r| matches!(g.dag.hop(r).kind, HopKind::TWrite { .. }))
+            .count();
+        assert_eq!(twrites, 0);
+        // but block 1 keeps X and y TWrites (read by block 2)
+        let Block::Generic(g1) = &prog.blocks[0] else { panic!() };
+        let names: Vec<_> = g1
+            .dag
+            .roots
+            .iter()
+            .filter_map(|&r| match &g1.dag.hop(r).kind {
+                HopKind::TWrite { name } => Some(name.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert!(names.contains(&"X") && names.contains(&"y"));
+    }
+
+    #[test]
+    fn loop_live_variables_kept() {
+        let src = r#"
+s = 0;
+acc = 0;
+for (i in 1:10) {
+  acc = acc + s;
+  s = s + 1;
+}
+write(acc, $4);
+"#;
+        let prog = compile(src);
+        // s is read at loop top from previous iteration: its TWrite in the
+        // loop body must survive.
+        let Block::For { body, .. } =
+            prog.blocks.iter().find(|b| matches!(b, Block::For { .. })).unwrap()
+        else {
+            panic!()
+        };
+        let Block::Generic(g) = &body[0] else { panic!() };
+        let names: Vec<_> = g
+            .dag
+            .roots
+            .iter()
+            .filter_map(|&r| match &g.dag.hop(r).kind {
+                HopKind::TWrite { name } => Some(name.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert!(names.contains(&"s"), "{names:?}");
+        assert!(names.contains(&"acc"));
+    }
+
+    #[test]
+    fn transpose_of_transpose_eliminated() {
+        let prog = compile("X = read($1); Z = t(t(X)); s = sum(Z); write(s, $4);");
+        let mut transposes = 0;
+        for b in &prog.blocks {
+            if let Block::Generic(g) = b {
+                for id in g.dag.topo_order() {
+                    if g.dag.hop(id).kind == HopKind::Reorg(ReorgOp::Transpose) {
+                        transposes += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(transposes, 0);
+    }
+
+    #[test]
+    fn mul_by_one_eliminated() {
+        let prog = compile("X = read($1); Z = X * 1; s = sum(Z); write(s, $4);");
+        for b in &prog.blocks {
+            if let Block::Generic(g) = b {
+                for id in g.dag.topo_order() {
+                    assert_ne!(g.dag.hop(id).kind, HopKind::Binary(BinOp::Mul));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn constant_propagation_across_blocks() {
+        let src = r#"
+n = 5;
+c = 2;
+if (c == 2) { m = n + 1; } else { m = 0; }
+write(m, $4);
+"#;
+        let prog = compile(src);
+        // both the if and the arithmetic fold: the surviving write block
+        // stores literal 6
+        let mut found = false;
+        for b in &prog.blocks {
+            if let Block::Generic(g) = b {
+                for id in g.dag.topo_order() {
+                    if g.dag.hop(id).literal() == Some(&Lit::Int(6)) {
+                        found = true;
+                    }
+                }
+            }
+        }
+        assert!(found);
+    }
+}

@@ -1,0 +1,640 @@
+//! Inter-procedural size propagation (paper §2: "we propagated the input
+//! dimension sizes over the entire program"): computes output
+//! [`MatrixCharacteristics`] (dims, blocking, nnz) for every HOP, walking
+//! program blocks in execution order with a symbol table of live-variable
+//! statistics, handling loops (vars whose size changes across iterations
+//! are reset to unknown), branches (merge = keep only agreeing sizes), and
+//! function calls (with a call-stack guard against recursion).
+
+use std::collections::HashMap;
+
+use super::*;
+use crate::matrix::MatrixCharacteristics;
+
+/// Per-variable compile-time statistics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SymInfo {
+    pub mc: MatrixCharacteristics,
+    pub dtype: DataType,
+    /// Known literal value for scalars (drives `nrow(X)`-style folding and
+    /// branch removal).
+    pub lit: Option<Lit>,
+}
+
+impl SymInfo {
+    pub fn scalar(lit: Option<Lit>, vt: ValueType) -> Self {
+        SymInfo { mc: MatrixCharacteristics::scalar(), dtype: DataType::Scalar(vt), lit }
+    }
+
+    pub fn matrix(mc: MatrixCharacteristics) -> Self {
+        SymInfo { mc, dtype: DataType::Matrix, lit: None }
+    }
+}
+
+pub type SymTab = HashMap<String, SymInfo>;
+
+/// Propagate sizes over the whole program. Also resolves `known_trip` on
+/// for-loops whose bounds are literals.
+pub fn propagate(prog: &mut Program, blocksize: i64) {
+    let funcs = prog.funcs.clone();
+    let mut symtab = SymTab::new();
+    let mut stack = Vec::new();
+    propagate_blocks(&mut prog.blocks, &mut symtab, &funcs, blocksize, &mut stack);
+    // Also annotate the stored function bodies (the compiled-once runtime
+    // versions) using the declared parameter kinds: scalar params become
+    // scalar symbols, matrix/untyped params are unknown-size matrices
+    // (SystemML's conservative non-IPA function compilation).
+    for (name, func) in prog.funcs.iter_mut() {
+        let mut ft = SymTab::new();
+        for (i, p) in func.params.iter().enumerate() {
+            let info = match func.param_kinds.get(i).copied().flatten() {
+                Some(false) => SymInfo::scalar(None, ValueType::Double),
+                _ => SymInfo::matrix(MatrixCharacteristics::unknown()),
+            };
+            ft.insert(p.clone(), info);
+        }
+        let mut st = vec![name.clone()];
+        propagate_blocks(&mut func.body, &mut ft, &funcs, blocksize, &mut st);
+    }
+}
+
+fn propagate_blocks(
+    blocks: &mut [Block],
+    symtab: &mut SymTab,
+    funcs: &std::collections::BTreeMap<String, Function>,
+    blocksize: i64,
+    call_stack: &mut Vec<String>,
+) {
+    for b in blocks {
+        match b {
+            Block::Generic(g) => {
+                propagate_dag(&mut g.dag, symtab, blocksize);
+            }
+            Block::If { pred, then_blocks, else_blocks, .. } => {
+                propagate_dag(pred, symtab, blocksize);
+                let mut then_tab = symtab.clone();
+                propagate_blocks(then_blocks, &mut then_tab, funcs, blocksize, call_stack);
+                let mut else_tab = symtab.clone();
+                propagate_blocks(else_blocks, &mut else_tab, funcs, blocksize, call_stack);
+                *symtab = merge_tabs(&then_tab, &else_tab);
+            }
+            Block::For { from, to, by, body, known_trip, .. } => {
+                propagate_dag(from, symtab, blocksize);
+                propagate_dag(to, symtab, blocksize);
+                if let Some(by) = by {
+                    propagate_dag(by, symtab, blocksize);
+                }
+                *known_trip = trip_count(from, to, by.as_ref());
+                propagate_loop_body(body, symtab, funcs, blocksize, call_stack);
+            }
+            Block::While { pred, body, .. } => {
+                propagate_dag(pred, symtab, blocksize);
+                propagate_loop_body(body, symtab, funcs, blocksize, call_stack);
+            }
+            Block::FCall { fname, args, outputs, .. } => {
+                let Some(func) = funcs.get(fname) else { continue };
+                if call_stack.contains(fname) {
+                    // Recursive call: outputs unknown (§3.2 function stack).
+                    for o in outputs {
+                        o_insert_unknown(symtab, o);
+                    }
+                    continue;
+                }
+                call_stack.push(fname.clone());
+                let mut ftab = SymTab::new();
+                for (p, a) in func.params.iter().zip(args.iter()) {
+                    if let Some(info) = symtab.get(a) {
+                        // Literal values do not cross the call boundary in
+                        // SystemML unless IPA proves it; be conservative.
+                        let mut info = info.clone();
+                        info.lit = None;
+                        ftab.insert(p.clone(), info);
+                    } else {
+                        ftab.insert(p.clone(), SymInfo::matrix(MatrixCharacteristics::unknown()));
+                    }
+                }
+                let mut body = func.body.clone();
+                propagate_blocks(&mut body, &mut ftab, funcs, blocksize, call_stack);
+                call_stack.pop();
+                for (caller_name, fn_out) in outputs.iter().zip(func.outputs.iter()) {
+                    if let Some(info) = ftab.get(fn_out) {
+                        symtab.insert(caller_name.clone(), info.clone());
+                    } else {
+                        o_insert_unknown(symtab, caller_name);
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn o_insert_unknown(symtab: &mut SymTab, name: &str) {
+    symtab.insert(name.to_string(), SymInfo::matrix(MatrixCharacteristics::unknown()));
+}
+
+/// Loop bodies run an unknown number of times: propagate once on a copy,
+/// reset any variable whose statistics changed (it varies per iteration)
+/// to unknown, then propagate the body again with the stable statistics.
+fn propagate_loop_body(
+    body: &mut [Block],
+    symtab: &mut SymTab,
+    funcs: &std::collections::BTreeMap<String, Function>,
+    blocksize: i64,
+    call_stack: &mut Vec<String>,
+) {
+    let before = symtab.clone();
+    let mut first = symtab.clone();
+    // Literal values assigned before the loop may change inside it; clear
+    // literals of any variable the body could reassign. We detect
+    // reassignment by running the body once and diffing.
+    propagate_blocks(body, &mut first, funcs, blocksize, call_stack);
+    let mut stable = before.clone();
+    for (name, after_info) in &first {
+        match before.get(name) {
+            Some(b) if b == after_info => {}
+            Some(b) => {
+                // changed inside the loop: wipe what differs
+                let mut mc = b.mc;
+                if b.mc.rows != after_info.mc.rows {
+                    mc.rows = -1;
+                }
+                if b.mc.cols != after_info.mc.cols {
+                    mc.cols = -1;
+                }
+                mc.nnz = -1;
+                stable.insert(
+                    name.clone(),
+                    SymInfo { mc, dtype: after_info.dtype.clone(), lit: None },
+                );
+            }
+            None => {
+                // defined only inside the loop; sizes from the first
+                // iteration may not hold for later ones — keep dims only if
+                // they match a second propagation below.
+                stable.insert(name.clone(), after_info.clone());
+            }
+        }
+    }
+    *symtab = stable;
+    propagate_blocks(body, symtab, funcs, blocksize, call_stack);
+}
+
+/// Merge symbol tables after if/else: statistics survive only if both
+/// branches agree; otherwise dims/nnz degrade to unknown.
+fn merge_tabs(a: &SymTab, b: &SymTab) -> SymTab {
+    let mut out = SymTab::new();
+    for (name, ai) in a {
+        match b.get(name) {
+            Some(bi) if ai == bi => {
+                out.insert(name.clone(), ai.clone());
+            }
+            Some(bi) => {
+                let mc = MatrixCharacteristics {
+                    rows: if ai.mc.rows == bi.mc.rows { ai.mc.rows } else { -1 },
+                    cols: if ai.mc.cols == bi.mc.cols { ai.mc.cols } else { -1 },
+                    brows: ai.mc.brows,
+                    bcols: ai.mc.bcols,
+                    nnz: if ai.mc.nnz == bi.mc.nnz { ai.mc.nnz } else { -1 },
+                };
+                out.insert(name.clone(), SymInfo { mc, dtype: ai.dtype.clone(), lit: None });
+            }
+            None => {
+                out.insert(name.clone(), ai.clone());
+            }
+        }
+    }
+    for (name, bi) in b {
+        out.entry(name.clone()).or_insert_with(|| bi.clone());
+    }
+    out
+}
+
+/// Static trip count of a for loop when bounds are literals.
+fn trip_count(from: &HopDag, to: &HopDag, by: Option<&HopDag>) -> Option<f64> {
+    let f = root_literal(from)?;
+    let t = root_literal(to)?;
+    let b = match by {
+        Some(dag) => root_literal(dag)?,
+        None => {
+            if f <= t {
+                1.0
+            } else {
+                -1.0
+            }
+        }
+    };
+    if b == 0.0 {
+        return None;
+    }
+    Some((((t - f) / b).floor() + 1.0).max(0.0))
+}
+
+fn root_literal(dag: &HopDag) -> Option<f64> {
+    let root = *dag.roots.first()?;
+    dag.hop(root).literal().and_then(|l| l.as_f64())
+}
+
+/// Propagate sizes (and scalar literal values) through a single DAG given
+/// the live-variable symbol table; updates the table at TWrites.
+pub fn propagate_dag(dag: &mut HopDag, symtab: &mut SymTab, blocksize: i64) {
+    let order = dag.topo_order();
+    let mut values: Vec<Option<Lit>> = vec![None; dag.hops.len()];
+    for id in order {
+        // Pull scalar input values first (immutable pass).
+        let hop = dag.hop(id).clone();
+        let in_mc: Vec<MatrixCharacteristics> =
+            hop.inputs.iter().map(|&i| dag.hop(i).mc).collect();
+        let in_val: Vec<Option<Lit>> = hop.inputs.iter().map(|&i| values[i].clone()).collect();
+        let (mc, val, dtype) = infer(dag, &hop, &in_mc, &in_val, symtab, blocksize);
+        let h = dag.hop_mut(id);
+        h.mc = mc;
+        if let Some(dt) = dtype {
+            h.dtype = dt;
+        }
+        values[id] = val;
+        if let HopKind::TWrite { name } = &dag.hop(id).kind {
+            let h = dag.hop(id);
+            symtab.insert(
+                name.clone(),
+                SymInfo { mc: h.mc, dtype: h.dtype.clone(), lit: values[id].clone() },
+            );
+        }
+    }
+}
+
+/// Size/value inference for one HOP. Returns (mc, scalar value, dtype fix).
+fn infer(
+    _dag: &HopDag,
+    hop: &Hop,
+    in_mc: &[MatrixCharacteristics],
+    in_val: &[Option<Lit>],
+    symtab: &SymTab,
+    blocksize: i64,
+) -> (MatrixCharacteristics, Option<Lit>, Option<DataType>) {
+    use HopKind::*;
+    let scalar = MatrixCharacteristics::scalar;
+    match &hop.kind {
+        Literal(l) => (scalar(), Some(l.clone()), None),
+        PRead { .. } => (hop.mc, None, None), // set at build from metadata
+        PWrite { .. } | TWrite { .. } => (
+            in_mc.first().copied().unwrap_or_else(MatrixCharacteristics::unknown),
+            in_val.first().cloned().flatten(),
+            // dtype follows the (already-corrected) input hop — TReads are
+            // provisionally typed Matrix at build time
+            hop.inputs.first().map(|&i| _dag.hop(i).dtype.clone()),
+        ),
+        TRead { name } => match symtab.get(name) {
+            Some(info) => (info.mc, info.lit.clone(), Some(info.dtype.clone())),
+            None => (MatrixCharacteristics::unknown(), None, None),
+        },
+        DataGen(DataGenOp::Rand { min, max, sparsity, .. }) => {
+            let rows = in_val.first().and_then(|v| v.as_ref()).and_then(|l| l.as_f64());
+            let cols = in_val.get(1).and_then(|v| v.as_ref()).and_then(|l| l.as_f64());
+            let (r, c) = (rows.map_or(-1, |v| v as i64), cols.map_or(-1, |v| v as i64));
+            let mut mc = MatrixCharacteristics::new(r, c, blocksize, -1);
+            if r >= 0 && c >= 0 {
+                mc.nnz = if *min == 0.0 && *max == 0.0 {
+                    0
+                } else {
+                    ((r as f64 * c as f64) * sparsity.clamp(0.0, 1.0)) as i64
+                };
+            }
+            (mc, None, None)
+        }
+        DataGen(DataGenOp::Seq { from, to, by }) => {
+            let n = if *by != 0.0 { (((to - from) / by).floor() + 1.0).max(0.0) as i64 } else { -1 };
+            (MatrixCharacteristics::new(n, 1, blocksize, n), None, None)
+        }
+        Reorg(ReorgOp::Transpose) => {
+            let i = in_mc[0];
+            (MatrixCharacteristics { rows: i.cols, cols: i.rows, ..i }, None, None)
+        }
+        Reorg(ReorgOp::Diag) => {
+            let i = in_mc[0];
+            if i.cols == 1 {
+                // vector -> diagonal matrix
+                (MatrixCharacteristics::new(i.rows, i.rows, blocksize, i.nnz), None, None)
+            } else {
+                // square matrix -> diagonal vector
+                let nnz = if i.nnz >= 0 { i.nnz.min(i.rows) } else { -1 };
+                (MatrixCharacteristics::new(i.rows, 1, blocksize, nnz), None, None)
+            }
+        }
+        MatMult => {
+            let (a, b) = (in_mc[0], in_mc[1]);
+            (MatrixCharacteristics::new(a.rows, b.cols, blocksize, -1), None, None)
+        }
+        Binary(op) => {
+            let am = hop.inputs.first().map(|_| in_mc[0]);
+            let a_is_m = in_mc[0].rows != 0 || in_mc[0].cols != 0; // scalar mc is (0,0)
+            let b_is_m = in_mc.len() > 1 && (in_mc[1].rows != 0 || in_mc[1].cols != 0);
+            if *op == BinOp::Solve {
+                let (a, b) = (in_mc[0], in_mc[1]);
+                return (
+                    MatrixCharacteristics::new(a.cols, b.cols, blocksize, -1),
+                    None,
+                    None,
+                );
+            }
+            match (a_is_m, b_is_m) {
+                (false, false) => {
+                    // scalar op scalar: fold value if both known; also fix
+                    // the dtype (TReads are provisionally typed Matrix)
+                    let v = match (&in_val[0], &in_val[1]) {
+                        (Some(x), Some(y)) => op.fold(x, y),
+                        _ => None,
+                    };
+                    let vt = match op {
+                        BinOp::Lt | BinOp::Gt | BinOp::Le | BinOp::Ge | BinOp::Eq | BinOp::Ne
+                        | BinOp::And | BinOp::Or => ValueType::Bool,
+                        _ => ValueType::Double,
+                    };
+                    (scalar(), v, Some(DataType::Scalar(vt)))
+                }
+                (true, false) => {
+                    let mut mc = am.unwrap();
+                    mc.nnz = scalar_op_nnz(*op, mc.nnz, &in_val[1]);
+                    (mc, None, None)
+                }
+                (false, true) => {
+                    let mut mc = in_mc[1];
+                    mc.nnz = scalar_op_nnz(*op, mc.nnz, &in_val[0]);
+                    (mc, None, None)
+                }
+                (true, true) => {
+                    // elementwise (or broadcast vector) — result dims are the
+                    // larger input's dims
+                    let (a, b) = (in_mc[0], in_mc[1]);
+                    let rows = a.rows.max(b.rows);
+                    let cols = a.cols.max(b.cols);
+                    let nnz = match op {
+                        BinOp::Mul => {
+                            if a.nnz >= 0 && b.nnz >= 0 {
+                                a.nnz.min(b.nnz)
+                            } else {
+                                -1
+                            }
+                        }
+                        BinOp::Add | BinOp::Sub => {
+                            if a.nnz >= 0 && b.nnz >= 0 {
+                                (a.nnz + b.nnz).min(rows.saturating_mul(cols))
+                            } else {
+                                -1
+                            }
+                        }
+                        _ => -1,
+                    };
+                    (MatrixCharacteristics::new(rows, cols, blocksize, nnz), None, None)
+                }
+            }
+        }
+        Unary(op) => {
+            let is_matrix = hop.dtype.is_matrix()
+                || (!in_mc.is_empty() && (in_mc[0].rows != 0 || in_mc[0].cols != 0));
+            match op {
+                UnOp::Nrow | UnOp::Ncol | UnOp::Length => {
+                    let i = in_mc[0];
+                    let v = match op {
+                        UnOp::Nrow if i.rows >= 0 => Some(Lit::Int(i.rows)),
+                        UnOp::Ncol if i.cols >= 0 => Some(Lit::Int(i.cols)),
+                        UnOp::Length if i.dims_known() => Some(Lit::Int(i.rows * i.cols)),
+                        _ => None,
+                    };
+                    (scalar(), v, Some(DataType::Scalar(ValueType::Int)))
+                }
+                UnOp::CastScalar => (scalar(), in_val[0].clone(), None),
+                UnOp::CastMatrix => {
+                    (MatrixCharacteristics::new(1, 1, blocksize, -1), None, None)
+                }
+                _ if !is_matrix => {
+                    let v = in_val[0].as_ref().and_then(|l| op.fold(l));
+                    (scalar(), v, None)
+                }
+                _ => {
+                    let mut mc = in_mc[0];
+                    mc.nnz = match op {
+                        UnOp::Sqrt | UnOp::Abs | UnOp::Sign | UnOp::Round | UnOp::Floor
+                        | UnOp::Ceil | UnOp::Neg => mc.nnz,
+                        _ => -1,
+                    };
+                    (mc, None, None)
+                }
+            }
+        }
+        AggUnary(_, AggDir::All) => (scalar(), None, None),
+        AggUnary(_, AggDir::Row) => {
+            let i = in_mc[0];
+            (MatrixCharacteristics::new(i.rows, 1, blocksize, -1), None, None)
+        }
+        AggUnary(_, AggDir::Col) => {
+            let i = in_mc[0];
+            (MatrixCharacteristics::new(1, i.cols, blocksize, -1), None, None)
+        }
+        Append => {
+            let (a, b) = (in_mc[0], in_mc[1]);
+            let cols = if a.cols >= 0 && b.cols >= 0 { a.cols + b.cols } else { -1 };
+            let nnz = if a.nnz >= 0 && b.nnz >= 0 { a.nnz + b.nnz } else { -1 };
+            (MatrixCharacteristics::new(a.rows, cols, blocksize, nnz), None, None)
+        }
+        Print => (scalar(), None, None),
+    }
+}
+
+/// nnz after a matrix-scalar op, when the scalar value may be known.
+fn scalar_op_nnz(op: BinOp, nnz: i64, scalar: &Option<Lit>) -> i64 {
+    match op {
+        BinOp::Mul | BinOp::Div => nnz, // zero stays zero
+        BinOp::Add | BinOp::Sub => match scalar.as_ref().and_then(|l| l.as_f64()) {
+            Some(v) if v == 0.0 => nnz,
+            _ => -1,
+        },
+        _ => -1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dml;
+    use crate::ir::build::{build_program, tests::linreg_args, tests::xs_meta, tests::LINREG_DS};
+
+    fn build_and_prop(src: &str) -> Program {
+        let script = dml::frontend(src).unwrap();
+        let mut prog = build_program(&script, &linreg_args(), &xs_meta(), 1000).unwrap();
+        // Figure 1 shows sizes *after* rewrites (branch removal in
+        // particular — without it X's columns are conservatively unknown).
+        crate::ir::rewrites::rewrite_program(&mut prog);
+        propagate(&mut prog, 1000);
+        prog
+    }
+
+    fn find_mc(prog: &Program, pred: impl Fn(&Hop) -> bool) -> MatrixCharacteristics {
+        let mut found = None;
+        for b in &prog.blocks {
+            if let Block::Generic(g) = b {
+                for id in g.dag.topo_order() {
+                    // live hops only — rewrites leave dead hops in the arena
+                    let h = g.dag.hop(id);
+                    if pred(h) {
+                        found = Some(h.mc);
+                    }
+                }
+            }
+        }
+        found.expect("hop not found")
+    }
+
+    #[test]
+    fn linreg_sizes_match_figure1() {
+        let prog = build_and_prop(LINREG_DS);
+        // r(t): [1e3, 1e4]
+        let t = find_mc(&prog, |h| h.kind == HopKind::Reorg(ReorgOp::Transpose) && h.mc.rows != 0);
+        assert_eq!((t.rows, t.cols), (1_000, 10_000));
+        // dg(rand) for I: [1e3, 1] — requires ncol(X) scalar propagation
+        let rand = find_mc(&prog, |h| matches!(h.kind, HopKind::DataGen(_)));
+        assert_eq!((rand.rows, rand.cols, rand.nnz), (1_000, 1, 1_000));
+        // r(diag): [1e3, 1e3] with nnz 1e3
+        let diag = find_mc(&prog, |h| h.kind == HopKind::Reorg(ReorgOp::Diag));
+        assert_eq!((diag.rows, diag.cols, diag.nnz), (1_000, 1_000, 1_000));
+        // b(solve): [1e3, 1]
+        let solve = find_mc(&prog, |h| h.kind == HopKind::Binary(BinOp::Solve));
+        assert_eq!((solve.rows, solve.cols), (1_000, 1));
+    }
+
+    #[test]
+    fn matmult_dims_and_unknown_nnz() {
+        let prog = build_and_prop(LINREG_DS);
+        let mut seen = Vec::new();
+        for b in &prog.blocks {
+            if let Block::Generic(g) = b {
+                for h in &g.dag.hops {
+                    if h.kind == HopKind::MatMult {
+                        seen.push(h.mc);
+                    }
+                }
+            }
+        }
+        assert!(seen.iter().any(|m| (m.rows, m.cols) == (1_000, 1_000)));
+        assert!(seen.iter().any(|m| (m.rows, m.cols) == (1_000, 1)));
+        assert!(seen.iter().all(|m| m.nnz == -1));
+    }
+
+    #[test]
+    fn loop_changing_sizes_reset_to_unknown() {
+        let src = r#"
+X = read($1);
+for (i in 1:3) {
+  X = append(X, matrix(1, nrow(X), 1));
+}
+write(X, $4);
+"#;
+        let prog = build_and_prop(src);
+        // Inside the loop, cols of X change each iteration -> unknown.
+        let Block::For { body, .. } =
+            prog.blocks.iter().find(|b| matches!(b, Block::For { .. })).unwrap()
+        else {
+            panic!()
+        };
+        let Block::Generic(g) = &body[0] else { panic!() };
+        let tread = g
+            .dag
+            .hops
+            .iter()
+            .find(|h| matches!(&h.kind, HopKind::TRead { name } if name == "X"))
+            .unwrap();
+        assert_eq!(tread.mc.rows, 10_000); // rows stable
+        assert_eq!(tread.mc.cols, -1); // cols vary
+    }
+
+    #[test]
+    fn for_trip_count_literal_bounds() {
+        let src = "s = 0; for (i in 1:10) { s = s + 1; } write(s, $4);";
+        let prog = build_and_prop(src);
+        let Block::For { known_trip, .. } =
+            prog.blocks.iter().find(|b| matches!(b, Block::For { .. })).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(*known_trip, Some(10.0));
+    }
+
+    #[test]
+    fn if_merge_keeps_agreeing_sizes() {
+        let src = r#"
+X = read($1);
+c = 1;
+if (c == 1) { Z = X * 2; } else { Z = X + 1; }
+s = sum(Z);
+write(s, $4);
+"#;
+        let prog = build_and_prop(src);
+        // Z has the same dims in both branches -> known after merge.
+        let last = prog.blocks.iter().rev().find_map(|b| match b {
+            Block::Generic(g) => g
+                .dag
+                .hops
+                .iter()
+                .find(|h| matches!(&h.kind, HopKind::TRead { name } if name == "Z"))
+                .map(|h| h.mc),
+            _ => None,
+        });
+        let mc = last.expect("TRead Z");
+        assert_eq!((mc.rows, mc.cols), (10_000, 1_000));
+    }
+
+    #[test]
+    fn function_call_propagates_output_size() {
+        let src = r#"
+f = function(A) return (B) { B = t(A); }
+X = read($1);
+Y = f(X);
+s = sum(Y);
+write(s, $4);
+"#;
+        let prog = build_and_prop(src);
+        let mc = prog
+            .blocks
+            .iter()
+            .rev()
+            .find_map(|b| match b {
+                Block::Generic(g) => g
+                    .dag
+                    .hops
+                    .iter()
+                    .find(|h| matches!(&h.kind, HopKind::TRead { name } if name == "Y"))
+                    .map(|h| h.mc),
+                _ => None,
+            })
+            .expect("TRead Y");
+        assert_eq!((mc.rows, mc.cols), (1_000, 10_000));
+    }
+
+    #[test]
+    fn recursive_function_outputs_unknown() {
+        let src = r#"
+f = function(A) return (B) { B = f(A); }
+X = read($1);
+Y = f(X);
+s = sum(Y);
+write(s, $4);
+"#;
+        let script = dml::frontend(src).unwrap();
+        let mut prog = build_program(&script, &linreg_args(), &xs_meta(), 1000).unwrap();
+        propagate(&mut prog, 1000); // must terminate
+        let mc = prog
+            .blocks
+            .iter()
+            .rev()
+            .find_map(|b| match b {
+                Block::Generic(g) => g
+                    .dag
+                    .hops
+                    .iter()
+                    .find(|h| matches!(&h.kind, HopKind::TRead { name } if name == "Y"))
+                    .map(|h| h.mc),
+                _ => None,
+            })
+            .expect("TRead Y");
+        assert_eq!(mc.rows, -1);
+    }
+}

@@ -1,0 +1,52 @@
+//! # systemds-rs
+//!
+//! A from-scratch reproduction of the system described in
+//! *"Costing Generated Runtime Execution Plans for Large-Scale Machine
+//! Learning Programs"* (M. Boehm, 2015) — the SystemML cost model — built
+//! as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The library contains the full compilation chain the paper's cost model
+//! depends on:
+//!
+//! 1. [`dml`] — an R-like declarative ML language frontend (lexer, parser,
+//!    AST, validation).
+//! 2. [`ir`] — high-level operators (HOPs) organised into program blocks,
+//!    static rewrites (constant folding, branch removal, algebraic
+//!    simplification, CSE), inter-procedural size propagation, operation
+//!    memory estimates, and execution-type selection (CP vs MR).
+//! 3. [`lop`] — low-level physical operator selection (`tsmm`, `mapmm`,
+//!    `cpmm`, `rmm`, …) under memory and block-size constraints.
+//! 4. [`rtprog`] — generation of executable runtime programs (instructions
+//!    plus MR-job instructions assembled by the piggybacking algorithm).
+//! 5. [`cost`] — **the paper's contribution**: a white-box analytical cost
+//!    model that costs generated runtime plans in a single pass, tracking
+//!    live-variable sizes and in-memory state, and linearising IO, latency
+//!    and compute into a single estimated-execution-time measure.
+//! 6. [`cp`] / [`mr`] — a hybrid runtime: single-node in-memory control
+//!    program and a deterministic MapReduce cluster simulator (the
+//!    substitute for the paper's Hadoop testbed).
+//! 7. [`runtime`] — the PJRT bridge that loads AOT-compiled XLA artifacts
+//!    (JAX/Pallas, built once by `make artifacts`) for the compute hot path.
+//! 8. [`opt`] — cost-model consumers: resource optimization and plan
+//!    comparison.
+//!
+//! The high-level entry points live in [`api`]: compile a DML script into a
+//! runtime plan, cost it against a cluster configuration, explain it at any
+//! compilation level, or execute it.
+
+pub mod api;
+pub mod conf;
+pub mod cost;
+pub mod cp;
+pub mod dml;
+pub mod ir;
+pub mod lop;
+pub mod matrix;
+pub mod mr;
+pub mod opt;
+pub mod rtprog;
+pub mod runtime;
+pub mod util;
+
+pub use api::{compile, CompileOptions, CompiledProgram, Scenario};
+pub use conf::{ClusterConfig, CostConstants, SystemConfig};

@@ -1,0 +1,257 @@
+//! Low-level (physical) operator selection — the HOP→LOP step (paper §2).
+//!
+//! The interesting decisions reproduced from the paper:
+//!
+//! * **CP tsmm** for `t(X) %*% X` ("exploit the unary input characteristic
+//!   and the known result symmetry which allows to do only half the
+//!   computation") — Figure 2.
+//! * **`(yᵀX)ᵀ` HOP-LOP rewrite** for CP `t(X) %*% y`, applied only when the
+//!   small transpose fits the memory budget ("it exhibits additional memory
+//!   constraints") — applied in XS, rejected in XL1 because `t(y)` would
+//!   exceed the budget and spawn an MR job.
+//! * **MR tsmm** requires whole rows per block: `ncol ≤ blocksize`
+//!   (violated in XL2/XL4 → cpmm).
+//! * **MR mapmm** broadcasts the smaller input through distributed cache,
+//!   requires `M̂'(small) ≤ map budget` (violated in XL3/XL4 → cpmm), and
+//!   partitions the broadcast when it spans multiple partitions.
+//! * **MR cpmm** (cross-product join) as the robust fallback; it implies a
+//!   *second* MR job for the final aggregation.
+
+use crate::conf::{ClusterConfig, SystemConfig};
+use crate::ir::*;
+use crate::matrix::Format;
+
+/// Physical operator chosen for a matrix-multiplication HOP.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MatMultMethod {
+    /// CP transpose-self: `tsmm LEFT` (t(X)%*%X) or `RIGHT` (X%*%t(X)).
+    CpTsmm { left: bool },
+    /// Plain CP matrix multiply.
+    CpMM,
+    /// CP `t(X)%*%y` executed as `t(t(y)%*%X)` — the Figure 2 rewrite.
+    CpMMTransposeRewrite,
+    /// Map-side MR transpose-self (requires ncol <= blocksize).
+    MrTsmm { left: bool },
+    /// Broadcast matrix multiplication: `side` is the broadcast input
+    /// (0 = left, 1 = right); `partition` requests a CP partition op.
+    MrMapMM { broadcast_input: usize, partition: bool },
+    /// Cross-product join MMCJ + follow-up aggregation GMR (two jobs).
+    MrCpmm,
+    /// Replication-based matmult (single job, heavy shuffle); only chosen
+    /// when forced via [`SelectionHints`] (ablation benchmarks).
+    MrRmm,
+}
+
+/// Optional knobs for ablation studies.
+#[derive(Clone, Debug, Default)]
+pub struct SelectionHints {
+    /// Force cpmm for all MR matmults (disables tsmm/mapmm).
+    pub force_cpmm: bool,
+    /// Force rmm for all MR matmults.
+    pub force_rmm: bool,
+    /// Disable the (yᵀX)ᵀ rewrite.
+    pub no_transpose_rewrite: bool,
+}
+
+/// Select the physical matmult operator for HOP `id` in `dag`.
+///
+/// `exec` is the HOP's selected execution type; sizes must be propagated.
+pub fn select_matmult(
+    dag: &HopDag,
+    id: HopId,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    hints: &SelectionHints,
+) -> MatMultMethod {
+    let hop = dag.hop(id);
+    debug_assert_eq!(hop.kind, HopKind::MatMult);
+    let (a, b) = (hop.inputs[0], hop.inputs[1]);
+    let exec = hop.exec.unwrap_or(ExecType::Cp);
+
+    // transpose-self patterns
+    let left_self = transpose_input_of(dag, a) == Some(b); // t(X) %*% X
+    let right_self = transpose_input_of(dag, b) == Some(a); // X %*% t(X)
+
+    match exec {
+        ExecType::Cp => {
+            if left_self {
+                return MatMultMethod::CpTsmm { left: true };
+            }
+            if right_self {
+                return MatMultMethod::CpTsmm { left: false };
+            }
+            // (y'X)' rewrite: t(X) %*% y with y a vector; beneficial when it
+            // avoids materialising t(X); valid when t(y) fits the budget.
+            if !hints.no_transpose_rewrite && transpose_input_of(dag, a).is_some() {
+                let y = dag.hop(b);
+                if y.mc.cols == 1 {
+                    let ty_op_mem = 2.0 * y.out_mem;
+                    if ty_op_mem <= cfg.cp_budget(cc) {
+                        return MatMultMethod::CpMMTransposeRewrite;
+                    }
+                }
+            }
+            MatMultMethod::CpMM
+        }
+        ExecType::Mr => {
+            if hints.force_rmm {
+                return MatMultMethod::MrRmm;
+            }
+            if hints.force_cpmm {
+                return MatMultMethod::MrCpmm;
+            }
+            // MR tsmm: needs entire rows in one block.
+            if left_self {
+                let x = dag.hop(b);
+                if x.mc.cols >= 0 && x.mc.cols <= cfg.blocksize {
+                    return MatMultMethod::MrTsmm { left: true };
+                }
+            }
+            if right_self {
+                let x = dag.hop(a);
+                if x.mc.rows >= 0 && x.mc.rows <= cfg.blocksize {
+                    return MatMultMethod::MrTsmm { left: false };
+                }
+            }
+            // mapmm: broadcast the smaller input if it fits the map budget.
+            let (am, bm) = (dag.hop(a), dag.hop(b));
+            let a_ser = am.mc.serialized_size(Format::BinaryBlock);
+            let b_ser = bm.mc.serialized_size(Format::BinaryBlock);
+            let map_budget = cfg.map_budget(cc);
+            let (bc_input, bc_size) = if a_ser <= b_ser { (0, a_ser) } else { (1, b_ser) };
+            if bc_size.is_finite() && bc_size <= map_budget {
+                let partition = bc_size > cfg.partition_bytes;
+                return MatMultMethod::MrMapMM { broadcast_input: bc_input, partition };
+            }
+            MatMultMethod::MrCpmm
+        }
+    }
+}
+
+/// If `id` is a transpose hop, return the id of its input.
+pub fn transpose_input_of(dag: &HopDag, id: HopId) -> Option<HopId> {
+    let h = dag.hop(id);
+    if h.kind == HopKind::Reorg(ReorgOp::Transpose) {
+        Some(h.inputs[0])
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conf::{ClusterConfig, SystemConfig};
+    use crate::dml;
+    use crate::ir::build::{build_program, tests::linreg_args, StaticMeta};
+    use crate::ir::{exec_type, memory, rewrites, size_prop};
+    use crate::matrix::{Format, MatrixCharacteristics};
+
+    fn compile(meta: &StaticMeta) -> Program {
+        let script = dml::frontend(crate::ir::build::tests::LINREG_DS).unwrap();
+        let cfg = SystemConfig::default();
+        let cc = ClusterConfig::paper_cluster();
+        let mut prog = build_program(&script, &linreg_args(), meta, cfg.blocksize).unwrap();
+        rewrites::rewrite_program(&mut prog);
+        size_prop::propagate(&mut prog, cfg.blocksize);
+        memory::annotate(&mut prog, &cfg);
+        exec_type::select(&mut prog, &cfg, &cc);
+        prog
+    }
+
+    fn scenario(rows: i64, cols: i64, yrows: i64) -> StaticMeta {
+        StaticMeta::default()
+            .with("data/X", MatrixCharacteristics::dense(rows, cols, 1000), Format::BinaryBlock)
+            .with("data/y", MatrixCharacteristics::dense(yrows, 1, 1000), Format::BinaryBlock)
+    }
+
+    /// Collect the matmult methods of the main computation block, ordered
+    /// (X'X first, then X'y — by output size).
+    fn methods(prog: &Program) -> Vec<MatMultMethod> {
+        let cfg = SystemConfig::default();
+        let cc = ClusterConfig::paper_cluster();
+        let mut out = Vec::new();
+        for b in &prog.blocks {
+            if let Block::Generic(g) = b {
+                for id in g.dag.topo_order() {
+                    if g.dag.hop(id).kind == HopKind::MatMult {
+                        out.push((
+                            g.dag.hop(id).mc.cols,
+                            select_matmult(&g.dag, id, &cfg, &cc, &SelectionHints::default()),
+                        ));
+                    }
+                }
+            }
+        }
+        out.sort_by_key(|(cols, _)| -cols);
+        out.into_iter().map(|(_, m)| m).collect()
+    }
+
+    #[test]
+    fn xs_selects_cp_tsmm_and_transpose_rewrite() {
+        // Figure 2: tsmm LEFT for X'X and the (y'X)' rewrite for X'y.
+        let prog = compile(&scenario(10_000, 1_000, 10_000));
+        let m = methods(&prog);
+        assert_eq!(m[0], MatMultMethod::CpTsmm { left: true });
+        assert_eq!(m[1], MatMultMethod::CpMMTransposeRewrite);
+    }
+
+    #[test]
+    fn xl1_selects_mr_tsmm_and_mapmm_with_partition() {
+        // Figure 3: MR tsmm + mapmm (broadcast y, CP partition), no rewrite.
+        let prog = compile(&scenario(100_000_000, 1_000, 100_000_000));
+        let m = methods(&prog);
+        assert_eq!(m[0], MatMultMethod::MrTsmm { left: true });
+        assert_eq!(m[1], MatMultMethod::MrMapMM { broadcast_input: 1, partition: true });
+    }
+
+    #[test]
+    fn xl2_wide_x_forces_cpmm_for_tsmm() {
+        // §2: 2000 columns > blocksize prevents map-side tsmm -> cpmm.
+        let prog = compile(&scenario(100_000_000, 2_000, 100_000_000));
+        let m = methods(&prog);
+        assert_eq!(m[0], MatMultMethod::MrCpmm);
+        // X'y mapmm still fine (y is 800MB < 1434MB budget)
+        assert_eq!(m[1], MatMultMethod::MrMapMM { broadcast_input: 1, partition: true });
+    }
+
+    #[test]
+    fn xl3_large_y_forces_cpmm_for_mapmm() {
+        // §2: y = 1.6GB > 1434MB map budget -> cpmm instead of mapmm.
+        let prog = compile(&scenario(200_000_000, 1_000, 200_000_000));
+        let m = methods(&prog);
+        assert_eq!(m[0], MatMultMethod::MrTsmm { left: true });
+        assert_eq!(m[1], MatMultMethod::MrCpmm);
+    }
+
+    #[test]
+    fn xl4_both_cpmm() {
+        let prog = compile(&scenario(200_000_000, 2_000, 200_000_000));
+        let m = methods(&prog);
+        assert_eq!(m[0], MatMultMethod::MrCpmm);
+        assert_eq!(m[1], MatMultMethod::MrCpmm);
+    }
+
+    #[test]
+    fn hints_force_alternatives() {
+        let prog = compile(&scenario(100_000_000, 1_000, 100_000_000));
+        let cfg = SystemConfig::default();
+        let cc = ClusterConfig::paper_cluster();
+        for b in &prog.blocks {
+            if let Block::Generic(g) = b {
+                for id in g.dag.topo_order() {
+                    if g.dag.hop(id).kind == HopKind::MatMult {
+                        let m = select_matmult(
+                            &g.dag,
+                            id,
+                            &cfg,
+                            &cc,
+                            &SelectionHints { force_rmm: true, ..Default::default() },
+                        );
+                        assert_eq!(m, MatMultMethod::MrRmm);
+                    }
+                }
+            }
+        }
+    }
+}

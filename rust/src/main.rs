@@ -1,0 +1,208 @@
+//! `repro` — command-line driver for the systemds-rs reproduction.
+//!
+//! ```text
+//! repro explain --scenario xs --level hops|runtime      Figure 1 / 2 / 3
+//! repro cost    --scenario xl1                          Figure 4 / 5
+//! repro scenarios                                       Table 1 + §2 plans
+//! repro run <script.dml> [-a N=value ...]               execute a script
+//! repro resource-opt --scenario xs                      budget sweep
+//! ```
+
+use std::collections::HashMap;
+
+use systemds::api::{compile, CompileOptions, Scenario};
+use systemds::conf::{ClusterConfig, CostConstants, MB};
+use systemds::cost;
+use systemds::cp::interp::Executor;
+use systemds::opt::resource;
+use systemds::runtime::KernelRegistry;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("explain") => cmd_explain(&args[1..]),
+        Some("cost") => cmd_cost(&args[1..]),
+        Some("scenarios") => cmd_scenarios(),
+        Some("run") => cmd_run(&args[1..]),
+        Some("resource-opt") => cmd_resource_opt(&args[1..]),
+        _ => {
+            eprintln!(
+                "usage: repro <explain|cost|scenarios|run|resource-opt> [options]\n\
+                 \n\
+                 explain --scenario <xs|xl1..xl4> [--level hops|runtime]\n\
+                 cost    --scenario <xs|xl1..xl4>\n\
+                 scenarios\n\
+                 run <script.dml> [-a N=value ...] [--threads T] [--heap-mb H]\n\
+                 resource-opt --scenario <name> [--heaps 256,512,...]"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn scenario_by_name(name: &str) -> Option<Scenario> {
+    Scenario::all().into_iter().find(|s| s.name.eq_ignore_ascii_case(name))
+}
+
+fn cmd_explain(args: &[String]) -> i32 {
+    let name = flag(args, "--scenario").unwrap_or_else(|| "xs".into());
+    let level = flag(args, "--level").unwrap_or_else(|| "runtime".into());
+    let Some(s) = scenario_by_name(&name) else {
+        eprintln!("unknown scenario '{name}'");
+        return 2;
+    };
+    let opts = CompileOptions::default();
+    let compiled = s.compile(&opts);
+    match level.as_str() {
+        "hops" => print!("{}", compiled.explain_hops(&opts)),
+        _ => print!("{}", compiled.explain_runtime()),
+    }
+    0
+}
+
+fn cmd_cost(args: &[String]) -> i32 {
+    let name = flag(args, "--scenario").unwrap_or_else(|| "xs".into());
+    let Some(s) = scenario_by_name(&name) else {
+        eprintln!("unknown scenario '{name}'");
+        return 2;
+    };
+    let opts = CompileOptions::default();
+    let compiled = s.compile(&opts);
+    let report =
+        cost::cost_program(&compiled.runtime, &opts.cfg, &opts.cc.0, &CostConstants::default());
+    print!("{}", cost::explain_costed(&report));
+    0
+}
+
+fn cmd_scenarios() -> i32 {
+    println!("{:<6} {:>14} {:>10} {:>8} {:>12}", "name", "X", "size", "MR jobs", "est. cost");
+    let opts = CompileOptions::default();
+    for s in Scenario::all() {
+        let compiled = s.compile(&opts);
+        let report = cost::cost_program(
+            &compiled.runtime,
+            &opts.cfg,
+            &opts.cc.0,
+            &CostConstants::default(),
+        );
+        println!(
+            "{:<6} {:>7}x{:<6} {:>10} {:>8} {:>11.1}s",
+            s.name,
+            s.x_rows,
+            s.x_cols,
+            systemds::util::fmt::fmt_bytes(s.input_bytes),
+            compiled.runtime.mr_job_count(),
+            report.total
+        );
+    }
+    0
+}
+
+fn cmd_run(args: &[String]) -> i32 {
+    let Some(script_path) = args.first().filter(|a| !a.starts_with('-')) else {
+        eprintln!("usage: repro run <script.dml> [-a N=value ...]");
+        return 2;
+    };
+    let src = match std::fs::read_to_string(script_path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("cannot read {script_path}: {e}");
+            return 1;
+        }
+    };
+    let mut script_args: HashMap<usize, String> = HashMap::new();
+    let mut i = 1;
+    while i < args.len() {
+        if args[i] == "-a" {
+            if let Some(kv) = args.get(i + 1) {
+                if let Some((k, v)) = kv.split_once('=') {
+                    if let Ok(n) = k.parse::<usize>() {
+                        script_args.insert(n, v.to_string());
+                    }
+                }
+            }
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    let threads: usize =
+        flag(args, "--threads").and_then(|t| t.parse().ok()).unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        });
+    let heap_mb: f64 = flag(args, "--heap-mb").and_then(|h| h.parse().ok()).unwrap_or(2048.0);
+    let opts = CompileOptions {
+        cc: systemds::api::ClusterConfigOpt(ClusterConfig::local(threads, heap_mb * MB)),
+        ..Default::default()
+    };
+    let compiled = match compile(&src, &script_args, &opts) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("compile error: {e}");
+            return 1;
+        }
+    };
+    let report =
+        cost::cost_program(&compiled.runtime, &opts.cfg, &opts.cc.0, &CostConstants::default());
+    eprintln!("estimated cost: {:.3}s", report.total);
+    let registry = KernelRegistry::load(std::path::Path::new("artifacts")).ok();
+    let scratch = std::env::temp_dir().join(format!("sysds_run_{}", std::process::id()));
+    let mut exec = Executor::new(&opts.cfg, &opts.cc.0, registry.as_ref(), scratch);
+    match exec.run(&compiled.runtime) {
+        Ok(stats) => {
+            eprintln!(
+                "executed: {} CP insts, {} MR jobs, {} PJRT calls, {:.3}s",
+                stats.cp_insts, stats.mr_jobs, stats.pjrt_calls, stats.elapsed_secs
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("execution error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_resource_opt(args: &[String]) -> i32 {
+    let name = flag(args, "--scenario").unwrap_or_else(|| "xs".into());
+    let heaps: Vec<f64> = flag(args, "--heaps")
+        .map(|h| h.split(',').filter_map(|x| x.parse().ok()).collect())
+        .unwrap_or_else(|| vec![256.0, 512.0, 1024.0, 2048.0, 4096.0, 8192.0]);
+    let Some(s) = scenario_by_name(&name) else {
+        eprintln!("unknown scenario '{name}'");
+        return 2;
+    };
+    let choice = match resource::optimize(
+        s.script(),
+        &s.args(),
+        &s.meta(1000),
+        &ClusterConfig::paper_cluster(),
+        &heaps,
+    ) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    println!("{:>10} {:>8} {:>12}", "heap", "MR jobs", "est. cost");
+    for p in &choice.frontier {
+        println!(
+            "{:>8}MB {:>8} {:>11.1}s",
+            (p.heap_bytes / MB) as i64,
+            p.mr_jobs,
+            p.cost_secs
+        );
+    }
+    println!(
+        "best: {}MB ({:.1}s)",
+        (choice.best.heap_bytes / MB) as i64,
+        choice.best.cost_secs
+    );
+    0
+}

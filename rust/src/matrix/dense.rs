@@ -1,0 +1,129 @@
+//! Dense row-major matrix.
+
+use crate::util::rng::Rng;
+
+/// Dense row-major f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub values: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        DenseMatrix { rows, cols, values: vec![0.0; rows * cols] }
+    }
+
+    /// Constant-filled matrix (DML `matrix(v, rows, cols)`).
+    pub fn filled(rows: usize, cols: usize, v: f64) -> Self {
+        DenseMatrix { rows, cols, values: vec![v; rows * cols] }
+    }
+
+    /// From row-major data.
+    pub fn from_vec(rows: usize, cols: usize, values: Vec<f64>) -> Self {
+        assert_eq!(values.len(), rows * cols, "shape/data mismatch");
+        DenseMatrix { rows, cols, values }
+    }
+
+    /// Uniform random matrix in [lo, hi) with the given sparsity.
+    pub fn rand(rows: usize, cols: usize, lo: f64, hi: f64, sparsity: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut values = vec![0.0; rows * cols];
+        for v in values.iter_mut() {
+            if sparsity >= 1.0 || rng.chance(sparsity) {
+                *v = rng.uniform(lo, hi);
+            }
+        }
+        DenseMatrix { rows, cols, values }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.values[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.values[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.values[r * self.cols + c] = v;
+    }
+
+    /// Row slice view.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.values[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Count non-zero values.
+    pub fn nnz(&self) -> usize {
+        self.values.iter().filter(|v| **v != 0.0).count()
+    }
+
+    /// Max absolute elementwise difference to another matrix.
+    pub fn max_abs_diff(&self, other: &DenseMatrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.values
+            .iter()
+            .zip(&other.values)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Frobenius norm.
+    pub fn frob(&self) -> f64 {
+        self.values.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_filled() {
+        let z = DenseMatrix::zeros(3, 4);
+        assert_eq!(z.nnz(), 0);
+        let f = DenseMatrix::filled(2, 2, 5.0);
+        assert_eq!(f.get(1, 1), 5.0);
+        assert_eq!(f.nnz(), 4);
+    }
+
+    #[test]
+    fn eye_diagonal() {
+        let i = DenseMatrix::eye(4);
+        assert_eq!(i.nnz(), 4);
+        assert_eq!(i.get(2, 2), 1.0);
+        assert_eq!(i.get(2, 3), 0.0);
+    }
+
+    #[test]
+    fn rand_respects_bounds_and_sparsity() {
+        let m = DenseMatrix::rand(100, 100, -1.0, 1.0, 0.5, 7);
+        assert!(m.values.iter().all(|v| (-1.0..1.0).contains(v)));
+        let s = m.nnz() as f64 / 10_000.0;
+        assert!((s - 0.5).abs() < 0.05, "sparsity={s}");
+    }
+
+    #[test]
+    fn rand_deterministic() {
+        let a = DenseMatrix::rand(10, 10, 0.0, 1.0, 1.0, 42);
+        let b = DenseMatrix::rand(10, 10, 0.0, 1.0, 1.0, 42);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn row_access() {
+        let m = DenseMatrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+    }
+}

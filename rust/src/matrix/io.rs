@@ -1,0 +1,243 @@
+//! Matrix IO: binary-block and textcell serialization to local files,
+//! standing in for HDFS in the executable scenarios. A sibling `.mtd`
+//! metadata file carries dimensions/nnz/format, like SystemML's.
+
+use std::fs;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::dense::DenseMatrix;
+use super::{Format, MatrixCharacteristics};
+
+/// Simple JSON-ish metadata sidecar (SystemML writes `<file>.mtd`).
+pub fn write_mtd(path: &str, mc: &MatrixCharacteristics, format: Format) -> std::io::Result<()> {
+    let mtd = format!(
+        "{{\"data_type\":\"matrix\",\"value_type\":\"double\",\"rows\":{},\"cols\":{},\"rows_in_block\":{},\"cols_in_block\":{},\"nnz\":{},\"format\":\"{}\"}}\n",
+        mc.rows, mc.cols, mc.brows, mc.bcols, mc.nnz, format.name()
+    );
+    fs::write(format!("{path}.mtd"), mtd)
+}
+
+/// Parse the metadata sidecar.
+pub fn read_mtd(path: &str) -> std::io::Result<(MatrixCharacteristics, Format)> {
+    let text = fs::read_to_string(format!("{path}.mtd"))?;
+    let get_i64 = |key: &str| -> i64 {
+        text.split(&format!("\"{key}\":"))
+            .nth(1)
+            .and_then(|s| s.split([',', '}']).next())
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap_or(-1)
+    };
+    let format = if text.contains("textcell") {
+        Format::TextCell
+    } else if text.contains("csv") {
+        Format::Csv
+    } else {
+        Format::BinaryBlock
+    };
+    Ok((
+        MatrixCharacteristics {
+            rows: get_i64("rows"),
+            cols: get_i64("cols"),
+            brows: get_i64("rows_in_block"),
+            bcols: get_i64("cols_in_block"),
+            nnz: get_i64("nnz"),
+        },
+        format,
+    ))
+}
+
+/// Write a dense matrix in binary-block format: a little-endian stream of
+/// `(block_row, block_col, rows, cols, values...)` records, row-major within
+/// each block.
+pub fn write_binary_block(
+    path: &str,
+    m: &DenseMatrix,
+    blocksize: usize,
+) -> std::io::Result<()> {
+    if let Some(parent) = Path::new(path).parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let f = fs::File::create(path)?;
+    let mut w = BufWriter::with_capacity(1 << 20, f);
+    let rb = (m.rows + blocksize - 1) / blocksize.max(1);
+    let cb = (m.cols + blocksize - 1) / blocksize.max(1);
+    for bi in 0..rb.max(1) {
+        for bj in 0..cb.max(1) {
+            let r0 = bi * blocksize;
+            let c0 = bj * blocksize;
+            let rows = blocksize.min(m.rows - r0);
+            let cols = blocksize.min(m.cols - c0);
+            w.write_all(&(bi as u32).to_le_bytes())?;
+            w.write_all(&(bj as u32).to_le_bytes())?;
+            w.write_all(&(rows as u32).to_le_bytes())?;
+            w.write_all(&(cols as u32).to_le_bytes())?;
+            for r in r0..r0 + rows {
+                let row = &m.row(r)[c0..c0 + cols];
+                // SAFETY-free serialization: write each f64 LE.
+                for v in row {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    w.flush()?;
+    write_mtd(
+        path,
+        &MatrixCharacteristics::new(m.rows as i64, m.cols as i64, blocksize as i64, m.nnz() as i64),
+        Format::BinaryBlock,
+    )
+}
+
+/// Read a binary-block file written by [`write_binary_block`].
+pub fn read_binary_block(path: &str) -> std::io::Result<DenseMatrix> {
+    let (mc, _) = read_mtd(path)?;
+    let mut m = DenseMatrix::zeros(mc.rows as usize, mc.cols as usize);
+    let blocksize = mc.brows as usize;
+    let f = fs::File::open(path)?;
+    let mut r = BufReader::with_capacity(1 << 20, f);
+    let mut hdr = [0u8; 16];
+    loop {
+        match r.read_exact(&mut hdr) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e),
+        }
+        let bi = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+        let bj = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+        let rows = u32::from_le_bytes(hdr[8..12].try_into().unwrap()) as usize;
+        let cols = u32::from_le_bytes(hdr[12..16].try_into().unwrap()) as usize;
+        let mut buf = vec![0u8; rows * cols * 8];
+        r.read_exact(&mut buf)?;
+        let r0 = bi * blocksize;
+        let c0 = bj * blocksize;
+        for i in 0..rows {
+            for j in 0..cols {
+                let o = (i * cols + j) * 8;
+                let v = f64::from_le_bytes(buf[o..o + 8].try_into().unwrap());
+                m.set(r0 + i, c0 + j, v);
+            }
+        }
+    }
+    Ok(m)
+}
+
+/// Write textcell format: `row col value` per line, 1-based, nonzeros only.
+pub fn write_textcell(path: &str, m: &DenseMatrix) -> std::io::Result<()> {
+    if let Some(parent) = Path::new(path).parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let f = fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for r in 0..m.rows {
+        for c in 0..m.cols {
+            let v = m.get(r, c);
+            if v != 0.0 {
+                writeln!(w, "{} {} {}", r + 1, c + 1, v)?;
+            }
+        }
+    }
+    w.flush()?;
+    write_mtd(
+        path,
+        &MatrixCharacteristics::new(m.rows as i64, m.cols as i64, -1, m.nnz() as i64),
+        Format::TextCell,
+    )
+}
+
+/// Read textcell format (needs the `.mtd` sidecar for dimensions).
+pub fn read_textcell(path: &str) -> std::io::Result<DenseMatrix> {
+    let (mc, _) = read_mtd(path)?;
+    let mut m = DenseMatrix::zeros(mc.rows as usize, mc.cols as usize);
+    let f = fs::File::open(path)?;
+    for line in BufReader::new(f).lines() {
+        let line = line?;
+        let mut it = line.split_whitespace();
+        let (Some(r), Some(c), Some(v)) = (it.next(), it.next(), it.next()) else { continue };
+        let (r, c): (usize, usize) = (r.parse().unwrap_or(1), c.parse().unwrap_or(1));
+        m.set(r - 1, c - 1, v.parse().unwrap_or(0.0));
+    }
+    Ok(m)
+}
+
+/// Read any supported format by consulting the metadata sidecar.
+pub fn read_matrix(path: &str) -> std::io::Result<DenseMatrix> {
+    let (_, format) = read_mtd(path)?;
+    match format {
+        Format::BinaryBlock => read_binary_block(path),
+        Format::TextCell => read_textcell(path),
+        Format::Csv => {
+            // CSV: infer shape from the file.
+            let text = fs::read_to_string(path)?;
+            let rows: Vec<Vec<f64>> = text
+                .lines()
+                .filter(|l| !l.trim().is_empty())
+                .map(|l| l.split(',').map(|v| v.trim().parse().unwrap_or(0.0)).collect())
+                .collect();
+            let r = rows.len();
+            let c = rows.first().map_or(0, |x| x.len());
+            Ok(DenseMatrix::from_vec(r, c, rows.into_iter().flatten().collect()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> String {
+        let d = std::env::temp_dir().join(format!("sysds_io_{}", std::process::id()));
+        fs::create_dir_all(&d).unwrap();
+        d.to_string_lossy().to_string()
+    }
+
+    #[test]
+    fn binary_block_roundtrip() {
+        let dir = tmpdir();
+        let path = format!("{dir}/bb_roundtrip");
+        let m = DenseMatrix::rand(257, 129, -5.0, 5.0, 0.8, 42);
+        write_binary_block(&path, &m, 100).unwrap();
+        let back = read_binary_block(&path).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn binary_block_vector() {
+        let dir = tmpdir();
+        let path = format!("{dir}/bb_vec");
+        let m = DenseMatrix::rand(1000, 1, 0.0, 1.0, 1.0, 7);
+        write_binary_block(&path, &m, 128).unwrap();
+        assert_eq!(read_binary_block(&path).unwrap(), m);
+    }
+
+    #[test]
+    fn textcell_roundtrip() {
+        let dir = tmpdir();
+        let path = format!("{dir}/tc_roundtrip");
+        let m = DenseMatrix::rand(31, 17, -1.0, 1.0, 0.3, 9);
+        write_textcell(&path, &m).unwrap();
+        let back = read_textcell(&path).unwrap();
+        assert!(m.max_abs_diff(&back) < 1e-12);
+    }
+
+    #[test]
+    fn mtd_roundtrip() {
+        let dir = tmpdir();
+        let path = format!("{dir}/meta");
+        let mc = MatrixCharacteristics::new(12345, 678, 1000, 999);
+        write_mtd(&path, &mc, Format::BinaryBlock).unwrap();
+        let (back, fmt) = read_mtd(&path).unwrap();
+        assert_eq!(back, mc);
+        assert_eq!(fmt, Format::BinaryBlock);
+    }
+
+    #[test]
+    fn read_matrix_dispatches_on_format() {
+        let dir = tmpdir();
+        let path = format!("{dir}/dispatch");
+        let m = DenseMatrix::rand(10, 10, 0.0, 1.0, 1.0, 1);
+        write_textcell(&path, &m).unwrap();
+        let back = read_matrix(&path).unwrap();
+        assert!(m.max_abs_diff(&back) < 1e-12);
+    }
+}

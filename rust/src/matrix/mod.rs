@@ -1,0 +1,315 @@
+//! Matrix substrate: metadata (`MatrixCharacteristics`), in-memory
+//! dense/sparse representations, native operations, and serialized formats
+//! (binary-block, textcell) with local-disk IO standing in for HDFS.
+//!
+//! Size estimation here implements the paper's `M̂(X)` (in-memory size) and
+//! `M̂'(X)` (serialized size) functions (§3.1), which feed both the
+//! optimizer's memory estimates (§2) and the cost model's IO times (§3.3).
+
+pub mod dense;
+pub mod io;
+pub mod ops;
+pub mod sparse;
+
+pub use dense::DenseMatrix;
+pub use sparse::CsrMatrix;
+
+/// Serialized matrix format on (simulated) HDFS or local scratch space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Format {
+    /// SystemML's blocked binary format (dense or sparse blocks).
+    BinaryBlock,
+    /// One `row col value` triple per line.
+    TextCell,
+    /// Comma-separated dense rows.
+    Csv,
+}
+
+impl Format {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Format::BinaryBlock => "binaryblock",
+            Format::TextCell => "textcell",
+            Format::Csv => "csv",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Format> {
+        match s {
+            "binaryblock" | "binary" => Some(Format::BinaryBlock),
+            "textcell" | "text" => Some(Format::TextCell),
+            "csv" => Some(Format::Csv),
+            _ => None,
+        }
+    }
+}
+
+/// Size metadata of a matrix: dimensions, blocking, and number of
+/// non-zeros. Unknown values are encoded as `-1` (exactly as SystemML's
+/// EXPLAIN prints them, e.g. `[1e3,1,-1,-1,-1]`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct MatrixCharacteristics {
+    pub rows: i64,
+    pub cols: i64,
+    pub brows: i64,
+    pub bcols: i64,
+    pub nnz: i64,
+}
+
+impl MatrixCharacteristics {
+    pub fn new(rows: i64, cols: i64, blocksize: i64, nnz: i64) -> Self {
+        MatrixCharacteristics { rows, cols, brows: blocksize, bcols: blocksize, nnz }
+    }
+
+    /// Fully-known dense matrix.
+    pub fn dense(rows: i64, cols: i64, blocksize: i64) -> Self {
+        Self::new(rows, cols, blocksize, rows.saturating_mul(cols))
+    }
+
+    /// Completely unknown characteristics.
+    pub fn unknown() -> Self {
+        MatrixCharacteristics { rows: -1, cols: -1, brows: -1, bcols: -1, nnz: -1 }
+    }
+
+    /// Scalar pseudo-characteristics (SystemML prints `[0,0,-1,-1,-1]`).
+    pub fn scalar() -> Self {
+        MatrixCharacteristics { rows: 0, cols: 0, brows: -1, bcols: -1, nnz: -1 }
+    }
+
+    pub fn dims_known(&self) -> bool {
+        self.rows >= 0 && self.cols >= 0
+    }
+
+    pub fn nnz_known(&self) -> bool {
+        self.nnz >= 0
+    }
+
+    pub fn is_scalar(&self) -> bool {
+        self.rows == 0 && self.cols == 0
+    }
+
+    /// Number of cells, or `None` if dimensions are unknown.
+    pub fn cells(&self) -> Option<f64> {
+        if self.dims_known() {
+            Some(self.rows as f64 * self.cols as f64)
+        } else {
+            None
+        }
+    }
+
+    /// Sparsity `s = nnz/(m*n)` (§3.1); falls back to 1.0 (dense) when nnz
+    /// is unknown, the conservative choice the compiler makes.
+    pub fn sparsity(&self) -> f64 {
+        match (self.cells(), self.nnz_known()) {
+            (Some(c), true) if c > 0.0 => (self.nnz as f64 / c).min(1.0),
+            _ => 1.0,
+        }
+    }
+
+    /// Would this matrix be stored sparse in memory? (MatrixBlock rule:
+    /// sparsity below threshold and more than one column.)
+    pub fn sparse_in_memory(&self, sparse_threshold: f64) -> bool {
+        self.dims_known() && self.cols > 1 && self.sparsity() < sparse_threshold
+    }
+
+    /// Estimated in-memory size `M̂(X)` in bytes (§3.1). Dense: 8 B/cell
+    /// plus array overhead; sparse CSR: 12 B/nnz + 4 B/row. Unknown
+    /// dimensions yield `f64::INFINITY`, which forces conservative
+    /// (robust, MR) plans exactly like SystemML's fallback (§3.5).
+    pub fn mem_estimate(&self, sparse_threshold: f64) -> f64 {
+        let Some(cells) = self.cells() else { return f64::INFINITY };
+        if self.is_scalar() {
+            return 64.0;
+        }
+        if self.sparse_in_memory(sparse_threshold) {
+            let nnz = self.nnz as f64;
+            nnz * 12.0 + self.rows as f64 * 4.0 + 64.0
+        } else {
+            cells * 8.0 + 64.0
+        }
+    }
+
+    /// Estimated serialized size `M̂'(X)` in bytes for a given format.
+    pub fn serialized_size(&self, format: Format) -> f64 {
+        let Some(cells) = self.cells() else { return f64::INFINITY };
+        if self.is_scalar() {
+            return 16.0;
+        }
+        let nnz = if self.nnz_known() { self.nnz as f64 } else { cells };
+        match format {
+            // Binary block: dense blocks 8 B/cell; sparse blocks ~12 B/nnz.
+            // Block headers are negligible at 1000x1000 blocks.
+            Format::BinaryBlock => {
+                if self.sparsity() < 0.4 {
+                    nnz * 12.0
+                } else {
+                    cells * 8.0
+                }
+            }
+            // Textcell: ~ "row col value\n" — about 25 bytes per nnz.
+            Format::TextCell => nnz * 25.0,
+            // CSV: ~13 bytes per cell (dense writing).
+            Format::Csv => cells * 13.0,
+        }
+    }
+
+    /// Number of row blocks.
+    pub fn row_blocks(&self) -> i64 {
+        if self.rows < 0 || self.brows <= 0 {
+            -1
+        } else {
+            (self.rows + self.brows - 1) / self.brows
+        }
+    }
+
+    /// Number of column blocks.
+    pub fn col_blocks(&self) -> i64 {
+        if self.cols < 0 || self.bcols <= 0 {
+            -1
+        } else {
+            (self.cols + self.bcols - 1) / self.bcols
+        }
+    }
+
+    /// EXPLAIN rendering, e.g. `[1e4,1e3,1e3,1e3,1e7]`.
+    pub fn explain(&self) -> String {
+        use crate::util::fmt::fmt_dim;
+        format!(
+            "[{},{},{},{},{}]",
+            fmt_dim(self.rows),
+            fmt_dim(self.cols),
+            fmt_dim(self.brows),
+            fmt_dim(self.bcols),
+            fmt_dim(self.nnz)
+        )
+    }
+}
+
+/// In-memory matrix value: dense or CSR sparse.
+#[derive(Clone, Debug)]
+pub enum MatrixData {
+    Dense(DenseMatrix),
+    Sparse(CsrMatrix),
+}
+
+impl MatrixData {
+    pub fn rows(&self) -> usize {
+        match self {
+            MatrixData::Dense(d) => d.rows,
+            MatrixData::Sparse(s) => s.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            MatrixData::Dense(d) => d.cols,
+            MatrixData::Sparse(s) => s.cols,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        match self {
+            MatrixData::Dense(d) => d.nnz(),
+            MatrixData::Sparse(s) => s.nnz(),
+        }
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        match self {
+            MatrixData::Dense(d) => d.get(r, c),
+            MatrixData::Sparse(s) => s.get(r, c),
+        }
+    }
+
+    /// Convert to dense (copies if sparse).
+    pub fn to_dense(&self) -> DenseMatrix {
+        match self {
+            MatrixData::Dense(d) => d.clone(),
+            MatrixData::Sparse(s) => s.to_dense(),
+        }
+    }
+
+    /// Actual in-memory footprint in bytes.
+    pub fn mem_size(&self) -> f64 {
+        match self {
+            MatrixData::Dense(d) => (d.values.len() * 8) as f64 + 64.0,
+            MatrixData::Sparse(s) => {
+                (s.values.len() * 12 + s.row_ptr.len() * 8) as f64 + 64.0
+            }
+        }
+    }
+
+    /// Characteristics of this concrete matrix at a given block size.
+    pub fn characteristics(&self, blocksize: i64) -> MatrixCharacteristics {
+        MatrixCharacteristics::new(
+            self.rows() as i64,
+            self.cols() as i64,
+            blocksize,
+            self.nnz() as i64,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xs_scenario_sizes_match_paper() {
+        // Table 1 / Figure 1: X: 1e4 x 1e3 dense = 76MB in-memory estimate,
+        // 80 MB (8e7 B) serialized.
+        let x = MatrixCharacteristics::dense(10_000, 1_000, 1000);
+        assert_eq!(x.serialized_size(Format::BinaryBlock), 8.0e7);
+        let mb = x.mem_estimate(0.4) / (1024.0 * 1024.0);
+        assert_eq!(mb.round() as i64, 76); // EXPLAIN prints 76MB
+        assert_eq!(x.explain(), "[1e4,1e3,1e3,1e3,1e7]");
+    }
+
+    #[test]
+    fn xl_scenario_input_sizes_match_table1() {
+        // Table 1: XL1 800 GB, XL2/XL3 1.6 TB, XL4 3.2 TB (decimal units).
+        let xl1 = MatrixCharacteristics::dense(100_000_000, 1_000, 1000);
+        assert_eq!(xl1.serialized_size(Format::BinaryBlock), 8.0e11); // 800 GB
+        let xl4 = MatrixCharacteristics::dense(200_000_000, 2_000, 1000);
+        assert_eq!(xl4.serialized_size(Format::BinaryBlock), 3.2e12); // 3.2 TB
+    }
+
+    #[test]
+    fn sparsity_and_sparse_memory() {
+        let mut mc = MatrixCharacteristics::dense(1000, 1000, 1000);
+        mc.nnz = 10_000; // s = 0.01
+        assert!((mc.sparsity() - 0.01).abs() < 1e-12);
+        assert!(mc.sparse_in_memory(0.4));
+        // Sparse estimate much smaller than dense.
+        assert!(mc.mem_estimate(0.4) < 1000.0 * 1000.0 * 8.0);
+    }
+
+    #[test]
+    fn vectors_never_sparse_in_memory() {
+        let mut mc = MatrixCharacteristics::dense(1000, 1, 1000);
+        mc.nnz = 10;
+        assert!(!mc.sparse_in_memory(0.4));
+    }
+
+    #[test]
+    fn unknown_dims_are_infinite_memory() {
+        let mc = MatrixCharacteristics::unknown();
+        assert!(mc.mem_estimate(0.4).is_infinite());
+        assert_eq!(mc.explain(), "[-1,-1,-1,-1,-1]");
+    }
+
+    #[test]
+    fn scalar_characteristics() {
+        let mc = MatrixCharacteristics::scalar();
+        assert!(mc.is_scalar());
+        assert_eq!(mc.explain(), "[0,0,-1,-1,-1]");
+        assert!(mc.mem_estimate(0.4) < 1024.0);
+    }
+
+    #[test]
+    fn block_counts() {
+        let mc = MatrixCharacteristics::dense(10_000, 1_500, 1000);
+        assert_eq!(mc.row_blocks(), 10);
+        assert_eq!(mc.col_blocks(), 2);
+    }
+}

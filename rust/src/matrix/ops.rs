@@ -1,0 +1,465 @@
+//! Native matrix operations.
+//!
+//! These are the reference implementations used by the CP runtime and the
+//! MR simulator whenever no AOT-compiled PJRT kernel matches the shape
+//! (the kernel registry in [`crate::runtime`] handles the hot shapes).
+//! The matmul family is cache-blocked and multi-threaded via
+//! `std::thread::scope` — profiled in `benches/cp_ops.rs`.
+
+use super::dense::DenseMatrix;
+
+/// Cache block edge for the blocked matmul inner kernels.
+const BLK: usize = 64;
+
+/// Transpose.
+pub fn transpose(a: &DenseMatrix) -> DenseMatrix {
+    let mut out = DenseMatrix::zeros(a.cols, a.rows);
+    // Blocked transpose for cache friendliness.
+    for rb in (0..a.rows).step_by(BLK) {
+        for cb in (0..a.cols).step_by(BLK) {
+            for r in rb..(rb + BLK).min(a.rows) {
+                for c in cb..(cb + BLK).min(a.cols) {
+                    out.values[c * a.rows + r] = a.values[r * a.cols + c];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// General matrix multiply C = A * B (single-threaded, cache-blocked ikj).
+pub fn matmult_st(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    assert_eq!(a.cols, b.rows, "matmult shape mismatch");
+    let mut c = DenseMatrix::zeros(a.rows, b.cols);
+    matmult_into(a, b, &mut c.values, 0, a.rows);
+    c
+}
+
+/// Multi-threaded matrix multiply, splitting rows of A across `threads`.
+pub fn matmult(a: &DenseMatrix, b: &DenseMatrix, threads: usize) -> DenseMatrix {
+    assert_eq!(a.cols, b.rows, "matmult shape mismatch");
+    let mut c = DenseMatrix::zeros(a.rows, b.cols);
+    let t = threads.clamp(1, a.rows.max(1));
+    if t == 1 || a.rows * b.cols < 64 * 64 {
+        matmult_into(a, b, &mut c.values, 0, a.rows);
+        return c;
+    }
+    let chunk_rows = (a.rows + t - 1) / t;
+    let n = b.cols;
+    let chunks: Vec<(usize, &mut [f64])> = c
+        .values
+        .chunks_mut(chunk_rows * n)
+        .enumerate()
+        .map(|(i, ch)| (i * chunk_rows, ch))
+        .collect();
+    std::thread::scope(|s| {
+        for (row0, ch) in chunks {
+            s.spawn(move || {
+                let rows = ch.len() / n;
+                matmult_into(a, b, ch, row0, rows);
+            });
+        }
+    });
+    c
+}
+
+/// Inner kernel: compute `rows` rows of A*B starting at `row0` into `out`
+/// (row-major, `rows * b.cols` long).
+fn matmult_into(a: &DenseMatrix, b: &DenseMatrix, out: &mut [f64], row0: usize, rows: usize) {
+    let n = b.cols;
+    let k = a.cols;
+    for kb in (0..k).step_by(BLK) {
+        let kend = (kb + BLK).min(k);
+        for i in 0..rows {
+            let arow = a.row(row0 + i);
+            let crow = &mut out[i * n..(i + 1) * n];
+            // 4-way k-unroll: one C-row pass per four B rows.
+            let mut kk = kb;
+            while kk + 4 <= kend {
+                let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+                if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                    let b0 = b.row(kk);
+                    let b1 = b.row(kk + 1);
+                    let b2 = b.row(kk + 2);
+                    let b3 = b.row(kk + 3);
+                    for j in 0..n {
+                        crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                    }
+                }
+                kk += 4;
+            }
+            while kk < kend {
+                let av = arow[kk];
+                if av != 0.0 {
+                    let brow = b.row(kk);
+                    for j in 0..n {
+                        crow[j] += av * brow[j];
+                    }
+                }
+                kk += 1;
+            }
+        }
+    }
+}
+
+/// Transpose-self matrix multiply: `t(X) %*% X` exploiting result symmetry
+/// (the paper's `tsmm` physical operator, Eq. 2: only half the computation).
+pub fn tsmm_left(x: &DenseMatrix, threads: usize) -> DenseMatrix {
+    let n = x.cols;
+    let mut c = DenseMatrix::zeros(n, n);
+    let t = threads.clamp(1, n.max(1));
+    // Parallelise over output column panels; each thread computes the upper
+    // triangle entries of its panel; mirror at the end.
+    let panel = (n + t - 1) / t;
+    let panels: Vec<(usize, &mut [f64])> = c
+        .values
+        .chunks_mut(panel * n)
+        .enumerate()
+        .map(|(i, ch)| (i * panel, ch))
+        .collect();
+    std::thread::scope(|s| {
+        for (i0, ch) in panels {
+            s.spawn(move || {
+                let rows = ch.len() / n;
+                // 4-row register blocking: one pass over each C row per 4
+                // input rows quarters the C-row load/store traffic.
+                let mut r = 0;
+                while r + 4 <= x.rows {
+                    let (x0, x1, x2, x3) =
+                        (x.row(r), x.row(r + 1), x.row(r + 2), x.row(r + 3));
+                    for i in 0..rows {
+                        let (v0, v1, v2, v3) =
+                            (x0[i0 + i], x1[i0 + i], x2[i0 + i], x3[i0 + i]);
+                        if v0 == 0.0 && v1 == 0.0 && v2 == 0.0 && v3 == 0.0 {
+                            continue;
+                        }
+                        let crow = &mut ch[i * n..(i + 1) * n];
+                        // only j >= i0+i (upper triangle)
+                        for j in (i0 + i)..n {
+                            crow[j] += v0 * x0[j] + v1 * x1[j] + v2 * x2[j] + v3 * x3[j];
+                        }
+                    }
+                    r += 4;
+                }
+                while r < x.rows {
+                    let xr = x.row(r);
+                    for i in 0..rows {
+                        let v = xr[i0 + i];
+                        if v == 0.0 {
+                            continue;
+                        }
+                        let crow = &mut ch[i * n..(i + 1) * n];
+                        for j in (i0 + i)..n {
+                            crow[j] += v * xr[j];
+                        }
+                    }
+                    r += 1;
+                }
+            });
+        }
+    });
+    // Mirror upper to lower triangle.
+    for i in 0..n {
+        for j in (i + 1)..n {
+            c.values[j * n + i] = c.values[i * n + j];
+        }
+    }
+    c
+}
+
+/// Elementwise binary operation.
+pub fn ewise(a: &DenseMatrix, b: &DenseMatrix, f: impl Fn(f64, f64) -> f64) -> DenseMatrix {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "ewise shape mismatch");
+    let values = a.values.iter().zip(&b.values).map(|(x, y)| f(*x, *y)).collect();
+    DenseMatrix { rows: a.rows, cols: a.cols, values }
+}
+
+/// Elementwise op with a scalar.
+pub fn ewise_scalar(a: &DenseMatrix, s: f64, f: impl Fn(f64, f64) -> f64) -> DenseMatrix {
+    let values = a.values.iter().map(|x| f(*x, s)).collect();
+    DenseMatrix { rows: a.rows, cols: a.cols, values }
+}
+
+/// Elementwise unary op.
+pub fn unary(a: &DenseMatrix, f: impl Fn(f64) -> f64) -> DenseMatrix {
+    DenseMatrix { rows: a.rows, cols: a.cols, values: a.values.iter().map(|x| f(*x)).collect() }
+}
+
+/// Column vector -> diagonal matrix, or square matrix -> diagonal column
+/// vector (DML `diag`, SystemML `r(diag)`).
+pub fn diag(a: &DenseMatrix) -> DenseMatrix {
+    if a.cols == 1 {
+        let n = a.rows;
+        let mut out = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            out.values[i * n + i] = a.values[i];
+        }
+        out
+    } else {
+        assert_eq!(a.rows, a.cols, "diag needs vector or square matrix");
+        let n = a.rows;
+        let mut out = DenseMatrix::zeros(n, 1);
+        for i in 0..n {
+            out.values[i] = a.values[i * n + i];
+        }
+        out
+    }
+}
+
+/// Horizontal concatenation (DML `append`/`cbind`).
+pub fn cbind(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    assert_eq!(a.rows, b.rows, "cbind row mismatch");
+    let cols = a.cols + b.cols;
+    let mut out = DenseMatrix::zeros(a.rows, cols);
+    for r in 0..a.rows {
+        out.values[r * cols..r * cols + a.cols].copy_from_slice(a.row(r));
+        out.values[r * cols + a.cols..(r + 1) * cols].copy_from_slice(b.row(r));
+    }
+    out
+}
+
+/// Vertical concatenation (DML `rbind`).
+pub fn rbind(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    assert_eq!(a.cols, b.cols, "rbind col mismatch");
+    let mut values = a.values.clone();
+    values.extend_from_slice(&b.values);
+    DenseMatrix { rows: a.rows + b.rows, cols: a.cols, values }
+}
+
+/// Full aggregate sum.
+pub fn sum(a: &DenseMatrix) -> f64 {
+    // Kahan-compensated like SystemML's ak+ [4].
+    let mut s = 0.0;
+    let mut c = 0.0;
+    for v in &a.values {
+        let y = v - c;
+        let t = s + y;
+        c = (t - s) - y;
+        s = t;
+    }
+    s
+}
+
+/// Row sums (m x 1).
+pub fn row_sums(a: &DenseMatrix) -> DenseMatrix {
+    let mut out = DenseMatrix::zeros(a.rows, 1);
+    for r in 0..a.rows {
+        out.values[r] = a.row(r).iter().sum();
+    }
+    out
+}
+
+/// Column sums (1 x n).
+pub fn col_sums(a: &DenseMatrix) -> DenseMatrix {
+    let mut out = DenseMatrix::zeros(1, a.cols);
+    for r in 0..a.rows {
+        for c in 0..a.cols {
+            out.values[c] += a.get(r, c);
+        }
+    }
+    out
+}
+
+/// Solve the linear system `A x = b` via LU decomposition with partial
+/// pivoting (DML `solve`, SystemML `b(solve)`).
+pub fn solve(a: &DenseMatrix, b: &DenseMatrix) -> Result<DenseMatrix, String> {
+    if a.rows != a.cols {
+        return Err("solve: A must be square".into());
+    }
+    if b.rows != a.rows {
+        return Err("solve: dimension mismatch".into());
+    }
+    let n = a.rows;
+    let m = b.cols;
+    let mut lu = a.values.clone();
+    let mut x = b.values.clone();
+    let mut perm: Vec<usize> = (0..n).collect();
+    for k in 0..n {
+        // partial pivot
+        let mut p = k;
+        let mut maxv = lu[perm[k] * n + k].abs();
+        for i in (k + 1)..n {
+            let v = lu[perm[i] * n + k].abs();
+            if v > maxv {
+                maxv = v;
+                p = i;
+            }
+        }
+        if maxv < 1e-300 {
+            return Err("solve: singular matrix".into());
+        }
+        perm.swap(k, p);
+        let pk = perm[k];
+        let pivot = lu[pk * n + k];
+        for i in (k + 1)..n {
+            let pi = perm[i];
+            let f = lu[pi * n + k] / pivot;
+            lu[pi * n + k] = f;
+            for j in (k + 1)..n {
+                lu[pi * n + j] -= f * lu[pk * n + j];
+            }
+            for j in 0..m {
+                x[pi * m + j] -= f * x[pk * m + j];
+            }
+        }
+    }
+    // Back substitution.
+    let mut out = vec![0.0; n * m];
+    for j in 0..m {
+        for i in (0..n).rev() {
+            let pi = perm[i];
+            let mut s = x[pi * m + j];
+            for k2 in (i + 1)..n {
+                s -= lu[pi * n + k2] * out[k2 * m + j];
+            }
+            out[i * m + j] = s / lu[pi * n + i];
+        }
+    }
+    Ok(DenseMatrix { rows: n, cols: m, values: out })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn randm(r: usize, c: usize, seed: u64) -> DenseMatrix {
+        DenseMatrix::rand(r, c, -1.0, 1.0, 1.0, seed)
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = randm(17, 29, 1);
+        assert_eq!(transpose(&transpose(&a)), a);
+    }
+
+    #[test]
+    fn matmult_matches_naive() {
+        let a = randm(13, 7, 2);
+        let b = randm(7, 11, 3);
+        let c = matmult(&a, &b, 4);
+        for i in 0..13 {
+            for j in 0..11 {
+                let expect: f64 = (0..7).map(|k| a.get(i, k) * b.get(k, j)).sum();
+                assert!((c.get(i, j) - expect).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn matmult_threaded_equals_single() {
+        let a = randm(130, 40, 4);
+        let b = randm(40, 70, 5);
+        assert!(matmult(&a, &b, 8).max_abs_diff(&matmult_st(&a, &b)) < 1e-12);
+    }
+
+    #[test]
+    fn tsmm_matches_explicit_product() {
+        let x = randm(50, 20, 6);
+        let explicit = matmult_st(&transpose(&x), &x);
+        let fast = tsmm_left(&x, 4);
+        assert!(fast.max_abs_diff(&explicit) < 1e-10);
+    }
+
+    #[test]
+    fn tsmm_result_symmetric_property() {
+        prop::forall(
+            25,
+            77,
+            |r| {
+                let m = r.range_i64(1, 40) as usize;
+                let n = r.range_i64(1, 30) as usize;
+                DenseMatrix::rand(m, n, -2.0, 2.0, 0.7, r.next_u64())
+            },
+            |x| {
+                let c = tsmm_left(x, 3);
+                for i in 0..c.rows {
+                    for j in 0..c.cols {
+                        if (c.get(i, j) - c.get(j, i)).abs() > 1e-10 {
+                            return Err(format!("asymmetric at ({i},{j})"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn ytx_transpose_rewrite_property() {
+        // (t(X) %*% y) == t(t(y) %*% X) — the HOP-LOP rewrite of Figure 2.
+        prop::forall(
+            25,
+            88,
+            |r| {
+                let m = r.range_i64(1, 30) as usize;
+                let n = r.range_i64(1, 20) as usize;
+                let seed = r.next_u64();
+                (DenseMatrix::rand(m, n, -1.0, 1.0, 1.0, seed),
+                 DenseMatrix::rand(m, 1, -1.0, 1.0, 1.0, seed ^ 1))
+            },
+            |(x, y)| {
+                let a = matmult_st(&transpose(x), y);
+                let b = transpose(&matmult_st(&transpose(y), x));
+                if a.max_abs_diff(&b) < 1e-10 { Ok(()) } else { Err("rewrite mismatch".into()) }
+            },
+        );
+    }
+
+    #[test]
+    fn diag_vector_roundtrip() {
+        let v = randm(9, 1, 7);
+        let d = diag(&v);
+        assert_eq!(d.rows, 9);
+        assert_eq!(diag(&d), v);
+    }
+
+    #[test]
+    fn cbind_rbind_shapes() {
+        let a = randm(4, 3, 8);
+        let b = randm(4, 2, 9);
+        let c = cbind(&a, &b);
+        assert_eq!((c.rows, c.cols), (4, 5));
+        assert_eq!(c.get(2, 3), b.get(2, 0));
+        let d = rbind(&a, &randm(2, 3, 10));
+        assert_eq!((d.rows, d.cols), (6, 3));
+    }
+
+    #[test]
+    fn solve_recovers_known_solution() {
+        // Build a well-conditioned SPD system A = X'X + I, known beta.
+        let x = randm(40, 10, 11);
+        let mut a = tsmm_left(&x, 2);
+        for i in 0..10 {
+            a.values[i * 10 + i] += 1.0;
+        }
+        let beta = randm(10, 1, 12);
+        let b = matmult_st(&a, &beta);
+        let sol = solve(&a, &b).unwrap();
+        assert!(sol.max_abs_diff(&beta) < 1e-8);
+    }
+
+    #[test]
+    fn solve_rejects_singular() {
+        let a = DenseMatrix::zeros(3, 3);
+        let b = DenseMatrix::zeros(3, 1);
+        assert!(solve(&a, &b).is_err());
+    }
+
+    #[test]
+    fn sums_and_aggregates() {
+        let a = DenseMatrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(sum(&a), 21.0);
+        assert_eq!(row_sums(&a).values, vec![6.0, 15.0]);
+        assert_eq!(col_sums(&a).values, vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn ewise_ops() {
+        let a = DenseMatrix::filled(2, 2, 3.0);
+        let b = DenseMatrix::filled(2, 2, 4.0);
+        assert_eq!(ewise(&a, &b, |x, y| x + y).values, vec![7.0; 4]);
+        assert_eq!(ewise_scalar(&a, 2.0, |x, y| x * y).values, vec![6.0; 4]);
+        assert_eq!(unary(&a, |x| -x).values, vec![-3.0; 4]);
+    }
+}

@@ -1,0 +1,122 @@
+//! CSR sparse matrix.
+
+use super::dense::DenseMatrix;
+
+/// Compressed sparse row matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<usize>,
+    pub values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Build from (row, col, value) triples; duplicates are summed, zeros
+    /// (including values that cancel to zero) are dropped.
+    pub fn from_triples(rows: usize, cols: usize, mut triples: Vec<(usize, usize, f64)>) -> Self {
+        triples.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        let mut row_ptr = vec![0usize; rows + 1];
+        let mut col_idx = Vec::with_capacity(triples.len());
+        let mut values: Vec<f64> = Vec::with_capacity(triples.len());
+        let mut i = 0;
+        while i < triples.len() {
+            let (r, c, mut v) = triples[i];
+            assert!(r < rows && c < cols, "triple out of bounds");
+            i += 1;
+            while i < triples.len() && triples[i].0 == r && triples[i].1 == c {
+                v += triples[i].2;
+                i += 1;
+            }
+            if v != 0.0 {
+                col_idx.push(c);
+                values.push(v);
+                row_ptr[r + 1] = col_idx.len();
+            }
+        }
+        // Make row_ptr monotone (rows with no entries).
+        for i in 1..=rows {
+            if row_ptr[i] < row_ptr[i - 1] {
+                row_ptr[i] = row_ptr[i - 1];
+            }
+        }
+        CsrMatrix { rows, cols, row_ptr, col_idx, values }
+    }
+
+    /// Convert a dense matrix to CSR.
+    pub fn from_dense(d: &DenseMatrix) -> Self {
+        let mut row_ptr = vec![0usize; d.rows + 1];
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        for r in 0..d.rows {
+            for c in 0..d.cols {
+                let v = d.get(r, c);
+                if v != 0.0 {
+                    col_idx.push(c);
+                    values.push(v);
+                }
+            }
+            row_ptr[r + 1] = col_idx.len();
+        }
+        CsrMatrix { rows: d.rows, cols: d.cols, row_ptr, col_idx, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        let (s, e) = (self.row_ptr[r], self.row_ptr[r + 1]);
+        match self.col_idx[s..e].binary_search(&c) {
+            Ok(i) => self.values[s + i],
+            Err(_) => 0.0,
+        }
+    }
+
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut d = DenseMatrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for i in self.row_ptr[r]..self.row_ptr[r + 1] {
+                d.set(r, self.col_idx[i], self.values[i]);
+            }
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_dense_csr_dense() {
+        let d = DenseMatrix::rand(20, 30, -1.0, 1.0, 0.2, 5);
+        let s = CsrMatrix::from_dense(&d);
+        assert_eq!(s.nnz(), d.nnz());
+        assert_eq!(s.to_dense(), d);
+    }
+
+    #[test]
+    fn from_triples_sorted_access() {
+        let s = CsrMatrix::from_triples(3, 3, vec![(2, 1, 5.0), (0, 0, 1.0), (0, 2, 2.0)]);
+        assert_eq!(s.get(0, 0), 1.0);
+        assert_eq!(s.get(0, 2), 2.0);
+        assert_eq!(s.get(2, 1), 5.0);
+        assert_eq!(s.get(1, 1), 0.0);
+        assert_eq!(s.nnz(), 3);
+    }
+
+    #[test]
+    fn zero_values_dropped() {
+        let s = CsrMatrix::from_triples(2, 2, vec![(0, 0, 0.0), (1, 1, 3.0)]);
+        assert_eq!(s.nnz(), 1);
+    }
+
+    #[test]
+    fn empty_rows_monotone_ptr() {
+        let s = CsrMatrix::from_triples(5, 5, vec![(4, 4, 1.0)]);
+        assert!(s.row_ptr.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(s.get(4, 4), 1.0);
+    }
+}

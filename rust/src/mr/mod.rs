@@ -1,0 +1,691 @@
+//! Deterministic MapReduce cluster simulator — the substitute for the
+//! paper's Hadoop testbed (DESIGN.md §Reproduction bands).
+//!
+//! An [`crate::rtprog::MrJob`] executes in faithful phases:
+//!
+//! 1. **Input splits**: each non-broadcast input is split into
+//!    `⌈M'(X)/hdfs_block⌉` row ranges (the simulator's HDFS model).
+//! 2. **Map tasks** (multi-threaded): each task runs the map-instruction
+//!    chains rooted at its input split; broadcast inputs are served in
+//!    full (distributed-cache model) and sliced by the task's key range
+//!    where the operator requires alignment (mapmm, append).
+//! 3. **Combine/shuffle**: per-task partials are accounted as shuffle
+//!    volume.
+//! 4. **Reduce**: `ak+` aggregations sum partials (Kahan), cpmm/rmm
+//!    compute the cross-product join, reduce-side binaries join blocks.
+//! 5. **Outputs** materialise into the executor's symbol table.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cp::interp::{agg_exec, bin_fn, un_fn, AggResult, Executor};
+use crate::matrix::{ops, DenseMatrix};
+use crate::rtprog::{MrInst, MrJob, MrOp};
+
+/// Statistics of one simulated job.
+#[derive(Clone, Debug, Default)]
+pub struct MrRunReport {
+    pub map_tasks: usize,
+    pub reduce_groups: usize,
+    pub shuffle_bytes: f64,
+    pub input_bytes: f64,
+}
+
+/// Placement of a per-task partial in the final result.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Slice {
+    /// Rows `r0..r1` of the full result.
+    Rows(usize, usize),
+    /// Columns `r0..r1` of the full result (after transpose).
+    Cols(usize, usize),
+    /// A full-shape partial that must be summed with its peers.
+    Partial,
+    /// Already the full result.
+    Full,
+}
+
+type Partials = HashMap<usize, Vec<(Slice, DenseMatrix)>>;
+
+/// Simulate one MR job against the executor's symbol table.
+pub fn simulate(job: &MrJob, exec: &mut Executor) -> Result<MrRunReport> {
+    let mut report = MrRunReport::default();
+
+    // ---- fetch inputs
+    let mut inputs: Vec<Arc<DenseMatrix>> = Vec::new();
+    for v in &job.inputs {
+        let m = exec
+            .symbols
+            .matrix_data(v, &mut exec.pool)
+            .map_err(|e| anyhow!("MR input '{v}': {e}"))?;
+        report.input_bytes += (m.values.len() * 8) as f64;
+        inputs.push(m);
+    }
+    let dcache: Vec<bool> = job.inputs.iter().map(|v| job.dcache.contains(v)).collect();
+
+    // ---- assign map instructions to driving inputs
+    let n_in = inputs.len();
+    let mut driver: HashMap<usize, usize> = HashMap::new(); // out idx -> input idx
+    let mut inst_driver: Vec<Option<usize>> = Vec::new();
+    for inst in &job.map_insts {
+        let d = inst.inputs.iter().find_map(|&i| {
+            if i < n_in {
+                if dcache[i] {
+                    None
+                } else {
+                    Some(i)
+                }
+            } else {
+                driver.get(&i).copied()
+            }
+        });
+        if let Some(d) = d {
+            driver.insert(inst.output, d);
+        }
+        inst_driver.push(d);
+    }
+
+    // ---- map phase
+    let hdfs_block = exec.cc.hdfs_block_bytes;
+    let threads = exec.cc.k_local.max(1);
+    let partials: Mutex<Partials> = Mutex::new(HashMap::new());
+    let mut tasks: Vec<(usize, usize, usize)> = Vec::new(); // (input, r0, r1)
+    for (i, m) in inputs.iter().enumerate() {
+        if dcache[i] {
+            continue;
+        }
+        // ops like diag / datagen run once; skip inputs that drive nothing
+        if !inst_driver.iter().any(|d| *d == Some(i)) {
+            continue;
+        }
+        let ser = (m.values.len() * 8) as f64;
+        let splits = (ser / hdfs_block).ceil().max(1.0) as usize;
+        let rows_per = (m.rows + splits - 1) / splits.max(1);
+        let mut r0 = 0;
+        while r0 < m.rows {
+            let r1 = (r0 + rows_per).min(m.rows);
+            tasks.push((i, r0, r1));
+            r0 = r1;
+        }
+    }
+    report.map_tasks = tasks.len();
+
+    // full-input (non-sliceable) map instructions: datagen, diag
+    let mut pre_full: Partials = HashMap::new();
+    for inst in &job.map_insts {
+        match &inst.op {
+            MrOp::DataGen { min, max, sparsity, seed, rows, cols } => {
+                let m = if min == max {
+                    DenseMatrix::filled((*rows).max(0) as usize, (*cols).max(0) as usize, *min)
+                } else {
+                    DenseMatrix::rand(
+                        (*rows).max(0) as usize,
+                        (*cols).max(0) as usize,
+                        *min,
+                        *max,
+                        *sparsity,
+                        if *seed < 0 { 0xC0FFEE } else { *seed as u64 },
+                    )
+                };
+                pre_full.entry(inst.output).or_default().push((Slice::Full, m));
+            }
+            MrOp::Diag => {
+                let src = inst.inputs[0];
+                if src < n_in {
+                    let m = ops::diag(&inputs[src]);
+                    pre_full.entry(inst.output).or_default().push((Slice::Full, m));
+                }
+            }
+            _ => {}
+        }
+    }
+    partials.lock().unwrap().extend(pre_full);
+
+    // run tasks across a worker pool
+    let chunk = (tasks.len() + threads - 1) / threads.max(1);
+    if !tasks.is_empty() {
+        std::thread::scope(|s| -> Result<()> {
+            let mut handles = Vec::new();
+            for tchunk in tasks.chunks(chunk.max(1)) {
+                let inputs = &inputs;
+                let partials = &partials;
+                let job_ref = job;
+                let inst_driver = &inst_driver;
+                handles.push(s.spawn(move || -> Result<()> {
+                    for &(input, r0, r1) in tchunk {
+                        run_map_task(job_ref, inputs, inst_driver, input, r0, r1, partials)?;
+                    }
+                    Ok(())
+                }));
+            }
+            for h in handles {
+                h.join().map_err(|_| anyhow!("map task panicked"))??;
+            }
+            Ok(())
+        })?;
+    }
+    let mut partials = partials.into_inner().unwrap();
+
+    // ---- resolve full matrices per byte index (inputs or assembled)
+    let mut resolved: HashMap<usize, DenseMatrix> = HashMap::new();
+    for (i, m) in inputs.iter().enumerate() {
+        resolved.insert(i, (**m).clone());
+    }
+
+    // shuffle volume from per-task partials feeding aggregations
+    for agg in &job.agg_insts {
+        if let Some(parts) = partials.get(&agg.inputs[0]) {
+            report.shuffle_bytes +=
+                parts.iter().map(|(_, m)| (m.values.len() * 8) as f64).sum::<f64>();
+        }
+    }
+
+    // ---- reduce phase: shuffle joins (cpmm/rmm)
+    for sh in &job.shuffle_insts {
+        let a = assemble(sh.inputs[0], &mut partials, &resolved, sh)?;
+        let b = assemble(sh.inputs[1], &mut partials, &resolved, sh)?;
+        report.shuffle_bytes += ((a.values.len() + b.values.len()) * 8) as f64;
+        let out = match &sh.op {
+            MrOp::Cpmm | MrOp::Rmm => ops::matmult(&a, &b, threads),
+            other => bail!("unsupported shuffle op {other:?}"),
+        };
+        resolved.insert(sh.output, out);
+    }
+
+    // ---- reduce phase: aggregations and reduce-side joins
+    for agg in &job.agg_insts {
+        let out = match &agg.op {
+            MrOp::Agg { .. } => {
+                let idx = agg.inputs[0];
+                if let Some(parts) = partials.remove(&idx) {
+                    sum_partials(parts, &agg_shape(agg))?
+                } else if let Some(full) = resolved.get(&idx) {
+                    // aggregation over a prior job's materialised partials
+                    // (our cpmm simulation already summed them): identity
+                    full.clone()
+                } else {
+                    bail!("aggregation input {idx} unavailable")
+                }
+            }
+            // matrix-matrix binary executed reduce-side (block join)
+            MrOp::Binary(op) => {
+                let a = assemble(agg.inputs[0], &mut partials, &resolved, agg)?;
+                let b = assemble(agg.inputs[1], &mut partials, &resolved, agg)?;
+                report.shuffle_bytes += ((a.values.len() + b.values.len()) * 8) as f64;
+                ops::ewise(&a, &b, bin_fn(*op)?)
+            }
+            other => bail!("unsupported agg op {other:?}"),
+        };
+        resolved.insert(agg.output, out);
+        report.reduce_groups += 1;
+    }
+
+    // ---- reduce-side binaries
+    for ot in &job.other_insts {
+        let a = assemble(ot.inputs[0], &mut partials, &resolved, ot)?;
+        let b = assemble(ot.inputs[1], &mut partials, &resolved, ot)?;
+        report.shuffle_bytes += ((a.values.len() + b.values.len()) * 8) as f64;
+        let MrOp::Binary(op) = &ot.op else { bail!("unsupported other inst {:?}", ot.op) };
+        let out = ops::ewise(&a, &b, bin_fn(*op)?);
+        resolved.insert(ot.output, out);
+    }
+
+    // ---- materialise outputs
+    let blocksize = exec.cfg.blocksize;
+    for (label, &ri) in job.outputs.iter().zip(&job.result_indices) {
+        let m = if let Some(m) = resolved.remove(&ri) {
+            m
+        } else {
+            let inst = job
+                .all_insts()
+                .find(|i| i.output == ri)
+                .ok_or_else(|| anyhow!("no producer for result index {ri}"))?
+                .clone();
+            assemble(ri, &mut partials, &resolved, &inst)?
+        };
+        exec.symbols.bind_matrix(label, Arc::new(m), blocksize, &mut exec.pool)?;
+    }
+    Ok(report)
+}
+
+/// Final shape of an aggregation (from the instruction's characteristics).
+fn agg_shape(inst: &MrInst) -> (usize, usize) {
+    (inst.mc.rows.max(0) as usize, inst.mc.cols.max(0) as usize)
+}
+
+/// Execute all map instructions driven by `input` for one split.
+fn run_map_task(
+    job: &MrJob,
+    inputs: &[Arc<DenseMatrix>],
+    inst_driver: &[Option<usize>],
+    input: usize,
+    r0: usize,
+    r1: usize,
+    partials: &Mutex<Partials>,
+) -> Result<()> {
+    let n_in = inputs.len();
+    // local values: byte index -> (slice placement, data)
+    let mut local: HashMap<usize, (Slice, DenseMatrix)> = HashMap::new();
+    let src = &inputs[input];
+    let slice = submatrix(src, r0, r1);
+    local.insert(input, (Slice::Rows(r0, r1), slice));
+
+    let mut out: Vec<(usize, Slice, DenseMatrix)> = Vec::new();
+    for (k, inst) in job.map_insts.iter().enumerate() {
+        if inst_driver[k] != Some(input) {
+            continue;
+        }
+        let get = |idx: usize,
+                   local: &HashMap<usize, (Slice, DenseMatrix)>|
+         -> Result<(Slice, DenseMatrix)> {
+            if let Some((s, m)) = local.get(&idx) {
+                return Ok((*s, m.clone()));
+            }
+            if idx < n_in {
+                return Ok((Slice::Full, (*inputs[idx]).clone()));
+            }
+            bail!("map input {idx} not available in task")
+        };
+        let (res_slice, res) = match &inst.op {
+            MrOp::Tsmm { left } => {
+                let (_, x) = get(inst.inputs[0], &local)?;
+                let r = if *left { ops::tsmm_left(&x, 1) } else { ops::tsmm_left(&ops::transpose(&x), 1) };
+                (Slice::Partial, r)
+            }
+            MrOp::Transpose => {
+                let (s, x) = get(inst.inputs[0], &local)?;
+                let flipped = match s {
+                    Slice::Rows(a, b) => Slice::Cols(a, b),
+                    Slice::Cols(a, b) => Slice::Rows(a, b),
+                    other => other,
+                };
+                (flipped, ops::transpose(&x))
+            }
+            MrOp::MapMM { .. } => {
+                let (sa, a) = get(inst.inputs[0], &local)?;
+                let (_, bc) = get(inst.inputs[1], &local)?;
+                // align the broadcast with the task's contraction range
+                let out = match sa {
+                    Slice::Cols(a0, a1) => {
+                        // a = t(X) column slice: multiply with bc rows a0..a1
+                        let bslice = submatrix(&bc, a0, a1);
+                        ops::matmult(&a, &bslice, 1)
+                    }
+                    Slice::Rows(_, _) | Slice::Full | Slice::Partial => {
+                        // broadcast-left: bc columns align with a's rows —
+                        // conservative full multiply on the slice
+                        ops::matmult(&bc, &a, 1)
+                    }
+                };
+                (Slice::Partial, out)
+            }
+            MrOp::ScalarBin { op, scalar, scalar_left, .. } => {
+                let (s, x) = get(inst.inputs[0], &local)?;
+                let f = bin_fn(*op)?;
+                let r = if *scalar_left {
+                    ops::ewise_scalar(&x, *scalar, |a, b| f(b, a))
+                } else {
+                    ops::ewise_scalar(&x, *scalar, f)
+                };
+                (s, r)
+            }
+            MrOp::Unary(op) => {
+                let (s, x) = get(inst.inputs[0], &local)?;
+                (s, ops::unary(&x, un_fn(*op)?))
+            }
+            MrOp::AggUnaryMap(op, dir) => {
+                let (s, x) = get(inst.inputs[0], &local)?;
+                let r = match agg_exec(*op, *dir, &x)? {
+                    AggResult::Scalar(v) => DenseMatrix::from_vec(1, 1, vec![v]),
+                    AggResult::Matrix(m) => m,
+                };
+                // row-direction partials are positioned; expand to full rows
+                let positioned = match (dir, s) {
+                    (crate::ir::AggDir::Row, Slice::Rows(a0, _)) => {
+                        let total = inst.mc.rows.max(r.rows as i64) as usize;
+                        let mut full = DenseMatrix::zeros(total, r.cols);
+                        for i in 0..r.rows {
+                            for c in 0..r.cols {
+                                full.set(a0 + i, c, r.get(i, c));
+                            }
+                        }
+                        full
+                    }
+                    _ => r,
+                };
+                (Slice::Partial, positioned)
+            }
+            MrOp::Append { .. } => {
+                let (s, x) = get(inst.inputs[0], &local)?;
+                let (_, bc) = get(inst.inputs[1], &local)?;
+                let bslice = match s {
+                    Slice::Rows(a0, a1) => submatrix(&bc, a0, a1),
+                    _ => bc.clone(),
+                };
+                (s, ops::cbind(&x, &bslice))
+            }
+            MrOp::Diag | MrOp::DataGen { .. } => continue, // handled pre-task
+            other => bail!("unsupported map op {other:?}"),
+        };
+        local.insert(inst.output, (res_slice, res.clone()));
+        out.push((inst.output, res_slice, res));
+    }
+    let mut p = partials.lock().unwrap();
+    for (idx, s, m) in out {
+        p.entry(idx).or_default().push((s, m));
+    }
+    Ok(())
+}
+
+/// Row sub-slice copy.
+fn submatrix(m: &DenseMatrix, r0: usize, r1: usize) -> DenseMatrix {
+    let r1 = r1.min(m.rows);
+    DenseMatrix::from_vec(r1 - r0, m.cols, m.values[r0 * m.cols..r1 * m.cols].to_vec())
+}
+
+/// Sum full-shape partials (combiner + reducer `ak+`).
+fn sum_partials(parts: Vec<(Slice, DenseMatrix)>, _shape: &(usize, usize)) -> Result<DenseMatrix> {
+    let mut iter = parts.into_iter();
+    let (_, mut acc) = iter.next().ok_or_else(|| anyhow!("no partials to aggregate"))?;
+    for (_, p) in iter {
+        if p.rows != acc.rows || p.cols != acc.cols {
+            bail!("partial shape mismatch {}x{} vs {}x{}", p.rows, p.cols, acc.rows, acc.cols);
+        }
+        for (a, b) in acc.values.iter_mut().zip(&p.values) {
+            *a += b;
+        }
+    }
+    Ok(acc)
+}
+
+/// Assemble the full matrix for a byte index from positional partials.
+fn assemble(
+    idx: usize,
+    partials: &mut Partials,
+    resolved: &HashMap<usize, DenseMatrix>,
+    inst: &MrInst,
+) -> Result<DenseMatrix> {
+    if let Some(m) = resolved.get(&idx) {
+        return Ok(m.clone());
+    }
+    let parts = partials
+        .remove(&idx)
+        .ok_or_else(|| anyhow!("no data for byte index {idx}"))?;
+    // positional assembly (Rows/Cols) or partial summation
+    if parts.iter().all(|(s, _)| matches!(s, Slice::Partial | Slice::Full)) {
+        return sum_partials(parts, &agg_shape(inst));
+    }
+    let rows: usize = match parts[0].0 {
+        Slice::Cols(..) => parts[0].1.rows,
+        _ => parts.iter().map(|(s, m)| match s {
+            Slice::Rows(_, b) => *b,
+            _ => m.rows,
+        }).max().unwrap_or(0),
+    };
+    let cols: usize = match parts[0].0 {
+        Slice::Cols(..) => parts.iter().map(|(s, _)| match s {
+            Slice::Cols(_, b) => *b,
+            _ => 0,
+        }).max().unwrap_or(0),
+        _ => parts[0].1.cols,
+    };
+    let mut full = DenseMatrix::zeros(rows, cols);
+    for (s, m) in parts {
+        match s {
+            Slice::Rows(a0, _) => {
+                for i in 0..m.rows {
+                    for c in 0..m.cols {
+                        full.set(a0 + i, c, m.get(i, c));
+                    }
+                }
+            }
+            Slice::Cols(a0, _) => {
+                for i in 0..m.rows {
+                    for c in 0..m.cols {
+                        full.set(i, a0 + c, m.get(i, c));
+                    }
+                }
+            }
+            Slice::Full | Slice::Partial => {
+                for i in 0..m.rows.min(full.rows) {
+                    for c in 0..m.cols.min(full.cols) {
+                        full.set(i, c, m.get(i, c));
+                    }
+                }
+            }
+        }
+    }
+    Ok(full)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conf::{ClusterConfig, SystemConfig};
+    use crate::ir::{BinOp, Lit};
+    use crate::matrix::Format;
+    use crate::matrix::MatrixCharacteristics;
+    use crate::rtprog::JobType;
+
+    fn test_exec<'a>(
+        cfg: &'a SystemConfig,
+        cc: &'a ClusterConfig,
+    ) -> Executor<'a> {
+        let scratch = std::env::temp_dir().join(format!("sysds_mr_{}", std::process::id()));
+        Executor::new(cfg, cc, None, scratch)
+    }
+
+    fn tiny_cluster() -> ClusterConfig {
+        let mut cc = ClusterConfig::local(4, 256.0 * 1024.0 * 1024.0);
+        cc.hdfs_block_bytes = 16.0 * 1024.0; // force many splits
+        cc
+    }
+
+    fn bind(exec: &mut Executor, name: &str, m: DenseMatrix) {
+        exec.symbols
+            .bind_matrix(name, Arc::new(m), 1000, &mut exec.pool)
+            .unwrap();
+    }
+
+    fn mc(r: i64, c: i64) -> MatrixCharacteristics {
+        MatrixCharacteristics::new(r, c, 1000, -1)
+    }
+
+    #[test]
+    fn simulated_tsmm_job_matches_native() {
+        let cfg = SystemConfig::default();
+        let cc = tiny_cluster();
+        let mut exec = test_exec(&cfg, &cc);
+        let x = DenseMatrix::rand(200, 30, -1.0, 1.0, 1.0, 5);
+        bind(&mut exec, "X", x.clone());
+        exec.exec_inst(&crate::rtprog::Instr::CreateVar {
+            var: "out".into(),
+            path: String::new(),
+            temp: true,
+            format: Format::BinaryBlock,
+            mc: mc(30, 30),
+        })
+        .unwrap();
+        let job = MrJob {
+            job_type: JobType::Gmr,
+            inputs: vec!["X".into()],
+            dcache: vec![],
+            map_insts: vec![MrInst {
+                op: MrOp::Tsmm { left: true },
+                inputs: vec![0],
+                output: 1,
+                mc: mc(30, 30),
+            }],
+            shuffle_insts: vec![],
+            agg_insts: vec![MrInst {
+                op: MrOp::Agg { kahan: true },
+                inputs: vec![1],
+                output: 2,
+                mc: mc(30, 30),
+            }],
+            other_insts: vec![],
+            outputs: vec!["out".into()],
+            result_indices: vec![2],
+            num_reducers: 4,
+            replication: 1,
+        };
+        let report = simulate(&job, &mut exec).unwrap();
+        assert!(report.map_tasks > 1, "splits: {}", report.map_tasks);
+        let got = exec.symbols.matrix_data("out", &mut exec.pool).unwrap();
+        let expect = ops::tsmm_left(&x, 2);
+        assert!(got.max_abs_diff(&expect) < 1e-9);
+    }
+
+    #[test]
+    fn simulated_figure3_job_matches_native() {
+        // tsmm + r' + mapmm with broadcast y in one GMR job.
+        let cfg = SystemConfig::default();
+        let cc = tiny_cluster();
+        let mut exec = test_exec(&cfg, &cc);
+        let x = DenseMatrix::rand(300, 20, -1.0, 1.0, 1.0, 7);
+        let y = DenseMatrix::rand(300, 1, -1.0, 1.0, 1.0, 8);
+        bind(&mut exec, "X", x.clone());
+        bind(&mut exec, "ypart", y.clone());
+        for (name, m) in [("outA", mc(20, 20)), ("outb", mc(20, 1))] {
+            exec.exec_inst(&crate::rtprog::Instr::CreateVar {
+                var: name.into(),
+                path: String::new(),
+                temp: true,
+                format: Format::BinaryBlock,
+                mc: m,
+            })
+            .unwrap();
+        }
+        let job = MrJob {
+            job_type: JobType::Gmr,
+            inputs: vec!["X".into(), "ypart".into()],
+            dcache: vec!["ypart".into()],
+            map_insts: vec![
+                MrInst { op: MrOp::Tsmm { left: true }, inputs: vec![0], output: 2, mc: mc(20, 20) },
+                MrInst { op: MrOp::Transpose, inputs: vec![0], output: 3, mc: mc(20, 300) },
+                MrInst {
+                    op: MrOp::MapMM { right_part: true },
+                    inputs: vec![3, 1],
+                    output: 4,
+                    mc: mc(20, 1),
+                },
+            ],
+            shuffle_insts: vec![],
+            agg_insts: vec![
+                MrInst { op: MrOp::Agg { kahan: true }, inputs: vec![2], output: 5, mc: mc(20, 20) },
+                MrInst { op: MrOp::Agg { kahan: true }, inputs: vec![4], output: 6, mc: mc(20, 1) },
+            ],
+            other_insts: vec![],
+            outputs: vec!["outA".into(), "outb".into()],
+            result_indices: vec![5, 6],
+            num_reducers: 4,
+            replication: 1,
+        };
+        simulate(&job, &mut exec).unwrap();
+        let got_a = exec.symbols.matrix_data("outA", &mut exec.pool).unwrap();
+        let got_b = exec.symbols.matrix_data("outb", &mut exec.pool).unwrap();
+        let xt = ops::transpose(&x);
+        assert!(got_a.max_abs_diff(&ops::tsmm_left(&x, 2)) < 1e-9);
+        assert!(got_b.max_abs_diff(&ops::matmult_st(&xt, &y)) < 1e-9);
+    }
+
+    #[test]
+    fn simulated_cpmm_matches_native() {
+        let cfg = SystemConfig::default();
+        let cc = tiny_cluster();
+        let mut exec = test_exec(&cfg, &cc);
+        let x = DenseMatrix::rand(150, 25, -1.0, 1.0, 1.0, 9);
+        bind(&mut exec, "X", x.clone());
+        exec.exec_inst(&crate::rtprog::Instr::CreateVar {
+            var: "out".into(),
+            path: String::new(),
+            temp: true,
+            format: Format::BinaryBlock,
+            mc: mc(25, 25),
+        })
+        .unwrap();
+        // MMCJ: r' (map) + cpmm (shuffle)
+        let job = MrJob {
+            job_type: JobType::Mmcj,
+            inputs: vec!["X".into()],
+            dcache: vec![],
+            map_insts: vec![MrInst {
+                op: MrOp::Transpose,
+                inputs: vec![0],
+                output: 1,
+                mc: mc(25, 150),
+            }],
+            shuffle_insts: vec![MrInst {
+                op: MrOp::Cpmm,
+                inputs: vec![1, 0],
+                output: 2,
+                mc: mc(25, 25),
+            }],
+            agg_insts: vec![],
+            other_insts: vec![],
+            outputs: vec!["out".into()],
+            result_indices: vec![2],
+            num_reducers: 4,
+            replication: 1,
+        };
+        let report = simulate(&job, &mut exec).unwrap();
+        assert!(report.shuffle_bytes > 0.0);
+        let got = exec.symbols.matrix_data("out", &mut exec.pool).unwrap();
+        let expect = ops::matmult_st(&ops::transpose(&x), &x);
+        assert!(got.max_abs_diff(&expect) < 1e-9);
+    }
+
+    #[test]
+    fn scalar_bin_and_unary_chain() {
+        let cfg = SystemConfig::default();
+        let cc = tiny_cluster();
+        let mut exec = test_exec(&cfg, &cc);
+        let x = DenseMatrix::rand(100, 10, 0.5, 2.0, 1.0, 11);
+        bind(&mut exec, "X", x.clone());
+        exec.exec_inst(&crate::rtprog::Instr::CreateVar {
+            var: "out".into(),
+            path: String::new(),
+            temp: true,
+            format: Format::BinaryBlock,
+            mc: mc(100, 10),
+        })
+        .unwrap();
+        let job = MrJob {
+            job_type: JobType::Gmr,
+            inputs: vec!["X".into()],
+            dcache: vec![],
+            map_insts: vec![
+                MrInst {
+                    op: MrOp::ScalarBin {
+                        op: BinOp::Mul,
+                        scalar: 2.0,
+                        scalar_var: None,
+                        scalar_left: false,
+                    },
+                    inputs: vec![0],
+                    output: 1,
+                    mc: mc(100, 10),
+                },
+                MrInst {
+                    op: MrOp::Unary(crate::ir::UnOp::Sqrt),
+                    inputs: vec![1],
+                    output: 2,
+                    mc: mc(100, 10),
+                },
+            ],
+            shuffle_insts: vec![],
+            agg_insts: vec![],
+            other_insts: vec![],
+            outputs: vec!["out".into()],
+            result_indices: vec![2],
+            num_reducers: 4,
+            replication: 1,
+        };
+        simulate(&job, &mut exec).unwrap();
+        let got = exec.symbols.matrix_data("out", &mut exec.pool).unwrap();
+        let expect = ops::unary(&ops::ewise_scalar(&x, 2.0, |a, b| a * b), f64::sqrt);
+        assert!(got.max_abs_diff(&expect) < 1e-12);
+        let _ = Lit::Int(0);
+    }
+}

@@ -1,0 +1,102 @@
+//! Global plan comparison: cost a program under alternative physical
+//! operator choices. This is how the ablation benches quantify the value
+//! of each optimizer decision (tsmm vs cpmm vs rmm, the (yᵀX)ᵀ rewrite,
+//! partitioned broadcasts).
+
+use std::collections::HashMap;
+
+use crate::api::{compile_with_meta, CompileOptions};
+use crate::conf::CostConstants;
+use crate::cost;
+use crate::ir::build::MetaProvider;
+use crate::lop::SelectionHints;
+
+/// A named plan alternative.
+#[derive(Clone, Debug)]
+pub struct PlanAlternative {
+    pub name: String,
+    pub cost_secs: f64,
+    pub mr_jobs: usize,
+}
+
+/// Compare the optimizer's plan with forced alternatives.
+pub fn compare_plans(
+    src: &str,
+    args: &HashMap<usize, String>,
+    meta: &dyn MetaProvider,
+    base: &CompileOptions,
+) -> Result<Vec<PlanAlternative>, String> {
+    let variants: Vec<(&str, SelectionHints)> = vec![
+        ("optimizer", SelectionHints::default()),
+        ("force-cpmm", SelectionHints { force_cpmm: true, ..Default::default() }),
+        ("force-rmm", SelectionHints { force_rmm: true, ..Default::default() }),
+        (
+            "no-transpose-rewrite",
+            SelectionHints { no_transpose_rewrite: true, ..Default::default() },
+        ),
+    ];
+    let mut out = Vec::new();
+    for (name, hints) in variants {
+        let opts = CompileOptions { hints, ..base.clone() };
+        let compiled = compile_with_meta(src, args, meta, &opts)?;
+        let report = cost::cost_program(
+            &compiled.runtime,
+            &opts.cfg,
+            &opts.cc.0,
+            &CostConstants::default(),
+        );
+        out.push(PlanAlternative {
+            name: name.to_string(),
+            cost_secs: report.total,
+            mr_jobs: compiled.runtime.mr_job_count(),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Scenario;
+
+    #[test]
+    fn optimizer_beats_or_matches_forced_alternatives_on_xl1() {
+        let s = Scenario::xl1();
+        let alts = compare_plans(
+            s.script(),
+            &s.args(),
+            &s.meta(1000),
+            &CompileOptions::default(),
+        )
+        .unwrap();
+        let opt = alts.iter().find(|a| a.name == "optimizer").unwrap();
+        for a in &alts {
+            assert!(
+                opt.cost_secs <= a.cost_secs * 1.001,
+                "optimizer ({}) worse than {} ({})",
+                opt.cost_secs,
+                a.name,
+                a.cost_secs
+            );
+        }
+        // forcing cpmm on XL1 must be visibly worse (extra jobs + shuffle)
+        let cpmm = alts.iter().find(|a| a.name == "force-cpmm").unwrap();
+        assert!(cpmm.cost_secs > opt.cost_secs * 1.05, "cpmm {} vs {}", cpmm.cost_secs, opt.cost_secs);
+        assert!(cpmm.mr_jobs > opt.mr_jobs);
+    }
+
+    #[test]
+    fn xs_alternatives_are_all_cp() {
+        let s = Scenario::xs();
+        let alts = compare_plans(
+            s.script(),
+            &s.args(),
+            &s.meta(1000),
+            &CompileOptions::default(),
+        )
+        .unwrap();
+        for a in &alts {
+            assert_eq!(a.mr_jobs, 0, "{}", a.name);
+        }
+    }
+}

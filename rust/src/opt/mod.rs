@@ -1,0 +1,14 @@
+//! Cost-model consumers (paper §1: "this cost model is leveraged by
+//! several advanced optimizers like resource optimization and global data
+//! flow optimization").
+//!
+//! * [`resource::optimize`] — enumerate cluster resource configurations
+//!   (CP/map/reduce heap sizes), recompile the program under each, cost the
+//!   generated plans, and return the cost-optimal configuration (the
+//!   resource-optimizer use case).
+//! * [`compare::compare_plans`] — cost a program under alternative
+//!   physical-operator hints (cpmm vs mapmm vs rmm, rewrite on/off), the
+//!   global-plan-comparison use case and the basis of the ablation benches.
+
+pub mod compare;
+pub mod resource;

@@ -1,0 +1,108 @@
+//! Resource optimization: pick the memory configuration minimising the
+//! estimated execution time `C(P, cc)` — because plan *shape* changes with
+//! budgets (CP vs MR, mapmm vs cpmm), cost is not monotone in resources and
+//! a search over generated plans is required (exactly why the paper's
+//! analytical cost model exists, R1).
+
+use std::collections::HashMap;
+
+use crate::api::{compile_with_meta, CompileOptions};
+use crate::conf::{ClusterConfig, CostConstants, MB};
+use crate::cost;
+use crate::ir::build::MetaProvider;
+
+/// One evaluated configuration.
+#[derive(Clone, Debug)]
+pub struct ResourcePoint {
+    /// Client/task heap size in bytes.
+    pub heap_bytes: f64,
+    /// Estimated execution time.
+    pub cost_secs: f64,
+    /// Number of MR jobs in the generated plan.
+    pub mr_jobs: usize,
+}
+
+/// Result of the sweep.
+#[derive(Clone, Debug)]
+pub struct ResourceChoice {
+    pub best: ResourcePoint,
+    pub frontier: Vec<ResourcePoint>,
+}
+
+/// Sweep client+task heap sizes and return the cost-optimal configuration.
+pub fn optimize(
+    src: &str,
+    args: &HashMap<usize, String>,
+    meta: &dyn MetaProvider,
+    base_cc: &ClusterConfig,
+    heaps_mb: &[f64],
+) -> Result<ResourceChoice, String> {
+    let mut frontier = Vec::new();
+    for &h in heaps_mb {
+        let mut cc = base_cc.clone();
+        cc.cp_heap_bytes = h * MB;
+        cc.map_heap_bytes = h * MB;
+        cc.reduce_heap_bytes = h * MB;
+        let opts = CompileOptions {
+            cc: crate::api::ClusterConfigOpt(cc.clone()),
+            ..Default::default()
+        };
+        let compiled = compile_with_meta(src, args, meta, &opts)?;
+        let report =
+            cost::cost_program(&compiled.runtime, &opts.cfg, &cc, &CostConstants::default());
+        frontier.push(ResourcePoint {
+            heap_bytes: h * MB,
+            cost_secs: report.total,
+            mr_jobs: compiled.runtime.mr_job_count(),
+        });
+    }
+    let best = frontier
+        .iter()
+        .min_by(|a, b| a.cost_secs.partial_cmp(&b.cost_secs).unwrap())
+        .cloned()
+        .ok_or("empty sweep")?;
+    Ok(ResourceChoice { best, frontier })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Scenario;
+
+    #[test]
+    fn larger_heap_moves_xs_plans_to_cp() {
+        // With a tiny heap even XS needs MR; larger heaps give CP plans
+        // with far lower estimated cost.
+        let s = Scenario::xs();
+        let choice = optimize(
+            s.script(),
+            &s.args(),
+            &s.meta(1000),
+            &ClusterConfig::paper_cluster(),
+            &[64.0, 2048.0],
+        )
+        .unwrap();
+        assert_eq!(choice.frontier.len(), 2);
+        let small = &choice.frontier[0];
+        let large = &choice.frontier[1];
+        assert!(small.mr_jobs > 0, "64MB heap forces MR");
+        assert_eq!(large.mr_jobs, 0, "2GB heap keeps XS in CP");
+        assert!(large.cost_secs < small.cost_secs);
+        assert_eq!(choice.best.heap_bytes, 2048.0 * MB);
+    }
+
+    #[test]
+    fn frontier_preserves_sweep_order() {
+        let s = Scenario::xs();
+        let choice = optimize(
+            s.script(),
+            &s.args(),
+            &s.meta(1000),
+            &ClusterConfig::paper_cluster(),
+            &[128.0, 512.0, 2048.0],
+        )
+        .unwrap();
+        let heaps: Vec<f64> = choice.frontier.iter().map(|p| p.heap_bytes / MB).collect();
+        assert_eq!(heaps, vec![128.0, 512.0, 2048.0]);
+    }
+}

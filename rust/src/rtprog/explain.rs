@@ -1,0 +1,195 @@
+//! Runtime-plan EXPLAIN (paper Figures 2 and 3), optionally with cost
+//! annotations (Figures 4 and 5 — the annotations themselves are produced
+//! by [`crate::cost`]).
+
+use super::*;
+use crate::util::fmt::fmt_dim;
+
+/// Options for runtime-plan rendering.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExplainOpts {
+    /// Show rmvar instructions (the paper's figures hide them).
+    pub show_rmvar: bool,
+}
+
+/// Render the whole runtime program (Figure 2/3 style).
+pub fn explain_runtime(prog: &RtProgram, opts: ExplainOpts) -> String {
+    let (cp, mr) = prog.size();
+    let mut out = format!("PROGRAM ( size CP/MR = {cp}/{mr} )\n--MAIN PROGRAM\n");
+    explain_blocks(&prog.blocks, &mut out, 4, opts);
+    for (name, f) in &prog.funcs {
+        out.push_str(&format!("--FUNCTION {name}\n"));
+        explain_blocks(&f.blocks, &mut out, 4, opts);
+    }
+    out
+}
+
+fn dashes(n: usize) -> String {
+    "-".repeat(n)
+}
+
+fn explain_blocks(blocks: &[RtBlock], out: &mut String, indent: usize, opts: ExplainOpts) {
+    for b in blocks {
+        match b {
+            RtBlock::Generic { insts, lines, recompile } => {
+                out.push_str(&format!(
+                    "{}GENERIC (lines {}-{}) [recompile={}]\n",
+                    dashes(indent),
+                    lines.0,
+                    lines.1,
+                    recompile
+                ));
+                for inst in insts {
+                    explain_inst(inst, out, indent + 2, opts);
+                }
+            }
+            RtBlock::If { pred, then_blocks, else_blocks, lines } => {
+                out.push_str(&format!("{}IF (lines {}-{})\n", dashes(indent), lines.0, lines.1));
+                for inst in &pred.insts {
+                    explain_inst(inst, out, indent + 2, opts);
+                }
+                explain_blocks(then_blocks, out, indent + 2, opts);
+                if !else_blocks.is_empty() {
+                    out.push_str(&format!("{}ELSE\n", dashes(indent)));
+                    explain_blocks(else_blocks, out, indent + 2, opts);
+                }
+            }
+            RtBlock::For { var, body, parfor, known_trip, lines, .. } => {
+                let kind = if *parfor { "PARFOR" } else { "FOR" };
+                let trip = known_trip.map_or("?".into(), |t| format!("{t}"));
+                out.push_str(&format!(
+                    "{}{kind} (lines {}-{}) [{var}, iterations={trip}]\n",
+                    dashes(indent),
+                    lines.0,
+                    lines.1
+                ));
+                explain_blocks(body, out, indent + 2, opts);
+            }
+            RtBlock::While { body, lines, .. } => {
+                out.push_str(&format!("{}WHILE (lines {}-{})\n", dashes(indent), lines.0, lines.1));
+                explain_blocks(body, out, indent + 2, opts);
+            }
+            RtBlock::FCall { fname, args, outputs, lines } => {
+                out.push_str(&format!(
+                    "{}CP fcall {fname} [{}] [{}] (lines {}-{})\n",
+                    dashes(indent),
+                    args.join(","),
+                    outputs.join(","),
+                    lines.0,
+                    lines.1
+                ));
+            }
+        }
+    }
+}
+
+/// Render one instruction (SystemML instruction-string style).
+pub fn render_inst(inst: &Instr) -> String {
+    match inst {
+        Instr::CreateVar { var, path, temp, format, mc } => format!(
+            "CP createvar {var} {path} {temp} {} {} {} {} {} {}",
+            format.name(),
+            fmt_dim(mc.rows),
+            fmt_dim(mc.cols),
+            fmt_dim(mc.brows),
+            fmt_dim(mc.bcols),
+            fmt_dim(mc.nnz)
+        ),
+        Instr::AssignVar { lit, var } => format!(
+            "CP assignvar {}.SCALAR.{}.true {var}.SCALAR.{}",
+            lit.render(),
+            vt_str(lit),
+            vt_str(lit)
+        ),
+        Instr::CpVar { src, dst } => format!("CP cpvar {src} {dst}"),
+        Instr::RmVar { vars } => format!("CP rmvar {}", vars.join(" ")),
+        Instr::Cp(c) => {
+            let mut s = format!("CP {}", c.op.code());
+            for i in &c.inputs {
+                s.push(' ');
+                s.push_str(&i.render());
+            }
+            s.push(' ');
+            s.push_str(&c.output.render());
+            match &c.op {
+                CpOp::Tsmm { left } => {
+                    s.push_str(if *left { " LEFT" } else { " RIGHT" });
+                }
+                CpOp::Rand { min, max, sparsity, seed } => {
+                    s.push_str(&format!(" {min} {max} {sparsity} {seed} uniform"));
+                }
+                CpOp::Partition => s.push_str(" ROW_BLOCK_WISE_N"),
+                CpOp::Write { path, format } => {
+                    s.push_str(&format!(" {path}.SCALAR.STRING.true {}.SCALAR.STRING.true", format.name()));
+                }
+                _ => {}
+            }
+            s
+        }
+        Instr::MrJob(j) => render_job(j),
+    }
+}
+
+fn vt_str(l: &Lit) -> &'static str {
+    match l.vtype() {
+        ValueType::Int => "INT",
+        ValueType::Double => "DOUBLE",
+        ValueType::Bool => "BOOLEAN",
+        ValueType::Str => "STRING",
+    }
+}
+
+fn render_mr_inst(i: &MrInst) -> String {
+    let mut s = format!("MR {}", i.op.code());
+    for idx in &i.inputs {
+        s.push_str(&format!(" {idx}"));
+    }
+    s.push_str(&format!(" {}", i.output));
+    match &i.op {
+        MrOp::Tsmm { left } => s.push_str(if *left { " LEFT" } else { " RIGHT" }),
+        MrOp::MapMM { right_part } => {
+            s.push_str(if *right_part { " RIGHT_PART false" } else { " LEFT_PART false" })
+        }
+        MrOp::Agg { kahan } => s.push_str(if *kahan { " true NONE" } else { " false NONE" }),
+        _ => {}
+    }
+    s
+}
+
+fn render_job(j: &MrJob) -> String {
+    let fmt_list = |insts: &[MrInst]| {
+        insts.iter().map(render_mr_inst).collect::<Vec<_>>().join(", ")
+    };
+    let mut s = String::from("MR-Job[\n");
+    s.push_str(&format!("      jobtype        = {}\n", j.job_type.name()));
+    s.push_str(&format!("      input labels   = [{}]\n", j.inputs.join(", ")));
+    if !j.dcache.is_empty() {
+        s.push_str(&format!("      dcache inputs  = [{}]\n", j.dcache.join(", ")));
+    }
+    s.push_str(&format!("      mapper inst    = {}\n", fmt_list(&j.map_insts)));
+    s.push_str(&format!("      shuffle inst   = {}\n", fmt_list(&j.shuffle_insts)));
+    s.push_str(&format!("      agg inst       = {}\n", fmt_list(&j.agg_insts)));
+    s.push_str(&format!("      other inst     = {}\n", fmt_list(&j.other_insts)));
+    s.push_str(&format!("      output labels  = [{}]\n", j.outputs.join(", ")));
+    s.push_str(&format!(
+        "      result indices = {}\n",
+        j.result_indices.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+    ));
+    s.push_str(&format!("      num reducers   = {}\n", j.num_reducers));
+    s.push_str(&format!("      replication    = {} ]", j.replication));
+    s
+}
+
+fn explain_inst(inst: &Instr, out: &mut String, indent: usize, opts: ExplainOpts) {
+    if matches!(inst, Instr::RmVar { .. }) && !opts.show_rmvar {
+        return;
+    }
+    let rendered = render_inst(inst);
+    for (k, line) in rendered.lines().enumerate() {
+        if k == 0 {
+            out.push_str(&format!("{}{}\n", dashes(indent), line));
+        } else {
+            out.push_str(&format!("{}{}\n", dashes(indent), line));
+        }
+    }
+}

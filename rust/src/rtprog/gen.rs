@@ -1,0 +1,918 @@
+//! Runtime-plan generation: HOP program → executable runtime program
+//! (paper §2, Figures 2–3). CP hops become CP instructions with fresh
+//! `_mVarN` temporaries; MR hops are collected into waves, converted to
+//! piggybacking nodes, and packed into MR-job instructions.
+
+use std::collections::{HashMap, HashSet};
+
+use super::piggyback::{self, MrDep, MrNode, Phase};
+use super::*;
+use crate::conf::{ClusterConfig, SystemConfig};
+use crate::ir::{self, Block, DataGenOp, ExecType, HopDag, HopId, HopKind, Program, ReorgOp};
+use crate::lop::{select_matmult, MatMultMethod, SelectionHints};
+use crate::matrix::Format;
+
+/// Generation context threaded through the whole program.
+pub struct GenCtx<'a> {
+    pub cfg: &'a SystemConfig,
+    pub cc: &'a ClusterConfig,
+    pub hints: &'a SelectionHints,
+    var_counter: usize,
+    scratch: String,
+}
+
+/// Generate the runtime program for a compiled (rewritten, size-propagated,
+/// memory-annotated, exec-typed) HOP program.
+pub fn generate(
+    prog: &Program,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    hints: &SelectionHints,
+) -> RtProgram {
+    let mut ctx = GenCtx {
+        cfg,
+        cc,
+        hints,
+        var_counter: 2,
+        scratch: format!("scratch_space//_p{}//_t0", std::process::id()),
+    };
+    let blocks = gen_blocks(&prog.blocks, &mut ctx);
+    let mut funcs = std::collections::BTreeMap::new();
+    for (name, f) in &prog.funcs {
+        funcs.insert(
+            name.clone(),
+            RtFunction {
+                params: f.params.clone(),
+                outputs: f.outputs.clone(),
+                blocks: gen_blocks(&f.body, &mut ctx),
+            },
+        );
+    }
+    RtProgram { blocks, funcs }
+}
+
+fn gen_blocks(blocks: &[Block], ctx: &mut GenCtx) -> Vec<RtBlock> {
+    blocks
+        .iter()
+        .map(|b| match b {
+            Block::Generic(g) => RtBlock::Generic {
+                insts: gen_dag(&g.dag, ctx),
+                lines: g.lines,
+                recompile: g.recompile,
+            },
+            Block::If { pred, then_blocks, else_blocks, lines } => RtBlock::If {
+                pred: gen_pred(pred, ctx),
+                then_blocks: gen_blocks(then_blocks, ctx),
+                else_blocks: gen_blocks(else_blocks, ctx),
+                lines: *lines,
+            },
+            Block::For { var, from, to, by, body, parfor, known_trip, lines } => RtBlock::For {
+                var: var.clone(),
+                from: gen_pred(from, ctx),
+                to: gen_pred(to, ctx),
+                by: by.as_ref().map(|b| gen_pred(b, ctx)),
+                body: gen_blocks(body, ctx),
+                parfor: *parfor,
+                known_trip: *known_trip,
+                lines: *lines,
+            },
+            Block::While { pred, body, lines } => RtBlock::While {
+                pred: gen_pred(pred, ctx),
+                body: gen_blocks(body, ctx),
+                lines: *lines,
+            },
+            Block::FCall { fname, args, outputs, lines } => RtBlock::FCall {
+                fname: fname.clone(),
+                args: args.clone(),
+                outputs: outputs.clone(),
+                lines: *lines,
+            },
+        })
+        .collect()
+}
+
+fn gen_pred(dag: &HopDag, ctx: &mut GenCtx) -> PredProg {
+    let mut state = DagGen::new(dag, ctx);
+    state.run();
+    let result = dag.roots.first().map(|r| state.done[r].clone());
+    PredProg { insts: state.insts, result }
+}
+
+/// Generate instructions for one DAG.
+pub fn gen_dag(dag: &HopDag, ctx: &mut GenCtx) -> Vec<Instr> {
+    let mut state = DagGen::new(dag, ctx);
+    state.run();
+    insert_rmvars(state.insts)
+}
+
+struct DagGen<'a, 'b> {
+    dag: &'a HopDag,
+    ctx: &'a mut GenCtx<'b>,
+    topo: Vec<HopId>,
+    consumers: HashMap<HopId, Vec<HopId>>,
+    methods: HashMap<HopId, MatMultMethod>,
+    suppressed: HashSet<HopId>,
+    done: HashMap<HopId, Operand>,
+    insts: Vec<Instr>,
+    /// partition instructions already emitted for (broadcast var) -> temp
+    partitions: HashMap<String, String>,
+}
+
+impl<'a, 'b> DagGen<'a, 'b> {
+    fn new(dag: &'a HopDag, ctx: &'a mut GenCtx<'b>) -> Self {
+        let topo = dag.topo_order();
+        let mut consumers: HashMap<HopId, Vec<HopId>> = HashMap::new();
+        for &id in &topo {
+            for &i in &dag.hop(id).inputs {
+                consumers.entry(i).or_default().push(id);
+            }
+        }
+        // physical operator selection for matmults
+        let mut methods = HashMap::new();
+        for &id in &topo {
+            if dag.hop(id).kind == HopKind::MatMult {
+                methods.insert(id, select_matmult(dag, id, ctx.cfg, ctx.cc, ctx.hints));
+            }
+        }
+        // suppressed transposes: consumed only by tsmm (as the transposed
+        // side) or by the (y'X)' rewrite
+        let mut suppressed = HashSet::new();
+        for &id in &topo {
+            if dag.hop(id).kind != HopKind::Reorg(ReorgOp::Transpose) {
+                continue;
+            }
+            let cons = consumers.get(&id).cloned().unwrap_or_default();
+            let all_absorbed = !cons.is_empty()
+                && cons.iter().all(|&c| match methods.get(&c) {
+                    Some(MatMultMethod::CpTsmm { left }) | Some(MatMultMethod::MrTsmm { left }) => {
+                        let h = dag.hop(c);
+                        (*left && h.inputs[0] == id) || (!*left && h.inputs[1] == id)
+                    }
+                    Some(MatMultMethod::CpMMTransposeRewrite) => dag.hop(c).inputs[0] == id,
+                    _ => false,
+                });
+            if all_absorbed && !dag.roots.contains(&id) {
+                suppressed.insert(id);
+            }
+        }
+        DagGen {
+            dag,
+            ctx,
+            topo,
+            consumers,
+            methods,
+            suppressed,
+            done: HashMap::new(),
+            insts: Vec::new(),
+            partitions: HashMap::new(),
+        }
+    }
+
+    fn fresh_mvar(&mut self) -> String {
+        let v = format!("_mVar{}", self.ctx.var_counter);
+        self.ctx.var_counter += 1;
+        v
+    }
+
+    fn scratch_path(&self) -> String {
+        format!("{}/temp{}", self.ctx.scratch, self.ctx.var_counter)
+    }
+
+    /// Emit createvar + return the operand for a fresh matrix temp.
+    fn new_matrix_temp(&mut self, mc: crate::matrix::MatrixCharacteristics) -> Operand {
+        let path = self.scratch_path();
+        let var = self.fresh_mvar();
+        self.insts.push(Instr::CreateVar {
+            var: var.clone(),
+            path,
+            temp: true,
+            format: Format::BinaryBlock,
+            mc,
+        });
+        Operand::Mat(var)
+    }
+
+    fn run(&mut self) {
+        let mut remaining: Vec<HopId> = self.topo.clone();
+        let mut guard = 0;
+        while !remaining.is_empty() {
+            guard += 1;
+            assert!(guard <= self.topo.len() + 2, "runtime generation stuck");
+            let mut progress = false;
+            // CP pass
+            let mut i = 0;
+            while i < remaining.len() {
+                let id = remaining[i];
+                if self.cp_ready(id) {
+                    self.emit_cp(id);
+                    remaining.remove(i);
+                    progress = true;
+                } else {
+                    i += 1;
+                }
+            }
+            // MR wave
+            let wave: Vec<HopId> = {
+                let mut wave = Vec::new();
+                let mut wave_set: HashSet<HopId> = HashSet::new();
+                for &id in &remaining {
+                    if self.is_mr(id)
+                        && !self.suppressed.contains(&id)
+                        && self.mr_ready(id, &wave_set)
+                    {
+                        wave.push(id);
+                        wave_set.insert(id);
+                    }
+                }
+                wave
+            };
+            if !wave.is_empty() {
+                self.emit_mr_wave(&wave);
+                remaining.retain(|id| !wave.contains(id));
+                progress = true;
+            }
+            if !progress {
+                break;
+            }
+        }
+        debug_assert!(remaining.is_empty(), "unscheduled hops: {remaining:?}");
+    }
+
+    fn is_mr(&self, id: HopId) -> bool {
+        self.dag.hop(id).exec == Some(ExecType::Mr)
+    }
+
+    /// Inputs that matter for scheduling (skip suppressed transposes by
+    /// looking through them).
+    fn sched_inputs(&self, id: HopId) -> Vec<HopId> {
+        self.dag
+            .hop(id)
+            .inputs
+            .iter()
+            .map(|&i| if self.suppressed.contains(&i) { self.dag.hop(i).inputs[0] } else { i })
+            .collect()
+    }
+
+    fn cp_ready(&self, id: HopId) -> bool {
+        // Suppressed transposes are pure pass-throughs (they emit nothing),
+        // regardless of their selected execution type — an MR-typed
+        // suppressed transpose must NOT enter an MR wave, or it would be
+        // spuriously materialised.
+        if self.suppressed.contains(&id) {
+            return self.sched_inputs(id).iter().all(|i| self.done.contains_key(i));
+        }
+        if self.is_mr(id) {
+            return false;
+        }
+        self.sched_inputs(id).iter().all(|i| self.done.contains_key(i))
+    }
+
+    fn mr_ready(&self, id: HopId, wave: &HashSet<HopId>) -> bool {
+        self.sched_inputs(id)
+            .iter()
+            .all(|i| self.done.contains_key(i) || (wave.contains(i) && self.is_mr(*i)))
+    }
+
+    /// Operand of a hop input (resolving suppressed transposes to their
+    /// own input when requested by tsmm-style consumers).
+    fn operand(&self, id: HopId) -> Operand {
+        self.done[&id].clone()
+    }
+
+    // ----- CP emission -----
+
+    fn emit_cp(&mut self, id: HopId) {
+        use ir::UnOp;
+        let hop = self.dag.hop(id).clone();
+        if self.suppressed.contains(&id) {
+            // pass through: operand of the underlying input
+            let inner = self.dag.hop(id).inputs[0];
+            let op = self.done[&inner].clone();
+            self.done.insert(id, op);
+            return;
+        }
+        match &hop.kind {
+            HopKind::Literal(l) => {
+                self.done.insert(id, Operand::Lit(l.clone()));
+            }
+            HopKind::TRead { name } => {
+                let op = if hop.dtype.is_matrix() {
+                    Operand::Mat(name.clone())
+                } else {
+                    let vt = match &hop.dtype {
+                        ir::DataType::Scalar(vt) => *vt,
+                        _ => ir::ValueType::Double,
+                    };
+                    Operand::Scalar(name.clone(), vt)
+                };
+                self.done.insert(id, op);
+            }
+            HopKind::PRead { name, path, format } => {
+                let var = format!("pREAD{name}");
+                self.insts.push(Instr::CreateVar {
+                    var: var.clone(),
+                    path: path.clone(),
+                    temp: false,
+                    format: *format,
+                    mc: hop.mc,
+                });
+                self.done.insert(id, Operand::Mat(var));
+            }
+            HopKind::TWrite { name } => {
+                let input = self.operand(hop.inputs[0]);
+                match &input {
+                    Operand::Lit(l) => {
+                        self.insts.push(Instr::AssignVar { lit: l.clone(), var: name.clone() })
+                    }
+                    Operand::Mat(src) | Operand::Scalar(src, _) => self
+                        .insts
+                        .push(Instr::CpVar { src: src.clone(), dst: name.clone() }),
+                }
+                let out = match input {
+                    Operand::Lit(l) => Operand::Scalar(name.clone(), l.vtype()),
+                    Operand::Scalar(_, vt) => Operand::Scalar(name.clone(), vt),
+                    Operand::Mat(_) => Operand::Mat(name.clone()),
+                };
+                self.done.insert(id, out);
+            }
+            HopKind::PWrite { path, format, .. } => {
+                let input = self.operand(hop.inputs[0]);
+                self.insts.push(Instr::Cp(CpInst {
+                    op: CpOp::Write { path: path.clone(), format: *format },
+                    inputs: vec![input],
+                    output: Operand::Scalar("_done".into(), ir::ValueType::Bool),
+                }));
+                self.done.insert(id, Operand::Lit(ir::Lit::Bool(true)));
+            }
+            HopKind::Print => {
+                let input = self.operand(hop.inputs[0]);
+                self.insts.push(Instr::Cp(CpInst {
+                    op: CpOp::Print,
+                    inputs: vec![input],
+                    output: Operand::Scalar("_print".into(), ir::ValueType::Str),
+                }));
+                self.done.insert(id, Operand::Lit(ir::Lit::Bool(true)));
+            }
+            HopKind::MatMult => self.emit_cp_matmult(id),
+            HopKind::DataGen(DataGenOp::Rand { min, max, sparsity, seed }) => {
+                let rows = self.operand(hop.inputs[0]);
+                let cols = self.operand(hop.inputs[1]);
+                let out = self.new_matrix_temp(hop.mc);
+                self.insts.push(Instr::Cp(CpInst {
+                    op: CpOp::Rand { min: *min, max: *max, sparsity: *sparsity, seed: *seed },
+                    inputs: vec![rows, cols],
+                    output: out.clone(),
+                }));
+                self.done.insert(id, out);
+            }
+            HopKind::DataGen(DataGenOp::Seq { from, to, by }) => {
+                let out = self.new_matrix_temp(hop.mc);
+                self.insts.push(Instr::Cp(CpInst {
+                    op: CpOp::Seq { from: *from, to: *to, by: *by },
+                    inputs: vec![],
+                    output: out.clone(),
+                }));
+                self.done.insert(id, out);
+            }
+            HopKind::Reorg(r) => {
+                let input = self.operand(hop.inputs[0]);
+                let out = self.new_matrix_temp(hop.mc);
+                let op = match r {
+                    ReorgOp::Transpose => CpOp::Transpose,
+                    ReorgOp::Diag => CpOp::Diag,
+                };
+                self.insts.push(Instr::Cp(CpInst { op, inputs: vec![input], output: out.clone() }));
+                self.done.insert(id, out);
+            }
+            HopKind::Binary(b) => {
+                let lhs = self.operand(hop.inputs[0]);
+                let rhs = self.operand(hop.inputs[1]);
+                let out = if hop.dtype.is_matrix() {
+                    self.new_matrix_temp(hop.mc)
+                } else {
+                    let v = self.fresh_mvar();
+                    Operand::Scalar(v, scalar_vt(&hop.dtype))
+                };
+                self.insts.push(Instr::Cp(CpInst {
+                    op: CpOp::Binary(*b),
+                    inputs: vec![lhs, rhs],
+                    output: out.clone(),
+                }));
+                self.done.insert(id, out);
+            }
+            HopKind::Unary(u) => {
+                // nrow/ncol on known sizes fold to literals at runtime-plan
+                // level (SystemML compiles sizes into the plan)
+                if matches!(u, UnOp::Nrow | UnOp::Ncol | UnOp::Length) {
+                    let in_mc = self.dag.hop(hop.inputs[0]).mc;
+                    let v = match u {
+                        UnOp::Nrow if in_mc.rows >= 0 => Some(in_mc.rows),
+                        UnOp::Ncol if in_mc.cols >= 0 => Some(in_mc.cols),
+                        UnOp::Length if in_mc.dims_known() => Some(in_mc.rows * in_mc.cols),
+                        _ => None,
+                    };
+                    if let Some(v) = v {
+                        self.done.insert(id, Operand::Lit(ir::Lit::Int(v)));
+                        return;
+                    }
+                }
+                let input = self.operand(hop.inputs[0]);
+                let out = if hop.dtype.is_matrix() {
+                    self.new_matrix_temp(hop.mc)
+                } else {
+                    let v = self.fresh_mvar();
+                    Operand::Scalar(v, scalar_vt(&hop.dtype))
+                };
+                self.insts.push(Instr::Cp(CpInst {
+                    op: CpOp::Unary(*u),
+                    inputs: vec![input],
+                    output: out.clone(),
+                }));
+                self.done.insert(id, out);
+            }
+            HopKind::AggUnary(a, d) => {
+                let input = self.operand(hop.inputs[0]);
+                let out = if hop.dtype.is_matrix() {
+                    self.new_matrix_temp(hop.mc)
+                } else {
+                    let v = self.fresh_mvar();
+                    Operand::Scalar(v, ir::ValueType::Double)
+                };
+                self.insts.push(Instr::Cp(CpInst {
+                    op: CpOp::AggUnary(*a, *d),
+                    inputs: vec![input],
+                    output: out.clone(),
+                }));
+                self.done.insert(id, out);
+            }
+            HopKind::Append => {
+                let a = self.operand(hop.inputs[0]);
+                let b = self.operand(hop.inputs[1]);
+                let out = self.new_matrix_temp(hop.mc);
+                self.insts.push(Instr::Cp(CpInst {
+                    op: CpOp::Append,
+                    inputs: vec![a, b],
+                    output: out.clone(),
+                }));
+                self.done.insert(id, out);
+            }
+        }
+    }
+
+    fn emit_cp_matmult(&mut self, id: HopId) {
+        let hop = self.dag.hop(id).clone();
+        let method = self.methods[&id].clone();
+        match method {
+            MatMultMethod::CpTsmm { left } => {
+                // consume the non-transposed side directly
+                let x = if left { hop.inputs[1] } else { hop.inputs[0] };
+                let input = self.operand(x);
+                let out = self.new_matrix_temp(hop.mc);
+                self.insts.push(Instr::Cp(CpInst {
+                    op: CpOp::Tsmm { left },
+                    inputs: vec![input],
+                    output: out.clone(),
+                }));
+                self.done.insert(id, out);
+            }
+            MatMultMethod::CpMMTransposeRewrite => {
+                // t(X) %*% y  =>  t(t(y) %*% X)  (Figure 2)
+                let tx = hop.inputs[0];
+                let x = if self.suppressed.contains(&tx) {
+                    self.dag.hop(tx).inputs[0]
+                } else {
+                    // transpose materialised elsewhere: still valid to use X
+                    self.dag.hop(tx).inputs[0]
+                };
+                let y = hop.inputs[1];
+                let y_mc = self.dag.hop(y).mc;
+                let ty_mc = crate::matrix::MatrixCharacteristics::new(
+                    y_mc.cols, y_mc.rows, y_mc.brows, y_mc.nnz,
+                );
+                let y_op = self.operand(y);
+                let ty = self.new_matrix_temp(ty_mc);
+                self.insts.push(Instr::Cp(CpInst {
+                    op: CpOp::Transpose,
+                    inputs: vec![y_op],
+                    output: ty.clone(),
+                }));
+                let x_op = self.operand(x);
+                let prod_mc = crate::matrix::MatrixCharacteristics::new(
+                    hop.mc.cols, hop.mc.rows, hop.mc.brows, -1,
+                );
+                let prod = self.new_matrix_temp(prod_mc);
+                self.insts.push(Instr::Cp(CpInst {
+                    op: CpOp::MatMult,
+                    inputs: vec![ty, x_op],
+                    output: prod.clone(),
+                }));
+                let out = self.new_matrix_temp(hop.mc);
+                self.insts.push(Instr::Cp(CpInst {
+                    op: CpOp::Transpose,
+                    inputs: vec![prod],
+                    output: out.clone(),
+                }));
+                self.done.insert(id, out);
+            }
+            _ => {
+                // plain CP matrix multiply
+                let a = self.operand(hop.inputs[0]);
+                let b = self.operand(hop.inputs[1]);
+                let out = self.new_matrix_temp(hop.mc);
+                self.insts.push(Instr::Cp(CpInst {
+                    op: CpOp::MatMult,
+                    inputs: vec![a, b],
+                    output: out.clone(),
+                }));
+                self.done.insert(id, out);
+            }
+        }
+    }
+
+    // ----- MR wave emission -----
+
+    fn emit_mr_wave(&mut self, wave: &[HopId]) {
+        let wave_set: HashSet<HopId> = wave.iter().copied().collect();
+        let mut nodes: Vec<MrNode> = Vec::new();
+        // hop -> node id that produces its output
+        let mut hop_node: HashMap<HopId, usize> = HashMap::new();
+        for &id in wave {
+            self.build_nodes(id, &wave_set, &mut nodes, &mut hop_node);
+        }
+        // mark out_needed: consumers outside the wave or DAG roots
+        for &id in wave {
+            let external = self
+                .consumers
+                .get(&id)
+                .map(|cs| {
+                    cs.iter().any(|c| {
+                        !wave_set.contains(c)
+                            || (self.suppressed.contains(c)
+                                && self
+                                    .consumers
+                                    .get(c)
+                                    .map(|cc| cc.iter().any(|c2| !wave_set.contains(c2)))
+                                    .unwrap_or(true))
+                    })
+                })
+                .unwrap_or(true)
+                || self.dag.roots.contains(&id);
+            if external {
+                if let Some(&nid) = hop_node.get(&id) {
+                    nodes[nid].out_needed = true;
+                    nodes[nid].replicable = false;
+                }
+            }
+        }
+        let packed = piggyback::pack(&nodes, self.ctx.cfg.num_reducers, self.ctx.cfg.replication);
+        // createvars for materialised outputs, then the jobs
+        for (var, mc) in &packed.materialized {
+            let path = self.scratch_path();
+            self.insts.push(Instr::CreateVar {
+                var: var.clone(),
+                path,
+                temp: true,
+                format: Format::BinaryBlock,
+                mc: *mc,
+            });
+        }
+        for job in packed.jobs {
+            self.insts.push(Instr::MrJob(job));
+        }
+        // record hop results
+        for (&id, &nid) in &hop_node {
+            self.done.insert(id, Operand::Mat(nodes[nid].out_var.clone()));
+        }
+    }
+
+    /// Dependency of an MR node on a hop input.
+    fn mr_dep(
+        &self,
+        input: HopId,
+        wave: &HashSet<HopId>,
+        hop_node: &HashMap<HopId, usize>,
+    ) -> MrDep {
+        let input = if self.suppressed.contains(&input) {
+            // suppressed transpose: MR consumers that absorbed it reference
+            // the underlying matrix
+            self.dag.hop(input).inputs[0]
+        } else {
+            input
+        };
+        if wave.contains(&input) {
+            if let Some(&nid) = hop_node.get(&input) {
+                return MrDep::Node(nid);
+            }
+        }
+        match self.done.get(&input) {
+            Some(Operand::Mat(name)) => MrDep::Var(name.clone(), self.dag.hop(input).mc),
+            other => panic!("MR dep on non-matrix operand: {other:?}"),
+        }
+    }
+
+    /// Create piggybacking node(s) for one MR hop.
+    fn build_nodes(
+        &mut self,
+        id: HopId,
+        wave: &HashSet<HopId>,
+        nodes: &mut Vec<MrNode>,
+        hop_node: &mut HashMap<HopId, usize>,
+    ) {
+        use ir::{AggOp, BinOp as IBinOp};
+        let hop = self.dag.hop(id).clone();
+        let nid = nodes.len();
+        let out_var = self.fresh_mvar();
+        let base = MrNode {
+            nid,
+            op: MrOp::Transpose, // replaced below
+            agg: None,
+            phase: Phase::Map,
+            job_type: JobType::Gmr,
+            replicable: false,
+            deps: vec![],
+            broadcast: None,
+            out_var,
+            mc: hop.mc,
+            out_needed: false,
+        };
+        match &hop.kind {
+            HopKind::MatMult => {
+                let method = self.methods[&id].clone();
+                match method {
+                    MatMultMethod::MrTsmm { left } => {
+                        let x = if left { hop.inputs[1] } else { hop.inputs[0] };
+                        let x_mc = self.dag.hop(x).mc;
+                        let needs_agg = if left {
+                            x_mc.rows > x_mc.brows
+                        } else {
+                            x_mc.cols > x_mc.bcols
+                        };
+                        let mut n = base;
+                        n.op = MrOp::Tsmm { left };
+                        n.deps = vec![self.mr_dep(x, wave, hop_node)];
+                        n.agg = needs_agg.then_some(MrOp::Agg { kahan: true });
+                        nodes.push(n);
+                    }
+                    MatMultMethod::MrMapMM { broadcast_input, partition } => {
+                        let bc_hop_raw = hop.inputs[broadcast_input];
+                        // resolve suppressed transposes to their input
+                        let bc_hop = if self.suppressed.contains(&bc_hop_raw) {
+                            self.dag.hop(bc_hop_raw).inputs[0]
+                        } else {
+                            bc_hop_raw
+                        };
+                        // partitioned broadcast: CP partition instruction —
+                        // only possible for materialised variables, not for
+                        // MR intermediates produced in this same wave
+                        let bc_dep = if partition && self.done.contains_key(&bc_hop) {
+                            let bc_op = self.operand(bc_hop);
+                            let bc_name = bc_op.name().expect("broadcast must be a var").to_string();
+                            let part_var = if let Some(p) = self.partitions.get(&bc_name) {
+                                p.clone()
+                            } else {
+                                let out = self.new_matrix_temp(self.dag.hop(bc_hop).mc);
+                                let part_var = out.name().unwrap().to_string();
+                                self.insts.push(Instr::Cp(CpInst {
+                                    op: CpOp::Partition,
+                                    inputs: vec![bc_op],
+                                    output: out,
+                                }));
+                                self.partitions.insert(bc_name, part_var.clone());
+                                part_var
+                            };
+                            MrDep::Var(part_var, self.dag.hop(bc_hop).mc)
+                        } else {
+                            self.mr_dep(bc_hop, wave, hop_node)
+                        };
+                        let scan_input = hop.inputs[1 - broadcast_input];
+                        let scan_dep = self.mr_dep(scan_input, wave, hop_node);
+                        // contraction dimension: cols of input[0]
+                        let k = self.dag.hop(hop.inputs[0]).mc.cols;
+                        let needs_agg = k > self.ctx.cfg.blocksize;
+                        let mut n = base;
+                        n.op = MrOp::MapMM { right_part: broadcast_input == 1 };
+                        n.deps = if broadcast_input == 1 {
+                            vec![scan_dep, bc_dep]
+                        } else {
+                            vec![bc_dep, scan_dep]
+                        };
+                        n.broadcast = Some(broadcast_input);
+                        n.agg = needs_agg.then_some(MrOp::Agg { kahan: true });
+                        nodes.push(n);
+                    }
+                    MatMultMethod::MrCpmm => {
+                        // node 1: shuffle cpmm (MMCJ)
+                        let mut n1 = base;
+                        n1.op = MrOp::Cpmm;
+                        n1.phase = Phase::Shuffle;
+                        n1.job_type = JobType::Mmcj;
+                        n1.deps = vec![
+                            self.mr_dep(hop.inputs[0], wave, hop_node),
+                            self.mr_dep(hop.inputs[1], wave, hop_node),
+                        ];
+                        nodes.push(n1);
+                        // node 2: follow-up aggregation (GMR)
+                        let nid2 = nodes.len();
+                        let out_var2 = self.fresh_mvar();
+                        nodes.push(MrNode {
+                            nid: nid2,
+                            op: MrOp::Agg { kahan: true },
+                            agg: None,
+                            phase: Phase::Agg,
+                            job_type: JobType::Gmr,
+                            replicable: false,
+                            deps: vec![MrDep::Node(nid)],
+                            broadcast: None,
+                            out_var: out_var2,
+                            mc: hop.mc,
+                            out_needed: false,
+                        });
+                        hop_node.insert(id, nid2);
+                        return;
+                    }
+                    MatMultMethod::MrRmm => {
+                        let mut n = base;
+                        n.op = MrOp::Rmm;
+                        n.phase = Phase::Shuffle;
+                        n.job_type = JobType::Mmrj;
+                        n.deps = vec![
+                            self.mr_dep(hop.inputs[0], wave, hop_node),
+                            self.mr_dep(hop.inputs[1], wave, hop_node),
+                        ];
+                        nodes.push(n);
+                    }
+                    other => panic!("CP matmult method {other:?} on MR hop"),
+                }
+            }
+            HopKind::Reorg(r) => {
+                let mut n = base;
+                n.op = match r {
+                    ReorgOp::Transpose => MrOp::Transpose,
+                    ReorgOp::Diag => MrOp::Diag,
+                };
+                n.replicable = true;
+                n.deps = vec![self.mr_dep(hop.inputs[0], wave, hop_node)];
+                nodes.push(n);
+            }
+            HopKind::DataGen(DataGenOp::Rand { min, max, sparsity, seed }) => {
+                let mut n = base;
+                n.op = MrOp::DataGen {
+                    min: *min,
+                    max: *max,
+                    sparsity: *sparsity,
+                    seed: *seed,
+                    rows: hop.mc.rows,
+                    cols: hop.mc.cols,
+                };
+                n.job_type = JobType::Rand;
+                n.replicable = min == max;
+                nodes.push(n);
+            }
+            HopKind::DataGen(DataGenOp::Seq { from, to, by }) => {
+                let mut n = base;
+                n.op = MrOp::DataGen {
+                    min: *from,
+                    max: *to,
+                    sparsity: *by,
+                    seed: 0,
+                    rows: hop.mc.rows,
+                    cols: 1,
+                };
+                n.job_type = JobType::Rand;
+                n.replicable = true;
+                nodes.push(n);
+            }
+            HopKind::Binary(b) => {
+                // matrix-scalar (map-side) vs matrix-matrix (reduce join)
+                let a_scalar = !self.dag.hop(hop.inputs[0]).dtype.is_matrix();
+                let b_scalar = !self.dag.hop(hop.inputs[1]).dtype.is_matrix();
+                if a_scalar || b_scalar {
+                    let (m, s) = if a_scalar {
+                        (hop.inputs[1], hop.inputs[0])
+                    } else {
+                        (hop.inputs[0], hop.inputs[1])
+                    };
+                    let (scalar, scalar_var) = match self.operand(s) {
+                        Operand::Lit(l) => (l.as_f64().unwrap_or(f64::NAN), None),
+                        Operand::Scalar(v, _) => (f64::NAN, Some(v)),
+                        Operand::Mat(_) => unreachable!("scalar operand expected"),
+                    };
+                    let mut n = base;
+                    n.op = MrOp::ScalarBin {
+                        op: *b,
+                        scalar,
+                        scalar_var,
+                        scalar_left: a_scalar,
+                    };
+                    n.replicable = true;
+                    n.deps = vec![self.mr_dep(m, wave, hop_node)];
+                    nodes.push(n);
+                } else {
+                    let mut n = base;
+                    n.op = MrOp::Binary(*b);
+                    n.phase = Phase::Agg; // reduce-side join
+                    n.deps = vec![
+                        self.mr_dep(hop.inputs[0], wave, hop_node),
+                        self.mr_dep(hop.inputs[1], wave, hop_node),
+                    ];
+                    nodes.push(n);
+                }
+            }
+            HopKind::Unary(u) => {
+                let mut n = base;
+                n.op = MrOp::Unary(*u);
+                n.replicable = true;
+                n.deps = vec![self.mr_dep(hop.inputs[0], wave, hop_node)];
+                nodes.push(n);
+            }
+            HopKind::AggUnary(a, d) => {
+                let kahan = matches!(a, AggOp::Sum | AggOp::Mean | AggOp::Trace);
+                let mut n = base;
+                n.op = MrOp::AggUnaryMap(*a, *d);
+                n.agg = Some(MrOp::Agg { kahan });
+                n.deps = vec![self.mr_dep(hop.inputs[0], wave, hop_node)];
+                nodes.push(n);
+            }
+            HopKind::Append => {
+                let offset = self.dag.hop(hop.inputs[0]).mc.cols;
+                let mut n = base;
+                n.op = MrOp::Append { offset };
+                n.deps = vec![
+                    self.mr_dep(hop.inputs[0], wave, hop_node),
+                    self.mr_dep(hop.inputs[1], wave, hop_node),
+                ];
+                n.broadcast = Some(1);
+                nodes.push(n);
+            }
+            other => panic!("hop kind {other:?} cannot run on MR"),
+        }
+        // default: single node produced
+        let _ = IBinOp::Add;
+        hop_node.insert(id, nid);
+    }
+}
+
+fn scalar_vt(dt: &ir::DataType) -> ir::ValueType {
+    match dt {
+        ir::DataType::Scalar(vt) => *vt,
+        _ => ir::ValueType::Double,
+    }
+}
+
+/// Insert `rmvar` instructions after the last use of each `_mVar` temp.
+fn insert_rmvars(insts: Vec<Instr>) -> Vec<Instr> {
+    let mut last_use: HashMap<String, usize> = HashMap::new();
+    let mut temps: HashSet<String> = HashSet::new();
+    for (i, inst) in insts.iter().enumerate() {
+        let mut touch = |name: &str| {
+            last_use.insert(name.to_string(), i);
+        };
+        match inst {
+            Instr::CreateVar { var, temp, .. } => {
+                if *temp {
+                    temps.insert(var.clone());
+                }
+                touch(var);
+            }
+            Instr::AssignVar { var, .. } => touch(var),
+            Instr::CpVar { src, dst } => {
+                touch(src);
+                touch(dst);
+            }
+            Instr::RmVar { .. } => {}
+            Instr::Cp(c) => {
+                for op in &c.inputs {
+                    if let Some(n) = op.name() {
+                        touch(n);
+                    }
+                }
+                if let Some(n) = c.output.name() {
+                    touch(n);
+                    if n.starts_with("_mVar") {
+                        temps.insert(n.to_string());
+                    }
+                }
+            }
+            Instr::MrJob(j) => {
+                for v in j.inputs.iter().chain(&j.outputs) {
+                    touch(v);
+                }
+            }
+        }
+    }
+    let mut by_pos: HashMap<usize, Vec<String>> = HashMap::new();
+    for (var, pos) in last_use {
+        if temps.contains(&var) {
+            by_pos.entry(pos).or_default().push(var);
+        }
+    }
+    let mut out = Vec::with_capacity(insts.len());
+    for (i, inst) in insts.into_iter().enumerate() {
+        out.push(inst);
+        if let Some(mut vars) = by_pos.remove(&i) {
+            vars.sort();
+            out.push(Instr::RmVar { vars });
+        }
+    }
+    out
+}

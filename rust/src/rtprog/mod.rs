@@ -1,0 +1,426 @@
+//! Executable runtime programs (paper §2, Figures 2–3): program blocks of
+//! CP instructions and MR-job instructions, generated from HOP DAGs with
+//! physical operator selection and piggybacking.
+
+pub mod explain;
+pub mod gen;
+pub mod piggyback;
+
+use std::collections::BTreeMap;
+
+use crate::ir::{AggDir, AggOp, BinOp, Lit, UnOp, ValueType};
+use crate::matrix::{Format, MatrixCharacteristics};
+
+/// Instruction operand.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Operand {
+    /// Matrix variable.
+    Mat(String),
+    /// Scalar variable.
+    Scalar(String, ValueType),
+    /// Literal scalar.
+    Lit(Lit),
+}
+
+impl Operand {
+    pub fn name(&self) -> Option<&str> {
+        match self {
+            Operand::Mat(n) | Operand::Scalar(n, _) => Some(n),
+            Operand::Lit(_) => None,
+        }
+    }
+
+    /// SystemML-style rendering, e.g. `X.MATRIX.DOUBLE`, `0.SCALAR.INT.true`.
+    pub fn render(&self) -> String {
+        match self {
+            Operand::Mat(n) => format!("{n}.MATRIX.DOUBLE"),
+            Operand::Scalar(n, vt) => format!("{n}.SCALAR.{}", vt_name(*vt)),
+            Operand::Lit(l) => format!("{}.SCALAR.{}.true", l.render(), vt_name(l.vtype())),
+        }
+    }
+}
+
+fn vt_name(vt: ValueType) -> &'static str {
+    match vt {
+        ValueType::Int => "INT",
+        ValueType::Double => "DOUBLE",
+        ValueType::Bool => "BOOLEAN",
+        ValueType::Str => "STRING",
+    }
+}
+
+/// CP (control program) operation codes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CpOp {
+    /// Transpose-self matrix multiply (`tsmm ... LEFT`).
+    Tsmm { left: bool },
+    /// General matrix multiply `ba+*`.
+    MatMult,
+    /// Transpose `r'`.
+    Transpose,
+    /// Vector→diag matrix / matrix→diag vector `rdiag`.
+    Diag,
+    /// Data generation `rand` (rows/cols as operands, rest constant).
+    Rand { min: f64, max: f64, sparsity: f64, seed: i64 },
+    /// Sequence generation.
+    Seq { from: f64, to: f64, by: f64 },
+    /// Binary op (elementwise / matrix-scalar / scalar-scalar / solve).
+    Binary(BinOp),
+    /// Unary op.
+    Unary(UnOp),
+    /// Unary aggregate (`uak+`, `uark+`, `uack+`, ...).
+    AggUnary(AggOp, AggDir),
+    /// Horizontal concatenation.
+    Append,
+    /// Partition a matrix for partitioned broadcast (`ROW_BLOCK_WISE_N`).
+    Partition,
+    /// Persistent write.
+    Write { path: String, format: Format },
+    /// Print to stdout.
+    Print,
+}
+
+impl CpOp {
+    /// SystemML opcode string.
+    pub fn code(&self) -> String {
+        match self {
+            CpOp::Tsmm { .. } => "tsmm".into(),
+            CpOp::MatMult => "ba+*".into(),
+            CpOp::Transpose => "r'".into(),
+            CpOp::Diag => "rdiag".into(),
+            CpOp::Rand { .. } => "rand".into(),
+            CpOp::Seq { .. } => "seq".into(),
+            CpOp::Binary(b) => b.code().into(),
+            CpOp::Unary(u) => u.code().into(),
+            CpOp::AggUnary(op, dir) => {
+                let o = match op {
+                    AggOp::Sum => "ak+",
+                    AggOp::Mean => "amean",
+                    AggOp::Min => "amin",
+                    AggOp::Max => "amax",
+                    AggOp::Trace => "aktrace",
+                    AggOp::Nnz => "aknnz",
+                };
+                let d = match dir {
+                    AggDir::All => "u",
+                    AggDir::Row => "uar",
+                    AggDir::Col => "uac",
+                };
+                format!("{d}{o}")
+            }
+            CpOp::Append => "append".into(),
+            CpOp::Partition => "partition".into(),
+            CpOp::Write { .. } => "write".into(),
+            CpOp::Print => "print".into(),
+        }
+    }
+}
+
+/// One CP instruction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CpInst {
+    pub op: CpOp,
+    pub inputs: Vec<Operand>,
+    pub output: Operand,
+}
+
+/// MR job types (SystemML's piggybacking classes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum JobType {
+    /// Generic MR: map + (combine) + aggregate.
+    Gmr,
+    /// Data generation job.
+    Rand,
+    /// Cross-product join matmult (cpmm step 1).
+    Mmcj,
+    /// Replication-based matmult.
+    Mmrj,
+}
+
+impl JobType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobType::Gmr => "GMR",
+            JobType::Rand => "RAND",
+            JobType::Mmcj => "MMCJ",
+            JobType::Mmrj => "MMRJ",
+        }
+    }
+}
+
+/// MR instruction operators (operands are job-local byte indices).
+#[derive(Clone, Debug, PartialEq)]
+pub enum MrOp {
+    Tsmm { left: bool },
+    /// Broadcast matmult; `right_part` marks which side is the partitioned
+    /// broadcast input (Figure 3: `mapmm 3 1 4 RIGHT_PART false`).
+    MapMM { right_part: bool },
+    /// Cross-product join partial products (shuffle phase of MMCJ).
+    Cpmm,
+    /// Replication-join matmult (MMRJ).
+    Rmm,
+    Transpose,
+    Diag,
+    /// Rand datagen in a RAND job.
+    DataGen { min: f64, max: f64, sparsity: f64, seed: i64, rows: i64, cols: i64 },
+    /// Elementwise matrix-matrix binary (reduce-side join).
+    Binary(BinOp),
+    /// Matrix-scalar binary (map-side). The scalar is a literal (`scalar`)
+    /// or a runtime scalar variable (`scalar_var`) passed via job config.
+    ScalarBin { op: BinOp, scalar: f64, scalar_var: Option<String>, scalar_left: bool },
+    Unary(UnOp),
+    /// Map-side partial aggregate, e.g. `uak+`.
+    AggUnaryMap(AggOp, AggDir),
+    /// Final aggregation `ak+` (kahan) in combiner/reducer.
+    Agg { kahan: bool },
+    /// Map-side append of a broadcast column block.
+    Append { offset: i64 },
+}
+
+impl MrOp {
+    pub fn code(&self) -> String {
+        match self {
+            MrOp::Tsmm { .. } => "tsmm".into(),
+            MrOp::MapMM { .. } => "mapmm".into(),
+            MrOp::Cpmm => "cpmm".into(),
+            MrOp::Rmm => "rmm".into(),
+            MrOp::Transpose => "r'".into(),
+            MrOp::Diag => "rdiag".into(),
+            MrOp::DataGen { .. } => "rand".into(),
+            MrOp::Binary(b) => b.code().into(),
+            MrOp::ScalarBin { op, .. } => format!("s{}", op.code()),
+            MrOp::Unary(u) => u.code().into(),
+            MrOp::AggUnaryMap(op, dir) => {
+                let o = match op {
+                    AggOp::Sum => "k+",
+                    AggOp::Mean => "mean",
+                    AggOp::Min => "min",
+                    AggOp::Max => "max",
+                    AggOp::Trace => "ktrace",
+                    AggOp::Nnz => "knnz",
+                };
+                let d = match dir {
+                    AggDir::All => "ua",
+                    AggDir::Row => "uar",
+                    AggDir::Col => "uac",
+                };
+                format!("{d}{o}")
+            }
+            MrOp::Agg { kahan } => if *kahan { "ak+" } else { "a+" }.into(),
+            MrOp::Append { .. } => "append".into(),
+        }
+    }
+}
+
+/// One MR instruction with job-local operand indices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MrInst {
+    pub op: MrOp,
+    pub inputs: Vec<usize>,
+    pub output: usize,
+    /// Output characteristics (for costing shuffle/write volumes).
+    pub mc: MatrixCharacteristics,
+}
+
+/// A generated MR-job instruction (Figure 3's `MR-Job[...]`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MrJob {
+    pub job_type: JobType,
+    /// Input labels: variables read from HDFS (index order = byte index).
+    pub inputs: Vec<String>,
+    /// Inputs read via distributed cache (subset of `inputs`).
+    pub dcache: Vec<String>,
+    pub map_insts: Vec<MrInst>,
+    pub shuffle_insts: Vec<MrInst>,
+    pub agg_insts: Vec<MrInst>,
+    pub other_insts: Vec<MrInst>,
+    /// Output variable labels, parallel to `result_indices`.
+    pub outputs: Vec<String>,
+    pub result_indices: Vec<usize>,
+    pub num_reducers: usize,
+    pub replication: usize,
+}
+
+impl MrJob {
+    /// All instructions in execution order.
+    pub fn all_insts(&self) -> impl Iterator<Item = &MrInst> {
+        self.map_insts
+            .iter()
+            .chain(&self.shuffle_insts)
+            .chain(&self.agg_insts)
+            .chain(&self.other_insts)
+    }
+}
+
+/// Runtime instructions.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Instr {
+    /// Create matrix variable metadata handle.
+    CreateVar { var: String, path: String, temp: bool, format: Format, mc: MatrixCharacteristics },
+    /// Bind a literal to a scalar variable.
+    AssignVar { lit: Lit, var: String },
+    /// Bind a variable to another name.
+    CpVar { src: String, dst: String },
+    /// Remove variables (end of live range).
+    RmVar { vars: Vec<String> },
+    Cp(CpInst),
+    MrJob(MrJob),
+}
+
+/// Small instruction program computing a predicate / loop bound.
+#[derive(Clone, Debug, Default)]
+pub struct PredProg {
+    pub insts: Vec<Instr>,
+    pub result: Option<Operand>,
+}
+
+/// Runtime program blocks, mirroring [`crate::ir::Block`].
+#[derive(Clone, Debug)]
+pub enum RtBlock {
+    Generic { insts: Vec<Instr>, lines: (usize, usize), recompile: bool },
+    If {
+        pred: PredProg,
+        then_blocks: Vec<RtBlock>,
+        else_blocks: Vec<RtBlock>,
+        lines: (usize, usize),
+    },
+    For {
+        var: String,
+        from: PredProg,
+        to: PredProg,
+        by: Option<PredProg>,
+        body: Vec<RtBlock>,
+        parfor: bool,
+        known_trip: Option<f64>,
+        lines: (usize, usize),
+    },
+    While { pred: PredProg, body: Vec<RtBlock>, lines: (usize, usize) },
+    FCall { fname: String, args: Vec<String>, outputs: Vec<String>, lines: (usize, usize) },
+}
+
+/// A runtime function.
+#[derive(Clone, Debug)]
+pub struct RtFunction {
+    pub params: Vec<String>,
+    pub outputs: Vec<String>,
+    pub blocks: Vec<RtBlock>,
+}
+
+/// A complete runtime program.
+#[derive(Clone, Debug, Default)]
+pub struct RtProgram {
+    pub blocks: Vec<RtBlock>,
+    pub funcs: BTreeMap<String, RtFunction>,
+}
+
+impl RtProgram {
+    /// Count (CP, MR) instructions — the `size CP/MR = 34/0` header of
+    /// Figures 2 and 3.
+    pub fn size(&self) -> (usize, usize) {
+        fn count(blocks: &[RtBlock], cp: &mut usize, mr: &mut usize) {
+            let count_insts = |insts: &[Instr], cp: &mut usize, mr: &mut usize| {
+                for i in insts {
+                    match i {
+                        Instr::MrJob(_) => *mr += 1,
+                        Instr::RmVar { .. } => {}
+                        _ => *cp += 1,
+                    }
+                }
+            };
+            for b in blocks {
+                match b {
+                    RtBlock::Generic { insts, .. } => count_insts(insts, cp, mr),
+                    RtBlock::If { pred, then_blocks, else_blocks, .. } => {
+                        count_insts(&pred.insts, cp, mr);
+                        count(then_blocks, cp, mr);
+                        count(else_blocks, cp, mr);
+                    }
+                    RtBlock::For { from, to, by, body, .. } => {
+                        count_insts(&from.insts, cp, mr);
+                        count_insts(&to.insts, cp, mr);
+                        if let Some(by) = by {
+                            count_insts(&by.insts, cp, mr);
+                        }
+                        count(body, cp, mr);
+                    }
+                    RtBlock::While { pred, body, .. } => {
+                        count_insts(&pred.insts, cp, mr);
+                        count(body, cp, mr);
+                    }
+                    RtBlock::FCall { .. } => *cp += 1,
+                }
+            }
+        }
+        let (mut cp, mut mr) = (0, 0);
+        count(&self.blocks, &mut cp, &mut mr);
+        for f in self.funcs.values() {
+            count(&f.blocks, &mut cp, &mut mr);
+        }
+        (cp, mr)
+    }
+
+    /// Total number of MR jobs in the program.
+    pub fn mr_job_count(&self) -> usize {
+        self.size().1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn operand_rendering_matches_systemml() {
+        assert_eq!(Operand::Mat("X".into()).render(), "X.MATRIX.DOUBLE");
+        assert_eq!(
+            Operand::Lit(Lit::Int(0)).render(),
+            "0.SCALAR.INT.true"
+        );
+        assert_eq!(
+            Operand::Lit(Lit::Double(0.001)).render(),
+            "0.001.SCALAR.DOUBLE.true"
+        );
+        assert_eq!(
+            Operand::Scalar("intercept".into(), ValueType::Int).render(),
+            "intercept.SCALAR.INT"
+        );
+    }
+
+    #[test]
+    fn opcodes_match_figures() {
+        assert_eq!(CpOp::Tsmm { left: true }.code(), "tsmm");
+        assert_eq!(CpOp::MatMult.code(), "ba+*");
+        assert_eq!(CpOp::Transpose.code(), "r'");
+        assert_eq!(CpOp::Diag.code(), "rdiag");
+        assert_eq!(MrOp::Agg { kahan: true }.code(), "ak+");
+        assert_eq!(MrOp::MapMM { right_part: true }.code(), "mapmm");
+        assert_eq!(JobType::Gmr.name(), "GMR");
+    }
+
+    #[test]
+    fn program_size_counts_cp_and_mr() {
+        let mut prog = RtProgram::default();
+        prog.blocks.push(RtBlock::Generic {
+            insts: vec![
+                Instr::AssignVar { lit: Lit::Int(1), var: "a".into() },
+                Instr::RmVar { vars: vec!["a".into()] },
+                Instr::MrJob(MrJob {
+                    job_type: JobType::Gmr,
+                    inputs: vec![],
+                    dcache: vec![],
+                    map_insts: vec![],
+                    shuffle_insts: vec![],
+                    agg_insts: vec![],
+                    other_insts: vec![],
+                    outputs: vec![],
+                    result_indices: vec![],
+                    num_reducers: 12,
+                    replication: 1,
+                }),
+            ],
+            lines: (1, 1),
+            recompile: false,
+        });
+        assert_eq!(prog.size(), (1, 1)); // rmvar not counted
+    }
+}

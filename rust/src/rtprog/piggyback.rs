@@ -1,0 +1,603 @@
+//! Piggybacking: pack MR operations into a minimal number of MR jobs
+//! (paper §2: "our piggybacking algorithm (that packs MR operations into a
+//! minimal number of MR jobs) was able to pack all these operations into a
+//! single MR job which (1) shares the scan of X, and prevents the
+//! materialization of Xᵀ").
+//!
+//! The algorithm works in rounds over a list of [`MrNode`]s (one logical MR
+//! operation each, in topological order):
+//!
+//! * **Shuffle nodes** (cpmm/rmm) each open their own MMCJ/MMRJ job; cheap
+//!   map-phase producers (transpose, diag, datagen, scalar ops) are
+//!   *replicated* into consumer jobs instead of being materialised — this
+//!   reproduces the paper's XL2 observation that the transpose of X is
+//!   replicated into both jobs.
+//! * All remaining eligible **map/agg nodes of a round share one GMR job**
+//!   (map→map and map→agg chaining inside the job is free; the job may read
+//!   several inputs — XL1 packs tsmm, r' and mapmm over the shared scan of
+//!   X). Aggregations of *prior-round* outputs (the cpmm follow-up `ak+`)
+//!   enter the shared GMR as additional inputs — XL4's two cpmm
+//!   aggregations share one job.
+//!
+//! Under these rules the paper's scenarios yield exactly 1 (XL1) and
+//! 3 (XL2, XL3, XL4) MR jobs.
+
+use std::collections::{HashMap, HashSet};
+
+use super::*;
+
+/// Execution phase of an MR node inside a job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Map,
+    Shuffle,
+    Agg,
+}
+
+/// Dependency of an MR node.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MrDep {
+    /// A variable already resident on HDFS (or exported by CP).
+    Var(String, MatrixCharacteristics),
+    /// Output of another pending MR node.
+    Node(usize),
+}
+
+/// One logical MR operation awaiting job assignment.
+#[derive(Clone, Debug)]
+pub struct MrNode {
+    pub nid: usize,
+    pub op: MrOp,
+    /// Follow-up same-job aggregation (`ak+` for tsmm/mapmm/uagg partials).
+    pub agg: Option<MrOp>,
+    pub phase: Phase,
+    pub job_type: JobType,
+    /// Cheap map-phase op that may be copied into consumer jobs.
+    pub replicable: bool,
+    pub deps: Vec<MrDep>,
+    /// Index into `deps` read via distributed cache (broadcast).
+    pub broadcast: Option<usize>,
+    /// Materialization variable name (used when the output crosses jobs).
+    pub out_var: String,
+    /// Output characteristics.
+    pub mc: MatrixCharacteristics,
+    /// Output is consumed outside the MR subplan (CP instruction / final).
+    pub out_needed: bool,
+}
+
+/// Result of packing: jobs in execution order plus, for every node whose
+/// output was materialised, its variable name and characteristics.
+pub struct Packed {
+    pub jobs: Vec<MrJob>,
+    pub materialized: Vec<(String, MatrixCharacteristics)>,
+}
+
+/// Pack nodes into jobs.
+pub fn pack(nodes: &[MrNode], num_reducers: usize, replication: usize) -> Packed {
+    let by_id: HashMap<usize, &MrNode> = nodes.iter().map(|n| (n.nid, n)).collect();
+    // consumers of each node
+    let mut consumers: HashMap<usize, Vec<usize>> = HashMap::new();
+    for n in nodes {
+        for d in &n.deps {
+            if let MrDep::Node(d) = d {
+                consumers.entry(*d).or_default().push(n.nid);
+            }
+        }
+    }
+
+    let mut completed: HashSet<usize> = HashSet::new();
+    let mut pending: Vec<usize> = nodes.iter().map(|n| n.nid).collect();
+    let mut jobs = Vec::new();
+    let mut materialized = Vec::new();
+
+    // A replicable node can ride along if all of its own deps are vars or
+    // completed nodes.
+    let is_rideable = |nid: usize, completed: &HashSet<usize>| -> bool {
+        let n = by_id[&nid];
+        n.replicable
+            && n.phase == Phase::Map
+            && n.deps.iter().all(|d| match d {
+                MrDep::Var(..) => true,
+                MrDep::Node(d) => completed.contains(d),
+            })
+    };
+
+    let mut guard = 0;
+    while !pending.is_empty() {
+        guard += 1;
+        assert!(guard <= nodes.len() + 2, "piggybacking failed to make progress");
+        let mut round_drafts: Vec<Vec<usize>> = Vec::new(); // node ids per draft
+
+        // --- shuffle nodes: one job each, with rideable producers copied in
+        let shuffle_ready: Vec<usize> = pending
+            .iter()
+            .copied()
+            .filter(|&nid| {
+                let n = by_id[&nid];
+                n.phase == Phase::Shuffle
+                    && n.deps.iter().all(|d| match d {
+                        MrDep::Var(..) => true,
+                        MrDep::Node(d) => completed.contains(d) || is_rideable(*d, &completed),
+                    })
+            })
+            .collect();
+        for nid in shuffle_ready {
+            let n = by_id[&nid];
+            let mut draft = Vec::new();
+            for d in &n.deps {
+                if let MrDep::Node(d) = d {
+                    if !completed.contains(d) {
+                        draft.push(*d); // replicated copy
+                    }
+                }
+            }
+            draft.push(nid);
+            round_drafts.push(draft);
+        }
+
+        // --- shared GMR/RAND job for everything else that is ready.
+        // Shuffle nodes placed above are excluded, but their *replicated
+        // riders* may be copied into the shared job too (the paper's XL2:
+        // r' rides both the MMCJ and the mapmm GMR).
+        let placed_shuffle: HashSet<usize> = round_drafts
+            .iter()
+            .flatten()
+            .copied()
+            .filter(|nid| by_id[nid].phase == Phase::Shuffle)
+            .collect();
+        let mut shared: Vec<usize> = Vec::new();
+        let mut shared_set: HashSet<usize> = HashSet::new();
+        // iterate in order until fixpoint: map→map / map→agg chains allowed
+        loop {
+            let mut progress = false;
+            for &nid in &pending {
+                if shared_set.contains(&nid) || placed_shuffle.contains(&nid) {
+                    continue;
+                }
+                let n = by_id[&nid];
+                if n.phase == Phase::Shuffle {
+                    continue;
+                }
+                // replicable nodes are never seeds: they enter jobs only as
+                // riders of a consumer (otherwise a transpose whose
+                // consumers were all packed into MMCJ jobs would open a
+                // spurious extra GMR)
+                if n.replicable && !n.out_needed {
+                    continue;
+                }
+                let ok = n.deps.iter().all(|d| match d {
+                    MrDep::Var(..) => true,
+                    MrDep::Node(d) => {
+                        if completed.contains(d) || shared_set.contains(d) {
+                            // completed outputs are HDFS inputs; in-job
+                            // chaining requires a map-phase producer without
+                            // its own aggregation
+                            !shared_set.contains(d) || {
+                                let p = by_id[d];
+                                p.phase == Phase::Map && p.agg.is_none()
+                            }
+                        } else {
+                            is_rideable(*d, &completed)
+                        }
+                    }
+                });
+                if ok {
+                    // pull rideable deps in as copies first
+                    for d in &n.deps {
+                        if let MrDep::Node(d) = d {
+                            if !completed.contains(d) && !shared_set.contains(d) {
+                                shared.push(*d);
+                                shared_set.insert(*d);
+                            }
+                        }
+                    }
+                    shared.push(nid);
+                    shared_set.insert(nid);
+                    progress = true;
+                }
+            }
+            if !progress {
+                break;
+            }
+        }
+        if !shared.is_empty() {
+            round_drafts.push(shared);
+        }
+
+        assert!(!round_drafts.is_empty(), "piggybacking deadlock: no node placeable");
+
+        // --- finalise drafts into MrJobs
+        let mut newly_completed: Vec<usize> = Vec::new();
+        for draft in &round_drafts {
+            let draft_set: HashSet<usize> = draft.iter().copied().collect();
+            let job = build_job(
+                draft,
+                &draft_set,
+                &by_id,
+                &consumers,
+                &completed,
+                num_reducers,
+                replication,
+                &mut materialized,
+            );
+            jobs.push(job);
+            for &nid in draft {
+                let n = by_id[&nid];
+                // replicated copies stay pending until every consumer is done;
+                // non-replicable nodes complete now
+                if !n.replicable {
+                    newly_completed.push(nid);
+                } else {
+                    let cons = consumers.get(&nid).cloned().unwrap_or_default();
+                    let all_done = cons.iter().all(|c| {
+                        draft_set.contains(c)
+                            || completed.contains(c)
+                            || newly_completed.contains(c)
+                    });
+                    // materialised copies complete too
+                    if all_done || materialized.iter().any(|(v, _)| v == &n.out_var) {
+                        newly_completed.push(nid);
+                    }
+                }
+            }
+        }
+        for nid in newly_completed {
+            completed.insert(nid);
+            pending.retain(|&p| p != nid);
+        }
+    }
+
+    Packed { jobs, materialized }
+}
+
+/// Build one MrJob from a draft (node ids in topological order).
+#[allow(clippy::too_many_arguments)]
+fn build_job(
+    draft: &[usize],
+    draft_set: &HashSet<usize>,
+    by_id: &HashMap<usize, &MrNode>,
+    consumers: &HashMap<usize, Vec<usize>>,
+    completed: &HashSet<usize>,
+    num_reducers: usize,
+    replication: usize,
+    materialized: &mut Vec<(String, MatrixCharacteristics)>,
+) -> MrJob {
+    // 1. collect job input variables (byte indices 0..k-1)
+    let mut inputs: Vec<String> = Vec::new();
+    let mut dcache: Vec<String> = Vec::new();
+    let mut var_idx: HashMap<String, usize> = HashMap::new();
+    let intern = |name: &str, inputs: &mut Vec<String>, var_idx: &mut HashMap<String, usize>| {
+        if let Some(&i) = var_idx.get(name) {
+            return i;
+        }
+        let i = inputs.len();
+        inputs.push(name.to_string());
+        var_idx.insert(name.to_string(), i);
+        i
+    };
+    for &nid in draft {
+        let n = by_id[&nid];
+        for (k, d) in n.deps.iter().enumerate() {
+            let name = match d {
+                MrDep::Var(v, _) => v.clone(),
+                MrDep::Node(d) if !draft_set.contains(d) => {
+                    debug_assert!(completed.contains(d), "dep must be completed");
+                    by_id[d].out_var.clone()
+                }
+                _ => continue,
+            };
+            let idx = intern(&name, &mut inputs, &mut var_idx);
+            if n.broadcast == Some(k) && !dcache.contains(&inputs[idx]) {
+                dcache.push(inputs[idx].clone());
+            }
+        }
+    }
+
+    // 2. assign output indices and build instructions. All map/shuffle
+    // outputs are allocated before the follow-up aggregation outputs,
+    // matching SystemML's byte-index scheme (Figure 3: tsmm→2, r'→3,
+    // mapmm→4, then ak+→5 and ak+→6).
+    let mut next_idx = inputs.len();
+    let mut node_out_idx: HashMap<usize, usize> = HashMap::new();
+    let mut node_pre_agg_idx: HashMap<usize, usize> = HashMap::new();
+    let mut map_insts = Vec::new();
+    let mut shuffle_insts = Vec::new();
+    let mut agg_insts = Vec::new();
+    let other_insts = Vec::new();
+    for &nid in draft {
+        let n = by_id[&nid];
+        let in_idx: Vec<usize> = n
+            .deps
+            .iter()
+            .map(|d| match d {
+                MrDep::Var(v, _) => var_idx[v],
+                MrDep::Node(d) => {
+                    if draft_set.contains(d) && node_out_idx.contains_key(d) {
+                        node_out_idx[d]
+                    } else {
+                        var_idx[&by_id[d].out_var]
+                    }
+                }
+            })
+            .collect();
+        let out = next_idx;
+        next_idx += 1;
+        let inst = MrInst { op: n.op.clone(), inputs: in_idx, output: out, mc: n.mc };
+        match n.phase {
+            Phase::Map => map_insts.push(inst),
+            Phase::Shuffle => shuffle_insts.push(inst),
+            Phase::Agg => agg_insts.push(inst),
+        }
+        node_pre_agg_idx.insert(nid, out);
+        if n.agg.is_none() {
+            node_out_idx.insert(nid, out);
+        }
+    }
+    // second pass: follow-up aggregations
+    for &nid in draft {
+        let n = by_id[&nid];
+        if let Some(agg) = &n.agg {
+            let aout = next_idx;
+            next_idx += 1;
+            agg_insts.push(MrInst {
+                op: agg.clone(),
+                inputs: vec![node_pre_agg_idx[&nid]],
+                output: aout,
+                mc: n.mc,
+            });
+            node_out_idx.insert(nid, aout);
+        }
+    }
+
+    // 3. decide job outputs: nodes consumed outside this draft or by CP
+    let mut outputs = Vec::new();
+    let mut result_indices = Vec::new();
+    for &nid in draft {
+        let n = by_id[&nid];
+        let external = n.out_needed
+            || consumers
+                .get(&nid)
+                .map(|cs| cs.iter().any(|c| !draft_set.contains(c) && !completed.contains(c)))
+                .unwrap_or(false);
+        // replicated copies never materialise unless a CP consumer needs
+        // them (`out_needed`): cross-job MR consumers get their own copy
+        let external = external && (!n.replicable || n.out_needed);
+        if external && !materialized.iter().any(|(v, _)| v == &n.out_var) {
+            outputs.push(n.out_var.clone());
+            result_indices.push(node_out_idx[&nid]);
+            materialized.push((n.out_var.clone(), n.mc));
+        }
+    }
+
+    let job_type = if draft.iter().any(|&nid| by_id[&nid].phase == Phase::Shuffle) {
+        draft
+            .iter()
+            .map(|&nid| by_id[&nid])
+            .find(|n| n.phase == Phase::Shuffle)
+            .map(|n| n.job_type)
+            .unwrap_or(JobType::Gmr)
+    } else if draft.iter().any(|&nid| matches!(by_id[&nid].op, MrOp::DataGen { .. })) {
+        JobType::Rand
+    } else {
+        JobType::Gmr
+    };
+
+    MrJob {
+        job_type,
+        inputs,
+        dcache,
+        map_insts,
+        shuffle_insts,
+        agg_insts,
+        other_insts,
+        outputs,
+        result_indices,
+        num_reducers,
+        replication,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::MatrixCharacteristics;
+
+    fn mc(r: i64, c: i64) -> MatrixCharacteristics {
+        MatrixCharacteristics::new(r, c, 1000, -1)
+    }
+
+    fn node(nid: usize, op: MrOp, deps: Vec<MrDep>) -> MrNode {
+        MrNode {
+            nid,
+            op,
+            agg: None,
+            phase: Phase::Map,
+            job_type: JobType::Gmr,
+            replicable: false,
+            deps,
+            broadcast: None,
+            out_var: format!("_mVar{}", nid + 10),
+            mc: mc(1000, 1000),
+            out_needed: false,
+        }
+    }
+
+    fn xvar() -> MrDep {
+        MrDep::Var("X".into(), mc(100_000_000, 1000))
+    }
+
+    /// XL1: tsmm + r' + mapmm + two aggs -> a single GMR job (Figure 3).
+    #[test]
+    fn xl1_single_gmr_job() {
+        let mut tsmm = node(0, MrOp::Tsmm { left: true }, vec![xvar()]);
+        tsmm.agg = Some(MrOp::Agg { kahan: true });
+        tsmm.out_needed = true;
+        let mut tr = node(1, MrOp::Transpose, vec![xvar()]);
+        tr.replicable = true;
+        let mut mapmm = node(
+            2,
+            MrOp::MapMM { right_part: true },
+            vec![MrDep::Node(1), MrDep::Var("_mVar3".into(), mc(100_000_000, 1))],
+        );
+        mapmm.agg = Some(MrOp::Agg { kahan: true });
+        mapmm.broadcast = Some(1);
+        mapmm.out_needed = true;
+        let packed = pack(&[tsmm, tr, mapmm], 12, 1);
+        assert_eq!(packed.jobs.len(), 1, "XL1 must pack into one job");
+        let j = &packed.jobs[0];
+        assert_eq!(j.job_type, JobType::Gmr);
+        assert_eq!(j.inputs, vec!["X".to_string(), "_mVar3".to_string()]);
+        assert_eq!(j.dcache, vec!["_mVar3".to_string()]);
+        assert_eq!(j.map_insts.len(), 3); // tsmm, r', mapmm
+        assert_eq!(j.agg_insts.len(), 2); // two ak+
+        assert_eq!(j.outputs.len(), 2);
+    }
+
+    /// XL2: cpmm for X'X (MMCJ + agg) + mapmm GMR; r' replicated into both
+    /// the MMCJ and the GMR job -> 3 jobs total.
+    #[test]
+    fn xl2_three_jobs_with_replicated_transpose() {
+        let mut tr = node(0, MrOp::Transpose, vec![xvar()]);
+        tr.replicable = true;
+        let mut cpmm = node(1, MrOp::Cpmm, vec![MrDep::Node(0), xvar()]);
+        cpmm.phase = Phase::Shuffle;
+        cpmm.job_type = JobType::Mmcj;
+        let mut cpmm_agg = node(2, MrOp::Agg { kahan: true }, vec![MrDep::Node(1)]);
+        cpmm_agg.phase = Phase::Agg;
+        cpmm_agg.out_needed = true;
+        let mut mapmm = node(
+            3,
+            MrOp::MapMM { right_part: true },
+            vec![MrDep::Node(0), MrDep::Var("_mVar3".into(), mc(100_000_000, 1))],
+        );
+        mapmm.agg = Some(MrOp::Agg { kahan: true });
+        mapmm.broadcast = Some(1);
+        mapmm.out_needed = true;
+        let packed = pack(&[tr, cpmm, cpmm_agg, mapmm], 12, 1);
+        assert_eq!(packed.jobs.len(), 3, "XL2 = MMCJ + GMR(mapmm) + GMR(agg)");
+        // r' appears in two jobs (replication)
+        let transposes: usize = packed
+            .jobs
+            .iter()
+            .map(|j| j.all_insts().filter(|i| i.op == MrOp::Transpose).count())
+            .sum();
+        assert_eq!(transposes, 2, "transpose replicated into both jobs");
+        assert_eq!(packed.jobs[0].job_type, JobType::Mmcj);
+    }
+
+    /// XL3: map-side tsmm (GMR) + cpmm for X'y (MMCJ + agg GMR) -> 3 jobs.
+    #[test]
+    fn xl3_three_jobs() {
+        let mut tsmm = node(0, MrOp::Tsmm { left: true }, vec![xvar()]);
+        tsmm.agg = Some(MrOp::Agg { kahan: true });
+        tsmm.out_needed = true;
+        let mut tr = node(1, MrOp::Transpose, vec![xvar()]);
+        tr.replicable = true;
+        let mut cpmm = node(
+            2,
+            MrOp::Cpmm,
+            vec![MrDep::Node(1), MrDep::Var("y".into(), mc(200_000_000, 1))],
+        );
+        cpmm.phase = Phase::Shuffle;
+        cpmm.job_type = JobType::Mmcj;
+        let mut cpmm_agg = node(3, MrOp::Agg { kahan: true }, vec![MrDep::Node(2)]);
+        cpmm_agg.phase = Phase::Agg;
+        cpmm_agg.out_needed = true;
+        let packed = pack(&[tsmm, tr, cpmm, cpmm_agg], 12, 1);
+        assert_eq!(packed.jobs.len(), 3);
+    }
+
+    /// XL4: two cpmm (2 MMCJ jobs) + both aggregations share one GMR -> 3.
+    #[test]
+    fn xl4_shared_aggregation_job() {
+        let mut tr = node(0, MrOp::Transpose, vec![xvar()]);
+        tr.replicable = true;
+        let mut cpmm1 = node(1, MrOp::Cpmm, vec![MrDep::Node(0), xvar()]);
+        cpmm1.phase = Phase::Shuffle;
+        cpmm1.job_type = JobType::Mmcj;
+        let mut agg1 = node(2, MrOp::Agg { kahan: true }, vec![MrDep::Node(1)]);
+        agg1.phase = Phase::Agg;
+        agg1.out_needed = true;
+        let mut cpmm2 = node(
+            3,
+            MrOp::Cpmm,
+            vec![MrDep::Node(0), MrDep::Var("y".into(), mc(200_000_000, 1))],
+        );
+        cpmm2.phase = Phase::Shuffle;
+        cpmm2.job_type = JobType::Mmcj;
+        let mut agg2 = node(4, MrOp::Agg { kahan: true }, vec![MrDep::Node(3)]);
+        agg2.phase = Phase::Agg;
+        agg2.out_needed = true;
+        let packed = pack(&[tr, cpmm1, agg1, cpmm2, agg2], 12, 1);
+        assert_eq!(packed.jobs.len(), 3, "2 MMCJ + 1 shared agg GMR");
+        let agg_job = packed.jobs.last().unwrap();
+        assert_eq!(agg_job.job_type, JobType::Gmr);
+        assert_eq!(agg_job.agg_insts.len(), 2, "both aggregations shared");
+        assert_eq!(agg_job.inputs.len(), 2, "reads both MMCJ outputs");
+    }
+
+    /// Byte indices follow SystemML's scheme: inputs 0..k-1, then outputs.
+    #[test]
+    fn byte_index_assignment_matches_figure3() {
+        let mut tsmm = node(0, MrOp::Tsmm { left: true }, vec![xvar()]);
+        tsmm.agg = Some(MrOp::Agg { kahan: true });
+        tsmm.out_needed = true;
+        let mut tr = node(1, MrOp::Transpose, vec![xvar()]);
+        tr.replicable = true;
+        let mut mapmm = node(
+            2,
+            MrOp::MapMM { right_part: true },
+            vec![MrDep::Node(1), MrDep::Var("_mVar3".into(), mc(100_000_000, 1))],
+        );
+        mapmm.agg = Some(MrOp::Agg { kahan: true });
+        mapmm.broadcast = Some(1);
+        mapmm.out_needed = true;
+        let packed = pack(&[tsmm, tr, mapmm], 12, 1);
+        let j = &packed.jobs[0];
+        // Figure 3: tsmm 0->2, r' 0->3, mapmm (3,1)->4, ak+ 2->5, ak+ 4->6
+        assert_eq!(j.map_insts[0].inputs, vec![0]);
+        assert_eq!(j.map_insts[0].output, 2);
+        assert_eq!(j.map_insts[1].inputs, vec![0]);
+        assert_eq!(j.map_insts[1].output, 3);
+        assert_eq!(j.map_insts[2].inputs, vec![3, 1]);
+        assert_eq!(j.map_insts[2].output, 4);
+        assert_eq!(j.agg_insts[0].inputs, vec![2]);
+        assert_eq!(j.agg_insts[0].output, 5);
+        assert_eq!(j.agg_insts[1].inputs, vec![4]);
+        assert_eq!(j.agg_insts[1].output, 6);
+        assert_eq!(j.result_indices, vec![5, 6]);
+    }
+
+    #[test]
+    fn chain_of_aggregated_outputs_splits_jobs() {
+        // map op consuming an aggregated output must go to the next job
+        let mut a = node(0, MrOp::Tsmm { left: true }, vec![xvar()]);
+        a.agg = Some(MrOp::Agg { kahan: true });
+        let mut b = node(
+            1,
+            MrOp::ScalarBin { op: BinOp::Mul, scalar: 2.0, scalar_var: None, scalar_left: false },
+            vec![MrDep::Node(0)],
+        );
+        b.out_needed = true;
+        let packed = pack(&[a, b], 12, 1);
+        assert_eq!(packed.jobs.len(), 2);
+        // first job materialises the tsmm output for the second
+        assert_eq!(packed.jobs[0].outputs.len(), 1);
+        assert!(packed.jobs[1].inputs.contains(&packed.jobs[0].outputs[0]));
+    }
+
+    #[test]
+    fn map_chain_shares_one_job() {
+        // r' -> scalar multiply chain: one GMR job, no materialisation
+        let tr = node(0, MrOp::Transpose, vec![xvar()]);
+        let mut sc = node(
+            1,
+            MrOp::ScalarBin { op: BinOp::Mul, scalar: 2.0, scalar_var: None, scalar_left: false },
+            vec![MrDep::Node(0)],
+        );
+        sc.out_needed = true;
+        let packed = pack(&[tr, sc], 12, 1);
+        assert_eq!(packed.jobs.len(), 1);
+        assert_eq!(packed.jobs[0].outputs.len(), 1);
+    }
+}

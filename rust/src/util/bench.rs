@@ -1,0 +1,138 @@
+//! Minimal micro-benchmark harness.
+//!
+//! criterion is not available in the offline build environment, so the
+//! `benches/` targets (declared with `harness = false`) use this harness
+//! instead: warmup, fixed-duration sampling, and median / mean / p95
+//! reporting with ns..s autoscaling.
+
+use std::time::{Duration, Instant};
+
+/// Result statistics of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    /// One-line human-readable summary.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10}  (mean {:>10}, p95 {:>10}, n={})",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.p95),
+            self.samples
+        )
+    }
+}
+
+/// Format a duration with autoscaled units.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Fixed-budget benchmark runner.
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    max_samples: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(1200),
+            max_samples: 2000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Override the measurement budget (e.g. for slow end-to-end benches).
+    pub fn with_budget(mut self, warmup: Duration, measure: Duration) -> Self {
+        self.warmup = warmup;
+        self.measure = measure;
+        self
+    }
+
+    /// Benchmark a closure; the closure's return value is black-boxed.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchStats {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure && samples.len() < self.max_samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let n = samples.len().max(1);
+        let total: Duration = samples.iter().sum();
+        let stats = BenchStats {
+            name: name.to_string(),
+            samples: n,
+            mean: total / n as u32,
+            median: samples.get(n / 2).copied().unwrap_or_default(),
+            p95: samples.get((n * 95) / 100).copied().unwrap_or_default(),
+            min: samples.first().copied().unwrap_or_default(),
+            max: samples.last().copied().unwrap_or_default(),
+        };
+        println!("{}", stats.line());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// All results collected so far.
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_stats() {
+        let mut b = Bencher::new().with_budget(Duration::from_millis(5), Duration::from_millis(20));
+        let s = b.bench("noop", || 1 + 1).clone();
+        assert!(s.samples > 0);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(Duration::from_nanos(12)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(12)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(12)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(12)).contains(" s"));
+    }
+}

@@ -1,0 +1,90 @@
+//! Formatting helpers shared by EXPLAIN output and reports.
+
+/// Format a byte count the way SystemML's EXPLAIN does (whole MB).
+pub fn fmt_mb(bytes: f64) -> String {
+    format!("{}MB", (bytes / (1024.0 * 1024.0)).round() as i64)
+}
+
+/// Human-readable byte count with autoscaled units.
+pub fn fmt_bytes(bytes: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = bytes;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", v as i64, UNITS[u])
+    } else {
+        format!("{:.1} {}", v, UNITS[u])
+    }
+}
+
+/// Format seconds the way the paper's cost-annotated plans do: scientific
+/// notation for tiny values, fixed-point otherwise (e.g. `4.7E-9s`, `3.31s`).
+pub fn fmt_secs(s: f64) -> String {
+    if s == 0.0 {
+        "0s".to_string()
+    } else if s < 1e-3 {
+        let exp = s.log10().floor() as i32;
+        let mant = s / 10f64.powi(exp);
+        format!("{mant:.1}E{exp}s")
+    } else if s < 10.0 {
+        format!("{s:.3}s")
+    } else {
+        format!("{s:.1}s")
+    }
+}
+
+/// Format a dimension that may be unknown (-1), SystemML-style (`1e4` or `-1`).
+pub fn fmt_dim(d: i64) -> String {
+    if d < 0 {
+        return "-1".to_string();
+    }
+    // Use short scientific form for powers of ten like the paper's Figure 1.
+    let f = d as f64;
+    let exp = f.log10();
+    if d > 0 && exp.fract() == 0.0 && d >= 1000 {
+        format!("1e{}", exp as i64)
+    } else if d >= 1000 && (f / 10f64.powf(exp.floor())).fract() == 0.0 {
+        format!("{}e{}", (f / 10f64.powf(exp.floor())) as i64, exp.floor() as i64)
+    } else {
+        d.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mb_rounding() {
+        assert_eq!(fmt_mb(80.0 * 1024.0 * 1024.0), "80MB");
+        assert_eq!(fmt_mb(0.0), "0MB");
+    }
+
+    #[test]
+    fn bytes_scaling() {
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert!(fmt_bytes(80e6).contains("MB"));
+        assert!(fmt_bytes(1.6e12).contains("TB"));
+    }
+
+    #[test]
+    fn secs_matches_paper_style() {
+        assert_eq!(fmt_secs(0.0), "0s");
+        assert!(fmt_secs(4.7e-9).starts_with("4.7E-9"));
+        assert_eq!(fmt_secs(3.31), "3.310s");
+        assert_eq!(fmt_secs(606.9), "606.9s");
+    }
+
+    #[test]
+    fn dims_scientific() {
+        assert_eq!(fmt_dim(10_000), "1e4");
+        assert_eq!(fmt_dim(1000), "1e3");
+        assert_eq!(fmt_dim(200_000_000), "2e8");
+        assert_eq!(fmt_dim(-1), "-1");
+        assert_eq!(fmt_dim(7), "7");
+    }
+}

@@ -1,0 +1,11 @@
+//! Small self-contained utilities: a deterministic PRNG, a micro-benchmark
+//! harness (stand-in for criterion, which is unavailable offline), a
+//! property-testing helper (stand-in for proptest), and formatting helpers.
+
+pub mod bench;
+pub mod fmt;
+pub mod prop;
+pub mod rng;
+
+pub use bench::Bencher;
+pub use rng::Rng;

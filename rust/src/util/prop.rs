@@ -1,0 +1,68 @@
+//! Tiny property-based testing helper (proptest is unavailable offline).
+//!
+//! `forall(cases, seed, gen, check)` runs `check` on `cases` random inputs
+//! produced by `gen` from a deterministic [`Rng`]; on failure it panics with
+//! the case index and seed so the exact failing input can be reproduced by
+//! rerunning with `case_seed`.
+
+use super::rng::Rng;
+
+/// Run `check` on `cases` randomly generated inputs.
+///
+/// Panics with a reproducible seed on the first failing case.
+pub fn forall<T: std::fmt::Debug>(
+    cases: usize,
+    seed: u64,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut check: impl FnMut(&T) -> Result<(), String>,
+) {
+    for i in 0..cases {
+        let case_seed = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(i as u64);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property failed at case {i}/{cases} (case_seed={case_seed}):\n  input: {input:?}\n  error: {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience assertion for approximate float equality in properties.
+pub fn close(a: f64, b: f64, rel: f64) -> Result<(), String> {
+    let denom = a.abs().max(b.abs()).max(1e-12);
+    if (a - b).abs() / denom <= rel {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (rel tol {rel})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(50, 1, |r| r.range_i64(0, 100), |x| {
+            count += 1;
+            if *x <= 100 { Ok(()) } else { Err("out of range".into()) }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(50, 2, |r| r.range_i64(0, 100), |x| {
+            if *x < 0 { Ok(()) } else { Err("always fails".into()) }
+        });
+    }
+
+    #[test]
+    fn close_tolerates_relative_error() {
+        assert!(close(100.0, 100.5, 0.01).is_ok());
+        assert!(close(100.0, 120.0, 0.01).is_err());
+    }
+}

@@ -1,0 +1,280 @@
+//! Cross-module property tests (randomised via `systemds::util::prop` —
+//! the offline stand-in for proptest): compiler/coordinator invariants
+//! over random scenario sizes and cluster configurations.
+
+use std::collections::HashSet;
+
+use systemds::api::{compile_with_meta, CompileOptions, Scenario, LINREG_DS};
+use systemds::conf::{ClusterConfig, CostConstants, SystemConfig, MB};
+use systemds::cost;
+use systemds::ir::build::StaticMeta;
+use systemds::matrix::{Format, MatrixCharacteristics};
+use systemds::rtprog::{Instr, RtBlock, RtProgram};
+use systemds::util::prop::forall;
+use systemds::util::rng::Rng;
+
+fn random_scenario(r: &mut Rng) -> (i64, i64, f64) {
+    let rows = r.range_i64(1, 8) * 10i64.pow(r.range_i64(3, 8) as u32);
+    let cols = r.range_i64(1, 40) * 100;
+    let heap_mb = [256.0, 1024.0, 2048.0, 8192.0][r.below(4) as usize];
+    (rows, cols, heap_mb)
+}
+
+fn compile_random(rows: i64, cols: i64, heap_mb: f64) -> (RtProgram, CompileOptions) {
+    let mut cc = ClusterConfig::paper_cluster();
+    cc.cp_heap_bytes = heap_mb * MB;
+    cc.map_heap_bytes = heap_mb * MB;
+    let opts = CompileOptions {
+        cc: systemds::api::ClusterConfigOpt(cc),
+        cfg: SystemConfig::default(),
+        ..Default::default()
+    };
+    let meta = StaticMeta::default()
+        .with(
+            "data/X",
+            MatrixCharacteristics::dense(rows, cols, 1000),
+            Format::BinaryBlock,
+        )
+        .with("data/y", MatrixCharacteristics::dense(rows, 1, 1000), Format::BinaryBlock);
+    let c = compile_with_meta(LINREG_DS, &Scenario::xs().args(), &meta, &opts).unwrap();
+    (c.runtime, opts)
+}
+
+fn all_insts(rt: &RtProgram) -> Vec<&Instr> {
+    fn walk<'a>(blocks: &'a [RtBlock], out: &mut Vec<&'a Instr>) {
+        for b in blocks {
+            match b {
+                RtBlock::Generic { insts, .. } => out.extend(insts.iter()),
+                RtBlock::If { pred, then_blocks, else_blocks, .. } => {
+                    out.extend(pred.insts.iter());
+                    walk(then_blocks, out);
+                    walk(else_blocks, out);
+                }
+                RtBlock::For { from, to, by, body, .. } => {
+                    out.extend(from.insts.iter());
+                    out.extend(to.insts.iter());
+                    if let Some(by) = by {
+                        out.extend(by.insts.iter());
+                    }
+                    walk(body, out);
+                }
+                RtBlock::While { pred, body, .. } => {
+                    out.extend(pred.insts.iter());
+                    walk(body, out);
+                }
+                RtBlock::FCall { .. } => {}
+            }
+        }
+    }
+    let mut v = Vec::new();
+    walk(&rt.blocks, &mut v);
+    v
+}
+
+/// Every MR-job input label is defined before the job (createvar/cpvar or
+/// earlier job output), and every output has a prior createvar.
+#[test]
+fn prop_mr_job_labels_are_defined_before_use() {
+    forall(
+        40,
+        0xA11CE,
+        |r| random_scenario(r),
+        |&(rows, cols, heap)| {
+            let (rt, _) = compile_random(rows, cols, heap);
+            let mut defined: HashSet<String> = HashSet::new();
+            for inst in all_insts(&rt) {
+                match inst {
+                    Instr::CreateVar { var, .. } => {
+                        defined.insert(var.clone());
+                    }
+                    Instr::CpVar { dst, .. } => {
+                        defined.insert(dst.clone());
+                    }
+                    Instr::AssignVar { var, .. } => {
+                        defined.insert(var.clone());
+                    }
+                    Instr::Cp(c) => {
+                        if let Some(n) = c.output.name() {
+                            defined.insert(n.to_string());
+                        }
+                    }
+                    Instr::MrJob(j) => {
+                        for v in &j.inputs {
+                            if !defined.contains(v) {
+                                return Err(format!("job input '{v}' undefined"));
+                            }
+                        }
+                        for v in &j.outputs {
+                            if !defined.contains(v) {
+                                return Err(format!("job output '{v}' lacks createvar"));
+                            }
+                        }
+                    }
+                    Instr::RmVar { .. } => {}
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Piggybacking invariants: byte indices are unique per job, instruction
+/// inputs reference job inputs or earlier outputs, result indices exist.
+#[test]
+fn prop_piggyback_byte_indices_consistent() {
+    forall(
+        40,
+        0xBEEF,
+        |r| random_scenario(r),
+        |&(rows, cols, heap)| {
+            let (rt, _) = compile_random(rows, cols, heap);
+            for inst in all_insts(&rt) {
+                let Instr::MrJob(j) = inst else { continue };
+                let mut produced: HashSet<usize> = (0..j.inputs.len()).collect();
+                for mi in j.all_insts() {
+                    for &i in &mi.inputs {
+                        if !produced.contains(&i) {
+                            return Err(format!("inst reads undefined index {i}"));
+                        }
+                    }
+                    if !produced.insert(mi.output) {
+                        return Err(format!("duplicate output index {}", mi.output));
+                    }
+                }
+                for &ri in &j.result_indices {
+                    if !produced.contains(&ri) {
+                        return Err(format!("result index {ri} never produced"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Cost is monotone in data size (same script, same cluster).
+#[test]
+fn prop_cost_monotone_in_rows() {
+    forall(
+        25,
+        0xC0DE,
+        |r| {
+            let cols = r.range_i64(1, 20) * 100;
+            let rows = r.range_i64(1, 50) * 100_000;
+            (rows, cols)
+        },
+        |&(rows, cols)| {
+            let k = CostConstants::default();
+            let (rt1, o1) = compile_random(rows, cols, 2048.0);
+            let (rt2, o2) = compile_random(rows * 4, cols, 2048.0);
+            let c1 = cost::cost_program(&rt1, &o1.cfg, &o1.cc.0, &k).total;
+            let c2 = cost::cost_program(&rt2, &o2.cfg, &o2.cc.0, &k).total;
+            // Strict monotonicity only holds while the plan is stable
+            // (pure CP in both cases). Around the CP/MR boundary, the
+            // greedy per-operator execution-type selection can produce
+            // hybrid plans that, e.g., read X twice (once CP, once MR) —
+            // the bigger input then compiles to a *better* all-MR plan.
+            // This is faithful to SystemML (it is the motivation for the
+            // global data-flow optimizer built on this cost model), so we
+            // only demand a sanity bound across plan flips.
+            if rt1.mr_job_count() == 0 && rt2.mr_job_count() == 0 {
+                if c2 >= c1 * 0.99 {
+                    Ok(())
+                } else {
+                    Err(format!("4x rows got cheaper: {c1} -> {c2}"))
+                }
+            } else if c2 >= c1 * 0.2 {
+                Ok(())
+            } else {
+                Err(format!("plan flip but 5x cheaper: {c1} -> {c2}"))
+            }
+        },
+    );
+}
+
+/// Costing is deterministic and strictly positive.
+#[test]
+fn prop_cost_deterministic_positive() {
+    forall(
+        30,
+        0xD00D,
+        |r| random_scenario(r),
+        |&(rows, cols, heap)| {
+            let k = CostConstants::default();
+            let (rt, o) = compile_random(rows, cols, heap);
+            let a = cost::cost_program(&rt, &o.cfg, &o.cc.0, &k).total;
+            let b = cost::cost_program(&rt, &o.cfg, &o.cc.0, &k).total;
+            if a != b {
+                return Err(format!("nondeterministic: {a} vs {b}"));
+            }
+            if !(a.is_finite() && a > 0.0) {
+                return Err(format!("non-positive cost {a}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// More resources never add MR jobs (plan robustness under budget growth).
+#[test]
+fn prop_more_memory_never_more_jobs() {
+    forall(
+        25,
+        0xFADE,
+        |r| {
+            let (rows, cols, _) = random_scenario(r);
+            (rows, cols)
+        },
+        |&(rows, cols)| {
+            let (small, _) = compile_random(rows, cols, 512.0);
+            let (large, _) = compile_random(rows, cols, 8192.0);
+            if large.mr_job_count() <= small.mr_job_count() {
+                Ok(())
+            } else {
+                Err(format!(
+                    "more heap, more jobs: {} -> {}",
+                    small.mr_job_count(),
+                    large.mr_job_count()
+                ))
+            }
+        },
+    );
+}
+
+/// rmvar never removes a variable still used afterwards in the block.
+#[test]
+fn prop_rmvar_after_last_use() {
+    forall(
+        30,
+        0x5EED,
+        |r| random_scenario(r),
+        |&(rows, cols, heap)| {
+            let (rt, _) = compile_random(rows, cols, heap);
+            for b in &rt.blocks {
+                let RtBlock::Generic { insts, .. } = b else { continue };
+                let mut removed: HashSet<String> = HashSet::new();
+                for inst in insts {
+                    let uses: Vec<String> = match inst {
+                        Instr::Cp(c) => c
+                            .inputs
+                            .iter()
+                            .filter_map(|o| o.name().map(str::to_string))
+                            .collect(),
+                        Instr::MrJob(j) => j.inputs.clone(),
+                        Instr::CpVar { src, .. } => vec![src.clone()],
+                        _ => vec![],
+                    };
+                    for u in uses {
+                        if removed.contains(&u) {
+                            return Err(format!("use of '{u}' after rmvar"));
+                        }
+                    }
+                    if let Instr::RmVar { vars } = inst {
+                        removed.extend(vars.iter().cloned());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
