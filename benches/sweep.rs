@@ -1,0 +1,68 @@
+//! Bench S1 (tentpole): the parallel, plan-memoizing scenario sweep vs a
+//! serial loop of `api::compile` + `cost` calls on the same grid — the
+//! consumer pattern the paper's cost model exists for (many plan/config
+//! combinations costed cheaply and compared).
+//!
+//! Uses the in-repo fixed-budget harness (criterion is unavailable in
+//! the hermetic offline build; see rust/Cargo.toml).
+
+use std::time::Duration;
+
+use systemds::api::{DataScenario, Scenario, SweepSpec};
+use systemds::opt::sweep::{heap_clock_clusters, sweep, sweep_serial};
+use systemds::util::bench::Bencher;
+use systemds::util::par;
+
+/// A wide grid: 5 Table-1 scenarios × (7 heap sizes × 2 clock variants)
+/// = 70 cells, 35 distinct plan shapes.
+fn wide_spec(threads: usize) -> SweepSpec {
+    let mut spec = SweepSpec::linreg_default();
+    spec.clusters =
+        heap_clock_clusters(&[256.0, 512.0, 1024.0, 2048.0, 4096.0, 8192.0, 16384.0]);
+    spec.scenarios = Scenario::all().iter().map(DataScenario::from).collect();
+    spec.threads = threads;
+    spec
+}
+
+fn main() {
+    let threads = par::default_threads();
+    let spec = wide_spec(threads);
+    println!(
+        "== sweep: {} cells ({} clusters x {} scenarios), {} worker threads ==",
+        spec.cell_count(),
+        spec.clusters.len(),
+        spec.scenarios.len(),
+        threads
+    );
+    let report = sweep(&spec).expect("sweep");
+    println!("{}", report.summary());
+
+    let mut b = Bencher::new().with_budget(Duration::from_millis(300), Duration::from_secs(3));
+    let par_stats = b
+        .bench(&format!("parallel sweep ({threads} threads, memoized)"), || {
+            sweep(&spec).unwrap().cells.len()
+        })
+        .clone();
+    let ser_stats = b
+        .bench("serial compile+cost loop (no memoization)", || {
+            sweep_serial(&spec).unwrap().cells.len()
+        })
+        .clone();
+
+    let speedup = ser_stats.median.as_secs_f64() / par_stats.median.as_secs_f64().max(1e-12);
+    println!(
+        "\n-> parallel sweep is {speedup:.2}x the serial loop ({} vs {})",
+        systemds::util::bench::fmt_dur(par_stats.median),
+        systemds::util::bench::fmt_dur(ser_stats.median),
+    );
+    if speedup > 1.0 {
+        println!("-> PARALLEL WINS");
+    } else {
+        println!("-> parallel did not win on this machine/grid");
+    }
+
+    println!("\n-- ranked table (top 10) --");
+    for line in report.table().lines().take(12) {
+        println!("{line}");
+    }
+}

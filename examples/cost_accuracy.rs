@@ -24,6 +24,7 @@ use systemds::cost;
 use systemds::cp::interp::Executor;
 use systemds::matrix::{io, ops, DenseMatrix};
 use systemds::runtime::KernelRegistry;
+use systemds::util::error::{Error, Result};
 
 struct Case {
     name: &'static str,
@@ -44,7 +45,7 @@ b = t(X) %*% y;
 r = sum(b) + s;
 write(r, $4);"#;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let dir = std::env::temp_dir().join("sysds_cost_accuracy");
     std::fs::create_dir_all(&dir)?;
     let registry = KernelRegistry::load(std::path::Path::new("artifacts")).ok();
@@ -97,7 +98,7 @@ fn calibrate(
     dir: &std::path::Path,
     registry: Option<&KernelRegistry>,
     threads: usize,
-) -> anyhow::Result<(f64, CostConstants)> {
+) -> Result<(f64, CostConstants)> {
     // compute probe: tsmm on 2048x128; the executor's adaptive dispatch
     // picks the faster of PJRT and native, so calibrate against that same
     // minimum.
@@ -157,7 +158,7 @@ fn run_case(
     threads: usize,
     clock: f64,
     consts: &CostConstants,
-) -> anyhow::Result<(f64, f64, usize)> {
+) -> Result<(f64, f64, usize)> {
     let tag = format!("{}x{}_{}", case.rows, case.cols, case.heap_mb);
     let x = DenseMatrix::rand(case.rows, case.cols, -1.0, 1.0, 1.0, 42);
     let beta = DenseMatrix::rand(case.cols, 1, -0.5, 0.5, 1.0, 43);
@@ -189,7 +190,7 @@ fn run_case(
     let mut est_cc = cc.clone();
     est_cc.clock_hz = clock;
 
-    let compiled = compile(case.script, &args, &opts).map_err(|e| anyhow::anyhow!(e))?;
+    let compiled = compile(case.script, &args, &opts).map_err(Error::msg)?;
     let report = cost::cost_program(&compiled.runtime, &opts.cfg, &est_cc, consts);
 
     // Warm run first: lazy PJRT kernel compilation happens once per process

@@ -14,8 +14,9 @@ use systemds::cost;
 use systemds::cp::interp::Executor;
 use systemds::matrix::{io, ops, DenseMatrix};
 use systemds::runtime::KernelRegistry;
+use systemds::util::error::{Error, Result};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // ---- 1. compile the paper's XS scenario against the paper's cluster
     let opts = CompileOptions::default();
     let xs = Scenario::xs();
@@ -54,7 +55,7 @@ fn main() -> anyhow::Result<()> {
         cc: systemds::api::ClusterConfigOpt(ClusterConfig::local(8, 2048.0 * MB)),
         ..Default::default()
     };
-    let prog = compile(LINREG_DS, &args, &local).map_err(|e| anyhow::anyhow!(e))?;
+    let prog = compile(LINREG_DS, &args, &local).map_err(Error::msg)?;
     let registry = KernelRegistry::load(std::path::Path::new("artifacts")).ok();
     let mut exec = Executor::new(&local.cfg, &local.cc.0, registry.as_ref(), dir.join("scratch"));
     let stats = exec.run(&prog.runtime)?;

@@ -18,6 +18,17 @@ use crate::lop::SelectionHints;
 use crate::matrix::{Format, MatrixCharacteristics};
 use crate::rtprog::{self, RtProgram};
 
+pub use crate::opt::sweep::{DataScenario, NamedCluster, SweepCell, SweepReport, SweepSpec};
+
+/// Run a parallel scenario sweep: compile the spec's script once per
+/// distinct plan shape across the ClusterConfig × data-size grid, cost
+/// every cell concurrently, and return the ranked comparison report
+/// (the paper's Table-1 workflow, automated). Thin wrapper around
+/// [`crate::opt::sweep::sweep`]; see that module for the pipeline.
+pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
+    crate::opt::sweep::sweep(spec)
+}
+
 /// Compilation options: system config + cluster characteristics + hints.
 #[derive(Clone, Debug, Default)]
 pub struct CompileOptions {

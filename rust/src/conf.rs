@@ -8,27 +8,37 @@
 //! compiler-level knobs (block size, memory budget ratio, #reducers).
 
 /// Cluster characteristics `cc` used by the optimizer and the cost model.
+///
+/// Plan *shape* depends only on the heap sizes (through the §2 memory
+/// budgets); every other field affects estimated *cost* but never the
+/// generated plan — the distinction the sweep engine's plan-memoization
+/// key ([`crate::opt::sweep`]) relies on.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClusterConfig {
     /// Max/initial JVM heap size of the client (control program), bytes.
+    /// Paper cluster (§2): 2048 MB; drives the local memory budget.
     pub cp_heap_bytes: f64,
-    /// Max/initial JVM heap size of each map task, bytes.
+    /// Max/initial JVM heap size of each map task, bytes. Paper: 2048 MB;
+    /// drives the remote budget that gates mapmm broadcasts (§2).
     pub map_heap_bytes: f64,
-    /// Max/initial JVM heap size of each reduce task, bytes.
+    /// Max/initial JVM heap size of each reduce task, bytes. Paper: 2048 MB.
     pub reduce_heap_bytes: f64,
-    /// Degree of parallelism of the local control program (`k_l`).
+    /// Degree of parallelism of the local control program (`k_l`, §3.3).
+    /// Paper: 24 vcores on the head node (Figure 1 header).
     pub k_local: usize,
-    /// Available map slots in the cluster (`k_m`).
+    /// Available map slots in the cluster (`k_m`, §3.3). Paper: 144.
     pub k_map: usize,
-    /// Available reduce slots in the cluster (`k_r`).
+    /// Available reduce slots in the cluster (`k_r`, §3.3). Paper: 72.
     pub k_reduce: usize,
-    /// HDFS block size in bytes (also the input-split size).
+    /// HDFS block size in bytes (also the input-split size used for the
+    /// `nmap = ⌈M'(X)/block⌉` task count, §3.3). Paper: 128 MB.
     pub hdfs_block_bytes: f64,
-    /// Number of worker nodes (used by YARN-style resource correction).
+    /// Number of worker nodes (used by YARN-style resource correction,
+    /// §3.1). Paper: 6 workers (1+6 cluster).
     pub nodes: usize,
-    /// Per-node virtual cores (YARN correction input).
+    /// Per-node virtual cores (YARN correction input). Paper: 24.
     pub vcores_per_node: usize,
-    /// Per-node memory available to YARN containers, bytes.
+    /// Per-node memory available to YARN containers, bytes. Paper: 96 GB.
     pub yarn_mem_per_node: f64,
     /// Processor clock in Hz used to convert FLOPs to seconds (paper §3.3:
     /// "assuming 1 FLOP per cycle"). Calibrated to 2.15 GHz, which
@@ -99,18 +109,25 @@ pub const GB: f64 = 1024.0 * 1024.0 * 1024.0;
 #[derive(Clone, Debug, PartialEq)]
 pub struct SystemConfig {
     /// Matrix block size for the binary-block format (rows and cols).
+    /// Default 1000 (SystemML's 1000×1000 blocks, §2); bounds map-side
+    /// tsmm feasibility (`ncol ≤ blocksize`).
     pub blocksize: i64,
-    /// Fraction of heap available as the optimizer memory budget (0.70).
+    /// Fraction of heap available as the optimizer memory budget.
+    /// Default 0.70, yielding the paper's 1434 MB budgets (Figure 1).
     pub mem_budget_ratio: f64,
-    /// Default number of reducers (2x number of worker nodes).
+    /// Default number of reducers per MR job. Default 12 = 2× worker
+    /// nodes (Figure 3 `num reducers = 12`).
     pub num_reducers: usize,
-    /// Replication factor for MR job outputs.
+    /// Replication factor for MR job outputs. Default 1 (Figure 3).
     pub replication: usize,
-    /// Sparsity threshold below which matrices are stored sparse in memory.
+    /// Sparsity threshold below which matrices are stored sparse in
+    /// memory (MatrixBlock rule, §3.1). Default 0.4.
     pub sparse_threshold: f64,
-    /// Assumed iterations for loops with unknown trip count (§3.5, `N̂`).
+    /// Assumed iterations `N̂` for loops with unknown trip count (§3.5).
+    /// Default 10.
     pub unknown_iterations: f64,
-    /// Partition size for partitioned broadcasts (32 MB, §2).
+    /// Partition size for partitioned broadcasts, bytes. Default 32 MB
+    /// (§2 — `_mVar3` in Figure 3 is a partitioned broadcast of y).
     pub partition_bytes: f64,
 }
 
@@ -152,28 +169,39 @@ impl SystemConfig {
 #[derive(Clone, Debug, PartialEq)]
 pub struct CostConstants {
     /// Single-threaded HDFS read bandwidth for binary-block format, B/s.
+    /// Default 150 MB/s (reproduces Figure 4's 0.51 s read of the 80 MB X).
     pub hdfs_read_binaryblock: f64,
     /// Single-threaded HDFS read bandwidth for text formats, B/s.
+    /// Default 75 MB/s (text parsing halves the effective rate).
     pub hdfs_read_text: f64,
     /// Single-threaded HDFS write bandwidth for binary-block, B/s.
+    /// Default 120 MB/s.
     pub hdfs_write_binaryblock: f64,
     /// Single-threaded HDFS write bandwidth for text formats, B/s.
+    /// Default 60 MB/s.
     pub hdfs_write_text: f64,
-    /// Local-disk read bandwidth (scratch space / buffer-pool evictions).
+    /// Local-disk read bandwidth (scratch space / buffer-pool evictions),
+    /// B/s. Default 200 MB/s.
     pub local_read: f64,
-    /// Local-disk write bandwidth.
+    /// Local-disk write bandwidth, B/s. Default 160 MB/s.
     pub local_write: f64,
-    /// Distributed-cache read bandwidth per task, B/s.
+    /// Distributed-cache read bandwidth per task, B/s. Default 215 MB/s
+    /// (calibrated against Figure 5's dcread = 12.6 s).
     pub dcache_read: f64,
-    /// Shuffle end-to-end bandwidth (map write + transfer + reduce merge).
+    /// Shuffle end-to-end bandwidth (map write + transfer + reduce
+    /// merge), B/s. Default 96 MB/s (Figure 5 shuffle = 19.7 s).
     pub shuffle_bw: f64,
-    /// Main-memory bandwidth (per thread) used for memory-bound ops, B/s.
+    /// Main-memory bandwidth (per thread) used for memory-bound ops,
+    /// B/s. Default 2.5 GB/s.
     pub mem_bw: f64,
-    /// MR job submission latency, seconds (Hadoop job startup ~20 s).
+    /// MR job submission latency, seconds. Default 20 s (Hadoop job
+    /// startup; dominates tiny jobs, §3.3).
     pub job_latency: f64,
-    /// Per-task startup latency, seconds.
+    /// Per-task startup latency, seconds. Default 1.5 s (Figure 5:
+    /// latency = 144.5 s for 5967 map tasks at dop 72·0.5·... ).
     pub task_latency: f64,
     /// Fixed cost of bookkeeping instructions (createvar etc.), seconds.
+    /// Default 4.7e-9 s (Figure 4 prints `4.7E-9s` per createvar).
     pub bookkeeping: f64,
     /// Scale factor applied to the parallelism minimum when computing the
     /// effective degree of parallelism of MR phases (§3.3 "scaled minimum";

@@ -10,6 +10,12 @@
 //! ```
 //!
 //! `C(P, cc) = T̂(P)`.
+//!
+//! This module is kept `missing_docs`-clean: every public item carries
+//! rustdoc (checked by the lint below; see docs/ARCHITECTURE.md for the
+//! narrative version of the model).
+
+#![warn(missing_docs)]
 
 pub mod flops;
 pub mod mr;
@@ -24,13 +30,16 @@ use vars::{DataState, VarTracker};
 /// Cost of one instruction, split IO / compute (Figure 4's `C=[io, comp]`).
 #[derive(Clone, Debug, Default)]
 pub struct InstCost {
+    /// IO seconds: HDFS reads of cold inputs plus persistent writes.
     pub io: f64,
+    /// Compute seconds: `max(FLOPs/clock, bytes/mem_bw)` (§3.3).
     pub compute: f64,
     /// MR jobs carry a full breakdown instead.
     pub mr: Option<mr::MrJobCost>,
 }
 
 impl InstCost {
+    /// Total seconds (MR breakdown total, or `io + compute`).
     pub fn total(&self) -> f64 {
         match &self.mr {
             Some(m) => m.total(),
@@ -42,11 +51,27 @@ impl InstCost {
 /// Cost annotation tree, parallel to the runtime program structure.
 #[derive(Clone, Debug)]
 pub enum CostNode {
-    Block { label: String, total: f64, children: Vec<CostNode> },
-    Inst { rendered: String, cost: InstCost },
+    /// A program block (generic/if/for/while/fcall) with its Eq.-1
+    /// weighted total and child annotations.
+    Block {
+        /// Display label, e.g. `GENERIC (lines 1-3)`.
+        label: String,
+        /// Weighted total seconds for the block (Eq. 1).
+        total: f64,
+        /// Child annotations (instructions and nested blocks).
+        children: Vec<CostNode>,
+    },
+    /// One instruction with its rendered text and cost split.
+    Inst {
+        /// SystemML-style instruction string.
+        rendered: String,
+        /// IO/compute (or MR breakdown) cost of the instruction.
+        cost: InstCost,
+    },
 }
 
 impl CostNode {
+    /// Total seconds of this node.
     pub fn total(&self) -> f64 {
         match self {
             CostNode::Block { total, .. } => *total,
@@ -60,6 +85,7 @@ impl CostNode {
 pub struct CostReport {
     /// `C(P, cc)` — estimated execution time in seconds.
     pub total: f64,
+    /// Per-block cost annotations in program order (Figures 4/5).
     pub nodes: Vec<CostNode>,
 }
 

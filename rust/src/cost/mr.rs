@@ -11,23 +11,34 @@ use crate::matrix::{Format, MatrixCharacteristics};
 use crate::rtprog::*;
 
 /// Full cost breakdown of one MR job (the annotations of Figure 5).
+/// All time components are in seconds, already normalised by the
+/// effective degree of parallelism of their phase.
 #[derive(Clone, Debug, Default)]
 pub struct MrJobCost {
+    /// Number of map tasks: `Σ ⌈M'(input)/hdfs_block⌉` (Figure 5 `nmap`).
     pub n_map: usize,
+    /// Number of reduce tasks, bounded by distinct output groups.
     pub n_red: usize,
     /// job + task latency, normalised by effective parallelism
     pub latency: f64,
     /// export of in-memory inputs to HDFS
     pub export: f64,
+    /// HDFS read of map inputs (dcache inputs excluded).
     pub hdfs_read: f64,
+    /// Distributed-cache read of broadcast inputs, per task.
     pub dcache_read: f64,
+    /// Map-phase compute (FLOPs / clock / effective map parallelism).
     pub map_exec: f64,
+    /// Shuffle: map write + transfer + reduce merge (3 passes, §3.4).
     pub shuffle: f64,
+    /// Reduce-phase compute (aggregations, cpmm partial products).
     pub red_exec: f64,
+    /// HDFS write of job outputs (× replication factor).
     pub hdfs_write: f64,
 }
 
 impl MrJobCost {
+    /// Total job seconds: the sum of every component above.
     pub fn total(&self) -> f64 {
         self.latency
             + self.export

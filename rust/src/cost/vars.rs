@@ -25,8 +25,11 @@ pub enum DataState {
 /// Underlying data entry (shared between aliases).
 #[derive(Clone, Debug)]
 pub struct DataInfo {
+    /// Size metadata (dims, blocking, nnz) of the tracked matrix.
     pub mc: MatrixCharacteristics,
+    /// Serialized format on HDFS (drives read/write bandwidth choice).
     pub format: Format,
+    /// Current physical residence (HDFS vs buffer pool).
     pub state: DataState,
 }
 
@@ -62,10 +65,12 @@ impl VarTracker {
         self.names.remove(name);
     }
 
+    /// Look up the shared data entry of a variable.
     pub fn get(&self, name: &str) -> Option<&DataInfo> {
         self.names.get(name).map(|&id| &self.data[id])
     }
 
+    /// Mutable lookup of the shared data entry of a variable.
     pub fn get_mut(&mut self, name: &str) -> Option<&mut DataInfo> {
         let id = *self.names.get(name)?;
         Some(&mut self.data[id])

@@ -9,7 +9,7 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::matrix::{io, DenseMatrix};
 

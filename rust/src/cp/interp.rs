@@ -6,7 +6,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 
 use super::bufferpool::BufferPool;
 use super::{MatrixObject, SymbolTable, Value};
@@ -471,7 +471,6 @@ impl<'a> Executor<'a> {
                 return Ok(());
             }
             CpOp::Print => unreachable!("handled above"),
-            CpOp::Binary(_) | CpOp::Unary(_) => unreachable!(),
         };
         self.symbols.bind_matrix(&out_name, Arc::new(result), blocksize, &mut self.pool)?;
         Ok(())

@@ -8,7 +8,7 @@ pub mod interp;
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 
 use crate::ir::Lit;
 use crate::matrix::{io, DenseMatrix, Format, MatrixCharacteristics};

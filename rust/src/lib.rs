@@ -27,12 +27,14 @@
 //!    substitute for the paper's Hadoop testbed).
 //! 7. [`runtime`] — the PJRT bridge that loads AOT-compiled XLA artifacts
 //!    (JAX/Pallas, built once by `make artifacts`) for the compute hot path.
-//! 8. [`opt`] — cost-model consumers: resource optimization and plan
-//!    comparison.
+//! 8. [`opt`] — cost-model consumers: resource optimization, plan
+//!    comparison, and the batched parallel scenario-sweep engine
+//!    ([`opt::sweep`]) that costs ClusterConfig × data-size grids into
+//!    ranked comparison tables.
 //!
 //! The high-level entry points live in [`api`]: compile a DML script into a
 //! runtime plan, cost it against a cluster configuration, explain it at any
-//! compilation level, or execute it.
+//! compilation level, execute it, or [`api::sweep`] a whole scenario grid.
 
 pub mod api;
 pub mod conf;
@@ -48,5 +50,5 @@ pub mod rtprog;
 pub mod runtime;
 pub mod util;
 
-pub use api::{compile, CompileOptions, CompiledProgram, Scenario};
+pub use api::{compile, sweep, CompileOptions, CompiledProgram, Scenario};
 pub use conf::{ClusterConfig, CostConstants, SystemConfig};

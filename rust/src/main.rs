@@ -6,6 +6,7 @@
 //! repro scenarios                                       Table 1 + §2 plans
 //! repro run <script.dml> [-a N=value ...]               execute a script
 //! repro resource-opt --scenario xs                      budget sweep
+//! repro sweep [--heaps 512,...] [--serial]              parallel grid sweep
 //! ```
 
 use std::collections::HashMap;
@@ -15,6 +16,7 @@ use systemds::conf::{ClusterConfig, CostConstants, MB};
 use systemds::cost;
 use systemds::cp::interp::Executor;
 use systemds::opt::resource;
+use systemds::opt::sweep::{self, heap_clock_clusters, DataScenario, SweepSpec};
 use systemds::runtime::KernelRegistry;
 
 fn main() {
@@ -25,15 +27,18 @@ fn main() {
         Some("scenarios") => cmd_scenarios(),
         Some("run") => cmd_run(&args[1..]),
         Some("resource-opt") => cmd_resource_opt(&args[1..]),
+        Some("sweep") => cmd_sweep(&args[1..]),
         _ => {
             eprintln!(
-                "usage: repro <explain|cost|scenarios|run|resource-opt> [options]\n\
+                "usage: repro <explain|cost|scenarios|run|resource-opt|sweep> [options]\n\
                  \n\
                  explain --scenario <xs|xl1..xl4> [--level hops|runtime]\n\
                  cost    --scenario <xs|xl1..xl4>\n\
                  scenarios\n\
                  run <script.dml> [-a N=value ...] [--threads T] [--heap-mb H]\n\
-                 resource-opt --scenario <name> [--heaps 256,512,...]"
+                 resource-opt --scenario <name> [--heaps 256,512,...]\n\
+                 sweep [--scenarios xs,xl1,...] [--heaps 512,1024,...]\n\
+                 \x20     [--threads T] [--serial]"
             );
             2
         }
@@ -205,4 +210,58 @@ fn cmd_resource_opt(args: &[String]) -> i32 {
         choice.best.cost_secs
     );
     0
+}
+
+/// Parallel scenario-sweep: cost a ClusterConfig × data-size grid for the
+/// LinReg DS script and print the ranked plan-comparison table.
+fn cmd_sweep(args: &[String]) -> i32 {
+    let mut spec = SweepSpec::linreg_default();
+    if let Some(names) = flag(args, "--scenarios") {
+        let mut scenarios = Vec::new();
+        for name in names.split(',').filter(|s| !s.is_empty()) {
+            let Some(s) = scenario_by_name(name) else {
+                eprintln!("unknown scenario '{name}' (expected xs, xl1..xl4)");
+                return 2;
+            };
+            scenarios.push(DataScenario::from(&s));
+        }
+        spec.scenarios = scenarios;
+    }
+    if let Some(heaps) = flag(args, "--heaps") {
+        let mut heaps_mb = Vec::new();
+        for part in heaps.split(',') {
+            match part.trim().parse::<f64>() {
+                Ok(h) if h > 0.0 => heaps_mb.push(h),
+                _ => {
+                    eprintln!(
+                        "--heaps: invalid entry '{part}' (expected a positive MB list, e.g. 512,1024,2048)"
+                    );
+                    return 2;
+                }
+            }
+        }
+        spec.clusters = heap_clock_clusters(&heaps_mb);
+    }
+    if let Some(t) = flag(args, "--threads") {
+        match t.parse::<usize>() {
+            Ok(n) => spec.threads = n,
+            Err(_) => {
+                eprintln!("--threads: invalid value '{t}' (expected a non-negative integer)");
+                return 2;
+            }
+        }
+    }
+    let serial = args.iter().any(|a| a == "--serial");
+    let result = if serial { sweep::sweep_serial(&spec) } else { sweep::sweep(&spec) };
+    match result {
+        Ok(report) => {
+            print!("{}", report.table());
+            eprintln!("{}", report.summary());
+            0
+        }
+        Err(e) => {
+            eprintln!("sweep failed: {e}");
+            1
+        }
+    }
 }

@@ -18,7 +18,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 
 use crate::cp::interp::{agg_exec, bin_fn, un_fn, AggResult, Executor};
 use crate::matrix::{ops, DenseMatrix};

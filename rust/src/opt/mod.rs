@@ -9,6 +9,11 @@
 //! * [`compare::compare_plans`] — cost a program under alternative
 //!   physical-operator hints (cpmm vs mapmm vs rmm, rewrite on/off), the
 //!   global-plan-comparison use case and the basis of the ablation benches.
+//! * [`sweep::sweep`] — the batched, parallel scenario-sweep costing
+//!   engine: a ClusterConfig × data-size grid compiled once per distinct
+//!   plan shape and costed concurrently into a ranked comparison table
+//!   (the paper's Table-1 workflow, automated).
 
 pub mod compare;
 pub mod resource;
+pub mod sweep;

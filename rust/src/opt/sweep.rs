@@ -1,0 +1,548 @@
+//! Batched, parallel **scenario-sweep costing engine** — the paper's
+//! Table-1 workflow, automated and scaled.
+//!
+//! The cost model's whole point (§1) is ranking *alternative* runtime
+//! plans across scenarios, which only pays off when many plan/config
+//! combinations can be costed cheaply. [`sweep`] takes a DML script plus
+//! a grid of [`NamedCluster`] × [`DataScenario`] cells and:
+//!
+//! 1. computes a **plan signature** per cell — the exact subset of
+//!    inputs that can influence the *shape* of the generated runtime
+//!    plan (data dimensions, block size, memory budgets, partition
+//!    size, reducer/replication settings, operator hints). Cluster
+//!    knobs that only affect *cost*, never plan shape (clock rate,
+//!    map/reduce slots, HDFS block size, node counts), are excluded;
+//! 2. compiles **once per distinct signature** (memoized), fanning the
+//!    distinct compiles out over a scoped thread pool
+//!    ([`crate::util::par`], the hermetic rayon stand-in);
+//! 3. costs **every** cell concurrently against its own full cluster
+//!    configuration (so two clusters sharing a plan still get distinct
+//!    cost estimates);
+//! 4. returns a [`SweepReport`] with a deterministic cheapest-first
+//!    ranking and a ready-to-print comparison table.
+//!
+//! Entry points: [`sweep`] (parallel + memoized), [`sweep_serial`]
+//! (reference implementation: one `compile` + `cost` per cell, no
+//! memoization — the baseline the `sweep` bench compares against), and
+//! the `repro sweep` CLI subcommand / [`crate::api::sweep`] wrapper.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::api::{compile_with_meta, ClusterConfigOpt, CompileOptions, CompiledProgram, Scenario, LINREG_DS};
+use crate::conf::{ClusterConfig, CostConstants, SystemConfig, MB};
+use crate::cost;
+use crate::ir::build::StaticMeta;
+use crate::lop::SelectionHints;
+use crate::matrix::{Format, MatrixCharacteristics};
+use crate::util::fmt::{fmt_dim, fmt_secs};
+use crate::util::par;
+
+/// A cluster configuration with a display name, one axis of the grid.
+#[derive(Clone, Debug)]
+pub struct NamedCluster {
+    /// Label used in the ranked table (e.g. `paper-2048MB`).
+    pub name: String,
+    /// Full cluster characteristics passed to compilation and costing.
+    pub cc: ClusterConfig,
+}
+
+impl NamedCluster {
+    /// Name a cluster configuration.
+    pub fn new(name: impl Into<String>, cc: ClusterConfig) -> Self {
+        NamedCluster { name: name.into(), cc }
+    }
+}
+
+/// A data-size scenario, the other axis of the grid: static metadata for
+/// every persistent input the script `read()`s.
+#[derive(Clone, Debug)]
+pub struct DataScenario {
+    /// Label used in the ranked table (e.g. `XL1`).
+    pub name: String,
+    /// `(read path, rows, cols)` per persistent input, dense binary-block.
+    pub inputs: Vec<(String, i64, i64)>,
+}
+
+impl DataScenario {
+    /// Scenario over explicit `(path, rows, cols)` inputs.
+    pub fn new(name: impl Into<String>, inputs: Vec<(String, i64, i64)>) -> Self {
+        DataScenario { name: name.into(), inputs }
+    }
+
+    /// LinReg-shaped scenario: `data/X` is `rows x cols`, `data/y` is
+    /// `rows x 1` (the paper's Table-1 convention).
+    pub fn linreg(name: impl Into<String>, rows: i64, cols: i64) -> Self {
+        DataScenario {
+            name: name.into(),
+            inputs: vec![
+                ("data/X".to_string(), rows, cols),
+                ("data/y".to_string(), rows, 1),
+            ],
+        }
+    }
+
+    /// Total input cells across all inputs (proxy for problem size).
+    pub fn total_cells(&self) -> f64 {
+        self.inputs.iter().map(|&(_, r, c)| r as f64 * c as f64).sum()
+    }
+
+    /// Static metadata for compilation at the given block size.
+    pub fn meta(&self, blocksize: i64) -> StaticMeta {
+        let mut m = StaticMeta::default();
+        for (path, r, c) in &self.inputs {
+            m = m.with(path, MatrixCharacteristics::dense(*r, *c, blocksize), Format::BinaryBlock);
+        }
+        m
+    }
+}
+
+impl From<&Scenario> for DataScenario {
+    fn from(s: &Scenario) -> Self {
+        DataScenario::linreg(s.name, s.x_rows, s.x_cols)
+    }
+}
+
+/// Build the standard heap × clock cluster grid: for every heap size,
+/// a `paper-<N>MB` variant of the paper cluster with all three heaps set
+/// to `N` MB, plus a `fast-<N>MB` sibling with double the clock rate.
+/// The fast sibling differs only in a cost-side knob, so it shares plan
+/// signatures with its paper twin (exercising compile memoization).
+/// Used by [`SweepSpec::linreg_default`], the `repro sweep` CLI, the
+/// sweep tests and the sweep bench.
+pub fn heap_clock_clusters(heaps_mb: &[f64]) -> Vec<NamedCluster> {
+    let mut clusters = Vec::with_capacity(heaps_mb.len() * 2);
+    for &heap_mb in heaps_mb {
+        let mut cc = ClusterConfig::paper_cluster();
+        cc.cp_heap_bytes = heap_mb * MB;
+        cc.map_heap_bytes = heap_mb * MB;
+        cc.reduce_heap_bytes = heap_mb * MB;
+        clusters.push(NamedCluster::new(format!("paper-{}MB", heap_mb as i64), cc.clone()));
+        cc.clock_hz *= 2.0;
+        clusters.push(NamedCluster::new(format!("fast-{}MB", heap_mb as i64), cc));
+    }
+    clusters
+}
+
+/// Full sweep specification: script + argument bindings + the grid.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// DML source to compile per cell.
+    pub script: String,
+    /// `$N` command-line bindings for the script.
+    pub args: HashMap<usize, String>,
+    /// Cluster axis of the grid.
+    pub clusters: Vec<NamedCluster>,
+    /// Data-size axis of the grid.
+    pub scenarios: Vec<DataScenario>,
+    /// Compiler/system configuration shared by all cells.
+    pub cfg: SystemConfig,
+    /// Physical-operator selection hints shared by all cells.
+    pub hints: SelectionHints,
+    /// Cost-model constants shared by all cells.
+    pub constants: CostConstants,
+    /// Worker threads; `0` = available parallelism.
+    pub threads: usize,
+}
+
+impl SweepSpec {
+    /// The default grid for the LinReg DS running example: the paper's
+    /// five Table-1 data scenarios × eight cluster configurations (four
+    /// heap sizes, each in a normal and a double-clock variant — the
+    /// clock variant shares plan shapes with its sibling, exercising the
+    /// compile memoization). 40 cells, 20 distinct plan shapes.
+    pub fn linreg_default() -> Self {
+        SweepSpec {
+            script: LINREG_DS.to_string(),
+            args: Scenario::xs().args(),
+            clusters: heap_clock_clusters(&[512.0, 1024.0, 2048.0, 4096.0]),
+            scenarios: Scenario::all().iter().map(DataScenario::from).collect(),
+            cfg: SystemConfig::default(),
+            hints: SelectionHints::default(),
+            constants: CostConstants::default(),
+            threads: 0,
+        }
+    }
+
+    /// Number of grid cells.
+    pub fn cell_count(&self) -> usize {
+        self.clusters.len() * self.scenarios.len()
+    }
+}
+
+/// One costed grid cell.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    /// Cluster label.
+    pub cluster: String,
+    /// Scenario label.
+    pub scenario: String,
+    /// Rows of the scenario's first input (display).
+    pub x_rows: i64,
+    /// Cols of the scenario's first input (display).
+    pub x_cols: i64,
+    /// Total input cells of the scenario.
+    pub input_cells: f64,
+    /// CP instruction count of the generated plan.
+    pub cp_insts: usize,
+    /// MR-job count of the generated plan.
+    pub mr_jobs: usize,
+    /// Estimated execution time `C(P, cc)` in seconds.
+    pub cost_secs: f64,
+    /// Plan-shape signature this cell compiled (or reused) under.
+    pub plan_sig: String,
+    /// Whether this cell reused a plan compiled for an earlier cell.
+    pub plan_reused: bool,
+}
+
+/// Result of a sweep: costed cells plus a deterministic ranking.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    /// All cells in grid (cluster-major) order.
+    pub cells: Vec<SweepCell>,
+    /// Indices into `cells`, cheapest first; ties broken by scenario
+    /// then cluster name so the ranking is fully deterministic.
+    pub ranking: Vec<usize>,
+    /// Number of distinct plan shapes compiled.
+    pub distinct_plans: usize,
+    /// Cells that reused a memoized plan (`cells.len() - distinct_plans`).
+    pub memo_hits: usize,
+    /// Wall-clock seconds spent in the sweep.
+    pub wall_secs: f64,
+    /// Worker threads used.
+    pub threads: usize,
+}
+
+impl SweepReport {
+    /// Cells in ranked (cheapest-first) order.
+    pub fn ranked(&self) -> impl Iterator<Item = &SweepCell> {
+        self.ranking.iter().map(move |&i| &self.cells[i])
+    }
+
+    /// Ranked plan-comparison table (deterministic — no timings).
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<5} {:<10} {:<14} {:>15} {:>8} {:>5} {:>12} {:>6}\n",
+            "rank", "scenario", "cluster", "X dims", "MR jobs", "CP", "est. cost", "plan"
+        ));
+        out.push_str(&"-".repeat(84));
+        out.push('\n');
+        for (rank, c) in self.ranked().enumerate() {
+            out.push_str(&format!(
+                "{:<5} {:<10} {:<14} {:>7}x{:<7} {:>8} {:>5} {:>12} {:>6}\n",
+                rank + 1,
+                c.scenario,
+                c.cluster,
+                fmt_dim(c.x_rows),
+                fmt_dim(c.x_cols),
+                c.mr_jobs,
+                c.cp_insts,
+                fmt_secs(c.cost_secs),
+                if c.plan_reused { "memo" } else { "fresh" }
+            ));
+        }
+        out
+    }
+
+    /// One-line execution summary (includes wall time — not part of the
+    /// deterministic table).
+    pub fn summary(&self) -> String {
+        format!(
+            "costed {} cells in {:.3}s on {} threads; {} distinct plan shapes compiled, {} memoized",
+            self.cells.len(),
+            self.wall_secs,
+            self.threads,
+            self.distinct_plans,
+            self.memo_hits
+        )
+    }
+}
+
+/// Signature of everything that can influence the *shape* of the
+/// generated plan for one cell. Two cells with equal signatures compile
+/// to identical runtime plans, so the compile is shared between them.
+///
+/// Includes: input dims, block size, sparse threshold, memory-budget
+/// ratio, the three heap sizes (budgets drive CP-vs-MR selection and
+/// mapmm feasibility), partition size, reducer count, replication,
+/// unknown-iteration constant, and the selection hints. Excludes the
+/// cost-only knobs: clock rate, slot counts, node/vcore/YARN geometry,
+/// and HDFS block size.
+fn plan_signature(
+    cfg: &SystemConfig,
+    hints: &SelectionHints,
+    cc: &ClusterConfig,
+    scenario: &DataScenario,
+) -> String {
+    let mut sig = String::new();
+    for (path, r, c) in &scenario.inputs {
+        sig.push_str(&format!("{path}={r}x{c};"));
+    }
+    sig.push_str(&format!(
+        "bs{};st{};ratio{};cp{};map{};red{};part{};nr{};rep{};ui{};h{}{}{}",
+        cfg.blocksize,
+        cfg.sparse_threshold,
+        cfg.mem_budget_ratio,
+        cc.cp_heap_bytes,
+        cc.map_heap_bytes,
+        cc.reduce_heap_bytes,
+        cfg.partition_bytes,
+        cfg.num_reducers,
+        cfg.replication,
+        cfg.unknown_iterations,
+        hints.force_cpmm as u8,
+        hints.force_rmm as u8,
+        hints.no_transpose_rewrite as u8
+    ));
+    sig
+}
+
+fn compile_cell(spec: &SweepSpec, ci: usize, si: usize) -> Result<CompiledProgram, String> {
+    let opts = CompileOptions {
+        cfg: spec.cfg.clone(),
+        cc: ClusterConfigOpt(spec.clusters[ci].cc.clone()),
+        hints: spec.hints.clone(),
+    };
+    compile_with_meta(
+        &spec.script,
+        &spec.args,
+        &spec.scenarios[si].meta(spec.cfg.blocksize),
+        &opts,
+    )
+    .map_err(|e| {
+        format!(
+            "compile failed for cluster '{}' scenario '{}': {e}",
+            spec.clusters[ci].name, spec.scenarios[si].name
+        )
+    })
+}
+
+fn grid_of(spec: &SweepSpec) -> Vec<(usize, usize)> {
+    let mut grid = Vec::with_capacity(spec.cell_count());
+    for ci in 0..spec.clusters.len() {
+        for si in 0..spec.scenarios.len() {
+            grid.push((ci, si));
+        }
+    }
+    grid
+}
+
+fn cost_cell(
+    spec: &SweepSpec,
+    ci: usize,
+    si: usize,
+    prog: &CompiledProgram,
+    sig: &str,
+    reused: bool,
+) -> SweepCell {
+    let report =
+        cost::cost_program(&prog.runtime, &spec.cfg, &spec.clusters[ci].cc, &spec.constants);
+    let (cp, mr) = prog.runtime.size();
+    let sc = &spec.scenarios[si];
+    SweepCell {
+        cluster: spec.clusters[ci].name.clone(),
+        scenario: sc.name.clone(),
+        x_rows: sc.inputs.first().map(|&(_, r, _)| r).unwrap_or(0),
+        x_cols: sc.inputs.first().map(|&(_, _, c)| c).unwrap_or(0),
+        input_cells: sc.total_cells(),
+        cp_insts: cp,
+        mr_jobs: mr,
+        cost_secs: report.total,
+        plan_sig: sig.to_string(),
+        plan_reused: reused,
+    }
+}
+
+fn rank(cells: &[SweepCell]) -> Vec<usize> {
+    let mut ranking: Vec<usize> = (0..cells.len()).collect();
+    ranking.sort_by(|&a, &b| {
+        cells[a]
+            .cost_secs
+            .total_cmp(&cells[b].cost_secs)
+            .then_with(|| cells[a].scenario.cmp(&cells[b].scenario))
+            .then_with(|| cells[a].cluster.cmp(&cells[b].cluster))
+    });
+    ranking
+}
+
+/// Run the sweep: compile once per distinct plan shape (parallel), cost
+/// every cell concurrently, and rank. See the module docs for the
+/// pipeline; [`sweep_serial`] is the unmemoized serial reference.
+pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
+    let t0 = Instant::now();
+    if spec.clusters.is_empty() || spec.scenarios.is_empty() {
+        return Err("empty sweep grid (no clusters or no scenarios)".to_string());
+    }
+    let threads = if spec.threads == 0 { par::default_threads() } else { spec.threads };
+    let grid = grid_of(spec);
+    let sigs: Vec<String> = grid
+        .iter()
+        .map(|&(ci, si)| plan_signature(&spec.cfg, &spec.hints, &spec.clusters[ci].cc, &spec.scenarios[si]))
+        .collect();
+
+    // Distinct plan shapes in first-occurrence order.
+    let mut sig_uniq: HashMap<&str, usize> = HashMap::new();
+    let mut uniq_cells: Vec<usize> = Vec::new();
+    for (i, sig) in sigs.iter().enumerate() {
+        if !sig_uniq.contains_key(sig.as_str()) {
+            sig_uniq.insert(sig.as_str(), uniq_cells.len());
+            uniq_cells.push(i);
+        }
+    }
+
+    // Phase 1: compile each distinct plan shape once, in parallel.
+    let compiled: Vec<Result<CompiledProgram, String>> =
+        par::par_map(&uniq_cells, threads, |_, &cell| {
+            let (ci, si) = grid[cell];
+            compile_cell(spec, ci, si)
+        });
+    let mut progs: Vec<CompiledProgram> = Vec::with_capacity(compiled.len());
+    for r in compiled {
+        progs.push(r?);
+    }
+
+    // Phase 2: cost all cells concurrently against their full cluster
+    // config (clock/slots matter here even when the plan is shared).
+    let cells: Vec<SweepCell> = par::par_map(&grid, threads, |i, &(ci, si)| {
+        let u = sig_uniq[sigs[i].as_str()];
+        cost_cell(spec, ci, si, &progs[u], &sigs[i], uniq_cells[u] != i)
+    });
+
+    let ranking = rank(&cells);
+    let distinct_plans = uniq_cells.len();
+    Ok(SweepReport {
+        memo_hits: cells.len() - distinct_plans,
+        distinct_plans,
+        cells,
+        ranking,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        threads,
+    })
+}
+
+/// Serial reference: one full `compile` + `cost` per cell, no plan
+/// memoization and no worker threads. Produces bit-identical cells and
+/// ranking to [`sweep`] (compilation is deterministic); exists as the
+/// baseline for the `sweep` bench and as a cross-check in tests.
+pub fn sweep_serial(spec: &SweepSpec) -> Result<SweepReport, String> {
+    let t0 = Instant::now();
+    if spec.clusters.is_empty() || spec.scenarios.is_empty() {
+        return Err("empty sweep grid (no clusters or no scenarios)".to_string());
+    }
+    let grid = grid_of(spec);
+    let sigs: Vec<String> = grid
+        .iter()
+        .map(|&(ci, si)| plan_signature(&spec.cfg, &spec.hints, &spec.clusters[ci].cc, &spec.scenarios[si]))
+        .collect();
+    let mut seen: HashMap<&str, usize> = HashMap::new();
+    let mut distinct_plans = 0usize;
+    let mut cells = Vec::with_capacity(grid.len());
+    for (i, &(ci, si)) in grid.iter().enumerate() {
+        let prog = compile_cell(spec, ci, si)?;
+        let reused = match seen.get(sigs[i].as_str()) {
+            Some(_) => true,
+            None => {
+                seen.insert(sigs[i].as_str(), i);
+                distinct_plans += 1;
+                false
+            }
+        };
+        cells.push(cost_cell(spec, ci, si, &prog, &sigs[i], reused));
+    }
+    let ranking = rank(&cells);
+    Ok(SweepReport {
+        memo_hits: cells.len() - distinct_plans,
+        distinct_plans,
+        cells,
+        ranking,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        threads: 1,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> SweepSpec {
+        let mut spec = SweepSpec::linreg_default();
+        spec.scenarios = vec![
+            DataScenario::linreg("XS", 10_000, 1_000),
+            DataScenario::linreg("XL1", 100_000_000, 1_000),
+        ];
+        spec.clusters.truncate(4); // paper-512MB, fast-512MB, paper-1024MB, fast-1024MB
+        spec
+    }
+
+    #[test]
+    fn default_grid_is_large_enough() {
+        let spec = SweepSpec::linreg_default();
+        assert!(spec.cell_count() >= 12, "acceptance floor: {}", spec.cell_count());
+        assert_eq!(spec.cell_count(), 40);
+    }
+
+    #[test]
+    fn clock_only_variants_share_plan_signatures() {
+        let spec = tiny_spec();
+        let r = sweep(&spec).unwrap();
+        assert_eq!(r.cells.len(), 8);
+        // fast-* differs from paper-* only in clock -> plans shared
+        assert_eq!(r.distinct_plans, 4, "{:#?}", r.cells);
+        assert_eq!(r.memo_hits, 4);
+        // but cost estimates still differ where compute matters (XS is
+        // compute-dominated by tsmm)
+        let cost_of = |cl: &str, sc: &str| {
+            r.cells
+                .iter()
+                .find(|c| c.cluster == cl && c.scenario == sc)
+                .unwrap()
+                .cost_secs
+        };
+        assert!(cost_of("fast-1024MB", "XS") < cost_of("paper-1024MB", "XS"));
+    }
+
+    #[test]
+    fn first_occurrence_is_fresh_later_reuses() {
+        let r = sweep(&tiny_spec()).unwrap();
+        // cluster-major order: paper-512MB cells come first and compile
+        // fresh; the fast-512MB cells reuse them
+        for c in &r.cells {
+            if c.cluster.starts_with("paper-512") {
+                assert!(!c.plan_reused, "{c:?}");
+            }
+            if c.cluster.starts_with("fast-512") {
+                assert!(c.plan_reused, "{c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn ranking_is_cheapest_first() {
+        let r = sweep(&tiny_spec()).unwrap();
+        let costs: Vec<f64> = r.ranked().map(|c| c.cost_secs).collect();
+        assert!(costs.windows(2).all(|w| w[0] <= w[1]), "{costs:?}");
+        // XS on the fastest cluster must beat every XL1 cell
+        let first = r.ranked().next().unwrap();
+        assert_eq!(first.scenario, "XS");
+    }
+
+    #[test]
+    fn table_lists_every_cell_once() {
+        let r = sweep(&tiny_spec()).unwrap();
+        let table = r.table();
+        // header + separator + one row per cell
+        assert_eq!(table.lines().count(), 2 + r.cells.len(), "{table}");
+        assert!(table.contains("est. cost"));
+        assert!(table.contains("memo"));
+        assert!(table.contains("fresh"));
+    }
+
+    #[test]
+    fn empty_grid_is_an_error() {
+        let mut spec = tiny_spec();
+        spec.scenarios.clear();
+        assert!(sweep(&spec).is_err());
+        assert!(sweep_serial(&spec).is_err());
+    }
+}

@@ -3,19 +3,28 @@
 //! compute hot path. Python never runs at execution time — `make artifacts`
 //! is a build-time step.
 //!
+//! The real bridge (in [`pjrt`], gated behind the off-by-default `pjrt`
+//! cargo feature) needs the non-crates.io `xla` bindings; the default
+//! build is hermetic and compiles the no-op [`stub`] instead, whose
+//! [`KernelRegistry`] never matches a kernel so the CP runtime always
+//! falls back to the native Rust kernels in [`crate::matrix::ops`].
+//! Both expose the same API, so no caller is feature-aware.
+//!
 //! Artifacts live in `artifacts/<key>.hlo.txt` where `<key>` encodes the
 //! operation and the (static) input shapes, e.g. `tsmm_4096x256`,
 //! `matmult_1x4096_4096x256`, `linreg_4096x256`. The CP runtime consults
 //! [`KernelRegistry::execute`] first and falls back to the native Rust
-//! kernels in [`crate::matrix::ops`] for unmatched shapes.
+//! kernels for unmatched shapes.
 
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::KernelRegistry;
 
-use anyhow::{Context, Result};
-
-use crate::matrix::DenseMatrix;
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::KernelRegistry;
 
 /// Build the registry key for an op over the given input shapes.
 pub fn kernel_key(op: &str, shapes: &[(usize, usize)]) -> String {
@@ -24,139 +33,6 @@ pub fn kernel_key(op: &str, shapes: &[(usize, usize)]) -> String {
         k.push_str(&format!("_{m}x{n}"));
     }
     k
-}
-
-struct Kernel {
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// Registry of AOT-compiled kernels on a PJRT CPU client.
-pub struct KernelRegistry {
-    client: xla::PjRtClient,
-    kernels: Mutex<HashMap<String, Kernel>>,
-    /// Paths discovered but not yet compiled (lazy compilation).
-    pending: Mutex<HashMap<String, std::path::PathBuf>>,
-    /// Adaptive-dispatch outcomes: key -> prefer PJRT over native. Shared
-    /// process-wide so the first-call race is paid once per kernel.
-    preference: Mutex<HashMap<String, bool>>,
-}
-
-impl KernelRegistry {
-    /// Scan a directory for `*.hlo.txt` artifacts. Compilation is lazy:
-    /// each artifact is compiled on first use.
-    pub fn load(dir: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
-        let mut pending = HashMap::new();
-        if dir.is_dir() {
-            for entry in std::fs::read_dir(dir)? {
-                let path = entry?.path();
-                let name = path.file_name().unwrap_or_default().to_string_lossy().to_string();
-                if let Some(key) = name.strip_suffix(".hlo.txt") {
-                    pending.insert(key.to_string(), path);
-                }
-            }
-        }
-        Ok(KernelRegistry {
-            client,
-            kernels: Mutex::new(HashMap::new()),
-            pending: Mutex::new(pending),
-            preference: Mutex::new(HashMap::new()),
-        })
-    }
-
-    /// Number of discovered artifacts.
-    pub fn len(&self) -> usize {
-        self.kernels.lock().unwrap().len() + self.pending.lock().unwrap().len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-
-    /// Whether a kernel exists for this key.
-    pub fn has(&self, key: &str) -> bool {
-        self.kernels.lock().unwrap().contains_key(key)
-            || self.pending.lock().unwrap().contains_key(key)
-    }
-
-    fn ensure_compiled(&self, key: &str) -> Result<()> {
-        if self.kernels.lock().unwrap().contains_key(key) {
-            return Ok(());
-        }
-        let path = {
-            let pending = self.pending.lock().unwrap();
-            pending.get(key).cloned()
-        };
-        let Some(path) = path else {
-            anyhow::bail!("no artifact for kernel '{key}'");
-        };
-        // HLO *text* interchange: jax >= 0.5 emits protos with 64-bit ids
-        // that xla_extension 0.5.1 rejects; the text parser reassigns ids.
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path utf-8")?,
-        )
-        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {key}: {e:?}"))?;
-        self.pending.lock().unwrap().remove(key);
-        self.kernels.lock().unwrap().insert(key.to_string(), Kernel { exe });
-        Ok(())
-    }
-
-    /// Recorded dispatch preference for a key (None = not yet raced).
-    pub fn preference(&self, key: &str) -> Option<bool> {
-        self.preference.lock().unwrap().get(key).copied()
-    }
-
-    /// Record the PJRT-vs-native dispatch decision for a key.
-    pub fn set_preference(&self, key: &str, prefer_pjrt: bool) {
-        self.preference.lock().unwrap().insert(key.to_string(), prefer_pjrt);
-    }
-
-    /// Execute a kernel; returns `None` when no artifact matches the key
-    /// (caller falls back to native Rust kernels).
-    pub fn execute(&self, key: &str, inputs: &[&DenseMatrix]) -> Option<Result<DenseMatrix>> {
-        if !self.has(key) {
-            return None;
-        }
-        Some(self.execute_inner(key, inputs))
-    }
-
-    fn execute_inner(&self, key: &str, inputs: &[&DenseMatrix]) -> Result<DenseMatrix> {
-        self.ensure_compiled(key)?;
-        let kernels = self.kernels.lock().unwrap();
-        let kernel = kernels.get(key).expect("compiled above");
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|m| {
-                xla::Literal::vec1(&m.values)
-                    .reshape(&[m.rows as i64, m.cols as i64])
-                    .map_err(|e| anyhow::anyhow!("reshape input: {e:?}"))
-            })
-            .collect::<Result<_>>()?;
-        let result = kernel
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow::anyhow!("execute {key}: {e:?}"))?;
-        let literal = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = literal.to_tuple1().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
-        let shape = out.array_shape().map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
-        let dims = shape.dims();
-        let (rows, cols) = match dims.len() {
-            2 => (dims[0] as usize, dims[1] as usize),
-            1 => (dims[0] as usize, 1),
-            0 => (1, 1),
-            _ => anyhow::bail!("unexpected output rank {}", dims.len()),
-        };
-        let values = out.to_vec::<f64>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
-        Ok(DenseMatrix::from_vec(rows, cols, values))
-    }
 }
 
 #[cfg(test)]
@@ -170,31 +46,5 @@ mod tests {
             kernel_key("matmult", &[(1, 4096), (4096, 256)]),
             "matmult_1x4096_4096x256"
         );
-    }
-
-    #[test]
-    fn empty_dir_gives_empty_registry() {
-        let dir = std::env::temp_dir().join("sysds_empty_artifacts");
-        std::fs::create_dir_all(&dir).unwrap();
-        let reg = KernelRegistry::load(&dir).unwrap();
-        assert!(reg.is_empty());
-        assert!(reg.execute("tsmm_8x8", &[]).is_none());
-    }
-
-    /// Executes a real artifact when `make artifacts` has run.
-    #[test]
-    fn executes_artifact_if_present() {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        let reg = KernelRegistry::load(&dir).unwrap();
-        let key = "tsmm_256x64";
-        if !reg.has(key) {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        let x = DenseMatrix::rand(256, 64, -1.0, 1.0, 1.0, 42);
-        let got = reg.execute(key, &[&x]).unwrap().unwrap();
-        let expect = crate::matrix::ops::tsmm_left(&x, 2);
-        assert_eq!((got.rows, got.cols), (64, 64));
-        assert!(got.max_abs_diff(&expect) < 1e-9);
     }
 }

@@ -1,0 +1,79 @@
+//! Hermetic stand-in for the PJRT kernel registry (compiled when the
+//! `pjrt` feature is off, which is the default).
+//!
+//! The stub never discovers or matches a kernel: [`KernelRegistry::has`]
+//! is always `false` and [`KernelRegistry::execute`] always returns
+//! `None`, so the CP interpreter's adaptive dispatch
+//! ([`crate::cp::interp`]) takes the native-kernel path unconditionally.
+//! The API mirrors [`super::pjrt`] exactly so callers need no `cfg`.
+
+use std::path::Path;
+
+use crate::matrix::DenseMatrix;
+use crate::util::error::Result;
+
+/// No-op registry: pretends the artifact directory is empty.
+pub struct KernelRegistry {
+    _priv: (),
+}
+
+impl KernelRegistry {
+    /// Accepts any directory and reports no artifacts.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let _ = dir;
+        Ok(KernelRegistry { _priv: () })
+    }
+
+    /// Number of discovered artifacts (always 0).
+    pub fn len(&self) -> usize {
+        0
+    }
+
+    /// Always true for the stub.
+    pub fn is_empty(&self) -> bool {
+        true
+    }
+
+    /// Whether a kernel exists for this key (always false).
+    pub fn has(&self, key: &str) -> bool {
+        let _ = key;
+        false
+    }
+
+    /// Recorded dispatch preference for a key (always `None`).
+    pub fn preference(&self, key: &str) -> Option<bool> {
+        let _ = key;
+        None
+    }
+
+    /// Record a dispatch decision (ignored by the stub).
+    pub fn set_preference(&self, key: &str, prefer_pjrt: bool) {
+        let _ = (key, prefer_pjrt);
+    }
+
+    /// Execute a kernel; the stub never matches, so callers always fall
+    /// back to the native Rust kernels.
+    pub fn execute(&self, key: &str, inputs: &[&DenseMatrix]) -> Option<Result<DenseMatrix>> {
+        let _ = (key, inputs);
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_registry_is_always_empty() {
+        let dir = std::env::temp_dir().join("sysds_stub_artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        let reg = KernelRegistry::load(&dir).unwrap();
+        assert!(reg.is_empty());
+        assert_eq!(reg.len(), 0);
+        assert!(!reg.has("tsmm_8x8"));
+        assert!(reg.execute("tsmm_8x8", &[]).is_none());
+        assert!(reg.preference("tsmm_8x8").is_none());
+        reg.set_preference("tsmm_8x8", true);
+        assert!(reg.preference("tsmm_8x8").is_none(), "stub records nothing");
+    }
+}

@@ -1,0 +1,159 @@
+//! Minimal `anyhow`-compatible error handling (the real crate is
+//! unavailable in the hermetic offline build, like criterion/proptest —
+//! see [`crate::util`]).
+//!
+//! Provides the exact surface the runtime modules use: an opaque
+//! [`Error`] with a context chain, a [`Result`] alias defaulting the
+//! error type, the [`anyhow!`]/[`bail!`] macros, and a [`Context`]
+//! extension trait for `Result` and `Option`.
+//!
+//! Like `anyhow::Error`, [`Error`] deliberately does **not** implement
+//! `std::error::Error`, so conversions from concrete error types stay
+//! unambiguous.
+
+use std::fmt;
+
+/// Opaque error: a message plus outer-to-inner context chain.
+pub struct Error {
+    /// Rendered message; context wraps as `"context: inner"`.
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(self, c: impl fmt::Display) -> Self {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(e: String) -> Self {
+        Error { msg: e }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(e: &str) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (and to `None`), `anyhow::Context`-style.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable).
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`anyhow!`] error.
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::util::error::anyhow!($($t)*))
+    };
+}
+
+pub(crate) use anyhow;
+pub(crate) use bail;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))?;
+        Ok(())
+    }
+
+    #[test]
+    fn io_error_converts_and_takes_context() {
+        let e = fails_io().context("reading X").unwrap_err();
+        let s = format!("{e}");
+        assert!(s.contains("reading X"), "{s}");
+        assert!(s.contains("gone"), "{s}");
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative input {x}");
+            }
+            Err(anyhow!("x = {}, always fails", x))
+        }
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative input -1");
+        assert_eq!(format!("{}", f(2).unwrap_err()), "x = 2, always fails");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e:?}"), "missing value");
+    }
+
+    #[test]
+    fn with_context_chains() {
+        let e = fails_io().with_context(|| format!("step {}", 3)).unwrap_err();
+        assert!(format!("{e}").starts_with("step 3: "));
+    }
+}

@@ -1,9 +1,13 @@
 //! Small self-contained utilities: a deterministic PRNG, a micro-benchmark
 //! harness (stand-in for criterion, which is unavailable offline), a
-//! property-testing helper (stand-in for proptest), and formatting helpers.
+//! property-testing helper (stand-in for proptest), an `anyhow`-style
+//! error type (stand-in for anyhow), a data-parallel map (stand-in for
+//! rayon), and formatting helpers.
 
 pub mod bench;
+pub mod error;
 pub mod fmt;
+pub mod par;
 pub mod prop;
 pub mod rng;
 

@@ -1,0 +1,105 @@
+//! Minimal data-parallel map over a slice (stand-in for rayon, which is
+//! unavailable in the hermetic offline build).
+//!
+//! [`par_map`] runs a closure over every item of a slice on a scoped
+//! thread pool with an atomic work-stealing index, so unevenly-sized
+//! work items (e.g. XS vs XL4 compile+cost cells in the scenario sweep)
+//! balance across workers. Results are returned **in input order**, so
+//! callers are deterministic regardless of scheduling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default (available parallelism).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Apply `f` to every item of `items` using up to `threads` workers and
+/// return the results in input order. `f` receives `(index, &item)`.
+///
+/// With `threads <= 1` (or one item) this degrades to a plain serial
+/// map with no thread overhead. Panics in `f` propagate to the caller.
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let t = threads.max(1).min(items.len().max(1));
+    if t <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let f = &f;
+    let next = &next;
+    let buckets: Vec<Vec<(usize, R)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..t)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        out.push((i, f(i, &items[i])));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
+            .collect()
+    });
+    let mut results: Vec<Option<R>> = Vec::with_capacity(items.len());
+    results.resize_with(items.len(), || None);
+    for bucket in buckets {
+        for (i, r) in bucket {
+            results[i] = Some(r);
+        }
+    }
+    results.into_iter().map(|r| r.expect("par_map index filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = par_map(&items, 8, |i, &x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let items: Vec<u64> = (1..=50).collect();
+        let serial = par_map(&items, 1, |_, &x| x * x);
+        let parallel = par_map(&items, 6, |_, &x| x * x);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let none: Vec<i32> = vec![];
+        assert!(par_map(&none, 4, |_, &x| x).is_empty());
+        assert_eq!(par_map(&[7], 4, |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn uneven_work_items_all_complete() {
+        let items: Vec<u64> = (0..40).map(|i| (i % 7) * 100_000).collect();
+        let out = par_map(&items, 4, |_, &n| (0..n).fold(0u64, |a, b| a.wrapping_add(b)));
+        assert_eq!(out.len(), 40);
+        // spot-check against the closed form n*(n-1)/2
+        for (i, &n) in items.iter().enumerate() {
+            assert_eq!(out[i], n.wrapping_mul(n.wrapping_sub(1)) / 2);
+        }
+    }
+}

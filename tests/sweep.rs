@@ -1,0 +1,143 @@
+//! Integration tests for the parallel scenario-sweep costing engine
+//! (`opt::sweep` / `api::sweep`): determinism, plan-memoization hit
+//! counts, parallel-vs-serial agreement, and the size-monotonicity
+//! property (a strictly larger scenario never costs less while the plan
+//! shape is stable).
+
+use systemds::api::{self, DataScenario, NamedCluster, SweepSpec};
+use systemds::conf::{ClusterConfig, MB};
+use systemds::opt::sweep::{heap_clock_clusters, sweep, sweep_serial};
+use systemds::util::prop::forall;
+
+/// A compact grid with clock-only cluster variants (plan sharing) and
+/// heap variants (plan flips): 3 scenarios × 4 clusters = 12 cells.
+fn grid() -> SweepSpec {
+    let mut spec = SweepSpec::linreg_default();
+    spec.scenarios = vec![
+        DataScenario::linreg("XS", 10_000, 1_000),
+        DataScenario::linreg("M", 1_000_000, 500),
+        DataScenario::linreg("XL1", 100_000_000, 1_000),
+    ];
+    spec.clusters = heap_clock_clusters(&[512.0, 2048.0]);
+    spec.threads = 4;
+    spec
+}
+
+#[test]
+fn same_grid_gives_identical_ranked_output() {
+    let spec = grid();
+    let a = sweep(&spec).unwrap();
+    let b = sweep(&spec).unwrap();
+    assert_eq!(a.table(), b.table(), "ranked table must be deterministic");
+    assert_eq!(a.ranking, b.ranking);
+    for (ca, cb) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(ca.cost_secs.to_bits(), cb.cost_secs.to_bits(), "{} {}", ca.scenario, ca.cluster);
+        assert_eq!(ca.plan_reused, cb.plan_reused);
+    }
+}
+
+#[test]
+fn parallel_and_serial_sweeps_agree_exactly() {
+    let spec = grid();
+    let par = sweep(&spec).unwrap();
+    let ser = sweep_serial(&spec).unwrap();
+    assert_eq!(par.table(), ser.table());
+    assert_eq!(par.distinct_plans, ser.distinct_plans);
+    assert_eq!(par.memo_hits, ser.memo_hits);
+    for (cp, cs) in par.cells.iter().zip(&ser.cells) {
+        assert_eq!(cp.cost_secs.to_bits(), cs.cost_secs.to_bits());
+        assert_eq!(cp.mr_jobs, cs.mr_jobs);
+        assert_eq!(cp.cp_insts, cs.cp_insts);
+    }
+}
+
+#[test]
+fn memoization_hit_counts_match_clock_variants() {
+    let spec = grid();
+    let r = sweep(&spec).unwrap();
+    assert_eq!(r.cells.len(), 12);
+    // fast-* clusters differ from their paper-* siblings only in clock
+    // rate, which never changes plan shape: exactly half the grid reuses.
+    assert_eq!(r.distinct_plans, 6, "3 scenarios x 2 heap sizes");
+    assert_eq!(r.memo_hits, 6);
+    let reused = r.cells.iter().filter(|c| c.plan_reused).count();
+    assert_eq!(reused, r.memo_hits);
+    // reused cells must reference a signature some fresh cell compiled
+    for c in r.cells.iter().filter(|c| c.plan_reused) {
+        assert!(
+            r.cells.iter().any(|o| !o.plan_reused && o.plan_sig == c.plan_sig),
+            "dangling memo reference for {} / {}",
+            c.scenario,
+            c.cluster
+        );
+    }
+}
+
+#[test]
+fn api_sweep_wrapper_matches_engine() {
+    let spec = grid();
+    let via_api = api::sweep(&spec).unwrap();
+    let direct = sweep(&spec).unwrap();
+    assert_eq!(via_api.table(), direct.table());
+}
+
+/// Adding a strictly larger scenario never lowers its estimated cost.
+/// Constrained to the CP-stable regime (inputs comfortably inside the
+/// memory budget) where the plan shape cannot flip — around the CP/MR
+/// boundary greedy per-operator selection can legitimately produce a
+/// cheaper all-MR plan for bigger data (see `prop_cost_monotone_in_rows`
+/// in tests/properties.rs).
+#[test]
+fn prop_larger_scenario_never_costs_less() {
+    forall(
+        20,
+        0x5EEB,
+        |r| {
+            let cols = r.range_i64(1, 5) * 100; // 100..500
+            let max_rows = 10_000_000 / cols; // keep <= 1e7 cells small side
+            let rows = r.range_i64(1_000, max_rows.max(1_001));
+            (rows, cols)
+        },
+        |&(rows, cols)| {
+            let mut spec = SweepSpec::linreg_default();
+            let mut cc = ClusterConfig::paper_cluster();
+            cc.cp_heap_bytes = 2048.0 * MB;
+            cc.map_heap_bytes = 2048.0 * MB;
+            spec.clusters = vec![NamedCluster::new("paper-2048MB", cc)];
+            spec.scenarios = vec![
+                DataScenario::linreg("small", rows, cols),
+                DataScenario::linreg("large", rows * 2, cols),
+            ];
+            spec.threads = 2;
+            let r = sweep(&spec).map_err(|e| e.to_string())?;
+            let cost = |name: &str| {
+                r.cells.iter().find(|c| c.scenario == name).unwrap().cost_secs
+            };
+            let (small, large) = (cost("small"), cost("large"));
+            if large + 1e-12 >= small {
+                Ok(())
+            } else {
+                Err(format!(
+                    "{rows}x{cols}: doubling rows lowered cost {small} -> {large}"
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn ranked_order_puts_smaller_work_first_on_one_cluster() {
+    let mut spec = SweepSpec::linreg_default();
+    let mut cc = ClusterConfig::paper_cluster();
+    cc.cp_heap_bytes = 2048.0 * MB;
+    cc.map_heap_bytes = 2048.0 * MB;
+    spec.clusters = vec![NamedCluster::new("paper", cc)];
+    spec.scenarios = vec![
+        DataScenario::linreg("s1", 10_000, 200),
+        DataScenario::linreg("s2", 40_000, 200),
+        DataScenario::linreg("s3", 160_000, 200),
+    ];
+    let r = sweep(&spec).unwrap();
+    let order: Vec<&str> = r.ranked().map(|c| c.scenario.as_str()).collect();
+    assert_eq!(order, vec!["s1", "s2", "s3"]);
+}
