@@ -19,6 +19,7 @@ use crate::matrix::{Format, MatrixCharacteristics};
 use crate::rtprog::{self, RtProgram};
 
 pub use crate::opt::sweep::{DataScenario, NamedCluster, SweepCell, SweepReport, SweepSpec};
+pub use crate::rtprog::ExecBackend;
 
 /// Run a parallel scenario sweep: compile the spec's script once per
 /// distinct plan shape across the ClusterConfig × data-size grid, cost
@@ -29,12 +30,15 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
     crate::opt::sweep::sweep(spec)
 }
 
-/// Compilation options: system config + cluster characteristics + hints.
+/// Compilation options: system config + cluster characteristics + hints +
+/// execution backend (CP-only, hybrid CP/MR — the default — or hybrid
+/// CP/Spark; see [`ExecBackend`]).
 #[derive(Clone, Debug, Default)]
 pub struct CompileOptions {
     pub cfg: SystemConfig,
     pub cc: ClusterConfigOpt,
     pub hints: SelectionHints,
+    pub backend: ExecBackend,
 }
 
 /// Wrapper defaulting to the paper's cluster.
@@ -89,8 +93,14 @@ pub fn compile_with_meta(
     ir::rewrites::rewrite_program(&mut prog);
     ir::size_prop::propagate(&mut prog, opts.cfg.blocksize);
     ir::memory::annotate(&mut prog, &opts.cfg);
-    ir::exec_type::select(&mut prog, &opts.cfg, &opts.cc.0);
-    let runtime = rtprog::gen::generate(&prog, &opts.cfg, &opts.cc.0, &opts.hints);
+    ir::exec_type::select_with(
+        &mut prog,
+        &opts.cfg,
+        &opts.cc.0,
+        opts.backend == ExecBackend::Cp,
+    );
+    let runtime =
+        rtprog::gen::generate_backend(&prog, &opts.cfg, &opts.cc.0, &opts.hints, opts.backend);
     Ok(CompiledProgram { hops: prog, runtime })
 }
 
@@ -111,6 +121,41 @@ A = t(X) %*% X + diag(I)*lambda;
 b = t(X) %*% y;
 beta = solve(A, b);
 write(beta, $4);"#;
+
+/// Iterative linear regression via conjugate gradient (LinReg CG): the
+/// loop-heavy sibling of [`LINREG_DS`]. Each of the `$3` iterations runs
+/// two large matrix-vector products (`X %*% p` and `t(X) %*% v`), so on
+/// distributed backends every iteration submits jobs — the workload where
+/// per-job latency dominates and backend choice flips with the iteration
+/// count (Kaoudi et al. 2017).
+pub const LINREG_CG: &str = r#"X = read($1);
+y = read($2);
+maxiter = $3; lambda = 0.001;
+r = -(t(X) %*% y);
+norm_r2 = sum(r * r);
+p = -r;
+w = matrix(0, ncol(X), 1);
+for (i in 1:maxiter) {
+  q = t(X) %*% (X %*% p) + lambda * p;
+  alpha = norm_r2 / sum(p * q);
+  w = w + alpha * p;
+  old_norm_r2 = norm_r2;
+  r = r + alpha * q;
+  norm_r2 = sum(r * r);
+  p = -r + (norm_r2 / old_norm_r2) * p;
+}
+write(w, $4);"#;
+
+/// `$N` bindings for [`LINREG_CG`]: abstract paths plus the iteration
+/// count bound to `$3`.
+pub fn linreg_cg_args(iterations: usize) -> HashMap<usize, String> {
+    let mut m = HashMap::new();
+    m.insert(1, "data/X".to_string());
+    m.insert(2, "data/y".to_string());
+    m.insert(3, iterations.to_string());
+    m.insert(4, "data/w".to_string());
+    m
+}
 
 /// One of the paper's Table-1 input-size scenarios.
 #[derive(Clone, Debug)]
@@ -350,6 +395,79 @@ mod tests {
         assert!(text.contains("mapmm"));
         assert!(text.contains("RIGHT_PART"));
         assert!(text.contains("ak+"));
+    }
+
+    #[test]
+    fn spark_backend_emits_fused_job_for_xl1() {
+        let opts = CompileOptions { backend: ExecBackend::Spark, ..Default::default() };
+        let s = Scenario::xl1();
+        let c = compile_with_meta(LINREG_DS, &s.args(), &s.meta(1000), &opts).unwrap();
+        let (_, mr, sp) = c.runtime.size3();
+        assert_eq!(mr, 0, "spark backend emits no MR jobs");
+        assert_eq!(sp, 1, "the XL1 wave fuses into one Spark job");
+        let insts = insts_of(&c.runtime, 1);
+        let job = insts
+            .iter()
+            .find_map(|i| match i {
+                Instr::SparkJob(j) => Some(j),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(job.stages.len(), 2, "narrow scan + wide aggregation");
+        assert!(job.stages[0].insts.iter().any(|i| matches!(i.op, MrOp::Tsmm { .. })));
+        assert!(job.stages[0].insts.iter().any(|i| matches!(i.op, MrOp::MapMM { .. })));
+        assert!(job.stages[1].wide);
+        // torrent broadcast replaces the partitioned dcache broadcast:
+        // no CP partition instruction on the Spark backend
+        assert!(!cp_codes(insts).contains(&"partition".to_string()));
+        assert_eq!(job.broadcasts.len(), 1);
+        let text = c.explain_runtime();
+        assert!(text.contains("SPARK-Job["), "{text}");
+        assert!(text.contains("size CP/MR/SPARK ="), "{text}");
+    }
+
+    #[test]
+    fn spark_backend_fuses_xl2_cpmm_into_one_job() {
+        // XL2 needs 3 MR jobs (MMCJ + 2 GMR); Spark's lazy stages need 1.
+        let opts = CompileOptions { backend: ExecBackend::Spark, ..Default::default() };
+        let s = Scenario::xl2();
+        let c = compile_with_meta(LINREG_DS, &s.args(), &s.meta(1000), &opts).unwrap();
+        assert_eq!(c.runtime.spark_job_count(), 1, "one fused job vs 3 MR jobs");
+        let mr_opts = CompileOptions::default();
+        let mr_c = compile_with_meta(LINREG_DS, &s.args(), &s.meta(1000), &mr_opts).unwrap();
+        assert_eq!(mr_c.runtime.mr_job_count(), 3);
+    }
+
+    #[test]
+    fn cp_backend_forces_single_node_plans() {
+        let opts = CompileOptions { backend: ExecBackend::Cp, ..Default::default() };
+        let s = Scenario::xl4();
+        let c = compile_with_meta(LINREG_DS, &s.args(), &s.meta(1000), &opts).unwrap();
+        assert_eq!(c.runtime.dist_job_count(), 0, "CP backend never distributes");
+    }
+
+    #[test]
+    fn linreg_cg_compiles_on_every_backend() {
+        for backend in ExecBackend::all() {
+            let opts = CompileOptions { backend, ..Default::default() };
+            let s = Scenario::xl1();
+            let c = compile_with_meta(LINREG_CG, &linreg_cg_args(20), &s.meta(1000), &opts)
+                .unwrap();
+            // the loop compiled with a known trip count of 20
+            let has_loop = c.runtime.blocks.iter().any(|b| matches!(
+                b,
+                RtBlock::For { known_trip: Some(t), .. } if *t == 20.0
+            ));
+            assert!(has_loop, "backend {}: CG loop missing", backend.name());
+            match backend {
+                ExecBackend::Cp => assert_eq!(c.runtime.dist_job_count(), 0),
+                ExecBackend::Mr => assert!(c.runtime.mr_job_count() > 0),
+                ExecBackend::Spark => {
+                    assert!(c.runtime.spark_job_count() > 0);
+                    assert_eq!(c.runtime.mr_job_count(), 0);
+                }
+            }
+        }
     }
 
     #[test]

@@ -45,6 +45,20 @@ pub struct ClusterConfig {
     /// reproduces the paper's Figure 4/5 compute times exactly (see
     /// DESIGN.md §Constants-calibration).
     pub clock_hz: f64,
+    /// Number of Spark executors available to the application (the paper's
+    /// abstract names "MapReduce (MR) or similar frameworks like Spark" as
+    /// the distributed backends; this is the Spark half). Default: one
+    /// executor per worker node.
+    pub spark_executors: usize,
+    /// Cores per Spark executor (task slots). Default: the node vcores, so
+    /// total Spark parallelism matches the MR map-slot count and backend
+    /// comparisons isolate latency/shuffle differences, not raw slots.
+    pub spark_executor_cores: usize,
+    /// Spark executor JVM heap, bytes. Executors are long-lived and fat
+    /// (one per node) rather than per-task 2 GB containers, so broadcast
+    /// feasibility (`mapmm` vs `cpmm`) is decided against this budget —
+    /// the "physical selection driven by executor memory" axis.
+    pub spark_executor_mem_bytes: f64,
 }
 
 impl ClusterConfig {
@@ -63,6 +77,9 @@ impl ClusterConfig {
             vcores_per_node: 24,
             yarn_mem_per_node: 96.0 * 1024.0 * MB,
             clock_hz: 2.15e9,
+            spark_executors: 6,
+            spark_executor_cores: 24,
+            spark_executor_mem_bytes: 20.0 * 1024.0 * MB,
         }
     }
 
@@ -81,7 +98,15 @@ impl ClusterConfig {
             vcores_per_node: threads,
             yarn_mem_per_node: heap_bytes * 2.0,
             clock_hz: 2.4e9,
+            spark_executors: 1,
+            spark_executor_cores: threads,
+            spark_executor_mem_bytes: heap_bytes,
         }
+    }
+
+    /// Total Spark task slots: executors × cores per executor.
+    pub fn k_spark(&self) -> usize {
+        (self.spark_executors * self.spark_executor_cores).max(1)
     }
 
     /// YARN-style correction of map parallelism (§3.1): the effective map
@@ -160,6 +185,14 @@ impl SystemConfig {
     pub fn reduce_budget(&self, cc: &ClusterConfig) -> f64 {
         self.mem_budget_ratio * cc.reduce_heap_bytes
     }
+
+    /// Spark broadcast budget in bytes: ratio × executor heap. Drives the
+    /// `mapmm`-broadcast vs `cpmm`-shuffle physical selection on the Spark
+    /// backend — fat executors admit broadcasts the 2 GB MR map containers
+    /// reject (e.g. the XL3 scenario's 1.6 GB y vector).
+    pub fn spark_broadcast_budget(&self, cc: &ClusterConfig) -> f64 {
+        self.mem_budget_ratio * cc.spark_executor_mem_bytes
+    }
 }
 
 /// White-box cost-model constants (§3.3). IO bandwidths are per-thread;
@@ -207,6 +240,29 @@ pub struct CostConstants {
     /// effective degree of parallelism of MR phases (§3.3 "scaled minimum";
     /// accounts for stragglers and slot contention).
     pub dop_scale: f64,
+    /// Spark job submission latency, seconds. Default 1.0 s: the driver
+    /// schedules jobs against long-lived executors, so there is no per-job
+    /// JVM/container startup — the dominant reason Spark wins on
+    /// multi-iteration loops (Kaoudi et al. 2017 observe the same flip).
+    pub spark_job_latency: f64,
+    /// Per-stage scheduling/barrier latency, seconds. Default 0.3 s
+    /// (DAGScheduler stage submission + executor wake-up).
+    pub spark_stage_latency: f64,
+    /// Per-task launch latency, seconds. Default 0.05 s: tasks are
+    /// threads in a running executor, ~30× cheaper than an MR task JVM.
+    pub spark_task_latency: f64,
+    /// Shuffle write bandwidth per task (sorted spill to local disk),
+    /// B/s. Default 200 MB/s.
+    pub spark_shuffle_write: f64,
+    /// Shuffle read bandwidth per task (network fetch + merge), B/s.
+    /// Default 150 MB/s. Spark shuffles in two passes (write, read) vs
+    /// MR's three (map write, transfer, reduce merge-sort).
+    pub spark_shuffle_read: f64,
+    /// Torrent-broadcast bandwidth, B/s. Default 300 MB/s: executors
+    /// fetch blocks from peers in parallel, so one broadcast costs
+    /// ~size/bw once — unlike the MR distributed cache, which every map
+    /// task re-reads.
+    pub spark_broadcast_bw: f64,
 }
 
 impl Default for CostConstants {
@@ -225,6 +281,12 @@ impl Default for CostConstants {
             task_latency: 1.5,
             bookkeeping: 4.7e-9,
             dop_scale: 0.5,
+            spark_job_latency: 1.0,
+            spark_stage_latency: 0.3,
+            spark_task_latency: 0.05,
+            spark_shuffle_write: 200.0 * MB,
+            spark_shuffle_read: 150.0 * MB,
+            spark_broadcast_bw: 300.0 * MB,
         }
     }
 }
@@ -273,5 +335,31 @@ mod tests {
         let cc = ClusterConfig::local(8, 4.0 * GB);
         assert_eq!(cc.nodes, 1);
         assert!(cc.effective_k_map() <= 8);
+        assert_eq!(cc.k_spark(), 8);
+    }
+
+    #[test]
+    fn spark_parallelism_matches_mr_slots_on_paper_cluster() {
+        // Backend comparisons isolate latency/shuffle terms: Spark's task
+        // slots equal the MR map slots on the default cluster.
+        let cc = ClusterConfig::paper_cluster();
+        assert_eq!(cc.k_spark(), cc.effective_k_map());
+    }
+
+    #[test]
+    fn spark_broadcast_budget_exceeds_map_budget() {
+        // Fat executors (20 GB) vs 2 GB map containers: the Spark backend
+        // admits broadcasts MR rejects (mapmm-vs-cpmm flip, XL3).
+        let cc = ClusterConfig::paper_cluster();
+        let sc = SystemConfig::default();
+        assert!(sc.spark_broadcast_budget(&cc) > sc.map_budget(&cc));
+        assert_eq!((sc.spark_broadcast_budget(&cc) / MB).round() as i64, 14336);
+    }
+
+    #[test]
+    fn spark_latencies_far_below_mr() {
+        let k = CostConstants::default();
+        assert!(k.spark_job_latency * 10.0 < k.job_latency);
+        assert!(k.spark_task_latency * 10.0 < k.task_latency);
     }
 }

@@ -19,6 +19,7 @@
 
 pub mod flops;
 pub mod mr;
+pub mod spark;
 pub mod vars;
 
 use crate::conf::{ClusterConfig, CostConstants, SystemConfig};
@@ -36,14 +37,17 @@ pub struct InstCost {
     pub compute: f64,
     /// MR jobs carry a full breakdown instead.
     pub mr: Option<mr::MrJobCost>,
+    /// Spark jobs carry a stage-DAG breakdown instead.
+    pub spark: Option<spark::SparkJobCost>,
 }
 
 impl InstCost {
-    /// Total seconds (MR breakdown total, or `io + compute`).
+    /// Total seconds (MR/Spark breakdown total, or `io + compute`).
     pub fn total(&self) -> f64 {
-        match &self.mr {
-            Some(m) => m.total(),
-            None => self.io + self.compute,
+        match (&self.mr, &self.spark) {
+            (Some(m), _) => m.total(),
+            (_, Some(s)) => s.total(),
+            _ => self.io + self.compute,
         }
     }
 }
@@ -155,8 +159,14 @@ impl<'a> Estimator<'a> {
                 let (tt, tn) = self.cost_blocks(then_blocks, &mut then_t);
                 let mut else_t = t.clone();
                 let (et, en) = self.cost_blocks(else_blocks, &mut else_t);
-                let branches = if else_blocks.is_empty() { 2.0 } else { 2.0 };
-                let total = pt + (tt + et) / branches;
+                // Both arms have two successors (then + else/fall-through);
+                // a missing else is an empty branch costing 0, so the
+                // weighted total collapses to pt + tt/2.
+                let total = if else_blocks.is_empty() {
+                    pt + tt / 2.0
+                } else {
+                    pt + (tt + et) / 2.0
+                };
                 children.extend(tn);
                 children.extend(en);
                 then_t.merge(&else_t);
@@ -267,7 +277,7 @@ impl<'a> Estimator<'a> {
 
     /// Cost one instruction and update the live-variable state.
     fn cost_inst(&mut self, inst: &Instr, t: &mut VarTracker) -> InstCost {
-        let book = InstCost { io: 0.0, compute: self.k.bookkeeping, mr: None };
+        let book = InstCost { compute: self.k.bookkeeping, ..InstCost::default() };
         match inst {
             Instr::CreateVar { var, temp, format, mc, .. } => {
                 t.create(var, *mc, *format, !*temp);
@@ -287,7 +297,11 @@ impl<'a> Estimator<'a> {
             Instr::Cp(c) => self.cost_cp(c, t),
             Instr::MrJob(j) => {
                 let jc = mr::cost_mr_job(j, t, self.cfg, self.cc, self.k);
-                InstCost { io: 0.0, compute: 0.0, mr: Some(jc) }
+                InstCost { mr: Some(jc), ..InstCost::default() }
+            }
+            Instr::SparkJob(j) => {
+                let jc = spark::cost_spark_job(j, t, self.cfg, self.cc, self.k);
+                InstCost { spark: Some(jc), ..InstCost::default() }
             }
         }
     }
@@ -377,7 +391,7 @@ impl<'a> Estimator<'a> {
                 t.touch_mem(out);
             }
         }
-        InstCost { io, compute, mr: None }
+        InstCost { io, compute, ..InstCost::default() }
     }
 
     fn read_time(&self, mc: &MatrixCharacteristics, format: Format) -> f64 {
@@ -426,9 +440,10 @@ pub fn explain_costed(report: &CostReport) -> String {
                     walk(children, out, indent + 2);
                 }
                 CostNode::Inst { rendered, cost } => {
-                    let annot = match &cost.mr {
-                        Some(m) => m.annotate(),
-                        None => format!(
+                    let annot = match (&cost.mr, &cost.spark) {
+                        (Some(m), _) => m.annotate(),
+                        (_, Some(s)) => s.annotate(),
+                        _ => format!(
                             "# C=[{}, {}]",
                             crate::util::fmt::fmt_secs(cost.io),
                             crate::util::fmt::fmt_secs(cost.compute)
@@ -626,6 +641,83 @@ write(y, $4);
         assert!(text.contains("total cost C="), "{text}");
         assert!(text.contains("# C=["));
         assert!(text.contains("CP tsmm"));
+    }
+
+    /// Build a program of one If block whose then-branch (and optionally
+    /// else-branch) holds a deterministic-cost rand instruction.
+    fn if_program(with_else: bool) -> RtProgram {
+        use crate::matrix::{Format, MatrixCharacteristics};
+        let mc = MatrixCharacteristics::dense(2000, 2000, 1000);
+        let branch = || {
+            vec![RtBlock::Generic {
+                insts: vec![
+                    Instr::CreateVar {
+                        var: "_mVar2".into(),
+                        path: "scratch/t".into(),
+                        temp: true,
+                        format: Format::BinaryBlock,
+                        mc,
+                    },
+                    Instr::Cp(CpInst {
+                        op: CpOp::Rand { min: 0.0, max: 1.0, sparsity: 1.0, seed: 7 },
+                        inputs: vec![],
+                        output: Operand::Mat("_mVar2".into()),
+                    }),
+                ],
+                lines: (2, 2),
+                recompile: false,
+            }]
+        };
+        let mut prog = RtProgram::default();
+        prog.blocks.push(RtBlock::If {
+            pred: PredProg::default(),
+            then_blocks: branch(),
+            else_blocks: if with_else { branch() } else { vec![] },
+            lines: (1, 3),
+        });
+        prog
+    }
+
+    /// §3 Eq. 1, missing-else arm: the empty else branch costs 0, so the
+    /// If total is pt + tt/2 — half the cost of the then-branch alone.
+    #[test]
+    fn if_without_else_costs_half_the_then_branch() {
+        let prog = if_program(false);
+        let opts = CompileOptions::default();
+        let r = cost_program(&prog, &opts.cfg, &opts.cc.0, &CostConstants::default());
+        // reference: the then-branch as a standalone program
+        let mut solo = RtProgram::default();
+        let RtBlock::If { then_blocks, .. } = &prog.blocks[0] else { unreachable!() };
+        solo.blocks = then_blocks.clone();
+        let solo_cost =
+            cost_program(&solo, &opts.cfg, &opts.cc.0, &CostConstants::default()).total;
+        assert!(solo_cost > 0.0);
+        assert!(
+            (r.total - solo_cost / 2.0).abs() <= 1e-12 * solo_cost,
+            "if-without-else {} != then/2 {}",
+            r.total,
+            solo_cost / 2.0
+        );
+    }
+
+    /// §3 Eq. 1, both-arms case: w = 1/2 over two populated branches.
+    #[test]
+    fn if_with_else_averages_both_branches() {
+        let prog = if_program(true);
+        let opts = CompileOptions::default();
+        let r = cost_program(&prog, &opts.cfg, &opts.cc.0, &CostConstants::default());
+        let mut solo = RtProgram::default();
+        let RtBlock::If { then_blocks, .. } = &prog.blocks[0] else { unreachable!() };
+        solo.blocks = then_blocks.clone();
+        let solo_cost =
+            cost_program(&solo, &opts.cfg, &opts.cc.0, &CostConstants::default()).total;
+        // both branches are identical, so (tt + et)/2 == tt
+        assert!(
+            (r.total - solo_cost).abs() <= 1e-12 * solo_cost,
+            "if-with-else {} != then {}",
+            r.total,
+            solo_cost
+        );
     }
 
     #[test]

@@ -156,7 +156,7 @@ pub fn cost_mr_job(
     }
 
     // ---- map compute
-    let inst_mc = resolve_inst_mcs(j, &input_mc);
+    let inst_mc = resolve_mcs(&input_mc, j.all_insts());
     for inst in j.map_insts.iter().chain(&j.shuffle_insts) {
         c.map_exec += inst_flops(inst, &inst_mc) / cc.clock_hz / k_map_eff;
     }
@@ -254,16 +254,17 @@ pub fn cost_mr_job(
 }
 
 /// Resolve per-byte-index characteristics: job inputs then instruction
-/// outputs.
-fn resolve_inst_mcs(
-    j: &MrJob,
+/// outputs. Shared with the Spark cost model ([`crate::cost::spark`]),
+/// which uses the same byte-index dataflow encoding.
+pub(crate) fn resolve_mcs<'a>(
     input_mc: &[MatrixCharacteristics],
+    insts: impl Iterator<Item = &'a MrInst>,
 ) -> std::collections::HashMap<usize, MatrixCharacteristics> {
     let mut m = std::collections::HashMap::new();
     for (i, mc) in input_mc.iter().enumerate() {
         m.insert(i, *mc);
     }
-    for inst in j.all_insts() {
+    for inst in insts {
         m.insert(inst.output, inst.mc);
     }
     m
@@ -271,7 +272,7 @@ fn resolve_inst_mcs(
 
 /// Number of distinct output groups (blocks) of a reduce-side instruction,
 /// which bounds useful reducer parallelism.
-fn output_groups(inst: &MrInst, _cfg: &SystemConfig) -> usize {
+pub(crate) fn output_groups(inst: &MrInst, _cfg: &SystemConfig) -> usize {
     let rb = inst.mc.row_blocks();
     let cb = inst.mc.col_blocks();
     if rb < 0 || cb < 0 {
@@ -281,7 +282,8 @@ fn output_groups(inst: &MrInst, _cfg: &SystemConfig) -> usize {
 }
 
 /// FLOPs of one MR instruction given resolved input characteristics.
-fn inst_flops(
+/// Shared with the Spark cost model (Spark stages reuse [`MrInst`]).
+pub(crate) fn inst_flops(
     inst: &MrInst,
     mcs: &std::collections::HashMap<usize, MatrixCharacteristics>,
 ) -> f64 {

@@ -257,6 +257,18 @@ impl<'a> Executor<'a> {
                 self.stats.hdfs_read_bytes += report.input_bytes;
                 Ok(())
             }
+            Instr::SparkJob(j) => {
+                // Execution shim: a fused stage DAG shares the byte-index
+                // dataflow of an MR job, so the deterministic cluster
+                // simulator runs its phase-classified equivalent (costing
+                // uses the native Spark model, never this conversion).
+                self.stats.mr_jobs += 1;
+                let report = mr::simulate(&j.as_mr_job(), self)?;
+                self.stats.map_tasks += report.map_tasks;
+                self.stats.shuffle_bytes += report.shuffle_bytes;
+                self.stats.hdfs_read_bytes += report.input_bytes;
+                Ok(())
+            }
         }
     }
 

@@ -11,7 +11,15 @@ use crate::conf::{ClusterConfig, SystemConfig};
 /// `recompile` flags (blocks with MR operators or unknowns are marked for
 /// dynamic recompilation, cf. Figure 3's `[recompile=true]`).
 pub fn select(prog: &mut Program, cfg: &SystemConfig, cc: &ClusterConfig) {
-    let budget = cfg.cp_budget(cc);
+    select_with(prog, cfg, cc, false)
+}
+
+/// Backend-parameterised selection: with `force_cp` every operator stays
+/// in the control program regardless of its memory estimate — the
+/// single-node (`ExecBackend::Cp`) plan family, where the cost model
+/// rather than the compiler exposes when data outgrows one machine.
+pub fn select_with(prog: &mut Program, cfg: &SystemConfig, cc: &ClusterConfig, force_cp: bool) {
+    let budget = if force_cp { f64::INFINITY } else { cfg.cp_budget(cc) };
     let mut blocks = std::mem::take(&mut prog.blocks);
     select_blocks(&mut blocks, budget);
     prog.blocks = blocks;
@@ -173,6 +181,26 @@ mod tests {
         let Block::Generic(g2) = &prog.blocks[1] else { panic!() };
         assert!(!g1.recompile, "read-only block stays static");
         assert!(g2.recompile, "MR block marked for recompilation");
+    }
+
+    #[test]
+    fn force_cp_keeps_xl1_single_node() {
+        // The CP backend forces every operator in-memory even at 800 GB;
+        // the cost model, not the compiler, then exposes the blow-up.
+        let script = dml::frontend(crate::ir::build::tests::LINREG_DS).unwrap();
+        let mut prog = build_program(&script, &linreg_args(), &xl1(), 1000).unwrap();
+        rewrites::rewrite_program(&mut prog);
+        size_prop::propagate(&mut prog, 1000);
+        memory::annotate(&mut prog, &SystemConfig::default());
+        select_with(
+            &mut prog,
+            &SystemConfig::default(),
+            &ClusterConfig::paper_cluster(),
+            true,
+        );
+        let execs = exec_of(&prog, |h| h.dtype.is_matrix());
+        assert!(!execs.is_empty());
+        assert!(execs.iter().all(|e| *e == ExecType::Cp));
     }
 
     #[test]

@@ -16,12 +16,17 @@
 //!    memory estimates, and execution-type selection (CP vs MR).
 //! 3. [`lop`] — low-level physical operator selection (`tsmm`, `mapmm`,
 //!    `cpmm`, `rmm`, …) under memory and block-size constraints.
-//! 4. [`rtprog`] — generation of executable runtime programs (instructions
-//!    plus MR-job instructions assembled by the piggybacking algorithm).
+//! 4. [`rtprog`] — generation of executable runtime programs for three
+//!    execution backends ([`rtprog::ExecBackend`]: single-node CP, hybrid
+//!    CP/MR, hybrid CP/Spark): CP instructions, MR-job instructions
+//!    assembled by the piggybacking algorithm, and Spark jobs assembled
+//!    as lazily fused stage DAGs ([`rtprog::sparkify`]).
 //! 5. [`cost`] — **the paper's contribution**: a white-box analytical cost
 //!    model that costs generated runtime plans in a single pass, tracking
 //!    live-variable sizes and in-memory state, and linearising IO, latency
-//!    and compute into a single estimated-execution-time measure.
+//!    and compute into a single estimated-execution-time measure — with
+//!    per-framework job models for MR ([`cost::mr`]) and Spark
+//!    ([`cost::spark`]).
 //! 6. [`cp`] / [`mr`] — a hybrid runtime: single-node in-memory control
 //!    program and a deterministic MapReduce cluster simulator (the
 //!    substitute for the paper's Hadoop testbed).
@@ -50,5 +55,5 @@ pub mod rtprog;
 pub mod runtime;
 pub mod util;
 
-pub use api::{compile, sweep, CompileOptions, CompiledProgram, Scenario};
+pub use api::{compile, sweep, CompileOptions, CompiledProgram, ExecBackend, Scenario};
 pub use conf::{ClusterConfig, CostConstants, SystemConfig};

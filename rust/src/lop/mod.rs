@@ -20,6 +20,7 @@
 use crate::conf::{ClusterConfig, SystemConfig};
 use crate::ir::*;
 use crate::matrix::Format;
+use crate::rtprog::ExecBackend;
 
 /// Physical operator chosen for a matrix-multiplication HOP.
 #[derive(Clone, Debug, PartialEq)]
@@ -53,7 +54,8 @@ pub struct SelectionHints {
     pub no_transpose_rewrite: bool,
 }
 
-/// Select the physical matmult operator for HOP `id` in `dag`.
+/// Select the physical matmult operator for HOP `id` in `dag` against the
+/// default MR backend (see [`select_matmult_backend`]).
 ///
 /// `exec` is the HOP's selected execution type; sizes must be propagated.
 pub fn select_matmult(
@@ -62,6 +64,28 @@ pub fn select_matmult(
     cfg: &SystemConfig,
     cc: &ClusterConfig,
     hints: &SelectionHints,
+) -> MatMultMethod {
+    select_matmult_backend(dag, id, cfg, cc, hints, ExecBackend::Mr)
+}
+
+/// Backend-aware physical matmult selection. The CP-side decisions (tsmm,
+/// the `(yᵀX)ᵀ` rewrite) are backend-independent; for distributed hops the
+/// broadcast feasibility of `mapmm` differs per backend:
+///
+/// * **MR**: the broadcast must fit the per-task *map container* budget
+///   (2 GB heaps on the paper cluster) and is partitioned through the
+///   distributed cache when it spans multiple partitions.
+/// * **Spark**: the broadcast must fit the *executor* budget
+///   ([`SystemConfig::spark_broadcast_budget`]) — fat, long-lived
+///   executors admit broadcasts MR rejects (the XL3 flip) — and torrent
+///   broadcasts are never partitioned, so no CP `partition` op is emitted.
+pub fn select_matmult_backend(
+    dag: &HopDag,
+    id: HopId,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    hints: &SelectionHints,
+    backend: ExecBackend,
 ) -> MatMultMethod {
     let hop = dag.hop(id);
     debug_assert_eq!(hop.kind, HopKind::MatMult);
@@ -113,14 +137,19 @@ pub fn select_matmult(
                     return MatMultMethod::MrTsmm { left: false };
                 }
             }
-            // mapmm: broadcast the smaller input if it fits the map budget.
+            // mapmm: broadcast the smaller input if it fits the backend's
+            // broadcast budget (map container for MR, executor for Spark).
             let (am, bm) = (dag.hop(a), dag.hop(b));
             let a_ser = am.mc.serialized_size(Format::BinaryBlock);
             let b_ser = bm.mc.serialized_size(Format::BinaryBlock);
-            let map_budget = cfg.map_budget(cc);
+            let bc_budget = match backend {
+                ExecBackend::Spark => cfg.spark_broadcast_budget(cc),
+                _ => cfg.map_budget(cc),
+            };
             let (bc_input, bc_size) = if a_ser <= b_ser { (0, a_ser) } else { (1, b_ser) };
-            if bc_size.is_finite() && bc_size <= map_budget {
-                let partition = bc_size > cfg.partition_bytes;
+            if bc_size.is_finite() && bc_size <= bc_budget {
+                let partition =
+                    backend != ExecBackend::Spark && bc_size > cfg.partition_bytes;
                 return MatMultMethod::MrMapMM { broadcast_input: bc_input, partition };
             }
             MatMultMethod::MrCpmm
@@ -230,6 +259,43 @@ mod tests {
         let m = methods(&prog);
         assert_eq!(m[0], MatMultMethod::MrCpmm);
         assert_eq!(m[1], MatMultMethod::MrCpmm);
+    }
+
+    /// XL3's 1.6 GB y exceeds the 1434 MB MR map budget (-> cpmm) but fits
+    /// the 14 GB Spark executor budget (-> torrent-broadcast mapmm, no
+    /// partition op) — backend choice flips the physical operator.
+    #[test]
+    fn spark_executor_memory_flips_xl3_cpmm_to_mapmm() {
+        let prog = compile(&scenario(200_000_000, 1_000, 200_000_000));
+        let cfg = SystemConfig::default();
+        let cc = ClusterConfig::paper_cluster();
+        let mut methods = Vec::new();
+        for b in &prog.blocks {
+            if let Block::Generic(g) = b {
+                for id in g.dag.topo_order() {
+                    if g.dag.hop(id).kind == HopKind::MatMult {
+                        methods.push((
+                            g.dag.hop(id).mc.cols,
+                            select_matmult_backend(
+                                &g.dag,
+                                id,
+                                &cfg,
+                                &cc,
+                                &SelectionHints::default(),
+                                ExecBackend::Spark,
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+        methods.sort_by_key(|(cols, _)| -cols);
+        // X'X stays tsmm; X'y becomes an unpartitioned broadcast mapmm
+        assert_eq!(methods[0].1, MatMultMethod::MrTsmm { left: true });
+        assert_eq!(
+            methods[1].1,
+            MatMultMethod::MrMapMM { broadcast_input: 1, partition: false }
+        );
     }
 
     #[test]

@@ -11,7 +11,9 @@
 
 use std::collections::HashMap;
 
-use systemds::api::{compile, CompileOptions, Scenario};
+use systemds::api::{
+    compile, compile_with_meta, linreg_cg_args, CompileOptions, ExecBackend, Scenario, LINREG_CG,
+};
 use systemds::conf::{ClusterConfig, CostConstants, MB};
 use systemds::cost;
 use systemds::cp::interp::Executor;
@@ -33,11 +35,15 @@ fn main() {
                 "usage: repro <explain|cost|scenarios|run|resource-opt|sweep> [options]\n\
                  \n\
                  explain --scenario <xs|xl1..xl4> [--level hops|runtime]\n\
-                 cost    --scenario <xs|xl1..xl4>\n\
+                 \x20       [--backend cp|mr|spark] [--script ds|cg] [--iters N]\n\
+                 cost    --scenario <xs|xl1..xl4> [--backend cp|mr|spark]\n\
+                 \x20       [--script ds|cg] [--iters N]\n\
                  scenarios\n\
                  run <script.dml> [-a N=value ...] [--threads T] [--heap-mb H]\n\
                  resource-opt --scenario <name> [--heaps 256,512,...]\n\
+                 \x20       [--backend cp|mr|spark]\n\
                  sweep [--scenarios xs,xl1,...] [--heaps 512,1024,...]\n\
+                 \x20     [--backends cp,mr,spark] [--script ds|cg] [--iters N]\n\
                  \x20     [--threads T] [--serial]"
             );
             2
@@ -54,15 +60,73 @@ fn scenario_by_name(name: &str) -> Option<Scenario> {
     Scenario::all().into_iter().find(|s| s.name.eq_ignore_ascii_case(name))
 }
 
-fn cmd_explain(args: &[String]) -> i32 {
+/// Parse `--backend cp|mr|spark` (default MR). `Err` carries the exit code.
+fn parse_backend_flag(args: &[String]) -> Result<ExecBackend, i32> {
+    match flag(args, "--backend") {
+        None => Ok(ExecBackend::Mr),
+        Some(b) => ExecBackend::parse(&b).ok_or_else(|| {
+            eprintln!("--backend: unknown backend '{b}' (expected cp, mr or spark)");
+            2
+        }),
+    }
+}
+
+/// Parse `--iters N` (default 20, N >= 1). `Err` carries the exit code.
+fn parse_iters_flag(args: &[String]) -> Result<usize, i32> {
+    match flag(args, "--iters") {
+        None => Ok(20),
+        Some(i) => match i.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(n),
+            _ => {
+                eprintln!("--iters: invalid value '{i}' (expected a positive integer)");
+                Err(2)
+            }
+        },
+    }
+}
+
+/// Parse the shared `--backend`, `--script` and `--iters` flags and
+/// compile the requested scenario. Returns `Err(exit_code)` on bad flags.
+fn compile_flagged(
+    args: &[String],
+) -> Result<(systemds::api::CompiledProgram, CompileOptions), i32> {
     let name = flag(args, "--scenario").unwrap_or_else(|| "xs".into());
-    let level = flag(args, "--level").unwrap_or_else(|| "runtime".into());
     let Some(s) = scenario_by_name(&name) else {
         eprintln!("unknown scenario '{name}'");
-        return 2;
+        return Err(2);
     };
-    let opts = CompileOptions::default();
-    let compiled = s.compile(&opts);
+    let backend = parse_backend_flag(args)?;
+    let script = flag(args, "--script").unwrap_or_else(|| "ds".into());
+    let iters = parse_iters_flag(args)?;
+    let opts = CompileOptions { backend, ..Default::default() };
+    let compiled = match script.as_str() {
+        "cg" => compile_with_meta(
+            LINREG_CG,
+            &linreg_cg_args(iters),
+            &s.meta(opts.cfg.blocksize),
+            &opts,
+        ),
+        "ds" => Ok(s.compile(&opts)),
+        other => {
+            eprintln!("--script: unknown script '{other}' (expected ds or cg)");
+            return Err(2);
+        }
+    };
+    match compiled {
+        Ok(c) => Ok((c, opts)),
+        Err(e) => {
+            eprintln!("compile error: {e}");
+            Err(1)
+        }
+    }
+}
+
+fn cmd_explain(args: &[String]) -> i32 {
+    let level = flag(args, "--level").unwrap_or_else(|| "runtime".into());
+    let (compiled, opts) = match compile_flagged(args) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
     match level.as_str() {
         "hops" => print!("{}", compiled.explain_hops(&opts)),
         _ => print!("{}", compiled.explain_runtime()),
@@ -71,13 +135,10 @@ fn cmd_explain(args: &[String]) -> i32 {
 }
 
 fn cmd_cost(args: &[String]) -> i32 {
-    let name = flag(args, "--scenario").unwrap_or_else(|| "xs".into());
-    let Some(s) = scenario_by_name(&name) else {
-        eprintln!("unknown scenario '{name}'");
-        return 2;
+    let (compiled, opts) = match compile_flagged(args) {
+        Ok(v) => v,
+        Err(code) => return code,
     };
-    let opts = CompileOptions::default();
-    let compiled = s.compile(&opts);
     let report =
         cost::cost_program(&compiled.runtime, &opts.cfg, &opts.cc.0, &CostConstants::default());
     print!("{}", cost::explain_costed(&report));
@@ -182,12 +243,17 @@ fn cmd_resource_opt(args: &[String]) -> i32 {
         eprintln!("unknown scenario '{name}'");
         return 2;
     };
-    let choice = match resource::optimize(
+    let backend = match parse_backend_flag(args) {
+        Ok(b) => b,
+        Err(code) => return code,
+    };
+    let choice = match resource::optimize_backend(
         s.script(),
         &s.args(),
         &s.meta(1000),
         &ClusterConfig::paper_cluster(),
         &heaps,
+        backend,
     ) {
         Ok(c) => c,
         Err(e) => {
@@ -195,12 +261,12 @@ fn cmd_resource_opt(args: &[String]) -> i32 {
             return 1;
         }
     };
-    println!("{:>10} {:>8} {:>12}", "heap", "MR jobs", "est. cost");
+    println!("{:>10} {:>8} {:>12}", "heap", "jobs", "est. cost");
     for p in &choice.frontier {
         println!(
             "{:>8}MB {:>8} {:>11.1}s",
             (p.heap_bytes / MB) as i64,
-            p.mr_jobs,
+            p.mr_jobs + p.spark_jobs,
             p.cost_secs
         );
     }
@@ -212,10 +278,38 @@ fn cmd_resource_opt(args: &[String]) -> i32 {
     0
 }
 
-/// Parallel scenario-sweep: cost a ClusterConfig × data-size grid for the
-/// LinReg DS script and print the ranked plan-comparison table.
+/// Parallel scenario-sweep: cost a ClusterConfig × data-size × backend
+/// grid for the LinReg DS (or CG, `--script cg`) script and print the
+/// ranked plan-comparison table.
 fn cmd_sweep(args: &[String]) -> i32 {
-    let mut spec = SweepSpec::linreg_default();
+    let script = flag(args, "--script").unwrap_or_else(|| "ds".into());
+    let iters = match parse_iters_flag(args) {
+        Ok(n) => n,
+        Err(code) => return code,
+    };
+    let mut spec = match script.as_str() {
+        "ds" => SweepSpec::linreg_default(),
+        "cg" => SweepSpec::linreg_cg(iters),
+        other => {
+            eprintln!("--script: unknown script '{other}' (expected ds or cg)");
+            return 2;
+        }
+    };
+    if let Some(backends) = flag(args, "--backends") {
+        let mut parsed = Vec::new();
+        for part in backends.split(',').filter(|s| !s.is_empty()) {
+            match ExecBackend::parse(part) {
+                Some(b) => parsed.push(b),
+                None => {
+                    eprintln!(
+                        "--backends: unknown backend '{part}' (expected a list of cp, mr, spark)"
+                    );
+                    return 2;
+                }
+            }
+        }
+        spec.backends = parsed;
+    }
     if let Some(names) = flag(args, "--scenarios") {
         let mut scenarios = Vec::new();
         for name in names.split(',').filter(|s| !s.is_empty()) {

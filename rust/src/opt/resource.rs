@@ -10,6 +10,7 @@ use crate::api::{compile_with_meta, CompileOptions};
 use crate::conf::{ClusterConfig, CostConstants, MB};
 use crate::cost;
 use crate::ir::build::MetaProvider;
+use crate::rtprog::ExecBackend;
 
 /// One evaluated configuration.
 #[derive(Clone, Debug)]
@@ -20,6 +21,8 @@ pub struct ResourcePoint {
     pub cost_secs: f64,
     /// Number of MR jobs in the generated plan.
     pub mr_jobs: usize,
+    /// Number of Spark jobs in the generated plan (Spark backend).
+    pub spark_jobs: usize,
 }
 
 /// Result of the sweep.
@@ -29,7 +32,8 @@ pub struct ResourceChoice {
     pub frontier: Vec<ResourcePoint>,
 }
 
-/// Sweep client+task heap sizes and return the cost-optimal configuration.
+/// Sweep client+task heap sizes and return the cost-optimal configuration
+/// (MR backend; see [`optimize_backend`] for the backend axis).
 pub fn optimize(
     src: &str,
     args: &HashMap<usize, String>,
@@ -37,14 +41,32 @@ pub fn optimize(
     base_cc: &ClusterConfig,
     heaps_mb: &[f64],
 ) -> Result<ResourceChoice, String> {
+    optimize_backend(src, args, meta, base_cc, heaps_mb, ExecBackend::Mr)
+}
+
+/// Backend-parameterised heap sweep: generate and cost the plan per heap
+/// size for the given backend. On the Spark backend the executor memory
+/// scales with the heap axis too, so broadcast-feasibility flips are part
+/// of the search space.
+pub fn optimize_backend(
+    src: &str,
+    args: &HashMap<usize, String>,
+    meta: &dyn MetaProvider,
+    base_cc: &ClusterConfig,
+    heaps_mb: &[f64],
+    backend: ExecBackend,
+) -> Result<ResourceChoice, String> {
+    let spark_exec_ratio = base_cc.spark_executor_mem_bytes / base_cc.cp_heap_bytes;
     let mut frontier = Vec::new();
     for &h in heaps_mb {
         let mut cc = base_cc.clone();
         cc.cp_heap_bytes = h * MB;
         cc.map_heap_bytes = h * MB;
         cc.reduce_heap_bytes = h * MB;
+        cc.spark_executor_mem_bytes = h * MB * spark_exec_ratio;
         let opts = CompileOptions {
             cc: crate::api::ClusterConfigOpt(cc.clone()),
+            backend,
             ..Default::default()
         };
         let compiled = compile_with_meta(src, args, meta, &opts)?;
@@ -54,6 +76,7 @@ pub fn optimize(
             heap_bytes: h * MB,
             cost_secs: report.total,
             mr_jobs: compiled.runtime.mr_job_count(),
+            spark_jobs: compiled.runtime.spark_job_count(),
         });
     }
     let best = frontier
@@ -89,6 +112,22 @@ mod tests {
         assert_eq!(large.mr_jobs, 0, "2GB heap keeps XS in CP");
         assert!(large.cost_secs < small.cost_secs);
         assert_eq!(choice.best.heap_bytes, 2048.0 * MB);
+    }
+
+    #[test]
+    fn spark_backend_sweep_produces_spark_jobs() {
+        let s = Scenario::xl1();
+        let choice = optimize_backend(
+            s.script(),
+            &s.args(),
+            &s.meta(1000),
+            &ClusterConfig::paper_cluster(),
+            &[2048.0],
+            ExecBackend::Spark,
+        )
+        .unwrap();
+        assert_eq!(choice.frontier[0].mr_jobs, 0);
+        assert!(choice.frontier[0].spark_jobs > 0);
     }
 
     #[test]

@@ -29,12 +29,16 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
-use crate::api::{compile_with_meta, ClusterConfigOpt, CompileOptions, CompiledProgram, Scenario, LINREG_DS};
+use crate::api::{
+    compile_with_meta, linreg_cg_args, ClusterConfigOpt, CompileOptions, CompiledProgram,
+    Scenario, LINREG_CG, LINREG_DS,
+};
 use crate::conf::{ClusterConfig, CostConstants, SystemConfig, MB};
 use crate::cost;
 use crate::ir::build::StaticMeta;
 use crate::lop::SelectionHints;
 use crate::matrix::{Format, MatrixCharacteristics};
+use crate::rtprog::ExecBackend;
 use crate::util::fmt::{fmt_dim, fmt_secs};
 use crate::util::par;
 
@@ -141,6 +145,9 @@ pub struct SweepSpec {
     pub hints: SelectionHints,
     /// Cost-model constants shared by all cells.
     pub constants: CostConstants,
+    /// Execution-backend axis of the grid (CP / MR / Spark plan
+    /// families; `repro sweep --backends cp,mr,spark`).
+    pub backends: Vec<ExecBackend>,
     /// Worker threads; `0` = available parallelism.
     pub threads: usize,
 }
@@ -150,7 +157,8 @@ impl SweepSpec {
     /// five Table-1 data scenarios × eight cluster configurations (four
     /// heap sizes, each in a normal and a double-clock variant — the
     /// clock variant shares plan shapes with its sibling, exercising the
-    /// compile memoization). 40 cells, 20 distinct plan shapes.
+    /// compile memoization) × the MR backend. 40 cells, 20 distinct plan
+    /// shapes.
     pub fn linreg_default() -> Self {
         SweepSpec {
             script: LINREG_DS.to_string(),
@@ -160,13 +168,27 @@ impl SweepSpec {
             cfg: SystemConfig::default(),
             hints: SelectionHints::default(),
             constants: CostConstants::default(),
+            backends: vec![ExecBackend::Mr],
             threads: 0,
+        }
+    }
+
+    /// The iterative LinReg CG grid: the loop-heavy script where per-job
+    /// latency dominates distributed plans, swept across all three
+    /// backends by default (`--script cg`). `iterations` binds the CG
+    /// loop's trip count (`$3`).
+    pub fn linreg_cg(iterations: usize) -> Self {
+        SweepSpec {
+            script: LINREG_CG.to_string(),
+            args: linreg_cg_args(iterations),
+            backends: ExecBackend::all().to_vec(),
+            ..Self::linreg_default()
         }
     }
 
     /// Number of grid cells.
     pub fn cell_count(&self) -> usize {
-        self.clusters.len() * self.scenarios.len()
+        self.clusters.len() * self.scenarios.len() * self.backends.len().max(1)
     }
 }
 
@@ -177,6 +199,8 @@ pub struct SweepCell {
     pub cluster: String,
     /// Scenario label.
     pub scenario: String,
+    /// Backend label (`cp`, `mr`, `spark`).
+    pub backend: String,
     /// Rows of the scenario's first input (display).
     pub x_rows: i64,
     /// Cols of the scenario's first input (display).
@@ -187,6 +211,8 @@ pub struct SweepCell {
     pub cp_insts: usize,
     /// MR-job count of the generated plan.
     pub mr_jobs: usize,
+    /// Spark-job count of the generated plan.
+    pub spark_jobs: usize,
     /// Estimated execution time `C(P, cc)` in seconds.
     pub cost_secs: f64,
     /// Plan-shape signature this cell compiled (or reused) under.
@@ -219,24 +245,26 @@ impl SweepReport {
         self.ranking.iter().map(move |&i| &self.cells[i])
     }
 
-    /// Ranked plan-comparison table (deterministic — no timings).
+    /// Ranked plan-comparison table (deterministic — no timings). The
+    /// `jobs` column counts distributed jobs (MR or Spark, per backend).
     pub fn table(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<5} {:<10} {:<14} {:>15} {:>8} {:>5} {:>12} {:>6}\n",
-            "rank", "scenario", "cluster", "X dims", "MR jobs", "CP", "est. cost", "plan"
+            "{:<5} {:<10} {:<14} {:<7} {:>15} {:>5} {:>5} {:>12} {:>6}\n",
+            "rank", "scenario", "cluster", "backend", "X dims", "jobs", "CP", "est. cost", "plan"
         ));
-        out.push_str(&"-".repeat(84));
+        out.push_str(&"-".repeat(92));
         out.push('\n');
         for (rank, c) in self.ranked().enumerate() {
             out.push_str(&format!(
-                "{:<5} {:<10} {:<14} {:>7}x{:<7} {:>8} {:>5} {:>12} {:>6}\n",
+                "{:<5} {:<10} {:<14} {:<7} {:>7}x{:<7} {:>5} {:>5} {:>12} {:>6}\n",
                 rank + 1,
                 c.scenario,
                 c.cluster,
+                c.backend,
                 fmt_dim(c.x_rows),
                 fmt_dim(c.x_cols),
-                c.mr_jobs,
+                c.mr_jobs + c.spark_jobs,
                 c.cp_insts,
                 fmt_secs(c.cost_secs),
                 if c.plan_reused { "memo" } else { "fresh" }
@@ -263,30 +291,35 @@ impl SweepReport {
 /// generated plan for one cell. Two cells with equal signatures compile
 /// to identical runtime plans, so the compile is shared between them.
 ///
-/// Includes: input dims, block size, sparse threshold, memory-budget
-/// ratio, the three heap sizes (budgets drive CP-vs-MR selection and
-/// mapmm feasibility), partition size, reducer count, replication,
-/// unknown-iteration constant, and the selection hints. Excludes the
-/// cost-only knobs: clock rate, slot counts, node/vcore/YARN geometry,
-/// and HDFS block size.
+/// Includes: input dims, the execution backend (CP/MR/Spark plan
+/// families differ structurally), block size, sparse threshold,
+/// memory-budget ratio, the three heap sizes (budgets drive CP-vs-MR
+/// selection and mapmm feasibility), the Spark executor memory (drives
+/// broadcast feasibility on the Spark backend), partition size, reducer
+/// count, replication, unknown-iteration constant, and the selection
+/// hints. Excludes the cost-only knobs: clock rate, slot counts,
+/// node/vcore/YARN geometry, and HDFS block size.
 fn plan_signature(
     cfg: &SystemConfig,
     hints: &SelectionHints,
     cc: &ClusterConfig,
     scenario: &DataScenario,
+    backend: ExecBackend,
 ) -> String {
     let mut sig = String::new();
     for (path, r, c) in &scenario.inputs {
         sig.push_str(&format!("{path}={r}x{c};"));
     }
     sig.push_str(&format!(
-        "bs{};st{};ratio{};cp{};map{};red{};part{};nr{};rep{};ui{};h{}{}{}",
+        "be{};bs{};st{};ratio{};cp{};map{};red{};sx{};part{};nr{};rep{};ui{};h{}{}{}",
+        backend.name(),
         cfg.blocksize,
         cfg.sparse_threshold,
         cfg.mem_budget_ratio,
         cc.cp_heap_bytes,
         cc.map_heap_bytes,
         cc.reduce_heap_bytes,
+        cc.spark_executor_mem_bytes,
         cfg.partition_bytes,
         cfg.num_reducers,
         cfg.replication,
@@ -298,11 +331,17 @@ fn plan_signature(
     sig
 }
 
-fn compile_cell(spec: &SweepSpec, ci: usize, si: usize) -> Result<CompiledProgram, String> {
+fn compile_cell(
+    spec: &SweepSpec,
+    ci: usize,
+    si: usize,
+    bi: usize,
+) -> Result<CompiledProgram, String> {
     let opts = CompileOptions {
         cfg: spec.cfg.clone(),
         cc: ClusterConfigOpt(spec.clusters[ci].cc.clone()),
         hints: spec.hints.clone(),
+        backend: spec.backends[bi],
     };
     compile_with_meta(
         &spec.script,
@@ -312,17 +351,21 @@ fn compile_cell(spec: &SweepSpec, ci: usize, si: usize) -> Result<CompiledProgra
     )
     .map_err(|e| {
         format!(
-            "compile failed for cluster '{}' scenario '{}': {e}",
-            spec.clusters[ci].name, spec.scenarios[si].name
+            "compile failed for cluster '{}' scenario '{}' backend '{}': {e}",
+            spec.clusters[ci].name,
+            spec.scenarios[si].name,
+            spec.backends[bi].name()
         )
     })
 }
 
-fn grid_of(spec: &SweepSpec) -> Vec<(usize, usize)> {
+fn grid_of(spec: &SweepSpec) -> Vec<(usize, usize, usize)> {
     let mut grid = Vec::with_capacity(spec.cell_count());
     for ci in 0..spec.clusters.len() {
         for si in 0..spec.scenarios.len() {
-            grid.push((ci, si));
+            for bi in 0..spec.backends.len() {
+                grid.push((ci, si, bi));
+            }
         }
     }
     grid
@@ -332,22 +375,25 @@ fn cost_cell(
     spec: &SweepSpec,
     ci: usize,
     si: usize,
+    bi: usize,
     prog: &CompiledProgram,
     sig: &str,
     reused: bool,
 ) -> SweepCell {
     let report =
         cost::cost_program(&prog.runtime, &spec.cfg, &spec.clusters[ci].cc, &spec.constants);
-    let (cp, mr) = prog.runtime.size();
+    let (cp, mr, sp) = prog.runtime.size3();
     let sc = &spec.scenarios[si];
     SweepCell {
         cluster: spec.clusters[ci].name.clone(),
         scenario: sc.name.clone(),
+        backend: spec.backends[bi].name().to_string(),
         x_rows: sc.inputs.first().map(|&(_, r, _)| r).unwrap_or(0),
         x_cols: sc.inputs.first().map(|&(_, _, c)| c).unwrap_or(0),
         input_cells: sc.total_cells(),
         cp_insts: cp,
         mr_jobs: mr,
+        spark_jobs: sp,
         cost_secs: report.total,
         plan_sig: sig.to_string(),
         plan_reused: reused,
@@ -362,6 +408,11 @@ fn rank(cells: &[SweepCell]) -> Vec<usize> {
             .total_cmp(&cells[b].cost_secs)
             .then_with(|| cells[a].scenario.cmp(&cells[b].scenario))
             .then_with(|| cells[a].cluster.cmp(&cells[b].cluster))
+            // backends that tie on cost rank single-node first (`cp` <
+            // `mr` < `spark`): when the data fits the heap all three
+            // backends agree on the pure-CP plan, and the table should
+            // put the backend with no framework overhead on top.
+            .then_with(|| cells[a].backend.cmp(&cells[b].backend))
     });
     ranking
 }
@@ -371,14 +422,22 @@ fn rank(cells: &[SweepCell]) -> Vec<usize> {
 /// pipeline; [`sweep_serial`] is the unmemoized serial reference.
 pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
     let t0 = Instant::now();
-    if spec.clusters.is_empty() || spec.scenarios.is_empty() {
-        return Err("empty sweep grid (no clusters or no scenarios)".to_string());
+    if spec.clusters.is_empty() || spec.scenarios.is_empty() || spec.backends.is_empty() {
+        return Err("empty sweep grid (no clusters, scenarios or backends)".to_string());
     }
     let threads = if spec.threads == 0 { par::default_threads() } else { spec.threads };
     let grid = grid_of(spec);
     let sigs: Vec<String> = grid
         .iter()
-        .map(|&(ci, si)| plan_signature(&spec.cfg, &spec.hints, &spec.clusters[ci].cc, &spec.scenarios[si]))
+        .map(|&(ci, si, bi)| {
+            plan_signature(
+                &spec.cfg,
+                &spec.hints,
+                &spec.clusters[ci].cc,
+                &spec.scenarios[si],
+                spec.backends[bi],
+            )
+        })
         .collect();
 
     // Distinct plan shapes in first-occurrence order.
@@ -394,8 +453,8 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
     // Phase 1: compile each distinct plan shape once, in parallel.
     let compiled: Vec<Result<CompiledProgram, String>> =
         par::par_map(&uniq_cells, threads, |_, &cell| {
-            let (ci, si) = grid[cell];
-            compile_cell(spec, ci, si)
+            let (ci, si, bi) = grid[cell];
+            compile_cell(spec, ci, si, bi)
         });
     let mut progs: Vec<CompiledProgram> = Vec::with_capacity(compiled.len());
     for r in compiled {
@@ -404,9 +463,9 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
 
     // Phase 2: cost all cells concurrently against their full cluster
     // config (clock/slots matter here even when the plan is shared).
-    let cells: Vec<SweepCell> = par::par_map(&grid, threads, |i, &(ci, si)| {
+    let cells: Vec<SweepCell> = par::par_map(&grid, threads, |i, &(ci, si, bi)| {
         let u = sig_uniq[sigs[i].as_str()];
-        cost_cell(spec, ci, si, &progs[u], &sigs[i], uniq_cells[u] != i)
+        cost_cell(spec, ci, si, bi, &progs[u], &sigs[i], uniq_cells[u] != i)
     });
 
     let ranking = rank(&cells);
@@ -427,19 +486,27 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
 /// baseline for the `sweep` bench and as a cross-check in tests.
 pub fn sweep_serial(spec: &SweepSpec) -> Result<SweepReport, String> {
     let t0 = Instant::now();
-    if spec.clusters.is_empty() || spec.scenarios.is_empty() {
-        return Err("empty sweep grid (no clusters or no scenarios)".to_string());
+    if spec.clusters.is_empty() || spec.scenarios.is_empty() || spec.backends.is_empty() {
+        return Err("empty sweep grid (no clusters, scenarios or backends)".to_string());
     }
     let grid = grid_of(spec);
     let sigs: Vec<String> = grid
         .iter()
-        .map(|&(ci, si)| plan_signature(&spec.cfg, &spec.hints, &spec.clusters[ci].cc, &spec.scenarios[si]))
+        .map(|&(ci, si, bi)| {
+            plan_signature(
+                &spec.cfg,
+                &spec.hints,
+                &spec.clusters[ci].cc,
+                &spec.scenarios[si],
+                spec.backends[bi],
+            )
+        })
         .collect();
     let mut seen: HashMap<&str, usize> = HashMap::new();
     let mut distinct_plans = 0usize;
     let mut cells = Vec::with_capacity(grid.len());
-    for (i, &(ci, si)) in grid.iter().enumerate() {
-        let prog = compile_cell(spec, ci, si)?;
+    for (i, &(ci, si, bi)) in grid.iter().enumerate() {
+        let prog = compile_cell(spec, ci, si, bi)?;
         let reused = match seen.get(sigs[i].as_str()) {
             Some(_) => true,
             None => {
@@ -448,7 +515,7 @@ pub fn sweep_serial(spec: &SweepSpec) -> Result<SweepReport, String> {
                 false
             }
         };
-        cells.push(cost_cell(spec, ci, si, &prog, &sigs[i], reused));
+        cells.push(cost_cell(spec, ci, si, bi, &prog, &sigs[i], reused));
     }
     let ranking = rank(&cells);
     Ok(SweepReport {
@@ -544,5 +611,26 @@ mod tests {
         spec.scenarios.clear();
         assert!(sweep(&spec).is_err());
         assert!(sweep_serial(&spec).is_err());
+        let mut spec = tiny_spec();
+        spec.backends.clear();
+        assert!(sweep(&spec).is_err());
+        assert!(sweep_serial(&spec).is_err());
+    }
+
+    #[test]
+    fn backend_axis_multiplies_grid_and_plans() {
+        let mut spec = tiny_spec();
+        spec.backends = ExecBackend::all().to_vec();
+        assert_eq!(spec.cell_count(), 24);
+        let r = sweep(&spec).unwrap();
+        assert_eq!(r.cells.len(), 24);
+        // 4 (cluster-heap x scenario) plan shapes per backend
+        assert_eq!(r.distinct_plans, 12, "{:#?}", r.cells);
+        // every backend appears in the table
+        let table = r.table();
+        assert!(table.contains("backend"));
+        for b in ExecBackend::all() {
+            assert!(r.cells.iter().any(|c| c.backend == b.name()), "{}", b.name());
+        }
     }
 }

@@ -12,10 +12,15 @@ pub struct ExplainOpts {
     pub show_rmvar: bool,
 }
 
-/// Render the whole runtime program (Figure 2/3 style).
+/// Render the whole runtime program (Figure 2/3 style). Programs compiled
+/// for the Spark backend extend the size header with a `/SPARK` column.
 pub fn explain_runtime(prog: &RtProgram, opts: ExplainOpts) -> String {
-    let (cp, mr) = prog.size();
-    let mut out = format!("PROGRAM ( size CP/MR = {cp}/{mr} )\n--MAIN PROGRAM\n");
+    let (cp, mr, sp) = prog.size3();
+    let mut out = if sp > 0 {
+        format!("PROGRAM ( size CP/MR/SPARK = {cp}/{mr}/{sp} )\n--MAIN PROGRAM\n")
+    } else {
+        format!("PROGRAM ( size CP/MR = {cp}/{mr} )\n--MAIN PROGRAM\n")
+    };
     explain_blocks(&prog.blocks, &mut out, 4, opts);
     for (name, f) in &prog.funcs {
         out.push_str(&format!("--FUNCTION {name}\n"));
@@ -127,6 +132,7 @@ pub fn render_inst(inst: &Instr) -> String {
             s
         }
         Instr::MrJob(j) => render_job(j),
+        Instr::SparkJob(j) => render_spark_job(j),
     }
 }
 
@@ -140,7 +146,11 @@ fn vt_str(l: &Lit) -> &'static str {
 }
 
 fn render_mr_inst(i: &MrInst) -> String {
-    let mut s = format!("MR {}", i.op.code());
+    render_dist_inst("MR", i)
+}
+
+fn render_dist_inst(prefix: &str, i: &MrInst) -> String {
+    let mut s = format!("{prefix} {}", i.op.code());
     for idx in &i.inputs {
         s.push_str(&format!(" {idx}"));
     }
@@ -176,6 +186,41 @@ fn render_job(j: &MrJob) -> String {
         j.result_indices.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")
     ));
     s.push_str(&format!("      num reducers   = {}\n", j.num_reducers));
+    s.push_str(&format!("      replication    = {} ]", j.replication));
+    s
+}
+
+/// Render one Spark job: the lazily fused stage DAG (narrow scan stage,
+/// then shuffle-separated wide stages), broadcast variables and outputs.
+fn render_spark_job(j: &SparkJob) -> String {
+    let fmt_list = |insts: &[MrInst]| {
+        insts.iter().map(|i| render_dist_inst("SPARK", i)).collect::<Vec<_>>().join(", ")
+    };
+    let wide = j.stages.iter().filter(|s| s.wide).count();
+    let mut s = String::from("SPARK-Job[\n");
+    s.push_str(&format!(
+        "      stages         = {} ({} narrow, {} wide)\n",
+        j.stages.len(),
+        j.stages.len() - wide,
+        wide
+    ));
+    s.push_str(&format!("      input labels   = [{}]\n", j.inputs.join(", ")));
+    if !j.broadcasts.is_empty() {
+        s.push_str(&format!("      broadcast vars = [{}]\n", j.broadcasts.join(", ")));
+    }
+    for (k, stage) in j.stages.iter().enumerate() {
+        let kind = if stage.wide { "wide  " } else { "narrow" };
+        s.push_str(&format!(
+            "      stage {k} {kind} = {}\n",
+            fmt_list(&stage.insts)
+        ));
+    }
+    s.push_str(&format!("      output labels  = [{}]\n", j.outputs.join(", ")));
+    s.push_str(&format!(
+        "      result indices = {}\n",
+        j.result_indices.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+    ));
+    s.push_str(&format!("      shuffle parts  = {}\n", j.num_reducers));
     s.push_str(&format!("      replication    = {} ]", j.replication));
     s
 }

@@ -6,10 +6,11 @@
 use std::collections::{HashMap, HashSet};
 
 use super::piggyback::{self, MrDep, MrNode, Phase};
+use super::sparkify;
 use super::*;
 use crate::conf::{ClusterConfig, SystemConfig};
 use crate::ir::{self, Block, DataGenOp, ExecType, HopDag, HopId, HopKind, Program, ReorgOp};
-use crate::lop::{select_matmult, MatMultMethod, SelectionHints};
+use crate::lop::{select_matmult_backend, MatMultMethod, SelectionHints};
 use crate::matrix::Format;
 
 /// Generation context threaded through the whole program.
@@ -17,22 +18,40 @@ pub struct GenCtx<'a> {
     pub cfg: &'a SystemConfig,
     pub cc: &'a ClusterConfig,
     pub hints: &'a SelectionHints,
+    pub backend: ExecBackend,
     var_counter: usize,
     scratch: String,
 }
 
 /// Generate the runtime program for a compiled (rewritten, size-propagated,
-/// memory-annotated, exec-typed) HOP program.
+/// memory-annotated, exec-typed) HOP program against the default MR
+/// backend. See [`generate_backend`] for the backend-parameterised entry.
 pub fn generate(
     prog: &Program,
     cfg: &SystemConfig,
     cc: &ClusterConfig,
     hints: &SelectionHints,
 ) -> RtProgram {
+    generate_backend(prog, cfg, cc, hints, ExecBackend::Mr)
+}
+
+/// Generate the runtime program for the given execution backend: MR waves
+/// become piggybacked [`MrJob`]s on [`ExecBackend::Mr`] and lazily fused
+/// stage DAGs ([`SparkJob`]) on [`ExecBackend::Spark`]. On
+/// [`ExecBackend::Cp`] every hop was already forced to CP by execution-type
+/// selection, so no distributed instructions are emitted.
+pub fn generate_backend(
+    prog: &Program,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    hints: &SelectionHints,
+    backend: ExecBackend,
+) -> RtProgram {
     let mut ctx = GenCtx {
         cfg,
         cc,
         hints,
+        backend,
         var_counter: 2,
         scratch: format!("scratch_space//_p{}//_t0", std::process::id()),
     };
@@ -131,7 +150,10 @@ impl<'a, 'b> DagGen<'a, 'b> {
         let mut methods = HashMap::new();
         for &id in &topo {
             if dag.hop(id).kind == HopKind::MatMult {
-                methods.insert(id, select_matmult(dag, id, ctx.cfg, ctx.cc, ctx.hints));
+                methods.insert(
+                    id,
+                    select_matmult_backend(dag, id, ctx.cfg, ctx.cc, ctx.hints, ctx.backend),
+                );
             }
         }
         // suppressed transposes: consumed only by tsmm (as the transposed
@@ -564,6 +586,26 @@ impl<'a, 'b> DagGen<'a, 'b> {
                 }
             }
         }
+        if self.ctx.backend == ExecBackend::Spark {
+            // Spark: the whole wave fuses into one lazily evaluated job.
+            let packed =
+                sparkify::fuse(&nodes, self.ctx.cfg.num_reducers, self.ctx.cfg.replication);
+            for (var, mc) in &packed.materialized {
+                let path = self.scratch_path();
+                self.insts.push(Instr::CreateVar {
+                    var: var.clone(),
+                    path,
+                    temp: true,
+                    format: Format::BinaryBlock,
+                    mc: *mc,
+                });
+            }
+            self.insts.push(Instr::SparkJob(packed.job));
+            for (&id, &nid) in &hop_node {
+                self.done.insert(id, Operand::Mat(nodes[nid].out_var.clone()));
+            }
+            return;
+        }
         let packed = piggyback::pack(&nodes, self.ctx.cfg.num_reducers, self.ctx.cfg.replication);
         // createvars for materialised outputs, then the jobs
         for (var, mc) in &packed.materialized {
@@ -894,6 +936,11 @@ fn insert_rmvars(insts: Vec<Instr>) -> Vec<Instr> {
                 }
             }
             Instr::MrJob(j) => {
+                for v in j.inputs.iter().chain(&j.outputs) {
+                    touch(v);
+                }
+            }
+            Instr::SparkJob(j) => {
                 for v in j.inputs.iter().chain(&j.outputs) {
                     touch(v);
                 }

@@ -5,11 +5,62 @@
 pub mod explain;
 pub mod gen;
 pub mod piggyback;
+pub mod sparkify;
 
 use std::collections::BTreeMap;
 
 use crate::ir::{AggDir, AggOp, BinOp, Lit, UnOp, ValueType};
 use crate::matrix::{Format, MatrixCharacteristics};
+
+/// Execution backend a runtime plan is generated for (the paper's
+/// abstract: "single node, in-memory computations to distributed
+/// computations on MapReduce (MR) or similar frameworks like Spark").
+///
+/// * [`ExecBackend::Cp`] — single-node only: every operator is forced to
+///   the control program regardless of memory estimates (the cost model
+///   still charges the full IO + compute of oversized data, which is how
+///   the sweep exposes where single-node execution stops paying off).
+/// * [`ExecBackend::Mr`] — the default hybrid plan family of the paper:
+///   operators exceeding the memory budget become piggybacked MR jobs.
+/// * [`ExecBackend::Spark`] — hybrid CP/Spark: the same distributed
+///   operators are emitted as lazily fused stage DAGs ([`SparkJob`])
+///   with broadcast-vs-shuffle selection driven by executor memory.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ExecBackend {
+    /// Single-node, in-memory control program only.
+    Cp,
+    /// Hybrid CP + piggybacked MapReduce jobs (the paper's default).
+    #[default]
+    Mr,
+    /// Hybrid CP + lazily fused Spark stage DAGs.
+    Spark,
+}
+
+impl ExecBackend {
+    /// Lower-case label used in sweep tables and CLI flags.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecBackend::Cp => "cp",
+            ExecBackend::Mr => "mr",
+            ExecBackend::Spark => "spark",
+        }
+    }
+
+    /// Parse a CLI label (`cp`, `mr`, `spark`), case-insensitive.
+    pub fn parse(s: &str) -> Option<ExecBackend> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "cp" => Some(ExecBackend::Cp),
+            "mr" => Some(ExecBackend::Mr),
+            "spark" => Some(ExecBackend::Spark),
+            _ => None,
+        }
+    }
+
+    /// All backends in canonical (table) order.
+    pub fn all() -> [ExecBackend; 3] {
+        [ExecBackend::Cp, ExecBackend::Mr, ExecBackend::Spark]
+    }
+}
 
 /// Instruction operand.
 #[derive(Clone, Debug, PartialEq)]
@@ -252,6 +303,85 @@ impl MrJob {
     }
 }
 
+/// One Spark stage: a pipeline of fused transformations executed without
+/// materialisation. `wide` marks stages that begin after a shuffle
+/// boundary (Spark's wide dependencies: cpmm/rmm joins and `ak+`
+/// aggregations); stage 0 reads the job inputs directly (narrow).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparkStage {
+    /// Stage begins after a shuffle boundary (wide dependency).
+    pub wide: bool,
+    /// Fused instructions, in dataflow order (operands are job-local byte
+    /// indices, same scheme as [`MrInst`]).
+    pub insts: Vec<MrInst>,
+}
+
+/// A generated Spark-job instruction: one action triggering a lazily
+/// fused stage DAG. Where piggybacking packs MR operations into several
+/// jobs (a cpmm needs a *second* job for its aggregation), Spark's lazy
+/// evaluation keeps one wave of distributed operators inside a single
+/// job whose stages are separated only by shuffle boundaries.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparkJob {
+    /// Input labels: variables read from HDFS (index order = byte index).
+    pub inputs: Vec<String>,
+    /// Inputs distributed as torrent broadcasts (subset of `inputs`;
+    /// the Spark analogue of the MR distributed cache).
+    pub broadcasts: Vec<String>,
+    /// Stage DAG in topological order; stage 0 is the narrow scan stage.
+    pub stages: Vec<SparkStage>,
+    /// Output variable labels, parallel to `result_indices`.
+    pub outputs: Vec<String>,
+    /// Byte indices of the outputs within the job.
+    pub result_indices: Vec<usize>,
+    /// Shuffle partitions for wide stages (reuses the reducer knob).
+    pub num_reducers: usize,
+    /// Replication factor for job outputs.
+    pub replication: usize,
+}
+
+impl SparkJob {
+    /// All instructions in stage order.
+    pub fn all_insts(&self) -> impl Iterator<Item = &MrInst> {
+        self.stages.iter().flat_map(|s| s.insts.iter())
+    }
+
+    /// Reassemble an equivalent [`MrJob`] for the deterministic cluster
+    /// simulator (`repro run`): byte-index dataflow is shared between the
+    /// two representations, so narrow-stage instructions become map
+    /// instructions, cpmm/rmm become shuffle instructions and wide-stage
+    /// instructions become aggregation instructions. This is a
+    /// best-effort execution shim — costing uses the native
+    /// [`crate::cost::spark`] model, never this conversion.
+    pub fn as_mr_job(&self) -> MrJob {
+        let mut map_insts = Vec::new();
+        let mut shuffle_insts = Vec::new();
+        let mut agg_insts = Vec::new();
+        for stage in &self.stages {
+            for inst in &stage.insts {
+                match &inst.op {
+                    MrOp::Cpmm | MrOp::Rmm => shuffle_insts.push(inst.clone()),
+                    _ if stage.wide => agg_insts.push(inst.clone()),
+                    _ => map_insts.push(inst.clone()),
+                }
+            }
+        }
+        MrJob {
+            job_type: JobType::Gmr,
+            inputs: self.inputs.clone(),
+            dcache: self.broadcasts.clone(),
+            map_insts,
+            shuffle_insts,
+            agg_insts,
+            other_insts: Vec::new(),
+            outputs: self.outputs.clone(),
+            result_indices: self.result_indices.clone(),
+            num_reducers: self.num_reducers,
+            replication: self.replication,
+        }
+    }
+}
+
 /// Runtime instructions.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Instr {
@@ -265,6 +395,8 @@ pub enum Instr {
     RmVar { vars: Vec<String> },
     Cp(CpInst),
     MrJob(MrJob),
+    /// A Spark action triggering a fused stage DAG (Spark backend).
+    SparkJob(SparkJob),
 }
 
 /// Small instruction program computing a predicate / loop bound.
@@ -314,14 +446,15 @@ pub struct RtProgram {
 }
 
 impl RtProgram {
-    /// Count (CP, MR) instructions — the `size CP/MR = 34/0` header of
-    /// Figures 2 and 3.
-    pub fn size(&self) -> (usize, usize) {
-        fn count(blocks: &[RtBlock], cp: &mut usize, mr: &mut usize) {
-            let count_insts = |insts: &[Instr], cp: &mut usize, mr: &mut usize| {
+    /// Count (CP, MR, Spark) instructions — the `size CP/MR = 34/0`
+    /// header of Figures 2 and 3, extended with the Spark backend.
+    pub fn size3(&self) -> (usize, usize, usize) {
+        fn count(blocks: &[RtBlock], cp: &mut usize, mr: &mut usize, sp: &mut usize) {
+            let count_insts = |insts: &[Instr], cp: &mut usize, mr: &mut usize, sp: &mut usize| {
                 for i in insts {
                     match i {
                         Instr::MrJob(_) => *mr += 1,
+                        Instr::SparkJob(_) => *sp += 1,
                         Instr::RmVar { .. } => {}
                         _ => *cp += 1,
                     }
@@ -329,39 +462,57 @@ impl RtProgram {
             };
             for b in blocks {
                 match b {
-                    RtBlock::Generic { insts, .. } => count_insts(insts, cp, mr),
+                    RtBlock::Generic { insts, .. } => count_insts(insts, cp, mr, sp),
                     RtBlock::If { pred, then_blocks, else_blocks, .. } => {
-                        count_insts(&pred.insts, cp, mr);
-                        count(then_blocks, cp, mr);
-                        count(else_blocks, cp, mr);
+                        count_insts(&pred.insts, cp, mr, sp);
+                        count(then_blocks, cp, mr, sp);
+                        count(else_blocks, cp, mr, sp);
                     }
                     RtBlock::For { from, to, by, body, .. } => {
-                        count_insts(&from.insts, cp, mr);
-                        count_insts(&to.insts, cp, mr);
+                        count_insts(&from.insts, cp, mr, sp);
+                        count_insts(&to.insts, cp, mr, sp);
                         if let Some(by) = by {
-                            count_insts(&by.insts, cp, mr);
+                            count_insts(&by.insts, cp, mr, sp);
                         }
-                        count(body, cp, mr);
+                        count(body, cp, mr, sp);
                     }
                     RtBlock::While { pred, body, .. } => {
-                        count_insts(&pred.insts, cp, mr);
-                        count(body, cp, mr);
+                        count_insts(&pred.insts, cp, mr, sp);
+                        count(body, cp, mr, sp);
                     }
                     RtBlock::FCall { .. } => *cp += 1,
                 }
             }
         }
-        let (mut cp, mut mr) = (0, 0);
-        count(&self.blocks, &mut cp, &mut mr);
+        let (mut cp, mut mr, mut sp) = (0, 0, 0);
+        count(&self.blocks, &mut cp, &mut mr, &mut sp);
         for f in self.funcs.values() {
-            count(&f.blocks, &mut cp, &mut mr);
+            count(&f.blocks, &mut cp, &mut mr, &mut sp);
         }
+        (cp, mr, sp)
+    }
+
+    /// Count (CP, MR) instructions — the `size CP/MR = 34/0` header of
+    /// Figures 2 and 3 (Spark jobs are not included; see [`Self::size3`]).
+    pub fn size(&self) -> (usize, usize) {
+        let (cp, mr, _) = self.size3();
         (cp, mr)
     }
 
     /// Total number of MR jobs in the program.
     pub fn mr_job_count(&self) -> usize {
-        self.size().1
+        self.size3().1
+    }
+
+    /// Total number of Spark jobs in the program.
+    pub fn spark_job_count(&self) -> usize {
+        self.size3().2
+    }
+
+    /// Total distributed jobs (MR + Spark) — the sweep table's job column.
+    pub fn dist_job_count(&self) -> usize {
+        let (_, mr, sp) = self.size3();
+        mr + sp
     }
 }
 
@@ -422,5 +573,79 @@ mod tests {
             recompile: false,
         });
         assert_eq!(prog.size(), (1, 1)); // rmvar not counted
+    }
+
+    #[test]
+    fn backend_labels_round_trip() {
+        for b in ExecBackend::all() {
+            assert_eq!(ExecBackend::parse(b.name()), Some(b));
+        }
+        assert_eq!(ExecBackend::parse("SPARK"), Some(ExecBackend::Spark));
+        assert_eq!(ExecBackend::parse("hadoop"), None);
+        assert_eq!(ExecBackend::default(), ExecBackend::Mr);
+    }
+
+    #[test]
+    fn spark_jobs_counted_separately() {
+        let mc = MatrixCharacteristics::new(10, 10, 10, -1);
+        let mut prog = RtProgram::default();
+        prog.blocks.push(RtBlock::Generic {
+            insts: vec![Instr::SparkJob(SparkJob {
+                inputs: vec!["X".into()],
+                broadcasts: vec![],
+                stages: vec![SparkStage {
+                    wide: false,
+                    insts: vec![MrInst { op: MrOp::Transpose, inputs: vec![0], output: 1, mc }],
+                }],
+                outputs: vec!["out".into()],
+                result_indices: vec![1],
+                num_reducers: 12,
+                replication: 1,
+            })],
+            lines: (1, 1),
+            recompile: false,
+        });
+        assert_eq!(prog.size3(), (0, 0, 1));
+        assert_eq!(prog.size(), (0, 0));
+        assert_eq!(prog.spark_job_count(), 1);
+        assert_eq!(prog.dist_job_count(), 1);
+    }
+
+    #[test]
+    fn as_mr_job_classifies_stages_by_phase() {
+        let mc = MatrixCharacteristics::new(10, 10, 10, -1);
+        let job = SparkJob {
+            inputs: vec!["X".into(), "y".into()],
+            broadcasts: vec!["y".into()],
+            stages: vec![
+                SparkStage {
+                    wide: false,
+                    insts: vec![MrInst {
+                        op: MrOp::MapMM { right_part: false },
+                        inputs: vec![0, 1],
+                        output: 2,
+                        mc,
+                    }],
+                },
+                SparkStage {
+                    wide: true,
+                    insts: vec![MrInst {
+                        op: MrOp::Agg { kahan: true },
+                        inputs: vec![2],
+                        output: 3,
+                        mc,
+                    }],
+                },
+            ],
+            outputs: vec!["out".into()],
+            result_indices: vec![3],
+            num_reducers: 12,
+            replication: 1,
+        };
+        let mr = job.as_mr_job();
+        assert_eq!(mr.map_insts.len(), 1);
+        assert_eq!(mr.agg_insts.len(), 1);
+        assert_eq!(mr.dcache, vec!["y".to_string()]);
+        assert_eq!(mr.result_indices, vec![3]);
     }
 }

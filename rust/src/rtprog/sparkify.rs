@@ -1,0 +1,291 @@
+//! Spark stage fusion — the Spark backend's counterpart to
+//! [`crate::rtprog::piggyback`].
+//!
+//! Where piggybacking packs MR operations into a *minimal number of MR
+//! jobs* (and still needs a second job for every cpmm aggregation),
+//! Spark's lazy evaluation keeps one wave of distributed operators inside
+//! a **single job**: narrow transformations (map-side ops) fuse into their
+//! producer's stage, and every wide dependency — a cpmm/rmm shuffle join
+//! or an `ak+` aggregation of partials — starts a new stage after a
+//! shuffle boundary. The result is a stage DAG ([`SparkStage`] list in
+//! topological order) triggered by one action.
+//!
+//! Byte indices follow the same scheme as [`piggyback::pack`]
+//! (inputs `0..k-1`, then primary instruction outputs in node order, then
+//! follow-up aggregation outputs), so EXPLAIN output, the cost model and
+//! the simulator shim all share one dataflow encoding.
+
+use std::collections::HashMap;
+
+use super::piggyback::{MrDep, MrNode, Phase};
+use super::*;
+
+/// Result of fusing one wave: a single Spark job plus, for every node
+/// whose output is consumed outside the wave, its variable name and
+/// characteristics (paralleling [`piggyback::Packed`]).
+pub struct SparkPacked {
+    /// The fused stage-DAG job.
+    pub job: SparkJob,
+    /// Materialised outputs: `(variable, characteristics)` per external
+    /// consumer, in node order.
+    pub materialized: Vec<(String, MatrixCharacteristics)>,
+}
+
+/// Fuse one wave of MR nodes (in topological order) into a single Spark
+/// job with shuffle-separated stages.
+pub fn fuse(nodes: &[MrNode], num_reducers: usize, replication: usize) -> SparkPacked {
+    // 1. intern job-input variables (byte indices 0..k-1); broadcast deps
+    // become torrent broadcasts instead of distributed-cache reads.
+    let mut inputs: Vec<String> = Vec::new();
+    let mut broadcasts: Vec<String> = Vec::new();
+    let mut var_idx: HashMap<String, usize> = HashMap::new();
+    for n in nodes {
+        for (k, d) in n.deps.iter().enumerate() {
+            if let MrDep::Var(name, _) = d {
+                let idx = match var_idx.get(name.as_str()) {
+                    Some(&i) => i,
+                    None => {
+                        let i = inputs.len();
+                        inputs.push(name.clone());
+                        var_idx.insert(name.clone(), i);
+                        i
+                    }
+                };
+                if n.broadcast == Some(k) && !broadcasts.contains(&inputs[idx]) {
+                    broadcasts.push(inputs[idx].clone());
+                }
+            }
+        }
+    }
+
+    // 2. stage assignment: narrow ops run in the stage their inputs become
+    // available in; shuffle/agg-phase ops and follow-up aggregations start
+    // one stage later (wide dependency). Job inputs are available at
+    // stage 0.
+    let node_pos: HashMap<usize, usize> =
+        nodes.iter().enumerate().map(|(i, n)| (n.nid, i)).collect();
+    let mut inst_stage: Vec<usize> = vec![0; nodes.len()];
+    let mut out_stage: Vec<usize> = vec![0; nodes.len()];
+    for (i, n) in nodes.iter().enumerate() {
+        let avail = n
+            .deps
+            .iter()
+            .map(|d| match d {
+                MrDep::Var(..) => 0,
+                MrDep::Node(dep) => out_stage[node_pos[dep]],
+            })
+            .max()
+            .unwrap_or(0);
+        let s = avail + usize::from(n.phase != Phase::Map);
+        inst_stage[i] = s;
+        out_stage[i] = s + usize::from(n.agg.is_some());
+    }
+
+    // 3. byte indices: primary outputs first (node order), then follow-up
+    // aggregation outputs — the piggybacking scheme.
+    let mut next_idx = inputs.len();
+    let mut node_pre_agg_idx: Vec<usize> = vec![0; nodes.len()];
+    let mut node_out_idx: Vec<usize> = vec![0; nodes.len()];
+    for i in 0..nodes.len() {
+        node_pre_agg_idx[i] = next_idx;
+        node_out_idx[i] = next_idx;
+        next_idx += 1;
+    }
+    for (i, n) in nodes.iter().enumerate() {
+        if n.agg.is_some() {
+            node_out_idx[i] = next_idx;
+            next_idx += 1;
+        }
+    }
+
+    // 4. build stage instruction lists.
+    let n_stages = nodes
+        .iter()
+        .enumerate()
+        .map(|(i, n)| inst_stage[i] + usize::from(n.agg.is_some()))
+        .max()
+        .map_or(1, |m| m + 1);
+    let mut stages: Vec<SparkStage> = (0..n_stages)
+        .map(|s| SparkStage { wide: s > 0, insts: Vec::new() })
+        .collect();
+    for (i, n) in nodes.iter().enumerate() {
+        let in_idx: Vec<usize> = n
+            .deps
+            .iter()
+            .map(|d| match d {
+                MrDep::Var(v, _) => var_idx[v.as_str()],
+                MrDep::Node(dep) => node_out_idx[node_pos[dep]],
+            })
+            .collect();
+        stages[inst_stage[i]].insts.push(MrInst {
+            op: n.op.clone(),
+            inputs: in_idx,
+            output: node_pre_agg_idx[i],
+            mc: n.mc,
+        });
+        if let Some(agg) = &n.agg {
+            stages[inst_stage[i] + 1].insts.push(MrInst {
+                op: agg.clone(),
+                inputs: vec![node_pre_agg_idx[i]],
+                output: node_out_idx[i],
+                mc: n.mc,
+            });
+        }
+    }
+
+    // A wave whose earliest distributed op is wide (e.g. a lone cpmm, or
+    // a reduce-side join of two materialised inputs) leaves stage 0
+    // unpopulated — the scan is folded into the shuffle op here — so drop
+    // empty stages rather than charging scheduling latency for them.
+    // `wide` flags are per-boundary and survive the filter.
+    let stages: Vec<SparkStage> = stages.into_iter().filter(|s| !s.insts.is_empty()).collect();
+
+    // 5. outputs: only nodes consumed outside the wave materialise (every
+    // in-wave consumer reads the fused RDD lineage instead).
+    let mut outputs = Vec::new();
+    let mut result_indices = Vec::new();
+    let mut materialized = Vec::new();
+    for (i, n) in nodes.iter().enumerate() {
+        if n.out_needed {
+            outputs.push(n.out_var.clone());
+            result_indices.push(node_out_idx[i]);
+            materialized.push((n.out_var.clone(), n.mc));
+        }
+    }
+
+    SparkPacked {
+        job: SparkJob {
+            inputs,
+            broadcasts,
+            stages,
+            outputs,
+            result_indices,
+            num_reducers,
+            replication,
+        },
+        materialized,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::MatrixCharacteristics;
+
+    fn mc(r: i64, c: i64) -> MatrixCharacteristics {
+        MatrixCharacteristics::new(r, c, 1000, -1)
+    }
+
+    fn node(nid: usize, op: MrOp, deps: Vec<MrDep>) -> MrNode {
+        MrNode {
+            nid,
+            op,
+            agg: None,
+            phase: Phase::Map,
+            job_type: JobType::Gmr,
+            replicable: false,
+            deps,
+            broadcast: None,
+            out_var: format!("_mVar{}", nid + 10),
+            mc: mc(1000, 1000),
+            out_needed: false,
+        }
+    }
+
+    fn xvar() -> MrDep {
+        MrDep::Var("X".into(), mc(100_000_000, 1000))
+    }
+
+    /// The XL1 wave (tsmm + r' + mapmm + two aggs) fuses into ONE job of
+    /// two stages: a narrow scan stage and a wide aggregation stage —
+    /// where MR piggybacking also needs one job, Spark matches it.
+    #[test]
+    fn xl1_wave_fuses_into_two_stages() {
+        let mut tsmm = node(0, MrOp::Tsmm { left: true }, vec![xvar()]);
+        tsmm.agg = Some(MrOp::Agg { kahan: true });
+        tsmm.out_needed = true;
+        let mut tr = node(1, MrOp::Transpose, vec![xvar()]);
+        tr.replicable = true;
+        let mut mapmm = node(
+            2,
+            MrOp::MapMM { right_part: true },
+            vec![MrDep::Node(1), MrDep::Var("_mVar3".into(), mc(100_000_000, 1))],
+        );
+        mapmm.agg = Some(MrOp::Agg { kahan: true });
+        mapmm.broadcast = Some(1);
+        mapmm.out_needed = true;
+        let packed = fuse(&[tsmm, tr, mapmm], 12, 1);
+        let j = &packed.job;
+        assert_eq!(j.stages.len(), 2);
+        assert!(!j.stages[0].wide);
+        assert!(j.stages[1].wide);
+        assert_eq!(j.stages[0].insts.len(), 3, "tsmm, r', mapmm fused narrow");
+        assert_eq!(j.stages[1].insts.len(), 2, "two ak+ after the shuffle");
+        assert_eq!(j.inputs, vec!["X".to_string(), "_mVar3".to_string()]);
+        assert_eq!(j.broadcasts, vec!["_mVar3".to_string()]);
+        // byte indices match the piggybacking scheme (Figure 3)
+        assert_eq!(j.stages[0].insts[0].output, 2);
+        assert_eq!(j.stages[0].insts[2].inputs, vec![3, 1]);
+        assert_eq!(j.result_indices, vec![5, 6]);
+        assert_eq!(packed.materialized.len(), 2);
+    }
+
+    /// A cpmm + follow-up aggregation needs TWO MR jobs under
+    /// piggybacking but stays a single three-stage Spark job.
+    #[test]
+    fn cpmm_chain_is_one_job_three_stages() {
+        let mut tr = node(0, MrOp::Transpose, vec![xvar()]);
+        tr.replicable = true;
+        let mut cpmm = node(1, MrOp::Cpmm, vec![MrDep::Node(0), xvar()]);
+        cpmm.phase = Phase::Shuffle;
+        cpmm.job_type = JobType::Mmcj;
+        let mut agg = node(2, MrOp::Agg { kahan: true }, vec![MrDep::Node(1)]);
+        agg.phase = Phase::Agg;
+        agg.out_needed = true;
+        let packed = fuse(&[tr, cpmm, agg], 12, 1);
+        let j = &packed.job;
+        assert_eq!(j.stages.len(), 3, "scan, shuffle-join, aggregate");
+        assert_eq!(j.stages[0].insts[0].op, MrOp::Transpose);
+        assert_eq!(j.stages[1].insts[0].op, MrOp::Cpmm);
+        assert!(matches!(j.stages[2].insts[0].op, MrOp::Agg { .. }));
+        assert_eq!(j.outputs.len(), 1, "only the final aggregate materialises");
+    }
+
+    /// A shuffle-only wave (cpmm of two materialised inputs, no map-phase
+    /// riders) must not emit an empty narrow stage 0.
+    #[test]
+    fn shuffle_only_wave_has_no_empty_stage() {
+        let mut cpmm = node(
+            0,
+            MrOp::Cpmm,
+            vec![MrDep::Var("A".into(), mc(1_000, 100_000_000)), xvar()],
+        );
+        cpmm.phase = Phase::Shuffle;
+        cpmm.job_type = JobType::Mmcj;
+        let mut agg = node(1, MrOp::Agg { kahan: true }, vec![MrDep::Node(0)]);
+        agg.phase = Phase::Agg;
+        agg.out_needed = true;
+        let packed = fuse(&[cpmm, agg], 12, 1);
+        let j = &packed.job;
+        assert_eq!(j.stages.len(), 2, "cpmm stage + agg stage, no empty scan");
+        assert!(j.stages.iter().all(|s| !s.insts.is_empty()));
+        assert!(j.stages.iter().all(|s| s.wide), "both stages follow shuffles");
+        assert_eq!(j.stages[0].insts[0].op, MrOp::Cpmm);
+    }
+
+    /// Narrow chains fuse into one stage regardless of length.
+    #[test]
+    fn narrow_chain_fuses_into_single_stage() {
+        let tr = node(0, MrOp::Transpose, vec![xvar()]);
+        let mut sc = node(
+            1,
+            MrOp::ScalarBin { op: BinOp::Mul, scalar: 2.0, scalar_var: None, scalar_left: false },
+            vec![MrDep::Node(0)],
+        );
+        sc.out_needed = true;
+        let packed = fuse(&[tr, sc], 12, 1);
+        assert_eq!(packed.job.stages.len(), 1);
+        assert_eq!(packed.job.stages[0].insts.len(), 2);
+        assert_eq!(packed.materialized.len(), 1);
+    }
+}

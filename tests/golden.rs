@@ -1,0 +1,104 @@
+//! Golden-output tests for `repro explain` on the LinReg CG script, one
+//! snapshot per execution backend (CP, MR, Spark), under `tests/golden/`.
+//!
+//! Each test renders the runtime EXPLAIN twice (asserting in-process
+//! determinism), normalises the process-id scratch path, and compares
+//! against the checked-in snapshot. A missing snapshot is written on
+//! first run (bless-on-first-run), so regenerating after an intentional
+//! plan change is `rm tests/golden/*.txt && cargo test --test golden`.
+
+use std::path::PathBuf;
+
+use systemds::api::{
+    compile_with_meta, linreg_cg_args, CompileOptions, ExecBackend, Scenario, LINREG_CG,
+};
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../tests/golden")
+}
+
+/// The scratch path embeds the process id (`scratch_space//_p1234//`);
+/// normalise it so snapshots are stable across runs.
+fn normalize(text: &str) -> String {
+    let mut out = String::with_capacity(text.len());
+    let mut rest = text;
+    while let Some(pos) = rest.find("//_p") {
+        let (head, tail) = rest.split_at(pos + 4);
+        out.push_str(head);
+        out.push_str("PID");
+        rest = tail.trim_start_matches(|c: char| c.is_ascii_digit());
+    }
+    out.push_str(rest);
+    out
+}
+
+fn explain_cg(backend: ExecBackend) -> String {
+    let opts = CompileOptions { backend, ..Default::default() };
+    let s = Scenario::xl1();
+    let compiled = compile_with_meta(
+        LINREG_CG,
+        &linreg_cg_args(20),
+        &s.meta(opts.cfg.blocksize),
+        &opts,
+    )
+    .expect("LinReg CG compiles");
+    compiled.explain_runtime()
+}
+
+fn check_golden(backend: ExecBackend) {
+    let first = normalize(&explain_cg(backend));
+    let second = normalize(&explain_cg(backend));
+    assert_eq!(first, second, "{}: EXPLAIN must be deterministic", backend.name());
+
+    let dir = golden_dir();
+    let path = dir.join(format!("explain_linreg_cg_{}.txt", backend.name()));
+    if !path.exists() {
+        std::fs::create_dir_all(&dir).expect("create tests/golden");
+        std::fs::write(&path, &first).expect("write golden snapshot");
+        eprintln!("blessed new golden snapshot: {}", path.display());
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).expect("read golden snapshot");
+    assert_eq!(
+        first,
+        expected,
+        "{}: EXPLAIN diverged from {} — delete the snapshot and re-run to re-bless",
+        backend.name(),
+        path.display()
+    );
+}
+
+#[test]
+fn golden_explain_linreg_cg_cp() {
+    check_golden(ExecBackend::Cp);
+}
+
+#[test]
+fn golden_explain_linreg_cg_mr() {
+    check_golden(ExecBackend::Mr);
+}
+
+#[test]
+fn golden_explain_linreg_cg_spark() {
+    check_golden(ExecBackend::Spark);
+}
+
+/// Structural pins that hold regardless of snapshot state: the three
+/// backends produce visibly different plan families for the same script.
+#[test]
+fn backend_explains_are_structurally_distinct() {
+    let cp = explain_cg(ExecBackend::Cp);
+    let mr = explain_cg(ExecBackend::Mr);
+    let spark = explain_cg(ExecBackend::Spark);
+    assert!(!cp.contains("MR-Job[") && !cp.contains("SPARK-Job["), "{cp}");
+    assert!(mr.contains("MR-Job["), "{mr}");
+    assert!(!mr.contains("SPARK-Job["), "{mr}");
+    assert!(spark.contains("SPARK-Job["), "{spark}");
+    assert!(!spark.contains("MR-Job["), "{spark}");
+    assert!(spark.contains("size CP/MR/SPARK ="), "{spark}");
+    // the CG loop compiled with its literal trip count on every backend
+    for text in [&cp, &mr, &spark] {
+        assert!(text.contains("FOR ("), "{text}");
+        assert!(text.contains("iterations=20"), "{text}");
+    }
+}

@@ -1,0 +1,145 @@
+//! Direct coverage for the piggybacking packer
+//! (`rtprog/piggyback.rs`): independent MR operations merge into one
+//! job, dependent operations split across jobs, and instruction order /
+//! byte indices are preserved — pinning the MR path while the Spark
+//! backend evolves beside it.
+
+use systemds::ir::BinOp;
+use systemds::matrix::MatrixCharacteristics;
+use systemds::rtprog::piggyback::{pack, MrDep, MrNode, Phase};
+use systemds::rtprog::{JobType, MrOp};
+
+fn mc(r: i64, c: i64) -> MatrixCharacteristics {
+    MatrixCharacteristics::new(r, c, 1000, -1)
+}
+
+fn node(nid: usize, op: MrOp, deps: Vec<MrDep>) -> MrNode {
+    MrNode {
+        nid,
+        op,
+        agg: None,
+        phase: Phase::Map,
+        job_type: JobType::Gmr,
+        replicable: false,
+        deps,
+        broadcast: None,
+        out_var: format!("_mVar{}", nid + 10),
+        mc: mc(1000, 1000),
+        out_needed: true,
+    }
+}
+
+/// Two independent map-side operations over *different* inputs still
+/// merge into a single GMR job (the shared job reads several inputs).
+#[test]
+fn independent_ops_merge_into_one_job() {
+    let a = node(0, MrOp::Transpose, vec![MrDep::Var("X".into(), mc(100_000_000, 1000))]);
+    let b = node(1, MrOp::Transpose, vec![MrDep::Var("Y".into(), mc(50_000_000, 1000))]);
+    let packed = pack(&[a, b], 12, 1);
+    assert_eq!(packed.jobs.len(), 1, "independent map ops share one job");
+    let j = &packed.jobs[0];
+    assert_eq!(j.inputs, vec!["X".to_string(), "Y".to_string()]);
+    assert_eq!(j.map_insts.len(), 2);
+    assert_eq!(j.outputs.len(), 2);
+}
+
+/// Three independent aggregated pipelines merge: one job, three inputs,
+/// three map instructions, three aggregations.
+#[test]
+fn independent_aggregated_pipelines_share_one_job() {
+    let mut nodes = Vec::new();
+    for (i, name) in ["A", "B", "C"].iter().enumerate() {
+        let mut n = node(
+            i,
+            MrOp::Tsmm { left: true },
+            vec![MrDep::Var(name.to_string(), mc(10_000_000, 500))],
+        );
+        n.agg = Some(MrOp::Agg { kahan: true });
+        nodes.push(n);
+    }
+    let packed = pack(&nodes, 12, 1);
+    assert_eq!(packed.jobs.len(), 1);
+    let j = &packed.jobs[0];
+    assert_eq!(j.map_insts.len(), 3);
+    assert_eq!(j.agg_insts.len(), 3);
+    assert_eq!(j.outputs.len(), 3);
+}
+
+/// An operation consuming another's *aggregated* output cannot ride the
+/// same job: the dependency forces a second job reading the
+/// materialised intermediate.
+#[test]
+fn dependent_ops_split_across_jobs() {
+    let mut producer = node(0, MrOp::Tsmm { left: true }, vec![MrDep::Var(
+        "X".into(),
+        mc(100_000_000, 1000),
+    )]);
+    producer.agg = Some(MrOp::Agg { kahan: true });
+    let consumer = node(
+        1,
+        MrOp::ScalarBin { op: BinOp::Mul, scalar: 3.0, scalar_var: None, scalar_left: false },
+        vec![MrDep::Node(0)],
+    );
+    let packed = pack(&[producer, consumer], 12, 1);
+    assert_eq!(packed.jobs.len(), 2, "aggregated output forces a job break");
+    // the first job materialises the intermediate the second reads
+    assert_eq!(packed.jobs[0].outputs.len(), 1);
+    assert!(
+        packed.jobs[1].inputs.contains(&packed.jobs[0].outputs[0]),
+        "second job must read the first job's output"
+    );
+    // and the dependency never runs before its producer
+    assert!(packed.jobs[0].all_insts().any(|i| matches!(i.op, MrOp::Tsmm { .. })));
+    assert!(packed.jobs[1].all_insts().any(|i| matches!(i.op, MrOp::ScalarBin { .. })));
+}
+
+/// A shuffle operation (cpmm) and an independent map operation do NOT
+/// merge: shuffle nodes open their own MMCJ job.
+#[test]
+fn shuffle_nodes_get_their_own_job() {
+    let mut cpmm = node(
+        0,
+        MrOp::Cpmm,
+        vec![
+            MrDep::Var("A".into(), mc(1_000, 100_000_000)),
+            MrDep::Var("B".into(), mc(100_000_000, 1000)),
+        ],
+    );
+    cpmm.phase = Phase::Shuffle;
+    cpmm.job_type = JobType::Mmcj;
+    let other = node(1, MrOp::Transpose, vec![MrDep::Var("C".into(), mc(10_000, 1000))]);
+    let packed = pack(&[cpmm, other], 12, 1);
+    assert_eq!(packed.jobs.len(), 2);
+    assert_eq!(packed.jobs[0].job_type, JobType::Mmcj);
+    assert_eq!(packed.jobs[1].job_type, JobType::Gmr);
+}
+
+/// Instruction order inside a job follows the node (topological) order,
+/// and byte indices are assigned inputs-first then outputs in order.
+#[test]
+fn instruction_order_and_byte_indices_preserved() {
+    let x = || MrDep::Var("X".into(), mc(100_000_000, 1000));
+    let first = node(0, MrOp::Transpose, vec![x()]);
+    let second = node(
+        1,
+        MrOp::ScalarBin { op: BinOp::Mul, scalar: 2.0, scalar_var: None, scalar_left: false },
+        vec![MrDep::Node(0)],
+    );
+    let third = node(
+        2,
+        MrOp::ScalarBin { op: BinOp::Add, scalar: 1.0, scalar_var: None, scalar_left: false },
+        vec![MrDep::Node(1)],
+    );
+    let packed = pack(&[first, second, third], 12, 1);
+    assert_eq!(packed.jobs.len(), 1, "narrow map chain shares one job");
+    let j = &packed.jobs[0];
+    let codes: Vec<String> = j.map_insts.iter().map(|i| i.op.code()).collect();
+    assert_eq!(codes, vec!["r'", "s*", "s+"], "topological order preserved");
+    // byte indices: input 0, then outputs 1, 2, 3 chained in order
+    assert_eq!(j.map_insts[0].inputs, vec![0]);
+    assert_eq!(j.map_insts[0].output, 1);
+    assert_eq!(j.map_insts[1].inputs, vec![1]);
+    assert_eq!(j.map_insts[1].output, 2);
+    assert_eq!(j.map_insts[2].inputs, vec![2]);
+    assert_eq!(j.map_insts[2].output, 3);
+}

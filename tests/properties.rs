@@ -4,7 +4,7 @@
 
 use std::collections::HashSet;
 
-use systemds::api::{compile_with_meta, CompileOptions, Scenario, LINREG_DS};
+use systemds::api::{compile_with_meta, CompileOptions, ExecBackend, Scenario, LINREG_DS};
 use systemds::conf::{ClusterConfig, CostConstants, SystemConfig, MB};
 use systemds::cost;
 use systemds::ir::build::StaticMeta;
@@ -21,12 +21,22 @@ fn random_scenario(r: &mut Rng) -> (i64, i64, f64) {
 }
 
 fn compile_random(rows: i64, cols: i64, heap_mb: f64) -> (RtProgram, CompileOptions) {
+    compile_random_backend(rows, cols, heap_mb, ExecBackend::Mr)
+}
+
+fn compile_random_backend(
+    rows: i64,
+    cols: i64,
+    heap_mb: f64,
+    backend: ExecBackend,
+) -> (RtProgram, CompileOptions) {
     let mut cc = ClusterConfig::paper_cluster();
     cc.cp_heap_bytes = heap_mb * MB;
     cc.map_heap_bytes = heap_mb * MB;
     let opts = CompileOptions {
         cc: systemds::api::ClusterConfigOpt(cc),
         cfg: SystemConfig::default(),
+        backend,
         ..Default::default()
     };
     let meta = StaticMeta::default()
@@ -78,9 +88,13 @@ fn prop_mr_job_labels_are_defined_before_use() {
     forall(
         40,
         0xA11CE,
-        |r| random_scenario(r),
-        |&(rows, cols, heap)| {
-            let (rt, _) = compile_random(rows, cols, heap);
+        |r| {
+            let (rows, cols, heap) = random_scenario(r);
+            let backend = [ExecBackend::Mr, ExecBackend::Spark][r.below(2) as usize];
+            (rows, cols, heap, backend)
+        },
+        |&(rows, cols, heap, backend)| {
+            let (rt, _) = compile_random_backend(rows, cols, heap, backend);
             let mut defined: HashSet<String> = HashSet::new();
             for inst in all_insts(&rt) {
                 match inst {
@@ -107,6 +121,18 @@ fn prop_mr_job_labels_are_defined_before_use() {
                         for v in &j.outputs {
                             if !defined.contains(v) {
                                 return Err(format!("job output '{v}' lacks createvar"));
+                            }
+                        }
+                    }
+                    Instr::SparkJob(j) => {
+                        for v in &j.inputs {
+                            if !defined.contains(v) {
+                                return Err(format!("spark input '{v}' undefined"));
+                            }
+                        }
+                        for v in &j.outputs {
+                            if !defined.contains(v) {
+                                return Err(format!("spark output '{v}' lacks createvar"));
                             }
                         }
                     }
@@ -241,6 +267,135 @@ fn prop_more_memory_never_more_jobs() {
     );
 }
 
+/// For every backend: costs are finite, strictly positive and
+/// deterministic on random scenario sizes and heap configurations.
+#[test]
+fn prop_backend_costs_finite_and_positive() {
+    forall(
+        30,
+        0x5AA5,
+        |r| {
+            let (rows, cols, heap) = random_scenario(r);
+            (rows, cols, heap)
+        },
+        |&(rows, cols, heap)| {
+            let k = CostConstants::default();
+            for backend in ExecBackend::all() {
+                let (rt, o) = compile_random_backend(rows, cols, heap, backend);
+                let a = cost::cost_program(&rt, &o.cfg, &o.cc.0, &k).total;
+                let b = cost::cost_program(&rt, &o.cfg, &o.cc.0, &k).total;
+                if !(a.is_finite() && a > 0.0) {
+                    return Err(format!("{}: non-positive cost {a}", backend.name()));
+                }
+                if a != b {
+                    return Err(format!("{}: nondeterministic {a} vs {b}", backend.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// For every backend: cost is monotone non-decreasing in the matrix
+/// dimensions at a fixed cluster configuration, as long as the plan
+/// family is stable (equal distributed-job counts; around plan flips the
+/// greedy per-operator selection can legitimately produce cheaper plans
+/// for bigger inputs — see `prop_cost_monotone_in_rows`). The CP backend
+/// never flips, so it is always monotone.
+#[test]
+fn prop_backend_cost_monotone_in_dims() {
+    forall(
+        20,
+        0xB00C,
+        |r| {
+            let cols = r.range_i64(1, 20) * 100;
+            let rows = r.range_i64(1, 50) * 100_000;
+            (rows, cols)
+        },
+        |&(rows, cols)| {
+            let k = CostConstants::default();
+            for backend in ExecBackend::all() {
+                let (rt1, o1) = compile_random_backend(rows, cols, 2048.0, backend);
+                let (rt2, o2) = compile_random_backend(rows * 4, cols, 2048.0, backend);
+                let c1 = cost::cost_program(&rt1, &o1.cfg, &o1.cc.0, &k).total;
+                let c2 = cost::cost_program(&rt2, &o2.cfg, &o2.cc.0, &k).total;
+                let stable = rt1.dist_job_count() == rt2.dist_job_count();
+                if stable && c2 < c1 * 0.99 {
+                    return Err(format!(
+                        "{}: 4x rows got cheaper with a stable plan: {c1} -> {c2}",
+                        backend.name()
+                    ));
+                }
+                if !stable && c2 < c1 * 0.2 {
+                    return Err(format!(
+                        "{}: plan flip but 5x cheaper: {c1} -> {c2}",
+                        backend.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Spark job latency is below MR job latency for the identical
+/// single-job plan (the XL1-shaped wave, across data sizes that keep a
+/// single fused GMR/Spark job).
+#[test]
+fn prop_spark_job_latency_below_mr() {
+    for rows in [50_000_000i64, 100_000_000, 150_000_000] {
+        let k = CostConstants::default();
+        let (mr_rt, mo) = compile_random_backend(rows, 1_000, 2048.0, ExecBackend::Mr);
+        let (sp_rt, so) = compile_random_backend(rows, 1_000, 2048.0, ExecBackend::Spark);
+        assert_eq!(mr_rt.mr_job_count(), 1, "rows={rows}: single MR job expected");
+        assert_eq!(sp_rt.spark_job_count(), 1, "rows={rows}: single Spark job expected");
+        let mr_report = cost::cost_program(&mr_rt, &mo.cfg, &mo.cc.0, &k);
+        let sp_report = cost::cost_program(&sp_rt, &so.cfg, &so.cc.0, &k);
+        let mr_latency = find_mr_latency(&mr_report.nodes).expect("MR job breakdown");
+        let sp_latency = find_spark_latency(&sp_report.nodes).expect("Spark job breakdown");
+        assert!(
+            sp_latency < mr_latency,
+            "rows={rows}: spark latency {sp_latency} !< mr latency {mr_latency}"
+        );
+    }
+}
+
+fn find_mr_latency(nodes: &[cost::CostNode]) -> Option<f64> {
+    for n in nodes {
+        match n {
+            cost::CostNode::Block { children, .. } => {
+                if let Some(l) = find_mr_latency(children) {
+                    return Some(l);
+                }
+            }
+            cost::CostNode::Inst { cost, .. } => {
+                if let Some(m) = &cost.mr {
+                    return Some(m.latency);
+                }
+            }
+        }
+    }
+    None
+}
+
+fn find_spark_latency(nodes: &[cost::CostNode]) -> Option<f64> {
+    for n in nodes {
+        match n {
+            cost::CostNode::Block { children, .. } => {
+                if let Some(l) = find_spark_latency(children) {
+                    return Some(l);
+                }
+            }
+            cost::CostNode::Inst { cost, .. } => {
+                if let Some(s) = &cost.spark {
+                    return Some(s.latency);
+                }
+            }
+        }
+    }
+    None
+}
+
 /// rmvar never removes a variable still used afterwards in the block.
 #[test]
 fn prop_rmvar_after_last_use() {
@@ -261,6 +416,7 @@ fn prop_rmvar_after_last_use() {
                             .filter_map(|o| o.name().map(str::to_string))
                             .collect(),
                         Instr::MrJob(j) => j.inputs.clone(),
+                        Instr::SparkJob(j) => j.inputs.clone(),
                         Instr::CpVar { src, .. } => vec![src.clone()],
                         _ => vec![],
                     };

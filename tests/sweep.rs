@@ -4,7 +4,7 @@
 //! property (a strictly larger scenario never costs less while the plan
 //! shape is stable).
 
-use systemds::api::{self, DataScenario, NamedCluster, SweepSpec};
+use systemds::api::{self, DataScenario, ExecBackend, NamedCluster, SweepSpec};
 use systemds::conf::{ClusterConfig, MB};
 use systemds::opt::sweep::{heap_clock_clusters, sweep, sweep_serial};
 use systemds::util::prop::forall;
@@ -123,6 +123,105 @@ fn prop_larger_scenario_never_costs_less() {
             }
         },
     );
+}
+
+/// The backend-axis grid for the iterative LinReg CG script: one cluster,
+/// all three backends, a small and a paper-scale scenario.
+fn backend_grid() -> SweepSpec {
+    let mut spec = SweepSpec::linreg_cg(20);
+    spec.clusters = vec![NamedCluster::new("paper-2048MB", ClusterConfig::paper_cluster())];
+    spec.scenarios = vec![
+        DataScenario::linreg("XS", 10_000, 1_000),
+        DataScenario::linreg("XL1", 100_000_000, 1_000),
+    ];
+    spec.backends = ExecBackend::all().to_vec();
+    spec.threads = 4;
+    spec
+}
+
+fn cell_cost(r: &api::SweepReport, scenario: &str, backend: &str) -> f64 {
+    r.cells
+        .iter()
+        .find(|c| c.scenario == scenario && c.backend == backend)
+        .unwrap_or_else(|| panic!("missing cell {scenario}/{backend}"))
+        .cost_secs
+}
+
+/// Acceptance regime 1: Spark beats MR on multi-iteration loops — every
+/// CG iteration submits distributed jobs, and the 20 s MR job latency
+/// dominates where Spark's ~1 s submission does not (Kaoudi et al. 2017).
+#[test]
+fn spark_beats_mr_on_iterative_loops() {
+    let r = sweep(&backend_grid()).unwrap();
+    let spark = cell_cost(&r, "XL1", "spark");
+    let mr = cell_cost(&r, "XL1", "mr");
+    assert!(
+        spark < mr,
+        "latency-dominated loop: spark {spark} must beat mr {mr}"
+    );
+    // and the margin is structural, not noise: MR pays at least one
+    // 20 s job submission per iteration that Spark does not
+    assert!(mr - spark > 100.0, "spark {spark} vs mr {mr}");
+}
+
+/// Acceptance regime 2: CP wins when the data fits the heap. The 80 MB
+/// XS scenario compiles to the identical pure-CP plan on all three
+/// backends (the hybrid backends agree nothing needs distribution), and
+/// the deterministic tie-break ranks the single-node backend first.
+#[test]
+fn cp_wins_when_data_fits_heap() {
+    let r = sweep(&backend_grid()).unwrap();
+    let cp = cell_cost(&r, "XS", "cp");
+    assert!(cp <= cell_cost(&r, "XS", "mr"));
+    assert!(cp <= cell_cost(&r, "XS", "spark"));
+    let first = r.ranked().next().unwrap();
+    assert_eq!(first.scenario, "XS");
+    assert_eq!(first.backend, "cp", "single-node backend ranks first on ties");
+}
+
+/// Acceptance regime 3: single-node execution loses badly once the data
+/// outgrows the heap — the distributed backends win XL1 outright.
+#[test]
+fn cp_loses_when_data_outgrows_heap() {
+    let r = sweep(&backend_grid()).unwrap();
+    let cp = cell_cost(&r, "XL1", "cp");
+    assert!(cell_cost(&r, "XL1", "spark") < cp);
+    assert!(cell_cost(&r, "XL1", "mr") < cp);
+}
+
+/// Sweep determinism with the backend axis enabled: 1 worker thread and
+/// N worker threads produce bit-identical ranked tables.
+#[test]
+fn backend_sweep_identical_across_thread_counts() {
+    let mut one = backend_grid();
+    one.threads = 1;
+    let mut many = backend_grid();
+    many.threads = 8;
+    let a = sweep(&one).unwrap();
+    let b = sweep(&many).unwrap();
+    assert_eq!(a.table(), b.table(), "1 vs 8 threads must agree");
+    assert_eq!(a.ranking, b.ranking);
+    for (ca, cb) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(ca.cost_secs.to_bits(), cb.cost_secs.to_bits());
+        assert_eq!(ca.backend, cb.backend);
+        assert_eq!((ca.mr_jobs, ca.spark_jobs), (cb.mr_jobs, cb.spark_jobs));
+    }
+    // the serial reference agrees too
+    let s = sweep_serial(&one).unwrap();
+    assert_eq!(a.table(), s.table());
+}
+
+/// The ranked table carries the backend column and one row per cell.
+#[test]
+fn backend_table_shape() {
+    let r = sweep(&backend_grid()).unwrap();
+    assert_eq!(r.cells.len(), 6);
+    let table = r.table();
+    assert_eq!(table.lines().count(), 2 + r.cells.len(), "{table}");
+    assert!(table.contains("backend"), "{table}");
+    for b in ["cp", "mr", "spark"] {
+        assert!(table.contains(b), "{table}");
+    }
 }
 
 #[test]
