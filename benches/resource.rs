@@ -1,0 +1,76 @@
+//! Bench R1 (tentpole): the parallel, plan-memoizing, floor-pruning
+//! grid resource optimizer vs a serial, unpruned evaluation of the same
+//! joint space — the paper-§1 resource-optimization consumer, scaled to
+//! a heap × executor-memory × nodes × k_local × backend grid.
+//!
+//! Uses the in-repo fixed-budget harness (criterion is unavailable in
+//! the hermetic offline build; see rust/Cargo.toml).
+
+use std::time::Duration;
+
+use systemds::api::{DataScenario, ResourceGrid, Scenario, LINREG_DS};
+use systemds::opt::resource::optimize_grid;
+use systemds::util::bench::Bencher;
+use systemds::util::par;
+
+/// A wide joint grid on the XL1 scenario: 6 heaps × 2 executor
+/// memories × 2 node counts × 2 k_local values × 3 backends.
+fn wide_grid(threads: usize, prune: bool) -> ResourceGrid {
+    let s = Scenario::xl1();
+    let mut g = ResourceGrid::new(LINREG_DS, s.args(), DataScenario::from(&s));
+    g.heaps_mb = vec![256.0, 512.0, 1024.0, 2048.0, 4096.0, 8192.0];
+    g.threads = threads;
+    g.prune = prune;
+    g
+}
+
+fn main() {
+    let threads = par::default_threads();
+    let grid = wide_grid(threads, true);
+    println!(
+        "== resource grid: {} points (6 heaps x 2 exec-mems x 2 node-counts x 2 k_locals x 3 backends), {} worker threads ==",
+        grid.point_count(),
+        threads
+    );
+    let report = optimize_grid(&grid).expect("grid");
+    println!("{}", report.summary());
+    println!(
+        "-> compile+cost invocations: {} of {} points ({} memoized, {} pruned)",
+        report.distinct_plans,
+        grid.point_count(),
+        report.memo_hits,
+        report.pruned
+    );
+
+    let mut b = Bencher::new().with_budget(Duration::from_millis(300), Duration::from_secs(3));
+    let par_stats = b
+        .bench(&format!("parallel grid ({threads} threads, memoized + pruned)"), || {
+            optimize_grid(&wide_grid(threads, true)).unwrap().points.len()
+        })
+        .clone();
+    let ser_stats = b
+        .bench("serial grid (1 thread, no pruning)", || {
+            optimize_grid(&wide_grid(1, false)).unwrap().points.len()
+        })
+        .clone();
+
+    let speedup = ser_stats.median.as_secs_f64() / par_stats.median.as_secs_f64().max(1e-12);
+    println!(
+        "\n-> parallel+pruned grid is {speedup:.2}x the serial unpruned evaluation ({} vs {})",
+        systemds::util::bench::fmt_dur(par_stats.median),
+        systemds::util::bench::fmt_dur(ser_stats.median),
+    );
+    if speedup > 1.0 {
+        println!("-> PARALLEL WINS");
+    } else {
+        println!("-> parallel did not win on this machine/grid");
+    }
+
+    println!("\n-- Pareto frontier --");
+    print!("{}", report.frontier_table());
+    println!(
+        "best: {} ({})",
+        report.best().label(),
+        systemds::util::fmt::fmt_secs(report.best().cost_secs.unwrap_or(f64::NAN))
+    );
+}

@@ -1,14 +1,17 @@
 //! Resource-optimization use case (paper §1): sweep memory budgets,
 //! recompile + cost the generated plans under each, and report the
-//! cost-vs-resources frontier. Plan shape flips (MR → hybrid → CP) as the
-//! budget crosses operator memory estimates — the reason a plan-level
-//! analytical cost model is required.
+//! cost-vs-resources trade-off. Plan shape flips (MR → hybrid → CP) as
+//! the budget crosses operator memory estimates — the reason a
+//! plan-level analytical cost model is required.
+//!
+//! Shows both the legacy single-axis heap sweep and the joint grid
+//! optimizer with its (budget, time) Pareto frontier.
 //!
 //! ```sh
 //! cargo run --release --example resource_opt
 //! ```
 
-use systemds::api::Scenario;
+use systemds::api::{optimize_resources, DataScenario, ResourceGrid, Scenario};
 use systemds::conf::{ClusterConfig, MB};
 use systemds::opt::{compare, resource};
 
@@ -25,7 +28,7 @@ fn main() {
         )
         .expect("sweep");
         println!("{:>10} {:>8} {:>14}", "heap", "MR jobs", "est. cost");
-        for p in &choice.frontier {
+        for p in &choice.points {
             let marker = if p.heap_bytes == choice.best.heap_bytes { "  <= best" } else { "" };
             println!(
                 "{:>8}MB {:>8} {:>13.1}s{marker}",
@@ -37,9 +40,23 @@ fn main() {
         println!();
     }
 
+    // the joint grid: heap x executor-memory x nodes x k_local x backend,
+    // memoized + pruned, reported as a Pareto frontier
+    println!("=== grid resource optimizer, scenario XL1 (joint axes) ===");
+    let s = Scenario::xl1();
+    let grid = ResourceGrid::new(s.script(), s.args(), DataScenario::from(&s));
+    let report = optimize_resources(&grid).expect("grid");
+    print!("{}", report.frontier_table());
+    println!(
+        "best: {} ({:.1}s)\n{}",
+        report.best().label(),
+        report.best().cost_secs.unwrap_or(f64::NAN),
+        report.summary()
+    );
+    println!();
+
     // global plan comparison: what would forcing each physical operator cost?
     println!("=== plan alternatives, scenario XL1 (ablation of §2 choices) ===");
-    let s = Scenario::xl1();
     let alts = compare::compare_plans(
         s.script(),
         &s.args(),

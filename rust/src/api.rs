@@ -18,6 +18,7 @@ use crate::lop::SelectionHints;
 use crate::matrix::{Format, MatrixCharacteristics};
 use crate::rtprog::{self, RtProgram};
 
+pub use crate::opt::resource::{GridPoint, ResourceGrid, ResourceReport};
 pub use crate::opt::sweep::{DataScenario, NamedCluster, SweepCell, SweepReport, SweepSpec};
 pub use crate::rtprog::ExecBackend;
 
@@ -28,6 +29,18 @@ pub use crate::rtprog::ExecBackend;
 /// [`crate::opt::sweep::sweep`]; see that module for the pipeline.
 pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
     crate::opt::sweep::sweep(spec)
+}
+
+/// Run the parallel grid resource optimizer: enumerate the joint
+/// heap × executor-memory × nodes × `k_local` × backend space, compile
+/// once per distinct plan shape (plan-signature memoization shared with
+/// [`sweep`]), prune dominated points via the persistent-read IO floor,
+/// and return the cost-argmin configuration plus the (resource budget,
+/// estimated time) Pareto frontier. Thin wrapper around
+/// [`crate::opt::resource::optimize_grid`]; see that module for the
+/// wave pipeline and the budget semantics.
+pub fn optimize_resources(grid: &ResourceGrid) -> Result<ResourceReport, String> {
+    crate::opt::resource::optimize_grid(grid)
 }
 
 /// Compilation options: system config + cluster characteristics + hints +

@@ -104,6 +104,85 @@ impl ClusterConfig {
         }
     }
 
+    /// Reject configurations the cost model cannot price: a zero or
+    /// non-finite heap poisons every memory-budget ratio with NaN (the
+    /// historical `spark_executor_mem / cp_heap` division), `k_local == 0`
+    /// turns the parfor weight `⌈N̂/k_l⌉` into `inf`, and zero node/slot
+    /// counts break the §3.3 parallelism corrections. Called by every
+    /// optimizer/sweep entry point ([`crate::opt`]) before compiling, so a
+    /// degenerate configuration becomes a diagnostic instead of NaN-ranked
+    /// results or a panic.
+    pub fn validate(&self) -> Result<(), String> {
+        let pos = |name: &str, v: f64| {
+            if v.is_finite() && v > 0.0 {
+                Ok(())
+            } else {
+                Err(format!("invalid ClusterConfig: {name} must be finite and > 0, got {v}"))
+            }
+        };
+        pos("cp_heap_bytes", self.cp_heap_bytes)?;
+        pos("map_heap_bytes", self.map_heap_bytes)?;
+        pos("reduce_heap_bytes", self.reduce_heap_bytes)?;
+        pos("spark_executor_mem_bytes", self.spark_executor_mem_bytes)?;
+        pos("hdfs_block_bytes", self.hdfs_block_bytes)?;
+        pos("yarn_mem_per_node", self.yarn_mem_per_node)?;
+        pos("clock_hz", self.clock_hz)?;
+        let nonzero = |name: &str, v: usize| {
+            if v > 0 {
+                Ok(())
+            } else {
+                Err(format!("invalid ClusterConfig: {name} must be >= 1, got 0"))
+            }
+        };
+        nonzero("k_local", self.k_local)?;
+        nonzero("k_map", self.k_map)?;
+        nonzero("k_reduce", self.k_reduce)?;
+        nonzero("nodes", self.nodes)?;
+        nonzero("vcores_per_node", self.vcores_per_node)?;
+        nonzero("spark_executors", self.spark_executors)?;
+        nonzero("spark_executor_cores", self.spark_executor_cores)?;
+        Ok(())
+    }
+
+    /// Grid axis: set the client *and* per-task heaps to `mb` megabytes
+    /// (the resource optimizer's joint heap axis — plan shape follows the
+    /// §2 memory budgets derived from these).
+    pub fn with_heap_mb(mut self, mb: f64) -> Self {
+        self.cp_heap_bytes = mb * MB;
+        self.map_heap_bytes = mb * MB;
+        self.reduce_heap_bytes = mb * MB;
+        self
+    }
+
+    /// Grid axis: set the Spark executor heap to `mb` megabytes (drives
+    /// broadcast feasibility — the `mapmm` vs `cpmm` flip — on the Spark
+    /// backend; cost-/shape-neutral for CP and MR plans).
+    pub fn with_executor_mem_mb(mut self, mb: f64) -> Self {
+        self.spark_executor_mem_bytes = mb * MB;
+        self
+    }
+
+    /// Grid axis: scale the cluster to `nodes` worker nodes, keeping the
+    /// per-node geometry: map/reduce slots and Spark executors scale
+    /// proportionally from the current node count. Cost-only — node
+    /// counts never change plan shape (see the sweep plan signature).
+    pub fn with_nodes(mut self, nodes: usize) -> Self {
+        let nodes = nodes.max(1);
+        let scale = nodes as f64 / self.nodes.max(1) as f64;
+        self.k_map = ((self.k_map as f64 * scale).round() as usize).max(1);
+        self.k_reduce = ((self.k_reduce as f64 * scale).round() as usize).max(1);
+        self.spark_executors = ((self.spark_executors as f64 * scale).round() as usize).max(1);
+        self.nodes = nodes;
+        self
+    }
+
+    /// Grid axis: set the control program's degree of parallelism `k_l`
+    /// (the §3.3 parfor divisor). Cost-only, never changes plan shape.
+    pub fn with_k_local(mut self, k_local: usize) -> Self {
+        self.k_local = k_local.max(1);
+        self
+    }
+
     /// Total Spark task slots: executors × cores per executor.
     pub fn k_spark(&self) -> usize {
         (self.spark_executors * self.spark_executor_cores).max(1)
@@ -291,6 +370,50 @@ impl Default for CostConstants {
     }
 }
 
+impl CostConstants {
+    /// Reject constants the model cannot divide by: a zero or non-finite
+    /// bandwidth (e.g. a disk bandwidth of 0 B/s) turns every IO term
+    /// into `inf`/NaN, which then poisons cost ranking. Latencies must be
+    /// finite and non-negative. Called alongside
+    /// [`ClusterConfig::validate`] at the optimizer/sweep entry points.
+    pub fn validate(&self) -> Result<(), String> {
+        let bw = |name: &str, v: f64| {
+            if v.is_finite() && v > 0.0 {
+                Ok(())
+            } else {
+                Err(format!("invalid CostConstants: bandwidth {name} must be finite and > 0, got {v}"))
+            }
+        };
+        bw("hdfs_read_binaryblock", self.hdfs_read_binaryblock)?;
+        bw("hdfs_read_text", self.hdfs_read_text)?;
+        bw("hdfs_write_binaryblock", self.hdfs_write_binaryblock)?;
+        bw("hdfs_write_text", self.hdfs_write_text)?;
+        bw("local_read", self.local_read)?;
+        bw("local_write", self.local_write)?;
+        bw("dcache_read", self.dcache_read)?;
+        bw("shuffle_bw", self.shuffle_bw)?;
+        bw("mem_bw", self.mem_bw)?;
+        bw("spark_shuffle_write", self.spark_shuffle_write)?;
+        bw("spark_shuffle_read", self.spark_shuffle_read)?;
+        bw("spark_broadcast_bw", self.spark_broadcast_bw)?;
+        bw("dop_scale", self.dop_scale)?;
+        let lat = |name: &str, v: f64| {
+            if v.is_finite() && v >= 0.0 {
+                Ok(())
+            } else {
+                Err(format!("invalid CostConstants: latency {name} must be finite and >= 0, got {v}"))
+            }
+        };
+        lat("job_latency", self.job_latency)?;
+        lat("task_latency", self.task_latency)?;
+        lat("bookkeeping", self.bookkeeping)?;
+        lat("spark_job_latency", self.spark_job_latency)?;
+        lat("spark_stage_latency", self.spark_stage_latency)?;
+        lat("spark_task_latency", self.spark_task_latency)?;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -361,5 +484,65 @@ mod tests {
         let k = CostConstants::default();
         assert!(k.spark_job_latency * 10.0 < k.job_latency);
         assert!(k.spark_task_latency * 10.0 < k.task_latency);
+    }
+
+    #[test]
+    fn default_configs_validate() {
+        ClusterConfig::paper_cluster().validate().unwrap();
+        ClusterConfig::local(8, 4.0 * GB).validate().unwrap();
+        CostConstants::default().validate().unwrap();
+    }
+
+    #[test]
+    fn zero_heap_rejected_with_diagnostic() {
+        let mut cc = ClusterConfig::paper_cluster();
+        cc.cp_heap_bytes = 0.0;
+        let err = cc.validate().unwrap_err();
+        assert!(err.contains("cp_heap_bytes"), "{err}");
+    }
+
+    #[test]
+    fn zero_k_local_rejected() {
+        let mut cc = ClusterConfig::paper_cluster();
+        cc.k_local = 0;
+        let err = cc.validate().unwrap_err();
+        assert!(err.contains("k_local"), "{err}");
+    }
+
+    #[test]
+    fn nan_and_negative_fields_rejected() {
+        let mut cc = ClusterConfig::paper_cluster();
+        cc.map_heap_bytes = f64::NAN;
+        assert!(cc.validate().is_err());
+        let mut cc = ClusterConfig::paper_cluster();
+        cc.clock_hz = -1.0;
+        assert!(cc.validate().is_err());
+    }
+
+    #[test]
+    fn zero_disk_bandwidth_rejected() {
+        let k = CostConstants { hdfs_read_binaryblock: 0.0, ..CostConstants::default() };
+        let err = k.validate().unwrap_err();
+        assert!(err.contains("hdfs_read_binaryblock"), "{err}");
+    }
+
+    #[test]
+    fn axis_helpers_apply_and_scale() {
+        let cc = ClusterConfig::paper_cluster()
+            .with_heap_mb(512.0)
+            .with_executor_mem_mb(4096.0)
+            .with_nodes(12)
+            .with_k_local(8);
+        assert_eq!(cc.cp_heap_bytes, 512.0 * MB);
+        assert_eq!(cc.map_heap_bytes, 512.0 * MB);
+        assert_eq!(cc.reduce_heap_bytes, 512.0 * MB);
+        assert_eq!(cc.spark_executor_mem_bytes, 4096.0 * MB);
+        // doubling 6 -> 12 nodes doubles the per-node-proportional slots
+        assert_eq!(cc.nodes, 12);
+        assert_eq!(cc.k_map, 288);
+        assert_eq!(cc.k_reduce, 144);
+        assert_eq!(cc.spark_executors, 12);
+        assert_eq!(cc.k_local, 8);
+        cc.validate().unwrap();
     }
 }

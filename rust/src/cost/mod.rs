@@ -186,9 +186,12 @@ impl<'a> Estimator<'a> {
                     children.extend(n);
                 }
                 let n_iter = known_trip.unwrap_or(self.cfg.unknown_iterations).max(0.0);
-                // Eq. 1: parfor scales by ceil(N/k).
+                // Eq. 1: parfor scales by ceil(N/k). The divisor is floored
+                // at 1 so a degenerate `k_local == 0` (rejected by
+                // `ClusterConfig::validate`, but cost_program can be called
+                // directly) yields a serial weight instead of `inf`.
                 let w = if *parfor {
-                    (n_iter / self.cc.k_local as f64).ceil()
+                    (n_iter / self.cc.k_local.max(1) as f64).ceil()
                 } else {
                     n_iter
                 };
@@ -200,7 +203,16 @@ impl<'a> Estimator<'a> {
                 let total = pred_cost
                     + if w >= 1.0 { first + (w - 1.0) * steady } else { w * first };
                 children.extend(body_nodes);
-                *t = first_t;
+                // With w < 1 the body may never run, so the warmed state
+                // cannot be committed outright: merge conservatively (like
+                // If branches) so reads that may not have happened are
+                // still charged to later uses.
+                if w >= 1.0 {
+                    *t = first_t;
+                } else {
+                    first_t.merge(t);
+                    *t = first_t;
+                }
                 let kind = if *parfor { "PARFOR" } else { "FOR" };
                 CostNode::Block {
                     label: format!("{kind} (lines {}-{}) [N={n_iter}, w={w}]", lines.0, lines.1),
@@ -210,14 +222,27 @@ impl<'a> Estimator<'a> {
             }
             RtBlock::While { pred, body, lines } => {
                 let (pt, mut children) = self.cost_insts(&pred.insts, t);
-                let n_iter = self.cfg.unknown_iterations;
+                let n_iter = self.cfg.unknown_iterations.max(0.0);
                 let mut first_t = t.clone();
                 let (first, body_nodes) = self.cost_blocks(body, &mut first_t);
                 let (steady, _) = self.cost_blocks(body, &mut first_t);
-                // predicate evaluated each iteration
-                let total = pt * (n_iter + 1.0) + first + (n_iter - 1.0).max(0.0) * steady;
+                // Predicate evaluated each iteration (N̂ + the final false
+                // check). The body follows the same first/steady §3.2 split
+                // as For: with N̂ < 1 it scales down to N̂·first instead of
+                // charging one full first iteration — a zero-iteration
+                // While costs only its predicate.
+                let total = pt * (n_iter + 1.0)
+                    + if n_iter >= 1.0 { first + (n_iter - 1.0) * steady } else { n_iter * first };
                 children.extend(body_nodes);
-                *t = first_t;
+                // As with For: only commit the warmed tracker state when
+                // the body is actually charged; otherwise merge, so a
+                // zero-trip loop does not make later reads free.
+                if n_iter >= 1.0 {
+                    *t = first_t;
+                } else {
+                    first_t.merge(t);
+                    *t = first_t;
+                }
                 CostNode::Block {
                     label: format!("WHILE (lines {}-{}) [N̂={n_iter}]", lines.0, lines.1),
                     total,
@@ -420,6 +445,72 @@ impl<'a> Estimator<'a> {
 }
 
 // ---------------------------------------------------------------------
+// Persistent-read IO floor (grid-optimizer pruning bound)
+// ---------------------------------------------------------------------
+
+/// A compile-free lower bound on `C(P, cc)`: the **persistent-read IO
+/// floor**. Any plan generated for a script that touches each of its
+/// persistent inputs at least once (outside conditionals and zero-trip
+/// loops — true of straight-line read-then-iterate ML scripts like the
+/// LinReg family) must read those bytes at least once, through *some*
+/// read path. The floor prices each input through the cheapest path the
+/// given backend offers and sums:
+///
+/// * **CP path** — single-threaded HDFS read at the input's format
+///   bandwidth (`cost_cp` charges exactly this on first touch).
+/// * **MR paths** — parallel map-side HDFS scan, or the distributed
+///   cache (which streams `min(size, partition)` bytes per task and so
+///   gains at most a `hdfs_block/partition` amplification). Effective
+///   parallelism is bounded by `slots · dop_scale` (the §3.3 scaled
+///   minimum), floored at 1.
+/// * **Spark paths** — parallel executor scan, or one torrent broadcast
+///   at `spark_broadcast_bw` (costed once, not per task).
+///
+/// Used by [`crate::opt::resource`] to prune grid points that can never
+/// reach the Pareto frontier without compiling them; `tests/resource.rs`
+/// property-checks `floor <= cost_program(..).total` across random
+/// scenario sizes, cluster shapes and backends.
+pub fn read_io_floor(
+    inputs: &[(MatrixCharacteristics, Format)],
+    backend: ExecBackend,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    k: &CostConstants,
+) -> f64 {
+    let k_map_ub = (cc.effective_k_map() as f64 * k.dop_scale).max(1.0);
+    let k_spark_ub = (cc.k_spark() as f64 * k.dop_scale).max(1.0);
+    let dcache_amp = (cc.hdfs_block_bytes / cfg.partition_bytes).max(1.0);
+    let mut floor = 0.0;
+    for (mc, fmt) in inputs {
+        let cp_size = mc.serialized_size(*fmt);
+        if !cp_size.is_finite() {
+            continue; // unknowns cannot be costed (§3.5)
+        }
+        let cp_bw = match fmt {
+            Format::BinaryBlock => k.hdfs_read_binaryblock,
+            _ => k.hdfs_read_text,
+        };
+        let cp_floor = cp_size / cp_bw;
+        let bb = mc.serialized_size(Format::BinaryBlock);
+        let dist_floor = match backend {
+            ExecBackend::Cp => f64::INFINITY,
+            ExecBackend::Mr => {
+                let throughput = (k.hdfs_read_binaryblock * k_map_ub)
+                    .max(k.dcache_read * dcache_amp * k_map_ub);
+                bb / throughput
+            }
+            ExecBackend::Spark => {
+                let throughput =
+                    (k.hdfs_read_binaryblock * k_spark_ub).max(k.spark_broadcast_bw);
+                bb / throughput
+            }
+        };
+        floor += cp_floor.min(dist_floor);
+    }
+    floor
+}
+
+// ---------------------------------------------------------------------
 // Cost-annotated EXPLAIN (Figures 4 and 5)
 // ---------------------------------------------------------------------
 
@@ -501,7 +592,7 @@ mod tests {
             }
         }
         collect(&r.nodes, &mut inst_costs);
-        inst_costs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        inst_costs.sort_by(|a, b| b.1.total_cmp(&a.1));
         assert!(inst_costs[0].0.contains("tsmm"), "top: {:?}", &inst_costs[..3]);
         assert!(inst_costs[1].0.contains("solve"), "{:?}", &inst_costs[..3]);
         // tsmm io ~0.51, compute ~2.33
@@ -726,5 +817,130 @@ write(y, $4);
         let xl1 = cost_scenario(Scenario::xl1()).total;
         let xl4 = cost_scenario(Scenario::xl4()).total;
         assert!(xs < xl1 && xl1 < xl4, "{xs} < {xl1} < {xl4}");
+    }
+
+    fn while_block_total(report: &CostReport) -> f64 {
+        report
+            .nodes
+            .iter()
+            .find_map(|n| match n {
+                CostNode::Block { label, total, .. } if label.contains("WHILE") => Some(*total),
+                _ => None,
+            })
+            .expect("program has a WHILE block")
+    }
+
+    /// §3 Eq. 1 consistency fix: a While with `N̂ = 0` charges only its
+    /// predicate, matching the For branch's `w · first` scaling for
+    /// `w < 1` — it must not charge one full first-iteration body (which
+    /// here would include the 0.51 s read of X).
+    #[test]
+    fn while_with_zero_unknown_iterations_costs_only_predicate() {
+        use crate::api::compile_with_meta;
+        let src = "X = read($1);\ns = 1;\nwhile (s < 10) { s = s + sum(X); }\nwrite(s, $4);";
+        let sc = Scenario::xs();
+        let opts = CompileOptions::default();
+        let c = compile_with_meta(src, &sc.args(), &sc.meta(1000), &opts).unwrap();
+        let mut cfg = opts.cfg.clone();
+        cfg.unknown_iterations = 0.0;
+        let zero = cost_program(&c.runtime, &cfg, &opts.cc.0, &CostConstants::default());
+        cfg.unknown_iterations = 10.0;
+        let ten = cost_program(&c.runtime, &cfg, &opts.cc.0, &CostConstants::default());
+        let (w0, w10) = (while_block_total(&zero), while_block_total(&ten));
+        assert!(w0 < 0.01, "zero-iteration While must cost ~predicate only, got {w0}");
+        assert!(w10 > 0.5, "10-iteration While pays the X read, got {w10}");
+        // fractional N̂ scales the first-iteration body down, like For
+        cfg.unknown_iterations = 0.5;
+        let half = cost_program(&c.runtime, &cfg, &opts.cc.0, &CostConstants::default());
+        let wh = while_block_total(&half);
+        assert!(w0 < wh && wh < w10, "{w0} < {wh} < {w10}");
+    }
+
+    /// A zero-trip loop must not warm the read tracker either: a
+    /// post-loop use of X still pays the cold HDFS read, so the program
+    /// total never drops below the persistent-read floor the grid
+    /// optimizer prunes with.
+    #[test]
+    fn zero_trip_while_does_not_warm_later_reads() {
+        use crate::api::compile_with_meta;
+        let src = "X = read($1);\ns = 1;\nwhile (s < 10) { s = s + sum(X); }\nz = sum(X);\nwrite(z, $4);";
+        let sc = Scenario::xs();
+        let opts = CompileOptions::default();
+        let c = compile_with_meta(src, &sc.args(), &sc.meta(1000), &opts).unwrap();
+        let mut cfg = opts.cfg.clone();
+        cfg.unknown_iterations = 0.0;
+        let r = cost_program(&c.runtime, &cfg, &opts.cc.0, &CostConstants::default());
+        assert!(
+            r.total > 0.5,
+            "post-loop sum(X) must pay the 0.51s cold read, got {}",
+            r.total
+        );
+        let inputs = vec![(
+            crate::matrix::MatrixCharacteristics::dense(sc.x_rows, sc.x_cols, 1000),
+            Format::BinaryBlock,
+        )];
+        let floor = read_io_floor(
+            &inputs,
+            crate::rtprog::ExecBackend::Mr,
+            &cfg,
+            &opts.cc.0,
+            &CostConstants::default(),
+        );
+        assert!(floor <= r.total, "floor {floor} > cost {}", r.total);
+    }
+
+    /// `k_local == 0` must not turn the parfor weight into `inf`
+    /// (`ClusterConfig::validate` rejects it upstream, but cost_program
+    /// is callable directly).
+    #[test]
+    fn parfor_with_zero_k_local_stays_finite() {
+        use crate::api::compile_with_meta;
+        let src =
+            "X = read($1);\ns = 0;\nparfor (i in 1:24) { s = s + sum(X); }\nwrite(s, $4);";
+        let sc = Scenario::xs();
+        let opts = CompileOptions::default();
+        let c = compile_with_meta(src, &sc.args(), &sc.meta(1000), &opts).unwrap();
+        let mut cc = opts.cc.0.clone();
+        cc.k_local = 0;
+        let r = cost_program(&c.runtime, &opts.cfg, &cc, &CostConstants::default());
+        assert!(r.total.is_finite(), "k_local=0 must degrade to serial, got {}", r.total);
+    }
+
+    /// The pruning bound is a true lower bound on the paper scenarios,
+    /// and CP's single-threaded floor dominates the distributed floors.
+    #[test]
+    fn read_io_floor_bounds_scenario_costs() {
+        use crate::rtprog::ExecBackend;
+        let cfg = SystemConfig::default();
+        let cc = ClusterConfig::paper_cluster();
+        let k = CostConstants::default();
+        for s in Scenario::all() {
+            let inputs = vec![
+                (
+                    crate::matrix::MatrixCharacteristics::dense(s.x_rows, s.x_cols, 1000),
+                    Format::BinaryBlock,
+                ),
+                (
+                    crate::matrix::MatrixCharacteristics::dense(s.x_rows, 1, 1000),
+                    Format::BinaryBlock,
+                ),
+            ];
+            for backend in ExecBackend::all() {
+                let opts = CompileOptions { backend, ..Default::default() };
+                let c = s.compile(&opts);
+                let total = cost_program(&c.runtime, &cfg, &cc, &k).total;
+                let floor = read_io_floor(&inputs, backend, &cfg, &cc, &k);
+                assert!(
+                    floor <= total,
+                    "{} {}: floor {floor} > cost {total}",
+                    s.name,
+                    backend.name()
+                );
+                assert!(floor > 0.0);
+            }
+            let cp = read_io_floor(&inputs, ExecBackend::Cp, &cfg, &cc, &k);
+            let mr = read_io_floor(&inputs, ExecBackend::Mr, &cfg, &cc, &k);
+            assert!(mr < cp, "distributed reads beat the single-threaded floor");
+        }
     }
 }

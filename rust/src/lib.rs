@@ -32,7 +32,8 @@
 //!    substitute for the paper's Hadoop testbed).
 //! 7. [`runtime`] — the PJRT bridge that loads AOT-compiled XLA artifacts
 //!    (JAX/Pallas, built once by `make artifacts`) for the compute hot path.
-//! 8. [`opt`] — cost-model consumers: resource optimization, plan
+//! 8. [`opt`] — cost-model consumers: the parallel grid resource
+//!    optimizer with Pareto frontier ([`opt::resource`]), plan
 //!    comparison, and the batched parallel scenario-sweep engine
 //!    ([`opt::sweep`]) that costs ClusterConfig × data-size grids into
 //!    ranked comparison tables.
@@ -55,5 +56,7 @@ pub mod rtprog;
 pub mod runtime;
 pub mod util;
 
-pub use api::{compile, sweep, CompileOptions, CompiledProgram, ExecBackend, Scenario};
+pub use api::{
+    compile, optimize_resources, sweep, CompileOptions, CompiledProgram, ExecBackend, Scenario,
+};
 pub use conf::{ClusterConfig, CostConstants, SystemConfig};

@@ -5,7 +5,8 @@
 //! repro cost    --scenario xl1                          Figure 4 / 5
 //! repro scenarios                                       Table 1 + §2 plans
 //! repro run <script.dml> [-a N=value ...]               execute a script
-//! repro resource-opt --scenario xs                      budget sweep
+//! repro resource --grid heaps=512,2048:nodes=2,6        grid resource optimizer
+//! repro resource-opt --scenario xs                      legacy heap sweep
 //! repro sweep [--heaps 512,...] [--serial]              parallel grid sweep
 //! ```
 
@@ -28,11 +29,12 @@ fn main() {
         Some("cost") => cmd_cost(&args[1..]),
         Some("scenarios") => cmd_scenarios(),
         Some("run") => cmd_run(&args[1..]),
+        Some("resource") => cmd_resource(&args[1..]),
         Some("resource-opt") => cmd_resource_opt(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         _ => {
             eprintln!(
-                "usage: repro <explain|cost|scenarios|run|resource-opt|sweep> [options]\n\
+                "usage: repro <explain|cost|scenarios|run|resource|resource-opt|sweep> [options]\n\
                  \n\
                  explain --scenario <xs|xl1..xl4> [--level hops|runtime]\n\
                  \x20       [--backend cp|mr|spark] [--script ds|cg] [--iters N]\n\
@@ -40,6 +42,9 @@ fn main() {
                  \x20       [--script ds|cg] [--iters N]\n\
                  scenarios\n\
                  run <script.dml> [-a N=value ...] [--threads T] [--heap-mb H]\n\
+                 resource [--scenario <name>] [--script ds|cg] [--iters N]\n\
+                 \x20     [--grid heaps=512,2048:execmem=2048,20480:nodes=2,6:klocal=6,24]\n\
+                 \x20     [--backends cp,mr,spark] [--threads T] [--no-prune] [--all]\n\
                  resource-opt --scenario <name> [--heaps 256,512,...]\n\
                  \x20       [--backend cp|mr|spark]\n\
                  sweep [--scenarios xs,xl1,...] [--heaps 512,1024,...]\n\
@@ -234,6 +239,167 @@ fn cmd_run(args: &[String]) -> i32 {
     }
 }
 
+/// Parse `--backends cp,mr,spark` into a backend list (None = flag
+/// absent). `Err` carries the exit code.
+fn parse_backends_flag(args: &[String]) -> Result<Option<Vec<ExecBackend>>, i32> {
+    let Some(backends) = flag(args, "--backends") else {
+        return Ok(None);
+    };
+    let mut parsed = Vec::new();
+    for part in backends.split(',').filter(|s| !s.is_empty()) {
+        match ExecBackend::parse(part) {
+            Some(b) => parsed.push(b),
+            None => {
+                eprintln!(
+                    "--backends: unknown backend '{part}' (expected a list of cp, mr, spark)"
+                );
+                return Err(2);
+            }
+        }
+    }
+    Ok(Some(parsed))
+}
+
+/// Parse the `--grid key=v1,v2:key=...` axis specification onto a
+/// [`ResourceGrid`]. Axes: `heaps` (MB), `execmem` (MB), `nodes`,
+/// `klocal`; unspecified axes keep their defaults. `default` keeps all.
+fn parse_grid_axes(spec: &str, grid: &mut resource::ResourceGrid) -> Result<(), String> {
+    if spec == "default" {
+        return Ok(());
+    }
+    for part in spec.split(':').filter(|p| !p.is_empty()) {
+        let Some((key, vals)) = part.split_once('=') else {
+            return Err(format!("--grid: expected <axis>=<v1,v2,...> in '{part}'"));
+        };
+        let f64s = |name: &str| -> Result<Vec<f64>, String> {
+            vals.split(',')
+                .map(|v| match v.trim().parse::<f64>() {
+                    Ok(x) if x.is_finite() && x > 0.0 => Ok(x),
+                    _ => Err(format!("--grid: invalid {name} entry '{v}' (positive MB)")),
+                })
+                .collect()
+        };
+        let usizes = |name: &str| -> Result<Vec<usize>, String> {
+            vals.split(',')
+                .map(|v| match v.trim().parse::<usize>() {
+                    Ok(x) if x >= 1 => Ok(x),
+                    _ => Err(format!("--grid: invalid {name} entry '{v}' (integer >= 1)")),
+                })
+                .collect()
+        };
+        match key {
+            "heaps" => grid.heaps_mb = f64s("heaps")?,
+            "execmem" => grid.exec_mem_mb = f64s("execmem")?,
+            "nodes" => grid.nodes = usizes("nodes")?,
+            "klocal" => grid.k_local = usizes("klocal")?,
+            other => {
+                return Err(format!(
+                    "--grid: unknown axis '{other}' (expected heaps, execmem, nodes, klocal)"
+                ))
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Grid resource optimizer: enumerate the joint heap × executor-memory ×
+/// nodes × k_local × backend space for one scenario/script, prune
+/// dominated points via the read floor, and print the (budget, time)
+/// Pareto frontier plus the argmin configuration.
+fn cmd_resource(args: &[String]) -> i32 {
+    let name = flag(args, "--scenario").unwrap_or_else(|| "xl1".into());
+    let Some(s) = scenario_by_name(&name) else {
+        eprintln!("unknown scenario '{name}'");
+        return 2;
+    };
+    let script = flag(args, "--script").unwrap_or_else(|| "cg".into());
+    let iters = match parse_iters_flag(args) {
+        Ok(n) => n,
+        Err(code) => return code,
+    };
+    let (src, script_args) = match script.as_str() {
+        "cg" => (LINREG_CG.to_string(), linreg_cg_args(iters)),
+        "ds" => (s.script().to_string(), s.args()),
+        other => {
+            eprintln!("--script: unknown script '{other}' (expected ds or cg)");
+            return 2;
+        }
+    };
+    let mut grid = resource::ResourceGrid::new(src, script_args, DataScenario::from(&s));
+    match parse_backends_flag(args) {
+        Ok(Some(backends)) => grid.backends = backends,
+        Ok(None) => {}
+        Err(code) => return code,
+    }
+    if let Some(g) = flag(args, "--grid") {
+        if let Err(e) = parse_grid_axes(&g, &mut grid) {
+            eprintln!("{e}");
+            return 2;
+        }
+    }
+    if let Some(t) = flag(args, "--threads") {
+        match t.parse::<usize>() {
+            Ok(n) => grid.threads = n,
+            Err(_) => {
+                eprintln!("--threads: invalid value '{t}' (expected a non-negative integer)");
+                return 2;
+            }
+        }
+    }
+    if args.iter().any(|a| a == "--no-prune") {
+        grid.prune = false;
+    }
+    let report = match systemds::api::optimize_resources(&grid) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("resource optimization failed: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "scenario {} / script {} — {} grid points (heap x exec-mem x nodes x k_local x backend)",
+        s.name,
+        script,
+        grid.point_count()
+    );
+    println!("\nPareto frontier (budget ascending, est. time descending):");
+    print!("{}", report.frontier_table());
+    if args.iter().any(|a| a == "--all") {
+        println!("\nall costed points:");
+        let mut idx: Vec<usize> = (0..report.points.len()).collect();
+        idx.sort_by(|&a, &b| {
+            report.points[a].budget_mb.total_cmp(&report.points[b].budget_mb).then(a.cmp(&b))
+        });
+        for i in idx {
+            let p = &report.points[i];
+            match p.cost_secs {
+                Some(c) => println!(
+                    "  {:>8}MB  {}  {:>12}{}",
+                    p.budget_mb as i64,
+                    p.label(),
+                    systemds::util::fmt::fmt_secs(c),
+                    if p.plan_reused { "  (memo)" } else { "" }
+                ),
+                None => println!(
+                    "  {:>8}MB  {}  pruned (floor {})",
+                    p.budget_mb as i64,
+                    p.label(),
+                    systemds::util::fmt::fmt_secs(p.floor_secs)
+                ),
+            }
+        }
+    }
+    let best = report.best();
+    println!(
+        "\nbest: {} — {} at budget {}MB",
+        best.label(),
+        systemds::util::fmt::fmt_secs(best.cost_secs.unwrap_or(f64::NAN)),
+        best.budget_mb as i64
+    );
+    eprintln!("{}", report.summary());
+    0
+}
+
 fn cmd_resource_opt(args: &[String]) -> i32 {
     let name = flag(args, "--scenario").unwrap_or_else(|| "xs".into());
     let heaps: Vec<f64> = flag(args, "--heaps")
@@ -262,7 +428,7 @@ fn cmd_resource_opt(args: &[String]) -> i32 {
         }
     };
     println!("{:>10} {:>8} {:>12}", "heap", "jobs", "est. cost");
-    for p in &choice.frontier {
+    for p in &choice.points {
         println!(
             "{:>8}MB {:>8} {:>11.1}s",
             (p.heap_bytes / MB) as i64,
@@ -295,20 +461,10 @@ fn cmd_sweep(args: &[String]) -> i32 {
             return 2;
         }
     };
-    if let Some(backends) = flag(args, "--backends") {
-        let mut parsed = Vec::new();
-        for part in backends.split(',').filter(|s| !s.is_empty()) {
-            match ExecBackend::parse(part) {
-                Some(b) => parsed.push(b),
-                None => {
-                    eprintln!(
-                        "--backends: unknown backend '{part}' (expected a list of cp, mr, spark)"
-                    );
-                    return 2;
-                }
-            }
-        }
-        spec.backends = parsed;
+    match parse_backends_flag(args) {
+        Ok(Some(backends)) => spec.backends = backends,
+        Ok(None) => {}
+        Err(code) => return code,
     }
     if let Some(names) = flag(args, "--scenarios") {
         let mut scenarios = Vec::new();

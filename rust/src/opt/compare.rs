@@ -26,6 +26,7 @@ pub fn compare_plans(
     meta: &dyn MetaProvider,
     base: &CompileOptions,
 ) -> Result<Vec<PlanAlternative>, String> {
+    base.cc.0.validate()?;
     let variants: Vec<(&str, SelectionHints)> = vec![
         ("optimizer", SelectionHints::default()),
         ("force-cpmm", SelectionHints { force_cpmm: true, ..Default::default() }),

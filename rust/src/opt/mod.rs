@@ -2,10 +2,14 @@
 //! several advanced optimizers like resource optimization and global data
 //! flow optimization").
 //!
-//! * [`resource::optimize`] — enumerate cluster resource configurations
-//!   (CP/map/reduce heap sizes), recompile the program under each, cost the
-//!   generated plans, and return the cost-optimal configuration (the
-//!   resource-optimizer use case).
+//! * [`resource::optimize_grid`] — the parallel grid resource optimizer:
+//!   enumerate the joint heap × executor-memory × nodes × `k_local` ×
+//!   backend space, compile once per distinct plan shape (memoization
+//!   shared with the sweep engine), prune dominated points via the
+//!   persistent-read IO floor, and return the cost argmin plus the
+//!   (budget, time) Pareto frontier. [`resource::optimize`] /
+//!   [`resource::optimize_backend`] are the legacy single-axis heap
+//!   sweeps over the same costing.
 //! * [`compare::compare_plans`] — cost a program under alternative
 //!   physical-operator hints (cpmm vs mapmm vs rmm, rewrite on/off), the
 //!   global-plan-comparison use case and the basis of the ablation benches.

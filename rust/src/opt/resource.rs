@@ -1,18 +1,575 @@
-//! Resource optimization: pick the memory configuration minimising the
-//! estimated execution time `C(P, cc)` — because plan *shape* changes with
-//! budgets (CP vs MR, mapmm vs cpmm), cost is not monotone in resources and
-//! a search over generated plans is required (exactly why the paper's
-//! analytical cost model exists, R1).
+//! Resource optimization over a **joint configuration grid** (paper §1:
+//! the cost model exists to power "advanced optimizers like resource
+//! optimization"). Because plan *shape* changes with budgets (CP vs MR
+//! vs Spark, mapmm vs cpmm), cost is not monotone in resources and a
+//! search over generated plans is required — exactly why the paper's
+//! analytical cost model exists (R1).
+//!
+//! [`optimize_grid`] enumerates the joint space
+//!
+//! ```text
+//! client/task heap × Spark executor memory × worker nodes × k_local × backend
+//! ```
+//!
+//! and evaluates it with three scaling levers:
+//!
+//! 1. **Plan-signature memoization** (shared with the sweep engine's
+//!    [`super::sweep::PlanMemo`]): node counts and `k_local` never change
+//!    plan shape, so points differing only on those axes are compiled
+//!    once and costed many times.
+//! 2. **Parallel evaluation**: distinct compiles and all point costings
+//!    fan out over [`crate::util::par`].
+//! 3. **Lower-bound pruning**: points are processed in budget-ascending
+//!    waves; a point whose persistent-read IO floor
+//!    ([`crate::cost::read_io_floor`]) already exceeds the best time
+//!    found at a strictly smaller budget is *dominated* — it can reach
+//!    neither the argmin nor the Pareto frontier — and is skipped
+//!    without compiling or costing.
+//!
+//! The result is both the cost-argmin configuration and the **Pareto
+//! frontier** of (resource budget, estimated time) trade-offs, where the
+//! budget is the linearised cluster-memory measure
+//! `client heap + worker-memory · nodes` (worker memory is the task heap
+//! on MR, the executor heap on Spark, and zero on single-node CP).
+//!
+//! Entry points: [`optimize_grid`] / [`crate::api::optimize_resources`],
+//! the `repro resource --grid ...` subcommand, and the legacy
+//! single-axis [`optimize`] / [`optimize_backend`] heap sweeps.
 
 use std::collections::HashMap;
+use std::time::Instant;
 
-use crate::api::{compile_with_meta, CompileOptions};
-use crate::conf::{ClusterConfig, CostConstants, MB};
+use crate::api::{compile_with_meta, ClusterConfigOpt, CompileOptions, CompiledProgram};
+use crate::conf::{ClusterConfig, CostConstants, SystemConfig, MB};
 use crate::cost;
 use crate::ir::build::MetaProvider;
+use crate::lop::SelectionHints;
+use crate::matrix::{Format, MatrixCharacteristics};
 use crate::rtprog::ExecBackend;
+use crate::util::fmt::fmt_secs;
+use crate::util::par;
 
-/// One evaluated configuration.
+use super::sweep::{plan_signature, DataScenario, PlanMemo};
+
+// ---------------------------------------------------------------------
+// Grid specification
+// ---------------------------------------------------------------------
+
+/// Joint resource-configuration grid for one script + data scenario.
+///
+/// The five axes are crossed, with two backend-aware reductions that
+/// keep the grid free of duplicate points: the executor-memory axis
+/// only applies to Spark points (it is plan- and cost-neutral for CP
+/// and MR), and the node axis collapses to a single worker for CP
+/// points (a CP plan runs on the client alone).
+#[derive(Clone, Debug)]
+pub struct ResourceGrid {
+    /// DML source compiled per distinct plan shape.
+    pub script: String,
+    /// `$N` command-line bindings for the script.
+    pub args: HashMap<usize, String>,
+    /// Persistent-input metadata (also drives the pruning floor).
+    pub scenario: DataScenario,
+    /// Base cluster; each grid point patches the axis fields onto it
+    /// (see [`ClusterConfig::with_heap_mb`] and friends).
+    pub base: ClusterConfig,
+    /// Compiler/system configuration shared by all points.
+    pub cfg: SystemConfig,
+    /// Physical-operator selection hints shared by all points.
+    pub hints: SelectionHints,
+    /// Cost-model constants shared by all points.
+    pub constants: CostConstants,
+    /// Client/task heap axis, MB (plan-shaping: §2 memory budgets).
+    pub heaps_mb: Vec<f64>,
+    /// Spark executor-memory axis, MB (plan-shaping on Spark only:
+    /// broadcast feasibility).
+    pub exec_mem_mb: Vec<f64>,
+    /// Worker-node axis (cost-only: scales slots/executors).
+    pub nodes: Vec<usize>,
+    /// Control-program parallelism axis `k_l` (cost-only: parfor).
+    pub k_local: Vec<usize>,
+    /// Backend axis (CP / MR / Spark plan families).
+    pub backends: Vec<ExecBackend>,
+    /// Skip compiling points whose read floor proves them dominated.
+    /// Disable to force-cost every point (the frontier and argmin are
+    /// identical either way; `tests/resource.rs` asserts so).
+    pub prune: bool,
+    /// Worker threads; `0` = available parallelism.
+    pub threads: usize,
+}
+
+impl ResourceGrid {
+    /// Grid with the default axes (3 heaps × 2 executor memories ×
+    /// 2 node counts × 2 `k_local` values × all 3 backends = 42 points,
+    /// 12 distinct plan shapes) on the paper cluster.
+    pub fn new(
+        script: impl Into<String>,
+        args: HashMap<usize, String>,
+        scenario: DataScenario,
+    ) -> Self {
+        ResourceGrid {
+            script: script.into(),
+            args,
+            scenario,
+            base: ClusterConfig::paper_cluster(),
+            cfg: SystemConfig::default(),
+            hints: SelectionHints::default(),
+            constants: CostConstants::default(),
+            heaps_mb: vec![512.0, 2048.0, 8192.0],
+            exec_mem_mb: vec![2048.0, 20480.0],
+            nodes: vec![2, 6],
+            k_local: vec![6, 24],
+            backends: ExecBackend::all().to_vec(),
+            prune: true,
+            threads: 0,
+        }
+    }
+
+    /// Reject empty or degenerate axes and configurations before any
+    /// compile, so NaN costs become diagnostics instead of panics.
+    pub fn validate(&self) -> Result<(), String> {
+        self.base.validate()?;
+        self.constants.validate()?;
+        let non_empty = |name: &str, len: usize| {
+            if len == 0 {
+                Err(format!("empty resource grid axis: {name}"))
+            } else {
+                Ok(())
+            }
+        };
+        non_empty("heaps_mb", self.heaps_mb.len())?;
+        non_empty("exec_mem_mb", self.exec_mem_mb.len())?;
+        non_empty("nodes", self.nodes.len())?;
+        non_empty("k_local", self.k_local.len())?;
+        non_empty("backends", self.backends.len())?;
+        for &h in &self.heaps_mb {
+            if !(h.is_finite() && h > 0.0) {
+                return Err(format!("invalid heap axis value {h} MB (must be finite and > 0)"));
+            }
+        }
+        for &x in &self.exec_mem_mb {
+            if !(x.is_finite() && x > 0.0) {
+                return Err(format!(
+                    "invalid executor-memory axis value {x} MB (must be finite and > 0)"
+                ));
+            }
+        }
+        if self.nodes.contains(&0) {
+            return Err("invalid node axis value 0 (must be >= 1)".to_string());
+        }
+        if self.k_local.contains(&0) {
+            return Err("invalid k_local axis value 0 (must be >= 1)".to_string());
+        }
+        Ok(())
+    }
+
+    /// The enumerated axis tuples `(heap, exec_mem, nodes, k_local,
+    /// backend)` in deterministic grid order, with the backend-aware
+    /// axis reductions applied (executor memory varies on Spark points
+    /// only; CP points run on a single worker).
+    fn enumerate(&self) -> Vec<(f64, f64, usize, usize, ExecBackend)> {
+        let base_xm = self.base.spark_executor_mem_bytes / MB;
+        let mut out = Vec::new();
+        for &h in &self.heaps_mb {
+            for &b in &self.backends {
+                let xms: &[f64] = if b == ExecBackend::Spark {
+                    &self.exec_mem_mb
+                } else {
+                    std::slice::from_ref(&base_xm)
+                };
+                let single_node = [1usize];
+                let nodes: &[usize] =
+                    if b == ExecBackend::Cp { &single_node } else { &self.nodes };
+                for &xm in xms {
+                    for &n in nodes {
+                        for &kl in &self.k_local {
+                            out.push((h, xm, n, kl, b));
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of grid points after the backend-aware axis reductions.
+    pub fn point_count(&self) -> usize {
+        self.enumerate().len()
+    }
+}
+
+/// Compact `heap/xmem/nodes/k_l/backend` label shared by grid points
+/// and wave-loop diagnostics (the prune-equivalence tests compare these
+/// across runs, so there is exactly one format).
+fn point_label(
+    heap_mb: f64,
+    exec_mem_mb: f64,
+    nodes: usize,
+    k_local: usize,
+    backend: ExecBackend,
+) -> String {
+    format!(
+        "heap={}MB xmem={}MB nodes={} k_l={} backend={}",
+        heap_mb as i64,
+        exec_mem_mb as i64,
+        nodes,
+        k_local,
+        backend.name()
+    )
+}
+
+/// Linearised resource budget of one point, in MB: the client heap plus
+/// the per-node worker-memory commitment times the node count (task
+/// heap on MR, executor heap on Spark, no workers on single-node CP).
+fn budget_mb(heap_mb: f64, exec_mem_mb: f64, nodes: usize, backend: ExecBackend) -> f64 {
+    match backend {
+        ExecBackend::Cp => heap_mb,
+        ExecBackend::Mr => heap_mb + heap_mb * nodes as f64,
+        ExecBackend::Spark => heap_mb + exec_mem_mb * nodes as f64,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Results
+// ---------------------------------------------------------------------
+
+/// One grid point: its axis values, budget, pruning floor, and (unless
+/// pruned) the estimated time and plan statistics.
+#[derive(Clone, Debug)]
+pub struct GridPoint {
+    /// Client/task heap, MB.
+    pub heap_mb: f64,
+    /// Spark executor memory, MB (the base value on CP/MR points).
+    pub exec_mem_mb: f64,
+    /// Worker nodes (1 on CP points).
+    pub nodes: usize,
+    /// Control-program parallelism `k_l`.
+    pub k_local: usize,
+    /// Execution backend of the point's plan family.
+    pub backend: ExecBackend,
+    /// Linearised resource budget (client heap + worker memory · nodes).
+    pub budget_mb: f64,
+    /// Persistent-read IO floor — the pruning lower bound.
+    pub floor_secs: f64,
+    /// Estimated execution time `C(P, cc)`; `None` when the point was
+    /// pruned (its floor proved it dominated).
+    pub cost_secs: Option<f64>,
+    /// CP instruction count of the generated plan (0 when pruned).
+    pub cp_insts: usize,
+    /// MR-job count of the generated plan.
+    pub mr_jobs: usize,
+    /// Spark-job count of the generated plan.
+    pub spark_jobs: usize,
+    /// Whether the point reused a plan compiled for an earlier point.
+    pub plan_reused: bool,
+}
+
+impl GridPoint {
+    /// Whether the point was skipped by lower-bound pruning.
+    pub fn pruned(&self) -> bool {
+        self.cost_secs.is_none()
+    }
+
+    /// Compact `heap/xmem/nodes/k_l/backend` label for diagnostics.
+    pub fn label(&self) -> String {
+        point_label(self.heap_mb, self.exec_mem_mb, self.nodes, self.k_local, self.backend)
+    }
+}
+
+/// Result of a grid optimization: every point, the argmin, and the
+/// Pareto frontier of (budget, time).
+#[derive(Clone, Debug)]
+pub struct ResourceReport {
+    /// All points in grid-enumeration order.
+    pub points: Vec<GridPoint>,
+    /// Index (into `points`) of the cost-argmin point.
+    pub best: usize,
+    /// Indices of the non-dominated points, budget-ascending (and
+    /// therefore time-descending — see [`Self::frontier_table`]).
+    pub frontier: Vec<usize>,
+    /// Distinct plan shapes compiled (== compile+cost invocations that
+    /// actually compiled; strictly less than the grid size whenever the
+    /// cost-only axes have more than one value).
+    pub distinct_plans: usize,
+    /// Costed points that reused a memoized plan.
+    pub memo_hits: usize,
+    /// Points skipped by lower-bound pruning.
+    pub pruned: usize,
+    /// Wall-clock seconds spent in the optimization.
+    pub wall_secs: f64,
+    /// Worker threads used.
+    pub threads: usize,
+}
+
+impl ResourceReport {
+    /// The cost-argmin point.
+    pub fn best(&self) -> &GridPoint {
+        &self.points[self.best]
+    }
+
+    /// Frontier points in budget-ascending order.
+    pub fn frontier_points(&self) -> impl Iterator<Item = &GridPoint> {
+        self.frontier.iter().map(move |&i| &self.points[i])
+    }
+
+    /// Aligned Pareto-frontier table: budget-ascending rows with
+    /// strictly decreasing estimated time (non-domination made visible).
+    /// Executor memory is shown only where it matters (Spark points).
+    pub fn frontier_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:>10} {:>9} {:>10} {:>6} {:>8} {:<8} {:>5} {:>12}\n",
+            "budget", "heap", "exec-mem", "nodes", "k_local", "backend", "jobs", "est. time"
+        ));
+        out.push_str(&"-".repeat(76));
+        out.push('\n');
+        for p in self.frontier_points() {
+            let xm = if p.backend == ExecBackend::Spark {
+                format!("{}MB", p.exec_mem_mb as i64)
+            } else {
+                "-".to_string()
+            };
+            out.push_str(&format!(
+                "{:>8}MB {:>7}MB {:>10} {:>6} {:>8} {:<8} {:>5} {:>12}\n",
+                p.budget_mb as i64,
+                p.heap_mb as i64,
+                xm,
+                p.nodes,
+                p.k_local,
+                p.backend.name(),
+                p.mr_jobs + p.spark_jobs,
+                fmt_secs(p.cost_secs.unwrap_or(f64::NAN)),
+            ));
+        }
+        out
+    }
+
+    /// One-line execution summary (includes wall time — not part of the
+    /// deterministic tables).
+    pub fn summary(&self) -> String {
+        format!(
+            "explored {} grid points in {:.3}s on {} threads; {} distinct plans compiled, {} memoized, {} pruned by the read floor; frontier size {}",
+            self.points.len(),
+            self.wall_secs,
+            self.threads,
+            self.distinct_plans,
+            self.memo_hits,
+            self.pruned,
+            self.frontier.len()
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// The grid optimizer
+// ---------------------------------------------------------------------
+
+struct RawPoint {
+    heap_mb: f64,
+    exec_mem_mb: f64,
+    nodes: usize,
+    k_local: usize,
+    backend: ExecBackend,
+    cc: ClusterConfig,
+    budget_mb: f64,
+    floor_secs: f64,
+    sig: String,
+}
+
+impl RawPoint {
+    fn label(&self) -> String {
+        point_label(self.heap_mb, self.exec_mem_mb, self.nodes, self.k_local, self.backend)
+    }
+}
+
+fn compile_point(
+    spec: &ResourceGrid,
+    meta: &crate::ir::build::StaticMeta,
+    raw: &RawPoint,
+) -> Result<CompiledProgram, String> {
+    let opts = CompileOptions {
+        cfg: spec.cfg.clone(),
+        cc: ClusterConfigOpt(raw.cc.clone()),
+        hints: spec.hints.clone(),
+        backend: raw.backend,
+    };
+    compile_with_meta(&spec.script, &spec.args, meta, &opts).map_err(|e| {
+        format!(
+            "compile failed for grid point heap={}MB backend={}: {e}",
+            raw.heap_mb as i64,
+            raw.backend.name()
+        )
+    })
+}
+
+/// Evaluate the joint resource grid: enumerate points, prune dominated
+/// ones via the read floor, compile once per distinct plan signature
+/// (parallel, memoized), cost every surviving point concurrently, and
+/// return the argmin plus the (budget, time) Pareto frontier. See the
+/// module docs for the wave pipeline.
+pub fn optimize_grid(spec: &ResourceGrid) -> Result<ResourceReport, String> {
+    let t0 = Instant::now();
+    spec.validate()?;
+    let threads = if spec.threads == 0 { par::default_threads() } else { spec.threads };
+    let meta = spec.scenario.meta(spec.cfg.blocksize);
+    let floor_inputs: Vec<(MatrixCharacteristics, Format)> = spec
+        .scenario
+        .inputs
+        .iter()
+        .map(|&(_, r, c)| {
+            (MatrixCharacteristics::dense(r, c, spec.cfg.blocksize), Format::BinaryBlock)
+        })
+        .collect();
+
+    let raw: Vec<RawPoint> = spec
+        .enumerate()
+        .into_iter()
+        .map(|(h, xm, n, kl, b)| {
+            let cc = spec
+                .base
+                .clone()
+                .with_heap_mb(h)
+                .with_executor_mem_mb(xm)
+                .with_nodes(n)
+                .with_k_local(kl);
+            let sig = plan_signature(&spec.cfg, &spec.hints, &cc, &spec.scenario, b);
+            let floor_secs =
+                cost::read_io_floor(&floor_inputs, b, &spec.cfg, &cc, &spec.constants);
+            RawPoint {
+                heap_mb: h,
+                exec_mem_mb: xm,
+                nodes: n,
+                k_local: kl,
+                backend: b,
+                budget_mb: budget_mb(h, xm, n, b),
+                floor_secs,
+                cc,
+                sig,
+            }
+        })
+        .collect();
+
+    // Budget-ascending wave order (ties keep enumeration order, so the
+    // whole pipeline is deterministic regardless of thread count).
+    let mut order: Vec<usize> = (0..raw.len()).collect();
+    order.sort_by(|&a, &b| raw[a].budget_mb.total_cmp(&raw[b].budget_mb).then(a.cmp(&b)));
+
+    let mut memo = PlanMemo::new();
+    // per point: (cost, cp_insts, mr_jobs, spark_jobs, plan_reused)
+    let mut costed: Vec<Option<(f64, usize, usize, usize, bool)>> = vec![None; raw.len()];
+    let mut best_time = f64::INFINITY;
+    let mut i = 0;
+    while i < order.len() {
+        let mut j = i;
+        while j < order.len() && raw[order[j]].budget_mb == raw[order[i]].budget_mb {
+            j += 1;
+        }
+        // A point whose floor meets the best time achieved at a strictly
+        // smaller budget is dominated: skip compile + cost entirely.
+        let survivors: Vec<usize> = order[i..j]
+            .iter()
+            .copied()
+            .filter(|&p| !spec.prune || raw[p].floor_secs < best_time)
+            .collect();
+        let sigs: Vec<String> = survivors.iter().map(|&p| raw[p].sig.clone()).collect();
+        let plan_of =
+            memo.ensure(&sigs, threads, |s| compile_point(spec, &meta, &raw[survivors[s]]))?;
+        let wave: Vec<Result<(f64, usize, usize, usize), String>> =
+            par::par_map(&survivors, threads, |s, &p| {
+                let prog = memo.get(plan_of[s].0);
+                let report =
+                    cost::cost_program(&prog.runtime, &spec.cfg, &raw[p].cc, &spec.constants);
+                if report.total.is_finite() {
+                    let (cp, mr, sp) = prog.runtime.size3();
+                    Ok((report.total, cp, mr, sp))
+                } else {
+                    Err(format!(
+                        "non-finite cost estimate ({}) for grid point {} — degenerate configuration",
+                        report.total,
+                        raw[p].label()
+                    ))
+                }
+            });
+        for (s, &p) in survivors.iter().enumerate() {
+            let (total, cp, mr, sp) = wave[s].clone()?;
+            costed[p] = Some((total, cp, mr, sp, plan_of[s].1));
+            if total < best_time {
+                best_time = total;
+            }
+        }
+        i = j;
+    }
+
+    let points: Vec<GridPoint> = raw
+        .iter()
+        .enumerate()
+        .map(|(p, r)| {
+            let c = costed[p];
+            GridPoint {
+                heap_mb: r.heap_mb,
+                exec_mem_mb: r.exec_mem_mb,
+                nodes: r.nodes,
+                k_local: r.k_local,
+                backend: r.backend,
+                budget_mb: r.budget_mb,
+                floor_secs: r.floor_secs,
+                cost_secs: c.map(|(t, ..)| t),
+                cp_insts: c.map_or(0, |(_, cp, ..)| cp),
+                mr_jobs: c.map_or(0, |(_, _, mr, _, _)| mr),
+                spark_jobs: c.map_or(0, |(_, _, _, sp, _)| sp),
+                plan_reused: c.is_some_and(|(.., reused)| reused),
+            }
+        })
+        .collect();
+
+    // Argmin over costed points; ties resolve to the smallest budget
+    // (then enumeration order) so the report is deterministic.
+    let best = points
+        .iter()
+        .enumerate()
+        .filter_map(|(i, p)| p.cost_secs.map(|c| (i, c, p.budget_mb)))
+        .min_by(|a, b| a.1.total_cmp(&b.1).then(a.2.total_cmp(&b.2)).then(a.0.cmp(&b.0)))
+        .map(|(i, ..)| i)
+        .ok_or("no grid point could be costed")?;
+
+    // Pareto frontier: budget-ascending sweep keeping strict time
+    // improvements — the result is non-dominated by construction.
+    let mut by_budget: Vec<usize> = (0..points.len()).filter(|&i| !points[i].pruned()).collect();
+    by_budget.sort_by(|&a, &b| {
+        points[a]
+            .budget_mb
+            .total_cmp(&points[b].budget_mb)
+            .then(points[a].cost_secs.unwrap().total_cmp(&points[b].cost_secs.unwrap()))
+            .then(a.cmp(&b))
+    });
+    let mut frontier = Vec::new();
+    let mut best_so_far = f64::INFINITY;
+    for idx in by_budget {
+        let c = points[idx].cost_secs.unwrap();
+        if c < best_so_far {
+            frontier.push(idx);
+            best_so_far = c;
+        }
+    }
+
+    let n_costed = points.iter().filter(|p| !p.pruned()).count();
+    Ok(ResourceReport {
+        pruned: points.len() - n_costed,
+        memo_hits: n_costed - memo.distinct(),
+        distinct_plans: memo.distinct(),
+        best,
+        frontier,
+        points,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        threads,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Legacy single-axis heap sweep (compat shims over the same costing)
+// ---------------------------------------------------------------------
+
+/// One evaluated configuration of the legacy heap sweep.
 #[derive(Clone, Debug)]
 pub struct ResourcePoint {
     /// Client/task heap size in bytes.
@@ -25,15 +582,20 @@ pub struct ResourcePoint {
     pub spark_jobs: usize,
 }
 
-/// Result of the sweep.
+/// Result of the legacy heap sweep: every evaluated point (in sweep
+/// order) plus the argmin. For the joint grid with a Pareto frontier
+/// see [`optimize_grid`].
 #[derive(Clone, Debug)]
 pub struct ResourceChoice {
+    /// The cost-argmin point.
     pub best: ResourcePoint,
-    pub frontier: Vec<ResourcePoint>,
+    /// Every evaluated point, in the order of `heaps_mb`.
+    pub points: Vec<ResourcePoint>,
 }
 
-/// Sweep client+task heap sizes and return the cost-optimal configuration
-/// (MR backend; see [`optimize_backend`] for the backend axis).
+/// Sweep client+task heap sizes and return the cost-optimal
+/// configuration (MR backend; see [`optimize_backend`] for the backend
+/// axis and [`optimize_grid`] for the joint grid).
 pub fn optimize(
     src: &str,
     args: &HashMap<usize, String>,
@@ -44,10 +606,15 @@ pub fn optimize(
     optimize_backend(src, args, meta, base_cc, heaps_mb, ExecBackend::Mr)
 }
 
-/// Backend-parameterised heap sweep: generate and cost the plan per heap
-/// size for the given backend. On the Spark backend the executor memory
-/// scales with the heap axis too, so broadcast-feasibility flips are part
-/// of the search space.
+/// Backend-parameterised heap sweep: generate and cost the plan per
+/// heap size for the given backend. On the Spark backend the executor
+/// memory scales with the heap axis (preserving the base ratio), so
+/// broadcast-feasibility flips are part of the search space.
+///
+/// The base configuration is validated up front — a zero `cp_heap_bytes`
+/// used to silently poison every Spark point with NaN through the
+/// executor-memory ratio, and NaN costs then panicked the `min_by`
+/// ranking; both now surface as diagnostics.
 pub fn optimize_backend(
     src: &str,
     args: &HashMap<usize, String>,
@@ -56,35 +623,44 @@ pub fn optimize_backend(
     heaps_mb: &[f64],
     backend: ExecBackend,
 ) -> Result<ResourceChoice, String> {
+    base_cc.validate()?;
+    let constants = CostConstants::default();
+    // safe: validate() guarantees cp_heap_bytes > 0
     let spark_exec_ratio = base_cc.spark_executor_mem_bytes / base_cc.cp_heap_bytes;
-    let mut frontier = Vec::new();
+    let mut points = Vec::new();
     for &h in heaps_mb {
-        let mut cc = base_cc.clone();
-        cc.cp_heap_bytes = h * MB;
-        cc.map_heap_bytes = h * MB;
-        cc.reduce_heap_bytes = h * MB;
+        if !(h.is_finite() && h > 0.0) {
+            return Err(format!("invalid heap sweep value {h} MB (must be finite and > 0)"));
+        }
+        let mut cc = base_cc.clone().with_heap_mb(h);
         cc.spark_executor_mem_bytes = h * MB * spark_exec_ratio;
         let opts = CompileOptions {
-            cc: crate::api::ClusterConfigOpt(cc.clone()),
+            cc: ClusterConfigOpt(cc.clone()),
             backend,
             ..Default::default()
         };
         let compiled = compile_with_meta(src, args, meta, &opts)?;
-        let report =
-            cost::cost_program(&compiled.runtime, &opts.cfg, &cc, &CostConstants::default());
-        frontier.push(ResourcePoint {
+        let report = cost::cost_program(&compiled.runtime, &opts.cfg, &cc, &constants);
+        if !report.total.is_finite() {
+            return Err(format!(
+                "non-finite cost estimate ({}) at heap {h} MB on backend {}",
+                report.total,
+                backend.name()
+            ));
+        }
+        points.push(ResourcePoint {
             heap_bytes: h * MB,
             cost_secs: report.total,
             mr_jobs: compiled.runtime.mr_job_count(),
             spark_jobs: compiled.runtime.spark_job_count(),
         });
     }
-    let best = frontier
+    let best = points
         .iter()
-        .min_by(|a, b| a.cost_secs.partial_cmp(&b.cost_secs).unwrap())
+        .min_by(|a, b| a.cost_secs.total_cmp(&b.cost_secs))
         .cloned()
         .ok_or("empty sweep")?;
-    Ok(ResourceChoice { best, frontier })
+    Ok(ResourceChoice { best, points })
 }
 
 #[cfg(test)]
@@ -105,9 +681,9 @@ mod tests {
             &[64.0, 2048.0],
         )
         .unwrap();
-        assert_eq!(choice.frontier.len(), 2);
-        let small = &choice.frontier[0];
-        let large = &choice.frontier[1];
+        assert_eq!(choice.points.len(), 2);
+        let small = &choice.points[0];
+        let large = &choice.points[1];
         assert!(small.mr_jobs > 0, "64MB heap forces MR");
         assert_eq!(large.mr_jobs, 0, "2GB heap keeps XS in CP");
         assert!(large.cost_secs < small.cost_secs);
@@ -126,12 +702,12 @@ mod tests {
             ExecBackend::Spark,
         )
         .unwrap();
-        assert_eq!(choice.frontier[0].mr_jobs, 0);
-        assert!(choice.frontier[0].spark_jobs > 0);
+        assert_eq!(choice.points[0].mr_jobs, 0);
+        assert!(choice.points[0].spark_jobs > 0);
     }
 
     #[test]
-    fn frontier_preserves_sweep_order() {
+    fn points_preserve_sweep_order() {
         let s = Scenario::xs();
         let choice = optimize(
             s.script(),
@@ -141,7 +717,96 @@ mod tests {
             &[128.0, 512.0, 2048.0],
         )
         .unwrap();
-        let heaps: Vec<f64> = choice.frontier.iter().map(|p| p.heap_bytes / MB).collect();
+        let heaps: Vec<f64> = choice.points.iter().map(|p| p.heap_bytes / MB).collect();
         assert_eq!(heaps, vec![128.0, 512.0, 2048.0]);
+    }
+
+    #[test]
+    fn zero_heap_base_is_rejected_not_nan() {
+        // Regression: `spark_exec_ratio = exec_mem / cp_heap` with a zero
+        // client heap used to poison every Spark point with NaN.
+        let s = Scenario::xs();
+        let mut cc = ClusterConfig::paper_cluster();
+        cc.cp_heap_bytes = 0.0;
+        let err = optimize_backend(
+            s.script(),
+            &s.args(),
+            &s.meta(1000),
+            &cc,
+            &[512.0],
+            ExecBackend::Spark,
+        )
+        .unwrap_err();
+        assert!(err.contains("cp_heap_bytes"), "{err}");
+    }
+
+    #[test]
+    fn zero_k_local_base_is_rejected() {
+        let s = Scenario::xs();
+        let mut cc = ClusterConfig::paper_cluster();
+        cc.k_local = 0;
+        assert!(optimize(s.script(), &s.args(), &s.meta(1000), &cc, &[512.0]).is_err());
+    }
+
+    fn xs_grid() -> ResourceGrid {
+        let s = Scenario::xs();
+        let mut g = ResourceGrid::new(s.script(), s.args(), DataScenario::from(&s));
+        g.threads = 2;
+        g
+    }
+
+    #[test]
+    fn default_grid_spans_every_axis() {
+        let g = xs_grid();
+        // 3 heaps x (cp: 2 k_l) + (mr: 2 nodes x 2 k_l) + (spark: 2 xmem
+        // x 2 nodes x 2 k_l) = 3 x (2 + 4 + 8) = 42 points
+        assert_eq!(g.point_count(), 42);
+        let r = optimize_grid(&g).unwrap();
+        assert_eq!(r.points.len(), 42);
+        // memoization: cost-only axes (nodes, k_local) share compiles
+        assert!(r.distinct_plans < r.points.len() - r.pruned);
+        assert!(r.memo_hits > 0);
+    }
+
+    #[test]
+    fn grid_rejects_empty_and_degenerate_axes() {
+        let mut g = xs_grid();
+        g.heaps_mb.clear();
+        assert!(optimize_grid(&g).is_err());
+        let mut g = xs_grid();
+        g.k_local = vec![0];
+        assert!(optimize_grid(&g).is_err());
+        let mut g = xs_grid();
+        g.heaps_mb = vec![f64::NAN];
+        assert!(optimize_grid(&g).is_err());
+        let mut g = xs_grid();
+        g.base.cp_heap_bytes = 0.0;
+        assert!(optimize_grid(&g).is_err());
+    }
+
+    #[test]
+    fn frontier_is_sorted_and_non_dominated() {
+        let r = optimize_grid(&xs_grid()).unwrap();
+        let f: Vec<&GridPoint> = r.frontier_points().collect();
+        assert!(!f.is_empty());
+        for w in f.windows(2) {
+            assert!(w[0].budget_mb < w[1].budget_mb, "budget must strictly increase");
+            assert!(
+                w[0].cost_secs.unwrap() > w[1].cost_secs.unwrap(),
+                "time must strictly decrease"
+            );
+        }
+        // the argmin is always on the frontier (it is undominated on time)
+        assert!(r.frontier.contains(&r.best));
+        assert_eq!(r.best().cost_secs, f.last().unwrap().cost_secs);
+    }
+
+    #[test]
+    fn xs_grid_argmin_is_a_cp_plan() {
+        // 80 MB XS fits any 2 GB+ heap: single-node CP wins outright and
+        // with the smallest budget.
+        let r = optimize_grid(&xs_grid()).unwrap();
+        assert_eq!(r.best().backend, ExecBackend::Cp);
+        assert_eq!(r.best().mr_jobs + r.best().spark_jobs, 0);
     }
 }

@@ -298,8 +298,11 @@ impl SweepReport {
 /// broadcast feasibility on the Spark backend), partition size, reducer
 /// count, replication, unknown-iteration constant, and the selection
 /// hints. Excludes the cost-only knobs: clock rate, slot counts,
-/// node/vcore/YARN geometry, and HDFS block size.
-fn plan_signature(
+/// node/vcore/YARN geometry, HDFS block size, and `k_local`.
+///
+/// Shared with the grid resource optimizer ([`crate::opt::resource`]),
+/// whose node/`k_local` axes are cost-only and therefore memo-friendly.
+pub(crate) fn plan_signature(
     cfg: &SystemConfig,
     hints: &SelectionHints,
     cc: &ClusterConfig,
@@ -329,6 +332,80 @@ fn plan_signature(
         hints.no_transpose_rewrite as u8
     ));
     sig
+}
+
+/// Plan-signature-keyed compile memo shared by [`sweep`] and the grid
+/// resource optimizer ([`crate::opt::resource`]): each distinct
+/// signature is compiled exactly once across the memo's lifetime, and
+/// every [`PlanMemo::ensure`] batch fans its distinct missing
+/// signatures out over the scoped thread pool.
+pub(crate) struct PlanMemo {
+    progs: Vec<CompiledProgram>,
+    by_sig: HashMap<String, usize>,
+}
+
+impl Default for PlanMemo {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PlanMemo {
+    /// Empty memo.
+    pub fn new() -> Self {
+        PlanMemo { progs: Vec::new(), by_sig: HashMap::new() }
+    }
+
+    /// Number of distinct plans compiled so far — the total number of
+    /// compile invocations made through this memo.
+    pub fn distinct(&self) -> usize {
+        self.progs.len()
+    }
+
+    /// The compiled plan at `idx` (an index returned by [`Self::ensure`]).
+    pub fn get(&self, idx: usize) -> &CompiledProgram {
+        &self.progs[idx]
+    }
+
+    /// Ensure every signature in `sigs` has a compiled plan. Distinct
+    /// signatures not yet memoized are compiled concurrently on up to
+    /// `threads` workers; `compile(i)` must compile the plan for
+    /// `sigs[i]` and is called once per new signature, with the position
+    /// of its first occurrence in this batch. Returns, aligned with
+    /// `sigs`, `(plan index, reused)` — `reused` is false only for the
+    /// first occurrence ever seen of a signature.
+    pub fn ensure(
+        &mut self,
+        sigs: &[String],
+        threads: usize,
+        compile: impl Fn(usize) -> Result<CompiledProgram, String> + Sync,
+    ) -> Result<Vec<(usize, bool)>, String> {
+        let mut missing: Vec<usize> = Vec::new();
+        let mut seen_in_batch: std::collections::HashSet<&str> = std::collections::HashSet::new();
+        for (i, sig) in sigs.iter().enumerate() {
+            if !self.by_sig.contains_key(sig.as_str()) && seen_in_batch.insert(sig.as_str()) {
+                missing.push(i);
+            }
+        }
+        let compiled: Vec<Result<CompiledProgram, String>> =
+            par::par_map(&missing, threads, |_, &cell| compile(cell));
+        for (&cell, r) in missing.iter().zip(compiled) {
+            // record the signature only once its compile succeeded, so a
+            // failed batch leaves the memo consistent for retries
+            let prog = r?;
+            self.by_sig.insert(sigs[cell].clone(), self.progs.len());
+            self.progs.push(prog);
+        }
+        Ok(sigs
+            .iter()
+            .enumerate()
+            .map(|(i, sig)| {
+                // `missing` is ascending, so binary_search identifies the
+                // fresh (first-occurrence) positions.
+                (self.by_sig[sig.as_str()], missing.binary_search(&i).is_err())
+            })
+            .collect())
+    }
 }
 
 fn compile_cell(
@@ -417,14 +494,40 @@ fn rank(cells: &[SweepCell]) -> Vec<usize> {
     ranking
 }
 
-/// Run the sweep: compile once per distinct plan shape (parallel), cost
-/// every cell concurrently, and rank. See the module docs for the
-/// pipeline; [`sweep_serial`] is the unmemoized serial reference.
-pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
-    let t0 = Instant::now();
+/// Reject empty grids and degenerate cluster/constant configurations
+/// before any compile: a zero heap or zero disk bandwidth would
+/// otherwise surface as NaN costs deep inside the ranking.
+fn validate_spec(spec: &SweepSpec) -> Result<(), String> {
     if spec.clusters.is_empty() || spec.scenarios.is_empty() || spec.backends.is_empty() {
         return Err("empty sweep grid (no clusters, scenarios or backends)".to_string());
     }
+    for c in &spec.clusters {
+        c.cc.validate().map_err(|e| format!("cluster '{}': {e}", c.name))?;
+    }
+    spec.constants.validate()
+}
+
+/// Reject non-finite cost estimates with a diagnostic naming the cell
+/// instead of letting NaN poison the (total_cmp) ranking.
+fn check_finite(cells: &[SweepCell]) -> Result<(), String> {
+    for c in cells {
+        if !c.cost_secs.is_finite() {
+            return Err(format!(
+                "non-finite cost estimate ({}) for scenario '{}' on cluster '{}' backend '{}'",
+                c.cost_secs, c.scenario, c.cluster, c.backend
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Run the sweep: compile once per distinct plan shape (parallel, via
+/// the shared [`PlanMemo`]), cost every cell concurrently, and rank.
+/// See the module docs for the pipeline; [`sweep_serial`] is the
+/// unmemoized serial reference.
+pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
+    let t0 = Instant::now();
+    validate_spec(spec)?;
     let threads = if spec.threads == 0 { par::default_threads() } else { spec.threads };
     let grid = grid_of(spec);
     let sigs: Vec<String> = grid
@@ -440,36 +543,23 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
         })
         .collect();
 
-    // Distinct plan shapes in first-occurrence order.
-    let mut sig_uniq: HashMap<&str, usize> = HashMap::new();
-    let mut uniq_cells: Vec<usize> = Vec::new();
-    for (i, sig) in sigs.iter().enumerate() {
-        if !sig_uniq.contains_key(sig.as_str()) {
-            sig_uniq.insert(sig.as_str(), uniq_cells.len());
-            uniq_cells.push(i);
-        }
-    }
-
     // Phase 1: compile each distinct plan shape once, in parallel.
-    let compiled: Vec<Result<CompiledProgram, String>> =
-        par::par_map(&uniq_cells, threads, |_, &cell| {
-            let (ci, si, bi) = grid[cell];
-            compile_cell(spec, ci, si, bi)
-        });
-    let mut progs: Vec<CompiledProgram> = Vec::with_capacity(compiled.len());
-    for r in compiled {
-        progs.push(r?);
-    }
+    let mut memo = PlanMemo::new();
+    let plan_of = memo.ensure(&sigs, threads, |cell| {
+        let (ci, si, bi) = grid[cell];
+        compile_cell(spec, ci, si, bi)
+    })?;
 
     // Phase 2: cost all cells concurrently against their full cluster
     // config (clock/slots matter here even when the plan is shared).
     let cells: Vec<SweepCell> = par::par_map(&grid, threads, |i, &(ci, si, bi)| {
-        let u = sig_uniq[sigs[i].as_str()];
-        cost_cell(spec, ci, si, bi, &progs[u], &sigs[i], uniq_cells[u] != i)
+        let (u, reused) = plan_of[i];
+        cost_cell(spec, ci, si, bi, memo.get(u), &sigs[i], reused)
     });
+    check_finite(&cells)?;
 
     let ranking = rank(&cells);
-    let distinct_plans = uniq_cells.len();
+    let distinct_plans = memo.distinct();
     Ok(SweepReport {
         memo_hits: cells.len() - distinct_plans,
         distinct_plans,
@@ -486,9 +576,7 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
 /// baseline for the `sweep` bench and as a cross-check in tests.
 pub fn sweep_serial(spec: &SweepSpec) -> Result<SweepReport, String> {
     let t0 = Instant::now();
-    if spec.clusters.is_empty() || spec.scenarios.is_empty() || spec.backends.is_empty() {
-        return Err("empty sweep grid (no clusters, scenarios or backends)".to_string());
-    }
+    validate_spec(spec)?;
     let grid = grid_of(spec);
     let sigs: Vec<String> = grid
         .iter()
@@ -517,6 +605,7 @@ pub fn sweep_serial(spec: &SweepSpec) -> Result<SweepReport, String> {
         };
         cells.push(cost_cell(spec, ci, si, bi, &prog, &sigs[i], reused));
     }
+    check_finite(&cells)?;
     let ranking = rank(&cells);
     Ok(SweepReport {
         memo_hits: cells.len() - distinct_plans,
@@ -615,6 +704,24 @@ mod tests {
         spec.backends.clear();
         assert!(sweep(&spec).is_err());
         assert!(sweep_serial(&spec).is_err());
+    }
+
+    #[test]
+    fn degenerate_cluster_is_rejected_not_ranked() {
+        // NaN-safe ranking: a zero heap used to reach `min_by` as NaN
+        // costs; now it is rejected at the entry point with a diagnostic.
+        let mut spec = tiny_spec();
+        spec.clusters[0].cc.cp_heap_bytes = 0.0;
+        let err = sweep(&spec).unwrap_err();
+        assert!(err.contains("cp_heap_bytes"), "{err}");
+        assert!(sweep_serial(&spec).is_err());
+        let mut spec = tiny_spec();
+        spec.clusters[1].cc.k_local = 0;
+        let err = sweep(&spec).unwrap_err();
+        assert!(err.contains("k_local"), "{err}");
+        let mut spec = tiny_spec();
+        spec.constants.hdfs_read_binaryblock = 0.0;
+        assert!(sweep(&spec).is_err());
     }
 
     #[test]

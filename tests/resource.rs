@@ -1,0 +1,347 @@
+//! Integration tests for the grid resource optimizer
+//! (`opt::resource::optimize_grid` / `api::optimize_resources`): axis
+//! coverage with memoization (the acceptance criterion: strictly fewer
+//! compile invocations than grid points), Pareto-frontier properties,
+//! pruning soundness (identical argmin/frontier with pruning on and
+//! off), determinism across thread counts, NaN-safe rejection of
+//! degenerate configurations, and the persistent-read-floor lower-bound
+//! property across random scenarios, clusters and backends.
+
+use systemds::api::{
+    compile_with_meta, linreg_cg_args, optimize_resources, ClusterConfigOpt, CompileOptions,
+    DataScenario, ExecBackend, ResourceGrid, Scenario, LINREG_CG, LINREG_DS,
+};
+use systemds::conf::{ClusterConfig, CostConstants, SystemConfig};
+use systemds::cost;
+use systemds::matrix::{Format, MatrixCharacteristics};
+use systemds::opt::resource::{optimize_grid, GridPoint};
+use systemds::util::prop::forall;
+
+/// The LinReg CG grid of the acceptance criterion: default joint axes
+/// (3 heaps × 2 executor memories × 2 node counts × 2 `k_local` × 3
+/// backends) on the given data scenario.
+fn cg_grid(s: &Scenario, iters: usize) -> ResourceGrid {
+    let mut g = ResourceGrid::new(LINREG_CG, linreg_cg_args(iters), DataScenario::from(s));
+    g.threads = 4;
+    g
+}
+
+#[test]
+fn cg_grid_explores_three_plus_axes_and_memoizes() {
+    let g = cg_grid(&Scenario::xl1(), 20);
+    // >= 3 explored axes: heap, parallelism (nodes and k_local), backend
+    assert!(g.heaps_mb.len() >= 2, "heap axis");
+    assert!(g.nodes.len() >= 2 && g.k_local.len() >= 2, "parallelism axes");
+    assert!(g.backends.len() >= 3, "backend axis");
+    let r = optimize_grid(&g).unwrap();
+    assert_eq!(r.points.len(), g.point_count());
+    // the memoized parallel grid costs strictly fewer compile+cost
+    // invocations than grid-size, with a positive memo hit-rate
+    assert!(
+        r.distinct_plans < g.point_count(),
+        "{} compiles for {} points",
+        r.distinct_plans,
+        g.point_count()
+    );
+    assert!(r.memo_hits > 0, "memo hit-rate must be > 0");
+    let costed = r.points.iter().filter(|p| !p.pruned()).count();
+    assert_eq!(r.distinct_plans + r.memo_hits, costed);
+    assert_eq!(costed + r.pruned, r.points.len());
+    // the frontier is non-empty and the argmin is on it
+    assert!(!r.frontier.is_empty());
+    assert!(r.frontier.contains(&r.best));
+}
+
+/// Every frontier must be budget-sorted, strictly improving in time,
+/// and non-dominated against *all* costed points.
+fn assert_frontier_valid(points: &[GridPoint], frontier: &[usize]) {
+    let f: Vec<&GridPoint> = frontier.iter().map(|&i| &points[i]).collect();
+    for w in f.windows(2) {
+        assert!(w[0].budget_mb < w[1].budget_mb, "frontier not budget-sorted");
+        assert!(
+            w[0].cost_secs.unwrap() > w[1].cost_secs.unwrap(),
+            "frontier not strictly improving"
+        );
+    }
+    for fp in &f {
+        for q in points.iter().filter(|p| !p.pruned()) {
+            let (fb, fc) = (fp.budget_mb, fp.cost_secs.unwrap());
+            let (qb, qc) = (q.budget_mb, q.cost_secs.unwrap());
+            let dominates = (qb <= fb && qc < fc) || (qb < fb && qc <= fc);
+            assert!(
+                !dominates,
+                "frontier point {} ({fb}MB, {fc}s) dominated by {} ({qb}MB, {qc}s)",
+                fp.label(),
+                q.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn frontier_is_non_dominated_on_the_cg_grid() {
+    let r = optimize_grid(&cg_grid(&Scenario::xl1(), 20)).unwrap();
+    assert_frontier_valid(&r.points, &r.frontier);
+    // the frontier's last point is the argmin
+    assert_eq!(*r.frontier.last().unwrap(), r.best);
+}
+
+/// Property: across random data sizes and axis subsets, the frontier is
+/// sorted and non-dominated.
+#[test]
+fn prop_frontier_non_dominated() {
+    let heap_pool = [256.0, 512.0, 1024.0, 2048.0, 8192.0];
+    forall(
+        10,
+        0xF007,
+        |r| {
+            let rows = r.range_i64(1, 50) * 100_000;
+            let cols = r.range_i64(1, 10) * 100;
+            let h1 = heap_pool[r.below(5) as usize];
+            let h2 = heap_pool[r.below(5) as usize];
+            let nodes = vec![1 + r.below(4) as usize, 1 + r.below(8) as usize];
+            (rows, cols, h1, h2, nodes)
+        },
+        |&(rows, cols, h1, h2, ref nodes)| {
+            let s = Scenario::xs();
+            let mut g = ResourceGrid::new(
+                LINREG_DS,
+                s.args(),
+                DataScenario::linreg("R", rows, cols),
+            );
+            g.heaps_mb = vec![h1, h2];
+            g.nodes = nodes.clone();
+            g.threads = 2;
+            let r = optimize_grid(&g)?;
+            assert_frontier_valid(&r.points, &r.frontier);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn pruning_changes_neither_argmin_nor_frontier() {
+    // XL1 on the DS script: the 800 GB persistent read floors the CP
+    // points at ~5000 s, which the distributed points beat at smaller
+    // budgets — so pruning must actually fire here...
+    let s = Scenario::xl1();
+    let mut g = ResourceGrid::new(LINREG_DS, s.args(), DataScenario::from(&s));
+    g.threads = 4;
+    let pruned = optimize_grid(&g).unwrap();
+    assert!(pruned.pruned > 0, "expected the read floor to prune CP points");
+    // ...and must not change any reported result
+    g.prune = false;
+    let full = optimize_grid(&g).unwrap();
+    assert_eq!(full.pruned, 0);
+    assert_eq!(pruned.best().label(), full.best().label());
+    assert_eq!(pruned.best().cost_secs, full.best().cost_secs);
+    let fa: Vec<(String, Option<f64>)> =
+        pruned.frontier_points().map(|p| (p.label(), p.cost_secs)).collect();
+    let fb: Vec<(String, Option<f64>)> =
+        full.frontier_points().map(|p| (p.label(), p.cost_secs)).collect();
+    assert_eq!(fa, fb, "pruning altered the frontier");
+    // pruned points are exactly the ones whose floor can never win
+    for (p, q) in pruned.points.iter().zip(&full.points) {
+        if p.pruned() {
+            assert!(
+                q.cost_secs.unwrap() >= p.floor_secs,
+                "pruned point {} cost {} below its floor {}",
+                p.label(),
+                q.cost_secs.unwrap(),
+                p.floor_secs
+            );
+        } else {
+            assert_eq!(p.cost_secs, q.cost_secs);
+        }
+    }
+}
+
+#[test]
+fn grid_is_deterministic_across_thread_counts() {
+    let mut one = cg_grid(&Scenario::xl1(), 10);
+    one.threads = 1;
+    let mut many = cg_grid(&Scenario::xl1(), 10);
+    many.threads = 8;
+    let a = optimize_grid(&one).unwrap();
+    let b = optimize_grid(&many).unwrap();
+    assert_eq!(a.frontier_table(), b.frontier_table());
+    assert_eq!(a.best, b.best);
+    assert_eq!(a.pruned, b.pruned);
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        match (pa.cost_secs, pb.cost_secs) {
+            (Some(ca), Some(cb)) => assert_eq!(ca.to_bits(), cb.to_bits(), "{}", pa.label()),
+            (None, None) => {}
+            _ => panic!("pruning diverged across thread counts for {}", pa.label()),
+        }
+        assert_eq!(pa.plan_reused, pb.plan_reused);
+    }
+}
+
+#[test]
+fn api_wrapper_matches_engine() {
+    let g = cg_grid(&Scenario::xs(), 5);
+    let via_api = optimize_resources(&g).unwrap();
+    let direct = optimize_grid(&g).unwrap();
+    assert_eq!(via_api.frontier_table(), direct.frontier_table());
+    assert_eq!(via_api.summary_shape(), direct.summary_shape());
+}
+
+/// Deterministic parts of the summary (everything but wall time).
+trait SummaryShape {
+    fn summary_shape(&self) -> (usize, usize, usize, usize, usize);
+}
+impl SummaryShape for systemds::api::ResourceReport {
+    fn summary_shape(&self) -> (usize, usize, usize, usize, usize) {
+        (self.points.len(), self.distinct_plans, self.memo_hits, self.pruned, self.frontier.len())
+    }
+}
+
+// ---------------------------------------------------------------------
+// NaN-safety regressions (the three bugfixes)
+// ---------------------------------------------------------------------
+
+#[test]
+fn degenerate_base_configs_are_rejected_with_diagnostics() {
+    let s = Scenario::xs();
+    // zero client heap: used to poison spark_exec_ratio with NaN
+    let mut g = cg_grid(&s, 5);
+    g.base.cp_heap_bytes = 0.0;
+    let err = optimize_grid(&g).unwrap_err();
+    assert!(err.contains("cp_heap_bytes"), "{err}");
+    // k_local = 0: used to make the parfor divisor inf
+    let mut g = cg_grid(&s, 5);
+    g.base.k_local = 0;
+    let err = optimize_grid(&g).unwrap_err();
+    assert!(err.contains("k_local"), "{err}");
+    // zero disk bandwidth: used to make IO terms inf/NaN
+    let mut g = cg_grid(&s, 5);
+    g.constants.hdfs_read_binaryblock = 0.0;
+    let err = optimize_grid(&g).unwrap_err();
+    assert!(err.contains("hdfs_read_binaryblock"), "{err}");
+    // degenerate axis values
+    let mut g = cg_grid(&s, 5);
+    g.k_local = vec![0];
+    assert!(optimize_grid(&g).is_err());
+    let mut g = cg_grid(&s, 5);
+    g.heaps_mb = vec![-512.0];
+    assert!(optimize_grid(&g).is_err());
+    let mut g = cg_grid(&s, 5);
+    g.backends.clear();
+    assert!(optimize_grid(&g).is_err());
+}
+
+#[test]
+fn legacy_heap_sweep_rejects_degenerate_configs() {
+    use systemds::opt::resource::optimize_backend;
+    let s = Scenario::xs();
+    let mut cc = ClusterConfig::paper_cluster();
+    cc.cp_heap_bytes = 0.0;
+    let err = optimize_backend(
+        s.script(),
+        &s.args(),
+        &s.meta(1000),
+        &cc,
+        &[512.0],
+        ExecBackend::Spark,
+    )
+    .unwrap_err();
+    assert!(err.contains("cp_heap_bytes"), "{err}");
+    let mut cc = ClusterConfig::paper_cluster();
+    cc.k_local = 0;
+    assert!(optimize_backend(
+        s.script(),
+        &s.args(),
+        &s.meta(1000),
+        &cc,
+        &[512.0],
+        ExecBackend::Mr
+    )
+    .is_err());
+    // degenerate heap values on a valid base are rejected too
+    let cc = ClusterConfig::paper_cluster();
+    assert!(optimize_backend(
+        s.script(),
+        &s.args(),
+        &s.meta(1000),
+        &cc,
+        &[f64::NAN],
+        ExecBackend::Mr
+    )
+    .is_err());
+}
+
+/// Zero-iteration While regression, end to end: with `N̂ = 0` the While
+/// block charges only its predicate, so the program total must not
+/// include the (0.5 s+) first-iteration read of X.
+#[test]
+fn zero_iteration_while_costs_only_predicate_time() {
+    let src = "X = read($1);\ns = 1;\nwhile (s < 10) { s = s + sum(X); }\nwrite(s, $4);";
+    let s = Scenario::xs();
+    let opts = CompileOptions::default();
+    let c = compile_with_meta(src, &s.args(), &s.meta(1000), &opts).unwrap();
+    let mut cfg = opts.cfg.clone();
+    cfg.unknown_iterations = 0.0;
+    let zero =
+        cost::cost_program(&c.runtime, &cfg, &opts.cc.0, &CostConstants::default()).total;
+    cfg.unknown_iterations = 10.0;
+    let ten = cost::cost_program(&c.runtime, &cfg, &opts.cc.0, &CostConstants::default()).total;
+    assert!(zero < 0.05, "N̂=0 must not charge the loop body, got {zero}");
+    assert!(ten > 0.5, "N̂=10 pays the first-iteration read, got {ten}");
+}
+
+// ---------------------------------------------------------------------
+// The pruning bound
+// ---------------------------------------------------------------------
+
+/// Property: the persistent-read IO floor is a true lower bound on the
+/// full cost-model estimate, across random scenario sizes, cluster
+/// shapes, scripts and all three backends.
+#[test]
+fn prop_read_floor_is_a_lower_bound() {
+    forall(
+        15,
+        0xF100,
+        |r| {
+            let rows = r.range_i64(1, 80) * 100_000;
+            let cols = r.range_i64(1, 20) * 100;
+            let heap = [256.0, 512.0, 2048.0, 8192.0][r.below(4) as usize];
+            let nodes = 1 + r.below(10) as usize;
+            let script_cg = r.below(2) == 1;
+            (rows, cols, heap, nodes, script_cg)
+        },
+        |&(rows, cols, heap, nodes, script_cg)| {
+            let cfg = SystemConfig::default();
+            let k = CostConstants::default();
+            let cc = ClusterConfig::paper_cluster().with_heap_mb(heap).with_nodes(nodes);
+            let scenario = DataScenario::linreg("R", rows, cols);
+            let inputs = vec![
+                (MatrixCharacteristics::dense(rows, cols, cfg.blocksize), Format::BinaryBlock),
+                (MatrixCharacteristics::dense(rows, 1, cfg.blocksize), Format::BinaryBlock),
+            ];
+            let (src, args) = if script_cg {
+                (LINREG_CG, linreg_cg_args(5))
+            } else {
+                (LINREG_DS, Scenario::xs().args())
+            };
+            for backend in ExecBackend::all() {
+                let opts = CompileOptions {
+                    cfg: cfg.clone(),
+                    cc: ClusterConfigOpt(cc.clone()),
+                    backend,
+                    ..Default::default()
+                };
+                let c = compile_with_meta(src, &args, &scenario.meta(cfg.blocksize), &opts)?;
+                let total = cost::cost_program(&c.runtime, &cfg, &cc, &k).total;
+                let floor = cost::read_io_floor(&inputs, backend, &cfg, &cc, &k);
+                if floor > total {
+                    return Err(format!(
+                        "{}x{cols} heap={heap} nodes={nodes} {}: floor {floor} > cost {total}",
+                        rows,
+                        backend.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
