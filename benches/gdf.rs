@@ -1,0 +1,71 @@
+//! Bench: the global data flow optimizer (`opt/gdf.rs`) — parallel,
+//! plan-memoized enumeration of per-cut data-flow properties vs a
+//! serial evaluation of the same candidate space.
+//!
+//! Uses the in-repo fixed-budget harness (criterion is unavailable in
+//! the hermetic offline build; see rust/Cargo.toml).
+
+use std::time::Duration;
+
+use systemds::api::{DataScenario, GdfSpec, Scenario};
+use systemds::matrix::Format;
+use systemds::opt::gdf::optimize;
+use systemds::util::bench::Bencher;
+use systemds::util::par;
+
+/// The full default search space (3 block sizes × 2 formats × 2
+/// partition sizes × per-cut backends) on the loop-heavy CG script.
+fn wide_spec(threads: usize) -> GdfSpec {
+    let s = Scenario::xl1();
+    let mut spec = GdfSpec::linreg_cg(DataScenario::from(&s), 20);
+    spec.blocksizes = vec![500, 1000, 2000];
+    spec.formats = vec![Format::BinaryBlock, Format::TextCell];
+    spec.partitions_mb = vec![8.0, 32.0];
+    spec.threads = threads;
+    spec
+}
+
+fn main() {
+    let threads = par::default_threads();
+    let report = optimize(&wide_spec(threads)).expect("gdf");
+    println!(
+        "== GDF space: {} candidates, {} distinct plans compiled ==",
+        report.candidates.len(),
+        report.distinct_plans,
+    );
+    println!("{}", report.summary());
+
+    let mut b = Bencher::new().with_budget(Duration::from_millis(300), Duration::from_secs(3));
+    let par_stats = b
+        .bench(&format!("parallel GDF ({threads} threads, memoized)"), || {
+            optimize(&wide_spec(threads)).unwrap().candidates.len()
+        })
+        .clone();
+    let ser_stats = b
+        .bench("serial GDF (1 thread)", || {
+            optimize(&wide_spec(1)).unwrap().candidates.len()
+        })
+        .clone();
+
+    let speedup = ser_stats.median.as_secs_f64() / par_stats.median.as_secs_f64().max(1e-12);
+    println!(
+        "\n-> parallel GDF is {speedup:.2}x the serial evaluation ({} vs {})",
+        systemds::util::bench::fmt_dur(par_stats.median),
+        systemds::util::bench::fmt_dur(ser_stats.median),
+    );
+    if speedup > 1.0 {
+        println!("-> PARALLEL WINS");
+    } else {
+        println!("-> parallel did not win on this machine/space");
+    }
+
+    println!("\n-- decision trace (argmin plan) --");
+    print!("{}", report.decision_table());
+    println!(
+        "best: {} ({}) vs default {} ({:+.1}%)",
+        report.best().label(),
+        systemds::util::fmt::fmt_secs(report.best().cost_secs),
+        systemds::util::fmt::fmt_secs(report.baseline().cost_secs),
+        -report.improvement_pct()
+    );
+}

@@ -18,6 +18,7 @@ use crate::lop::SelectionHints;
 use crate::matrix::{Format, MatrixCharacteristics};
 use crate::rtprog::{self, RtProgram};
 
+pub use crate::opt::gdf::{CutDecision, GdfCandidate, GdfReport, GdfSpec};
 pub use crate::opt::resource::{GridPoint, ResourceGrid, ResourceReport};
 pub use crate::opt::sweep::{DataScenario, NamedCluster, SweepCell, SweepReport, SweepSpec};
 pub use crate::rtprog::ExecBackend;
@@ -41,6 +42,19 @@ pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
 /// wave pipeline and the budget semantics.
 pub fn optimize_resources(grid: &ResourceGrid) -> Result<ResourceReport, String> {
     crate::opt::resource::optimize_grid(grid)
+}
+
+/// Run the global data flow optimizer: enumerate *interesting properties*
+/// per DAG cut — block size, on-disk format, broadcast-partitioning
+/// decision and forced per-operator-group execution backend — recompile
+/// each candidate configuration into a runtime plan (plan-signature
+/// memoization shared with [`sweep`] and [`optimize_resources`]), cost
+/// every candidate with the linearised time model, and return the argmin
+/// plan with a per-cut decision trace plus an EXPLAIN-style before/after
+/// plan diff. Thin wrapper around [`crate::opt::gdf::optimize`]; see that
+/// module for the enumeration and pruning rules.
+pub fn optimize_global_dataflow(spec: &GdfSpec) -> Result<GdfReport, String> {
+    crate::opt::gdf::optimize(spec)
 }
 
 /// Compilation options: system config + cluster characteristics + hints +
@@ -101,19 +115,48 @@ pub fn compile_with_meta(
     meta: &dyn MetaProvider,
     opts: &CompileOptions,
 ) -> Result<CompiledProgram, String> {
+    compile_with_groups(src, args, meta, opts, &[])
+}
+
+/// Compile with a per-operator-group backend assignment: top-level block
+/// `i` of the main program is exec-typed and code-generated against
+/// `groups[i]` (nested blocks inherit their group's backend; blocks
+/// beyond `groups.len()` and function bodies use `opts.backend`). This is
+/// the pipeline the global data flow optimizer drives — an empty `groups`
+/// is exactly [`compile_with_meta`].
+///
+/// Every public compile entry routes through here, so the cluster
+/// configuration is always validated before any plan is generated: a
+/// degenerate `cc` (zero heap, zero `k_local`, …) becomes a diagnostic
+/// instead of NaN cost estimates downstream.
+pub fn compile_with_groups(
+    src: &str,
+    args: &HashMap<usize, String>,
+    meta: &dyn MetaProvider,
+    opts: &CompileOptions,
+    groups: &[ExecBackend],
+) -> Result<CompiledProgram, String> {
+    opts.cc.0.validate()?;
     let script = dml::frontend(src)?;
     let mut prog = ir::build::build_program(&script, args, meta, opts.cfg.blocksize)?;
     ir::rewrites::rewrite_program(&mut prog);
     ir::size_prop::propagate(&mut prog, opts.cfg.blocksize);
     ir::memory::annotate(&mut prog, &opts.cfg);
-    ir::exec_type::select_with(
+    ir::exec_type::select_groups(
         &mut prog,
         &opts.cfg,
         &opts.cc.0,
         opts.backend == ExecBackend::Cp,
+        groups,
     );
-    let runtime =
-        rtprog::gen::generate_backend(&prog, &opts.cfg, &opts.cc.0, &opts.hints, opts.backend);
+    let runtime = rtprog::gen::generate_groups(
+        &prog,
+        &opts.cfg,
+        &opts.cc.0,
+        &opts.hints,
+        opts.backend,
+        groups,
+    );
     Ok(CompiledProgram { hops: prog, runtime })
 }
 

@@ -92,7 +92,9 @@ impl ClusterConfig {
             reduce_heap_bytes: heap_bytes / 4.0,
             k_local: threads,
             k_map: threads,
-            k_reduce: threads / 2,
+            // floored at 1: a single-threaded local config must still
+            // validate (every api:: compile entry now rejects zero slots)
+            k_reduce: (threads / 2).max(1),
             hdfs_block_bytes: 32.0 * MB,
             nodes: 1,
             vcores_per_node: threads,

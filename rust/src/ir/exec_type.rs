@@ -6,6 +6,7 @@
 
 use super::*;
 use crate::conf::{ClusterConfig, SystemConfig};
+use crate::rtprog::ExecBackend;
 
 /// Select execution types for all hops in the program, and set per-block
 /// `recompile` flags (blocks with MR operators or unknowns are marked for
@@ -19,12 +20,35 @@ pub fn select(prog: &mut Program, cfg: &SystemConfig, cc: &ClusterConfig) {
 /// single-node (`ExecBackend::Cp`) plan family, where the cost model
 /// rather than the compiler exposes when data outgrows one machine.
 pub fn select_with(prog: &mut Program, cfg: &SystemConfig, cc: &ClusterConfig, force_cp: bool) {
-    let budget = if force_cp { f64::INFINITY } else { cfg.cp_budget(cc) };
+    select_groups(prog, cfg, cc, force_cp, &[])
+}
+
+/// Per-group selection for the global data flow optimizer
+/// ([`crate::opt::gdf`]): top-level block `i` of the main program is
+/// selected under the forced backend `groups[i]` — an infinite budget
+/// (everything CP) when the group is forced to [`ExecBackend::Cp`], the
+/// regular §2 memory-budget rule otherwise (MR and Spark share the CP-vs-
+/// distributed split; they differ later, at plan generation). Blocks
+/// beyond `groups.len()` and function bodies fall back to
+/// `default_force_cp`, so `select_groups(.., &[])` is exactly
+/// [`select_with`].
+pub fn select_groups(
+    prog: &mut Program,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    default_force_cp: bool,
+    groups: &[ExecBackend],
+) {
+    let budget_of =
+        |force_cp: bool| if force_cp { f64::INFINITY } else { cfg.cp_budget(cc) };
     let mut blocks = std::mem::take(&mut prog.blocks);
-    select_blocks(&mut blocks, budget);
+    for (i, b) in blocks.iter_mut().enumerate() {
+        let force = groups.get(i).map_or(default_force_cp, |&b| b == ExecBackend::Cp);
+        select_blocks(std::slice::from_mut(b), budget_of(force));
+    }
     prog.blocks = blocks;
     for f in prog.funcs.values_mut() {
-        select_blocks(&mut f.body, budget);
+        select_blocks(&mut f.body, budget_of(default_force_cp));
     }
 }
 
@@ -201,6 +225,33 @@ mod tests {
         let execs = exec_of(&prog, |h| h.dtype.is_matrix());
         assert!(!execs.is_empty());
         assert!(execs.iter().all(|e| *e == ExecType::Cp));
+    }
+
+    #[test]
+    fn per_group_force_cp_only_affects_its_block() {
+        // GDF per-cut overrides: forcing CP on the computation block of
+        // XL1 keeps its 1 TB operators in the control program while an
+        // unforced sibling program still selects MR for them.
+        let script = dml::frontend(crate::ir::build::tests::LINREG_DS).unwrap();
+        let mut prog = build_program(&script, &linreg_args(), &xl1(), 1000).unwrap();
+        rewrites::rewrite_program(&mut prog);
+        size_prop::propagate(&mut prog, 1000);
+        memory::annotate(&mut prog, &SystemConfig::default());
+        let n_blocks = prog.blocks.len();
+        let mut groups = vec![ExecBackend::Mr; n_blocks];
+        for g in groups.iter_mut().skip(1) {
+            *g = ExecBackend::Cp;
+        }
+        select_groups(
+            &mut prog,
+            &SystemConfig::default(),
+            &ClusterConfig::paper_cluster(),
+            false,
+            &groups,
+        );
+        let execs = exec_of(&prog, |h| h.dtype.is_matrix());
+        assert!(!execs.is_empty());
+        assert!(execs.iter().all(|e| *e == ExecType::Cp), "{execs:?}");
     }
 
     #[test]

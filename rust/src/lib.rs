@@ -32,11 +32,13 @@
 //!    substitute for the paper's Hadoop testbed).
 //! 7. [`runtime`] — the PJRT bridge that loads AOT-compiled XLA artifacts
 //!    (JAX/Pallas, built once by `make artifacts`) for the compute hot path.
-//! 8. [`opt`] — cost-model consumers: the parallel grid resource
-//!    optimizer with Pareto frontier ([`opt::resource`]), plan
-//!    comparison, and the batched parallel scenario-sweep engine
-//!    ([`opt::sweep`]) that costs ClusterConfig × data-size grids into
-//!    ranked comparison tables.
+//! 8. [`opt`] — cost-model consumers: the global data flow optimizer
+//!    ([`opt::gdf`], enumerating per-cut block size / format /
+//!    partitioning / backend properties into restructured plans), the
+//!    parallel grid resource optimizer with Pareto frontier
+//!    ([`opt::resource`]), plan comparison, and the batched parallel
+//!    scenario-sweep engine ([`opt::sweep`]) that costs ClusterConfig ×
+//!    data-size grids into ranked comparison tables.
 //!
 //! The high-level entry points live in [`api`]: compile a DML script into a
 //! runtime plan, cost it against a cluster configuration, explain it at any
@@ -57,6 +59,7 @@ pub mod runtime;
 pub mod util;
 
 pub use api::{
-    compile, optimize_resources, sweep, CompileOptions, CompiledProgram, ExecBackend, Scenario,
+    compile, optimize_global_dataflow, optimize_resources, sweep, CompileOptions,
+    CompiledProgram, ExecBackend, Scenario,
 };
 pub use conf::{ClusterConfig, CostConstants, SystemConfig};

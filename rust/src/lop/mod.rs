@@ -148,13 +148,23 @@ pub fn select_matmult_backend(
             };
             let (bc_input, bc_size) = if a_ser <= b_ser { (0, a_ser) } else { (1, b_ser) };
             if bc_size.is_finite() && bc_size <= bc_budget {
-                let partition =
-                    backend != ExecBackend::Spark && bc_size > cfg.partition_bytes;
+                let partition = partition_broadcast(backend, bc_size, cfg);
                 return MatMultMethod::MrMapMM { broadcast_input: bc_input, partition };
             }
             MatMultMethod::MrCpmm
         }
     }
+}
+
+/// The broadcast-partitioning decision — one of the *interesting
+/// properties* the global data flow optimizer ([`crate::opt::gdf`])
+/// enumerates per DAG cut (via [`crate::conf::SystemConfig::partition_bytes`]).
+/// MR distributed-cache broadcasts larger than one partition are
+/// pre-partitioned by a CP `partition` instruction so each map task
+/// streams only the partitions it touches; Spark torrent broadcasts are
+/// fetched whole from peers and are never partitioned.
+pub fn partition_broadcast(backend: ExecBackend, bc_size: f64, cfg: &SystemConfig) -> bool {
+    backend != ExecBackend::Spark && bc_size > cfg.partition_bytes
 }
 
 /// If `id` is a transpose hop, return the id of its input.

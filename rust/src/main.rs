@@ -8,6 +8,7 @@
 //! repro resource --grid heaps=512,2048:nodes=2,6        grid resource optimizer
 //! repro resource-opt --scenario xs                      legacy heap sweep
 //! repro sweep [--heaps 512,...] [--serial]              parallel grid sweep
+//! repro gdf --script cg                                 global data flow optimizer
 //! ```
 
 use std::collections::HashMap;
@@ -18,6 +19,8 @@ use systemds::api::{
 use systemds::conf::{ClusterConfig, CostConstants, MB};
 use systemds::cost;
 use systemds::cp::interp::Executor;
+use systemds::matrix::Format;
+use systemds::opt::gdf;
 use systemds::opt::resource;
 use systemds::opt::sweep::{self, heap_clock_clusters, DataScenario, SweepSpec};
 use systemds::runtime::KernelRegistry;
@@ -32,9 +35,10 @@ fn main() {
         Some("resource") => cmd_resource(&args[1..]),
         Some("resource-opt") => cmd_resource_opt(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
+        Some("gdf") => cmd_gdf(&args[1..]),
         _ => {
             eprintln!(
-                "usage: repro <explain|cost|scenarios|run|resource|resource-opt|sweep> [options]\n\
+                "usage: repro <explain|cost|scenarios|run|resource|resource-opt|sweep|gdf> [options]\n\
                  \n\
                  explain --scenario <xs|xl1..xl4> [--level hops|runtime]\n\
                  \x20       [--backend cp|mr|spark] [--script ds|cg] [--iters N]\n\
@@ -49,7 +53,11 @@ fn main() {
                  \x20       [--backend cp|mr|spark]\n\
                  sweep [--scenarios xs,xl1,...] [--heaps 512,1024,...]\n\
                  \x20     [--backends cp,mr,spark] [--script ds|cg] [--iters N]\n\
-                 \x20     [--threads T] [--serial]"
+                 \x20     [--threads T] [--serial]\n\
+                 gdf [--scenario <name>] [--script cg|ds] [--iters N]\n\
+                 \x20   [--blocksizes 500,1000,2000] [--formats binaryblock,textcell]\n\
+                 \x20   [--partitions 8,32] [--backends cp,mr,spark]\n\
+                 \x20   [--threads T] [--no-diff] [--all]"
             );
             2
         }
@@ -441,6 +449,126 @@ fn cmd_resource_opt(args: &[String]) -> i32 {
         (choice.best.heap_bytes / MB) as i64,
         choice.best.cost_secs
     );
+    0
+}
+
+/// Global data flow optimizer: enumerate interesting per-cut data-flow
+/// properties (block size, format, broadcast partitioning, per-group
+/// backend) for one scenario/script, and print the decision trace, the
+/// EXPLAIN-style before/after plan diff and the argmin configuration.
+fn cmd_gdf(args: &[String]) -> i32 {
+    let name = flag(args, "--scenario").unwrap_or_else(|| "xl1".into());
+    let Some(s) = scenario_by_name(&name) else {
+        eprintln!("unknown scenario '{name}'");
+        return 2;
+    };
+    let script = flag(args, "--script").unwrap_or_else(|| "cg".into());
+    let iters = match parse_iters_flag(args) {
+        Ok(n) => n,
+        Err(code) => return code,
+    };
+    let (src, script_args) = match script.as_str() {
+        "cg" => (LINREG_CG.to_string(), linreg_cg_args(iters)),
+        "ds" => (s.script().to_string(), s.args()),
+        other => {
+            eprintln!("--script: unknown script '{other}' (expected ds or cg)");
+            return 2;
+        }
+    };
+    let mut spec = gdf::GdfSpec::new(src, script_args, DataScenario::from(&s));
+    match parse_backends_flag(args) {
+        Ok(Some(backends)) => spec.backends = backends,
+        Ok(None) => {}
+        Err(code) => return code,
+    }
+    if let Some(bs) = flag(args, "--blocksizes") {
+        let mut out = Vec::new();
+        for part in bs.split(',').filter(|p| !p.is_empty()) {
+            match part.trim().parse::<i64>() {
+                Ok(b) if b >= 1 => out.push(b),
+                _ => {
+                    eprintln!("--blocksizes: invalid entry '{part}' (expected integers >= 1)");
+                    return 2;
+                }
+            }
+        }
+        spec.blocksizes = out;
+    }
+    if let Some(fmts) = flag(args, "--formats") {
+        let mut out = Vec::new();
+        for part in fmts.split(',').filter(|p| !p.is_empty()) {
+            match Format::parse(part.trim()) {
+                Some(f) => out.push(f),
+                None => {
+                    eprintln!(
+                        "--formats: unknown format '{part}' (expected binaryblock, textcell or csv)"
+                    );
+                    return 2;
+                }
+            }
+        }
+        spec.formats = out;
+    }
+    if let Some(parts) = flag(args, "--partitions") {
+        let mut out = Vec::new();
+        for part in parts.split(',').filter(|p| !p.is_empty()) {
+            match part.trim().parse::<f64>() {
+                Ok(p) if p.is_finite() && p > 0.0 => out.push(p),
+                _ => {
+                    eprintln!("--partitions: invalid entry '{part}' (expected positive MB)");
+                    return 2;
+                }
+            }
+        }
+        spec.partitions_mb = out;
+    }
+    if let Some(t) = flag(args, "--threads") {
+        match t.parse::<usize>() {
+            Ok(n) => spec.threads = n,
+            Err(_) => {
+                eprintln!("--threads: invalid value '{t}' (expected a non-negative integer)");
+                return 2;
+            }
+        }
+    }
+    let report = match systemds::api::optimize_global_dataflow(&spec) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("global data flow optimization failed: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "scenario {} / script {} — {} candidate data-flow configurations",
+        s.name,
+        script,
+        report.candidates.len()
+    );
+    println!("\ndecision trace (per DAG cut, optimized plan):");
+    print!("{}", report.decision_table());
+    if args.iter().any(|a| a == "--all") {
+        println!("\nall candidates (cheapest first):");
+        for c in report.ranked() {
+            println!("  {:>12}  {}", systemds::util::fmt::fmt_secs(c.cost_secs), c.label());
+        }
+    }
+    if !args.iter().any(|a| a == "--no-diff") {
+        println!("\nplan diff (default -> optimized):");
+        print!("{}", report.explain_diff());
+    }
+    let (best, base) = (report.best(), report.baseline());
+    println!(
+        "\ndefault: {} — {}",
+        systemds::util::fmt::fmt_secs(base.cost_secs),
+        base.label()
+    );
+    println!(
+        "best:    {} — {} ({:.1}% better)",
+        systemds::util::fmt::fmt_secs(best.cost_secs),
+        best.label(),
+        report.improvement_pct()
+    );
+    eprintln!("{}", report.summary());
     0
 }
 

@@ -14,8 +14,11 @@ use crate::lop::SelectionHints;
 /// A named plan alternative.
 #[derive(Clone, Debug)]
 pub struct PlanAlternative {
+    /// Variant label (`optimizer`, `force-cpmm`, …).
     pub name: String,
+    /// Estimated execution time `C(P, cc)` in seconds.
     pub cost_secs: f64,
+    /// Number of MR jobs in the generated plan.
     pub mr_jobs: usize,
 }
 

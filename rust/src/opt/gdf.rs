@@ -1,0 +1,914 @@
+//! Global data flow optimization (paper §1: the cost model "is leveraged
+//! by several advanced optimizers like resource optimization and **global
+//! data flow optimization**") — the second named consumer, after the grid
+//! resource optimizer ([`super::resource`]).
+//!
+//! Where the resource optimizer searches over *cluster configurations*
+//! for a fixed compilation, the GDF optimizer enumerates **interesting
+//! data-flow properties per DAG cut** and lets each candidate change the
+//! *structure* of the generated runtime plan (cf. Boehm et al.'s fusion-
+//! plan enumeration, PAPERS.md):
+//!
+//! * **block size** — bounds map-side `tsmm` feasibility
+//!   (`ncol ≤ blocksize`, §2) and every blocking-derived estimate;
+//! * **on-disk format** — binary-block vs text for the persistent inputs
+//!   (text halves the effective scan bandwidth, §3.3);
+//! * **partitioning decision** — the partitioned-broadcast threshold
+//!   ([`crate::lop::partition_broadcast`]) that decides whether `mapmm`
+//!   broadcasts are pre-partitioned CP-side;
+//! * **forced execution backend per operator group** — every top-level
+//!   program block (the cuts between HOP DAGs, where transient variables
+//!   materialise) can be pinned to CP, MR or Spark via the per-group
+//!   pipeline ([`crate::api::compile_with_groups`],
+//!   [`crate::ir::exec_type::select_groups`],
+//!   [`crate::rtprog::gen::generate_groups`]).
+//!
+//! Enumerating 3 backends over every cut would explode (`3^cuts`), so the
+//! optimizer first compiles each base configuration under the default
+//! backend and classifies the **interesting cuts** — the groups that
+//! actually contain distributed jobs. Only those are enumerated; a group
+//! whose operators all fit the CP budget generates the same plan under
+//! every backend, so pinning it to the default is exact, not a
+//! heuristic. Candidates compile through the `PlanMemo` infrastructure
+//! shared with the sweep engine and the resource optimizer and are
+//! costed concurrently — note that unlike those grids (whose cost-only
+//! axes share plans), every enumerated GDF configuration is
+//! plan-shaping, so each candidate compiles its own plan by
+//! construction.
+//!
+//! The result is the argmin candidate plus a per-cut **decision trace**
+//! (chosen backend, job counts before/after, partitioning/caching
+//! decisions) and an EXPLAIN-style before/after **plan diff**.
+//!
+//! Entry points: [`optimize`] / [`crate::api::optimize_global_dataflow`]
+//! and the `repro gdf` CLI subcommand.
+
+use std::collections::{HashMap, HashSet};
+use std::time::Instant;
+
+use crate::api::{compile_with_groups, ClusterConfigOpt, CompileOptions, CompiledProgram};
+use crate::conf::{ClusterConfig, CostConstants, SystemConfig, MB};
+use crate::cost;
+use crate::lop::SelectionHints;
+use crate::matrix::Format;
+use crate::rtprog::{CpOp, ExecBackend, Instr, RtBlock};
+use crate::util::fmt::{fmt_secs, normalize_scratch_pid};
+use crate::util::par;
+
+use super::sweep::{plan_signature, DataScenario, PlanMemo};
+
+// ---------------------------------------------------------------------
+// Specification
+// ---------------------------------------------------------------------
+
+/// Global-data-flow search space for one script + data scenario: the
+/// per-cut property axes (block size, format, partition size, per-group
+/// backend) plus the shared compilation and costing context.
+#[derive(Clone, Debug)]
+pub struct GdfSpec {
+    /// DML source compiled per distinct plan shape.
+    pub script: String,
+    /// `$N` command-line bindings for the script.
+    pub args: HashMap<usize, String>,
+    /// Persistent-input metadata (dimensions per read path).
+    pub scenario: DataScenario,
+    /// Cluster the candidates are compiled and costed against.
+    pub cc: ClusterConfig,
+    /// Base compiler/system configuration; each candidate patches the
+    /// block-size and partition axes onto it.
+    pub cfg: SystemConfig,
+    /// Physical-operator selection hints shared by all candidates.
+    pub hints: SelectionHints,
+    /// Cost-model constants shared by all candidates.
+    pub constants: CostConstants,
+    /// Block-size axis (the default `cfg.blocksize` is always included).
+    pub blocksizes: Vec<i64>,
+    /// On-disk format axis for the persistent inputs (binary-block is
+    /// always included as the baseline format).
+    pub formats: Vec<Format>,
+    /// Broadcast-partition-size axis in MB (the default
+    /// `cfg.partition_bytes` is always included).
+    pub partitions_mb: Vec<f64>,
+    /// Backend candidates enumerated per interesting cut.
+    pub backends: Vec<ExecBackend>,
+    /// Backend of the *default* plan the argmin is compared against (and
+    /// of every non-interesting group). The paper's default: MR.
+    pub default_backend: ExecBackend,
+    /// Cap on enumerated interesting cuts per base configuration
+    /// (`backends^cuts` growth); beyond it the trailing cuts are pinned
+    /// to the default backend and [`GdfReport::truncated_cuts`] is set.
+    pub max_cuts: usize,
+    /// Worker threads; `0` = available parallelism.
+    pub threads: usize,
+}
+
+impl GdfSpec {
+    /// Search space with the default axes (3 block sizes × 2 formats ×
+    /// 2 partition sizes, all 3 backends per interesting cut) on the
+    /// paper cluster.
+    pub fn new(
+        script: impl Into<String>,
+        args: HashMap<usize, String>,
+        scenario: DataScenario,
+    ) -> Self {
+        GdfSpec {
+            script: script.into(),
+            args,
+            scenario,
+            cc: ClusterConfig::paper_cluster(),
+            cfg: SystemConfig::default(),
+            hints: SelectionHints::default(),
+            constants: CostConstants::default(),
+            blocksizes: vec![500, 1000, 2000],
+            formats: vec![Format::BinaryBlock, Format::TextCell],
+            partitions_mb: vec![8.0, 32.0],
+            backends: ExecBackend::all().to_vec(),
+            default_backend: ExecBackend::Mr,
+            max_cuts: 4,
+            threads: 0,
+        }
+    }
+
+    /// The LinReg CG search space on the given Table-1 scenario: the
+    /// loop-heavy script where the per-group backend axis matters most
+    /// (every iteration of a distributed loop pays per-job latency).
+    pub fn linreg_cg(scenario: DataScenario, iterations: usize) -> Self {
+        Self::new(
+            crate::api::LINREG_CG,
+            crate::api::linreg_cg_args(iterations),
+            scenario,
+        )
+    }
+
+    /// Reject empty or degenerate axes and configurations before any
+    /// compile, so NaN costs become diagnostics instead of panics.
+    pub fn validate(&self) -> Result<(), String> {
+        self.cc.validate()?;
+        self.constants.validate()?;
+        if self.backends.is_empty() {
+            return Err("empty GDF backend axis".to_string());
+        }
+        for &bs in &self.blocksizes {
+            if bs < 1 {
+                return Err(format!("invalid block-size axis value {bs} (must be >= 1)"));
+            }
+        }
+        for &p in &self.partitions_mb {
+            if !(p.is_finite() && p > 0.0) {
+                return Err(format!(
+                    "invalid partition axis value {p} MB (must be finite and > 0)"
+                ));
+            }
+        }
+        if self.cfg.blocksize < 1 {
+            return Err(format!(
+                "invalid base blocksize {} (must be >= 1)",
+                self.cfg.blocksize
+            ));
+        }
+        if self.max_cuts == 0 {
+            return Err("max_cuts must be >= 1".to_string());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Results
+// ---------------------------------------------------------------------
+
+/// One candidate data-flow configuration with its costed plan statistics.
+#[derive(Clone, Debug)]
+pub struct GdfCandidate {
+    /// Matrix block size of this candidate.
+    pub blocksize: i64,
+    /// On-disk format of the persistent inputs.
+    pub format: Format,
+    /// Broadcast partition size, MB.
+    pub partition_mb: f64,
+    /// Backend per top-level operator group (one entry per program cut).
+    pub groups: Vec<ExecBackend>,
+    /// Estimated execution time `C(P, cc)` in seconds.
+    pub cost_secs: f64,
+    /// CP instruction count of the generated plan.
+    pub cp_insts: usize,
+    /// MR-job count of the generated plan.
+    pub mr_jobs: usize,
+    /// Spark-job count of the generated plan.
+    pub spark_jobs: usize,
+    /// Whether this candidate reused a plan compiled earlier in the run.
+    /// Every enumerated GDF axis is plan-shaping, so this is false for
+    /// all candidates today; the field exists for parity with the sweep
+    /// and resource reports (and future cost-only axes).
+    pub plan_reused: bool,
+}
+
+impl GdfCandidate {
+    /// Compact `bs/fmt/part/groups` label for tables and diagnostics.
+    pub fn label(&self) -> String {
+        format!(
+            "bs={} fmt={} part={}MB groups={}",
+            self.blocksize,
+            self.format.name(),
+            fmt_mb_axis(self.partition_mb),
+            self.groups.iter().map(|b| b.name()).collect::<Vec<_>>().join(",")
+        )
+    }
+}
+
+/// Render a megabyte axis value without truncating fractional entries
+/// (`32` but `0.5`, not `0`).
+fn fmt_mb_axis(mb: f64) -> String {
+    if mb.fract() == 0.0 {
+        format!("{}", mb as i64)
+    } else {
+        format!("{mb}")
+    }
+}
+
+/// The decision the optimizer took at one DAG cut (top-level program
+/// block): the forced backend plus the observable plan consequences.
+#[derive(Clone, Debug)]
+pub struct CutDecision {
+    /// Top-level block index (cut position in program order).
+    pub cut: usize,
+    /// Display label of the block, e.g. `FOR (lines 8-16)`.
+    pub label: String,
+    /// Backend chosen for this operator group.
+    pub backend: ExecBackend,
+    /// Distributed jobs in this group under the default plan.
+    pub jobs_before: usize,
+    /// Distributed jobs in this group under the optimized plan.
+    pub jobs_after: usize,
+    /// Whether the optimized plan pre-partitions a broadcast in this
+    /// group (CP `partition` instruction, MR distributed cache).
+    pub partitioned: bool,
+    /// Broadcast/distributed-cache variables used by this group's jobs —
+    /// the caching decision made for it.
+    pub cached: usize,
+}
+
+/// Result of a GDF optimization: every candidate, the argmin, the per-cut
+/// decision trace and the before/after EXPLAIN texts.
+#[derive(Clone, Debug)]
+pub struct GdfReport {
+    /// All candidates; index 0 is always the default configuration.
+    pub candidates: Vec<GdfCandidate>,
+    /// Indices into `candidates`, cheapest first (ties keep enumeration
+    /// order, so the default plan wins exact ties).
+    pub ranking: Vec<usize>,
+    /// Index of the cost-argmin candidate.
+    pub best: usize,
+    /// Index of the default-configuration candidate (always 0).
+    pub baseline: usize,
+    /// Per-cut decisions of the argmin candidate, in program order.
+    pub trace: Vec<CutDecision>,
+    /// Runtime EXPLAIN of the default plan (scratch PID normalised).
+    pub before_explain: String,
+    /// Runtime EXPLAIN of the argmin plan (scratch PID normalised).
+    pub after_explain: String,
+    /// Distinct plan shapes compiled across the run (including the MR
+    /// classification probes used when the default backend is CP).
+    pub distinct_plans: usize,
+    /// Candidates that reused a memoized plan (0 today — all GDF axes
+    /// are plan-shaping, so no two candidates share a signature).
+    pub memo_hits: usize,
+    /// Whether interesting cuts were dropped by the `max_cuts` cap (the
+    /// dropped cuts stay on the default backend — surfaced, not silent).
+    pub truncated_cuts: bool,
+    /// Wall-clock seconds spent in the optimization.
+    pub wall_secs: f64,
+    /// Worker threads used.
+    pub threads: usize,
+}
+
+impl GdfReport {
+    /// The cost-argmin candidate.
+    pub fn best(&self) -> &GdfCandidate {
+        &self.candidates[self.best]
+    }
+
+    /// The default-configuration candidate the argmin is compared to.
+    pub fn baseline(&self) -> &GdfCandidate {
+        &self.candidates[self.baseline]
+    }
+
+    /// Candidates in ranked (cheapest-first) order.
+    pub fn ranked(&self) -> impl Iterator<Item = &GdfCandidate> {
+        self.ranking.iter().map(move |&i| &self.candidates[i])
+    }
+
+    /// Relative improvement of the argmin over the default plan, in
+    /// percent (0 when the default is already optimal).
+    pub fn improvement_pct(&self) -> f64 {
+        let base = self.baseline().cost_secs;
+        if base > 0.0 {
+            (base - self.best().cost_secs) / base * 100.0
+        } else {
+            0.0
+        }
+    }
+
+    /// Aligned per-cut decision trace of the argmin plan (deterministic —
+    /// no timings).
+    pub fn decision_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<4} {:<26} {:<8} {:>14} {:>12} {:>7}\n",
+            "cut", "block", "backend", "jobs (def->opt)", "partitioned", "cached"
+        ));
+        out.push_str(&"-".repeat(78));
+        out.push('\n');
+        for d in &self.trace {
+            out.push_str(&format!(
+                "{:<4} {:<26} {:<8} {:>7} -> {:<4} {:>12} {:>7}\n",
+                d.cut,
+                d.label,
+                d.backend.name(),
+                d.jobs_before,
+                d.jobs_after,
+                if d.partitioned { "yes" } else { "no" },
+                d.cached
+            ));
+        }
+        out
+    }
+
+    /// Unified EXPLAIN-style diff between the default and the optimized
+    /// runtime plan (`- ` lines only in the default, `+ ` lines only in
+    /// the optimized plan). Deterministic across runs and thread counts.
+    pub fn explain_diff(&self) -> String {
+        line_diff(&self.before_explain, &self.after_explain)
+    }
+
+    /// One-line execution summary (includes wall time — not part of the
+    /// deterministic tables).
+    pub fn summary(&self) -> String {
+        format!(
+            "enumerated {} candidates in {:.3}s on {} threads; {} distinct plans compiled{}; best {} vs default {} ({:+.1}%)",
+            self.candidates.len(),
+            self.wall_secs,
+            self.threads,
+            self.distinct_plans,
+            if self.truncated_cuts { " (interesting cuts truncated by max_cuts)" } else { "" },
+            fmt_secs(self.best().cost_secs),
+            fmt_secs(self.baseline().cost_secs),
+            -self.improvement_pct()
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// Internals
+// ---------------------------------------------------------------------
+
+/// One base configuration: the global (non-per-cut) property axes.
+struct BaseConfig {
+    blocksize: i64,
+    format: Format,
+    partition_mb: f64,
+    cfg: SystemConfig,
+}
+
+/// One candidate awaiting compilation: a base plus a full per-group
+/// backend assignment (empty = all-default, the baseline of its base).
+struct RawCand {
+    base: usize,
+    groups: Vec<ExecBackend>,
+    sig: String,
+}
+
+/// Default-first axis: the baseline value, then the user's values.
+fn with_default<T: PartialEq + Clone>(default: T, axis: &[T]) -> Vec<T> {
+    let mut out = vec![default];
+    for v in axis {
+        if !out.contains(v) {
+            out.push(v.clone());
+        }
+    }
+    out
+}
+
+/// Distributed jobs / partition ops / cached (broadcast) vars in one
+/// runtime block subtree.
+fn block_stats(b: &RtBlock) -> (usize, bool, usize) {
+    fn walk(b: &RtBlock, jobs: &mut usize, part: &mut bool, cached: &mut usize) {
+        let insts = |insts: &[Instr], jobs: &mut usize, part: &mut bool, cached: &mut usize| {
+            for i in insts {
+                match i {
+                    Instr::MrJob(j) => {
+                        *jobs += 1;
+                        *cached += j.dcache.len();
+                    }
+                    Instr::SparkJob(j) => {
+                        *jobs += 1;
+                        *cached += j.broadcasts.len();
+                    }
+                    Instr::Cp(c) if matches!(c.op, CpOp::Partition) => *part = true,
+                    _ => {}
+                }
+            }
+        };
+        match b {
+            RtBlock::Generic { insts: is, .. } => insts(is, jobs, part, cached),
+            RtBlock::If { pred, then_blocks, else_blocks, .. } => {
+                insts(&pred.insts, jobs, part, cached);
+                for c in then_blocks.iter().chain(else_blocks) {
+                    walk(c, jobs, part, cached);
+                }
+            }
+            RtBlock::For { from, to, by, body, .. } => {
+                insts(&from.insts, jobs, part, cached);
+                insts(&to.insts, jobs, part, cached);
+                if let Some(by) = by {
+                    insts(&by.insts, jobs, part, cached);
+                }
+                for c in body {
+                    walk(c, jobs, part, cached);
+                }
+            }
+            RtBlock::While { pred, body, .. } => {
+                insts(&pred.insts, jobs, part, cached);
+                for c in body {
+                    walk(c, jobs, part, cached);
+                }
+            }
+            RtBlock::FCall { .. } => {}
+        }
+    }
+    let (mut jobs, mut part, mut cached) = (0, false, 0);
+    walk(b, &mut jobs, &mut part, &mut cached);
+    (jobs, part, cached)
+}
+
+/// Display label of a top-level runtime block (cut).
+fn rt_block_label(b: &RtBlock) -> String {
+    match b {
+        RtBlock::Generic { lines, .. } => format!("GENERIC (lines {}-{})", lines.0, lines.1),
+        RtBlock::If { lines, .. } => format!("IF (lines {}-{})", lines.0, lines.1),
+        RtBlock::For { parfor, lines, .. } => {
+            let kind = if *parfor { "PARFOR" } else { "FOR" };
+            format!("{kind} (lines {}-{})", lines.0, lines.1)
+        }
+        RtBlock::While { lines, .. } => format!("WHILE (lines {}-{})", lines.0, lines.1),
+        RtBlock::FCall { fname, lines, .. } => {
+            format!("FCALL {fname} (lines {}-{})", lines.0, lines.1)
+        }
+    }
+}
+
+/// Plain LCS line diff: shared lines indented, `- ` for lines only in
+/// `before`, `+ ` for lines only in `after`.
+fn line_diff(before: &str, after: &str) -> String {
+    let a: Vec<&str> = before.lines().collect();
+    let b: Vec<&str> = after.lines().collect();
+    let (n, m) = (a.len(), b.len());
+    let mut dp = vec![vec![0u32; m + 1]; n + 1];
+    for i in (0..n).rev() {
+        for j in (0..m).rev() {
+            dp[i][j] = if a[i] == b[j] {
+                dp[i + 1][j + 1] + 1
+            } else {
+                dp[i + 1][j].max(dp[i][j + 1])
+            };
+        }
+    }
+    let mut out = String::new();
+    let (mut i, mut j) = (0, 0);
+    while i < n && j < m {
+        if a[i] == b[j] {
+            out.push_str("  ");
+            out.push_str(a[i]);
+            out.push('\n');
+            i += 1;
+            j += 1;
+        } else if dp[i + 1][j] >= dp[i][j + 1] {
+            out.push_str("- ");
+            out.push_str(a[i]);
+            out.push('\n');
+            i += 1;
+        } else {
+            out.push_str("+ ");
+            out.push_str(b[j]);
+            out.push('\n');
+            j += 1;
+        }
+    }
+    for line in &a[i..] {
+        out.push_str("- ");
+        out.push_str(line);
+        out.push('\n');
+    }
+    for line in &b[j..] {
+        out.push_str("+ ");
+        out.push_str(line);
+        out.push('\n');
+    }
+    out
+}
+
+/// All per-cut backend assignments over the interesting cuts (every
+/// other group pinned to `default`), minus the all-default assignment
+/// (the baseline candidate covers it).
+fn assignments(
+    interesting: &[usize],
+    backends: &[ExecBackend],
+    n_blocks: usize,
+    default: ExecBackend,
+) -> Vec<Vec<ExecBackend>> {
+    let mut out = vec![vec![default; n_blocks]];
+    for &g in interesting {
+        let mut next = Vec::with_capacity(out.len() * backends.len());
+        for a in &out {
+            for &b in backends {
+                let mut v = a.clone();
+                v[g] = b;
+                next.push(v);
+            }
+        }
+        out = next;
+    }
+    let mut seen: HashSet<Vec<ExecBackend>> = HashSet::new();
+    out.retain(|a| seen.insert(a.clone()));
+    out.retain(|a| a.iter().any(|&b| b != default));
+    out
+}
+
+/// Candidate plan signature: the sweep signature (which already covers
+/// block size, partition size, memory budgets and hints) extended with
+/// the on-disk input format and the per-group backend assignment.
+fn gdf_signature(
+    spec: &GdfSpec,
+    base: &BaseConfig,
+    groups: &[ExecBackend],
+    default_backend: ExecBackend,
+) -> String {
+    let grp = if groups.is_empty() {
+        "default".to_string()
+    } else {
+        groups.iter().map(|b| b.name()).collect::<Vec<_>>().join(",")
+    };
+    format!(
+        "{};fmt={};grp={}",
+        plan_signature(&base.cfg, &spec.hints, &spec.cc, &spec.scenario, default_backend),
+        base.format.name(),
+        grp
+    )
+}
+
+fn compile_candidate(
+    spec: &GdfSpec,
+    base: &BaseConfig,
+    groups: &[ExecBackend],
+    default_backend: ExecBackend,
+) -> Result<CompiledProgram, String> {
+    let opts = CompileOptions {
+        cfg: base.cfg.clone(),
+        cc: ClusterConfigOpt(spec.cc.clone()),
+        hints: spec.hints.clone(),
+        backend: default_backend,
+    };
+    let meta = spec.scenario.meta_fmt(base.blocksize, base.format);
+    compile_with_groups(&spec.script, &spec.args, &meta, &opts, groups).map_err(|e| {
+        format!(
+            "compile failed for GDF candidate bs={} fmt={} part={}MB: {e}",
+            base.blocksize,
+            base.format.name(),
+            fmt_mb_axis(base.partition_mb)
+        )
+    })
+}
+
+// ---------------------------------------------------------------------
+// The optimizer
+// ---------------------------------------------------------------------
+
+/// Run the global data flow optimization: enumerate base configurations
+/// (block size × format × partition size), classify the interesting cuts
+/// of each base from its default-backend plan, enumerate per-cut backend
+/// assignments over those cuts, compile once per distinct plan signature
+/// (parallel, memoized), cost every candidate concurrently, and return
+/// the argmin with its per-cut decision trace and before/after EXPLAIN
+/// diff. See the module docs for the property model.
+pub fn optimize(spec: &GdfSpec) -> Result<GdfReport, String> {
+    let t0 = Instant::now();
+    spec.validate()?;
+    let threads = if spec.threads == 0 { par::default_threads() } else { spec.threads };
+
+    // Base axes, default value first: candidate 0 is the default plan.
+    let blocksizes = with_default(spec.cfg.blocksize, &spec.blocksizes);
+    let formats = with_default(Format::BinaryBlock, &spec.formats);
+    let partitions = with_default(spec.cfg.partition_bytes / MB, &spec.partitions_mb);
+    let mut bases = Vec::new();
+    for &bs in &blocksizes {
+        for &fmt in &formats {
+            for &part in &partitions {
+                let mut cfg = spec.cfg.clone();
+                cfg.blocksize = bs;
+                cfg.partition_bytes = part * MB;
+                bases.push(BaseConfig { blocksize: bs, format: fmt, partition_mb: part, cfg });
+            }
+        }
+    }
+
+    // Phase 1: compile the all-default plan of every base (in parallel,
+    // through the shared memo).
+    let mut memo = PlanMemo::new();
+    let base_cands: Vec<RawCand> = bases
+        .iter()
+        .enumerate()
+        .map(|(i, b)| RawCand {
+            base: i,
+            groups: Vec::new(),
+            sig: gdf_signature(spec, b, &[], spec.default_backend),
+        })
+        .collect();
+    let base_sigs: Vec<String> = base_cands.iter().map(|c| c.sig.clone()).collect();
+    let base_plans = memo.ensure(&base_sigs, threads, |i| {
+        compile_candidate(spec, &bases[i], &[], spec.default_backend)
+    })?;
+
+    // Classify the interesting cuts of every base: a cut is interesting
+    // iff the *distributable* plan family places jobs in it. The MR plan
+    // is the probe — exec-type selection is identical for MR and Spark,
+    // and probing the default backend would see no jobs at all when the
+    // default family is single-node CP.
+    let probe_plans = if spec.default_backend == ExecBackend::Cp {
+        let probe_sigs: Vec<String> = bases
+            .iter()
+            .map(|b| gdf_signature(spec, b, &[], ExecBackend::Mr))
+            .collect();
+        memo.ensure(&probe_sigs, threads, |i| {
+            compile_candidate(spec, &bases[i], &[], ExecBackend::Mr)
+        })?
+    } else {
+        base_plans.clone()
+    };
+
+    let n_blocks = memo.get(base_plans[0].0).runtime.blocks.len();
+    let mut truncated_cuts = false;
+    let mut interesting_of: Vec<Vec<usize>> = Vec::with_capacity(bases.len());
+    for plan in &probe_plans {
+        let prog = memo.get(plan.0);
+        let mut interesting: Vec<usize> = prog
+            .runtime
+            .blocks
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| block_stats(b).0 > 0)
+            .map(|(i, _)| i)
+            .collect();
+        if interesting.len() > spec.max_cuts {
+            interesting.truncate(spec.max_cuts);
+            truncated_cuts = true;
+        }
+        interesting_of.push(interesting);
+    }
+
+    // Phase 2: per-cut backend assignments over the interesting cuts.
+    let mut rest: Vec<RawCand> = Vec::new();
+    for (bi, base) in bases.iter().enumerate() {
+        for groups in
+            assignments(&interesting_of[bi], &spec.backends, n_blocks, spec.default_backend)
+        {
+            let sig = gdf_signature(spec, base, &groups, spec.default_backend);
+            rest.push(RawCand { base: bi, groups, sig });
+        }
+    }
+    let rest_sigs: Vec<String> = rest.iter().map(|c| c.sig.clone()).collect();
+    let rest_plans = memo.ensure(&rest_sigs, threads, |i| {
+        compile_candidate(spec, &bases[rest[i].base], &rest[i].groups, spec.default_backend)
+    })?;
+
+    // Phase 3: cost every candidate concurrently against its base cfg.
+    let all: Vec<(&RawCand, usize, bool)> = base_cands
+        .iter()
+        .zip(&base_plans)
+        .chain(rest.iter().zip(&rest_plans))
+        .map(|(c, &(plan, reused))| (c, plan, reused))
+        .collect();
+    let costed: Vec<(f64, usize, usize, usize)> =
+        par::par_map(&all, threads, |_, &(cand, plan, _)| {
+            let prog = memo.get(plan);
+            let report =
+                cost::cost_program(&prog.runtime, &bases[cand.base].cfg, &spec.cc, &spec.constants);
+            let (cp, mr, sp) = prog.runtime.size3();
+            (report.total, cp, mr, sp)
+        });
+
+    let candidates: Vec<GdfCandidate> = all
+        .iter()
+        .zip(&costed)
+        .map(|(&(cand, _, reused), &(cost_secs, cp, mr, sp))| {
+            let base = &bases[cand.base];
+            GdfCandidate {
+                blocksize: base.blocksize,
+                format: base.format,
+                partition_mb: base.partition_mb,
+                groups: if cand.groups.is_empty() {
+                    vec![spec.default_backend; n_blocks]
+                } else {
+                    cand.groups.clone()
+                },
+                cost_secs,
+                cp_insts: cp,
+                mr_jobs: mr,
+                spark_jobs: sp,
+                plan_reused: reused,
+            }
+        })
+        .collect();
+    for c in &candidates {
+        if !c.cost_secs.is_finite() {
+            return Err(format!(
+                "non-finite cost estimate ({}) for GDF candidate {}",
+                c.cost_secs,
+                c.label()
+            ));
+        }
+    }
+
+    // Ranking: cheapest first; exact ties keep enumeration order, so the
+    // default plan (index 0) wins when nothing improves on it.
+    let mut ranking: Vec<usize> = (0..candidates.len()).collect();
+    ranking.sort_by(|&x, &y| {
+        candidates[x].cost_secs.total_cmp(&candidates[y].cost_secs).then(x.cmp(&y))
+    });
+    let best = ranking[0];
+
+    // Decision trace + before/after explains from the two relevant plans.
+    let best_plan = if best < base_plans.len() {
+        memo.get(base_plans[best].0)
+    } else {
+        memo.get(rest_plans[best - base_plans.len()].0)
+    };
+    let baseline_plan = memo.get(base_plans[0].0);
+    let trace: Vec<CutDecision> = best_plan
+        .runtime
+        .blocks
+        .iter()
+        .enumerate()
+        .map(|(i, b)| {
+            let (jobs_after, partitioned, cached) = block_stats(b);
+            let jobs_before =
+                baseline_plan.runtime.blocks.get(i).map_or(0, |b| block_stats(b).0);
+            CutDecision {
+                cut: i,
+                label: rt_block_label(b),
+                backend: candidates[best].groups.get(i).copied().unwrap_or(spec.default_backend),
+                jobs_before,
+                jobs_after,
+                partitioned,
+                cached,
+            }
+        })
+        .collect();
+    let before_explain = normalize_scratch_pid(&crate::rtprog::explain::explain_runtime(
+        &baseline_plan.runtime,
+        crate::rtprog::explain::ExplainOpts::default(),
+    ));
+    let after_explain = normalize_scratch_pid(&crate::rtprog::explain::explain_runtime(
+        &best_plan.runtime,
+        crate::rtprog::explain::ExplainOpts::default(),
+    ));
+
+    // Count memo hits from the per-candidate reuse flags: the distinct
+    // count may include CP-probe compiles that are not candidates.
+    let memo_hits = all.iter().filter(|&&(_, _, reused)| reused).count();
+    let distinct_plans = memo.distinct();
+    Ok(GdfReport {
+        memo_hits,
+        distinct_plans,
+        best,
+        baseline: 0,
+        ranking,
+        trace,
+        before_explain,
+        after_explain,
+        candidates,
+        truncated_cuts,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        threads,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Scenario;
+
+    fn tiny_spec() -> GdfSpec {
+        let s = Scenario::xl1();
+        let mut spec = GdfSpec::linreg_cg(DataScenario::from(&s), 10);
+        // keep the unit-test grid small: one extra blocksize, no format /
+        // partition variants beyond the defaults
+        spec.blocksizes = vec![1000];
+        spec.formats = vec![Format::BinaryBlock];
+        spec.partitions_mb = vec![32.0];
+        spec.threads = 2;
+        spec
+    }
+
+    #[test]
+    fn baseline_is_candidate_zero_and_best_beats_it() {
+        let r = optimize(&tiny_spec()).unwrap();
+        assert_eq!(r.baseline, 0);
+        let base = r.baseline();
+        assert_eq!(base.blocksize, 1000);
+        assert_eq!(base.format, Format::BinaryBlock);
+        assert!(base.groups.iter().all(|&b| b == ExecBackend::Mr));
+        // CG on XL1: the Spark loop group must strictly beat the MR default
+        assert!(
+            r.best().cost_secs < base.cost_secs,
+            "best {} !< default {}",
+            r.best().cost_secs,
+            base.cost_secs
+        );
+        assert!(r.improvement_pct() > 0.0);
+    }
+
+    #[test]
+    fn ranking_is_cheapest_first_and_total() {
+        let r = optimize(&tiny_spec()).unwrap();
+        assert_eq!(r.ranking.len(), r.candidates.len());
+        let costs: Vec<f64> = r.ranked().map(|c| c.cost_secs).collect();
+        assert!(costs.windows(2).all(|w| w[0] <= w[1]), "{costs:?}");
+        assert_eq!(r.ranking[0], r.best);
+    }
+
+    #[test]
+    fn trace_covers_every_cut_and_matches_groups() {
+        let r = optimize(&tiny_spec()).unwrap();
+        assert_eq!(r.trace.len(), r.best().groups.len());
+        for (i, d) in r.trace.iter().enumerate() {
+            assert_eq!(d.cut, i);
+            assert_eq!(d.backend, r.best().groups[i]);
+        }
+        // at least one cut is distributed in the default plan
+        assert!(r.trace.iter().any(|d| d.jobs_before > 0), "{:#?}", r.trace);
+        let table = r.decision_table();
+        assert!(table.contains("backend"), "{table}");
+        assert!(table.contains("GENERIC"), "{table}");
+    }
+
+    #[test]
+    fn explain_diff_shows_both_plan_families() {
+        let r = optimize(&tiny_spec()).unwrap();
+        let diff = r.explain_diff();
+        // default = MR, optimized = at least one Spark group
+        assert!(diff.contains("- "), "{diff}");
+        assert!(diff.contains("+ "), "{diff}");
+        assert!(r.before_explain.contains("MR-Job["), "{}", r.before_explain);
+        assert!(r.after_explain.contains("SPARK-Job["), "{}", r.after_explain);
+        // pid normalisation keeps diffs stable across processes
+        assert!(!r.before_explain.contains(&format!("_p{}", std::process::id())));
+    }
+
+    #[test]
+    fn degenerate_specs_are_rejected() {
+        let mut spec = tiny_spec();
+        spec.backends.clear();
+        assert!(optimize(&spec).is_err());
+        let mut spec = tiny_spec();
+        spec.blocksizes = vec![0];
+        assert!(optimize(&spec).is_err());
+        let mut spec = tiny_spec();
+        spec.partitions_mb = vec![f64::NAN];
+        assert!(optimize(&spec).is_err());
+        let mut spec = tiny_spec();
+        spec.cc.cp_heap_bytes = 0.0;
+        let err = optimize(&spec).unwrap_err();
+        assert!(err.contains("cp_heap_bytes"), "{err}");
+    }
+
+    #[test]
+    fn assignment_enumeration_excludes_all_default() {
+        let all = ExecBackend::all().to_vec();
+        let a = assignments(&[1, 3], &all, 5, ExecBackend::Mr);
+        // 3^2 - 1 (all-default excluded)
+        assert_eq!(a.len(), 8);
+        for g in &a {
+            assert_eq!(g.len(), 5);
+            assert_eq!(g[0], ExecBackend::Mr);
+            assert_eq!(g[2], ExecBackend::Mr);
+            assert_eq!(g[4], ExecBackend::Mr);
+            assert!(g[1] != ExecBackend::Mr || g[3] != ExecBackend::Mr);
+        }
+        // no interesting cuts -> nothing beyond the baseline
+        assert!(assignments(&[], &all, 5, ExecBackend::Mr).is_empty());
+    }
+
+    #[test]
+    fn mb_axis_labels_preserve_fractions() {
+        assert_eq!(fmt_mb_axis(32.0), "32");
+        assert_eq!(fmt_mb_axis(0.5), "0.5");
+    }
+
+    #[test]
+    fn line_diff_marks_changes_only() {
+        let d = line_diff("a\nb\nc\n", "a\nx\nc\n");
+        assert_eq!(d, "  a\n- b\n+ x\n  c\n");
+        let same = line_diff("a\nb\n", "a\nb\n");
+        assert!(same.lines().all(|l| l.starts_with("  ")), "{same}");
+    }
+}

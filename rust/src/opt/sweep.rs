@@ -93,9 +93,17 @@ impl DataScenario {
 
     /// Static metadata for compilation at the given block size.
     pub fn meta(&self, blocksize: i64) -> StaticMeta {
+        self.meta_fmt(blocksize, Format::BinaryBlock)
+    }
+
+    /// Static metadata at an explicit block size *and* on-disk format —
+    /// the two per-cut data-flow properties the global data flow
+    /// optimizer ([`crate::opt::gdf`]) enumerates. [`Self::meta`] is the
+    /// binary-block default.
+    pub fn meta_fmt(&self, blocksize: i64, format: Format) -> StaticMeta {
         let mut m = StaticMeta::default();
         for (path, r, c) in &self.inputs {
-            m = m.with(path, MatrixCharacteristics::dense(*r, *c, blocksize), Format::BinaryBlock);
+            m = m.with(path, MatrixCharacteristics::dense(*r, *c, blocksize), format);
         }
         m
     }

@@ -15,9 +15,15 @@ use crate::matrix::Format;
 
 /// Generation context threaded through the whole program.
 pub struct GenCtx<'a> {
+    /// Compiler/system configuration (block size, reducers, partition size).
     pub cfg: &'a SystemConfig,
+    /// Cluster characteristics (memory budgets drive physical selection).
     pub cc: &'a ClusterConfig,
+    /// Physical-operator selection hints (ablation knobs).
     pub hints: &'a SelectionHints,
+    /// Backend of the block currently being generated (the global data
+    /// flow optimizer rebinds this per top-level block, see
+    /// [`generate_groups`]).
     pub backend: ExecBackend,
     var_counter: usize,
     scratch: String,
@@ -47,15 +53,44 @@ pub fn generate_backend(
     hints: &SelectionHints,
     backend: ExecBackend,
 ) -> RtProgram {
+    generate_groups(prog, cfg, cc, hints, backend, &[])
+}
+
+/// Per-group plan generation for the global data flow optimizer
+/// ([`crate::opt::gdf`]): top-level block `i` of the main program is
+/// generated against the backend `groups[i]` (its nested blocks inherit
+/// it), so one runtime program can mix, say, a CP-forced setup block, an
+/// MR preprocessing group and a Spark iteration loop. Blocks beyond
+/// `groups.len()` and function bodies use `default_backend`, so
+/// `generate_groups(.., &[])` is exactly [`generate_backend`].
+///
+/// Execution-type selection must have been run with the *same* group
+/// assignment ([`crate::ir::exec_type::select_groups`]) — a group forced
+/// to CP has no MR-typed hops, and a distributed group's waves are turned
+/// into piggybacked MR jobs or fused Spark stage DAGs by this backend
+/// value.
+pub fn generate_groups(
+    prog: &Program,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    hints: &SelectionHints,
+    default_backend: ExecBackend,
+    groups: &[ExecBackend],
+) -> RtProgram {
     let mut ctx = GenCtx {
         cfg,
         cc,
         hints,
-        backend,
+        backend: default_backend,
         var_counter: 2,
         scratch: format!("scratch_space//_p{}//_t0", std::process::id()),
     };
-    let blocks = gen_blocks(&prog.blocks, &mut ctx);
+    let mut blocks = Vec::with_capacity(prog.blocks.len());
+    for (i, b) in prog.blocks.iter().enumerate() {
+        ctx.backend = groups.get(i).copied().unwrap_or(default_backend);
+        blocks.push(gen_block(b, &mut ctx));
+    }
+    ctx.backend = default_backend;
     let mut funcs = std::collections::BTreeMap::new();
     for (name, f) in &prog.funcs {
         funcs.insert(
@@ -71,43 +106,44 @@ pub fn generate_backend(
 }
 
 fn gen_blocks(blocks: &[Block], ctx: &mut GenCtx) -> Vec<RtBlock> {
-    blocks
-        .iter()
-        .map(|b| match b {
-            Block::Generic(g) => RtBlock::Generic {
-                insts: gen_dag(&g.dag, ctx),
-                lines: g.lines,
-                recompile: g.recompile,
-            },
-            Block::If { pred, then_blocks, else_blocks, lines } => RtBlock::If {
-                pred: gen_pred(pred, ctx),
-                then_blocks: gen_blocks(then_blocks, ctx),
-                else_blocks: gen_blocks(else_blocks, ctx),
-                lines: *lines,
-            },
-            Block::For { var, from, to, by, body, parfor, known_trip, lines } => RtBlock::For {
-                var: var.clone(),
-                from: gen_pred(from, ctx),
-                to: gen_pred(to, ctx),
-                by: by.as_ref().map(|b| gen_pred(b, ctx)),
-                body: gen_blocks(body, ctx),
-                parfor: *parfor,
-                known_trip: *known_trip,
-                lines: *lines,
-            },
-            Block::While { pred, body, lines } => RtBlock::While {
-                pred: gen_pred(pred, ctx),
-                body: gen_blocks(body, ctx),
-                lines: *lines,
-            },
-            Block::FCall { fname, args, outputs, lines } => RtBlock::FCall {
-                fname: fname.clone(),
-                args: args.clone(),
-                outputs: outputs.clone(),
-                lines: *lines,
-            },
-        })
-        .collect()
+    blocks.iter().map(|b| gen_block(b, ctx)).collect()
+}
+
+fn gen_block(b: &Block, ctx: &mut GenCtx) -> RtBlock {
+    match b {
+        Block::Generic(g) => RtBlock::Generic {
+            insts: gen_dag(&g.dag, ctx),
+            lines: g.lines,
+            recompile: g.recompile,
+        },
+        Block::If { pred, then_blocks, else_blocks, lines } => RtBlock::If {
+            pred: gen_pred(pred, ctx),
+            then_blocks: gen_blocks(then_blocks, ctx),
+            else_blocks: gen_blocks(else_blocks, ctx),
+            lines: *lines,
+        },
+        Block::For { var, from, to, by, body, parfor, known_trip, lines } => RtBlock::For {
+            var: var.clone(),
+            from: gen_pred(from, ctx),
+            to: gen_pred(to, ctx),
+            by: by.as_ref().map(|b| gen_pred(b, ctx)),
+            body: gen_blocks(body, ctx),
+            parfor: *parfor,
+            known_trip: *known_trip,
+            lines: *lines,
+        },
+        Block::While { pred, body, lines } => RtBlock::While {
+            pred: gen_pred(pred, ctx),
+            body: gen_blocks(body, ctx),
+            lines: *lines,
+        },
+        Block::FCall { fname, args, outputs, lines } => RtBlock::FCall {
+            fname: fname.clone(),
+            args: args.clone(),
+            outputs: outputs.clone(),
+            lines: *lines,
+        },
+    }
 }
 
 fn gen_pred(dag: &HopDag, ctx: &mut GenCtx) -> PredProg {

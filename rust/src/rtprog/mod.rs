@@ -1,6 +1,11 @@
 //! Executable runtime programs (paper §2, Figures 2–3): program blocks of
 //! CP instructions and MR-job instructions, generated from HOP DAGs with
 //! physical operator selection and piggybacking.
+//!
+//! Every public item in this module tree carries rustdoc; the lint below
+//! keeps it that way (satisfying the `cargo doc` CI gate).
+
+#![warn(missing_docs)]
 
 pub mod explain;
 pub mod gen;
@@ -74,6 +79,7 @@ pub enum Operand {
 }
 
 impl Operand {
+    /// Variable name of the operand (`None` for literals).
     pub fn name(&self) -> Option<&str> {
         match self {
             Operand::Mat(n) | Operand::Scalar(n, _) => Some(n),
@@ -170,8 +176,11 @@ impl CpOp {
 /// One CP instruction.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CpInst {
+    /// Operation code.
     pub op: CpOp,
+    /// Input operands in positional order.
     pub inputs: Vec<Operand>,
+    /// Output operand (matrix temp, scalar or bookkeeping sink).
     pub output: Operand,
 }
 
@@ -189,6 +198,7 @@ pub enum JobType {
 }
 
 impl JobType {
+    /// EXPLAIN job-type label (`GMR`, `RAND`, `MMCJ`, `MMRJ`).
     pub fn name(&self) -> &'static str {
         match self {
             JobType::Gmr => "GMR",
@@ -202,6 +212,7 @@ impl JobType {
 /// MR instruction operators (operands are job-local byte indices).
 #[derive(Clone, Debug, PartialEq)]
 pub enum MrOp {
+    /// Map-side transpose-self matrix multiply (`LEFT` = t(X)%*%X).
     Tsmm { left: bool },
     /// Broadcast matmult; `right_part` marks which side is the partitioned
     /// broadcast input (Figure 3: `mapmm 3 1 4 RIGHT_PART false`).
@@ -210,7 +221,9 @@ pub enum MrOp {
     Cpmm,
     /// Replication-join matmult (MMRJ).
     Rmm,
+    /// Block-wise transpose `r'`.
     Transpose,
+    /// Vector→diag matrix / matrix→diag vector `rdiag`.
     Diag,
     /// Rand datagen in a RAND job.
     DataGen { min: f64, max: f64, sparsity: f64, seed: i64, rows: i64, cols: i64 },
@@ -219,6 +232,7 @@ pub enum MrOp {
     /// Matrix-scalar binary (map-side). The scalar is a literal (`scalar`)
     /// or a runtime scalar variable (`scalar_var`) passed via job config.
     ScalarBin { op: BinOp, scalar: f64, scalar_var: Option<String>, scalar_left: bool },
+    /// Elementwise unary op (map-side).
     Unary(UnOp),
     /// Map-side partial aggregate, e.g. `uak+`.
     AggUnaryMap(AggOp, AggDir),
@@ -229,6 +243,7 @@ pub enum MrOp {
 }
 
 impl MrOp {
+    /// SystemML opcode string (as printed by EXPLAIN).
     pub fn code(&self) -> String {
         match self {
             MrOp::Tsmm { .. } => "tsmm".into(),
@@ -266,8 +281,11 @@ impl MrOp {
 /// One MR instruction with job-local operand indices.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MrInst {
+    /// Operation code.
     pub op: MrOp,
+    /// Job-local byte indices of the inputs.
     pub inputs: Vec<usize>,
+    /// Job-local byte index of the output.
     pub output: usize,
     /// Output characteristics (for costing shuffle/write volumes).
     pub mc: MatrixCharacteristics,
@@ -276,19 +294,27 @@ pub struct MrInst {
 /// A generated MR-job instruction (Figure 3's `MR-Job[...]`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct MrJob {
+    /// Piggybacking job class (GMR / RAND / MMCJ / MMRJ).
     pub job_type: JobType,
     /// Input labels: variables read from HDFS (index order = byte index).
     pub inputs: Vec<String>,
     /// Inputs read via distributed cache (subset of `inputs`).
     pub dcache: Vec<String>,
+    /// Map-phase instructions.
     pub map_insts: Vec<MrInst>,
+    /// Shuffle-phase instructions (cpmm/rmm joins).
     pub shuffle_insts: Vec<MrInst>,
+    /// Combiner/reducer aggregation instructions (`ak+`).
     pub agg_insts: Vec<MrInst>,
+    /// Reduce-side instructions outside the aggregation slot.
     pub other_insts: Vec<MrInst>,
     /// Output variable labels, parallel to `result_indices`.
     pub outputs: Vec<String>,
+    /// Byte indices of the outputs within the job.
     pub result_indices: Vec<usize>,
+    /// Reduce-task count requested for the job.
     pub num_reducers: usize,
+    /// Replication factor for job outputs.
     pub replication: usize,
 }
 
@@ -393,7 +419,9 @@ pub enum Instr {
     CpVar { src: String, dst: String },
     /// Remove variables (end of live range).
     RmVar { vars: Vec<String> },
+    /// A CP (control program) instruction.
     Cp(CpInst),
+    /// A piggybacked MR-job instruction (MR backend).
     MrJob(MrJob),
     /// A Spark action triggering a fused stage DAG (Spark backend).
     SparkJob(SparkJob),
@@ -402,20 +430,26 @@ pub enum Instr {
 /// Small instruction program computing a predicate / loop bound.
 #[derive(Clone, Debug, Default)]
 pub struct PredProg {
+    /// Instructions evaluating the predicate expression.
     pub insts: Vec<Instr>,
+    /// Operand holding the predicate value (if any).
     pub result: Option<Operand>,
 }
 
 /// Runtime program blocks, mirroring [`crate::ir::Block`].
 #[derive(Clone, Debug)]
 pub enum RtBlock {
+    /// Straight-line instruction block (one compiled HOP DAG).
     Generic { insts: Vec<Instr>, lines: (usize, usize), recompile: bool },
+    /// Conditional: predicate program plus then/else block lists.
     If {
         pred: PredProg,
         then_blocks: Vec<RtBlock>,
         else_blocks: Vec<RtBlock>,
         lines: (usize, usize),
     },
+    /// (Par)for loop: bound programs, body blocks, and the statically
+    /// known trip count when available.
     For {
         var: String,
         from: PredProg,
@@ -426,22 +460,30 @@ pub enum RtBlock {
         known_trip: Option<f64>,
         lines: (usize, usize),
     },
+    /// While loop: predicate program plus body blocks.
     While { pred: PredProg, body: Vec<RtBlock>, lines: (usize, usize) },
+    /// Call to a runtime function, binding `args` to formals and
+    /// function outputs back to `outputs`.
     FCall { fname: String, args: Vec<String>, outputs: Vec<String>, lines: (usize, usize) },
 }
 
 /// A runtime function.
 #[derive(Clone, Debug)]
 pub struct RtFunction {
+    /// Formal parameter names.
     pub params: Vec<String>,
+    /// Output variable names.
     pub outputs: Vec<String>,
+    /// Function body blocks.
     pub blocks: Vec<RtBlock>,
 }
 
 /// A complete runtime program.
 #[derive(Clone, Debug, Default)]
 pub struct RtProgram {
+    /// Top-level program blocks in program order.
     pub blocks: Vec<RtBlock>,
+    /// Runtime functions by name.
     pub funcs: BTreeMap<String, RtFunction>,
 }
 

@@ -29,8 +29,11 @@ use super::*;
 /// Execution phase of an MR node inside a job.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Phase {
+    /// Map phase (scan-side operators).
     Map,
+    /// Shuffle phase (cpmm/rmm joins).
     Shuffle,
+    /// Aggregation phase (combiner/reducer `ak+`).
     Agg,
 }
 
@@ -46,14 +49,19 @@ pub enum MrDep {
 /// One logical MR operation awaiting job assignment.
 #[derive(Clone, Debug)]
 pub struct MrNode {
+    /// Node id (index in the wave, referenced by [`MrDep::Node`]).
     pub nid: usize,
+    /// Primary operation of the node.
     pub op: MrOp,
     /// Follow-up same-job aggregation (`ak+` for tsmm/mapmm/uagg partials).
     pub agg: Option<MrOp>,
+    /// Phase the primary operation runs in.
     pub phase: Phase,
+    /// Job class the node requires (GMR / RAND / MMCJ / MMRJ).
     pub job_type: JobType,
     /// Cheap map-phase op that may be copied into consumer jobs.
     pub replicable: bool,
+    /// Inputs of the node (variables or other wave nodes).
     pub deps: Vec<MrDep>,
     /// Index into `deps` read via distributed cache (broadcast).
     pub broadcast: Option<usize>,
@@ -68,7 +76,10 @@ pub struct MrNode {
 /// Result of packing: jobs in execution order plus, for every node whose
 /// output was materialised, its variable name and characteristics.
 pub struct Packed {
+    /// MR jobs in execution order.
     pub jobs: Vec<MrJob>,
+    /// Materialised outputs: `(variable, characteristics)` per external
+    /// consumer, in node order.
     pub materialized: Vec<(String, MatrixCharacteristics)>,
 }
 

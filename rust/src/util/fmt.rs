@@ -37,6 +37,23 @@ pub fn fmt_secs(s: f64) -> String {
     }
 }
 
+/// Normalise the process-id scratch path that runtime-plan generation
+/// embeds (`scratch_space//_p1234//` → `scratch_space//_pPID//`) so
+/// EXPLAIN output is stable across processes. Single source of truth for
+/// the golden-snapshot tests and the GDF plan diff.
+pub fn normalize_scratch_pid(text: &str) -> String {
+    let mut out = String::with_capacity(text.len());
+    let mut rest = text;
+    while let Some(pos) = rest.find("//_p") {
+        let (head, tail) = rest.split_at(pos + 4);
+        out.push_str(head);
+        out.push_str("PID");
+        rest = tail.trim_start_matches(|c: char| c.is_ascii_digit());
+    }
+    out.push_str(rest);
+    out
+}
+
 /// Format a dimension that may be unknown (-1), SystemML-style (`1e4` or `-1`).
 pub fn fmt_dim(d: i64) -> String {
     if d < 0 {
@@ -77,6 +94,14 @@ mod tests {
         assert!(fmt_secs(4.7e-9).starts_with("4.7E-9"));
         assert_eq!(fmt_secs(3.31), "3.310s");
         assert_eq!(fmt_secs(606.9), "606.9s");
+    }
+
+    #[test]
+    fn scratch_pid_normalised() {
+        let text = "CP createvar _mVar2 scratch_space//_p4242//_t0/temp2 true";
+        let n = normalize_scratch_pid(text);
+        assert_eq!(n, "CP createvar _mVar2 scratch_space//_pPID//_t0/temp2 true");
+        assert_eq!(normalize_scratch_pid("no pid here"), "no pid here");
     }
 
     #[test]

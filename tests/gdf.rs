@@ -1,0 +1,208 @@
+//! Integration tests for the global data flow optimizer (`opt/gdf.rs`):
+//! a golden decision-trace + EXPLAIN-diff snapshot (stable across thread
+//! counts), the argmin-vs-default property on every bundled script ×
+//! backend, and the api-entry cluster-validation regression.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use systemds::api::{
+    compile, compile_with_meta, linreg_cg_args, optimize_global_dataflow, ClusterConfigOpt,
+    CompileOptions, DataScenario, ExecBackend, GdfSpec, Scenario, LINREG_CG, LINREG_DS,
+};
+use systemds::conf::{ClusterConfig, MB};
+use systemds::cost;
+use systemds::matrix::Format;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../tests/golden")
+}
+
+/// The reference GDF search space: LinReg CG (20 iterations) on XL1 with
+/// a small deterministic axis set.
+fn cg_spec(threads: usize) -> GdfSpec {
+    let s = Scenario::xl1();
+    let mut spec = GdfSpec::linreg_cg(DataScenario::from(&s), 20);
+    spec.blocksizes = vec![1000, 2000];
+    spec.formats = vec![Format::BinaryBlock];
+    spec.partitions_mb = vec![32.0];
+    spec.threads = threads;
+    spec
+}
+
+/// The deterministic part of a GDF report: per-cut decisions plus the
+/// before/after plan diff (wall time and memo flags excluded).
+fn gdf_snapshot(threads: usize) -> String {
+    let report = optimize_global_dataflow(&cg_spec(threads)).expect("gdf optimizes");
+    format!(
+        "decision trace:\n{}\nplan diff:\n{}",
+        report.decision_table(),
+        report.explain_diff()
+    )
+}
+
+#[test]
+fn golden_gdf_trace_and_diff_stable_across_thread_counts() {
+    let one = gdf_snapshot(1);
+    let four = gdf_snapshot(4);
+    assert_eq!(one, four, "GDF trace/diff must not depend on thread count");
+
+    // Structural pins that hold even on a fresh checkout (the snapshot
+    // below self-blesses on first run, so these are the assertions that
+    // always bite in CI): the trace covers the CG program's cuts, the
+    // diff removes MR jobs and introduces Spark jobs, and the scratch
+    // path is PID-normalised.
+    assert!(one.contains("GENERIC"), "{one}");
+    assert!(one.contains("FOR"), "{one}");
+    assert!(one.contains("- ") && one.contains("+ "), "{one}");
+    assert!(one.contains("MR-Job["), "{one}");
+    assert!(one.contains("SPARK-Job["), "{one}");
+    assert!(!one.contains(&format!("_p{}", std::process::id())), "{one}");
+
+    let dir = golden_dir();
+    let path = dir.join("gdf_linreg_cg_diff.txt");
+    if !path.exists() {
+        std::fs::create_dir_all(&dir).expect("create tests/golden");
+        std::fs::write(&path, &one).expect("write golden snapshot");
+        eprintln!("blessed new golden snapshot: {}", path.display());
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).expect("read golden snapshot");
+    assert_eq!(
+        one,
+        expected,
+        "GDF trace/diff diverged from {} — delete the snapshot and re-run to re-bless",
+        path.display()
+    );
+}
+
+/// Acceptance: on the loop-heavy CG script the optimizer must find a
+/// configuration whose costed time is *strictly* better than the default
+/// compiled (MR) plan — and it gets there by restructuring the plan, not
+/// by touching the cluster.
+#[test]
+fn gdf_strictly_improves_linreg_cg_over_default_mr() {
+    let r = optimize_global_dataflow(&cg_spec(0)).unwrap();
+    assert!(
+        r.best().cost_secs < r.baseline().cost_secs,
+        "best {} !< default {}",
+        r.best().cost_secs,
+        r.baseline().cost_secs
+    );
+    assert!(r.improvement_pct() > 0.0);
+    assert!(
+        r.best().groups.iter().any(|&b| b != ExecBackend::Mr),
+        "the winning plan must move at least one group off the default backend: {:?}",
+        r.best().groups
+    );
+}
+
+/// Property (satellite): the GDF argmin cost is never worse than the
+/// default-plan cost, for every bundled script × default backend. The
+/// reference is compiled and costed *independently* of the optimizer
+/// (`compile_with_meta` + `cost_program`), so a bug that corrupts the
+/// candidate set or its costs cannot satisfy the property by comparing
+/// the report against itself.
+#[test]
+fn gdf_argmin_never_worse_than_default_for_every_script_and_backend() {
+    let s = Scenario::xl1();
+    let scripts: Vec<(&str, &str, HashMap<usize, String>)> = vec![
+        ("ds", LINREG_DS, s.args()),
+        ("cg", LINREG_CG, linreg_cg_args(5)),
+    ];
+    for (name, src, args) in &scripts {
+        for backend in ExecBackend::all() {
+            let mut spec = GdfSpec::new(*src, args.clone(), DataScenario::from(&s));
+            spec.blocksizes = vec![1000];
+            spec.formats = vec![Format::BinaryBlock];
+            spec.partitions_mb = vec![32.0];
+            spec.default_backend = backend;
+            spec.threads = 2;
+
+            // independent reference: the default plan, compiled and
+            // costed outside the optimizer
+            let opts = CompileOptions {
+                cfg: spec.cfg.clone(),
+                cc: ClusterConfigOpt(spec.cc.clone()),
+                hints: spec.hints.clone(),
+                backend,
+            };
+            let c = compile_with_meta(
+                *src,
+                args,
+                &spec.scenario.meta(spec.cfg.blocksize),
+                &opts,
+            )
+            .unwrap();
+            let reference =
+                cost::cost_program(&c.runtime, &spec.cfg, &spec.cc, &spec.constants).total;
+
+            let r = optimize_global_dataflow(&spec).unwrap();
+            assert_eq!(r.baseline, 0, "candidate 0 is the default configuration");
+            assert!(
+                (r.baseline().cost_secs - reference).abs() <= 1e-9 * reference.max(1.0),
+                "script {name} backend {}: baseline {} != independent default cost {}",
+                backend.name(),
+                r.baseline().cost_secs,
+                reference
+            );
+            assert!(
+                r.best().cost_secs <= reference * (1.0 + 1e-9),
+                "script {name} backend {}: best {} > default {}",
+                backend.name(),
+                r.best().cost_secs,
+                reference
+            );
+        }
+    }
+}
+
+/// The per-cut trace is consistent with the chosen group assignment: a
+/// CP-forced cut has no distributed jobs, and the default plan's job
+/// counts are reported for comparison.
+#[test]
+fn decision_trace_is_consistent_with_group_assignment() {
+    let r = optimize_global_dataflow(&cg_spec(2)).unwrap();
+    assert!(!r.trace.is_empty());
+    let before: usize = r.trace.iter().map(|d| d.jobs_before).sum();
+    assert!(before > 0, "the default MR plan of CG/XL1 has distributed jobs");
+    for d in &r.trace {
+        if d.backend == ExecBackend::Cp {
+            assert_eq!(d.jobs_after, 0, "CP-forced cut cannot have jobs: {d:?}");
+        }
+    }
+    // trace and groups are aligned with the top-level cuts
+    assert_eq!(r.trace.len(), r.best().groups.len());
+}
+
+/// Regression (satellite bugfix): every public `api::` compile entry
+/// routes through `ClusterConfig::validate`, so a degenerate conf
+/// surfaces as a diagnostic instead of NaN costs or panics downstream.
+#[test]
+fn api_compile_entries_validate_cluster_config() {
+    let s = Scenario::xs();
+    let mut cc = ClusterConfig::paper_cluster();
+    cc.cp_heap_bytes = 0.0;
+    let opts = CompileOptions { cc: ClusterConfigOpt(cc), ..Default::default() };
+    let err = compile_with_meta(LINREG_DS, &s.args(), &s.meta(1000), &opts).unwrap_err();
+    assert!(err.contains("cp_heap_bytes"), "{err}");
+
+    // `compile` (the .mtd sidecar path) hits the same validation before
+    // touching the filesystem
+    let mut cc = ClusterConfig::paper_cluster();
+    cc.k_local = 0;
+    let opts = CompileOptions { cc: ClusterConfigOpt(cc), ..Default::default() };
+    let err = compile(LINREG_DS, &s.args(), &opts).unwrap_err();
+    assert!(err.contains("k_local"), "{err}");
+}
+
+/// A single-threaded local cluster must stay valid under the new
+/// validation routing (its reducer-slot count is floored at 1).
+#[test]
+fn single_thread_local_cluster_still_compiles() {
+    let cc = ClusterConfig::local(1, 512.0 * MB);
+    cc.validate().expect("local(1) validates");
+    let s = Scenario::xs();
+    let opts = CompileOptions { cc: ClusterConfigOpt(cc), ..Default::default() };
+    compile_with_meta(LINREG_DS, &s.args(), &s.meta(1000), &opts).expect("compiles");
+}

@@ -18,18 +18,10 @@ fn golden_dir() -> PathBuf {
 }
 
 /// The scratch path embeds the process id (`scratch_space//_p1234//`);
-/// normalise it so snapshots are stable across runs.
+/// normalise it so snapshots are stable across runs. Single rule shared
+/// with the GDF plan diff (`util::fmt::normalize_scratch_pid`).
 fn normalize(text: &str) -> String {
-    let mut out = String::with_capacity(text.len());
-    let mut rest = text;
-    while let Some(pos) = rest.find("//_p") {
-        let (head, tail) = rest.split_at(pos + 4);
-        out.push_str(head);
-        out.push_str("PID");
-        rest = tail.trim_start_matches(|c: char| c.is_ascii_digit());
-    }
-    out.push_str(rest);
-    out
+    systemds::util::fmt::normalize_scratch_pid(text)
 }
 
 fn explain_cg(backend: ExecBackend) -> String {
