@@ -1,0 +1,194 @@
+//! Bench: the incremental plan-costing engine on the bundled `repro gdf`
+//! workload (LinReg CG, XL1, 20 iterations, full default axis set) —
+//! block-level cost caching ON vs OFF, parallel vs serial, measured at
+//! steady state (compile memo warm on both sides, so the delta is the
+//! costing engine, not compilation).
+//!
+//! Modes:
+//!
+//! ```text
+//! cargo bench --bench costcache                  # human-readable only
+//! cargo bench --bench costcache -- --quick       # short measurement budget
+//! cargo bench --bench costcache -- --json [PATH] # also emit BENCH_COSTCACHE.json
+//! ```
+//!
+//! The JSON report (`BENCH_COSTCACHE.json` at the repository root by
+//! default) is the perf baseline this and future PRs track: candidate
+//! evaluations per second, cache hit rate, serial-vs-parallel and
+//! cached-vs-uncached speedups. CI regenerates it in `--quick` mode,
+//! validates the schema and fails if cached evaluation is slower than
+//! uncached.
+//!
+//! Uses the in-repo fixed-budget harness (criterion is unavailable in
+//! the hermetic offline build; see rust/Cargo.toml).
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use systemds::api::{CacheStats, DataScenario, Evaluator, GdfSpec, Scenario};
+use systemds::opt::gdf::{optimize_with, GdfReport};
+use systemds::util::bench::{fmt_dur, Bencher};
+use systemds::util::par;
+
+/// The bundled `repro gdf` workload: `repro gdf --scenario xl1 --script
+/// cg --iters 20` with the default search axes (3 block sizes × 2
+/// formats × 2 partition sizes × per-cut backend assignments).
+fn gdf_workload() -> GdfSpec {
+    GdfSpec::linreg_cg(DataScenario::from(&Scenario::xl1()), 20)
+}
+
+struct Side {
+    median_secs: f64,
+    report: GdfReport,
+}
+
+/// Warm an evaluator on the workload (compiles everything once), then
+/// measure repeated re-optimization — the steady state where only the
+/// costing engine runs — and capture one post-measurement report for
+/// the per-run cache statistics.
+fn measure(b: &mut Bencher, name: &str, spec: &GdfSpec, eval: &mut Evaluator) -> Side {
+    let _ = optimize_with(spec, eval).expect("warm-up run");
+    let stats = b.bench(name, || optimize_with(spec, eval).unwrap().candidates.len()).clone();
+    let report = optimize_with(spec, eval).expect("stats run");
+    Side { median_secs: stats.median.as_secs_f64().max(1e-9), report }
+}
+
+fn write_json(path: &Path, threads: usize, quick: bool, cached: &Side, uncached: &Side, serial: &Side) {
+    let candidates = cached.report.candidates.len();
+    let cr = &cached.report;
+    let hit_rate = CacheStats {
+        hits: cr.cache_hits,
+        misses: cr.cache_misses,
+        ..CacheStats::default()
+    }
+    .hit_rate();
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"schema\": \"bench-costcache/v1\",\n",
+            "  \"generated\": \"cargo bench --bench costcache -- --json{quickflag}\",\n",
+            "  \"workload\": {{\n",
+            "    \"kind\": \"{kind}\",\n",
+            "    \"script\": \"cg\",\n",
+            "    \"scenario\": \"XL1\",\n",
+            "    \"iterations\": 20,\n",
+            "    \"candidates\": {candidates},\n",
+            "    \"measurement\": \"steady-state re-optimization, compile memo warm on both sides\"\n",
+            "  }},\n",
+            "  \"threads\": {threads},\n",
+            "  \"quick\": {quick},\n",
+            "  \"wall_secs\": {{\n",
+            "    \"cached_median\": {cached:.6},\n",
+            "    \"uncached_median\": {uncached:.6},\n",
+            "    \"serial_median\": {serial:.6},\n",
+            "    \"parallel_median\": {cached:.6}\n",
+            "  }},\n",
+            "  \"cells_per_sec\": {{\n",
+            "    \"cached\": {cps_cached:.1},\n",
+            "    \"uncached\": {cps_uncached:.1}\n",
+            "  }},\n",
+            "  \"cache\": {{\n",
+            "    \"hits\": {hits},\n",
+            "    \"misses\": {misses},\n",
+            "    \"hit_rate\": {hit_rate:.4},\n",
+            "    \"skipped_duplicate_candidates\": {skipped}\n",
+            "  }},\n",
+            "  \"speedup\": {{\n",
+            "    \"cached_vs_uncached\": {speedup:.2},\n",
+            "    \"parallel_vs_serial\": {par_speedup:.2}\n",
+            "  }},\n",
+            "  \"plan_memo\": {{\n",
+            "    \"distinct_plans\": {distinct},\n",
+            "    \"candidates\": {candidates}\n",
+            "  }}\n",
+            "}}\n",
+        ),
+        quickflag = if quick { " --quick" } else { "" },
+        kind = "repro gdf",
+        candidates = candidates,
+        threads = threads,
+        quick = quick,
+        cached = cached.median_secs,
+        uncached = uncached.median_secs,
+        serial = serial.median_secs,
+        cps_cached = candidates as f64 / cached.median_secs,
+        cps_uncached = candidates as f64 / uncached.median_secs,
+        hits = cr.cache_hits,
+        misses = cr.cache_misses,
+        hit_rate = hit_rate,
+        skipped = cr.skipped_duplicates,
+        speedup = uncached.median_secs / cached.median_secs,
+        par_speedup = serial.median_secs / cached.median_secs,
+        distinct = cr.distinct_plans,
+    );
+    std::fs::write(path, json).expect("write BENCH_COSTCACHE.json");
+    println!("wrote {}", path.display());
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args.iter().position(|a| a == "--json").map(|i| {
+        match args.get(i + 1).filter(|p| !p.starts_with("--")) {
+            Some(p) => PathBuf::from(p),
+            None => PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_COSTCACHE.json"),
+        }
+    });
+    let (warmup, budget) = if quick {
+        (Duration::from_millis(100), Duration::from_millis(1200))
+    } else {
+        (Duration::from_millis(300), Duration::from_secs(3))
+    };
+
+    let threads = par::default_threads();
+    let spec = gdf_workload();
+    println!(
+        "== costcache: the `repro gdf` workload at steady state, {threads} worker threads =="
+    );
+
+    let mut b = Bencher::new().with_budget(warmup, budget);
+    let mut cached_eval = Evaluator::new(threads);
+    let cached = measure(&mut b, "gdf costing, block cache ON", &spec, &mut cached_eval);
+    let mut uncached_eval = Evaluator::without_cost_cache(threads);
+    let uncached = measure(&mut b, "gdf costing, block cache OFF", &spec, &mut uncached_eval);
+    let mut serial_eval = Evaluator::new(1);
+    let serial = measure(&mut b, "gdf costing, cache ON, 1 thread", &spec, &mut serial_eval);
+
+    let speedup = uncached.median_secs / cached.median_secs;
+    let par_speedup = serial.median_secs / cached.median_secs;
+    let cr = &cached.report;
+    println!(
+        "\nworkload: {} candidates, {} distinct plans, {} duplicate costings skipped",
+        cr.candidates.len(),
+        cr.distinct_plans,
+        cr.skipped_duplicates
+    );
+    let hit_rate = CacheStats {
+        hits: cr.cache_hits,
+        misses: cr.cache_misses,
+        ..CacheStats::default()
+    }
+    .hit_rate();
+    println!(
+        "steady-state cache: {} hits / {} misses per run ({:.1}% hit rate)",
+        cr.cache_hits,
+        cr.cache_misses,
+        100.0 * hit_rate
+    );
+    println!(
+        "-> cached is {speedup:.2}x uncached ({} vs {}); parallel is {par_speedup:.2}x serial",
+        fmt_dur(Duration::from_secs_f64(cached.median_secs)),
+        fmt_dur(Duration::from_secs_f64(uncached.median_secs)),
+    );
+    if speedup >= 3.0 {
+        println!("-> CACHE WINS (>= 3x acceptance target)");
+    } else if speedup >= 1.0 {
+        println!("-> cache wins, below the 3x target on this machine/budget");
+    } else {
+        println!("-> cache LOST on this machine/budget");
+    }
+
+    if let Some(path) = json_path {
+        write_json(&path, threads, quick, &cached, &uncached, &serial);
+    }
+}

@@ -18,6 +18,8 @@ use crate::lop::SelectionHints;
 use crate::matrix::{Format, MatrixCharacteristics};
 use crate::rtprog::{self, RtProgram};
 
+pub use crate::cost::cache::{CacheStats, CostCache};
+pub use crate::opt::evaluate::{Candidate, CostContext, Evaluated, Evaluator};
 pub use crate::opt::gdf::{CutDecision, GdfCandidate, GdfReport, GdfSpec};
 pub use crate::opt::resource::{GridPoint, ResourceGrid, ResourceReport};
 pub use crate::opt::sweep::{DataScenario, NamedCluster, SweepCell, SweepReport, SweepSpec};

@@ -1,0 +1,695 @@
+//! Block-level **cost caching** — the incremental half of the costing
+//! engine.
+//!
+//! Every optimizer in this codebase (the scenario sweep, the grid
+//! resource optimizer and the global data flow optimizer) costs large
+//! families of closely related runtime plans: candidates typically
+//! differ in a single knob or a single program cut, yet
+//! [`super::cost_program`] walks every block of every candidate from
+//! scratch. This module caches the cost of one [`RtBlock`] subtree under
+//! a key that captures *everything* the §3 costing pass can observe:
+//!
+//! 1. **Structural block hash** — a 128-bit hash over the entire block
+//!    subtree (instructions, operands, matrix characteristics, line
+//!    numbers, nested blocks), precomputed once per compiled plan by
+//!    [`program_hashes`].
+//! 2. **Variable-state fingerprint** — a canonical hash of the incoming
+//!    [`VarTracker`]: every live name (sorted), its alias group, and the
+//!    shared entry's dimensions / format / HDFS-vs-memory residence
+//!    (see [`VarTracker::hash_state`]). The §3.2 first-read accounting
+//!    makes block cost state-dependent, so the fingerprint is part of
+//!    the key rather than an invalidation afterthought.
+//! 3. **Relevant configuration knobs** — only the [`SystemConfig`] /
+//!    [`ClusterConfig`] / [`CostConstants`] fields the block can
+//!    actually read, selected by per-block feature flags: `k_local`
+//!    enters the key only for parfor blocks, `unknown_iterations` only
+//!    for loops without a static trip count, the MR slot geometry and
+//!    latencies only for blocks containing MR jobs, and the Spark
+//!    executor geometry and latencies only for blocks containing Spark
+//!    jobs. Grid points that vary a knob no block reads (e.g. `k_local`
+//!    on a plan without parfor) therefore hit the cache outright.
+//!
+//! A hit replays both outputs of costing a block: the [`CostNode`]
+//! annotation *and* the updated variable-state tracker. Because the key
+//! covers the full observable input, cached and uncached costing are
+//! bitwise identical (`tests/costcache.rs` property-checks this on every
+//! bundled script × backend × thread count).
+//!
+//! Function-call blocks are never cached: their cost depends on the
+//! callee body, which lives outside the block's structural hash. The
+//! `NOCACHE` flag propagates to every ancestor containing an `FCall`.
+//!
+//! The cache is sharded (8 × `Mutex<HashMap>`) so concurrent costing
+//! workers ([`crate::util::par`]) contend rarely, and bounded by a FIFO
+//! per-shard eviction policy (insertion order approximates cost-walk
+//! order, so the oldest entries are the least likely to recur within an
+//! optimizer run).
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::fmt::Write as _;
+use std::hash::Hasher;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::vars::VarTracker;
+use super::CostNode;
+use crate::conf::{ClusterConfig, CostConstants, SystemConfig};
+use crate::rtprog::{Instr, RtBlock, RtProgram};
+
+// ---------------------------------------------------------------------
+// Feature flags: which knob groups a block subtree can read
+// ---------------------------------------------------------------------
+
+/// Block contains a parfor loop (reads `cc.k_local`).
+pub(crate) const F_PARFOR: u8 = 1 << 0;
+/// Block contains a loop without a static trip count (reads
+/// `cfg.unknown_iterations`).
+pub(crate) const F_UNKNOWN_ITERS: u8 = 1 << 1;
+/// Block contains an MR-job instruction (reads the MR knob group).
+pub(crate) const F_MR: u8 = 1 << 2;
+/// Block contains a Spark-job instruction (reads the Spark knob group).
+pub(crate) const F_SPARK: u8 = 1 << 3;
+/// Block contains a function call somewhere in its subtree: its cost
+/// depends on state outside the structural hash, so it is never cached.
+pub(crate) const F_NOCACHE: u8 = 1 << 4;
+
+fn insts_feats(insts: &[Instr]) -> u8 {
+    let mut f = 0;
+    for i in insts {
+        match i {
+            Instr::MrJob(_) => f |= F_MR,
+            Instr::SparkJob(_) => f |= F_SPARK,
+            _ => {}
+        }
+    }
+    f
+}
+
+// ---------------------------------------------------------------------
+// Structural hashing
+// ---------------------------------------------------------------------
+
+/// FNV-1a 64-bit — the second, independent hash function backing the
+/// 128-bit keys (the first is the std `DefaultHasher`).
+struct Fnv(u64);
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(FNV_OFFSET)
+    }
+}
+
+impl Hasher for Fnv {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+}
+
+/// `fmt::Write` adapter feeding the formatted bytes into two hashers at
+/// once; hashing the `Debug` rendering covers every field of the runtime
+/// instruction structures (including `f64` payloads) without a hand
+/// written per-variant walk that could silently miss one.
+struct TwoHashers<'a>(&'a mut DefaultHasher, &'a mut Fnv);
+
+impl std::fmt::Write for TwoHashers<'_> {
+    fn write_str(&mut self, s: &str) -> std::fmt::Result {
+        self.0.write(s.as_bytes());
+        self.1.write(s.as_bytes());
+        Ok(())
+    }
+}
+
+fn hash_debug<T: std::fmt::Debug>(v: &T) -> (u64, u64) {
+    let mut h1 = DefaultHasher::new();
+    let mut h2 = Fnv::new();
+    let _ = write!(TwoHashers(&mut h1, &mut h2), "{v:?}");
+    (h1.finish(), h2.finish())
+}
+
+/// Structural hash of one runtime block subtree plus the feature flags
+/// selecting its relevant configuration knobs. Children mirror the order
+/// the estimator walks nested blocks (then-blocks followed by
+/// else-blocks for `If`; the body for loops).
+#[derive(Clone, Debug)]
+pub struct BlockHash {
+    pub(crate) h1: u64,
+    pub(crate) h2: u64,
+    pub(crate) feats: u8,
+    pub(crate) children: Vec<BlockHash>,
+}
+
+impl BlockHash {
+    pub(crate) fn cacheable(&self) -> bool {
+        self.feats & F_NOCACHE == 0
+    }
+}
+
+fn hash_block(b: &RtBlock) -> BlockHash {
+    let children: Vec<BlockHash> = match b {
+        RtBlock::Generic { .. } | RtBlock::FCall { .. } => Vec::new(),
+        RtBlock::If { then_blocks, else_blocks, .. } => {
+            then_blocks.iter().chain(else_blocks).map(hash_block).collect()
+        }
+        RtBlock::For { body, .. } | RtBlock::While { body, .. } => {
+            body.iter().map(hash_block).collect()
+        }
+    };
+    let mut feats = match b {
+        RtBlock::Generic { insts, .. } => insts_feats(insts),
+        RtBlock::If { pred, .. } => insts_feats(&pred.insts),
+        RtBlock::For { from, to, by, parfor, known_trip, .. } => {
+            let mut f = insts_feats(&from.insts) | insts_feats(&to.insts);
+            if let Some(by) = by {
+                f |= insts_feats(&by.insts);
+            }
+            if *parfor {
+                f |= F_PARFOR;
+            }
+            if known_trip.is_none() {
+                f |= F_UNKNOWN_ITERS;
+            }
+            f
+        }
+        RtBlock::While { pred, .. } => insts_feats(&pred.insts) | F_UNKNOWN_ITERS,
+        RtBlock::FCall { .. } => F_NOCACHE,
+    };
+    for c in &children {
+        feats |= c.feats;
+    }
+    let (h1, h2) = hash_debug(b);
+    BlockHash { h1, h2, feats, children }
+}
+
+/// Precomputed structural hashes of a whole runtime program: one
+/// [`BlockHash`] tree per top-level block plus one per function body
+/// block. Computed **once per compiled plan** (the evaluator stores it
+/// alongside the `Arc`-shared plan in its memo), so repeated costings of
+/// the same plan pay no hashing beyond the per-lookup state/knob
+/// fingerprints.
+#[derive(Clone, Debug, Default)]
+pub struct ProgramHashes {
+    pub(crate) blocks: Vec<BlockHash>,
+    pub(crate) funcs: BTreeMap<String, Vec<BlockHash>>,
+    pub(crate) root: (u64, u64),
+    pub(crate) feats: u8,
+}
+
+impl ProgramHashes {
+    /// 128-bit structural hash of the whole program — equal hashes mean
+    /// structurally identical plans (used by the evaluator to skip
+    /// re-costing duplicate candidates).
+    pub fn root(&self) -> (u64, u64) {
+        self.root
+    }
+
+    /// Union of every block's knob-relevance feature flags.
+    pub(crate) fn feats(&self) -> u8 {
+        self.feats
+    }
+}
+
+/// Compute the structural hash tree of a runtime program. Call once per
+/// compiled plan and reuse across costings (see
+/// [`super::cost_program_cached`]).
+pub fn program_hashes(rt: &RtProgram) -> ProgramHashes {
+    let blocks: Vec<BlockHash> = rt.blocks.iter().map(hash_block).collect();
+    let funcs: BTreeMap<String, Vec<BlockHash>> = rt
+        .funcs
+        .iter()
+        .map(|(n, f)| (n.clone(), f.blocks.iter().map(hash_block).collect()))
+        .collect();
+    let mut h1 = DefaultHasher::new();
+    let mut h2 = Fnv::new();
+    let mut feats = 0u8;
+    for b in &blocks {
+        h1.write_u64(b.h1);
+        h1.write_u64(b.h2);
+        h2.write_u64(b.h1);
+        h2.write_u64(b.h2);
+        feats |= b.feats;
+    }
+    for (name, bs) in &funcs {
+        h1.write(name.as_bytes());
+        h2.write(name.as_bytes());
+        for b in bs {
+            h1.write_u64(b.h1);
+            h1.write_u64(b.h2);
+            h2.write_u64(b.h1);
+            h2.write_u64(b.h2);
+            feats |= b.feats;
+        }
+    }
+    ProgramHashes { blocks, funcs, root: (h1.finish(), h2.finish()), feats }
+}
+
+// ---------------------------------------------------------------------
+// Knob fingerprints
+// ---------------------------------------------------------------------
+
+/// Feed the configuration knobs selected by `feats` into `h`. The base
+/// group (clock, memory bandwidth, bookkeeping constant, sparsity
+/// threshold, HDFS read/write bandwidths) is read by every instruction
+/// path and always included; the loop / parfor / MR / Spark groups are
+/// included only when the block's feature flags say the block can read
+/// them. This is what lets cost-only axes that a block ignores (most
+/// prominently `k_local` on plans without parfor) share cache entries.
+pub(crate) fn hash_knobs<H: Hasher>(
+    feats: u8,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    k: &CostConstants,
+    h: &mut H,
+) {
+    fn f64b<H: Hasher>(h: &mut H, v: f64) {
+        h.write_u64(v.to_bits());
+    }
+    // base group: every instruction path
+    f64b(h, cc.clock_hz);
+    f64b(h, k.mem_bw);
+    f64b(h, k.bookkeeping);
+    f64b(h, cfg.sparse_threshold);
+    f64b(h, k.hdfs_read_binaryblock);
+    f64b(h, k.hdfs_read_text);
+    f64b(h, k.hdfs_write_binaryblock);
+    f64b(h, k.hdfs_write_text);
+    if feats & F_UNKNOWN_ITERS != 0 {
+        f64b(h, cfg.unknown_iterations);
+    }
+    if feats & F_PARFOR != 0 {
+        h.write_usize(cc.k_local);
+    }
+    if feats & (F_MR | F_SPARK) != 0 {
+        f64b(h, cc.hdfs_block_bytes);
+        f64b(h, k.dop_scale);
+    }
+    if feats & F_MR != 0 {
+        h.write_usize(cc.k_map);
+        h.write_usize(cc.k_reduce);
+        h.write_usize(cc.nodes);
+        h.write_usize(cc.vcores_per_node);
+        f64b(h, cc.yarn_mem_per_node);
+        f64b(h, cc.map_heap_bytes);
+        f64b(h, cc.reduce_heap_bytes);
+        f64b(h, k.job_latency);
+        f64b(h, k.task_latency);
+        f64b(h, cfg.partition_bytes);
+        f64b(h, k.dcache_read);
+        f64b(h, k.shuffle_bw);
+    }
+    if feats & F_SPARK != 0 {
+        h.write_usize(cc.spark_executors);
+        h.write_usize(cc.spark_executor_cores);
+        f64b(h, k.spark_job_latency);
+        f64b(h, k.spark_stage_latency);
+        f64b(h, k.spark_task_latency);
+        f64b(h, k.spark_shuffle_write);
+        f64b(h, k.spark_shuffle_read);
+        f64b(h, k.spark_broadcast_bw);
+    }
+}
+
+/// 128-bit fingerprint of the configuration knobs a whole program can
+/// read (the per-program analogue of the per-block knob hash). Two
+/// candidates with equal [`ProgramHashes::root`] and equal context
+/// fingerprints have bitwise-identical cost; the evaluator uses this to
+/// skip re-costing duplicates.
+pub(crate) fn hash_context(
+    feats: u8,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    k: &CostConstants,
+) -> (u64, u64) {
+    let mut h1 = DefaultHasher::new();
+    let mut h2 = Fnv::new();
+    hash_knobs(feats, cfg, cc, k, &mut h1);
+    hash_knobs(feats, cfg, cc, k, &mut h2);
+    (h1.finish(), h2.finish())
+}
+
+// ---------------------------------------------------------------------
+// The cache
+// ---------------------------------------------------------------------
+
+/// Full cache key of one block costing: structural block hash ×
+/// variable-state fingerprint × relevant knob fingerprint (each 128-bit,
+/// each produced by two independent hash functions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub(crate) struct CacheKey {
+    block: (u64, u64),
+    state: (u64, u64),
+    knobs: (u64, u64),
+}
+
+/// 128-bit fingerprint of the knobs selected by `feats` plus the
+/// costing mode. `emit_nodes` distinguishes the full-annotation entries
+/// from the totals-only entries (the two modes store different
+/// [`CostNode`] payloads and must never alias). Constant for one costing
+/// walk per `feats` value — the estimator memoizes the (at most 16)
+/// fingerprints per walk instead of re-hashing per block lookup.
+pub(crate) fn knob_fingerprint(
+    feats: u8,
+    emit_nodes: bool,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    k: &CostConstants,
+) -> (u64, u64) {
+    let mut k1 = DefaultHasher::new();
+    let mut k2 = Fnv::new();
+    k1.write_u8(emit_nodes as u8);
+    k2.write_u8(emit_nodes as u8);
+    hash_knobs(feats, cfg, cc, k, &mut k1);
+    hash_knobs(feats, cfg, cc, k, &mut k2);
+    (k1.finish(), k2.finish())
+}
+
+/// Build the lookup key for costing `bh` with incoming tracker state `t`
+/// under the (memoized) knob fingerprint of the block's feature flags.
+pub(crate) fn cache_key(bh: &BlockHash, t: &VarTracker, knobs: (u64, u64)) -> CacheKey {
+    let mut s1 = DefaultHasher::new();
+    let mut s2 = Fnv::new();
+    t.hash_state(&mut s1);
+    t.hash_state(&mut s2);
+    CacheKey { block: (bh.h1, bh.h2), state: (s1.finish(), s2.finish()), knobs }
+}
+
+/// Both outputs of costing a block: the annotation subtree and the
+/// variable-state tracker as it stands *after* the block. A hit replays
+/// both, which is exactly what re-costing the block would produce.
+pub(crate) struct CachedBlockCost {
+    pub(crate) node: CostNode,
+    pub(crate) tracker: VarTracker,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<CacheKey, Arc<CachedBlockCost>>,
+    order: VecDeque<CacheKey>,
+}
+
+const SHARDS: usize = 8;
+
+/// Thread-safe, bounded, block-level cost cache (see the module docs for
+/// the key design). Share one instance across every costing of a
+/// candidate family — the evaluator ([`crate::opt::evaluate`]) holds one
+/// per run by default and accepts a caller-provided instance for
+/// cross-run reuse (the steady-state the perf bench measures).
+pub struct CostCache {
+    shards: [Mutex<Shard>; SHARDS],
+    per_shard_capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl Default for CostCache {
+    fn default() -> Self {
+        CostCache::new(Self::DEFAULT_CAPACITY)
+    }
+}
+
+impl CostCache {
+    /// Default total entry capacity — generous for every bundled
+    /// workload (an optimizer run touches a few thousand distinct
+    /// (block, state, knobs) keys) while bounding memory.
+    pub const DEFAULT_CAPACITY: usize = 65_536;
+
+    /// Cache bounded to roughly `capacity` entries (rounded up to a
+    /// multiple of the shard count; at least one entry per shard).
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(1);
+        let mut per_shard = cap / SHARDS;
+        if cap % SHARDS != 0 {
+            per_shard += 1;
+        }
+        CostCache {
+            shards: std::array::from_fn(|_| Mutex::new(Shard::default())),
+            per_shard_capacity: per_shard,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: &CacheKey) -> &Mutex<Shard> {
+        // mix all three components: the dominant multiplicity in real
+        // workloads is one block under many (state, knob) variants, which
+        // block-only sharding would funnel into a single mutex
+        &self.shards[((key.block.1 ^ key.state.1 ^ key.knobs.1) as usize) % SHARDS]
+    }
+
+    pub(crate) fn get(&self, key: &CacheKey) -> Option<Arc<CachedBlockCost>> {
+        let guard = self.shard(key).lock().unwrap_or_else(|e| e.into_inner());
+        let hit = guard.map.get(key).cloned();
+        drop(guard);
+        if hit.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    pub(crate) fn insert(&self, key: CacheKey, val: Arc<CachedBlockCost>) {
+        let mut guard = self.shard(&key).lock().unwrap_or_else(|e| e.into_inner());
+        if guard.map.insert(key, val).is_none() {
+            guard.order.push_back(key);
+            while guard.map.len() > self.per_shard_capacity {
+                match guard.order.pop_front() {
+                    Some(old) => {
+                        guard.map.remove(&old);
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                    None => break,
+                }
+            }
+        }
+    }
+
+    /// Snapshot of the hit/miss/eviction counters and current size.
+    pub fn stats(&self) -> CacheStats {
+        let entries = self
+            .shards
+            .iter()
+            .map(|s| s.lock().unwrap_or_else(|e| e.into_inner()).map.len())
+            .sum();
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries,
+            capacity: self.per_shard_capacity * SHARDS,
+        }
+    }
+}
+
+/// Cache counters, either absolute ([`CostCache::stats`]) or as a
+/// per-run delta ([`CacheStats::since`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that had to cost the block.
+    pub misses: u64,
+    /// Entries dropped by the FIFO capacity bound.
+    pub evictions: u64,
+    /// Entries currently resident.
+    pub entries: usize,
+    /// Total entry capacity (shard capacity × shard count).
+    pub capacity: usize,
+}
+
+impl CacheStats {
+    /// Hit rate over the counted lookups (0 when none happened).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Counter delta relative to an earlier snapshot (entries/capacity
+    /// are reported as-of-now, not differenced).
+    pub fn since(&self, baseline: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.saturating_sub(baseline.hits),
+            misses: self.misses.saturating_sub(baseline.misses),
+            evictions: self.evictions.saturating_sub(baseline.evictions),
+            entries: self.entries,
+            capacity: self.capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::InstCost;
+    use crate::matrix::{Format, MatrixCharacteristics};
+
+    fn dummy_val(tag: &str) -> Arc<CachedBlockCost> {
+        Arc::new(CachedBlockCost {
+            node: CostNode::Inst { rendered: tag.to_string(), cost: InstCost::default() },
+            tracker: VarTracker::default(),
+        })
+    }
+
+    /// Keys crafted to land in one shard: shard choice xors the second
+    /// word of each component, so `block.1 == state.1` with zero knobs
+    /// cancels to shard 0 while `block.0` keeps the keys distinct.
+    fn key_in_shard0(i: u64) -> CacheKey {
+        CacheKey { block: (i, i), state: (i, i), knobs: (0, 0) }
+    }
+
+    #[test]
+    fn fifo_eviction_within_capacity() {
+        // capacity 2 -> 1 entry per shard; two same-shard inserts evict
+        // the older one, FIFO.
+        let cache = CostCache::new(2);
+        let (k1, k2) = (key_in_shard0(1), key_in_shard0(2));
+        cache.insert(k1, dummy_val("a"));
+        cache.insert(k2, dummy_val("b"));
+        assert!(cache.get(&k1).is_none(), "k1 must be evicted first (FIFO)");
+        assert!(cache.get(&k2).is_some());
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert!(s.entries <= s.capacity, "{s:?}");
+    }
+
+    #[test]
+    fn reinsert_does_not_duplicate_order_queue() {
+        let cache = CostCache::new(2);
+        let k = key_in_shard0(1);
+        cache.insert(k, dummy_val("a"));
+        cache.insert(k, dummy_val("b")); // overwrite, no second order slot
+        let other = key_in_shard0(2);
+        cache.insert(other, dummy_val("c"));
+        // exactly one eviction: k (the single queued entry)
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(cache.get(&k).is_none());
+        assert!(cache.get(&other).is_some());
+    }
+
+    #[test]
+    fn stats_count_hits_and_misses() {
+        let cache = CostCache::new(64);
+        let k = key_in_shard0(1);
+        assert!(cache.get(&k).is_none());
+        cache.insert(k, dummy_val("a"));
+        assert!(cache.get(&k).is_some());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        let d = cache.stats().since(&s);
+        assert_eq!((d.hits, d.misses), (0, 0));
+    }
+
+    #[test]
+    fn structural_hash_distinguishes_blocks_and_is_stable() {
+        let mk = |rows: i64| RtBlock::Generic {
+            insts: vec![Instr::CreateVar {
+                var: "x".into(),
+                path: "p".into(),
+                temp: true,
+                format: Format::BinaryBlock,
+                mc: MatrixCharacteristics::dense(rows, 10, 10),
+            }],
+            lines: (1, 1),
+            recompile: false,
+        };
+        let a1 = hash_block(&mk(100));
+        let a2 = hash_block(&mk(100));
+        let b = hash_block(&mk(101));
+        assert_eq!((a1.h1, a1.h2), (a2.h1, a2.h2), "hashing must be deterministic");
+        assert_ne!((a1.h1, a1.h2), (b.h1, b.h2), "different blocks must differ");
+        assert_eq!(a1.feats, 0, "plain CP block reads only the base knobs");
+    }
+
+    #[test]
+    fn feature_flags_select_knob_groups() {
+        let cfg = SystemConfig::default();
+        let k = CostConstants::default();
+        let cc1 = ClusterConfig::paper_cluster();
+        let mut cc2 = cc1.clone();
+        cc2.k_local = 7; // parfor-only knob
+        // without the parfor flag the two clusters fingerprint equal...
+        assert_eq!(hash_context(0, &cfg, &cc1, &k), hash_context(0, &cfg, &cc2, &k));
+        // ...with it they differ
+        assert_ne!(
+            hash_context(F_PARFOR, &cfg, &cc1, &k),
+            hash_context(F_PARFOR, &cfg, &cc2, &k)
+        );
+        // clock is in the base group: always observable
+        let mut cc3 = cc1.clone();
+        cc3.clock_hz *= 2.0;
+        assert_ne!(hash_context(0, &cfg, &cc1, &k), hash_context(0, &cfg, &cc3, &k));
+        // spark knobs only observable with the spark flag
+        let mut cc4 = cc1.clone();
+        cc4.spark_executors = 99;
+        assert_eq!(hash_context(F_MR, &cfg, &cc1, &k), hash_context(F_MR, &cfg, &cc4, &k));
+        assert_ne!(
+            hash_context(F_SPARK, &cfg, &cc1, &k),
+            hash_context(F_SPARK, &cfg, &cc4, &k)
+        );
+    }
+
+    #[test]
+    fn tracker_fingerprint_sees_aliasing_and_state() {
+        let mc = MatrixCharacteristics::dense(100, 100, 100);
+        let fp = |t: &VarTracker| {
+            let mut h = Fnv::new();
+            t.hash_state(&mut h);
+            h.finish()
+        };
+        // aliased pair vs two independent entries with identical fields
+        let mut aliased = VarTracker::default();
+        aliased.create("x", mc, Format::BinaryBlock, true);
+        aliased.alias("x", "y");
+        let mut split = VarTracker::default();
+        split.create("x", mc, Format::BinaryBlock, true);
+        split.create("y", mc, Format::BinaryBlock, true);
+        assert_ne!(fp(&aliased), fp(&split), "alias structure must be part of the key");
+        // residence state flips the fingerprint
+        let mut warm = VarTracker::default();
+        warm.create("x", mc, Format::BinaryBlock, true);
+        warm.alias("x", "y");
+        warm.touch_mem("x");
+        assert_ne!(fp(&aliased), fp(&warm));
+        // identical construction order -> identical fingerprint
+        let mut again = VarTracker::default();
+        again.create("x", mc, Format::BinaryBlock, true);
+        again.alias("x", "y");
+        assert_eq!(fp(&aliased), fp(&again));
+    }
+
+    #[test]
+    fn fcall_blocks_are_not_cacheable_and_poison_ancestors() {
+        let fcall = RtBlock::FCall {
+            fname: "f".into(),
+            args: vec![],
+            outputs: vec![],
+            lines: (1, 1),
+        };
+        let h = hash_block(&fcall);
+        assert!(!h.cacheable());
+        let parent = RtBlock::While {
+            pred: Default::default(),
+            body: vec![fcall],
+            lines: (1, 2),
+        };
+        let hp = hash_block(&parent);
+        assert!(!hp.cacheable(), "NOCACHE must propagate upward");
+        assert!(hp.feats & F_UNKNOWN_ITERS != 0);
+    }
+}

@@ -17,15 +17,19 @@
 
 #![warn(missing_docs)]
 
+pub mod cache;
 pub mod flops;
 pub mod mr;
 pub mod spark;
 pub mod vars;
 
+use std::sync::Arc;
+
 use crate::conf::{ClusterConfig, CostConstants, SystemConfig};
 use crate::ir::BinOp;
 use crate::matrix::{Format, MatrixCharacteristics};
 use crate::rtprog::*;
+use cache::{BlockHash, CostCache, ProgramHashes};
 use vars::{DataState, VarTracker};
 
 /// Cost of one instruction, split IO / compute (Figure 4's `C=[io, comp]`).
@@ -101,15 +105,78 @@ pub fn cost_program(
     cc: &ClusterConfig,
     k: &CostConstants,
 ) -> CostReport {
+    cost_with(rt, None, cfg, cc, k, true, None)
+}
+
+/// [`cost_program`] with block-level cost caching: subtrees whose
+/// structural hash, incoming variable-state fingerprint and relevant
+/// configuration knobs match an earlier costing are replayed from
+/// `cache` instead of being re-walked. `hashes` must be the
+/// [`cache::program_hashes`] of this exact `rt` (compute once per
+/// compiled plan). Produces a bitwise-identical [`CostReport`] to the
+/// uncached path; see [`cache`] for the key design.
+pub fn cost_program_cached(
+    rt: &RtProgram,
+    hashes: &ProgramHashes,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    k: &CostConstants,
+    cache: &CostCache,
+) -> CostReport {
+    cost_with(rt, Some(hashes), cfg, cc, k, true, Some(cache))
+}
+
+/// Totals-only costing: identical arithmetic to [`cost_program`] (the
+/// returned value is bitwise equal to `cost_program(..).total`) but no
+/// per-instruction annotation nodes are materialised and no instruction
+/// text is rendered — the fast path for optimizers that only rank by
+/// `C(P, cc)`.
+pub fn cost_total(
+    rt: &RtProgram,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    k: &CostConstants,
+) -> f64 {
+    cost_with(rt, None, cfg, cc, k, false, None).total
+}
+
+/// [`cost_total`] with block-level cost caching (see
+/// [`cost_program_cached`]); the fast path the candidate evaluator
+/// ([`crate::opt::evaluate`]) runs every optimizer through.
+pub fn cost_total_cached(
+    rt: &RtProgram,
+    hashes: &ProgramHashes,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    k: &CostConstants,
+    cache: &CostCache,
+) -> f64 {
+    cost_with(rt, Some(hashes), cfg, cc, k, false, Some(cache)).total
+}
+
+fn cost_with(
+    rt: &RtProgram,
+    hashes: Option<&ProgramHashes>,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    k: &CostConstants,
+    emit_nodes: bool,
+    cache: Option<&CostCache>,
+) -> CostReport {
     let mut est = Estimator {
         cfg,
         cc,
         k,
         funcs: &rt.funcs,
         call_stack: Vec::new(),
+        emit_nodes,
+        cache,
+        func_hashes: hashes.map(|h| &h.funcs),
+        knob_fps: [None; 16],
     };
     let mut tracker = VarTracker::default();
-    let (total, nodes) = est.cost_blocks(&rt.blocks, &mut tracker);
+    let (total, nodes) =
+        est.cost_blocks(&rt.blocks, hashes.map(|h| h.blocks.as_slice()), &mut tracker);
     CostReport { total, nodes }
 }
 
@@ -119,21 +186,97 @@ struct Estimator<'a> {
     k: &'a CostConstants,
     funcs: &'a std::collections::BTreeMap<String, RtFunction>,
     call_stack: Vec<String>,
+    /// Materialise `CostNode` annotations (labels, rendered instruction
+    /// text, children)? The totals-only mode skips all of it; every
+    /// f64 accumulation is shared between the modes so totals stay
+    /// bitwise identical.
+    emit_nodes: bool,
+    cache: Option<&'a CostCache>,
+    func_hashes: Option<&'a std::collections::BTreeMap<String, Vec<BlockHash>>>,
+    /// Per-walk memo of the knob fingerprints, indexed by the low four
+    /// feature bits (parfor/unknown-iters/MR/Spark): the configuration
+    /// never changes within a walk, so each of the ≤16 fingerprints is
+    /// hashed at most once instead of twice per block lookup.
+    knob_fps: [Option<(u64, u64)>; 16],
 }
 
 impl<'a> Estimator<'a> {
-    fn cost_blocks(&mut self, blocks: &[RtBlock], t: &mut VarTracker) -> (f64, Vec<CostNode>) {
+    /// Format a block label only when annotations are materialised.
+    fn lbl(&self, f: impl FnOnce() -> String) -> String {
+        if self.emit_nodes {
+            f()
+        } else {
+            String::new()
+        }
+    }
+
+    /// `hashes`, when present, is the [`BlockHash`] forest aligned
+    /// one-to-one with `blocks` (same invariant recursively below).
+    fn cost_blocks(
+        &mut self,
+        blocks: &[RtBlock],
+        hashes: Option<&[BlockHash]>,
+        t: &mut VarTracker,
+    ) -> (f64, Vec<CostNode>) {
         let mut total = 0.0;
         let mut nodes = Vec::new();
-        for b in blocks {
-            let node = self.cost_block(b, t);
+        for (i, b) in blocks.iter().enumerate() {
+            let node = self.cost_block(b, hashes.map(|h| &h[i]), t);
             total += node.total();
-            nodes.push(node);
+            if self.emit_nodes {
+                nodes.push(node);
+            }
         }
         (total, nodes)
     }
 
-    fn cost_block(&mut self, b: &RtBlock, t: &mut VarTracker) -> CostNode {
+    /// Lazily hash the knob fingerprint for one feature combination.
+    fn knob_fp(&mut self, feats: u8) -> (u64, u64) {
+        let idx = (feats & 0x0F) as usize;
+        if let Some(fp) = self.knob_fps[idx] {
+            return fp;
+        }
+        let fp =
+            cache::knob_fingerprint(feats & 0x0F, self.emit_nodes, self.cfg, self.cc, self.k);
+        self.knob_fps[idx] = Some(fp);
+        fp
+    }
+
+    /// Cache wrapper around [`Self::cost_block_inner`]: a hit replays the
+    /// stored annotation and tracker state; a miss costs the block and
+    /// stores both. Keys cover the full observable input (see
+    /// [`cache::cache_key`]), so hits are bitwise-exact replays. The
+    /// stored tracker is compacted to its live bindings, so replaying it
+    /// is O(live variables), not O(every temp ever created).
+    fn cost_block(&mut self, b: &RtBlock, bh: Option<&BlockHash>, t: &mut VarTracker) -> CostNode {
+        if let (Some(cache), Some(bh)) = (self.cache, bh) {
+            if bh.cacheable() {
+                let knobs = self.knob_fp(bh.feats);
+                let key = cache::cache_key(bh, t, knobs);
+                if let Some(entry) = cache.get(&key) {
+                    *t = entry.tracker.clone();
+                    return entry.node.clone();
+                }
+                let node = self.cost_block_inner(b, Some(bh), t);
+                cache.insert(
+                    key,
+                    Arc::new(cache::CachedBlockCost {
+                        node: node.clone(),
+                        tracker: t.compacted(),
+                    }),
+                );
+                return node;
+            }
+        }
+        self.cost_block_inner(b, bh, t)
+    }
+
+    fn cost_block_inner(
+        &mut self,
+        b: &RtBlock,
+        bh: Option<&BlockHash>,
+        t: &mut VarTracker,
+    ) -> CostNode {
         match b {
             RtBlock::Generic { insts, lines, .. } => {
                 let mut children = Vec::new();
@@ -141,13 +284,15 @@ impl<'a> Estimator<'a> {
                 for inst in insts {
                     let cost = self.cost_inst(inst, t);
                     total += cost.total();
-                    children.push(CostNode::Inst {
-                        rendered: explain::render_inst(inst),
-                        cost,
-                    });
+                    if self.emit_nodes {
+                        children.push(CostNode::Inst {
+                            rendered: explain::render_inst(inst),
+                            cost,
+                        });
+                    }
                 }
                 CostNode::Block {
-                    label: format!("GENERIC (lines {}-{})", lines.0, lines.1),
+                    label: self.lbl(|| format!("GENERIC (lines {}-{})", lines.0, lines.1)),
                     total,
                     children,
                 }
@@ -156,9 +301,17 @@ impl<'a> Estimator<'a> {
                 // Eq. 1: weighted sum over branches, w = 1/|c(n)|.
                 let (pt, mut children) = self.cost_insts(&pred.insts, t);
                 let mut then_t = t.clone();
-                let (tt, tn) = self.cost_blocks(then_blocks, &mut then_t);
+                let (tt, tn) = self.cost_blocks(
+                    then_blocks,
+                    bh.map(|b| &b.children[..then_blocks.len()]),
+                    &mut then_t,
+                );
                 let mut else_t = t.clone();
-                let (et, en) = self.cost_blocks(else_blocks, &mut else_t);
+                let (et, en) = self.cost_blocks(
+                    else_blocks,
+                    bh.map(|b| &b.children[then_blocks.len()..]),
+                    &mut else_t,
+                );
                 // Both arms have two successors (then + else/fall-through);
                 // a missing else is an empty branch costing 0, so the
                 // weighted total collapses to pt + tt/2.
@@ -172,7 +325,7 @@ impl<'a> Estimator<'a> {
                 then_t.merge(&else_t);
                 *t = then_t;
                 CostNode::Block {
-                    label: format!("IF (lines {}-{})", lines.0, lines.1),
+                    label: self.lbl(|| format!("IF (lines {}-{})", lines.0, lines.1)),
                     total,
                     children,
                 }
@@ -197,9 +350,10 @@ impl<'a> Estimator<'a> {
                 };
                 // Loop read-cost correction (§3.2): the first iteration pays
                 // persistent reads, subsequent iterations see warm state.
+                let body_hashes = bh.map(|b| b.children.as_slice());
                 let mut first_t = t.clone();
-                let (first, body_nodes) = self.cost_blocks(body, &mut first_t);
-                let (steady, _) = self.cost_blocks(body, &mut first_t);
+                let (first, body_nodes) = self.cost_blocks(body, body_hashes, &mut first_t);
+                let (steady, _) = self.cost_blocks(body, body_hashes, &mut first_t);
                 let total = pred_cost
                     + if w >= 1.0 { first + (w - 1.0) * steady } else { w * first };
                 children.extend(body_nodes);
@@ -215,7 +369,8 @@ impl<'a> Estimator<'a> {
                 }
                 let kind = if *parfor { "PARFOR" } else { "FOR" };
                 CostNode::Block {
-                    label: format!("{kind} (lines {}-{}) [N={n_iter}, w={w}]", lines.0, lines.1),
+                    label: self
+                        .lbl(|| format!("{kind} (lines {}-{}) [N={n_iter}, w={w}]", lines.0, lines.1)),
                     total,
                     children,
                 }
@@ -223,9 +378,10 @@ impl<'a> Estimator<'a> {
             RtBlock::While { pred, body, lines } => {
                 let (pt, mut children) = self.cost_insts(&pred.insts, t);
                 let n_iter = self.cfg.unknown_iterations.max(0.0);
+                let body_hashes = bh.map(|b| b.children.as_slice());
                 let mut first_t = t.clone();
-                let (first, body_nodes) = self.cost_blocks(body, &mut first_t);
-                let (steady, _) = self.cost_blocks(body, &mut first_t);
+                let (first, body_nodes) = self.cost_blocks(body, body_hashes, &mut first_t);
+                let (steady, _) = self.cost_blocks(body, body_hashes, &mut first_t);
                 // Predicate evaluated each iteration (N̂ + the final false
                 // check). The body follows the same first/steady §3.2 split
                 // as For: with N̂ < 1 it scales down to N̂·first instead of
@@ -244,7 +400,7 @@ impl<'a> Estimator<'a> {
                     *t = first_t;
                 }
                 CostNode::Block {
-                    label: format!("WHILE (lines {}-{}) [N̂={n_iter}]", lines.0, lines.1),
+                    label: self.lbl(|| format!("WHILE (lines {}-{}) [N̂={n_iter}]", lines.0, lines.1)),
                     total,
                     children,
                 }
@@ -253,14 +409,16 @@ impl<'a> Estimator<'a> {
                 // Function call stack prevents cycles (§3.2).
                 if self.call_stack.contains(fname) {
                     return CostNode::Block {
-                        label: format!("FCALL {fname} (recursive, lines {}-{})", lines.0, lines.1),
+                        label: self.lbl(|| {
+                            format!("FCALL {fname} (recursive, lines {}-{})", lines.0, lines.1)
+                        }),
                         total: 0.0,
                         children: vec![],
                     };
                 }
                 let Some(f) = self.funcs.get(fname) else {
                     return CostNode::Block {
-                        label: format!("FCALL {fname} (unknown)"),
+                        label: self.lbl(|| format!("FCALL {fname} (unknown)")),
                         total: 0.0,
                         children: vec![],
                     };
@@ -273,7 +431,8 @@ impl<'a> Estimator<'a> {
                         ft.create(p, info.mc, info.format, info.state == DataState::Hdfs);
                     }
                 }
-                let (total, children) = self.cost_blocks(&f.blocks, &mut ft);
+                let fh = self.func_hashes.and_then(|m| m.get(fname)).map(|v| v.as_slice());
+                let (total, children) = self.cost_blocks(&f.blocks, fh, &mut ft);
                 self.call_stack.pop();
                 for (caller, callee) in outputs.iter().zip(f.outputs.iter()) {
                     if let Some(info) = ft.get(callee) {
@@ -281,7 +440,7 @@ impl<'a> Estimator<'a> {
                     }
                 }
                 CostNode::Block {
-                    label: format!("FCALL {fname} (lines {}-{})", lines.0, lines.1),
+                    label: self.lbl(|| format!("FCALL {fname} (lines {}-{})", lines.0, lines.1)),
                     total,
                     children,
                 }
@@ -295,7 +454,9 @@ impl<'a> Estimator<'a> {
         for inst in insts {
             let cost = self.cost_inst(inst, t);
             total += cost.total();
-            nodes.push(CostNode::Inst { rendered: explain::render_inst(inst), cost });
+            if self.emit_nodes {
+                nodes.push(CostNode::Inst { rendered: explain::render_inst(inst), cost });
+            }
         }
         (total, nodes)
     }
@@ -809,6 +970,35 @@ write(y, $4);
             r.total,
             solo_cost
         );
+    }
+
+    /// The totals-only fast path and the cached paths must be bitwise
+    /// identical to the annotated walk (the invariant every optimizer
+    /// now depends on; `tests/costcache.rs` covers the full matrix).
+    #[test]
+    fn totals_only_and_cached_paths_match_full_costing_bitwise() {
+        let k = CostConstants::default();
+        for s in [Scenario::xs(), Scenario::xl1()] {
+            let opts = CompileOptions::default();
+            let c = s.compile(&opts);
+            let full = cost_program(&c.runtime, &opts.cfg, &opts.cc.0, &k);
+            let fast = cost_total(&c.runtime, &opts.cfg, &opts.cc.0, &k);
+            assert_eq!(full.total.to_bits(), fast.to_bits(), "{}", s.name);
+            let hashes = cache::program_hashes(&c.runtime);
+            let cc_cache = cache::CostCache::default();
+            let cold =
+                cost_program_cached(&c.runtime, &hashes, &opts.cfg, &opts.cc.0, &k, &cc_cache);
+            let warm =
+                cost_program_cached(&c.runtime, &hashes, &opts.cfg, &opts.cc.0, &k, &cc_cache);
+            assert_eq!(full.total.to_bits(), cold.total.to_bits(), "{} cold", s.name);
+            assert_eq!(full.total.to_bits(), warm.total.to_bits(), "{} warm", s.name);
+            assert!(cc_cache.stats().hits > 0, "warm pass must hit the cache");
+            let fast_cached =
+                cost_total_cached(&c.runtime, &hashes, &opts.cfg, &opts.cc.0, &k, &cc_cache);
+            assert_eq!(full.total.to_bits(), fast_cached.to_bits(), "{} totals", s.name);
+            // warm annotated replay renders the identical costed EXPLAIN
+            assert_eq!(explain_costed(&full), explain_costed(&warm), "{}", s.name);
+        }
     }
 
     #[test]

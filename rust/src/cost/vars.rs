@@ -103,6 +103,72 @@ impl VarTracker {
         }
     }
 
+    /// Feed a canonical fingerprint of the live-variable state into `h`
+    /// (the state component of the block-level cost-cache key, see
+    /// [`crate::cost::cache`]). Covers every live name in sorted order,
+    /// its alias group (aliases share a canonical entry id, so `cpvar`
+    /// sharing is part of the fingerprint), and the shared entry's
+    /// dimensions, on-disk format and HDFS-vs-memory residence — i.e.
+    /// everything the §3.2 costing pass can observe. Two trackers with
+    /// equal fingerprints are indistinguishable to `cost_program`,
+    /// regardless of hash-map iteration order or dead entries.
+    pub fn hash_state<H: std::hash::Hasher>(&self, h: &mut H) {
+        let mut names: Vec<(&str, usize)> =
+            self.names.iter().map(|(n, &id)| (n.as_str(), id)).collect();
+        names.sort_unstable_by(|a, b| a.0.cmp(b.0));
+        let mut canon: HashMap<usize, usize> = HashMap::with_capacity(names.len());
+        for (name, id) in names {
+            h.write(name.as_bytes());
+            h.write_u8(0xff); // name terminator (names never contain 0xff)
+            let next = canon.len();
+            h.write_usize(*canon.entry(id).or_insert(next));
+            let d = &self.data[id];
+            h.write_i64(d.mc.rows);
+            h.write_i64(d.mc.cols);
+            h.write_i64(d.mc.brows);
+            h.write_i64(d.mc.bcols);
+            h.write_i64(d.mc.nnz);
+            h.write_u8(match d.format {
+                Format::BinaryBlock => 0,
+                Format::TextCell => 1,
+                Format::Csv => 2,
+            });
+            h.write_u8(match d.state {
+                DataState::Hdfs => 0,
+                DataState::Mem => 1,
+            });
+        }
+    }
+
+    /// Copy of this tracker retaining only the live bindings, with the
+    /// shared data entries renumbered (alias structure preserved). The
+    /// `data` vector otherwise grows monotonically — `rmvar` only unbinds
+    /// names — so the block-level cost cache stores compacted snapshots
+    /// to keep hit-replay cost proportional to the live variables, not to
+    /// every temp ever created. Observationally identical to `self` for
+    /// costing: same names, same shared entries, same states.
+    pub fn compacted(&self) -> VarTracker {
+        let mut names: Vec<(&String, usize)> = self.names.iter().map(|(n, &id)| (n, id)).collect();
+        // sorted order makes the renumbering (and thus the clone layout)
+        // deterministic regardless of hash-map iteration order
+        names.sort_unstable_by(|a, b| a.0.cmp(b.0));
+        let mut out = VarTracker::default();
+        let mut renumber: HashMap<usize, usize> = HashMap::with_capacity(names.len());
+        for (name, id) in names {
+            let new_id = match renumber.get(&id) {
+                Some(&nid) => nid,
+                None => {
+                    let nid = out.data.len();
+                    out.data.push(self.data[id].clone());
+                    renumber.insert(id, nid);
+                    nid
+                }
+            };
+            out.names.insert(name.clone(), new_id);
+        }
+        out
+    }
+
     /// Merge two trackers after a conditional: a variable stays in-memory
     /// only if both branches leave it in memory (conservative IO costing).
     pub fn merge(&mut self, other: &VarTracker) {
@@ -168,5 +234,33 @@ mod tests {
     fn unknown_variable_is_unknown_mc() {
         let t = VarTracker::default();
         assert!(!t.mc("nope").dims_known());
+    }
+
+    /// Compaction drops dead entries, keeps aliasing, and fingerprints
+    /// identically to the original (the cost-cache replay contract).
+    #[test]
+    fn compacted_preserves_live_state_and_fingerprint() {
+        let mut t = VarTracker::default();
+        for i in 0..50 {
+            t.create(&format!("dead{i}"), mc(), Format::BinaryBlock, false);
+            t.remove(&format!("dead{i}"));
+        }
+        t.create("x", mc(), Format::BinaryBlock, true);
+        t.alias("x", "y");
+        t.create("z", mc(), Format::BinaryBlock, false);
+        let c = t.compacted();
+        assert_eq!(c.data.len(), 2, "dead entries dropped");
+        assert_eq!(c.get("x").unwrap().state, DataState::Hdfs);
+        // aliasing survives: touching x warms y
+        let mut c2 = c.clone();
+        c2.touch_mem("x");
+        assert_eq!(c2.get("y").unwrap().state, DataState::Mem);
+        // canonical fingerprints agree
+        fn fp(t: &VarTracker) -> u64 {
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            t.hash_state(&mut h);
+            std::hash::Hasher::finish(&h)
+        }
+        assert_eq!(fp(&t), fp(&c));
     }
 }

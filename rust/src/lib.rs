@@ -38,7 +38,10 @@
 //!    parallel grid resource optimizer with Pareto frontier
 //!    ([`opt::resource`]), plan comparison, and the batched parallel
 //!    scenario-sweep engine ([`opt::sweep`]) that costs ClusterConfig ×
-//!    data-size grids into ranked comparison tables.
+//!    data-size grids into ranked comparison tables — all routed through
+//!    one incremental evaluation core ([`opt::evaluate`]) with memoized
+//!    `Arc`-shared compiles and block-level cost caching
+//!    ([`cost::cache`]).
 //!
 //! The high-level entry points live in [`api`]: compile a DML script into a
 //! runtime plan, cost it against a cluster configuration, explain it at any

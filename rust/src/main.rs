@@ -48,16 +48,17 @@ fn main() {
                  run <script.dml> [-a N=value ...] [--threads T] [--heap-mb H]\n\
                  resource [--scenario <name>] [--script ds|cg] [--iters N]\n\
                  \x20     [--grid heaps=512,2048:execmem=2048,20480:nodes=2,6:klocal=6,24]\n\
-                 \x20     [--backends cp,mr,spark] [--threads T] [--no-prune] [--all]\n\
+                 \x20     [--backends cp,mr,spark] [--threads T] [--no-prune]\n\
+                 \x20     [--no-cost-cache] [--all]\n\
                  resource-opt --scenario <name> [--heaps 256,512,...]\n\
                  \x20       [--backend cp|mr|spark]\n\
                  sweep [--scenarios xs,xl1,...] [--heaps 512,1024,...]\n\
                  \x20     [--backends cp,mr,spark] [--script ds|cg] [--iters N]\n\
-                 \x20     [--threads T] [--serial]\n\
+                 \x20     [--threads T] [--serial] [--no-cost-cache]\n\
                  gdf [--scenario <name>] [--script cg|ds] [--iters N]\n\
                  \x20   [--blocksizes 500,1000,2000] [--formats binaryblock,textcell]\n\
                  \x20   [--partitions 8,32] [--backends cp,mr,spark]\n\
-                 \x20   [--threads T] [--no-diff] [--all]"
+                 \x20   [--threads T] [--no-diff] [--no-cost-cache] [--all]"
             );
             2
         }
@@ -357,6 +358,9 @@ fn cmd_resource(args: &[String]) -> i32 {
     if args.iter().any(|a| a == "--no-prune") {
         grid.prune = false;
     }
+    if args.iter().any(|a| a == "--no-cost-cache") {
+        grid.cost_cache = false;
+    }
     let report = match systemds::api::optimize_resources(&grid) {
         Ok(r) => r,
         Err(e) => {
@@ -531,6 +535,9 @@ fn cmd_gdf(args: &[String]) -> i32 {
             }
         }
     }
+    if args.iter().any(|a| a == "--no-cost-cache") {
+        spec.cost_cache = false;
+    }
     let report = match systemds::api::optimize_global_dataflow(&spec) {
         Ok(r) => r,
         Err(e) => {
@@ -628,6 +635,9 @@ fn cmd_sweep(args: &[String]) -> i32 {
                 return 2;
             }
         }
+    }
+    if args.iter().any(|a| a == "--no-cost-cache") {
+        spec.cost_cache = false;
     }
     let serial = args.iter().any(|a| a == "--serial");
     let result = if serial { sweep::sweep_serial(&spec) } else { sweep::sweep(&spec) };

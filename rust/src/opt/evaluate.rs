@@ -1,0 +1,480 @@
+//! The **unified candidate evaluator** — the shared core all three
+//! optimizers (scenario sweep, grid resource optimizer, global data flow
+//! optimizer) route their candidate fan-out through.
+//!
+//! Each optimizer enumerates a family of candidates (grid cells, grid
+//! points, data-flow configurations) and needs the same four-stage
+//! pipeline per batch:
+//!
+//! 1. **Signature dedupe** — candidates whose plan-shape signature was
+//!    already seen share one compiled plan (the memoization the sweep
+//!    engine introduced, now `Arc`-shared instead of referenced by
+//!    index into an optimizer-local store).
+//! 2. **Memoized parallel compile** — distinct missing signatures fan
+//!    out over the scoped thread pool; each compiled plan is paired with
+//!    its precomputed structural hash tree
+//!    ([`crate::cost::cache::program_hashes`]), so later costings pay no
+//!    per-plan hashing.
+//! 3. **Duplicate-cost skip** — two candidates with structurally
+//!    identical plans *and* identical cost-relevant configuration knobs
+//!    (e.g. GDF candidates on the partition axis whose plans contain no
+//!    MR job, or resource grid points that differ only in `k_local` on
+//!    a parfor-free plan) have bitwise-identical cost; only the first
+//!    occurrence in a run is costed, the rest copy its result.
+//! 4. **Cached concurrent costing + NaN checks** — surviving candidates
+//!    are costed through the block-level cost cache
+//!    ([`crate::cost::cache::CostCache`]) on the totals-only fast path,
+//!    and non-finite estimates surface as diagnostics naming the
+//!    candidate instead of poisoning a ranking downstream.
+//!
+//! Every stage preserves bitwise determinism: results are independent of
+//! thread count and of whether the cache or the duplicate skip fired
+//! (`tests/costcache.rs` asserts this across optimizers).
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+use crate::api::CompiledProgram;
+use crate::conf::{ClusterConfig, CostConstants, SystemConfig};
+use crate::cost::{self, cache};
+use crate::cost::cache::{CacheStats, CostCache, ProgramHashes};
+use crate::util::par;
+
+/// Borrowed costing context of one candidate: the three configuration
+/// objects `cost_program` reads. Different candidates of one batch may
+/// carry different contexts (the sweep costs one shared plan under many
+/// clusters; GDF costs each candidate under its base `SystemConfig`).
+#[derive(Clone, Copy)]
+pub struct CostContext<'a> {
+    /// Compiler/system configuration the candidate is costed under.
+    pub cfg: &'a SystemConfig,
+    /// Cluster characteristics `cc` of the candidate.
+    pub cc: &'a ClusterConfig,
+    /// White-box cost-model constants.
+    pub constants: &'a CostConstants,
+}
+
+/// One candidate of a batch evaluation. Implementations are thin
+/// adapters over each optimizer's native candidate representation.
+pub trait Candidate: Sync {
+    /// Plan-shape signature: equal signatures must compile to identical
+    /// runtime plans (the memoization contract).
+    fn signature(&self) -> String;
+    /// Compile the candidate's runtime plan (called once per distinct
+    /// signature, possibly on a worker thread).
+    fn compile(&self) -> Result<CompiledProgram, String>;
+    /// The configuration the candidate is costed against.
+    fn context(&self) -> CostContext<'_>;
+    /// Label used in diagnostics (e.g. the non-finite-cost error).
+    fn label(&self) -> String;
+}
+
+/// Outcome of evaluating one candidate.
+#[derive(Clone)]
+pub struct Evaluated {
+    /// The compiled plan, shared (`Arc`) with every candidate of equal
+    /// signature instead of cloned per consumer.
+    pub plan: Arc<CompiledProgram>,
+    /// Whether the plan was reused from an earlier candidate rather than
+    /// compiled for this one.
+    pub plan_reused: bool,
+    /// Estimated execution time `C(P, cc)` in seconds (always finite —
+    /// non-finite estimates abort the batch with a diagnostic).
+    pub cost_secs: f64,
+    /// CP instruction count of the plan.
+    pub cp_insts: usize,
+    /// MR-job count of the plan.
+    pub mr_jobs: usize,
+    /// Spark-job count of the plan.
+    pub spark_jobs: usize,
+    /// Whether costing was skipped because an earlier candidate of this
+    /// run had a structurally identical plan under identical
+    /// cost-relevant knobs (the result is a bitwise copy).
+    pub cost_reused: bool,
+    /// The candidate's plan signature (shared allocation).
+    pub sig: Arc<str>,
+}
+
+#[derive(Clone, Copy)]
+struct CostStats {
+    total: f64,
+    cp: usize,
+    mr: usize,
+    sp: usize,
+}
+
+/// Duplicate-cost key: 128-bit structural program hash × 128-bit
+/// cost-relevant knob fingerprint.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct CostKey(u64, u64, u64, u64);
+
+/// Plan-signature-keyed compile memo: each distinct signature is
+/// compiled exactly once over the memo's lifetime (batches fan distinct
+/// missing signatures out over the thread pool), stored as an
+/// `Arc<CompiledProgram>` next to its precomputed structural hash tree.
+struct PlanMemo {
+    progs: Vec<(Arc<CompiledProgram>, Arc<ProgramHashes>)>,
+    by_sig: HashMap<Arc<str>, usize>,
+}
+
+impl PlanMemo {
+    fn new() -> Self {
+        PlanMemo { progs: Vec::new(), by_sig: HashMap::new() }
+    }
+
+    fn distinct(&self) -> usize {
+        self.progs.len()
+    }
+
+    fn get(&self, idx: usize) -> (&Arc<CompiledProgram>, &Arc<ProgramHashes>) {
+        let (p, h) = &self.progs[idx];
+        (p, h)
+    }
+
+    /// Ensure every signature in `sigs` has a compiled plan. Distinct
+    /// signatures not yet memoized compile concurrently; `compile(i)`
+    /// must compile the plan for `sigs[i]` and is called once per new
+    /// signature, at its first occurrence in the batch. Returns, aligned
+    /// with `sigs`, `(plan index, reused)` — `reused` is false only for
+    /// the first occurrence ever seen of a signature.
+    fn ensure(
+        &mut self,
+        sigs: &[Arc<str>],
+        threads: usize,
+        compile: impl Fn(usize) -> Result<CompiledProgram, String> + Sync,
+    ) -> Result<Vec<(usize, bool)>, String> {
+        let mut missing: Vec<usize> = Vec::new();
+        let mut seen_in_batch: HashSet<&str> = HashSet::new();
+        for (i, sig) in sigs.iter().enumerate() {
+            if !self.by_sig.contains_key(sig.as_ref()) && seen_in_batch.insert(sig.as_ref()) {
+                missing.push(i);
+            }
+        }
+        // compile + structural-hash each new plan on the worker threads
+        let compiled: Vec<Result<(CompiledProgram, ProgramHashes), String>> =
+            par::par_map(&missing, threads, |_, &cell| {
+                let prog = compile(cell)?;
+                let hashes = cache::program_hashes(&prog.runtime);
+                Ok((prog, hashes))
+            });
+        for (&cell, r) in missing.iter().zip(compiled) {
+            // record the signature only once its compile succeeded, so a
+            // failed batch leaves the memo consistent for retries
+            let (prog, hashes) = r?;
+            self.by_sig.insert(Arc::clone(&sigs[cell]), self.progs.len());
+            self.progs.push((Arc::new(prog), Arc::new(hashes)));
+        }
+        Ok(sigs
+            .iter()
+            .enumerate()
+            .map(|(i, sig)| {
+                // `missing` is ascending, so binary_search identifies the
+                // fresh (first-occurrence) positions.
+                (self.by_sig[sig.as_ref()], missing.binary_search(&i).is_err())
+            })
+            .collect())
+    }
+}
+
+/// The evaluator: a compile memo, an optional block-level cost cache and
+/// the per-run duplicate-cost table, driving the four-stage pipeline in
+/// the module docs. One instance serves a whole optimizer run (several
+/// batches); sharing an instance across runs additionally keeps the
+/// compile memo and cost cache warm (the steady state the
+/// `costcache` bench measures).
+pub struct Evaluator {
+    memo: PlanMemo,
+    cache: Option<Arc<CostCache>>,
+    threads: usize,
+    costed: HashMap<CostKey, CostStats>,
+    duplicates_skipped: usize,
+    cache_baseline: CacheStats,
+}
+
+impl Evaluator {
+    /// Evaluator with block-level cost caching enabled (a fresh cache of
+    /// [`CostCache::DEFAULT_CAPACITY`] entries).
+    pub fn new(threads: usize) -> Self {
+        Self::with_cache(threads, Some(Arc::new(CostCache::default())))
+    }
+
+    /// Evaluator with the cost cache disabled — the reference/baseline
+    /// configuration (`--no-cost-cache`, the bench's "uncached" side).
+    pub fn without_cost_cache(threads: usize) -> Self {
+        Self::with_cache(threads, None)
+    }
+
+    /// Evaluator over an explicit (possibly shared, possibly absent)
+    /// cost cache.
+    pub fn with_cache(threads: usize, cache: Option<Arc<CostCache>>) -> Self {
+        let mut e = Evaluator {
+            memo: PlanMemo::new(),
+            cache,
+            threads: threads.max(1),
+            costed: HashMap::new(),
+            duplicates_skipped: 0,
+            cache_baseline: CacheStats::default(),
+        };
+        e.cache_baseline = e.cache_stats();
+        e
+    }
+
+    /// Worker threads the evaluator fans compiles and costings out over.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Begin a new optimizer run: resets the per-run duplicate-cost
+    /// table and the cache-stats baseline. The compile memo and the cost
+    /// cache intentionally survive, so repeated runs over the same
+    /// candidate family skip straight to (cached) costing.
+    pub fn begin_run(&mut self) {
+        self.costed.clear();
+        self.duplicates_skipped = 0;
+        self.cache_baseline = self.cache_stats();
+    }
+
+    /// Distinct plans compiled over the evaluator's lifetime.
+    pub fn distinct_plans(&self) -> usize {
+        self.memo.distinct()
+    }
+
+    /// Candidates of the current run whose costing was skipped as an
+    /// exact duplicate of an earlier candidate.
+    pub fn duplicates_skipped(&self) -> usize {
+        self.duplicates_skipped
+    }
+
+    /// Absolute cost-cache counters (zeros when the cache is disabled).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.as_deref().map(CostCache::stats).unwrap_or_default()
+    }
+
+    /// Cost-cache counters accumulated since [`Self::begin_run`].
+    pub fn run_cache_stats(&self) -> CacheStats {
+        self.cache_stats().since(&self.cache_baseline)
+    }
+
+    /// Stage 1–2 only: signature-dedupe and memoized parallel compile,
+    /// without costing. Used for classification probes (the GDF
+    /// optimizer compiles an MR probe plan per base configuration when
+    /// the default backend is CP). Returns `(plan, reused)` per item.
+    pub fn compile_batch<C: Candidate>(
+        &mut self,
+        items: &[C],
+    ) -> Result<Vec<(Arc<CompiledProgram>, bool)>, String> {
+        let sigs: Vec<Arc<str>> =
+            items.iter().map(|c| Arc::<str>::from(c.signature())).collect();
+        let plan_of = self.memo.ensure(&sigs, self.threads, |i| items[i].compile())?;
+        Ok(plan_of
+            .into_iter()
+            .map(|(idx, reused)| (Arc::clone(self.memo.get(idx).0), reused))
+            .collect())
+    }
+
+    /// Run the full pipeline over one batch of candidates. Results align
+    /// with `items`; the only error cases are a failed compile or a
+    /// non-finite cost estimate (both carry the candidate's label).
+    pub fn evaluate<C: Candidate>(&mut self, items: &[C]) -> Result<Vec<Evaluated>, String> {
+        if items.is_empty() {
+            return Ok(Vec::new());
+        }
+        let sigs: Vec<Arc<str>> =
+            items.iter().map(|c| Arc::<str>::from(c.signature())).collect();
+        let plan_of = self.memo.ensure(&sigs, self.threads, |i| items[i].compile())?;
+
+        // Stage 3: duplicate-cost keys — (structural program hash,
+        // knob fingerprint restricted to what the program can read).
+        let keys: Vec<CostKey> = (0..items.len())
+            .map(|i| {
+                let (_, hashes) = self.memo.get(plan_of[i].0);
+                let ctx = items[i].context();
+                let root = hashes.root();
+                let (c1, c2) =
+                    cache::hash_context(hashes.feats(), ctx.cfg, ctx.cc, ctx.constants);
+                CostKey(root.0, root.1, c1, c2)
+            })
+            .collect();
+        let mut fresh = vec![false; items.len()];
+        let mut to_cost: Vec<usize> = Vec::new();
+        {
+            let mut seen: HashSet<CostKey> = HashSet::new();
+            for (i, key) in keys.iter().enumerate() {
+                if !self.costed.contains_key(key) && seen.insert(*key) {
+                    fresh[i] = true;
+                    to_cost.push(i);
+                }
+            }
+        }
+
+        // Stage 4: cost the first occurrences concurrently through the
+        // block cache (totals-only fast path).
+        let computed: Vec<CostStats> = {
+            let memo = &self.memo;
+            let cache = self.cache.as_deref();
+            par::par_map(&to_cost, self.threads, |_, &i| {
+                let (prog, hashes) = memo.get(plan_of[i].0);
+                let ctx = items[i].context();
+                let total = match cache {
+                    Some(cache) => cost::cost_total_cached(
+                        &prog.runtime,
+                        hashes,
+                        ctx.cfg,
+                        ctx.cc,
+                        ctx.constants,
+                        cache,
+                    ),
+                    None => cost::cost_total(&prog.runtime, ctx.cfg, ctx.cc, ctx.constants),
+                };
+                let (cp, mr, sp) = prog.runtime.size3();
+                CostStats { total, cp, mr, sp }
+            })
+        };
+        for (&i, stats) in to_cost.iter().zip(&computed) {
+            self.costed.insert(keys[i], *stats);
+        }
+        self.duplicates_skipped += items.len() - to_cost.len();
+
+        let mut out = Vec::with_capacity(items.len());
+        for i in 0..items.len() {
+            let stats = self.costed[&keys[i]];
+            if !stats.total.is_finite() {
+                return Err(format!(
+                    "non-finite cost estimate ({}) for {}",
+                    stats.total,
+                    items[i].label()
+                ));
+            }
+            let (idx, reused) = plan_of[i];
+            out.push(Evaluated {
+                plan: Arc::clone(self.memo.get(idx).0),
+                plan_reused: reused,
+                cost_secs: stats.total,
+                cp_insts: stats.cp,
+                mr_jobs: stats.mr,
+                spark_jobs: stats.sp,
+                cost_reused: !fresh[i],
+                sig: Arc::clone(&sigs[i]),
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{compile_with_meta, CompileOptions, Scenario};
+    use crate::rtprog::ExecBackend;
+
+    /// Minimal candidate: one Table-1 scenario on one backend, costed
+    /// against an owned configuration triple.
+    struct ScenCand {
+        s: Scenario,
+        backend: ExecBackend,
+        cfg: SystemConfig,
+        cc: ClusterConfig,
+        k: CostConstants,
+    }
+
+    impl ScenCand {
+        fn new(s: Scenario, backend: ExecBackend) -> Self {
+            ScenCand {
+                s,
+                backend,
+                cfg: SystemConfig::default(),
+                cc: ClusterConfig::paper_cluster(),
+                k: CostConstants::default(),
+            }
+        }
+    }
+
+    impl Candidate for ScenCand {
+        fn signature(&self) -> String {
+            format!("{}@{}", self.s.name, self.backend.name())
+        }
+        fn compile(&self) -> Result<CompiledProgram, String> {
+            let opts = CompileOptions { backend: self.backend, ..Default::default() };
+            compile_with_meta(self.s.script(), &self.s.args(), &self.s.meta(1000), &opts)
+        }
+        fn context(&self) -> CostContext<'_> {
+            CostContext { cfg: &self.cfg, cc: &self.cc, constants: &self.k }
+        }
+        fn label(&self) -> String {
+            self.signature()
+        }
+    }
+
+    #[test]
+    fn equal_signatures_share_one_arc_plan() {
+        let items = vec![
+            ScenCand::new(Scenario::xs(), ExecBackend::Mr),
+            ScenCand::new(Scenario::xs(), ExecBackend::Mr),
+            ScenCand::new(Scenario::xl1(), ExecBackend::Mr),
+        ];
+        let mut e = Evaluator::new(2);
+        e.begin_run();
+        let r = e.evaluate(&items).unwrap();
+        assert_eq!(e.distinct_plans(), 2);
+        assert!(Arc::ptr_eq(&r[0].plan, &r[1].plan), "same sig -> same Arc");
+        assert!(!Arc::ptr_eq(&r[0].plan, &r[2].plan));
+        assert!(!r[0].plan_reused && r[1].plan_reused && !r[2].plan_reused);
+        // identical candidates are also cost-duplicates
+        assert!(!r[0].cost_reused && r[1].cost_reused);
+        assert_eq!(e.duplicates_skipped(), 1);
+        assert_eq!(r[0].cost_secs.to_bits(), r[1].cost_secs.to_bits());
+    }
+
+    #[test]
+    fn cached_and_uncached_evaluators_agree_bitwise() {
+        let items: Vec<ScenCand> = Scenario::all()
+            .into_iter()
+            .flat_map(|s| ExecBackend::all().map(|b| ScenCand::new(s.clone(), b)))
+            .collect();
+        let mut cached = Evaluator::new(4);
+        cached.begin_run();
+        let a = cached.evaluate(&items).unwrap();
+        let mut plain = Evaluator::without_cost_cache(4);
+        plain.begin_run();
+        let b = plain.evaluate(&items).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.cost_secs.to_bits(), y.cost_secs.to_bits(), "{}", x.sig);
+            assert_eq!(
+                (x.cp_insts, x.mr_jobs, x.spark_jobs),
+                (y.cp_insts, y.mr_jobs, y.spark_jobs)
+            );
+        }
+        // re-evaluating the same batch after begin_run re-costs but the
+        // warm cache answers from block hits
+        cached.begin_run();
+        let again = cached.evaluate(&items).unwrap();
+        for (x, y) in a.iter().zip(&again) {
+            assert_eq!(x.cost_secs.to_bits(), y.cost_secs.to_bits());
+        }
+        let stats = cached.run_cache_stats();
+        assert!(stats.hits > 0, "warm rerun must hit the cache: {stats:?}");
+    }
+
+    #[test]
+    fn compile_errors_carry_through() {
+        struct Bad;
+        impl Candidate for Bad {
+            fn signature(&self) -> String {
+                "bad".into()
+            }
+            fn compile(&self) -> Result<CompiledProgram, String> {
+                Err("nope".into())
+            }
+            fn context(&self) -> CostContext<'_> {
+                unreachable!("compile fails first")
+            }
+            fn label(&self) -> String {
+                "bad".into()
+            }
+        }
+        let mut e = Evaluator::new(1);
+        assert!(e.evaluate(&[Bad]).unwrap_err().contains("nope"));
+        // the memo stays consistent: nothing was recorded
+        assert_eq!(e.distinct_plans(), 0);
+    }
+}

@@ -29,12 +29,15 @@
 //! actually contain distributed jobs. Only those are enumerated; a group
 //! whose operators all fit the CP budget generates the same plan under
 //! every backend, so pinning it to the default is exact, not a
-//! heuristic. Candidates compile through the `PlanMemo` infrastructure
-//! shared with the sweep engine and the resource optimizer and are
-//! costed concurrently — note that unlike those grids (whose cost-only
-//! axes share plans), every enumerated GDF configuration is
-//! plan-shaping, so each candidate compiles its own plan by
-//! construction.
+//! heuristic. Candidates run through the unified evaluation core
+//! ([`crate::opt::evaluate`]) shared with the sweep engine and the
+//! resource optimizer: memoized `Arc`-shared compiles, duplicate-cost
+//! skipping (candidates whose plan and observable knobs match an
+//! earlier candidate are not re-costed — surfaced in the decision
+//! trace), and block-cached concurrent costing. Note that unlike those
+//! grids (whose cost-only axes share plans), every enumerated GDF
+//! configuration is plan-shaping, so each candidate compiles its own
+//! plan by construction.
 //!
 //! The result is the argmin candidate plus a per-cut **decision trace**
 //! (chosen backend, job counts before/after, partitioning/caching
@@ -44,18 +47,20 @@
 //! and the `repro gdf` CLI subcommand.
 
 use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::api::{compile_with_groups, ClusterConfigOpt, CompileOptions, CompiledProgram};
 use crate::conf::{ClusterConfig, CostConstants, SystemConfig, MB};
-use crate::cost;
+use crate::cost::cache::CacheStats;
 use crate::lop::SelectionHints;
 use crate::matrix::Format;
 use crate::rtprog::{CpOp, ExecBackend, Instr, RtBlock};
 use crate::util::fmt::{fmt_secs, normalize_scratch_pid};
 use crate::util::par;
 
-use super::sweep::{plan_signature, DataScenario, PlanMemo};
+use super::evaluate::{Candidate, CostContext, Evaluated, Evaluator};
+use super::sweep::{plan_signature, DataScenario};
 
 // ---------------------------------------------------------------------
 // Specification
@@ -98,6 +103,10 @@ pub struct GdfSpec {
     /// (`backends^cuts` growth); beyond it the trailing cuts are pinned
     /// to the default backend and [`GdfReport::truncated_cuts`] is set.
     pub max_cuts: usize,
+    /// Enable the block-level cost cache ([`crate::cost::cache`]).
+    /// Results are bitwise identical either way; disable only for A/B
+    /// measurements (`repro gdf --no-cost-cache`, the costcache bench).
+    pub cost_cache: bool,
     /// Worker threads; `0` = available parallelism.
     pub threads: usize,
 }
@@ -125,6 +134,7 @@ impl GdfSpec {
             backends: ExecBackend::all().to_vec(),
             default_backend: ExecBackend::Mr,
             max_cuts: 4,
+            cost_cache: true,
             threads: 0,
         }
     }
@@ -201,6 +211,11 @@ pub struct GdfCandidate {
     /// all candidates today; the field exists for parity with the sweep
     /// and resource reports (and future cost-only axes).
     pub plan_reused: bool,
+    /// Whether costing was skipped because an earlier candidate had a
+    /// structurally identical plan under identical cost-relevant knobs
+    /// (e.g. partition-axis variants whose plans contain no MR job).
+    /// The cost is a bitwise copy of that candidate's.
+    pub cost_reused: bool,
 }
 
 impl GdfCandidate {
@@ -273,6 +288,14 @@ pub struct GdfReport {
     /// Candidates that reused a memoized plan (0 today — all GDF axes
     /// are plan-shaping, so no two candidates share a signature).
     pub memo_hits: usize,
+    /// Candidates whose costing was skipped as an exact duplicate of an
+    /// earlier candidate (identical plan structure + identical
+    /// cost-relevant knobs); reported in the decision trace.
+    pub skipped_duplicates: usize,
+    /// Block-level cost-cache hits accumulated during this run.
+    pub cache_hits: u64,
+    /// Block-level cost-cache misses accumulated during this run.
+    pub cache_misses: u64,
     /// Whether interesting cuts were dropped by the `max_cuts` cap (the
     /// dropped cuts stay on the default backend — surfaced, not silent).
     pub truncated_cuts: bool,
@@ -331,6 +354,10 @@ impl GdfReport {
                 d.cached
             ));
         }
+        out.push_str(&format!(
+            "duplicate candidates skipped (identical plan + knobs): {}\n",
+            self.skipped_duplicates
+        ));
         out
     }
 
@@ -344,12 +371,19 @@ impl GdfReport {
     /// One-line execution summary (includes wall time — not part of the
     /// deterministic tables).
     pub fn summary(&self) -> String {
+        let cache = CacheStats {
+            hits: self.cache_hits,
+            misses: self.cache_misses,
+            ..CacheStats::default()
+        };
         format!(
-            "enumerated {} candidates in {:.3}s on {} threads; {} distinct plans compiled{}; best {} vs default {} ({:+.1}%)",
+            "enumerated {} candidates in {:.3}s on {} threads; {} distinct plans compiled, {} duplicate costings skipped, cost-cache hit rate {:.0}%{}; best {} vs default {} ({:+.1}%)",
             self.candidates.len(),
             self.wall_secs,
             self.threads,
             self.distinct_plans,
+            self.skipped_duplicates,
+            cache.hit_rate() * 100.0,
             if self.truncated_cuts { " (interesting cuts truncated by max_cuts)" } else { "" },
             fmt_secs(self.best().cost_secs),
             fmt_secs(self.baseline().cost_secs),
@@ -375,7 +409,56 @@ struct BaseConfig {
 struct RawCand {
     base: usize,
     groups: Vec<ExecBackend>,
-    sig: String,
+}
+
+/// One GDF candidate (or MR classification probe, `backend = Mr`)
+/// viewed as an evaluator candidate.
+struct GdfCand<'a> {
+    spec: &'a GdfSpec,
+    bases: &'a [BaseConfig],
+    cand: &'a RawCand,
+    backend: ExecBackend,
+}
+
+impl Candidate for GdfCand<'_> {
+    fn signature(&self) -> String {
+        gdf_signature(self.spec, &self.bases[self.cand.base], &self.cand.groups, self.backend)
+    }
+    fn compile(&self) -> Result<CompiledProgram, String> {
+        compile_candidate(self.spec, &self.bases[self.cand.base], &self.cand.groups, self.backend)
+    }
+    fn context(&self) -> CostContext<'_> {
+        CostContext {
+            cfg: &self.bases[self.cand.base].cfg,
+            cc: &self.spec.cc,
+            constants: &self.spec.constants,
+        }
+    }
+    fn label(&self) -> String {
+        let base = &self.bases[self.cand.base];
+        let grp = if self.cand.groups.is_empty() {
+            "default".to_string()
+        } else {
+            self.cand.groups.iter().map(|b| b.name()).collect::<Vec<_>>().join(",")
+        };
+        format!(
+            "GDF candidate bs={} fmt={} part={}MB groups={}",
+            base.blocksize,
+            base.format.name(),
+            fmt_mb_axis(base.partition_mb),
+            grp
+        )
+    }
+}
+
+/// Wrap raw candidates as evaluator adapters against `backend`.
+fn adapters<'a>(
+    spec: &'a GdfSpec,
+    bases: &'a [BaseConfig],
+    raws: &'a [RawCand],
+    backend: ExecBackend,
+) -> Vec<GdfCand<'a>> {
+    raws.iter().map(|cand| GdfCand { spec, bases, cand, backend }).collect()
 }
 
 /// Default-first axis: the baseline value, then the user's values.
@@ -586,14 +669,33 @@ fn compile_candidate(
 /// Run the global data flow optimization: enumerate base configurations
 /// (block size × format × partition size), classify the interesting cuts
 /// of each base from its default-backend plan, enumerate per-cut backend
-/// assignments over those cuts, compile once per distinct plan signature
-/// (parallel, memoized), cost every candidate concurrently, and return
-/// the argmin with its per-cut decision trace and before/after EXPLAIN
-/// diff. See the module docs for the property model.
+/// assignments over those cuts, and evaluate everything through the
+/// unified candidate evaluator ([`crate::opt::evaluate`]): one memoized
+/// parallel compile per distinct plan signature, duplicate-cost
+/// skipping, block-cached concurrent costing. Returns the argmin with
+/// its per-cut decision trace and before/after EXPLAIN diff. See the
+/// module docs for the property model.
 pub fn optimize(spec: &GdfSpec) -> Result<GdfReport, String> {
+    let threads = if spec.threads == 0 { par::default_threads() } else { spec.threads };
+    let mut eval = if spec.cost_cache {
+        Evaluator::new(threads)
+    } else {
+        Evaluator::without_cost_cache(threads)
+    };
+    optimize_with(spec, &mut eval)
+}
+
+/// [`optimize`] on a caller-provided evaluator: the compile memo and the
+/// block-level cost cache survive across calls, so re-optimizing the
+/// same (or a nearby) search space skips straight to cached costing —
+/// the incremental re-optimization workload the `costcache` bench
+/// measures. Fan-out uses the evaluator's thread count; `spec.threads`
+/// is ignored on this entry point.
+pub fn optimize_with(spec: &GdfSpec, eval: &mut Evaluator) -> Result<GdfReport, String> {
     let t0 = Instant::now();
     spec.validate()?;
-    let threads = if spec.threads == 0 { par::default_threads() } else { spec.threads };
+    let threads = eval.threads();
+    eval.begin_run();
 
     // Base axes, default value first: candidate 0 is the default plan.
     let blocksizes = with_default(spec.cfg.blocksize, &spec.blocksizes);
@@ -611,45 +713,31 @@ pub fn optimize(spec: &GdfSpec) -> Result<GdfReport, String> {
         }
     }
 
-    // Phase 1: compile the all-default plan of every base (in parallel,
-    // through the shared memo).
-    let mut memo = PlanMemo::new();
-    let base_cands: Vec<RawCand> = bases
-        .iter()
-        .enumerate()
-        .map(|(i, b)| RawCand {
-            base: i,
-            groups: Vec::new(),
-            sig: gdf_signature(spec, b, &[], spec.default_backend),
-        })
-        .collect();
-    let base_sigs: Vec<String> = base_cands.iter().map(|c| c.sig.clone()).collect();
-    let base_plans = memo.ensure(&base_sigs, threads, |i| {
-        compile_candidate(spec, &bases[i], &[], spec.default_backend)
-    })?;
+    // Phase 1: compile + cost the all-default plan of every base.
+    let base_raw: Vec<RawCand> =
+        (0..bases.len()).map(|i| RawCand { base: i, groups: Vec::new() }).collect();
+    let base_evals =
+        eval.evaluate(&adapters(spec, &bases, &base_raw, spec.default_backend))?;
 
     // Classify the interesting cuts of every base: a cut is interesting
     // iff the *distributable* plan family places jobs in it. The MR plan
     // is the probe — exec-type selection is identical for MR and Spark,
     // and probing the default backend would see no jobs at all when the
-    // default family is single-node CP.
-    let probe_plans = if spec.default_backend == ExecBackend::Cp {
-        let probe_sigs: Vec<String> = bases
-            .iter()
-            .map(|b| gdf_signature(spec, b, &[], ExecBackend::Mr))
-            .collect();
-        memo.ensure(&probe_sigs, threads, |i| {
-            compile_candidate(spec, &bases[i], &[], ExecBackend::Mr)
-        })?
+    // default family is single-node CP. Probes are compiled (memoized),
+    // never costed.
+    let probe_plans: Vec<Arc<CompiledProgram>> = if spec.default_backend == ExecBackend::Cp {
+        eval.compile_batch(&adapters(spec, &bases, &base_raw, ExecBackend::Mr))?
+            .into_iter()
+            .map(|(plan, _)| plan)
+            .collect()
     } else {
-        base_plans.clone()
+        base_evals.iter().map(|e| Arc::clone(&e.plan)).collect()
     };
 
-    let n_blocks = memo.get(base_plans[0].0).runtime.blocks.len();
+    let n_blocks = base_evals[0].plan.runtime.blocks.len();
     let mut truncated_cuts = false;
     let mut interesting_of: Vec<Vec<usize>> = Vec::with_capacity(bases.len());
-    for plan in &probe_plans {
-        let prog = memo.get(plan.0);
+    for prog in &probe_plans {
         let mut interesting: Vec<usize> = prog
             .runtime
             .blocks
@@ -665,41 +753,28 @@ pub fn optimize(spec: &GdfSpec) -> Result<GdfReport, String> {
         interesting_of.push(interesting);
     }
 
-    // Phase 2: per-cut backend assignments over the interesting cuts.
-    let mut rest: Vec<RawCand> = Vec::new();
-    for (bi, base) in bases.iter().enumerate() {
+    // Phase 2: per-cut backend assignments over the interesting cuts,
+    // evaluated through the same pipeline (duplicate-cost skipping fires
+    // here: e.g. partition-axis variants whose assignment leaves no MR
+    // job compile to identical plans with identical observable knobs).
+    let mut rest_raw: Vec<RawCand> = Vec::new();
+    for bi in 0..bases.len() {
         for groups in
             assignments(&interesting_of[bi], &spec.backends, n_blocks, spec.default_backend)
         {
-            let sig = gdf_signature(spec, base, &groups, spec.default_backend);
-            rest.push(RawCand { base: bi, groups, sig });
+            rest_raw.push(RawCand { base: bi, groups });
         }
     }
-    let rest_sigs: Vec<String> = rest.iter().map(|c| c.sig.clone()).collect();
-    let rest_plans = memo.ensure(&rest_sigs, threads, |i| {
-        compile_candidate(spec, &bases[rest[i].base], &rest[i].groups, spec.default_backend)
-    })?;
+    let rest_evals =
+        eval.evaluate(&adapters(spec, &bases, &rest_raw, spec.default_backend))?;
 
-    // Phase 3: cost every candidate concurrently against its base cfg.
-    let all: Vec<(&RawCand, usize, bool)> = base_cands
-        .iter()
-        .zip(&base_plans)
-        .chain(rest.iter().zip(&rest_plans))
-        .map(|(c, &(plan, reused))| (c, plan, reused))
-        .collect();
-    let costed: Vec<(f64, usize, usize, usize)> =
-        par::par_map(&all, threads, |_, &(cand, plan, _)| {
-            let prog = memo.get(plan);
-            let report =
-                cost::cost_program(&prog.runtime, &bases[cand.base].cfg, &spec.cc, &spec.constants);
-            let (cp, mr, sp) = prog.runtime.size3();
-            (report.total, cp, mr, sp)
-        });
+    let all_raw: Vec<&RawCand> = base_raw.iter().chain(&rest_raw).collect();
+    let all_evals: Vec<&Evaluated> = base_evals.iter().chain(&rest_evals).collect();
 
-    let candidates: Vec<GdfCandidate> = all
+    let candidates: Vec<GdfCandidate> = all_raw
         .iter()
-        .zip(&costed)
-        .map(|(&(cand, _, reused), &(cost_secs, cp, mr, sp))| {
+        .zip(&all_evals)
+        .map(|(cand, ev)| {
             let base = &bases[cand.base];
             GdfCandidate {
                 blocksize: base.blocksize,
@@ -710,23 +785,15 @@ pub fn optimize(spec: &GdfSpec) -> Result<GdfReport, String> {
                 } else {
                     cand.groups.clone()
                 },
-                cost_secs,
-                cp_insts: cp,
-                mr_jobs: mr,
-                spark_jobs: sp,
-                plan_reused: reused,
+                cost_secs: ev.cost_secs,
+                cp_insts: ev.cp_insts,
+                mr_jobs: ev.mr_jobs,
+                spark_jobs: ev.spark_jobs,
+                plan_reused: ev.plan_reused,
+                cost_reused: ev.cost_reused,
             }
         })
         .collect();
-    for c in &candidates {
-        if !c.cost_secs.is_finite() {
-            return Err(format!(
-                "non-finite cost estimate ({}) for GDF candidate {}",
-                c.cost_secs,
-                c.label()
-            ));
-        }
-    }
 
     // Ranking: cheapest first; exact ties keep enumeration order, so the
     // default plan (index 0) wins when nothing improves on it.
@@ -737,12 +804,8 @@ pub fn optimize(spec: &GdfSpec) -> Result<GdfReport, String> {
     let best = ranking[0];
 
     // Decision trace + before/after explains from the two relevant plans.
-    let best_plan = if best < base_plans.len() {
-        memo.get(base_plans[best].0)
-    } else {
-        memo.get(rest_plans[best - base_plans.len()].0)
-    };
-    let baseline_plan = memo.get(base_plans[0].0);
+    let best_plan: &CompiledProgram = &all_evals[best].plan;
+    let baseline_plan: &CompiledProgram = &base_evals[0].plan;
     let trace: Vec<CutDecision> = best_plan
         .runtime
         .blocks
@@ -774,11 +837,14 @@ pub fn optimize(spec: &GdfSpec) -> Result<GdfReport, String> {
 
     // Count memo hits from the per-candidate reuse flags: the distinct
     // count may include CP-probe compiles that are not candidates.
-    let memo_hits = all.iter().filter(|&&(_, _, reused)| reused).count();
-    let distinct_plans = memo.distinct();
+    let memo_hits = all_evals.iter().filter(|e| e.plan_reused).count();
+    let cache_stats = eval.run_cache_stats();
     Ok(GdfReport {
         memo_hits,
-        distinct_plans,
+        distinct_plans: eval.distinct_plans(),
+        skipped_duplicates: eval.duplicates_skipped(),
+        cache_hits: cache_stats.hits,
+        cache_misses: cache_stats.misses,
         best,
         baseline: 0,
         ranking,

@@ -25,12 +25,20 @@
 //!   plan shape and costed concurrently into a ranked comparison table
 //!   (the paper's Table-1 workflow, automated).
 //!
+//! All three optimizers route their candidate fan-out through one shared
+//! **evaluation core** ([`evaluate::Evaluator`]): signature-deduped
+//! `Arc`-shared compiles, duplicate-cost skipping, and block-level cost
+//! caching ([`crate::cost::cache`]) on a totals-only costing fast path —
+//! with bitwise-identical results to the naive per-candidate
+//! compile-and-cost loop.
+//!
 //! Every public item in this module tree carries rustdoc; the lint below
 //! keeps it that way (satisfying the `cargo doc` CI gate).
 
 #![warn(missing_docs)]
 
 pub mod compare;
+pub mod evaluate;
 pub mod gdf;
 pub mod resource;
 pub mod sweep;

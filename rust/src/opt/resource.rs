@@ -13,10 +13,13 @@
 //!
 //! and evaluates it with three scaling levers:
 //!
-//! 1. **Plan-signature memoization** (shared with the sweep engine's
-//!    [`super::sweep::PlanMemo`]): node counts and `k_local` never change
+//! 1. **Plan-signature memoization** (via the unified evaluation core,
+//!    [`crate::opt::evaluate`]): node counts and `k_local` never change
 //!    plan shape, so points differing only on those axes are compiled
-//!    once and costed many times.
+//!    once and costed many times — and when the plan cannot observe the
+//!    differing knob at all (`k_local` without parfor), the evaluator
+//!    skips the re-costing outright and the block-level cost cache
+//!    ([`crate::cost::cache`]) covers partial overlaps.
 //! 2. **Parallel evaluation**: distinct compiles and all point costings
 //!    fan out over [`crate::util::par`].
 //! 3. **Lower-bound pruning**: points are processed in budget-ascending
@@ -49,7 +52,8 @@ use crate::rtprog::ExecBackend;
 use crate::util::fmt::fmt_secs;
 use crate::util::par;
 
-use super::sweep::{plan_signature, DataScenario, PlanMemo};
+use super::evaluate::{Candidate, CostContext, Evaluator};
+use super::sweep::{plan_signature, DataScenario};
 
 // ---------------------------------------------------------------------
 // Grid specification
@@ -94,6 +98,10 @@ pub struct ResourceGrid {
     /// Disable to force-cost every point (the frontier and argmin are
     /// identical either way; `tests/resource.rs` asserts so).
     pub prune: bool,
+    /// Enable the block-level cost cache ([`crate::cost::cache`]).
+    /// Results are bitwise identical either way; disable only for A/B
+    /// measurements (`repro resource --no-cost-cache`).
+    pub cost_cache: bool,
     /// Worker threads; `0` = available parallelism.
     pub threads: usize,
 }
@@ -121,6 +129,7 @@ impl ResourceGrid {
             k_local: vec![6, 24],
             backends: ExecBackend::all().to_vec(),
             prune: true,
+            cost_cache: true,
             threads: 0,
         }
     }
@@ -373,12 +382,43 @@ struct RawPoint {
     cc: ClusterConfig,
     budget_mb: f64,
     floor_secs: f64,
-    sig: String,
 }
 
 impl RawPoint {
     fn label(&self) -> String {
         point_label(self.heap_mb, self.exec_mem_mb, self.nodes, self.k_local, self.backend)
+    }
+}
+
+/// One surviving grid point viewed as an evaluator candidate. Points
+/// that differ only on cost-only axes share a plan signature (compiled
+/// once); points whose plan additionally cannot observe the differing
+/// knob (e.g. `k_local` on a parfor-free plan) also share the *cost*
+/// via the evaluator's duplicate-cost skip.
+struct PointCand<'a> {
+    spec: &'a ResourceGrid,
+    meta: &'a crate::ir::build::StaticMeta,
+    raw: &'a RawPoint,
+}
+
+impl Candidate for PointCand<'_> {
+    fn signature(&self) -> String {
+        plan_signature(
+            &self.spec.cfg,
+            &self.spec.hints,
+            &self.raw.cc,
+            &self.spec.scenario,
+            self.raw.backend,
+        )
+    }
+    fn compile(&self) -> Result<CompiledProgram, String> {
+        compile_point(self.spec, self.meta, self.raw)
+    }
+    fn context(&self) -> CostContext<'_> {
+        CostContext { cfg: &self.spec.cfg, cc: &self.raw.cc, constants: &self.spec.constants }
+    }
+    fn label(&self) -> String {
+        format!("grid point {} — degenerate configuration", self.raw.label())
     }
 }
 
@@ -432,7 +472,6 @@ pub fn optimize_grid(spec: &ResourceGrid) -> Result<ResourceReport, String> {
                 .with_executor_mem_mb(xm)
                 .with_nodes(n)
                 .with_k_local(kl);
-            let sig = plan_signature(&spec.cfg, &spec.hints, &cc, &spec.scenario, b);
             let floor_secs =
                 cost::read_io_floor(&floor_inputs, b, &spec.cfg, &cc, &spec.constants);
             RawPoint {
@@ -444,7 +483,6 @@ pub fn optimize_grid(spec: &ResourceGrid) -> Result<ResourceReport, String> {
                 budget_mb: budget_mb(h, xm, n, b),
                 floor_secs,
                 cc,
-                sig,
             }
         })
         .collect();
@@ -454,7 +492,12 @@ pub fn optimize_grid(spec: &ResourceGrid) -> Result<ResourceReport, String> {
     let mut order: Vec<usize> = (0..raw.len()).collect();
     order.sort_by(|&a, &b| raw[a].budget_mb.total_cmp(&raw[b].budget_mb).then(a.cmp(&b)));
 
-    let mut memo = PlanMemo::new();
+    let mut eval = if spec.cost_cache {
+        Evaluator::new(threads)
+    } else {
+        Evaluator::without_cost_cache(threads)
+    };
+    eval.begin_run();
     // per point: (cost, cp_insts, mr_jobs, spark_jobs, plan_reused)
     let mut costed: Vec<Option<(f64, usize, usize, usize, bool)>> = vec![None; raw.len()];
     let mut best_time = f64::INFINITY;
@@ -471,30 +514,15 @@ pub fn optimize_grid(spec: &ResourceGrid) -> Result<ResourceReport, String> {
             .copied()
             .filter(|&p| !spec.prune || raw[p].floor_secs < best_time)
             .collect();
-        let sigs: Vec<String> = survivors.iter().map(|&p| raw[p].sig.clone()).collect();
-        let plan_of =
-            memo.ensure(&sigs, threads, |s| compile_point(spec, &meta, &raw[survivors[s]]))?;
-        let wave: Vec<Result<(f64, usize, usize, usize), String>> =
-            par::par_map(&survivors, threads, |s, &p| {
-                let prog = memo.get(plan_of[s].0);
-                let report =
-                    cost::cost_program(&prog.runtime, &spec.cfg, &raw[p].cc, &spec.constants);
-                if report.total.is_finite() {
-                    let (cp, mr, sp) = prog.runtime.size3();
-                    Ok((report.total, cp, mr, sp))
-                } else {
-                    Err(format!(
-                        "non-finite cost estimate ({}) for grid point {} — degenerate configuration",
-                        report.total,
-                        raw[p].label()
-                    ))
-                }
-            });
+        let cands: Vec<PointCand> =
+            survivors.iter().map(|&p| PointCand { spec, meta: &meta, raw: &raw[p] }).collect();
+        let wave = eval.evaluate(&cands)?;
         for (s, &p) in survivors.iter().enumerate() {
-            let (total, cp, mr, sp) = wave[s].clone()?;
-            costed[p] = Some((total, cp, mr, sp, plan_of[s].1));
-            if total < best_time {
-                best_time = total;
+            let ev = &wave[s];
+            costed[p] =
+                Some((ev.cost_secs, ev.cp_insts, ev.mr_jobs, ev.spark_jobs, ev.plan_reused));
+            if ev.cost_secs < best_time {
+                best_time = ev.cost_secs;
             }
         }
         i = j;
@@ -555,8 +583,8 @@ pub fn optimize_grid(spec: &ResourceGrid) -> Result<ResourceReport, String> {
     let n_costed = points.iter().filter(|p| !p.pruned()).count();
     Ok(ResourceReport {
         pruned: points.len() - n_costed,
-        memo_hits: n_costed - memo.distinct(),
-        distinct_plans: memo.distinct(),
+        memo_hits: n_costed - eval.distinct_plans(),
+        distinct_plans: eval.distinct_plans(),
         best,
         frontier,
         points,

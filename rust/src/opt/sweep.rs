@@ -12,19 +12,22 @@
 //!    size, reducer/replication settings, operator hints). Cluster
 //!    knobs that only affect *cost*, never plan shape (clock rate,
 //!    map/reduce slots, HDFS block size, node counts), are excluded;
-//! 2. compiles **once per distinct signature** (memoized), fanning the
-//!    distinct compiles out over a scoped thread pool
-//!    ([`crate::util::par`], the hermetic rayon stand-in);
-//! 3. costs **every** cell concurrently against its own full cluster
-//!    configuration (so two clusters sharing a plan still get distinct
-//!    cost estimates);
+//! 2. routes the grid through the **unified candidate evaluator**
+//!    ([`crate::opt::evaluate`]): one memoized parallel compile per
+//!    distinct signature (`Arc`-shared plans), duplicate-cost skipping,
+//!    and block-level cost caching ([`crate::cost::cache`]) on the
+//!    totals-only costing fast path;
+//! 3. costs **every** cell against its own full cluster configuration
+//!    (so two clusters sharing a plan still get distinct cost
+//!    estimates);
 //! 4. returns a [`SweepReport`] with a deterministic cheapest-first
 //!    ranking and a ready-to-print comparison table.
 //!
-//! Entry points: [`sweep`] (parallel + memoized), [`sweep_serial`]
-//! (reference implementation: one `compile` + `cost` per cell, no
-//! memoization — the baseline the `sweep` bench compares against), and
-//! the `repro sweep` CLI subcommand / [`crate::api::sweep`] wrapper.
+//! Entry points: [`sweep`] (parallel + memoized + cached),
+//! [`sweep_serial`] (reference implementation: one `compile` + `cost`
+//! per cell, no memoization and no caching — the baseline the `sweep`
+//! bench compares against), and the `repro sweep` CLI subcommand /
+//! [`crate::api::sweep`] wrapper.
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -41,6 +44,8 @@ use crate::matrix::{Format, MatrixCharacteristics};
 use crate::rtprog::ExecBackend;
 use crate::util::fmt::{fmt_dim, fmt_secs};
 use crate::util::par;
+
+use super::evaluate::{Candidate, CostContext, Evaluated, Evaluator};
 
 /// A cluster configuration with a display name, one axis of the grid.
 #[derive(Clone, Debug)]
@@ -156,6 +161,11 @@ pub struct SweepSpec {
     /// Execution-backend axis of the grid (CP / MR / Spark plan
     /// families; `repro sweep --backends cp,mr,spark`).
     pub backends: Vec<ExecBackend>,
+    /// Enable the block-level cost cache ([`crate::cost::cache`]).
+    /// Results are bitwise identical either way; disable only for A/B
+    /// measurements (`repro sweep --no-cost-cache`, the costcache
+    /// bench).
+    pub cost_cache: bool,
     /// Worker threads; `0` = available parallelism.
     pub threads: usize,
 }
@@ -177,6 +187,7 @@ impl SweepSpec {
             hints: SelectionHints::default(),
             constants: CostConstants::default(),
             backends: vec![ExecBackend::Mr],
+            cost_cache: true,
             threads: 0,
         }
     }
@@ -342,77 +353,42 @@ pub(crate) fn plan_signature(
     sig
 }
 
-/// Plan-signature-keyed compile memo shared by [`sweep`] and the grid
-/// resource optimizer ([`crate::opt::resource`]): each distinct
-/// signature is compiled exactly once across the memo's lifetime, and
-/// every [`PlanMemo::ensure`] batch fans its distinct missing
-/// signatures out over the scoped thread pool.
-pub(crate) struct PlanMemo {
-    progs: Vec<CompiledProgram>,
-    by_sig: HashMap<String, usize>,
+/// One grid cell viewed as an evaluator candidate (the adapter the
+/// unified evaluation core consumes).
+struct CellCand<'a> {
+    spec: &'a SweepSpec,
+    ci: usize,
+    si: usize,
+    bi: usize,
 }
 
-impl Default for PlanMemo {
-    fn default() -> Self {
-        Self::new()
+impl Candidate for CellCand<'_> {
+    fn signature(&self) -> String {
+        plan_signature(
+            &self.spec.cfg,
+            &self.spec.hints,
+            &self.spec.clusters[self.ci].cc,
+            &self.spec.scenarios[self.si],
+            self.spec.backends[self.bi],
+        )
     }
-}
-
-impl PlanMemo {
-    /// Empty memo.
-    pub fn new() -> Self {
-        PlanMemo { progs: Vec::new(), by_sig: HashMap::new() }
+    fn compile(&self) -> Result<CompiledProgram, String> {
+        compile_cell(self.spec, self.ci, self.si, self.bi)
     }
-
-    /// Number of distinct plans compiled so far — the total number of
-    /// compile invocations made through this memo.
-    pub fn distinct(&self) -> usize {
-        self.progs.len()
-    }
-
-    /// The compiled plan at `idx` (an index returned by [`Self::ensure`]).
-    pub fn get(&self, idx: usize) -> &CompiledProgram {
-        &self.progs[idx]
-    }
-
-    /// Ensure every signature in `sigs` has a compiled plan. Distinct
-    /// signatures not yet memoized are compiled concurrently on up to
-    /// `threads` workers; `compile(i)` must compile the plan for
-    /// `sigs[i]` and is called once per new signature, with the position
-    /// of its first occurrence in this batch. Returns, aligned with
-    /// `sigs`, `(plan index, reused)` — `reused` is false only for the
-    /// first occurrence ever seen of a signature.
-    pub fn ensure(
-        &mut self,
-        sigs: &[String],
-        threads: usize,
-        compile: impl Fn(usize) -> Result<CompiledProgram, String> + Sync,
-    ) -> Result<Vec<(usize, bool)>, String> {
-        let mut missing: Vec<usize> = Vec::new();
-        let mut seen_in_batch: std::collections::HashSet<&str> = std::collections::HashSet::new();
-        for (i, sig) in sigs.iter().enumerate() {
-            if !self.by_sig.contains_key(sig.as_str()) && seen_in_batch.insert(sig.as_str()) {
-                missing.push(i);
-            }
+    fn context(&self) -> CostContext<'_> {
+        CostContext {
+            cfg: &self.spec.cfg,
+            cc: &self.spec.clusters[self.ci].cc,
+            constants: &self.spec.constants,
         }
-        let compiled: Vec<Result<CompiledProgram, String>> =
-            par::par_map(&missing, threads, |_, &cell| compile(cell));
-        for (&cell, r) in missing.iter().zip(compiled) {
-            // record the signature only once its compile succeeded, so a
-            // failed batch leaves the memo consistent for retries
-            let prog = r?;
-            self.by_sig.insert(sigs[cell].clone(), self.progs.len());
-            self.progs.push(prog);
-        }
-        Ok(sigs
-            .iter()
-            .enumerate()
-            .map(|(i, sig)| {
-                // `missing` is ascending, so binary_search identifies the
-                // fresh (first-occurrence) positions.
-                (self.by_sig[sig.as_str()], missing.binary_search(&i).is_err())
-            })
-            .collect())
+    }
+    fn label(&self) -> String {
+        format!(
+            "scenario '{}' on cluster '{}' backend '{}'",
+            self.spec.scenarios[self.si].name,
+            self.spec.clusters[self.ci].name,
+            self.spec.backends[self.bi].name()
+        )
     }
 }
 
@@ -529,45 +505,52 @@ fn check_finite(cells: &[SweepCell]) -> Result<(), String> {
     Ok(())
 }
 
-/// Run the sweep: compile once per distinct plan shape (parallel, via
-/// the shared [`PlanMemo`]), cost every cell concurrently, and rank.
-/// See the module docs for the pipeline; [`sweep_serial`] is the
-/// unmemoized serial reference.
+/// Build a [`SweepCell`] from the evaluator's outcome for one cell.
+fn cell_from_eval(spec: &SweepSpec, ci: usize, si: usize, bi: usize, ev: &Evaluated) -> SweepCell {
+    let sc = &spec.scenarios[si];
+    SweepCell {
+        cluster: spec.clusters[ci].name.clone(),
+        scenario: sc.name.clone(),
+        backend: spec.backends[bi].name().to_string(),
+        x_rows: sc.inputs.first().map(|&(_, r, _)| r).unwrap_or(0),
+        x_cols: sc.inputs.first().map(|&(_, _, c)| c).unwrap_or(0),
+        input_cells: sc.total_cells(),
+        cp_insts: ev.cp_insts,
+        mr_jobs: ev.mr_jobs,
+        spark_jobs: ev.spark_jobs,
+        cost_secs: ev.cost_secs,
+        plan_sig: ev.sig.to_string(),
+        plan_reused: ev.plan_reused,
+    }
+}
+
+/// Run the sweep through the unified candidate evaluator
+/// ([`crate::opt::evaluate`]): compile once per distinct plan shape
+/// (parallel, `Arc`-shared), cost every cell concurrently through the
+/// block-level cost cache, and rank. See the module docs for the
+/// pipeline; [`sweep_serial`] is the unmemoized serial reference.
 pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
     let t0 = Instant::now();
     validate_spec(spec)?;
     let threads = if spec.threads == 0 { par::default_threads() } else { spec.threads };
     let grid = grid_of(spec);
-    let sigs: Vec<String> = grid
+    let cands: Vec<CellCand> =
+        grid.iter().map(|&(ci, si, bi)| CellCand { spec, ci, si, bi }).collect();
+    let mut eval = if spec.cost_cache {
+        Evaluator::new(threads)
+    } else {
+        Evaluator::without_cost_cache(threads)
+    };
+    eval.begin_run();
+    let evaluated = eval.evaluate(&cands)?;
+    let cells: Vec<SweepCell> = grid
         .iter()
-        .map(|&(ci, si, bi)| {
-            plan_signature(
-                &spec.cfg,
-                &spec.hints,
-                &spec.clusters[ci].cc,
-                &spec.scenarios[si],
-                spec.backends[bi],
-            )
-        })
+        .zip(&evaluated)
+        .map(|(&(ci, si, bi), ev)| cell_from_eval(spec, ci, si, bi, ev))
         .collect();
 
-    // Phase 1: compile each distinct plan shape once, in parallel.
-    let mut memo = PlanMemo::new();
-    let plan_of = memo.ensure(&sigs, threads, |cell| {
-        let (ci, si, bi) = grid[cell];
-        compile_cell(spec, ci, si, bi)
-    })?;
-
-    // Phase 2: cost all cells concurrently against their full cluster
-    // config (clock/slots matter here even when the plan is shared).
-    let cells: Vec<SweepCell> = par::par_map(&grid, threads, |i, &(ci, si, bi)| {
-        let (u, reused) = plan_of[i];
-        cost_cell(spec, ci, si, bi, memo.get(u), &sigs[i], reused)
-    });
-    check_finite(&cells)?;
-
     let ranking = rank(&cells);
-    let distinct_plans = memo.distinct();
+    let distinct_plans = eval.distinct_plans();
     Ok(SweepReport {
         memo_hits: cells.len() - distinct_plans,
         distinct_plans,

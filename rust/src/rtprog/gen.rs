@@ -199,16 +199,18 @@ impl<'a, 'b> DagGen<'a, 'b> {
             if dag.hop(id).kind != HopKind::Reorg(ReorgOp::Transpose) {
                 continue;
             }
-            let cons = consumers.get(&id).cloned().unwrap_or_default();
-            let all_absorbed = !cons.is_empty()
-                && cons.iter().all(|&c| match methods.get(&c) {
-                    Some(MatMultMethod::CpTsmm { left }) | Some(MatMultMethod::MrTsmm { left }) => {
-                        let h = dag.hop(c);
-                        (*left && h.inputs[0] == id) || (!*left && h.inputs[1] == id)
-                    }
-                    Some(MatMultMethod::CpMMTransposeRewrite) => dag.hop(c).inputs[0] == id,
-                    _ => false,
-                });
+            let all_absorbed = consumers.get(&id).is_some_and(|cons| {
+                !cons.is_empty()
+                    && cons.iter().all(|&c| match methods.get(&c) {
+                        Some(MatMultMethod::CpTsmm { left })
+                        | Some(MatMultMethod::MrTsmm { left }) => {
+                            let h = dag.hop(c);
+                            (*left && h.inputs[0] == id) || (!*left && h.inputs[1] == id)
+                        }
+                        Some(MatMultMethod::CpMMTransposeRewrite) => dag.hop(c).inputs[0] == id,
+                        _ => false,
+                    })
+            });
             if all_absorbed && !dag.roots.contains(&id) {
                 suppressed.insert(id);
             }
@@ -341,10 +343,14 @@ impl<'a, 'b> DagGen<'a, 'b> {
 
     fn emit_cp(&mut self, id: HopId) {
         use ir::UnOp;
-        let hop = self.dag.hop(id).clone();
+        // reborrow the DAG reference out of `self` so `hop` does not pin
+        // `self` (the arms below mutate `self.insts`/`self.done`); this
+        // replaces a full `Hop` clone per emitted instruction
+        let dag = self.dag;
+        let hop = dag.hop(id);
         if self.suppressed.contains(&id) {
             // pass through: operand of the underlying input
-            let inner = self.dag.hop(id).inputs[0];
+            let inner = hop.inputs[0];
             let op = self.done[&inner].clone();
             self.done.insert(id, op);
             return;
@@ -518,7 +524,8 @@ impl<'a, 'b> DagGen<'a, 'b> {
     }
 
     fn emit_cp_matmult(&mut self, id: HopId) {
-        let hop = self.dag.hop(id).clone();
+        let dag = self.dag;
+        let hop = dag.hop(id); // reborrow, not clone (see emit_cp)
         let method = self.methods[&id].clone();
         match method {
             MatMultMethod::CpTsmm { left } => {
@@ -626,14 +633,14 @@ impl<'a, 'b> DagGen<'a, 'b> {
             // Spark: the whole wave fuses into one lazily evaluated job.
             let packed =
                 sparkify::fuse(&nodes, self.ctx.cfg.num_reducers, self.ctx.cfg.replication);
-            for (var, mc) in &packed.materialized {
+            for (var, mc) in packed.materialized {
                 let path = self.scratch_path();
                 self.insts.push(Instr::CreateVar {
-                    var: var.clone(),
+                    var,
                     path,
                     temp: true,
                     format: Format::BinaryBlock,
-                    mc: *mc,
+                    mc,
                 });
             }
             self.insts.push(Instr::SparkJob(packed.job));
@@ -643,15 +650,16 @@ impl<'a, 'b> DagGen<'a, 'b> {
             return;
         }
         let packed = piggyback::pack(&nodes, self.ctx.cfg.num_reducers, self.ctx.cfg.replication);
-        // createvars for materialised outputs, then the jobs
-        for (var, mc) in &packed.materialized {
+        // createvars for materialised outputs (moved, not cloned), then
+        // the jobs
+        for (var, mc) in packed.materialized {
             let path = self.scratch_path();
             self.insts.push(Instr::CreateVar {
-                var: var.clone(),
+                var,
                 path,
                 temp: true,
                 format: Format::BinaryBlock,
-                mc: *mc,
+                mc,
             });
         }
         for job in packed.jobs {
@@ -697,7 +705,8 @@ impl<'a, 'b> DagGen<'a, 'b> {
         hop_node: &mut HashMap<HopId, usize>,
     ) {
         use ir::{AggOp, BinOp as IBinOp};
-        let hop = self.dag.hop(id).clone();
+        let dag = self.dag;
+        let hop = dag.hop(id); // reborrow, not clone (see emit_cp)
         let nid = nodes.len();
         let out_var = self.fresh_mvar();
         let base = MrNode {

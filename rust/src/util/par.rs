@@ -5,7 +5,10 @@
 //! thread pool with an atomic work-stealing index, so unevenly-sized
 //! work items (e.g. XS vs XL4 compile+cost cells in the scenario sweep)
 //! balance across workers. Results are returned **in input order**, so
-//! callers are deterministic regardless of scheduling.
+//! callers are deterministic regardless of scheduling: each worker's
+//! bucket is ascending by construction (the atomic index only grows),
+//! and the buckets are k-way merged directly into the result vector —
+//! no intermediate `Vec<Option<R>>` scatter pass, no per-item unwrap.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -53,19 +56,31 @@ where
             .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
             .collect()
     });
-    let mut results: Vec<Option<R>> = Vec::with_capacity(items.len());
-    results.resize_with(items.len(), || None);
-    for bucket in buckets {
-        for (i, r) in bucket {
-            results[i] = Some(r);
-        }
+    merge_indexed(items.len(), buckets)
+}
+
+/// K-way merge of per-worker `(index, result)` buckets into input order.
+/// Every bucket is ascending by index and the indices across buckets
+/// partition `0..n`, so for each wanted position exactly one bucket
+/// fronts it — results move straight into their final slot.
+fn merge_indexed<R>(n: usize, buckets: Vec<Vec<(usize, R)>>) -> Vec<R> {
+    let mut iters: Vec<_> = buckets.into_iter().map(|b| b.into_iter().peekable()).collect();
+    let mut out = Vec::with_capacity(n);
+    for want in 0..n {
+        let pos = iters
+            .iter_mut()
+            .position(|it| matches!(it.peek(), Some(&(i, _)) if i == want))
+            .expect("par_map produced every index exactly once");
+        // the peeked element is `want`'s result
+        out.push(iters[pos].next().expect("peeked element exists").1);
     }
-    results.into_iter().map(|r| r.expect("par_map index filled")).collect()
+    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::forall;
 
     #[test]
     fn preserves_input_order() {
@@ -101,5 +116,62 @@ mod tests {
         for (i, &n) in items.iter().enumerate() {
             assert_eq!(out[i], n.wrapping_mul(n.wrapping_sub(1)) / 2);
         }
+    }
+
+    #[test]
+    fn merge_handles_adversarial_bucket_shapes() {
+        // hand-built buckets: empty, interleaved, singleton
+        let buckets: Vec<Vec<(usize, u32)>> =
+            vec![vec![(1, 10), (3, 30)], vec![], vec![(0, 0), (2, 20), (4, 40)]];
+        assert_eq!(merge_indexed(5, buckets), vec![0, 10, 20, 30, 40]);
+    }
+
+    /// Property (satellite): for random sizes, thread counts and
+    /// work-skew patterns, `par_map` returns exactly the serial map —
+    /// same values, same order — on every thread count.
+    #[test]
+    fn prop_deterministic_across_thread_counts() {
+        forall(
+            25,
+            0x9A12,
+            |r| {
+                let len = r.below(200) as usize;
+                let threads = 1 + r.below(16) as usize;
+                let skew = 1 + r.below(5) as u64;
+                (len, threads, skew)
+            },
+            |&(len, threads, skew)| {
+                let items: Vec<u64> = (0..len as u64).collect();
+                // unevenly-sized work: burn cycles proportional to i % skew
+                let work = |i: usize, x: &u64| {
+                    let spin = (i as u64 % skew) * 1_000;
+                    let mut acc = *x;
+                    for j in 0..spin {
+                        acc = acc.wrapping_mul(6364136223846793005).wrapping_add(j);
+                    }
+                    (*x, acc)
+                };
+                let reference: Vec<(u64, u64)> =
+                    items.iter().enumerate().map(|(i, x)| work(i, x)).collect();
+                let parallel = par_map(&items, threads, work);
+                if parallel == reference {
+                    Ok(())
+                } else {
+                    Err(format!("len={len} threads={threads} skew={skew}: order diverged"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn worker_panics_propagate() {
+        let items: Vec<u32> = (0..64).collect();
+        let _ = par_map(&items, 4, |_, &x| {
+            if x == 33 {
+                panic!("boom");
+            }
+            x
+        });
     }
 }

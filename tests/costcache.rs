@@ -1,0 +1,289 @@
+//! Integration tests for the incremental plan-costing engine: block-level
+//! cost caching (`cost/cache.rs`) and the unified candidate evaluator
+//! (`opt/evaluate.rs`).
+//!
+//! The load-bearing property: **cached and cache-disabled costing are
+//! bitwise identical** — on every bundled script × backend × thread
+//! count, through every optimizer entry point, under cache eviction
+//! pressure, and under concurrent access to one shared cache.
+
+use std::collections::HashMap;
+
+use systemds::api::{
+    compile_with_meta, linreg_cg_args, CompileOptions, DataScenario, ExecBackend, GdfSpec,
+    ResourceGrid, Scenario, SweepSpec, LINREG_CG, LINREG_DS,
+};
+use systemds::conf::CostConstants;
+use systemds::cost::{
+    self,
+    cache::{program_hashes, CostCache},
+};
+use systemds::matrix::Format;
+use systemds::opt::gdf;
+use systemds::opt::resource::optimize_grid;
+use systemds::opt::sweep::{sweep, sweep_serial, NamedCluster};
+use systemds::util::par;
+use systemds::util::prop::forall;
+
+/// Every bundled script on the XL1 data scenario.
+fn bundled_scripts() -> Vec<(&'static str, &'static str, HashMap<usize, String>)> {
+    vec![
+        ("ds", LINREG_DS, Scenario::xs().args()),
+        ("cg", LINREG_CG, linreg_cg_args(7)),
+    ]
+}
+
+#[test]
+fn cached_and_uncached_costing_bitwise_identical_on_every_script_and_backend() {
+    let k = CostConstants::default();
+    for (name, src, args) in bundled_scripts() {
+        for scenario in [Scenario::xs(), Scenario::xl1()] {
+            for backend in ExecBackend::all() {
+                let opts = CompileOptions { backend, ..Default::default() };
+                let c = compile_with_meta(src, &args, &scenario.meta(1000), &opts).unwrap();
+                let tag = format!("{name}/{}/{}", scenario.name, backend.name());
+                let full = cost::cost_program(&c.runtime, &opts.cfg, &opts.cc.0, &k);
+                // totals-only fast path
+                let fast = cost::cost_total(&c.runtime, &opts.cfg, &opts.cc.0, &k);
+                assert_eq!(full.total.to_bits(), fast.to_bits(), "{tag} totals-only");
+                // cached paths, cold then warm
+                let hashes = program_hashes(&c.runtime);
+                let cache = CostCache::default();
+                for pass in ["cold", "warm"] {
+                    let cached = cost::cost_program_cached(
+                        &c.runtime, &hashes, &opts.cfg, &opts.cc.0, &k, &cache,
+                    );
+                    assert_eq!(full.total.to_bits(), cached.total.to_bits(), "{tag} {pass}");
+                    // annotated replay renders the identical costed EXPLAIN
+                    assert_eq!(
+                        cost::explain_costed(&full),
+                        cost::explain_costed(&cached),
+                        "{tag} {pass} explain"
+                    );
+                    let total_cached = cost::cost_total_cached(
+                        &c.runtime, &hashes, &opts.cfg, &opts.cc.0, &k, &cache,
+                    );
+                    assert_eq!(full.total.to_bits(), total_cached.to_bits(), "{tag} {pass}");
+                }
+                assert!(cache.stats().hits > 0, "{tag}: warm pass must hit");
+            }
+        }
+    }
+}
+
+/// Eviction pressure must degrade hit rate, never results: a cache far
+/// too small for the program still replays bitwise-identical totals.
+#[test]
+fn tiny_cache_under_eviction_pressure_stays_exact() {
+    let k = CostConstants::default();
+    let s = Scenario::xl1();
+    let opts = CompileOptions::default();
+    let c =
+        compile_with_meta(LINREG_CG, &linreg_cg_args(7), &s.meta(1000), &opts).unwrap();
+    let reference = cost::cost_program(&c.runtime, &opts.cfg, &opts.cc.0, &k).total;
+    let hashes = program_hashes(&c.runtime);
+    let cache = CostCache::new(2); // a couple of entries for a many-block walk
+    for _ in 0..3 {
+        let total =
+            cost::cost_total_cached(&c.runtime, &hashes, &opts.cfg, &opts.cc.0, &k, &cache);
+        assert_eq!(reference.to_bits(), total.to_bits());
+    }
+    let stats = cache.stats();
+    assert!(stats.evictions > 0, "capacity 2 must evict: {stats:?}");
+    assert!(stats.entries <= stats.capacity, "{stats:?}");
+}
+
+/// Concurrent costing through one shared cache: 16 workers costing a mix
+/// of programs race on inserts and hits; every result must equal the
+/// uncached reference bit for bit.
+#[test]
+fn concurrent_costing_through_shared_cache_is_exact() {
+    let k = CostConstants::default();
+    let opts = CompileOptions::default();
+    let programs: Vec<_> = [Scenario::xs(), Scenario::xl1(), Scenario::xl2()]
+        .into_iter()
+        .map(|s| {
+            let c = compile_with_meta(LINREG_CG, &linreg_cg_args(7), &s.meta(1000), &opts)
+                .unwrap();
+            let reference = cost::cost_program(&c.runtime, &opts.cfg, &opts.cc.0, &k).total;
+            let hashes = program_hashes(&c.runtime);
+            (c, hashes, reference)
+        })
+        .collect();
+    let cache = CostCache::default();
+    let tasks: Vec<usize> = (0..48).map(|i| i % programs.len()).collect();
+    let totals = par::par_map(&tasks, 16, |_, &p| {
+        let (c, hashes, _) = &programs[p];
+        cost::cost_total_cached(&c.runtime, hashes, &opts.cfg, &opts.cc.0, &k, &cache)
+    });
+    for (i, total) in totals.iter().enumerate() {
+        let reference = programs[tasks[i]].2;
+        assert_eq!(reference.to_bits(), total.to_bits(), "task {i}");
+    }
+    assert!(cache.stats().hits > 0);
+}
+
+/// Property: cached totals equal uncached totals bitwise across random
+/// data sizes and backends.
+#[test]
+fn prop_cached_total_matches_uncached_on_random_scenarios() {
+    forall(
+        12,
+        0xCAC4E,
+        |r| {
+            let rows = r.range_i64(1, 60) * 100_000;
+            let cols = r.range_i64(1, 12) * 100;
+            let backend = ExecBackend::all()[r.below(3) as usize];
+            (rows, cols, backend)
+        },
+        |&(rows, cols, backend)| {
+            let k = CostConstants::default();
+            let opts = CompileOptions { backend, ..Default::default() };
+            let scenario = DataScenario::linreg("R", rows, cols);
+            let c = compile_with_meta(
+                LINREG_DS,
+                &Scenario::xs().args(),
+                &scenario.meta(1000),
+                &opts,
+            )?;
+            let reference = cost::cost_program(&c.runtime, &opts.cfg, &opts.cc.0, &k).total;
+            let hashes = program_hashes(&c.runtime);
+            let cache = CostCache::default();
+            for pass in 0..2 {
+                let total = cost::cost_total_cached(
+                    &c.runtime, &hashes, &opts.cfg, &opts.cc.0, &k, &cache,
+                );
+                if reference.to_bits() != total.to_bits() {
+                    return Err(format!(
+                        "{rows}x{cols} {} pass {pass}: {reference} != {total}",
+                        backend.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The CG backend grid used by the sweep equality tests.
+fn cg_sweep(threads: usize, cost_cache: bool) -> SweepSpec {
+    let mut spec = SweepSpec::linreg_cg(10);
+    spec.clusters = vec![NamedCluster::new(
+        "paper-2048MB",
+        systemds::conf::ClusterConfig::paper_cluster(),
+    )];
+    spec.scenarios = vec![
+        DataScenario::linreg("XS", 10_000, 1_000),
+        DataScenario::linreg("XL1", 100_000_000, 1_000),
+    ];
+    spec.backends = ExecBackend::all().to_vec();
+    spec.threads = threads;
+    spec.cost_cache = cost_cache;
+    spec
+}
+
+#[test]
+fn sweep_identical_with_cache_on_off_and_serial_across_thread_counts() {
+    let reference = sweep_serial(&cg_sweep(1, true)).unwrap();
+    for threads in [1, 4] {
+        for cost_cache in [true, false] {
+            let r = sweep(&cg_sweep(threads, cost_cache)).unwrap();
+            assert_eq!(r.table(), reference.table(), "t={threads} cache={cost_cache}");
+            for (a, b) in r.cells.iter().zip(&reference.cells) {
+                assert_eq!(
+                    a.cost_secs.to_bits(),
+                    b.cost_secs.to_bits(),
+                    "t={threads} cache={cost_cache} {}/{}",
+                    a.scenario,
+                    a.backend
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn resource_grid_identical_with_cache_on_off() {
+    let mk = |cost_cache: bool| {
+        let s = Scenario::xl1();
+        let mut g =
+            ResourceGrid::new(LINREG_CG, linreg_cg_args(10), DataScenario::from(&s));
+        g.threads = 4;
+        g.cost_cache = cost_cache;
+        g
+    };
+    let with = optimize_grid(&mk(true)).unwrap();
+    let without = optimize_grid(&mk(false)).unwrap();
+    assert_eq!(with.frontier_table(), without.frontier_table());
+    assert_eq!(with.best, without.best);
+    for (a, b) in with.points.iter().zip(&without.points) {
+        match (a.cost_secs, b.cost_secs) {
+            (Some(x), Some(y)) => assert_eq!(x.to_bits(), y.to_bits(), "{}", a.label()),
+            (None, None) => {}
+            _ => panic!("pruning diverged with the cache for {}", a.label()),
+        }
+    }
+}
+
+/// The GDF duplicate-skip satellite: partition-axis variants whose
+/// backend assignment removes every MR job compile to identical plans
+/// with identical observable knobs — they must be skipped, reported in
+/// the decision trace, and cost bitwise the same as their twin.
+#[test]
+fn gdf_skips_duplicate_candidates_and_reports_them() {
+    let s = Scenario::xl1();
+    let mut spec = GdfSpec::new(LINREG_CG, linreg_cg_args(5), DataScenario::from(&s));
+    spec.blocksizes = vec![1000];
+    spec.formats = vec![Format::BinaryBlock];
+    spec.partitions_mb = vec![8.0, 32.0];
+    spec.threads = 2;
+    let r = gdf::optimize(&spec).unwrap();
+    assert!(
+        r.skipped_duplicates > 0,
+        "partition axis must produce MR-free duplicate plans: {:#?}",
+        r.candidates.iter().map(|c| c.label()).collect::<Vec<_>>()
+    );
+    assert!(
+        r.decision_table().contains("duplicate candidates skipped"),
+        "{}",
+        r.decision_table()
+    );
+    // every skipped candidate has an earlier twin (same bs/fmt/groups,
+    // different partition) with the bitwise-identical cost
+    for (i, c) in r.candidates.iter().enumerate() {
+        if !c.cost_reused {
+            continue;
+        }
+        let twin = r.candidates[..i].iter().find(|d| {
+            d.blocksize == c.blocksize && d.format == c.format && d.groups == c.groups
+        });
+        let twin = twin.unwrap_or_else(|| panic!("no twin for {}", c.label()));
+        assert_eq!(twin.cost_secs.to_bits(), c.cost_secs.to_bits(), "{}", c.label());
+        assert_eq!(c.mr_jobs, 0, "only MR-free plans can ignore the partition knob");
+    }
+}
+
+#[test]
+fn gdf_identical_with_cache_on_off() {
+    let s = Scenario::xl1();
+    let mk = |cost_cache: bool| {
+        let mut spec = GdfSpec::linreg_cg(DataScenario::from(&s), 10);
+        spec.blocksizes = vec![1000, 2000];
+        spec.formats = vec![Format::BinaryBlock];
+        spec.partitions_mb = vec![32.0];
+        spec.threads = 4;
+        spec.cost_cache = cost_cache;
+        spec
+    };
+    let with = gdf::optimize(&mk(true)).unwrap();
+    let without = gdf::optimize(&mk(false)).unwrap();
+    assert_eq!(with.best, without.best);
+    assert_eq!(with.candidates.len(), without.candidates.len());
+    for (a, b) in with.candidates.iter().zip(&without.candidates) {
+        assert_eq!(a.cost_secs.to_bits(), b.cost_secs.to_bits(), "{}", a.label());
+    }
+    assert_eq!(with.explain_diff(), without.explain_diff());
+    // the cached run actually exercised the cache
+    assert!(with.cache_hits + with.cache_misses > 0);
+    assert_eq!(without.cache_hits + without.cache_misses, 0);
+}
