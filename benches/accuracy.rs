@@ -1,0 +1,167 @@
+//! Bench: cost-model prediction accuracy before/after online calibration
+//! (`repro calibrate`), reported as Q-error (`max(pred/meas, meas/pred)`).
+//!
+//! Modes:
+//!
+//! ```text
+//! cargo bench --bench accuracy                   # simulated + executed
+//! cargo bench --bench accuracy -- --quick        # simulated section only
+//! cargo bench --bench accuracy -- --json [PATH]  # also emit BENCH_ACCURACY.json
+//! ```
+//!
+//! The JSON report (`BENCH_ACCURACY.json` at the repository root by
+//! default) is the accuracy baseline CI tracks: pre/post-calibration
+//! geo-mean and p95 Q-error, the within-2x rate (the paper's §3.4
+//! claim), the fitted corrections, and the re-optimization argmin flip.
+//! The gated numbers come from [`MeasureMode::Simulated`] with a fixed
+//! seed and a pinned 8-slot geometry, so the file is bitwise
+//! machine-independent — CI regenerates it and fails on drift. The
+//! executed (wall-clock) section is informational and never serialized.
+//!
+//! Uses a plain `main` (criterion is unavailable in the hermetic offline
+//! build; see rust/Cargo.toml).
+
+use std::path::{Path, PathBuf};
+
+use systemds::feedback::{calibrate, CalibrateOptions, CalibrationReport, MeasureMode};
+
+/// The gated workload: deterministic simulated measurement over the quick
+/// bundled case set. Identical output on every machine and thread count.
+fn simulated_report() -> CalibrationReport {
+    let opts = CalibrateOptions {
+        seed: 42,
+        quick: true,
+        mode: MeasureMode::Simulated { noise: 0.0 },
+        ..Default::default()
+    };
+    calibrate(&opts).expect("simulated calibration")
+}
+
+fn print_report(r: &CalibrationReport) {
+    println!(
+        "{:<12} {:>4} {:>12} {:>12} {:>9} {:>9}",
+        "class", "n", "geo-q pre", "geo-q post", "<=2x pre", "<=2x post"
+    );
+    for c in &r.per_class {
+        println!(
+            "{:<12} {:>4} {:>12.3} {:>12.3} {:>8.0}% {:>8.0}%",
+            c.class.name(),
+            c.before.n,
+            c.before.geo_mean,
+            c.after.geo_mean,
+            100.0 * c.before.within_2x,
+            100.0 * c.after.within_2x
+        );
+    }
+    println!(
+        "{:<12} {:>4} {:>12.3} {:>12.3} {:>8.0}% {:>8.0}%",
+        "all",
+        r.before.n,
+        r.before.geo_mean,
+        r.after.geo_mean,
+        100.0 * r.before.within_2x,
+        100.0 * r.after.within_2x
+    );
+    println!(
+        "p95: {:.3} -> {:.3}; corrections: compute x{:.4} read x{:.4} write x{:.4} latency x{:.6} distributed x{:.4}",
+        r.before.p95,
+        r.after.p95,
+        r.corrections.compute,
+        r.corrections.read,
+        r.corrections.write,
+        r.corrections.latency,
+        r.corrections.distributed
+    );
+    println!(
+        "re-optimization ({}): argmin {} -> {}{}",
+        r.reopt.scenario,
+        r.reopt.argmin_before.name(),
+        r.reopt.argmin_after.name(),
+        if r.reopt.flipped() { "  (FLIPPED)" } else { "" }
+    );
+}
+
+fn write_json(path: &Path, r: &CalibrationReport) {
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"schema\": \"bench-accuracy/v1\",\n",
+            "  \"generated\": \"cargo bench --bench accuracy -- --json\",\n",
+            "  \"estimated\": false,\n",
+            "  \"seed\": 42,\n",
+            "  \"mode\": \"simulated (deterministic proxy, quick case set, 8-slot geometry)\",\n",
+            "  \"records\": {records},\n",
+            "  \"qerror\": {{\n",
+            "    \"pre\":  {{ \"geo_mean\": {pre_geo:.6}, \"p95\": {pre_p95:.6}, \"within_2x\": {pre_2x:.4} }},\n",
+            "    \"post\": {{ \"geo_mean\": {post_geo:.6}, \"p95\": {post_p95:.6}, \"within_2x\": {post_2x:.4} }}\n",
+            "  }},\n",
+            "  \"corrections\": {{\n",
+            "    \"compute\": {c_comp:.6},\n",
+            "    \"read\": {c_read:.6},\n",
+            "    \"write\": {c_write:.6},\n",
+            "    \"latency\": {c_lat:.8},\n",
+            "    \"distributed\": {c_dist:.6}\n",
+            "  }},\n",
+            "  \"constants\": {{\n",
+            "    \"job_latency_pre\": {jl_pre:.6},\n",
+            "    \"job_latency_post\": {jl_post:.8},\n",
+            "    \"flop_efficiency_post\": {fe_post:.6}\n",
+            "  }},\n",
+            "  \"reopt\": {{\n",
+            "    \"scenario\": \"{scenario}\",\n",
+            "    \"argmin_pre\": \"{argmin_pre}\",\n",
+            "    \"argmin_post\": \"{argmin_post}\",\n",
+            "    \"flipped\": {flipped}\n",
+            "  }}\n",
+            "}}\n",
+        ),
+        records = r.records.len(),
+        pre_geo = r.before.geo_mean,
+        pre_p95 = r.before.p95,
+        pre_2x = r.before.within_2x,
+        post_geo = r.after.geo_mean,
+        post_p95 = r.after.p95,
+        post_2x = r.after.within_2x,
+        c_comp = r.corrections.compute,
+        c_read = r.corrections.read,
+        c_write = r.corrections.write,
+        c_lat = r.corrections.latency,
+        c_dist = r.corrections.distributed,
+        jl_pre = r.initial.job_latency,
+        jl_post = r.calibrated.job_latency,
+        fe_post = r.calibrated.flop_efficiency,
+        scenario = r.reopt.scenario,
+        argmin_pre = r.reopt.argmin_before.name(),
+        argmin_post = r.reopt.argmin_after.name(),
+        flipped = r.reopt.flipped(),
+    );
+    std::fs::write(path, json).expect("write BENCH_ACCURACY.json");
+    println!("wrote {}", path.display());
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args.iter().position(|a| a == "--json").map(|i| {
+        match args.get(i + 1).filter(|p| !p.starts_with("--")) {
+            Some(p) => PathBuf::from(p),
+            None => PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_ACCURACY.json"),
+        }
+    });
+
+    println!("== accuracy: simulated feedback loop (deterministic, gated) ==");
+    let sim = simulated_report();
+    print_report(&sim);
+
+    if !quick {
+        println!("\n== accuracy: executed feedback loop (wall-clock, informational) ==");
+        match calibrate(&CalibrateOptions { quick: true, ..Default::default() }) {
+            Ok(exec) => print_report(&exec),
+            Err(e) => println!("executed section skipped: {e}"),
+        }
+    }
+
+    if let Some(path) = json_path {
+        write_json(&path, &sim);
+    }
+}

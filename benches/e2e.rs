@@ -1,6 +1,6 @@
 //! End-to-end throughput: compile + cost + execute the LinReg pipeline on
 //! real data for both a pure-CP plan and a forced-MR plan — the workload
-//! of examples/cost_accuracy.rs as a repeatable benchmark.
+//! of tests/accuracy.rs as a repeatable benchmark.
 
 use std::collections::HashMap;
 use std::time::Duration;

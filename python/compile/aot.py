@@ -43,7 +43,7 @@ def shape_key(op, *shapes):
 
 
 # Shapes compiled ahead of time. These cover the executable scenarios of
-# examples/cost_accuracy.rs plus the registry smoke test.
+# the accuracy suite (tests/accuracy.rs) plus the registry smoke test.
 TSMM_SHAPES = [(256, 64), (2048, 128), (4096, 256), (8192, 256)]
 MATMULT_SHAPES = [
     ((1, 2048), (2048, 128)),

@@ -19,6 +19,10 @@ use crate::matrix::{Format, MatrixCharacteristics};
 use crate::rtprog::{self, RtProgram};
 
 pub use crate::cost::cache::{CacheStats, CostCache};
+pub use crate::feedback::{
+    BlockClass, BlockRecord, CalibrateOptions, CalibrationReport, Corrections, MeasureMode,
+    QErrorSummary, ReoptReport,
+};
 pub use crate::opt::evaluate::{Candidate, CostContext, Evaluated, Evaluator};
 pub use crate::opt::gdf::{CutDecision, GdfCandidate, GdfReport, GdfSpec};
 pub use crate::opt::resource::{GridPoint, ResourceGrid, ResourceReport};
@@ -57,6 +61,17 @@ pub fn optimize_resources(grid: &ResourceGrid) -> Result<ResourceReport, String>
 /// module for the enumeration and pruning rules.
 pub fn optimize_global_dataflow(spec: &GdfSpec) -> Result<GdfReport, String> {
     crate::opt::gdf::optimize(spec)
+}
+
+/// Run the measured-execution feedback loop: execute the bundled
+/// calibration workloads with per-block instrumentation (or the
+/// deterministic simulated proxy), fit multiplicative corrections to the
+/// cost constants via robust regression, report before/after Q-error per
+/// block class, and re-run the backend-choice optimization under the
+/// calibrated constants. Thin wrapper around
+/// [`crate::feedback::calibrate`]; see that module for the pipeline.
+pub fn calibrate(opts: &CalibrateOptions) -> Result<CalibrationReport, String> {
+    crate::feedback::calibrate(opts)
 }
 
 /// Compilation options: system config + cluster characteristics + hints +

@@ -344,6 +344,12 @@ pub struct CostConstants {
     /// ~size/bw once — unlike the MR distributed cache, which every map
     /// task re-reads.
     pub spark_broadcast_bw: f64,
+    /// Dimensionless per-op FLOP efficiency: every compute term divides by
+    /// `clock_hz * flop_efficiency`. Default 1.0 (the paper folds kernel
+    /// efficiency into its 2.15 GHz effective clock); online calibration
+    /// ([`crate::feedback`]) fits this from measured-vs-predicted block
+    /// times instead of mutating the cluster's clock rate.
+    pub flop_efficiency: f64,
 }
 
 impl Default for CostConstants {
@@ -368,6 +374,7 @@ impl Default for CostConstants {
             spark_shuffle_write: 200.0 * MB,
             spark_shuffle_read: 150.0 * MB,
             spark_broadcast_bw: 300.0 * MB,
+            flop_efficiency: 1.0,
         }
     }
 }
@@ -399,6 +406,7 @@ impl CostConstants {
         bw("spark_shuffle_read", self.spark_shuffle_read)?;
         bw("spark_broadcast_bw", self.spark_broadcast_bw)?;
         bw("dop_scale", self.dop_scale)?;
+        bw("flop_efficiency", self.flop_efficiency)?;
         let lat = |name: &str, v: f64| {
             if v.is_finite() && v >= 0.0 {
                 Ok(())

@@ -216,6 +216,15 @@ impl ProgramHashes {
     pub(crate) fn feats(&self) -> u8 {
         self.feats
     }
+
+    /// `(h1, h2)` structural fingerprints of the top-level blocks, aligned
+    /// one-to-one with the program's `blocks` (and therefore with the
+    /// per-block [`crate::cost::CostReport`] nodes). This is the key space
+    /// [`crate::feedback`] uses to join per-block cost predictions with
+    /// measured execution times.
+    pub fn block_roots(&self) -> Vec<(u64, u64)> {
+        self.blocks.iter().map(|b| (b.h1, b.h2)).collect()
+    }
 }
 
 /// Compute the structural hash tree of a runtime program. Call once per
@@ -273,8 +282,12 @@ pub(crate) fn hash_knobs<H: Hasher>(
     fn f64b<H: Hasher>(h: &mut H, v: f64) {
         h.write_u64(v.to_bits());
     }
-    // base group: every instruction path
+    // base group: every instruction path. Every CostConstants field the
+    // cost arithmetic can read must appear in some group — online
+    // calibration (`crate::feedback`) rewrites constants in place, and a
+    // missing field here would turn cached block costs stale.
     f64b(h, cc.clock_hz);
+    f64b(h, k.flop_efficiency);
     f64b(h, k.mem_bw);
     f64b(h, k.bookkeeping);
     f64b(h, cfg.sparse_threshold);
@@ -282,6 +295,8 @@ pub(crate) fn hash_knobs<H: Hasher>(
     f64b(h, k.hdfs_read_text);
     f64b(h, k.hdfs_write_binaryblock);
     f64b(h, k.hdfs_write_text);
+    f64b(h, k.local_read);
+    f64b(h, k.local_write);
     if feats & F_UNKNOWN_ITERS != 0 {
         f64b(h, cfg.unknown_iterations);
     }
@@ -642,6 +657,28 @@ mod tests {
             hash_context(F_SPARK, &cfg, &cc1, &k),
             hash_context(F_SPARK, &cfg, &cc4, &k)
         );
+    }
+
+    /// Every constant online calibration can rewrite must be observable in
+    /// the base knob group, whatever the feature flags — otherwise a
+    /// calibrated `CostConstants` replays stale cached block costs.
+    #[test]
+    fn calibrated_constants_always_fingerprint() {
+        let cfg = SystemConfig::default();
+        let cc = ClusterConfig::paper_cluster();
+        let k1 = CostConstants::default();
+        for feats in [0u8, F_PARFOR, F_MR, F_SPARK, F_MR | F_SPARK] {
+            let base = hash_context(feats, &cfg, &cc, &k1);
+            let mut k2 = k1.clone();
+            k2.flop_efficiency = 2.0;
+            assert_ne!(base, hash_context(feats, &cfg, &cc, &k2), "flop_efficiency, feats={feats}");
+            let mut k3 = k1.clone();
+            k3.local_read *= 2.0;
+            assert_ne!(base, hash_context(feats, &cfg, &cc, &k3), "local_read, feats={feats}");
+            let mut k4 = k1.clone();
+            k4.local_write *= 2.0;
+            assert_ne!(base, hash_context(feats, &cfg, &cc, &k4), "local_write, feats={feats}");
+        }
     }
 
     #[test]

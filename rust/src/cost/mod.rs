@@ -37,6 +37,11 @@ use vars::{DataState, VarTracker};
 pub struct InstCost {
     /// IO seconds: HDFS reads of cold inputs plus persistent writes.
     pub io: f64,
+    /// Portion of `io` that is persistent-write time (`io - io_write` is
+    /// read time). MR/Spark jobs carry their own read/write split in the
+    /// per-job breakdown instead. Used by [`crate::feedback`] to attribute
+    /// block cost to the read vs write bandwidth constants.
+    pub io_write: f64,
     /// Compute seconds: `max(FLOPs/clock, bytes/mem_bw)` (§3.3).
     pub compute: f64,
     /// MR jobs carry a full breakdown instead.
@@ -555,16 +560,18 @@ impl<'a> Estimator<'a> {
             .map(|m| m.mem_estimate(self.cfg.sparse_threshold))
             .filter(|m| m.is_finite())
             .sum();
-        let compute = (flops / self.cc.clock_hz).max(mem_bytes / self.k.mem_bw);
+        let compute = (flops / (self.cc.clock_hz * self.k.flop_efficiency))
+            .max(mem_bytes / self.k.mem_bw);
 
         // Output IO: persistent writes / partition copies.
+        let mut io_write = 0.0;
         match &c.op {
             CpOp::Write { format, .. } => {
-                io += self.write_time(&a, *format);
+                io_write += self.write_time(&a, *format);
             }
             CpOp::Partition => {
                 // writes the partitioned copy back to HDFS
-                io += self.write_time(&a, Format::BinaryBlock);
+                io_write += self.write_time(&a, Format::BinaryBlock);
                 if let Operand::Mat(out) = &c.output {
                     t.set_hdfs(out);
                 }
@@ -577,7 +584,7 @@ impl<'a> Estimator<'a> {
                 t.touch_mem(out);
             }
         }
-        InstCost { io, compute, ..InstCost::default() }
+        InstCost { io: io + io_write, io_write, compute, ..InstCost::default() }
     }
 
     fn read_time(&self, mc: &MatrixCharacteristics, format: Format) -> f64 {

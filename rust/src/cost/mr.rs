@@ -158,7 +158,7 @@ pub fn cost_mr_job(
     // ---- map compute
     let inst_mc = resolve_mcs(&input_mc, j.all_insts());
     for inst in j.map_insts.iter().chain(&j.shuffle_insts) {
-        c.map_exec += inst_flops(inst, &inst_mc) / cc.clock_hz / k_map_eff;
+        c.map_exec += inst_flops(inst, &inst_mc) / (cc.clock_hz * k.flop_efficiency) / k_map_eff;
     }
 
     // ---- shuffle: map write + transfer + reduce merge (3 passes, §3.4)
@@ -221,7 +221,7 @@ pub fn cost_mr_job(
         } else {
             c.n_map as f64
         };
-        c.red_exec += flops::agg_kahan(n_partials, &partial) / cc.clock_hz / k_red_eff;
+        c.red_exec += flops::agg_kahan(n_partials, &partial) / (cc.clock_hz * k.flop_efficiency) / k_red_eff;
     }
     for sh in &j.shuffle_insts {
         // cpmm multiply happens reduce-side
@@ -230,11 +230,11 @@ pub fn cost_mr_job(
             .get(sh.inputs.get(1).unwrap_or(&usize::MAX))
             .copied()
             .unwrap_or_else(MatrixCharacteristics::unknown);
-        c.red_exec += flops::matmult(&a, &b) / cc.clock_hz / k_red_eff;
+        c.red_exec += flops::matmult(&a, &b) / (cc.clock_hz * k.flop_efficiency) / k_red_eff;
     }
     for ot in &j.other_insts {
         let a = inst_mc.get(&ot.output).copied().unwrap_or_else(MatrixCharacteristics::unknown);
-        c.red_exec += a.cells().unwrap_or(0.0) / cc.clock_hz / k_red_eff;
+        c.red_exec += a.cells().unwrap_or(0.0) / (cc.clock_hz * k.flop_efficiency) / k_red_eff;
     }
 
     // ---- HDFS write of outputs

@@ -201,7 +201,7 @@ pub fn cost_spark_job(
                         }
                         c.n_tasks as f64
                     };
-                    c.exec += flops::agg_kahan(n_partials, &partial) / cc.clock_hz / k_wide;
+                    c.exec += flops::agg_kahan(n_partials, &partial) / (cc.clock_hz * k.flop_efficiency) / k_wide;
                 }
                 MrOp::Cpmm | MrOp::Rmm => {
                     // shuffle join: both sides repartition by the
@@ -226,7 +226,7 @@ pub fn cost_spark_job(
                             }
                         }
                     }
-                    c.exec += flops::matmult(&a, &b) / cc.clock_hz / k_wide;
+                    c.exec += flops::matmult(&a, &b) / (cc.clock_hz * k.flop_efficiency) / k_wide;
                 }
                 MrOp::Binary(_) if stage.wide => {
                     // reduce-side elementwise join: both inputs
@@ -239,10 +239,10 @@ pub fn cost_spark_job(
                             }
                         }
                     }
-                    c.exec += inst_flops(inst, &inst_mc) / cc.clock_hz / k_wide;
+                    c.exec += inst_flops(inst, &inst_mc) / (cc.clock_hz * k.flop_efficiency) / k_wide;
                 }
                 _ => {
-                    c.exec += inst_flops(inst, &inst_mc) / cc.clock_hz / k_eff;
+                    c.exec += inst_flops(inst, &inst_mc) / (cc.clock_hz * k.flop_efficiency) / k_eff;
                 }
             }
         }

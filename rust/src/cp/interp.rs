@@ -76,6 +76,26 @@ impl<'a> Executor<'a> {
         Ok(self.stats.clone())
     }
 
+    /// Execute a whole runtime program like [`Executor::run`], additionally
+    /// timing each top-level block: the returned vector is aligned
+    /// one-to-one with `rt.blocks` (and therefore with the per-block
+    /// [`crate::cost::CostReport`] nodes and the structural block hashes of
+    /// [`crate::cost::cache::program_hashes`]). This is the measurement
+    /// feed for the `crate::feedback` calibration loop.
+    pub fn run_instrumented(&mut self, rt: &RtProgram) -> Result<(ExecStats, Vec<f64>)> {
+        self.funcs = rt.funcs.clone();
+        let t0 = Instant::now();
+        let mut block_secs = Vec::with_capacity(rt.blocks.len());
+        for b in &rt.blocks {
+            let tb = Instant::now();
+            self.exec_block(b)?;
+            block_secs.push(tb.elapsed().as_secs_f64());
+        }
+        self.stats.elapsed_secs = t0.elapsed().as_secs_f64();
+        self.stats.pool_evictions = self.pool.evictions;
+        Ok((self.stats.clone(), block_secs))
+    }
+
     fn exec_blocks(&mut self, blocks: &[RtBlock]) -> Result<()> {
         for b in blocks {
             self.exec_block(b)?;

@@ -1,0 +1,96 @@
+//! Q-error: the standard multiplicative prediction-error metric for cost
+//! models (`max(pred/actual, actual/pred)`, always ≥ 1). The paper's §3.4
+//! accuracy claim — "estimated costs were within 2x of the actual
+//! execution time" — is a within-2x-rate statement in this metric.
+
+/// Multiplicative prediction error `max(pred/meas, meas/pred)` (≥ 1, with
+/// 1 meaning a perfect prediction). Non-positive or non-finite inputs
+/// yield `+inf`: a cost model that predicts 0 or NaN seconds for work
+/// that took measurable time is maximally wrong, not "close".
+pub fn qerror(predicted_secs: f64, measured_secs: f64) -> f64 {
+    // NaN inputs fail the finiteness checks, so `<= 0.0` (false for NaN)
+    // is safe here.
+    if predicted_secs <= 0.0
+        || measured_secs <= 0.0
+        || !predicted_secs.is_finite()
+        || !measured_secs.is_finite()
+    {
+        return f64::INFINITY;
+    }
+    (predicted_secs / measured_secs).max(measured_secs / predicted_secs)
+}
+
+/// Aggregate Q-error statistics over a set of per-block records.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QErrorSummary {
+    /// Number of records summarised.
+    pub n: usize,
+    /// Geometric mean of the Q-errors (`exp(mean(ln q))`) — the standard
+    /// headline figure; robust to the metric's multiplicative scale.
+    pub geo_mean: f64,
+    /// 95th-percentile Q-error (nearest-rank).
+    pub p95: f64,
+    /// Fraction of records with Q-error ≤ 2 (the paper's §3.4 claim).
+    pub within_2x: f64,
+}
+
+impl QErrorSummary {
+    /// Summary of an empty record set: `n = 0`, NaN aggregates.
+    pub fn empty() -> Self {
+        QErrorSummary { n: 0, geo_mean: f64::NAN, p95: f64::NAN, within_2x: 0.0 }
+    }
+}
+
+/// Summarise a set of Q-errors (see [`qerror`]). Infinite Q-errors are
+/// counted (they push the geometric mean to `inf`) rather than dropped —
+/// hiding catastrophic mispredictions would defeat the gate.
+pub fn summarize(qs: &[f64]) -> QErrorSummary {
+    if qs.is_empty() {
+        return QErrorSummary::empty();
+    }
+    let n = qs.len();
+    let mean_log = qs.iter().map(|q| q.ln()).sum::<f64>() / n as f64;
+    let mut sorted: Vec<f64> = qs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = ((0.95 * n as f64).ceil() as usize).clamp(1, n);
+    let within = qs.iter().filter(|q| **q <= 2.0).count() as f64 / n as f64;
+    QErrorSummary { n, geo_mean: mean_log.exp(), p95: sorted[rank - 1], within_2x: within }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qerror_symmetric_and_floored_at_one() {
+        assert_eq!(qerror(2.0, 1.0), 2.0);
+        assert_eq!(qerror(1.0, 2.0), 2.0);
+        assert_eq!(qerror(3.0, 3.0), 1.0);
+    }
+
+    #[test]
+    fn qerror_degenerate_inputs_are_infinite() {
+        assert_eq!(qerror(0.0, 1.0), f64::INFINITY);
+        assert_eq!(qerror(1.0, 0.0), f64::INFINITY);
+        assert_eq!(qerror(-1.0, 1.0), f64::INFINITY);
+        assert_eq!(qerror(f64::NAN, 1.0), f64::INFINITY);
+        assert_eq!(qerror(1.0, f64::INFINITY), f64::INFINITY);
+    }
+
+    #[test]
+    fn summary_of_known_set() {
+        let s = summarize(&[1.0, 2.0, 4.0, 8.0]);
+        assert_eq!(s.n, 4);
+        // geo-mean of 1,2,4,8 = (64)^(1/4) = 2sqrt(2)
+        assert!((s.geo_mean - 8.0f64.sqrt() * 1.0).abs() < 1e-12 || (s.geo_mean - 2.0 * 2.0f64.sqrt()).abs() < 1e-12);
+        assert_eq!(s.p95, 8.0);
+        assert_eq!(s.within_2x, 0.5);
+    }
+
+    #[test]
+    fn empty_summary() {
+        let s = summarize(&[]);
+        assert_eq!(s.n, 0);
+        assert!(s.geo_mean.is_nan());
+    }
+}

@@ -1,0 +1,272 @@
+//! Per-block `(predicted_cost, measured_time)` records: the join of the
+//! cost model's per-block report with instrumented execution times, keyed
+//! by the structural block hashes of [`crate::cost::cache`].
+//!
+//! Each record also carries a *breakdown* of the predicted seconds by
+//! correctable constant group (compute / read / write / latency /
+//! distributed-shuffle), extracted from the [`CostNode`] annotation tree.
+//! The robust regression in [`super::regression`] fits one multiplicative
+//! correction per group, attributing each block to the group that
+//! dominates its prediction.
+
+use crate::cost::cache::ProgramHashes;
+use crate::cost::{CostNode, CostReport, InstCost};
+
+use super::qerror::qerror;
+
+/// The cost-model component group a block's predicted cost is dominated
+/// by — each group maps onto a disjoint set of [`crate::conf::CostConstants`]
+/// fields that a multiplicative correction rescales linearly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BlockClass {
+    /// FLOP/memory-bound compute (`flop_efficiency`, `mem_bw`,
+    /// `bookkeeping`; includes MR map/reduce and Spark stage exec).
+    Compute,
+    /// Read IO: HDFS/dcache/broadcast reads (`hdfs_read_*`, `dcache_read`,
+    /// `local_read`, `spark_broadcast_bw`).
+    Read,
+    /// Write IO: persistent writes and in-memory exports (`hdfs_write_*`,
+    /// `local_write`).
+    Write,
+    /// Job/stage/task startup latency (`job_latency`, `task_latency`,
+    /// `spark_*_latency`).
+    Latency,
+    /// Distributed shuffle (`shuffle_bw`, `spark_shuffle_*`).
+    Distributed,
+}
+
+impl BlockClass {
+    /// Every class, in the order used for deterministic tie-breaking.
+    pub const ALL: [BlockClass; 5] = [
+        BlockClass::Compute,
+        BlockClass::Read,
+        BlockClass::Write,
+        BlockClass::Latency,
+        BlockClass::Distributed,
+    ];
+
+    /// Lower-case display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BlockClass::Compute => "compute",
+            BlockClass::Read => "read",
+            BlockClass::Write => "write",
+            BlockClass::Latency => "latency",
+            BlockClass::Distributed => "distributed",
+        }
+    }
+}
+
+/// Predicted seconds of one block split by constant group (sums to the
+/// block's Eq.-1 weighted total).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostBreakdown {
+    /// Compute seconds (CP compute, MR map/reduce exec, Spark stage exec).
+    pub compute: f64,
+    /// Read-IO seconds.
+    pub read: f64,
+    /// Write-IO seconds.
+    pub write: f64,
+    /// Startup-latency seconds.
+    pub latency: f64,
+    /// Shuffle seconds.
+    pub distributed: f64,
+}
+
+impl CostBreakdown {
+    /// Sum of all components.
+    pub fn total(&self) -> f64 {
+        self.compute + self.read + self.write + self.latency + self.distributed
+    }
+
+    /// Component seconds for `class`.
+    pub fn get(&self, class: BlockClass) -> f64 {
+        match class {
+            BlockClass::Compute => self.compute,
+            BlockClass::Read => self.read,
+            BlockClass::Write => self.write,
+            BlockClass::Latency => self.latency,
+            BlockClass::Distributed => self.distributed,
+        }
+    }
+
+    /// Mutable component for `class`.
+    pub fn get_mut(&mut self, class: BlockClass) -> &mut f64 {
+        match class {
+            BlockClass::Compute => &mut self.compute,
+            BlockClass::Read => &mut self.read,
+            BlockClass::Write => &mut self.write,
+            BlockClass::Latency => &mut self.latency,
+            BlockClass::Distributed => &mut self.distributed,
+        }
+    }
+
+    /// The class with the largest share (ties break in [`BlockClass::ALL`]
+    /// order, so the result is deterministic).
+    pub fn dominant(&self) -> BlockClass {
+        let mut best = BlockClass::Compute;
+        let mut best_v = f64::NEG_INFINITY;
+        for c in BlockClass::ALL {
+            let v = self.get(c);
+            if v > best_v {
+                best_v = v;
+                best = c;
+            }
+        }
+        best
+    }
+}
+
+/// One calibration record: top-level block `i` of a measured program run.
+#[derive(Clone, Debug)]
+pub struct BlockRecord {
+    /// 128-bit structural hash of the block
+    /// ([`ProgramHashes::block_roots`]) — stable across reruns and across
+    /// structurally identical plans.
+    pub hash: (u64, u64),
+    /// Display label of the block (e.g. `GENERIC (lines 1-3)`).
+    pub label: String,
+    /// `C(block, cc)` — the cost model's Eq.-1 weighted prediction.
+    pub predicted_secs: f64,
+    /// Wall-clock (or deterministic-proxy) seconds the block actually took.
+    pub measured_secs: f64,
+    /// Predicted seconds split by constant group; sums to
+    /// `predicted_secs`.
+    pub breakdown: CostBreakdown,
+}
+
+impl BlockRecord {
+    /// The constant group dominating this block's prediction.
+    pub fn class(&self) -> BlockClass {
+        self.breakdown.dominant()
+    }
+
+    /// Q-error of the prediction (see [`super::qerror::qerror`]).
+    pub fn qerror(&self) -> f64 {
+        qerror(self.predicted_secs, self.measured_secs)
+    }
+
+    /// Share of the prediction attributed to `class` (0 when the
+    /// prediction is zero).
+    pub fn dominance(&self, class: BlockClass) -> f64 {
+        let t = self.breakdown.total();
+        if t > 0.0 {
+            self.breakdown.get(class) / t
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Join a per-block cost report with per-block measured times into
+/// calibration records. `report` must come from an annotating costing
+/// ([`crate::cost::cost_program`]) of the same program `hashes` was
+/// computed from, and `block_secs` must be the aligned per-top-level-block
+/// timings of [`crate::cp::interp::Executor::run_instrumented`] — all
+/// three vectors are in program order, one entry per top-level block.
+pub fn collect_records(
+    report: &CostReport,
+    hashes: &ProgramHashes,
+    block_secs: &[f64],
+) -> Vec<BlockRecord> {
+    let roots = hashes.block_roots();
+    debug_assert_eq!(report.nodes.len(), roots.len());
+    debug_assert_eq!(report.nodes.len(), block_secs.len());
+    report
+        .nodes
+        .iter()
+        .zip(roots)
+        .zip(block_secs)
+        .map(|((node, hash), &measured)| {
+            let label = match node {
+                CostNode::Block { label, .. } => label.clone(),
+                CostNode::Inst { rendered, .. } => rendered.clone(),
+            };
+            BlockRecord {
+                hash,
+                label,
+                predicted_secs: node.total(),
+                measured_secs: measured,
+                breakdown: breakdown_of(node),
+            }
+        })
+        .collect()
+}
+
+/// Extract the per-group breakdown of a block's predicted cost from its
+/// annotation subtree, rescaled so the components sum to the block's
+/// Eq.-1 weighted total (loop bodies are annotated once but weighted by
+/// their trip count in the block total).
+fn breakdown_of(node: &CostNode) -> CostBreakdown {
+    let mut b = CostBreakdown::default();
+    accumulate(node, &mut b);
+    let raw = b.total();
+    let total = node.total();
+    if raw > 0.0 && total.is_finite() {
+        let s = total / raw;
+        for c in BlockClass::ALL {
+            *b.get_mut(c) *= s;
+        }
+        b
+    } else {
+        // no leaf annotations (or a zero-cost subtree): attribute the
+        // whole weighted total to compute
+        CostBreakdown { compute: total, ..CostBreakdown::default() }
+    }
+}
+
+fn accumulate(node: &CostNode, b: &mut CostBreakdown) {
+    match node {
+        CostNode::Block { children, .. } => {
+            for c in children {
+                accumulate(c, b);
+            }
+        }
+        CostNode::Inst { cost, .. } => add_inst(cost, b),
+    }
+}
+
+fn add_inst(c: &InstCost, b: &mut CostBreakdown) {
+    if let Some(m) = &c.mr {
+        b.latency += m.latency;
+        b.read += m.hdfs_read + m.dcache_read;
+        b.write += m.export + m.hdfs_write;
+        b.compute += m.map_exec + m.red_exec;
+        b.distributed += m.shuffle;
+    } else if let Some(s) = &c.spark {
+        b.latency += s.latency;
+        b.read += s.hdfs_read + s.broadcast;
+        b.write += s.export + s.hdfs_write;
+        b.compute += s.exec;
+        b.distributed += s.shuffle;
+    } else {
+        b.compute += c.compute;
+        b.write += c.io_write;
+        b.read += c.io - c.io_write;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominant_breaks_ties_deterministically() {
+        let b = CostBreakdown { compute: 1.0, read: 1.0, ..Default::default() };
+        assert_eq!(b.dominant(), BlockClass::Compute);
+        let b = CostBreakdown { read: 2.0, write: 1.0, ..Default::default() };
+        assert_eq!(b.dominant(), BlockClass::Read);
+    }
+
+    #[test]
+    fn cp_inst_splits_read_write() {
+        let mut b = CostBreakdown::default();
+        add_inst(
+            &InstCost { io: 3.0, io_write: 1.0, compute: 2.0, ..Default::default() },
+            &mut b,
+        );
+        assert_eq!(b.read, 2.0);
+        assert_eq!(b.write, 1.0);
+        assert_eq!(b.compute, 2.0);
+    }
+}

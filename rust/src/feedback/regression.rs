@@ -1,0 +1,344 @@
+//! Robust multiplicative regression from per-block records onto
+//! [`CostConstants`] corrections (the "retrofitting" estimator).
+//!
+//! For every constant group ([`BlockClass`]) the estimator takes the
+//! blocks *dominated* by that group (≥ 50 % of the predicted seconds),
+//! computes their log-ratios `ln(measured/predicted)`, rejects outliers
+//! beyond 3 MADs of the median (a Theil–Sen-flavoured median estimator:
+//! resistant to a constant fraction of corrupted measurements — GC
+//! pauses, cold caches), and fits the group's time-scale correction as
+//! `exp(median(kept))`. The median of log-ratios minimises the mean
+//! absolute log error, i.e. the geometric-mean Q-error, over a
+//! single-scale family.
+//!
+//! The fit is *safeguarded*: the per-group corrections compete against a
+//! single global scale and against the identity, and whichever minimises
+//! the geometric-mean Q-error on the records wins — so applying a fit can
+//! never make the geo-mean Q-error on its own records worse. The whole
+//! estimator is a pure, sequential function of the record list (plus a
+//! seed used only to subsample oversized record sets), hence
+//! bitwise-deterministic regardless of how many threads produced the
+//! records.
+
+use crate::conf::CostConstants;
+use crate::util::rng::Rng;
+
+use super::records::{BlockClass, BlockRecord};
+
+/// Per-group multiplicative *time* corrections: a scale `s` for group `g`
+/// means "the measured time of g-dominated blocks is `s ×` the predicted
+/// time", and [`Corrections::apply`] rescales the group's constants so
+/// predictions grow by exactly `s`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Corrections {
+    /// Compute-time scale (applied to `flop_efficiency`, `mem_bw`,
+    /// `bookkeeping`).
+    pub compute: f64,
+    /// Read-IO scale (applied to `hdfs_read_*`, `dcache_read`,
+    /// `local_read`, `spark_broadcast_bw`).
+    pub read: f64,
+    /// Write-IO scale (applied to `hdfs_write_*`, `local_write`).
+    pub write: f64,
+    /// Latency scale (applied to `job_latency`, `task_latency`,
+    /// `spark_*_latency`).
+    pub latency: f64,
+    /// Shuffle scale (applied to `shuffle_bw`, `spark_shuffle_*`).
+    pub distributed: f64,
+}
+
+/// Fitted scales are clamped into `[MIN_SCALE, MAX_SCALE]` so applying
+/// them can never produce zero, negative or non-finite constants.
+pub const MIN_SCALE: f64 = 1e-6;
+/// Upper clamp for fitted scales (see [`MIN_SCALE`]).
+pub const MAX_SCALE: f64 = 1e6;
+
+/// Dominance threshold: a block votes on a group's correction only when
+/// the group carries at least this share of the block's prediction.
+const DOMINANCE: f64 = 0.5;
+
+/// Cap on the number of records the estimator fits on; larger sets are
+/// subsampled deterministically with the caller's seed.
+const MAX_FIT_RECORDS: usize = 4096;
+
+impl Corrections {
+    /// The no-op correction (all scales 1).
+    pub fn identity() -> Self {
+        Corrections { compute: 1.0, read: 1.0, write: 1.0, latency: 1.0, distributed: 1.0 }
+    }
+
+    /// True when every scale is exactly 1.
+    pub fn is_identity(&self) -> bool {
+        *self == Corrections::identity()
+    }
+
+    /// Scale for `class`.
+    pub fn get(&self, class: BlockClass) -> f64 {
+        match class {
+            BlockClass::Compute => self.compute,
+            BlockClass::Read => self.read,
+            BlockClass::Write => self.write,
+            BlockClass::Latency => self.latency,
+            BlockClass::Distributed => self.distributed,
+        }
+    }
+
+    fn set(&mut self, class: BlockClass, v: f64) {
+        match class {
+            BlockClass::Compute => self.compute = v,
+            BlockClass::Read => self.read = v,
+            BlockClass::Write => self.write = v,
+            BlockClass::Latency => self.latency = v,
+            BlockClass::Distributed => self.distributed = v,
+        }
+    }
+
+    /// Rescale `k` so each group's predicted time grows by the group's
+    /// scale: bandwidths and efficiencies divide by it, latencies multiply
+    /// by it. Scales are clamped (see [`MIN_SCALE`]) so the result always
+    /// passes [`CostConstants::validate`] when `k` does.
+    pub fn apply(&self, k: &CostConstants) -> CostConstants {
+        let s = |v: f64| v.clamp(MIN_SCALE, MAX_SCALE);
+        let (compute, read, write, latency, distributed) =
+            (s(self.compute), s(self.read), s(self.write), s(self.latency), s(self.distributed));
+        let mut out = k.clone();
+        // compute: time ∝ 1/(clock·eff) and 1/mem_bw; bookkeeping is a
+        // flat per-inst compute charge
+        out.flop_efficiency = k.flop_efficiency / compute;
+        out.mem_bw = k.mem_bw / compute;
+        out.bookkeeping = k.bookkeeping * compute;
+        // read-IO bandwidths
+        out.hdfs_read_binaryblock = k.hdfs_read_binaryblock / read;
+        out.hdfs_read_text = k.hdfs_read_text / read;
+        out.dcache_read = k.dcache_read / read;
+        out.local_read = k.local_read / read;
+        out.spark_broadcast_bw = k.spark_broadcast_bw / read;
+        // write-IO bandwidths
+        out.hdfs_write_binaryblock = k.hdfs_write_binaryblock / write;
+        out.hdfs_write_text = k.hdfs_write_text / write;
+        out.local_write = k.local_write / write;
+        // latencies
+        out.job_latency = k.job_latency * latency;
+        out.task_latency = k.task_latency * latency;
+        out.spark_job_latency = k.spark_job_latency * latency;
+        out.spark_stage_latency = k.spark_stage_latency * latency;
+        out.spark_task_latency = k.spark_task_latency * latency;
+        // shuffle bandwidths
+        out.shuffle_bw = k.shuffle_bw / distributed;
+        out.spark_shuffle_write = k.spark_shuffle_write / distributed;
+        out.spark_shuffle_read = k.spark_shuffle_read / distributed;
+        out
+    }
+}
+
+/// Fit corrections from records (see the module docs for the estimator).
+/// Deterministic given `records` and `seed`; returns the identity when no
+/// record has positive finite predicted and measured seconds.
+pub fn fit(records: &[BlockRecord], seed: u64) -> Corrections {
+    let mut usable: Vec<&BlockRecord> = records
+        .iter()
+        .filter(|r| {
+            r.predicted_secs > 0.0
+                && r.predicted_secs.is_finite()
+                && r.measured_secs > 0.0
+                && r.measured_secs.is_finite()
+        })
+        .collect();
+    if usable.is_empty() {
+        return Corrections::identity();
+    }
+    if usable.len() > MAX_FIT_RECORDS {
+        usable = subsample(usable, MAX_FIT_RECORDS, seed);
+    }
+
+    // per-group medians over dominated blocks, outliers rejected
+    let mut grouped = Corrections::identity();
+    for class in BlockClass::ALL {
+        let logs: Vec<f64> = usable
+            .iter()
+            .filter(|r| r.dominance(class) >= DOMINANCE)
+            .map(|r| (r.measured_secs / r.predicted_secs).ln())
+            .collect();
+        if logs.is_empty() {
+            continue;
+        }
+        let kept = reject_outliers(&logs);
+        grouped.set(class, median(&kept).exp().clamp(MIN_SCALE, MAX_SCALE));
+    }
+
+    // single global scale: the exact geo-mean-Q-error minimiser over the
+    // one-parameter family
+    let all_logs: Vec<f64> = usable
+        .iter()
+        .map(|r| (r.measured_secs / r.predicted_secs).ln())
+        .collect();
+    let g = median(&all_logs).exp().clamp(MIN_SCALE, MAX_SCALE);
+    let global = Corrections { compute: g, read: g, write: g, latency: g, distributed: g };
+
+    // safeguarded selection: never worse than doing nothing. A candidate
+    // must improve by a relative margin so that floating-point noise from
+    // ln/exp round-trips cannot displace the identity — this is what makes
+    // a second fit on already-corrected records an exact fixpoint.
+    let improves = |q: f64, best: f64| q < best * (1.0 - 1e-9);
+    let mut best = (geo_mean_q(&usable, &Corrections::identity()), Corrections::identity());
+    let qg = geo_mean_q(&usable, &global);
+    if improves(qg, best.0) {
+        best = (qg, global);
+    }
+    let qc = geo_mean_q(&usable, &grouped);
+    if improves(qc, best.0) {
+        best = (qc, grouped);
+    }
+    best.1
+}
+
+/// Re-derive each record's prediction under `corrections` by scaling its
+/// breakdown per group (measured seconds are unchanged). For blocks whose
+/// cost is linear in the corrected constants — which holds for every
+/// group by construction of [`Corrections::apply`] — this matches
+/// re-costing the program with the corrected constants.
+pub fn repredict(records: &[BlockRecord], corrections: &Corrections) -> Vec<BlockRecord> {
+    records
+        .iter()
+        .map(|r| {
+            let mut b = r.breakdown;
+            for c in BlockClass::ALL {
+                *b.get_mut(c) *= corrections.get(c);
+            }
+            BlockRecord { predicted_secs: b.total(), breakdown: b, ..r.clone() }
+        })
+        .collect()
+}
+
+/// Geometric-mean Q-error of `records` under `corrections` (via the same
+/// per-group linear scaling as [`repredict`]).
+fn geo_mean_q(records: &[&BlockRecord], corrections: &Corrections) -> f64 {
+    let mut sum = 0.0;
+    for r in records {
+        let pred: f64 = BlockClass::ALL
+            .iter()
+            .map(|&c| r.breakdown.get(c) * corrections.get(c))
+            .sum();
+        sum += super::qerror::qerror(pred, r.measured_secs).ln();
+    }
+    (sum / records.len() as f64).exp()
+}
+
+/// Median of a non-empty slice (midpoint of the two central elements for
+/// even lengths).
+fn median(xs: &[f64]) -> f64 {
+    debug_assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Keep values within 3 median-absolute-deviations of the median (plus a
+/// tiny epsilon so an all-equal set keeps everything).
+fn reject_outliers(xs: &[f64]) -> Vec<f64> {
+    let m = median(xs);
+    let devs: Vec<f64> = xs.iter().map(|x| (x - m).abs()).collect();
+    let mad = median(&devs);
+    let tol = 3.0 * mad + 1e-9;
+    let kept: Vec<f64> = xs.iter().copied().filter(|x| (x - m).abs() <= tol).collect();
+    if kept.is_empty() {
+        xs.to_vec()
+    } else {
+        kept
+    }
+}
+
+/// Deterministic subsample of `n` records (partial Fisher–Yates on the
+/// index vector, then restored to record order).
+fn subsample<'a>(records: Vec<&'a BlockRecord>, n: usize, seed: u64) -> Vec<&'a BlockRecord> {
+    let mut rng = Rng::new(seed);
+    let mut idx: Vec<usize> = (0..records.len()).collect();
+    for i in 0..n {
+        let j = i + rng.below((idx.len() - i) as u64) as usize;
+        idx.swap(i, j);
+    }
+    let mut take: Vec<usize> = idx[..n].to_vec();
+    take.sort_unstable();
+    take.into_iter().map(|i| records[i]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::records::CostBreakdown;
+    use super::*;
+
+    fn rec(class: BlockClass, predicted: f64, measured: f64) -> BlockRecord {
+        let mut b = CostBreakdown::default();
+        *b.get_mut(class) = predicted;
+        BlockRecord {
+            hash: (0, 0),
+            label: String::new(),
+            predicted_secs: predicted,
+            measured_secs: measured,
+            breakdown: b,
+        }
+    }
+
+    #[test]
+    fn fits_pure_class_scales_exactly() {
+        let recs: Vec<BlockRecord> = (0..9)
+            .flat_map(|i| {
+                let p = 1.0 + i as f64;
+                vec![rec(BlockClass::Compute, p, p * 0.25), rec(BlockClass::Latency, p, p * 8.0)]
+            })
+            .collect();
+        let c = fit(&recs, 1);
+        assert!((c.compute - 0.25).abs() < 1e-12, "compute={}", c.compute);
+        assert!((c.latency - 8.0).abs() < 1e-11, "latency={}", c.latency);
+        // classes with no dominated blocks keep the identity
+        assert_eq!(c.write, 1.0);
+    }
+
+    #[test]
+    fn outliers_are_rejected() {
+        let mut recs: Vec<BlockRecord> =
+            (0..20).map(|i| rec(BlockClass::Read, 1.0 + i as f64, (1.0 + i as f64) * 2.0)).collect();
+        recs.push(rec(BlockClass::Read, 1.0, 5000.0)); // GC pause
+        let c = fit(&recs, 1);
+        assert!((c.read - 2.0).abs() < 1e-12, "read={}", c.read);
+    }
+
+    #[test]
+    fn empty_and_degenerate_records_fit_identity() {
+        assert!(fit(&[], 1).is_identity());
+        let recs = vec![rec(BlockClass::Compute, 0.0, 1.0), rec(BlockClass::Read, 1.0, f64::NAN)];
+        assert!(fit(&recs, 1).is_identity());
+    }
+
+    #[test]
+    fn apply_keeps_constants_valid_under_extreme_scales() {
+        let k = CostConstants::default();
+        for s in [1e-30, 1e-6, 1.0, 1e6, 1e30, f64::INFINITY] {
+            let c = Corrections { compute: s, read: s, write: s, latency: s, distributed: s };
+            assert!(c.apply(&k).validate().is_ok(), "scale {s}");
+        }
+    }
+
+    #[test]
+    fn second_fit_on_repredicted_records_is_identity() {
+        let recs: Vec<BlockRecord> = (0..7)
+            .flat_map(|i| {
+                let p = 0.5 + i as f64;
+                vec![
+                    rec(BlockClass::Compute, p, p * 0.1),
+                    rec(BlockClass::Read, p, p * 3.0),
+                    rec(BlockClass::Latency, p, p * 0.01),
+                ]
+            })
+            .collect();
+        let c1 = fit(&recs, 7);
+        assert!(!c1.is_identity());
+        let recs2 = repredict(&recs, &c1);
+        let c2 = fit(&recs2, 7);
+        assert!(c2.is_identity(), "second pass drifted: {c2:?}");
+    }
+}

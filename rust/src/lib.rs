@@ -32,7 +32,12 @@
 //!    substitute for the paper's Hadoop testbed).
 //! 7. [`runtime`] — the PJRT bridge that loads AOT-compiled XLA artifacts
 //!    (JAX/Pallas, built once by `make artifacts`) for the compute hot path.
-//! 8. [`opt`] — cost-model consumers: the global data flow optimizer
+//! 8. [`feedback`] — measured-execution feedback: runs compiled plans
+//!    with per-block instrumentation, records measured-vs-predicted cost
+//!    keyed by structural block hashes, and calibrates the cost
+//!    constants online via robust regression, with Q-error tracked as a
+//!    first-class accuracy metric ([`api::calibrate`]).
+//! 9. [`opt`] — cost-model consumers: the global data flow optimizer
 //!    ([`opt::gdf`], enumerating per-cut block size / format /
 //!    partitioning / backend properties into restructured plans), the
 //!    parallel grid resource optimizer with Pareto frontier
@@ -52,6 +57,7 @@ pub mod conf;
 pub mod cost;
 pub mod cp;
 pub mod dml;
+pub mod feedback;
 pub mod ir;
 pub mod lop;
 pub mod matrix;

@@ -9,6 +9,7 @@
 //! repro resource-opt --scenario xs                      legacy heap sweep
 //! repro sweep [--heaps 512,...] [--serial]              parallel grid sweep
 //! repro gdf --script cg                                 global data flow optimizer
+//! repro calibrate [--quick] [--simulated]               measured-execution feedback
 //! ```
 
 use std::collections::HashMap;
@@ -36,9 +37,10 @@ fn main() {
         Some("resource-opt") => cmd_resource_opt(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("gdf") => cmd_gdf(&args[1..]),
+        Some("calibrate") => cmd_calibrate(&args[1..]),
         _ => {
             eprintln!(
-                "usage: repro <explain|cost|scenarios|run|resource|resource-opt|sweep|gdf> [options]\n\
+                "usage: repro <explain|cost|scenarios|run|resource|resource-opt|sweep|gdf|calibrate> [options]\n\
                  \n\
                  explain --scenario <xs|xl1..xl4> [--level hops|runtime]\n\
                  \x20       [--backend cp|mr|spark] [--script ds|cg] [--iters N]\n\
@@ -58,7 +60,9 @@ fn main() {
                  gdf [--scenario <name>] [--script cg|ds] [--iters N]\n\
                  \x20   [--blocksizes 500,1000,2000] [--formats binaryblock,textcell]\n\
                  \x20   [--partitions 8,32] [--backends cp,mr,spark]\n\
-                 \x20   [--threads T] [--no-diff] [--no-cost-cache] [--all]"
+                 \x20   [--threads T] [--no-diff] [--no-cost-cache] [--all]\n\
+                 calibrate [--quick] [--simulated] [--noise F] [--seed N]\n\
+                 \x20         [--threads T] [--scratch DIR]"
             );
             2
         }
@@ -652,4 +656,121 @@ fn cmd_sweep(args: &[String]) -> i32 {
             1
         }
     }
+}
+
+/// Measured-execution feedback: run the bundled calibration workloads,
+/// fit cost-constant corrections, and report before/after Q-error plus
+/// the re-optimization outcome. `--simulated` replaces wall-clock
+/// measurement with the deterministic simulator-truth proxy (what the CI
+/// gate runs); `--quick` uses the small shapes.
+fn cmd_calibrate(args: &[String]) -> i32 {
+    let mut opts = systemds::api::CalibrateOptions {
+        quick: args.iter().any(|a| a == "--quick"),
+        ..Default::default()
+    };
+    if let Some(s) = flag(args, "--seed") {
+        match s.parse::<u64>() {
+            Ok(n) => opts.seed = n,
+            Err(_) => {
+                eprintln!("--seed: invalid value '{s}' (expected an unsigned integer)");
+                return 2;
+            }
+        }
+    }
+    if let Some(t) = flag(args, "--threads") {
+        match t.parse::<usize>() {
+            Ok(n) => opts.threads = n,
+            Err(_) => {
+                eprintln!("--threads: invalid value '{t}' (expected a non-negative integer)");
+                return 2;
+            }
+        }
+    }
+    if args.iter().any(|a| a == "--simulated") {
+        let noise = match flag(args, "--noise") {
+            None => 0.0,
+            Some(n) => match n.parse::<f64>() {
+                Ok(v) if v.is_finite() && v >= 0.0 => v,
+                _ => {
+                    eprintln!("--noise: invalid value '{n}' (expected a non-negative number)");
+                    return 2;
+                }
+            },
+        };
+        opts.mode = systemds::api::MeasureMode::Simulated { noise };
+    }
+    if let Some(dir) = flag(args, "--scratch") {
+        opts.scratch = Some(std::path::PathBuf::from(dir));
+    }
+    let report = match systemds::api::calibrate(&opts) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("calibration failed: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "calibration: {} cases, {} block records ({})",
+        report.cases,
+        report.records.len(),
+        if report.executed { "measured execution" } else { "simulated proxy" }
+    );
+    println!(
+        "\n{:<12} {:>4} {:>12} {:>12} {:>10} {:>10} {:>9} {:>9}",
+        "class", "n", "geo-q before", "geo-q after", "p95 before", "p95 after", "<=2x bef", "<=2x aft"
+    );
+    for c in &report.per_class {
+        println!(
+            "{:<12} {:>4} {:>12.3} {:>12.3} {:>10.2} {:>10.2} {:>8.0}% {:>8.0}%",
+            c.class.name(),
+            c.before.n,
+            c.before.geo_mean,
+            c.after.geo_mean,
+            c.before.p95,
+            c.after.p95,
+            100.0 * c.before.within_2x,
+            100.0 * c.after.within_2x
+        );
+    }
+    println!(
+        "{:<12} {:>4} {:>12.3} {:>12.3} {:>10.2} {:>10.2} {:>8.0}% {:>8.0}%",
+        "all",
+        report.before.n,
+        report.before.geo_mean,
+        report.after.geo_mean,
+        report.before.p95,
+        report.after.p95,
+        100.0 * report.before.within_2x,
+        100.0 * report.after.within_2x
+    );
+    let c = &report.corrections;
+    println!(
+        "\ncorrections: compute x{:.4}  read x{:.4}  write x{:.4}  latency x{:.6}  distributed x{:.4}",
+        c.compute, c.read, c.write, c.latency, c.distributed
+    );
+    println!(
+        "constants:   job_latency {:.3}s -> {:.5}s  hdfs_read {:.0} -> {:.0} MB/s  flop_eff {:.2} -> {:.2}",
+        report.initial.job_latency,
+        report.calibrated.job_latency,
+        report.initial.hdfs_read_binaryblock / MB,
+        report.calibrated.hdfs_read_binaryblock / MB,
+        report.initial.flop_efficiency,
+        report.calibrated.flop_efficiency
+    );
+    println!("\nre-optimization: {}", report.reopt.scenario);
+    for choice in &report.reopt.choices {
+        println!(
+            "  {:<6} {:>12} -> {:>12}",
+            choice.backend.name(),
+            systemds::util::fmt::fmt_secs(choice.before_secs),
+            systemds::util::fmt::fmt_secs(choice.after_secs)
+        );
+    }
+    println!(
+        "argmin: {} -> {}{}",
+        report.reopt.argmin_before.name(),
+        report.reopt.argmin_after.name(),
+        if report.reopt.flipped() { "  (flipped)" } else { "" }
+    );
+    0
 }

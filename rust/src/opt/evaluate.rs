@@ -104,7 +104,9 @@ struct CostStats {
 }
 
 /// Duplicate-cost key: 128-bit structural program hash × 128-bit
-/// cost-relevant knob fingerprint.
+/// cost-relevant knob fingerprint. The fingerprint covers the
+/// [`CostConstants`], so candidates re-costed after online calibration
+/// ([`crate::feedback`]) never alias their pre-calibration entries.
 #[derive(Clone, Copy, PartialEq, Eq, Hash)]
 struct CostKey(u64, u64, u64, u64);
 
@@ -453,6 +455,30 @@ mod tests {
         }
         let stats = cached.run_cache_stats();
         assert!(stats.hits > 0, "warm rerun must hit the cache: {stats:?}");
+    }
+
+    #[test]
+    fn calibrated_constants_are_never_cost_duplicates() {
+        // identical candidates that differ only in their CostConstants —
+        // the situation right after `repro calibrate` rewrites them —
+        // must share the memoised plan but never the costed total
+        let a = ScenCand::new(Scenario::xs(), ExecBackend::Mr);
+        let mut b = ScenCand::new(Scenario::xs(), ExecBackend::Mr);
+        b.k = crate::feedback::simulator_truth();
+        let items = [a, b];
+        let mut e = Evaluator::new(2);
+        e.begin_run();
+        let r = e.evaluate(&items).unwrap();
+        assert_eq!(e.distinct_plans(), 1, "same signature -> one plan");
+        assert!(Arc::ptr_eq(&r[0].plan, &r[1].plan));
+        assert!(r[1].plan_reused);
+        assert!(!r[0].cost_reused && !r[1].cost_reused, "constants changed: re-cost");
+        assert_eq!(e.duplicates_skipped(), 0);
+        assert_ne!(
+            r[0].cost_secs.to_bits(),
+            r[1].cost_secs.to_bits(),
+            "calibrated constants must move the evaluated cost"
+        );
     }
 
     #[test]

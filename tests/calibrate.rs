@@ -1,0 +1,234 @@
+//! Integration tests for the online calibration loop (`src/feedback/`):
+//! the deterministic simulated mode end to end, the safeguarded robust
+//! regression's invariants, and the cost cache's constants fingerprint.
+//!
+//! Everything here runs [`MeasureMode::Simulated`], so every assertion is
+//! bitwise-reproducible on any machine at any load.
+
+use std::collections::HashMap;
+
+use systemds::api::{compile_with_meta, ClusterConfigOpt, CompileOptions, LINREG_DS};
+use systemds::conf::CostConstants;
+use systemds::cost::cache::{program_hashes, CostCache};
+use systemds::cost::{cost_total, cost_total_cached};
+use systemds::feedback::runner::cluster_for;
+use systemds::feedback::{
+    calibrate, fit, repredict, simulator_truth, BlockClass, BlockRecord, CalibrateOptions,
+    CalibrationCase, CostBreakdown, MeasureMode,
+};
+use systemds::ir::build::StaticMeta;
+use systemds::matrix::{Format, MatrixCharacteristics};
+use systemds::rtprog::ExecBackend;
+use systemds::util::rng::Rng;
+
+fn simulated_opts(seed: u64, threads: usize) -> CalibrateOptions {
+    CalibrateOptions {
+        seed,
+        quick: true,
+        threads,
+        mode: MeasureMode::Simulated { noise: 0.0 },
+        ..Default::default()
+    }
+}
+
+/// The tentpole acceptance test: calibrating against the in-process
+/// runtime's profile must flip the backend argmin on the bundled
+/// re-optimization scenario — the Hadoop-calibrated defaults pick the
+/// single-threaded CP plan (distributed startup latency dominates), the
+/// calibrated constants pick a distributed plan (latency collapsed to
+/// milliseconds, reads and exec divided across 8 slots).
+#[test]
+fn reoptimization_flips_the_backend_argmin_after_calibration() {
+    let report = calibrate(&simulated_opts(42, 0)).expect("simulated calibration");
+    assert!(!report.corrections.is_identity(), "fit found no corrections");
+    assert!(
+        report.after.geo_mean < report.before.geo_mean,
+        "calibration should improve accuracy on the bundled cases: {} -> {}",
+        report.before.geo_mean,
+        report.after.geo_mean
+    );
+    let reopt = &report.reopt;
+    assert_eq!(reopt.choices.len(), ExecBackend::all().len());
+    for c in &reopt.choices {
+        assert!(c.before_secs.is_finite() && c.before_secs > 0.0, "{:?}", c.backend);
+        assert!(c.after_secs.is_finite() && c.after_secs > 0.0, "{:?}", c.backend);
+    }
+    assert_eq!(
+        reopt.argmin_before,
+        ExecBackend::Cp,
+        "defaults must pick CP (distributed latency dominates): {reopt:?}"
+    );
+    assert_ne!(
+        reopt.argmin_after,
+        ExecBackend::Cp,
+        "calibrated constants must pick a distributed backend: {reopt:?}"
+    );
+    assert!(reopt.flipped());
+}
+
+/// Calibration is bitwise-deterministic given a seed — in particular it
+/// must not depend on the thread count, which sizes real execution but
+/// never the simulated measurement or the (sequential) fit.
+#[test]
+fn simulated_calibration_is_bitwise_deterministic_across_thread_counts() {
+    let a = calibrate(&simulated_opts(7, 1)).unwrap();
+    let b = calibrate(&simulated_opts(7, 8)).unwrap();
+    assert_eq!(a.corrections, b.corrections);
+    assert_eq!(a.calibrated, b.calibrated, "calibrated constants differ");
+    assert_eq!(a.before, b.before);
+    assert_eq!(a.after, b.after);
+    assert_eq!(a.records.len(), b.records.len());
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.hash, rb.hash);
+        assert_eq!(ra.predicted_secs.to_bits(), rb.predicted_secs.to_bits());
+        assert_eq!(ra.measured_secs.to_bits(), rb.measured_secs.to_bits());
+    }
+    assert_eq!(a.reopt.argmin_before, b.reopt.argmin_before);
+    assert_eq!(a.reopt.argmin_after, b.reopt.argmin_after);
+    // and an independent rerun with the same seed reproduces everything
+    let c = calibrate(&simulated_opts(7, 1)).unwrap();
+    assert_eq!(a.calibrated, c.calibrated);
+}
+
+/// A second fit on the records the first fit already corrected is the
+/// identity: the calibration loop cannot oscillate.
+#[test]
+fn second_fit_on_corrected_records_is_a_fixpoint() {
+    let report = calibrate(&simulated_opts(42, 0)).unwrap();
+    let c1 = fit(&report.records, 42);
+    assert_eq!(c1, report.corrections, "report carries the fit of its own records");
+    let corrected = repredict(&report.records, &c1);
+    let c2 = fit(&corrected, 42);
+    assert!(c2.is_identity(), "second pass drifted: {c2:?}");
+    // and a third pass over twice-repredicted records stays put
+    let c3 = fit(&repredict(&corrected, &c2), 42);
+    assert!(c3.is_identity());
+}
+
+/// Property: whatever the records — including non-finite, zero and
+/// negative measurements — the fitted corrections applied to valid
+/// constants always produce constants that pass `validate()`.
+#[test]
+fn fitted_corrections_always_yield_valid_constants() {
+    let k0 = CostConstants::default();
+    let mut rng = Rng::new(0xC0FFEE);
+    for trial in 0..200 {
+        let n = (rng.below(40) + 1) as usize;
+        let records: Vec<BlockRecord> = (0..n)
+            .map(|i| {
+                let class = BlockClass::ALL[rng.below(5) as usize];
+                let mut breakdown = CostBreakdown::default();
+                // log-uniform magnitudes across 24 decades, plus
+                // degenerate values in some trials
+                let mag = |rng: &mut Rng| 10f64.powf(rng.uniform(-12.0, 12.0));
+                *breakdown.get_mut(class) = mag(&mut rng);
+                let predicted_secs = breakdown.total();
+                let measured_secs = match rng.below(8) {
+                    0 => 0.0,
+                    1 => f64::NAN,
+                    2 => f64::INFINITY,
+                    3 => -mag(&mut rng),
+                    _ => mag(&mut rng),
+                };
+                BlockRecord {
+                    hash: (trial as u64, i as u64),
+                    label: String::new(),
+                    predicted_secs,
+                    measured_secs,
+                    breakdown,
+                }
+            })
+            .collect();
+        let corrections = fit(&records, trial as u64);
+        let calibrated = corrections.apply(&k0);
+        calibrated
+            .validate()
+            .unwrap_or_else(|e| panic!("trial {trial}: {e} (from {corrections:?})"));
+    }
+}
+
+/// Regression test for the stale-cache guard: `CostConstants` participate
+/// in the cache's knob fingerprint, so re-costing through a shared cache
+/// after calibration rewrites the constants must produce exactly the
+/// uncached result — never a replay of the pre-calibration entry.
+#[test]
+fn cost_cache_never_serves_stale_totals_after_constants_change() {
+    let case = CalibrationCase {
+        name: "linreg 4096x128",
+        script: LINREG_DS,
+        rows: 4096,
+        cols: 128,
+        heap_mb: 0.12,
+    };
+    let cc = cluster_for(8, &case);
+    let mut args = HashMap::new();
+    args.insert(1, "stale/X".to_string());
+    args.insert(2, "stale/y".to_string());
+    args.insert(3, "0".to_string());
+    args.insert(4, "stale/out".to_string());
+
+    for backend in ExecBackend::all() {
+        let opts =
+            CompileOptions { cc: ClusterConfigOpt(cc.clone()), backend, ..Default::default() };
+        let meta = StaticMeta::default()
+            .with(
+                "stale/X",
+                MatrixCharacteristics::dense(case.rows as i64, case.cols as i64, opts.cfg.blocksize),
+                Format::BinaryBlock,
+            )
+            .with(
+                "stale/y",
+                MatrixCharacteristics::dense(case.rows as i64, 1, opts.cfg.blocksize),
+                Format::BinaryBlock,
+            );
+        let rt = compile_with_meta(case.script, &args, &meta, &opts).unwrap().runtime;
+        let hashes = program_hashes(&rt);
+        let cache = CostCache::default();
+
+        let k1 = CostConstants::default();
+        // the calibrated profile rewrites every constant group, including
+        // the flop_efficiency field added for calibration
+        let k2 = simulator_truth();
+        let k3 = CostConstants { flop_efficiency: 2.0, ..CostConstants::default() };
+
+        // warm the cache under k1, then re-cost under k2 and k3: every
+        // cached total must match its uncached costing bitwise
+        let tag = backend.name();
+        let u1 = cost_total(&rt, &opts.cfg, &cc, &k1);
+        let c1 = cost_total_cached(&rt, &hashes, &opts.cfg, &cc, &k1, &cache);
+        assert_eq!(u1.to_bits(), c1.to_bits(), "{tag}: cold");
+        for (name, k) in [("truth", &k2), ("flop_eff", &k3)] {
+            let u = cost_total(&rt, &opts.cfg, &cc, k);
+            let c = cost_total_cached(&rt, &hashes, &opts.cfg, &cc, k, &cache);
+            assert_eq!(u.to_bits(), c.to_bits(), "{tag}/{name}: stale cache hit");
+            assert_ne!(u.to_bits(), u1.to_bits(), "{tag}/{name}: constants must move the cost");
+        }
+        // and the original constants still replay their own entry
+        let c1_again = cost_total_cached(&rt, &hashes, &opts.cfg, &cc, &k1, &cache);
+        assert_eq!(u1.to_bits(), c1_again.to_bits(), "{tag}: warm replay");
+    }
+}
+
+/// The calibrated constants move toward the simulator-truth profile the
+/// simulated measurements were drawn from: job latency collapses by
+/// orders of magnitude and read bandwidth rises.
+#[test]
+fn calibration_moves_constants_toward_the_measured_profile() {
+    let report = calibrate(&simulated_opts(42, 0)).unwrap();
+    let (k0, k1) = (&report.initial, &report.calibrated);
+    assert!(
+        k1.job_latency < k0.job_latency / 5.0,
+        "job latency should collapse toward the in-process runtime: {} -> {}",
+        k0.job_latency,
+        k1.job_latency
+    );
+    // corrections stay inside the declared clamp
+    for class in BlockClass::ALL {
+        let s = report.corrections.get(class);
+        assert!(
+            (systemds::feedback::regression::MIN_SCALE..=systemds::feedback::regression::MAX_SCALE)
+                .contains(&s),
+            "{class:?} scale {s} out of bounds"
+        );
+    }
+}
