@@ -1,0 +1,236 @@
+//! Bench: warm-starting the optimizer from a persisted cost-cache
+//! snapshot (`--warm-cache`) on the bundled `repro gdf` workload (LinReg
+//! CG, XL1, 20 iterations, full default axis set).
+//!
+//! Three sides, each paying the full candidate compile (fresh evaluator
+//! per run), so the deltas isolate exactly two effects:
+//!
+//! * **cold** — empty cost cache: every block is costed from scratch;
+//! * **warm-mem** — the cache `Arc` from a prior in-process run is
+//!   handed to the fresh evaluator: block costings replay from memory;
+//! * **warm-disk** — the same cache, but round-tripped through the
+//!   on-disk snapshot artifact: each run re-reads, checksums and decodes
+//!   the file, then replays. The warm-disk / warm-mem ratio is the pure
+//!   artifact overhead the CI gate bounds (≤ 1.2×).
+//!
+//! Modes:
+//!
+//! ```text
+//! cargo bench --bench artifact                  # human-readable only
+//! cargo bench --bench artifact -- --quick       # short measurement budget
+//! cargo bench --bench artifact -- --json [PATH] # also emit BENCH_ARTIFACT.json
+//! ```
+//!
+//! The JSON report (`BENCH_ARTIFACT.json` at the repository root by
+//! default) is the warm-start perf baseline. CI regenerates it in
+//! `--quick` mode and fails if the warm-from-disk run diverges from the
+//! cold argmin, serves < 90% of costings from the loaded cache, or costs
+//! more than 1.2× the warm-in-process run.
+//!
+//! Uses the in-repo fixed-budget harness (criterion is unavailable in
+//! the hermetic offline build; see rust/Cargo.toml).
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use systemds::api::{
+    load_artifact, save_artifact, Artifact, CacheSnapshot, DataScenario, Evaluator, GdfSpec,
+    Scenario,
+};
+use systemds::cost::cache::CostCache;
+use systemds::opt::gdf::{optimize_with, GdfReport};
+use systemds::util::bench::{fmt_dur, Bencher};
+use systemds::util::par;
+
+/// The bundled `repro gdf` workload: `repro gdf --scenario xl1 --script
+/// cg --iters 20` with the default search axes.
+fn gdf_workload() -> GdfSpec {
+    GdfSpec::linreg_cg(DataScenario::from(&Scenario::xl1()), 20)
+}
+
+fn load_snapshot(path: &Path) -> CacheSnapshot {
+    match load_artifact(path).expect("load snapshot artifact") {
+        Artifact::CacheSnapshot(s) => s,
+        other => panic!("expected a costcache artifact, got '{}'", other.kind()),
+    }
+}
+
+struct Side {
+    median_secs: f64,
+    report: GdfReport,
+    hit_rate: f64,
+}
+
+/// Run `make_eval() -> optimize` once per iteration, so every side pays
+/// the candidate compile and only the cache source differs.
+fn measure(
+    b: &mut Bencher,
+    name: &str,
+    spec: &GdfSpec,
+    mut make_eval: impl FnMut() -> Evaluator,
+) -> Side {
+    let stats = b
+        .bench(name, || {
+            let mut eval = make_eval();
+            optimize_with(spec, &mut eval).unwrap().candidates.len()
+        })
+        .clone();
+    let mut eval = make_eval();
+    let report = optimize_with(spec, &mut eval).expect("stats run");
+    let hit_rate = eval.run_cache_stats().hit_rate();
+    Side { median_secs: stats.median.as_secs_f64().max(1e-9), report, hit_rate }
+}
+
+fn bits_match(a: &GdfReport, b: &GdfReport) -> bool {
+    a.candidates.len() == b.candidates.len()
+        && a.candidates
+            .iter()
+            .zip(&b.candidates)
+            .all(|(x, y)| x.label() == y.label() && x.cost_secs.to_bits() == y.cost_secs.to_bits())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn write_json(
+    path: &Path,
+    threads: usize,
+    quick: bool,
+    cold: &Side,
+    warm_mem: &Side,
+    warm_disk: &Side,
+    snapshot_entries: usize,
+    snapshot_bytes: usize,
+) {
+    let argmin_matches = cold.report.best().label() == warm_disk.report.best().label()
+        && cold.report.best().cost_secs.to_bits() == warm_disk.report.best().cost_secs.to_bits();
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"schema\": \"bench-artifact/v1\",\n",
+            "  \"generated\": \"cargo bench --bench artifact -- --json{quickflag}\",\n",
+            "  \"workload\": {{\n",
+            "    \"kind\": \"repro gdf\",\n",
+            "    \"script\": \"cg\",\n",
+            "    \"scenario\": \"XL1\",\n",
+            "    \"iterations\": 20,\n",
+            "    \"candidates\": {candidates},\n",
+            "    \"measurement\": \"fresh evaluator per run; only the cache source differs\"\n",
+            "  }},\n",
+            "  \"threads\": {threads},\n",
+            "  \"quick\": {quick},\n",
+            "  \"snapshot\": {{\n",
+            "    \"entries\": {entries},\n",
+            "    \"bytes\": {bytes}\n",
+            "  }},\n",
+            "  \"wall_secs\": {{\n",
+            "    \"cold_median\": {cold:.6},\n",
+            "    \"warm_mem_median\": {warm_mem:.6},\n",
+            "    \"warm_disk_median\": {warm_disk:.6}\n",
+            "  }},\n",
+            "  \"warm_disk\": {{\n",
+            "    \"hit_rate\": {hit_rate:.4},\n",
+            "    \"argmin_matches_cold\": {argmin},\n",
+            "    \"costs_bitwise_match_cold\": {bitwise}\n",
+            "  }},\n",
+            "  \"ratio\": {{\n",
+            "    \"warm_disk_vs_warm_mem\": {disk_ratio:.3},\n",
+            "    \"cold_vs_warm_mem\": {cold_ratio:.3}\n",
+            "  }}\n",
+            "}}\n",
+        ),
+        quickflag = if quick { " --quick" } else { "" },
+        candidates = cold.report.candidates.len(),
+        threads = threads,
+        quick = quick,
+        entries = snapshot_entries,
+        bytes = snapshot_bytes,
+        cold = cold.median_secs,
+        warm_mem = warm_mem.median_secs,
+        warm_disk = warm_disk.median_secs,
+        hit_rate = warm_disk.hit_rate,
+        argmin = argmin_matches,
+        bitwise = bits_match(&cold.report, &warm_disk.report),
+        disk_ratio = warm_disk.median_secs / warm_mem.median_secs,
+        cold_ratio = cold.median_secs / warm_mem.median_secs,
+    );
+    std::fs::write(path, json).expect("write BENCH_ARTIFACT.json");
+    println!("wrote {}", path.display());
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args.iter().position(|a| a == "--json").map(|i| {
+        match args.get(i + 1).filter(|p| !p.starts_with("--")) {
+            Some(p) => PathBuf::from(p),
+            None => PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_ARTIFACT.json"),
+        }
+    });
+    let (warmup, budget) = if quick {
+        (Duration::from_millis(100), Duration::from_millis(1200))
+    } else {
+        (Duration::from_millis(300), Duration::from_secs(3))
+    };
+
+    let threads = par::default_threads();
+    let spec = gdf_workload();
+    println!("== artifact: warm-starting `repro gdf` from a cost-cache snapshot, {threads} worker threads ==");
+
+    // Seed run: populate a cache, snapshot it to disk once.
+    let mut seed_eval = Evaluator::new(threads);
+    let _ = optimize_with(&spec, &mut seed_eval).expect("seed run");
+    let cache = seed_eval.cache().expect("seed evaluator keeps a cache");
+    let snap = CacheSnapshot::from_cache(&cache);
+    let snap_dir =
+        std::env::temp_dir().join(format!("sysds_artifact_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&snap_dir).expect("create bench dir");
+    let snap_path = snap_dir.join("gdf.costcache");
+    save_artifact(&snap_path, &Artifact::CacheSnapshot(snap)).expect("save snapshot");
+    let snapshot_bytes = std::fs::metadata(&snap_path).expect("stat snapshot").len() as usize;
+    let snapshot_entries = load_snapshot(&snap_path).len();
+    println!("snapshot: {snapshot_entries} entries, {snapshot_bytes} bytes -> {}", snap_path.display());
+
+    let mut b = Bencher::new().with_budget(warmup, budget);
+    let cold = measure(&mut b, "gdf, cold (empty cache)", &spec, || {
+        Evaluator::new(threads)
+    });
+    let warm_mem = measure(&mut b, "gdf, warm cache from memory", &spec, || {
+        Evaluator::with_cache(threads, Some(cache.clone()))
+    });
+    let warm_disk = measure(&mut b, "gdf, warm cache from disk", &spec, || {
+        let loaded: std::sync::Arc<CostCache> = load_snapshot(&snap_path).into_cache();
+        Evaluator::with_cache(threads, Some(loaded))
+    });
+
+    let disk_ratio = warm_disk.median_secs / warm_mem.median_secs;
+    println!(
+        "\n-> cold {} | warm-mem {} | warm-disk {} ({disk_ratio:.2}x warm-mem)",
+        fmt_dur(Duration::from_secs_f64(cold.median_secs)),
+        fmt_dur(Duration::from_secs_f64(warm_mem.median_secs)),
+        fmt_dur(Duration::from_secs_f64(warm_disk.median_secs)),
+    );
+    println!(
+        "warm-from-disk: {:.1}% hit rate, argmin {} cold, costs {} cold",
+        100.0 * warm_disk.hit_rate,
+        if cold.report.best().label() == warm_disk.report.best().label() { "matches" } else { "DIVERGES from" },
+        if bits_match(&cold.report, &warm_disk.report) { "bitwise match" } else { "DIVERGE from" },
+    );
+    if disk_ratio <= 1.2 {
+        println!("-> ARTIFACT OVERHEAD OK (<= 1.2x warm-in-process acceptance target)");
+    } else {
+        println!("-> artifact overhead above the 1.2x target on this machine/budget");
+    }
+
+    if let Some(path) = json_path {
+        write_json(
+            &path,
+            threads,
+            quick,
+            &cold,
+            &warm_mem,
+            &warm_disk,
+            snapshot_entries,
+            snapshot_bytes,
+        );
+    }
+    let _ = std::fs::remove_dir_all(&snap_dir);
+}

@@ -18,6 +18,9 @@ use crate::lop::SelectionHints;
 use crate::matrix::{Format, MatrixCharacteristics};
 use crate::rtprog::{self, RtProgram};
 
+pub use crate::artifact::{
+    Artifact, CacheSnapshot, CalibrationProfile, LoadedPlan, PlanArtifact, PLAN_FORMAT_VERSION,
+};
 pub use crate::cost::cache::{CacheStats, CostCache};
 pub use crate::feedback::{
     BlockClass, BlockRecord, CalibrateOptions, CalibrationReport, Corrections, MeasureMode,
@@ -61,6 +64,24 @@ pub fn optimize_resources(grid: &ResourceGrid) -> Result<ResourceReport, String>
 /// module for the enumeration and pruning rules.
 pub fn optimize_global_dataflow(spec: &GdfSpec) -> Result<GdfReport, String> {
     crate::opt::gdf::optimize(spec)
+}
+
+/// Persist an artifact — a compiled-plan record ([`PlanArtifact`]), a
+/// cost-cache snapshot ([`CacheSnapshot`]) or a calibration profile
+/// ([`CalibrationProfile`]) — to the versioned on-disk text form. The
+/// write is atomic (temp file + rename), so a crashed save never leaves
+/// a half-written artifact behind. Thin wrapper around
+/// [`crate::artifact::save`].
+pub fn save_artifact(path: &std::path::Path, artifact: &Artifact) -> Result<(), String> {
+    crate::artifact::save(path, artifact)
+}
+
+/// Load any artifact kind back from disk, dispatching on the header's
+/// kind token and verifying the trailing checksum before parsing;
+/// corrupted, truncated or unknown-version files fail with a diagnostic
+/// (never a panic). Thin wrapper around [`crate::artifact::load`].
+pub fn load_artifact(path: &std::path::Path) -> Result<Artifact, String> {
+    crate::artifact::load(path)
 }
 
 /// Run the measured-execution feedback loop: execute the bundled

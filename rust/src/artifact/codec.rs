@@ -1,0 +1,451 @@
+//! Zero-dependency versioned text codec for on-disk artifacts.
+//!
+//! The container format is deliberately line-oriented UTF-8 so artifacts
+//! diff cleanly under version control and corruption is diagnosable by
+//! eye:
+//!
+//! ```text
+//! #! sysds-artifact v1 <kind>
+//! [section]
+//! key = value
+//! ...
+//! #! checksum <16-hex FNV-1a of everything above>
+//! ```
+//!
+//! Three rules make the format safe to round-trip:
+//!
+//! 1. **Everything is escaped.** Values pass through [`escape`], which
+//!    folds backslash, newline, carriage return, `|` and space into
+//!    two-character sequences — so every `key = value` line is exactly
+//!    one line, and packed rows (cache entries) can split on spaces and
+//!    pipes without quoting ambiguity.
+//! 2. **`f64` round-trips bitwise.** Floats are stored as the 16-hex-digit
+//!    IEEE-754 bit pattern ([`put_f64`]/[`Section::f64`]), never as
+//!    decimal text, because the cost-cache replay contract is *bitwise*
+//!    equality — a `%.17g` detour would be one rounding away from a
+//!    silently different ranking.
+//! 3. **The trailing checksum detects truncation.** [`Reader::parse`]
+//!    refuses input whose FNV-1a checksum line is missing or mismatched,
+//!    with a diagnostic instead of a panic, so a partially written or
+//!    bit-flipped artifact can never be half-loaded.
+//!
+//! The container version (`v1`) covers this framing only; each artifact
+//! kind carries its own payload version inside a section, which is what
+//! the regenerate-on-mismatch rules key off (see
+//! [`super::plan::PLAN_FORMAT_VERSION`]).
+
+use std::fmt::Write as _;
+
+/// Version of the container framing (header/sections/checksum). Bumped
+/// only if the framing itself changes; payload evolution is versioned
+/// per artifact kind.
+pub const CONTAINER_VERSION: u32 = 1;
+
+const MAGIC: &str = "#! sysds-artifact";
+const CHECKSUM_PREFIX: &str = "#! checksum ";
+
+// FNV-1a 64-bit, the same function backing the cost-cache keys.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Escape a string into a single space-free, pipe-free token:
+/// `\` → `\\`, newline → `\n`, CR → `\r`, `|` → `\p`, space → `\s`.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '|' => out.push_str("\\p"),
+            ' ' => out.push_str("\\s"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Invert [`escape`]. Unknown escape sequences are a diagnostic (they
+/// mean the file was produced by a newer writer or corrupted).
+pub fn unescape(s: &str) -> Result<String, String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('\\') => out.push('\\'),
+            Some('n') => out.push('\n'),
+            Some('r') => out.push('\r'),
+            Some('p') => out.push('|'),
+            Some('s') => out.push(' '),
+            other => {
+                return Err(format!(
+                    "artifact: bad escape sequence '\\{}' in '{s}'",
+                    other.map(String::from).unwrap_or_else(|| "<end>".into())
+                ))
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Encode an `f64` as its 16-hex-digit IEEE-754 bit pattern.
+pub fn f64_to_hex(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+/// Decode [`f64_to_hex`] output back to the bitwise-identical `f64`.
+pub fn f64_from_hex(s: &str) -> Result<f64, String> {
+    u64::from_str_radix(s.trim(), 16)
+        .map(f64::from_bits)
+        .map_err(|e| format!("artifact: bad f64 bit pattern '{s}': {e}"))
+}
+
+// ---------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------
+
+/// Streaming artifact writer: header, then sections of `key = value`
+/// lines, closed by [`Writer::finish`] which appends the checksum.
+pub struct Writer {
+    buf: String,
+}
+
+impl Writer {
+    /// Start an artifact of the given kind (`plan`, `costcache`,
+    /// `profile`).
+    pub fn new(kind: &str) -> Self {
+        Writer { buf: format!("{MAGIC} v{CONTAINER_VERSION} {kind}\n") }
+    }
+
+    /// Open a `[name]` section; subsequent puts land in it.
+    pub fn section(&mut self, name: &str) {
+        let _ = writeln!(self.buf, "[{name}]");
+    }
+
+    /// Write one raw (pre-escaped or escape-free) `key = value` line.
+    pub fn put_raw(&mut self, key: &str, value: &str) {
+        debug_assert!(!value.contains('\n'), "raw values must be single-line");
+        let _ = writeln!(self.buf, "{key} = {value}");
+    }
+
+    /// Write a string value, escaped.
+    pub fn put_str(&mut self, key: &str, value: &str) {
+        let escaped = escape(value);
+        self.put_raw(key, &escaped);
+    }
+
+    /// Write an `f64` as its bit pattern (bitwise round trip).
+    pub fn put_f64(&mut self, key: &str, value: f64) {
+        let hex = f64_to_hex(value);
+        self.put_raw(key, &hex);
+    }
+
+    /// Write an unsigned integer.
+    pub fn put_u64(&mut self, key: &str, value: u64) {
+        let dec = value.to_string();
+        self.put_raw(key, &dec);
+    }
+
+    /// Write a `usize`.
+    pub fn put_usize(&mut self, key: &str, value: usize) {
+        self.put_u64(key, value as u64);
+    }
+
+    /// Write a signed integer.
+    pub fn put_i64(&mut self, key: &str, value: i64) {
+        let dec = value.to_string();
+        self.put_raw(key, &dec);
+    }
+
+    /// Write a boolean (`true`/`false`).
+    pub fn put_bool(&mut self, key: &str, value: bool) {
+        self.put_raw(key, if value { "true" } else { "false" });
+    }
+
+    /// Close the artifact: append the checksum line and return the text.
+    pub fn finish(self) -> String {
+        let sum = fnv1a(self.buf.as_bytes());
+        format!("{}{CHECKSUM_PREFIX}{sum:016x}\n", self.buf)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------
+
+/// Parsed artifact: kind plus ordered sections of ordered `key = value`
+/// pairs (repeated keys are allowed and preserve order — that is how
+/// lists are encoded).
+pub struct Reader {
+    kind: String,
+    sections: Vec<(String, Vec<(String, String)>)>,
+}
+
+impl Reader {
+    /// Parse and verify an artifact: header magic, container version and
+    /// trailing checksum. Every failure is a diagnostic `Err`, never a
+    /// panic — corrupted, truncated and wrong-kind files all land here.
+    pub fn parse(text: &str) -> Result<Reader, String> {
+        // 1. split off and verify the checksum line
+        let body_end = text
+            .rfind(CHECKSUM_PREFIX)
+            .ok_or_else(|| "artifact: missing checksum line (truncated file?)".to_string())?;
+        let (body, sum_line) = text.split_at(body_end);
+        let sum_hex = sum_line
+            .trim_start_matches(CHECKSUM_PREFIX)
+            .trim();
+        let stored = u64::from_str_radix(sum_hex, 16)
+            .map_err(|e| format!("artifact: unreadable checksum '{sum_hex}': {e}"))?;
+        let actual = fnv1a(body.as_bytes());
+        if stored != actual {
+            return Err(format!(
+                "artifact: checksum mismatch (stored {stored:016x}, computed {actual:016x}) — \
+                 the file is corrupted or was edited by hand"
+            ));
+        }
+
+        // 2. header
+        let mut lines = body.lines();
+        let header = lines.next().unwrap_or_default();
+        let rest = header
+            .strip_prefix(MAGIC)
+            .ok_or_else(|| format!("artifact: bad header '{header}' (expected '{MAGIC} vN <kind>')"))?;
+        let mut parts = rest.split_whitespace();
+        let ver = parts.next().unwrap_or_default();
+        let kind = parts.next().unwrap_or_default();
+        let ver_num: u32 = ver
+            .strip_prefix('v')
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| format!("artifact: bad container version '{ver}'"))?;
+        if ver_num != CONTAINER_VERSION {
+            return Err(format!(
+                "artifact: unsupported container version v{ver_num} (this build reads v{CONTAINER_VERSION})"
+            ));
+        }
+        if kind.is_empty() {
+            return Err("artifact: header is missing the artifact kind".to_string());
+        }
+
+        // 3. sections
+        let mut sections: Vec<(String, Vec<(String, String)>)> = Vec::new();
+        for (n, line) in lines.enumerate() {
+            let line_no = n + 2; // 1-based, after the header
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                sections.push((name.to_string(), Vec::new()));
+                continue;
+            }
+            let (key, value) = line.split_once(" = ").ok_or_else(|| {
+                format!("artifact: line {line_no}: expected 'key = value' or '[section]', got '{line}'")
+            })?;
+            match sections.last_mut() {
+                Some((_, entries)) => entries.push((key.to_string(), value.to_string())),
+                None => {
+                    return Err(format!(
+                        "artifact: line {line_no}: 'key = value' before any [section]"
+                    ))
+                }
+            }
+        }
+        Ok(Reader { kind: kind.to_string(), sections })
+    }
+
+    /// The artifact kind token from the header.
+    pub fn kind(&self) -> &str {
+        &self.kind
+    }
+
+    /// Look up a section by name.
+    pub fn section(&self, name: &str) -> Result<Section<'_>, String> {
+        self.sections
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, entries)| Section { name, entries })
+            .ok_or_else(|| format!("artifact: missing [{name}] section"))
+    }
+
+    /// Whether a section exists (the plan loader uses this to distinguish
+    /// "no synthesized section" from "unreadable synthesized section").
+    pub fn has_section(&self, name: &str) -> bool {
+        self.sections.iter().any(|(n, _)| n == name)
+    }
+}
+
+/// One parsed `[section]`: ordered key/value pairs with typed accessors.
+pub struct Section<'a> {
+    name: &'a str,
+    entries: &'a [(String, String)],
+}
+
+impl<'a> Section<'a> {
+    /// The raw value of a key that must appear exactly once.
+    pub fn get(&self, key: &str) -> Result<&'a str, String> {
+        let mut found = None;
+        for (k, v) in self.entries {
+            if k == key {
+                if found.is_some() {
+                    return Err(format!(
+                        "artifact: [{}] has duplicate key '{key}'",
+                        self.name
+                    ));
+                }
+                found = Some(v.as_str());
+            }
+        }
+        found.ok_or_else(|| format!("artifact: [{}] is missing key '{key}'", self.name))
+    }
+
+    /// Every value of a repeated key, in file order.
+    pub fn get_all(&self, key: &str) -> Vec<&'a str> {
+        self.entries.iter().filter(|(k, _)| k == key).map(|(_, v)| v.as_str()).collect()
+    }
+
+    /// An escaped string value.
+    pub fn str(&self, key: &str) -> Result<String, String> {
+        unescape(self.get(key)?)
+    }
+
+    /// A bit-pattern `f64` value.
+    pub fn f64(&self, key: &str) -> Result<f64, String> {
+        f64_from_hex(self.get(key)?)
+    }
+
+    /// An unsigned integer value.
+    pub fn u64(&self, key: &str) -> Result<u64, String> {
+        let v = self.get(key)?;
+        v.trim()
+            .parse()
+            .map_err(|e| format!("artifact: [{}] key '{key}': bad integer '{v}': {e}", self.name))
+    }
+
+    /// A `usize` value.
+    pub fn usize(&self, key: &str) -> Result<usize, String> {
+        Ok(self.u64(key)? as usize)
+    }
+
+    /// A signed integer value.
+    pub fn i64(&self, key: &str) -> Result<i64, String> {
+        let v = self.get(key)?;
+        v.trim()
+            .parse()
+            .map_err(|e| format!("artifact: [{}] key '{key}': bad integer '{v}': {e}", self.name))
+    }
+
+    /// A boolean value.
+    pub fn bool(&self, key: &str) -> Result<bool, String> {
+        match self.get(key)? {
+            "true" => Ok(true),
+            "false" => Ok(false),
+            other => Err(format!(
+                "artifact: [{}] key '{key}': bad boolean '{other}'",
+                self.name
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escape_round_trips_every_special() {
+        let s = "a b\\c|d\ne\rf  |\\";
+        let e = escape(s);
+        assert!(!e.contains(' ') && !e.contains('|') && !e.contains('\n'));
+        assert_eq!(unescape(&e).unwrap(), s);
+        assert!(unescape("bad\\q").is_err());
+        assert!(unescape("dangling\\").is_err());
+    }
+
+    #[test]
+    fn f64_bits_round_trip() {
+        for v in [0.0, -0.0, 1.5, f64::NAN, f64::INFINITY, 4.7e-9, f64::MIN_POSITIVE] {
+            let back = f64_from_hex(&f64_to_hex(v)).unwrap();
+            assert_eq!(v.to_bits(), back.to_bits());
+        }
+        assert!(f64_from_hex("xyz").is_err());
+    }
+
+    #[test]
+    fn writer_reader_round_trip() {
+        let mut w = Writer::new("plan");
+        w.section("stable");
+        w.put_str("script", "X = read($1);\nwrite(X, $2);");
+        w.put_f64("ratio", 0.7);
+        w.put_u64("n", 42);
+        w.put_bool("quick", true);
+        w.section("synth");
+        w.put_raw("e", "1 2 3");
+        w.put_raw("e", "4 5 6");
+        let text = w.finish();
+
+        let r = Reader::parse(&text).unwrap();
+        assert_eq!(r.kind(), "plan");
+        let s = r.section("stable").unwrap();
+        assert_eq!(s.str("script").unwrap(), "X = read($1);\nwrite(X, $2);");
+        assert_eq!(s.f64("ratio").unwrap(), 0.7);
+        assert_eq!(s.u64("n").unwrap(), 42);
+        assert!(s.bool("quick").unwrap());
+        assert_eq!(r.section("synth").unwrap().get_all("e"), vec!["1 2 3", "4 5 6"]);
+        assert!(r.section("missing").is_err());
+        assert!(s.get("nope").is_err());
+    }
+
+    #[test]
+    fn corruption_and_truncation_are_diagnostics() {
+        let mut w = Writer::new("costcache");
+        w.section("meta");
+        w.put_u64("capacity", 1024);
+        let text = w.finish();
+
+        // bitwise corruption
+        let corrupted = text.replace("1024", "1025");
+        let err = Reader::parse(&corrupted).unwrap_err();
+        assert!(err.contains("checksum mismatch"), "{err}");
+
+        // truncation (checksum line lost)
+        let truncated = &text[..text.len() / 2];
+        let err = Reader::parse(truncated).unwrap_err();
+        assert!(err.contains("checksum") || err.contains("truncated"), "{err}");
+
+        // truncation mid-body with the checksum line still present
+        let half = format!("{}\n#! checksum 0000000000000000\n", &text[..20]);
+        assert!(Reader::parse(&half).is_err());
+
+        // wrong container version
+        let v2 = text.replace("v1 costcache", "v2 costcache");
+        let err = Reader::parse(&v2).unwrap_err();
+        assert!(err.contains("checksum") || err.contains("version"), "{err}");
+
+        // not an artifact at all
+        assert!(Reader::parse("hello world").is_err());
+        assert!(Reader::parse("").is_err());
+    }
+
+    #[test]
+    fn duplicate_scalar_keys_are_rejected() {
+        let mut w = Writer::new("profile");
+        w.section("s");
+        w.put_u64("seed", 1);
+        w.put_u64("seed", 2);
+        let text = w.finish();
+        let r = Reader::parse(&text).unwrap();
+        assert!(r.section("s").unwrap().u64("seed").is_err());
+    }
+}

@@ -1,0 +1,288 @@
+//! Persistent plan artifacts: versioned on-disk plans, cost-cache
+//! snapshots and calibration profiles (ROADMAP item 3).
+//!
+//! Everything the system learns at runtime — compiled plans, the sharded
+//! block cost cache, calibrated cost constants — dies with the process.
+//! This module serializes all three as self-describing, checksummed text
+//! artifacts (see [`codec`] for the container format) so the next
+//! process starts warm:
+//!
+//! * [`PlanArtifact`] — a compiled plan split into a **stable** section
+//!   (DML script, `$N` args, input metadata, cluster/system/cost
+//!   configuration — everything needed to regenerate the plan) and a
+//!   **synthesized** section (the 128-bit structural root hash from
+//!   [`crate::cost::cache`], per-block costs, total cost, runtime
+//!   EXPLAIN). When the payload format version or the structural hash no
+//!   longer matches what the stable section compiles to, the synthesized
+//!   section is *regenerated*, never trusted — the Regorus RVM `Program`
+//!   artifact split.
+//! * [`CacheSnapshot`] — an export of the totals-only entries of a
+//!   [`crate::cost::cache::CostCache`], shard-merged back in on load and
+//!   replayed bitwise-identically.
+//! * [`CalibrationProfile`] — the fitted [`Corrections`] and calibrated
+//!   [`CostConstants`] from [`crate::feedback`], stamped with
+//!   seed/mode/Q-error so a loaded profile is auditable.
+//!
+//! The high-level entry points are [`crate::api::save_artifact`] /
+//! [`crate::api::load_artifact`] and the `repro plan save|load|diff`
+//! CLI plus the `--warm-cache` / `--profile` flags.
+
+pub mod codec;
+pub mod plan;
+pub mod profile;
+pub mod snapshot;
+
+use std::path::Path;
+
+use crate::conf::{ClusterConfig, CostConstants, SystemConfig};
+use crate::feedback::Corrections;
+use codec::{Reader, Section, Writer};
+
+pub use plan::{LoadedPlan, PlanArtifact, PlanInput, PLAN_FORMAT_VERSION};
+pub use profile::CalibrationProfile;
+pub use snapshot::CacheSnapshot;
+
+/// One artifact of any kind, as stored on disk.
+#[derive(Clone, Debug)]
+pub enum Artifact {
+    /// A compiled plan (stable + synthesized sections).
+    Plan(PlanArtifact),
+    /// A cost-cache snapshot.
+    CacheSnapshot(CacheSnapshot),
+    /// A calibration profile.
+    Profile(CalibrationProfile),
+}
+
+impl Artifact {
+    /// The kind token written into the artifact header.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Artifact::Plan(_) => plan::KIND,
+            Artifact::CacheSnapshot(_) => snapshot::KIND,
+            Artifact::Profile(_) => profile::KIND,
+        }
+    }
+
+    /// Serialize to the on-disk text form.
+    pub fn encode(&self) -> String {
+        match self {
+            Artifact::Plan(p) => p.encode(),
+            Artifact::CacheSnapshot(s) => s.encode(),
+            Artifact::Profile(p) => p.encode(),
+        }
+    }
+
+    /// Parse any artifact kind, dispatching on the header.
+    pub fn decode(text: &str) -> Result<Artifact, String> {
+        let reader = Reader::parse(text)?;
+        match reader.kind() {
+            plan::KIND => Ok(Artifact::Plan(PlanArtifact::decode_from(&reader)?)),
+            snapshot::KIND => Ok(Artifact::CacheSnapshot(CacheSnapshot::decode_from(&reader)?)),
+            profile::KIND => Ok(Artifact::Profile(CalibrationProfile::decode_from(&reader)?)),
+            other => Err(format!(
+                "artifact: unknown kind '{other}' (this build reads '{}', '{}', '{}')",
+                plan::KIND,
+                snapshot::KIND,
+                profile::KIND
+            )),
+        }
+    }
+}
+
+/// Write an artifact to `path` (atomically: write to `<path>.tmp`, then
+/// rename, so a crash never leaves a torn artifact behind).
+pub fn save(path: &Path, artifact: &Artifact) -> Result<(), String> {
+    let text = artifact.encode();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| format!("artifact: cannot create {}: {e}", parent.display()))?;
+        }
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, &text)
+        .map_err(|e| format!("artifact: cannot write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("artifact: cannot rename {} -> {}: {e}", tmp.display(), path.display()))
+}
+
+/// Read and parse an artifact of any kind from `path`.
+pub fn load(path: &Path) -> Result<Artifact, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("artifact: cannot read {}: {e}", path.display()))?;
+    Artifact::decode(&text).map_err(|e| format!("{} — in {}", e, path.display()))
+}
+
+// ---------------------------------------------------------------------
+// Shared configuration (de)serializers — used by plan and profile
+// ---------------------------------------------------------------------
+
+pub(crate) fn put_cluster(w: &mut Writer, prefix: &str, cc: &ClusterConfig) {
+    w.put_f64(&format!("{prefix}.cp_heap_bytes"), cc.cp_heap_bytes);
+    w.put_f64(&format!("{prefix}.map_heap_bytes"), cc.map_heap_bytes);
+    w.put_f64(&format!("{prefix}.reduce_heap_bytes"), cc.reduce_heap_bytes);
+    w.put_usize(&format!("{prefix}.k_local"), cc.k_local);
+    w.put_usize(&format!("{prefix}.k_map"), cc.k_map);
+    w.put_usize(&format!("{prefix}.k_reduce"), cc.k_reduce);
+    w.put_f64(&format!("{prefix}.hdfs_block_bytes"), cc.hdfs_block_bytes);
+    w.put_usize(&format!("{prefix}.nodes"), cc.nodes);
+    w.put_usize(&format!("{prefix}.vcores_per_node"), cc.vcores_per_node);
+    w.put_f64(&format!("{prefix}.yarn_mem_per_node"), cc.yarn_mem_per_node);
+    w.put_f64(&format!("{prefix}.clock_hz"), cc.clock_hz);
+    w.put_usize(&format!("{prefix}.spark_executors"), cc.spark_executors);
+    w.put_usize(&format!("{prefix}.spark_executor_cores"), cc.spark_executor_cores);
+    w.put_f64(&format!("{prefix}.spark_executor_mem_bytes"), cc.spark_executor_mem_bytes);
+}
+
+pub(crate) fn get_cluster(s: &Section<'_>, prefix: &str) -> Result<ClusterConfig, String> {
+    Ok(ClusterConfig {
+        cp_heap_bytes: s.f64(&format!("{prefix}.cp_heap_bytes"))?,
+        map_heap_bytes: s.f64(&format!("{prefix}.map_heap_bytes"))?,
+        reduce_heap_bytes: s.f64(&format!("{prefix}.reduce_heap_bytes"))?,
+        k_local: s.usize(&format!("{prefix}.k_local"))?,
+        k_map: s.usize(&format!("{prefix}.k_map"))?,
+        k_reduce: s.usize(&format!("{prefix}.k_reduce"))?,
+        hdfs_block_bytes: s.f64(&format!("{prefix}.hdfs_block_bytes"))?,
+        nodes: s.usize(&format!("{prefix}.nodes"))?,
+        vcores_per_node: s.usize(&format!("{prefix}.vcores_per_node"))?,
+        yarn_mem_per_node: s.f64(&format!("{prefix}.yarn_mem_per_node"))?,
+        clock_hz: s.f64(&format!("{prefix}.clock_hz"))?,
+        spark_executors: s.usize(&format!("{prefix}.spark_executors"))?,
+        spark_executor_cores: s.usize(&format!("{prefix}.spark_executor_cores"))?,
+        spark_executor_mem_bytes: s.f64(&format!("{prefix}.spark_executor_mem_bytes"))?,
+    })
+}
+
+pub(crate) fn put_sysconf(w: &mut Writer, prefix: &str, cfg: &SystemConfig) {
+    w.put_i64(&format!("{prefix}.blocksize"), cfg.blocksize);
+    w.put_f64(&format!("{prefix}.mem_budget_ratio"), cfg.mem_budget_ratio);
+    w.put_usize(&format!("{prefix}.num_reducers"), cfg.num_reducers);
+    w.put_usize(&format!("{prefix}.replication"), cfg.replication);
+    w.put_f64(&format!("{prefix}.sparse_threshold"), cfg.sparse_threshold);
+    w.put_f64(&format!("{prefix}.unknown_iterations"), cfg.unknown_iterations);
+    w.put_f64(&format!("{prefix}.partition_bytes"), cfg.partition_bytes);
+}
+
+pub(crate) fn get_sysconf(s: &Section<'_>, prefix: &str) -> Result<SystemConfig, String> {
+    Ok(SystemConfig {
+        blocksize: s.i64(&format!("{prefix}.blocksize"))?,
+        mem_budget_ratio: s.f64(&format!("{prefix}.mem_budget_ratio"))?,
+        num_reducers: s.usize(&format!("{prefix}.num_reducers"))?,
+        replication: s.usize(&format!("{prefix}.replication"))?,
+        sparse_threshold: s.f64(&format!("{prefix}.sparse_threshold"))?,
+        unknown_iterations: s.f64(&format!("{prefix}.unknown_iterations"))?,
+        partition_bytes: s.f64(&format!("{prefix}.partition_bytes"))?,
+    })
+}
+
+pub(crate) fn put_constants(w: &mut Writer, prefix: &str, k: &CostConstants) {
+    w.put_f64(&format!("{prefix}.hdfs_read_binaryblock"), k.hdfs_read_binaryblock);
+    w.put_f64(&format!("{prefix}.hdfs_read_text"), k.hdfs_read_text);
+    w.put_f64(&format!("{prefix}.hdfs_write_binaryblock"), k.hdfs_write_binaryblock);
+    w.put_f64(&format!("{prefix}.hdfs_write_text"), k.hdfs_write_text);
+    w.put_f64(&format!("{prefix}.local_read"), k.local_read);
+    w.put_f64(&format!("{prefix}.local_write"), k.local_write);
+    w.put_f64(&format!("{prefix}.dcache_read"), k.dcache_read);
+    w.put_f64(&format!("{prefix}.shuffle_bw"), k.shuffle_bw);
+    w.put_f64(&format!("{prefix}.mem_bw"), k.mem_bw);
+    w.put_f64(&format!("{prefix}.job_latency"), k.job_latency);
+    w.put_f64(&format!("{prefix}.task_latency"), k.task_latency);
+    w.put_f64(&format!("{prefix}.bookkeeping"), k.bookkeeping);
+    w.put_f64(&format!("{prefix}.dop_scale"), k.dop_scale);
+    w.put_f64(&format!("{prefix}.spark_job_latency"), k.spark_job_latency);
+    w.put_f64(&format!("{prefix}.spark_stage_latency"), k.spark_stage_latency);
+    w.put_f64(&format!("{prefix}.spark_task_latency"), k.spark_task_latency);
+    w.put_f64(&format!("{prefix}.spark_shuffle_write"), k.spark_shuffle_write);
+    w.put_f64(&format!("{prefix}.spark_shuffle_read"), k.spark_shuffle_read);
+    w.put_f64(&format!("{prefix}.spark_broadcast_bw"), k.spark_broadcast_bw);
+    w.put_f64(&format!("{prefix}.flop_efficiency"), k.flop_efficiency);
+}
+
+pub(crate) fn get_constants(s: &Section<'_>, prefix: &str) -> Result<CostConstants, String> {
+    Ok(CostConstants {
+        hdfs_read_binaryblock: s.f64(&format!("{prefix}.hdfs_read_binaryblock"))?,
+        hdfs_read_text: s.f64(&format!("{prefix}.hdfs_read_text"))?,
+        hdfs_write_binaryblock: s.f64(&format!("{prefix}.hdfs_write_binaryblock"))?,
+        hdfs_write_text: s.f64(&format!("{prefix}.hdfs_write_text"))?,
+        local_read: s.f64(&format!("{prefix}.local_read"))?,
+        local_write: s.f64(&format!("{prefix}.local_write"))?,
+        dcache_read: s.f64(&format!("{prefix}.dcache_read"))?,
+        shuffle_bw: s.f64(&format!("{prefix}.shuffle_bw"))?,
+        mem_bw: s.f64(&format!("{prefix}.mem_bw"))?,
+        job_latency: s.f64(&format!("{prefix}.job_latency"))?,
+        task_latency: s.f64(&format!("{prefix}.task_latency"))?,
+        bookkeeping: s.f64(&format!("{prefix}.bookkeeping"))?,
+        dop_scale: s.f64(&format!("{prefix}.dop_scale"))?,
+        spark_job_latency: s.f64(&format!("{prefix}.spark_job_latency"))?,
+        spark_stage_latency: s.f64(&format!("{prefix}.spark_stage_latency"))?,
+        spark_task_latency: s.f64(&format!("{prefix}.spark_task_latency"))?,
+        spark_shuffle_write: s.f64(&format!("{prefix}.spark_shuffle_write"))?,
+        spark_shuffle_read: s.f64(&format!("{prefix}.spark_shuffle_read"))?,
+        spark_broadcast_bw: s.f64(&format!("{prefix}.spark_broadcast_bw"))?,
+        flop_efficiency: s.f64(&format!("{prefix}.flop_efficiency"))?,
+    })
+}
+
+pub(crate) fn put_corrections(w: &mut Writer, prefix: &str, c: &Corrections) {
+    w.put_f64(&format!("{prefix}.compute"), c.compute);
+    w.put_f64(&format!("{prefix}.read"), c.read);
+    w.put_f64(&format!("{prefix}.write"), c.write);
+    w.put_f64(&format!("{prefix}.latency"), c.latency);
+    w.put_f64(&format!("{prefix}.distributed"), c.distributed);
+}
+
+pub(crate) fn get_corrections(s: &Section<'_>, prefix: &str) -> Result<Corrections, String> {
+    Ok(Corrections {
+        compute: s.f64(&format!("{prefix}.compute"))?,
+        read: s.f64(&format!("{prefix}.read"))?,
+        write: s.f64(&format!("{prefix}.write"))?,
+        latency: s.f64(&format!("{prefix}.latency"))?,
+        distributed: s.f64(&format!("{prefix}.distributed"))?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_serializers_round_trip_bitwise() {
+        let cc = ClusterConfig::paper_cluster();
+        let cfg = SystemConfig::default();
+        let k = CostConstants::default();
+        let mut w = Writer::new("plan");
+        w.section("s");
+        put_cluster(&mut w, "cc", &cc);
+        put_sysconf(&mut w, "cfg", &cfg);
+        put_constants(&mut w, "k", &k);
+        let text = w.finish();
+        let r = Reader::parse(&text).unwrap();
+        let s = r.section("s").unwrap();
+        assert_eq!(get_cluster(&s, "cc").unwrap(), cc);
+        assert_eq!(get_sysconf(&s, "cfg").unwrap(), cfg);
+        assert_eq!(get_constants(&s, "k").unwrap(), k);
+    }
+
+    #[test]
+    fn unknown_kind_is_a_diagnostic() {
+        let w = Writer::new("mystery");
+        let text = w.finish();
+        let err = Artifact::decode(&text).unwrap_err();
+        assert!(err.contains("unknown kind"), "{err}");
+    }
+
+    #[test]
+    fn save_load_round_trips_via_fs() {
+        let dir = std::env::temp_dir().join(format!("sysds_artifact_test_{}", std::process::id()));
+        let path = dir.join("cache.sysdsart");
+        let snap = CacheSnapshot::empty(1024);
+        save(&path, &Artifact::CacheSnapshot(snap)).unwrap();
+        match load(&path).unwrap() {
+            Artifact::CacheSnapshot(s) => assert_eq!(s.capacity(), 1024),
+            other => panic!("wrong kind: {other:?}"),
+        }
+        let err = load(&dir.join("missing.sysdsart")).unwrap_err();
+        assert!(err.contains("cannot read"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

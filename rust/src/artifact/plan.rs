@@ -1,0 +1,490 @@
+//! Plan artifacts: a compiled runtime plan persisted as a **stable**
+//! section (everything needed to regenerate the plan — DML script, `$N`
+//! args, input metadata, cluster/system/cost configuration, selection
+//! hints) plus a **synthesized** section (the structural root hash from
+//! [`crate::cost::cache::program_hashes`], per-block costs, the total
+//! cost and the runtime EXPLAIN).
+//!
+//! The split follows the Regorus RVM `Program` artifact: the synthesized
+//! half is a *cache*, not a source of truth. [`PlanArtifact::load_checked`]
+//! always recompiles the stable section and compares (a) the payload
+//! format version and (b) the 128-bit structural root hash against the
+//! stored synthesized section — on any mismatch the synthesized section
+//! is regenerated from the stable one (and the load reports why), never
+//! trusted stale and never a hard error.
+
+use std::collections::HashMap;
+
+use crate::api::{compile_with_meta, ClusterConfigOpt, CompileOptions, CompiledProgram};
+use crate::conf::{ClusterConfig, CostConstants, SystemConfig};
+use crate::cost::cache::{program_hashes, ProgramHashes};
+use crate::cost::cost_program;
+use crate::ir::build::StaticMeta;
+use crate::lop::SelectionHints;
+use crate::matrix::{Format, MatrixCharacteristics};
+use crate::rtprog::ExecBackend;
+
+use super::codec::{f64_to_hex, Reader, Writer};
+
+/// Header kind token for plan artifacts.
+pub const KIND: &str = "plan";
+
+/// Version of the *synthesized payload* layout. Stored in the stable
+/// section; a loaded artifact whose stored version differs has its
+/// synthesized section regenerated from the stable section.
+pub const PLAN_FORMAT_VERSION: u32 = 1;
+
+/// One persistent-read input: abstract path plus the static metadata the
+/// compiler sees (the [`StaticMeta`] entry, flattened).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanInput {
+    /// Abstract input path the script `read()`s.
+    pub path: String,
+    /// Size metadata (dims, blocking, nnz).
+    pub mc: MatrixCharacteristics,
+    /// On-disk format.
+    pub format: Format,
+}
+
+/// A compiled plan as stored on disk (stable + synthesized sections).
+#[derive(Clone, Debug)]
+pub struct PlanArtifact {
+    // ----- stable section -----
+    /// DML script source text.
+    pub script: String,
+    /// `$N` argument bindings, sorted by position.
+    pub args: Vec<(usize, String)>,
+    /// Input metadata (sorted by path).
+    pub inputs: Vec<PlanInput>,
+    /// Default execution backend.
+    pub backend: ExecBackend,
+    /// Compiler/system configuration.
+    pub cfg: SystemConfig,
+    /// Cluster characteristics `cc`.
+    pub cc: ClusterConfig,
+    /// Physical-operator selection hints.
+    pub hints: SelectionHints,
+    /// Cost constants the synthesized costs were computed under.
+    pub constants: CostConstants,
+    /// Payload version the synthesized section was written with.
+    pub synth_version: u32,
+    // ----- synthesized section -----
+    /// 128-bit structural root hash of the generated runtime program.
+    pub root: (u64, u64),
+    /// Estimated total cost `C(P, cc)` in seconds (bitwise-exact).
+    pub total: f64,
+    /// Per-top-level-block structural hash and cost.
+    pub blocks: Vec<((u64, u64), f64)>,
+    /// Plan size: CP instructions, MR jobs, Spark jobs.
+    pub size: (usize, usize, usize),
+    /// Runtime EXPLAIN of the generated plan.
+    pub explain: String,
+}
+
+/// The result of loading (and validating) a plan artifact: the artifact
+/// with a trustworthy synthesized section, plus the freshly compiled
+/// program it was validated against.
+#[derive(Clone, Debug)]
+pub struct LoadedPlan {
+    /// The artifact; its synthesized section has been regenerated if the
+    /// stored one was stale.
+    pub artifact: PlanArtifact,
+    /// The program recompiled from the stable section.
+    pub compiled: CompiledProgram,
+    /// Structural hashes of `compiled` (reusable for cached costing).
+    pub hashes: ProgramHashes,
+    /// Whether the synthesized section was regenerated on load.
+    pub regenerated: bool,
+    /// Why it was regenerated (version or hash mismatch), if it was.
+    pub reason: Option<String>,
+    /// The EXPLAIN text as stored on disk (before any regeneration),
+    /// kept for diffing against the fresh plan.
+    pub stored_explain: String,
+}
+
+impl LoadedPlan {
+    /// LCS diff between the stored EXPLAIN and the freshly compiled one.
+    /// All-context (no `-`/`+` lines) means the plans are identical.
+    pub fn explain_diff(&self) -> String {
+        crate::opt::gdf::line_diff(&self.stored_explain, &self.artifact.explain)
+    }
+
+    /// Whether the stored and fresh EXPLAINs are line-identical.
+    pub fn plan_unchanged(&self) -> bool {
+        self.stored_explain == self.artifact.explain
+    }
+}
+
+impl PlanArtifact {
+    /// Compile `script` and capture both sections of a plan artifact.
+    pub fn capture(
+        script: &str,
+        args: &HashMap<usize, String>,
+        meta: &StaticMeta,
+        opts: &CompileOptions,
+        constants: &CostConstants,
+    ) -> Result<PlanArtifact, String> {
+        let mut args: Vec<(usize, String)> =
+            args.iter().map(|(&n, v)| (n, v.clone())).collect();
+        args.sort_unstable_by_key(|(n, _)| *n);
+        let mut inputs: Vec<PlanInput> = meta
+            .0
+            .iter()
+            .map(|(path, &(mc, format))| PlanInput { path: path.clone(), mc, format })
+            .collect();
+        inputs.sort_unstable_by(|a, b| a.path.cmp(&b.path));
+        let mut art = PlanArtifact {
+            script: script.to_string(),
+            args,
+            inputs,
+            backend: opts.backend,
+            cfg: opts.cfg.clone(),
+            cc: opts.cc.0.clone(),
+            hints: opts.hints.clone(),
+            constants: constants.clone(),
+            synth_version: PLAN_FORMAT_VERSION,
+            root: (0, 0),
+            total: 0.0,
+            blocks: Vec::new(),
+            size: (0, 0, 0),
+            explain: String::new(),
+        };
+        let (compiled, hashes) = art.recompile()?;
+        art.resynthesize(&compiled, &hashes);
+        Ok(art)
+    }
+
+    /// Recompile the stable section into a runtime program (the
+    /// synthesized section is ignored — this is the regeneration path).
+    pub fn recompile(&self) -> Result<(CompiledProgram, ProgramHashes), String> {
+        let args: HashMap<usize, String> = self.args.iter().cloned().collect();
+        let mut meta = StaticMeta::default();
+        for input in &self.inputs {
+            meta = meta.with(&input.path, input.mc, input.format);
+        }
+        let opts = CompileOptions {
+            cfg: self.cfg.clone(),
+            cc: ClusterConfigOpt(self.cc.clone()),
+            hints: self.hints.clone(),
+            backend: self.backend,
+        };
+        let compiled = compile_with_meta(&self.script, &args, &meta, &opts)?;
+        let hashes = program_hashes(&compiled.runtime);
+        Ok((compiled, hashes))
+    }
+
+    /// Overwrite the synthesized section from a freshly compiled program.
+    fn resynthesize(&mut self, compiled: &CompiledProgram, hashes: &ProgramHashes) {
+        let report = cost_program(&compiled.runtime, &self.cfg, &self.cc, &self.constants);
+        self.root = hashes.root();
+        self.total = report.total;
+        self.blocks = hashes
+            .block_roots()
+            .into_iter()
+            .zip(report.nodes.iter().map(|n| n.total()))
+            .collect();
+        self.size = compiled.runtime.size3();
+        self.explain = compiled.explain_runtime();
+        self.synth_version = PLAN_FORMAT_VERSION;
+    }
+
+    /// Validate the synthesized section against a fresh compile of the
+    /// stable section, regenerating it on a payload-version or
+    /// structural-hash mismatch. This is *the* way to consume a plan
+    /// artifact: the result's synthesized data is always trustworthy.
+    pub fn load_checked(mut self) -> Result<LoadedPlan, String> {
+        let (compiled, hashes) = self.recompile()?;
+        let stored_explain = self.explain.clone();
+        let reason = if self.synth_version != PLAN_FORMAT_VERSION {
+            Some(format!(
+                "synthesized payload version v{} != current v{PLAN_FORMAT_VERSION}",
+                self.synth_version
+            ))
+        } else if self.root != hashes.root() {
+            Some(format!(
+                "structural hash mismatch: stored {:016x}{:016x}, recompiled {:016x}{:016x}",
+                self.root.0,
+                self.root.1,
+                hashes.root().0,
+                hashes.root().1
+            ))
+        } else {
+            None
+        };
+        let regenerated = reason.is_some();
+        if regenerated {
+            self.resynthesize(&compiled, &hashes);
+        }
+        Ok(LoadedPlan { artifact: self, compiled, hashes, regenerated, reason, stored_explain })
+    }
+
+    /// One-paragraph human summary (used by `repro plan load`).
+    pub fn describe(&self) -> String {
+        let (cp, mr, sp) = self.size;
+        format!(
+            "plan: backend={} blocks={} size CP/MR/SPARK={}/{}/{} total={:.3}s root={:016x}{:016x} inputs={}",
+            self.backend.name(),
+            self.blocks.len(),
+            cp,
+            mr,
+            sp,
+            self.total,
+            self.root.0,
+            self.root.1,
+            self.inputs.len()
+        )
+    }
+
+    /// Serialize to the artifact text form.
+    pub fn encode(&self) -> String {
+        let mut w = Writer::new(KIND);
+        w.section("stable");
+        w.put_u64("synth_version", self.synth_version as u64);
+        w.put_str("script", &self.script);
+        w.put_raw("backend", self.backend.name());
+        for (n, v) in &self.args {
+            w.put_str(&format!("arg.{n}"), v);
+            w.put_u64("arg", *n as u64);
+        }
+        for input in &self.inputs {
+            let mc = &input.mc;
+            w.put_raw(
+                "input",
+                &format!(
+                    "{}|{}|{}|{}|{}|{}|{}",
+                    super::codec::escape(&input.path),
+                    mc.rows,
+                    mc.cols,
+                    mc.brows,
+                    mc.bcols,
+                    mc.nnz,
+                    input.format.name()
+                ),
+            );
+        }
+        w.put_bool("hints.force_cpmm", self.hints.force_cpmm);
+        w.put_bool("hints.force_rmm", self.hints.force_rmm);
+        w.put_bool("hints.no_transpose_rewrite", self.hints.no_transpose_rewrite);
+        super::put_sysconf(&mut w, "cfg", &self.cfg);
+        super::put_cluster(&mut w, "cc", &self.cc);
+        super::put_constants(&mut w, "k", &self.constants);
+        w.section("synthesized");
+        w.put_raw("root", &format!("{:016x} {:016x}", self.root.0, self.root.1));
+        w.put_f64("total", self.total);
+        w.put_usize("size.cp", self.size.0);
+        w.put_usize("size.mr", self.size.1);
+        w.put_usize("size.spark", self.size.2);
+        for ((h1, h2), cost) in &self.blocks {
+            w.put_raw("block", &format!("{h1:016x} {h2:016x} {}", f64_to_hex(*cost)));
+        }
+        w.put_str("explain", &self.explain);
+        w.finish()
+    }
+
+    /// Parse from the artifact text form.
+    pub fn decode(text: &str) -> Result<Self, String> {
+        let reader = Reader::parse(text)?;
+        if reader.kind() != KIND {
+            return Err(format!("artifact: expected a '{KIND}' artifact, got '{}'", reader.kind()));
+        }
+        Self::decode_from(&reader)
+    }
+
+    pub(crate) fn decode_from(reader: &Reader) -> Result<Self, String> {
+        let stable = reader.section("stable")?;
+        let synth_version = stable.u64("synth_version")? as u32;
+        let script = stable.str("script")?;
+        let backend_name = stable.get("backend")?;
+        let backend = ExecBackend::parse(backend_name)
+            .ok_or_else(|| format!("artifact: unknown backend '{backend_name}'"))?;
+        let mut args = Vec::new();
+        for n_raw in stable.get_all("arg") {
+            let n: usize = n_raw
+                .parse()
+                .map_err(|e| format!("artifact: bad arg position '{n_raw}': {e}"))?;
+            args.push((n, stable.str(&format!("arg.{n}"))?));
+        }
+        let mut inputs = Vec::new();
+        for row in stable.get_all("input") {
+            let fields: Vec<&str> = row.split('|').collect();
+            if fields.len() != 7 {
+                return Err(format!(
+                    "artifact: input row has {} fields, expected 7: '{row}'",
+                    fields.len()
+                ));
+            }
+            let int = |s: &str| -> Result<i64, String> {
+                s.parse().map_err(|e| format!("artifact: bad input dimension '{s}': {e}"))
+            };
+            inputs.push(PlanInput {
+                path: super::codec::unescape(fields[0])?,
+                mc: MatrixCharacteristics {
+                    rows: int(fields[1])?,
+                    cols: int(fields[2])?,
+                    brows: int(fields[3])?,
+                    bcols: int(fields[4])?,
+                    nnz: int(fields[5])?,
+                },
+                format: Format::parse(fields[6])
+                    .ok_or_else(|| format!("artifact: unknown input format '{}'", fields[6]))?,
+            });
+        }
+        let hints = SelectionHints {
+            force_cpmm: stable.bool("hints.force_cpmm")?,
+            force_rmm: stable.bool("hints.force_rmm")?,
+            no_transpose_rewrite: stable.bool("hints.no_transpose_rewrite")?,
+        };
+        let cfg = super::get_sysconf(&stable, "cfg")?;
+        let cc = super::get_cluster(&stable, "cc")?;
+        let constants = super::get_constants(&stable, "k")?;
+
+        let synth = reader.section("synthesized")?;
+        let root_raw = synth.get("root")?;
+        let root = parse_hash_pair(root_raw)
+            .ok_or_else(|| format!("artifact: bad root hash '{root_raw}'"))?;
+        let total = synth.f64("total")?;
+        let size = (synth.usize("size.cp")?, synth.usize("size.mr")?, synth.usize("size.spark")?);
+        let mut blocks = Vec::new();
+        for row in synth.get_all("block") {
+            let mut parts = row.split(' ');
+            let pair = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+                (Some(h1), Some(h2), Some(cost), None) => {
+                    let hash = parse_hash_pair(&format!("{h1} {h2}"));
+                    let cost = super::codec::f64_from_hex(cost).ok();
+                    hash.zip(cost)
+                }
+                _ => None,
+            };
+            let (hash, cost) =
+                pair.ok_or_else(|| format!("artifact: bad block row '{row}'"))?;
+            blocks.push((hash, cost));
+        }
+        let explain = synth.str("explain")?;
+
+        Ok(PlanArtifact {
+            script,
+            args,
+            inputs,
+            backend,
+            cfg,
+            cc,
+            hints,
+            constants,
+            synth_version,
+            root,
+            total,
+            blocks,
+            size,
+            explain,
+        })
+    }
+}
+
+fn parse_hash_pair(s: &str) -> Option<(u64, u64)> {
+    let (a, b) = s.split_once(' ')?;
+    Some((u64::from_str_radix(a, 16).ok()?, u64::from_str_radix(b, 16).ok()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Scenario;
+
+    fn xs_artifact() -> PlanArtifact {
+        let s = Scenario::xs();
+        let opts = CompileOptions::default();
+        PlanArtifact::capture(
+            s.script(),
+            &s.args(),
+            &s.meta(opts.cfg.blocksize),
+            &opts,
+            &CostConstants::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn capture_encode_decode_is_identity() {
+        let art = xs_artifact();
+        assert!(art.total > 0.0);
+        assert!(!art.blocks.is_empty());
+        let text = art.encode();
+        let back = PlanArtifact::decode(&text).unwrap();
+        assert_eq!(back.script, art.script);
+        assert_eq!(back.args, art.args);
+        assert_eq!(back.inputs, art.inputs);
+        assert_eq!(back.backend, art.backend);
+        assert_eq!(back.cfg, art.cfg);
+        assert_eq!(back.cc, art.cc);
+        assert_eq!(back.constants, art.constants);
+        assert_eq!(back.root, art.root);
+        assert_eq!(back.total.to_bits(), art.total.to_bits());
+        assert_eq!(back.blocks, art.blocks);
+        assert_eq!(back.size, art.size);
+        assert_eq!(back.explain, art.explain);
+        // and the re-encode is byte-identical (stable output order)
+        assert_eq!(back.encode(), text);
+    }
+
+    #[test]
+    fn fresh_artifact_loads_without_regeneration() {
+        let loaded = xs_artifact().load_checked().unwrap();
+        assert!(!loaded.regenerated);
+        assert!(loaded.reason.is_none());
+        assert!(loaded.plan_unchanged());
+        assert!(loaded.explain_diff().lines().all(|l| l.starts_with("  ")));
+    }
+
+    #[test]
+    fn version_mismatch_regenerates_synthesized() {
+        let mut art = xs_artifact();
+        let true_total = art.total;
+        art.synth_version = 999;
+        art.total = -1.0; // poisoned synthesized data must not survive
+        let loaded = art.load_checked().unwrap();
+        assert!(loaded.regenerated);
+        assert!(loaded.reason.as_ref().unwrap().contains("version"), "{:?}", loaded.reason);
+        assert_eq!(loaded.artifact.total.to_bits(), true_total.to_bits());
+        assert_eq!(loaded.artifact.synth_version, PLAN_FORMAT_VERSION);
+    }
+
+    #[test]
+    fn structural_hash_mismatch_regenerates_synthesized() {
+        let mut art = xs_artifact();
+        let true_root = art.root;
+        art.root = (0xdead, 0xbeef);
+        art.explain = "STALE".to_string();
+        let loaded = art.load_checked().unwrap();
+        assert!(loaded.regenerated);
+        assert!(loaded.reason.as_ref().unwrap().contains("hash mismatch"), "{:?}", loaded.reason);
+        assert_eq!(loaded.artifact.root, true_root);
+        assert_ne!(loaded.artifact.explain, "STALE");
+        assert_eq!(loaded.stored_explain, "STALE");
+        assert!(!loaded.plan_unchanged());
+    }
+
+    #[test]
+    fn stable_edit_changes_hash_and_triggers_regeneration() {
+        // edit the stable section only (bigger input): the stored root no
+        // longer matches what the stable section compiles to
+        let mut art = xs_artifact();
+        for input in &mut art.inputs {
+            if input.path == "data/X" {
+                input.mc = MatrixCharacteristics::dense(100_000_000, 1000, 1000);
+            }
+        }
+        let loaded = art.load_checked().unwrap();
+        assert!(loaded.regenerated);
+        assert!(loaded.artifact.size.1 > 0, "XL-sized input must distribute");
+    }
+
+    #[test]
+    fn synthesized_total_matches_cost_program_bitwise() {
+        let art = xs_artifact();
+        let (compiled, _) = art.recompile().unwrap();
+        let report = cost_program(&compiled.runtime, &art.cfg, &art.cc, &art.constants);
+        assert_eq!(report.total.to_bits(), art.total.to_bits());
+        let block_sum: f64 = art.blocks.iter().map(|(_, c)| c).sum();
+        assert!((block_sum - art.total).abs() < 1e-9 * art.total.max(1.0));
+    }
+}

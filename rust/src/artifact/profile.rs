@@ -1,0 +1,215 @@
+//! Calibration profiles: the fitted [`Corrections`] and calibrated
+//! [`CostConstants`] from a [`crate::feedback`] run, stamped with the
+//! provenance needed to audit a loaded profile — seed, measurement mode,
+//! case/record counts and before/after Q-error.
+//!
+//! A profile is the artifact the `--profile <path>` flag consumes: any
+//! optimizer (`sweep`, `resource`, `gdf`) can run under constants
+//! calibrated by an earlier `repro calibrate --save-profile` without
+//! re-measuring anything.
+
+use crate::conf::CostConstants;
+use crate::feedback::{CalibrateOptions, CalibrationReport, Corrections, MeasureMode, QErrorSummary};
+
+use super::codec::{Reader, Section, Writer};
+
+/// Header kind token for calibration profiles.
+pub const KIND: &str = "profile";
+
+/// A persisted calibration outcome (see the module docs).
+#[derive(Clone, Debug)]
+pub struct CalibrationProfile {
+    /// RNG seed the calibration ran with.
+    pub seed: u64,
+    /// Measurement mode: `"execute"` or `"simulated(noise=…)"`.
+    pub mode: String,
+    /// Whether the quick (CI-sized) workload set was used.
+    pub quick: bool,
+    /// Number of calibration cases measured.
+    pub cases: usize,
+    /// Number of per-block records the fit saw.
+    pub records: usize,
+    /// The fitted per-group multiplicative corrections.
+    pub corrections: Corrections,
+    /// The constants calibration started from.
+    pub initial: CostConstants,
+    /// The corrected constants (`corrections.apply(&initial)`).
+    pub calibrated: CostConstants,
+    /// Q-error under the initial constants.
+    pub before: QErrorSummary,
+    /// Q-error under the calibrated constants.
+    pub after: QErrorSummary,
+}
+
+impl CalibrationProfile {
+    /// Capture a profile from a finished calibration run.
+    pub fn from_report(report: &CalibrationReport, opts: &CalibrateOptions) -> Self {
+        let mode = match opts.mode {
+            MeasureMode::Execute => "execute".to_string(),
+            MeasureMode::Simulated { noise } => format!("simulated(noise={noise})"),
+        };
+        CalibrationProfile {
+            seed: opts.seed,
+            mode,
+            quick: opts.quick,
+            cases: report.cases,
+            records: report.records.len(),
+            corrections: report.corrections.clone(),
+            initial: report.initial.clone(),
+            calibrated: report.calibrated.clone(),
+            before: report.before,
+            after: report.after,
+        }
+    }
+
+    /// The constants an optimizer should run under when this profile is
+    /// loaded.
+    pub fn constants(&self) -> &CostConstants {
+        &self.calibrated
+    }
+
+    /// One-line provenance summary (printed when a profile is loaded, so
+    /// the run is auditable).
+    pub fn summary(&self) -> String {
+        format!(
+            "profile: seed={} mode={} quick={} cases={} records={} qerror geo-mean {:.3} -> {:.3}",
+            self.seed,
+            self.mode,
+            self.quick,
+            self.cases,
+            self.records,
+            self.before.geo_mean,
+            self.after.geo_mean
+        )
+    }
+
+    /// Serialize to the artifact text form.
+    pub fn encode(&self) -> String {
+        let mut w = Writer::new(KIND);
+        w.section("provenance");
+        w.put_u64("seed", self.seed);
+        w.put_str("mode", &self.mode);
+        w.put_bool("quick", self.quick);
+        w.put_usize("cases", self.cases);
+        w.put_usize("records", self.records);
+        put_qerror(&mut w, "before", &self.before);
+        put_qerror(&mut w, "after", &self.after);
+        w.section("constants");
+        super::put_corrections(&mut w, "corrections", &self.corrections);
+        super::put_constants(&mut w, "initial", &self.initial);
+        super::put_constants(&mut w, "calibrated", &self.calibrated);
+        w.finish()
+    }
+
+    /// Parse from the artifact text form.
+    pub fn decode(text: &str) -> Result<Self, String> {
+        let reader = Reader::parse(text)?;
+        if reader.kind() != KIND {
+            return Err(format!("artifact: expected a '{KIND}' artifact, got '{}'", reader.kind()));
+        }
+        Self::decode_from(&reader)
+    }
+
+    pub(crate) fn decode_from(reader: &Reader) -> Result<Self, String> {
+        let p = reader.section("provenance")?;
+        let c = reader.section("constants")?;
+        let profile = CalibrationProfile {
+            seed: p.u64("seed")?,
+            mode: p.str("mode")?,
+            quick: p.bool("quick")?,
+            cases: p.usize("cases")?,
+            records: p.usize("records")?,
+            before: get_qerror(&p, "before")?,
+            after: get_qerror(&p, "after")?,
+            corrections: super::get_corrections(&c, "corrections")?,
+            initial: super::get_constants(&c, "initial")?,
+            calibrated: super::get_constants(&c, "calibrated")?,
+        };
+        // a profile whose calibrated constants cannot be priced (zero or
+        // non-finite bandwidths) must fail at load time, not poison a run
+        profile
+            .calibrated
+            .validate()
+            .map_err(|e| format!("artifact: profile carries unusable constants: {e}"))?;
+        Ok(profile)
+    }
+}
+
+fn put_qerror(w: &mut Writer, prefix: &str, q: &QErrorSummary) {
+    w.put_usize(&format!("{prefix}.n"), q.n);
+    w.put_f64(&format!("{prefix}.geo_mean"), q.geo_mean);
+    w.put_f64(&format!("{prefix}.p95"), q.p95);
+    w.put_f64(&format!("{prefix}.within_2x"), q.within_2x);
+}
+
+fn get_qerror(s: &Section<'_>, prefix: &str) -> Result<QErrorSummary, String> {
+    Ok(QErrorSummary {
+        n: s.usize(&format!("{prefix}.n"))?,
+        geo_mean: s.f64(&format!("{prefix}.geo_mean"))?,
+        p95: s.f64(&format!("{prefix}.p95"))?,
+        within_2x: s.f64(&format!("{prefix}.within_2x"))?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CalibrationProfile {
+        let corrections = Corrections {
+            compute: 1.5,
+            read: 0.8,
+            write: 1.0,
+            latency: 2.0,
+            distributed: 1.1,
+        };
+        let initial = CostConstants::default();
+        let calibrated = corrections.apply(&initial);
+        CalibrationProfile {
+            seed: 42,
+            mode: "simulated(noise=0.05)".to_string(),
+            quick: true,
+            cases: 6,
+            records: 120,
+            corrections,
+            initial,
+            calibrated,
+            before: QErrorSummary { n: 120, geo_mean: 1.9, p95: 3.4, within_2x: 0.55 },
+            after: QErrorSummary { n: 120, geo_mean: 1.1, p95: 1.6, within_2x: 0.97 },
+        }
+    }
+
+    #[test]
+    fn profile_round_trips_bitwise() {
+        let p = sample();
+        let text = p.encode();
+        let back = CalibrationProfile::decode(&text).unwrap();
+        assert_eq!(back.seed, p.seed);
+        assert_eq!(back.mode, p.mode);
+        assert_eq!(back.quick, p.quick);
+        assert_eq!(back.cases, p.cases);
+        assert_eq!(back.records, p.records);
+        assert_eq!(back.calibrated, p.calibrated);
+        assert_eq!(back.initial, p.initial);
+        assert_eq!(back.corrections.compute.to_bits(), p.corrections.compute.to_bits());
+        assert_eq!(back.before.geo_mean.to_bits(), p.before.geo_mean.to_bits());
+        assert_eq!(back.after.within_2x.to_bits(), p.after.within_2x.to_bits());
+        assert_eq!(back.encode(), text);
+    }
+
+    #[test]
+    fn unusable_constants_rejected_at_load() {
+        let mut p = sample();
+        p.calibrated.mem_bw = 0.0;
+        let text = p.encode();
+        let err = CalibrationProfile::decode(&text).unwrap_err();
+        assert!(err.contains("unusable constants"), "{err}");
+    }
+
+    #[test]
+    fn summary_names_the_provenance() {
+        let s = sample().summary();
+        assert!(s.contains("seed=42"), "{s}");
+        assert!(s.contains("simulated"), "{s}");
+    }
+}

@@ -1,0 +1,279 @@
+//! Cost-cache snapshots: export the totals-only entries of a
+//! [`CostCache`] to disk and shard-merge them back on load.
+//!
+//! Only totals-only entries (the flat `Block { label: "", children: [] }`
+//! nodes the candidate evaluator's `emit_nodes = false` path caches) are
+//! exported: they are the shape every optimizer replays, and the
+//! `emit_nodes` bit participates in the knob fingerprint so the two
+//! costing modes can never alias. Each entry carries its full 384-bit
+//! cache key (structural × state × knob fingerprints), the bitwise cost
+//! total and the *outgoing* variable-state table needed to resume
+//! sequential block costing after a hit — the same `CachedBlockCost`
+//! payload the in-process cache stores.
+//!
+//! Import goes through the normal [`CostCache`] insert path, so the FIFO
+//! capacity bound and shard layout are respected: loading a snapshot
+//! into a smaller cache keeps the first `capacity` entries rather than
+//! growing without bound.
+
+use std::sync::Arc;
+
+use crate::cost::cache::{CostCache, ExportedEntry};
+use crate::cost::vars::{DataInfo, DataState};
+use crate::matrix::{Format, MatrixCharacteristics};
+
+use super::codec::{escape, f64_from_hex, f64_to_hex, unescape, Reader, Writer};
+
+/// Header kind token for cache snapshots.
+pub const KIND: &str = "costcache";
+
+/// A serializable export of a [`CostCache`]'s totals-only entries.
+#[derive(Clone, Debug)]
+pub struct CacheSnapshot {
+    capacity: usize,
+    entries: Vec<ExportedEntry>,
+}
+
+impl CacheSnapshot {
+    /// Snapshot every totals-only entry of `cache` (deterministic order:
+    /// sorted by cache key).
+    pub fn from_cache(cache: &CostCache) -> Self {
+        CacheSnapshot {
+            capacity: cache.stats().capacity,
+            entries: cache.export_totals(),
+        }
+    }
+
+    /// An empty snapshot that remembers only a capacity (used by tests
+    /// and as a neutral element for merging).
+    pub fn empty(capacity: usize) -> Self {
+        CacheSnapshot { capacity, entries: Vec::new() }
+    }
+
+    /// Number of exported entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the snapshot holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The capacity of the cache this snapshot was taken from.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Merge the snapshot into an existing cache through the normal
+    /// insert path (shard routing and FIFO capacity bounds apply).
+    /// Returns the number of entries offered.
+    pub fn apply(&self, cache: &CostCache) -> usize {
+        cache.import_totals(&self.entries)
+    }
+
+    /// Build a fresh cache sized like the source cache (but never
+    /// smaller than the snapshot itself) and load every entry into it.
+    pub fn into_cache(&self) -> Arc<CostCache> {
+        let cache = Arc::new(CostCache::new(self.capacity.max(self.entries.len())));
+        self.apply(&cache);
+        cache
+    }
+
+    /// Serialize to the artifact text form.
+    pub fn encode(&self) -> String {
+        let mut w = Writer::new(KIND);
+        w.section("meta");
+        w.put_usize("capacity", self.capacity);
+        w.put_usize("entries", self.entries.len());
+        w.section("entries");
+        for e in &self.entries {
+            w.put_raw("e", &encode_entry(e));
+        }
+        w.finish()
+    }
+
+    /// Parse from the artifact text form.
+    pub fn decode(text: &str) -> Result<Self, String> {
+        let reader = Reader::parse(text)?;
+        if reader.kind() != KIND {
+            return Err(format!("artifact: expected a '{KIND}' artifact, got '{}'", reader.kind()));
+        }
+        Self::decode_from(&reader)
+    }
+
+    pub(crate) fn decode_from(reader: &Reader) -> Result<Self, String> {
+        let meta = reader.section("meta")?;
+        let capacity = meta.usize("capacity")?;
+        let declared = meta.usize("entries")?;
+        let section = reader.section("entries")?;
+        let rows = section.get_all("e");
+        if rows.len() != declared {
+            return Err(format!(
+                "artifact: snapshot declares {declared} entries but carries {} — truncated?",
+                rows.len()
+            ));
+        }
+        let mut entries = Vec::with_capacity(rows.len());
+        for (i, row) in rows.iter().enumerate() {
+            entries.push(
+                decode_entry(row).map_err(|e| format!("artifact: snapshot entry {i}: {e}"))?,
+            );
+        }
+        Ok(CacheSnapshot { capacity, entries })
+    }
+}
+
+/// `<k0..k5:hex> <total:hexbits> <var>*` where each var is
+/// `name|cid|rows|cols|brows|bcols|nnz|format|state` (name escaped, so
+/// rows split unambiguously on spaces and fields on pipes).
+fn encode_entry(e: &ExportedEntry) -> String {
+    let mut out = format!(
+        "{:016x} {:016x} {:016x} {:016x} {:016x} {:016x} {}",
+        e.key[0],
+        e.key[1],
+        e.key[2],
+        e.key[3],
+        e.key[4],
+        e.key[5],
+        f64_to_hex(e.total)
+    );
+    for (name, cid, info) in &e.vars {
+        let state = match info.state {
+            DataState::Hdfs => "h",
+            DataState::Mem => "m",
+        };
+        out.push_str(&format!(
+            " {}|{}|{}|{}|{}|{}|{}|{}|{}",
+            escape(name),
+            cid,
+            info.mc.rows,
+            info.mc.cols,
+            info.mc.brows,
+            info.mc.bcols,
+            info.mc.nnz,
+            info.format.name(),
+            state
+        ));
+    }
+    out
+}
+
+fn decode_entry(row: &str) -> Result<ExportedEntry, String> {
+    let mut parts = row.split(' ');
+    let mut key = [0u64; 6];
+    for (i, slot) in key.iter_mut().enumerate() {
+        let tok = parts.next().ok_or_else(|| format!("missing key word {i}"))?;
+        *slot = u64::from_str_radix(tok, 16)
+            .map_err(|e| format!("bad key word {i} '{tok}': {e}"))?;
+    }
+    let total_tok = parts.next().ok_or_else(|| "missing total".to_string())?;
+    let total = f64_from_hex(total_tok)?;
+    let mut vars = Vec::new();
+    for var in parts {
+        let fields: Vec<&str> = var.split('|').collect();
+        if fields.len() != 9 {
+            return Err(format!("var row has {} fields, expected 9: '{var}'", fields.len()));
+        }
+        let name = unescape(fields[0])?;
+        let cid: usize =
+            fields[1].parse().map_err(|e| format!("bad var id '{}': {e}", fields[1]))?;
+        let int = |s: &str| -> Result<i64, String> {
+            s.parse().map_err(|e| format!("bad dimension '{s}': {e}"))
+        };
+        let mc = MatrixCharacteristics {
+            rows: int(fields[2])?,
+            cols: int(fields[3])?,
+            brows: int(fields[4])?,
+            bcols: int(fields[5])?,
+            nnz: int(fields[6])?,
+        };
+        let format = Format::parse(fields[7])
+            .ok_or_else(|| format!("unknown format '{}'", fields[7]))?;
+        let state = match fields[8] {
+            "h" => DataState::Hdfs,
+            "m" => DataState::Mem,
+            other => return Err(format!("unknown data state '{other}'")),
+        };
+        vars.push((name, cid, DataInfo { mc, format, state }));
+    }
+    Ok(ExportedEntry { key, total, vars })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_entry() -> ExportedEntry {
+        ExportedEntry {
+            key: [1, 2, 3, 4, 5, 6],
+            total: 12.75,
+            vars: vec![
+                (
+                    "X files".to_string(), // space exercises escaping
+                    0,
+                    DataInfo {
+                        mc: MatrixCharacteristics::dense(100, 10, 1000),
+                        format: Format::BinaryBlock,
+                        state: DataState::Hdfs,
+                    },
+                ),
+                (
+                    "y".to_string(),
+                    1,
+                    DataInfo {
+                        mc: MatrixCharacteristics { rows: -1, cols: 1, brows: 1000, bcols: 1000, nnz: -1 },
+                        format: Format::TextCell,
+                        state: DataState::Mem,
+                    },
+                ),
+            ],
+        }
+    }
+
+    #[test]
+    fn entry_codec_round_trips() {
+        let e = sample_entry();
+        let back = decode_entry(&encode_entry(&e)).unwrap();
+        assert_eq!(back.key, e.key);
+        assert_eq!(back.total.to_bits(), e.total.to_bits());
+        assert_eq!(back.vars.len(), 2);
+        assert_eq!(back.vars[0].0, "X files");
+        assert_eq!(back.vars[1].2.mc.rows, -1);
+    }
+
+    #[test]
+    fn snapshot_text_round_trips() {
+        let snap = CacheSnapshot { capacity: 4096, entries: vec![sample_entry()] };
+        let text = snap.encode();
+        let back = CacheSnapshot::decode(&text).unwrap();
+        assert_eq!(back.capacity(), 4096);
+        assert_eq!(back.len(), 1);
+        assert_eq!(back.entries[0].total.to_bits(), 12.75f64.to_bits());
+    }
+
+    #[test]
+    fn declared_count_mismatch_is_a_diagnostic() {
+        let snap = CacheSnapshot { capacity: 16, entries: vec![sample_entry()] };
+        // drop the entry row but keep (and re-checksum) the declared count
+        let mut w = Writer::new(KIND);
+        w.section("meta");
+        w.put_usize("capacity", 16);
+        w.put_usize("entries", 1);
+        w.section("entries");
+        let text = w.finish();
+        let err = CacheSnapshot::decode(&text).unwrap_err();
+        assert!(err.contains("declares 1 entries"), "{err}");
+        drop(snap);
+    }
+
+    #[test]
+    fn malformed_rows_are_diagnostics() {
+        assert!(decode_entry("1 2 3").is_err()); // too few key words
+        assert!(decode_entry("1 2 3 4 5 6").is_err()); // missing total
+        assert!(decode_entry("z 2 3 4 5 6 0").is_err()); // bad hex
+        let e = encode_entry(&sample_entry());
+        let chopped = e.rsplit_once('|').unwrap().0;
+        assert!(decode_entry(chopped).is_err()); // truncated var row
+    }
+}

@@ -405,6 +405,18 @@ pub(crate) struct CachedBlockCost {
     pub(crate) tracker: VarTracker,
 }
 
+/// One totals-only cache entry in serializable form: the six 64-bit key
+/// words (block hash, state fingerprint, knob fingerprint — two words
+/// each), the cached block total and the compacted post-block variable
+/// state. The unit the cost-cache snapshot artifact
+/// ([`crate::artifact::snapshot`]) persists.
+#[derive(Clone, Debug)]
+pub(crate) struct ExportedEntry {
+    pub(crate) key: [u64; 6],
+    pub(crate) total: f64,
+    pub(crate) vars: Vec<(String, usize, super::vars::DataInfo)>,
+}
+
 #[derive(Default)]
 struct Shard {
     map: HashMap<CacheKey, Arc<CachedBlockCost>>,
@@ -488,6 +500,64 @@ impl CostCache {
                 }
             }
         }
+    }
+
+    /// Export every *totals-only* entry as `(key words, total, post-block
+    /// variable state)` rows, sorted by key so the export is
+    /// deterministic regardless of shard layout or insertion order.
+    ///
+    /// Only totals-only entries (the `emit_nodes = false` fast path every
+    /// optimizer runs through) are exported: their [`CostNode`] payload
+    /// is a flat `Block { label: "", total, children: [] }`, so the full
+    /// replay state is one `f64` plus the compacted tracker. Full
+    /// annotation entries carry rendered instruction trees and are
+    /// cheap to recompute relative to their serialized size; because the
+    /// costing mode participates in the knob fingerprint, dropping them
+    /// can never alias a totals-only lookup onto a stale annotation.
+    pub(crate) fn export_totals(&self) -> Vec<ExportedEntry> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let guard = shard.lock().unwrap_or_else(|e| e.into_inner());
+            for (key, val) in &guard.map {
+                if let CostNode::Block { label, total, children } = &val.node {
+                    if label.is_empty() && children.is_empty() {
+                        out.push(ExportedEntry {
+                            key: [
+                                key.block.0,
+                                key.block.1,
+                                key.state.0,
+                                key.state.1,
+                                key.knobs.0,
+                                key.knobs.1,
+                            ],
+                            total: *total,
+                            vars: val.tracker.export_entries(),
+                        });
+                    }
+                }
+            }
+        }
+        out.sort_unstable_by_key(|e| e.key);
+        out
+    }
+
+    /// Merge exported rows back in through the normal sharded insert, so
+    /// the FIFO capacity bound keeps holding (a snapshot larger than the
+    /// cache evicts its oldest rows instead of overflowing). Returns how
+    /// many rows were inserted.
+    pub(crate) fn import_totals(&self, entries: &[ExportedEntry]) -> usize {
+        for e in entries {
+            let key = CacheKey {
+                block: (e.key[0], e.key[1]),
+                state: (e.key[2], e.key[3]),
+                knobs: (e.key[4], e.key[5]),
+            };
+            let node =
+                CostNode::Block { label: String::new(), total: e.total, children: Vec::new() };
+            let tracker = VarTracker::from_entries(&e.vars);
+            self.insert(key, Arc::new(CachedBlockCost { node, tracker }));
+        }
+        entries.len()
     }
 
     /// Snapshot of the hit/miss/eviction counters and current size.

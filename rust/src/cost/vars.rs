@@ -169,6 +169,48 @@ impl VarTracker {
         out
     }
 
+    /// Flatten the live bindings into `(name, canonical entry id, data)`
+    /// rows for serialization (the cost-cache snapshot artifact,
+    /// [`crate::artifact::snapshot`]). Names are sorted and entry ids are
+    /// renumbered in first-occurrence order — the same canonicalization
+    /// as [`Self::compacted`] and [`Self::hash_state`] — so the export is
+    /// deterministic and aliases stay visible as shared ids.
+    pub(crate) fn export_entries(&self) -> Vec<(String, usize, DataInfo)> {
+        let mut names: Vec<(&String, usize)> = self.names.iter().map(|(n, &id)| (n, id)).collect();
+        names.sort_unstable_by(|a, b| a.0.cmp(b.0));
+        let mut canon: HashMap<usize, usize> = HashMap::with_capacity(names.len());
+        let mut out = Vec::with_capacity(names.len());
+        for (name, id) in names {
+            let next = canon.len();
+            let cid = *canon.entry(id).or_insert(next);
+            out.push((name.clone(), cid, self.data[id].clone()));
+        }
+        out
+    }
+
+    /// Rebuild a tracker from [`Self::export_entries`] rows. Rows sharing
+    /// an entry id share one underlying [`DataInfo`] (alias structure
+    /// round-trips); the first row of each id supplies the data. The
+    /// result fingerprints ([`Self::hash_state`]) identically to the
+    /// exported tracker.
+    pub(crate) fn from_entries(entries: &[(String, usize, DataInfo)]) -> VarTracker {
+        let mut out = VarTracker::default();
+        let mut renumber: HashMap<usize, usize> = HashMap::with_capacity(entries.len());
+        for (name, id, info) in entries {
+            let new_id = match renumber.get(id) {
+                Some(&nid) => nid,
+                None => {
+                    let nid = out.data.len();
+                    out.data.push(info.clone());
+                    renumber.insert(*id, nid);
+                    nid
+                }
+            };
+            out.names.insert(name.clone(), new_id);
+        }
+        out
+    }
+
     /// Merge two trackers after a conditional: a variable stays in-memory
     /// only if both branches leave it in memory (conservative IO costing).
     pub fn merge(&mut self, other: &VarTracker) {
@@ -234,6 +276,30 @@ mod tests {
     fn unknown_variable_is_unknown_mc() {
         let t = VarTracker::default();
         assert!(!t.mc("nope").dims_known());
+    }
+
+    /// Export/import round-trips aliasing and residence state and
+    /// preserves the canonical fingerprint (the snapshot-replay contract).
+    #[test]
+    fn export_import_round_trips_fingerprint() {
+        let mut t = VarTracker::default();
+        t.create("pREADX", mc(), Format::BinaryBlock, true);
+        t.alias("pREADX", "X");
+        t.create("w", mc(), Format::TextCell, false);
+        t.touch_mem("w");
+        let rows = t.export_entries();
+        assert_eq!(rows.len(), 3, "one row per live name");
+        let back = VarTracker::from_entries(&rows);
+        fn fp(t: &VarTracker) -> u64 {
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            t.hash_state(&mut h);
+            std::hash::Hasher::finish(&h)
+        }
+        assert_eq!(fp(&t), fp(&back));
+        // aliasing survives the round trip: touching X warms pREADX
+        let mut b2 = back.clone();
+        b2.touch_mem("X");
+        assert_eq!(b2.get("pREADX").unwrap().state, DataState::Mem);
     }
 
     /// Compaction drops dead entries, keeps aliasing, and fingerprints

@@ -32,7 +32,8 @@ pub mod records;
 pub mod regression;
 pub mod runner;
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::api::{compile_with_meta, ClusterConfigOpt, CompileOptions};
 use crate::conf::CostConstants;
@@ -41,7 +42,6 @@ use crate::cost::{cost_program_cached, cost_total_cached};
 use crate::ir::build::StaticMeta;
 use crate::matrix::{Format, MatrixCharacteristics};
 use crate::rtprog::ExecBackend;
-use crate::runtime::KernelRegistry;
 
 pub use qerror::{qerror, summarize, QErrorSummary};
 pub use records::{BlockClass, BlockRecord, CostBreakdown};
@@ -69,8 +69,12 @@ pub struct CalibrateOptions {
     /// Starting constants the predictions are made with (and the fit
     /// corrects).
     pub constants: CostConstants,
-    /// Data/spill directory for execute mode (default: a fixed
-    /// subdirectory of the system temp dir).
+    /// Data/spill directory for execute mode. `None` (the default) uses
+    /// a per-run unique subdirectory of the system temp dir — derived
+    /// from the process id, the seed and a process-wide counter, so
+    /// concurrent calibrations never collide — which is removed again
+    /// when calibration succeeds. An explicit path is used as given and
+    /// never cleaned up.
     pub scratch: Option<PathBuf>,
 }
 
@@ -160,6 +164,18 @@ pub struct CalibrationReport {
     pub reopt: ReoptReport,
 }
 
+/// Distinguishes concurrent defaulted-scratch calibrations within one
+/// process; the process id distinguishes processes (no wall clock or RNG
+/// involved, so runs stay reproducible).
+static SCRATCH_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+fn default_scratch(seed: u64) -> PathBuf {
+    let n = SCRATCH_COUNTER.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir()
+        .join("sysds_feedback")
+        .join(format!("run_{}_{}_{}", std::process::id(), seed, n))
+}
+
 /// Run the full feedback loop: measure the bundled workloads, fit
 /// constant corrections, re-cost everything under the calibrated
 /// constants (through a shared cost cache, exercising the knob
@@ -172,14 +188,15 @@ pub fn calibrate(opts: &CalibrateOptions) -> Result<CalibrationReport, String> {
     } else {
         opts.threads
     };
-    let scratch = opts
-        .scratch
-        .clone()
-        .unwrap_or_else(|| std::env::temp_dir().join("sysds_feedback"));
+    // A defaulted scratch is unique per run (pid + seed + counter): a
+    // fixed path here used to make concurrent calibrations overwrite each
+    // other's measured inputs, and the directory was never cleaned up.
+    let owns_scratch = opts.scratch.is_none();
+    let scratch = opts.scratch.clone().unwrap_or_else(|| default_scratch(opts.seed));
     let executed = matches!(opts.mode, MeasureMode::Execute);
     let registry = if executed {
         std::fs::create_dir_all(&scratch).map_err(|e| e.to_string())?;
-        KernelRegistry::load(Path::new("artifacts")).ok().filter(|r| !r.is_empty())
+        crate::runtime::load_registry_or_warn("calibrate")
     } else {
         None
     };
@@ -251,6 +268,13 @@ pub fn calibrate(opts: &CalibrateOptions) -> Result<CalibrationReport, String> {
     }
 
     let reopt = reoptimize(&opts.constants, &calibrated, &cache)?;
+    if owns_scratch && executed {
+        // Calibration succeeded, so the per-run scratch (measured
+        // inputs/outputs) is no longer needed; on failure it is left in
+        // place for post-mortems. Best-effort: a failed removal must not
+        // fail the calibration.
+        let _ = std::fs::remove_dir_all(&scratch);
+    }
     Ok(CalibrationReport {
         records,
         cases: cases.len(),

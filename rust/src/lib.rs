@@ -53,6 +53,7 @@
 //! compilation level, execute it, or [`api::sweep`] a whole scenario grid.
 
 pub mod api;
+pub mod artifact;
 pub mod conf;
 pub mod cost;
 pub mod cp;

@@ -10,12 +10,21 @@
 //! repro sweep [--heaps 512,...] [--serial]              parallel grid sweep
 //! repro gdf --script cg                                 global data flow optimizer
 //! repro calibrate [--quick] [--simulated]               measured-execution feedback
+//! repro plan save|load|diff <path>                      persistent plan artifacts
 //! ```
+//!
+//! The optimizer commands (`sweep`, `resource`, `gdf`) additionally take
+//! `--warm-cache <path>` (pre-load a cost-cache snapshot), `--save-cache
+//! <path>` (snapshot the cache after the run) and `--profile <path>`
+//! (run under the calibrated constants of a saved calibration profile).
 
 use std::collections::HashMap;
+use std::path::Path;
 
 use systemds::api::{
-    compile, compile_with_meta, linreg_cg_args, CompileOptions, ExecBackend, Scenario, LINREG_CG,
+    compile, compile_with_meta, linreg_cg_args, Artifact, CacheSnapshot, CalibrationProfile,
+    CompileOptions, Evaluator, ExecBackend, PlanArtifact, Scenario, LINREG_CG,
+    PLAN_FORMAT_VERSION,
 };
 use systemds::conf::{ClusterConfig, CostConstants, MB};
 use systemds::cost;
@@ -24,7 +33,6 @@ use systemds::matrix::Format;
 use systemds::opt::gdf;
 use systemds::opt::resource;
 use systemds::opt::sweep::{self, heap_clock_clusters, DataScenario, SweepSpec};
-use systemds::runtime::KernelRegistry;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -38,9 +46,10 @@ fn main() {
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("gdf") => cmd_gdf(&args[1..]),
         Some("calibrate") => cmd_calibrate(&args[1..]),
+        Some("plan") => cmd_plan(&args[1..]),
         _ => {
             eprintln!(
-                "usage: repro <explain|cost|scenarios|run|resource|resource-opt|sweep|gdf|calibrate> [options]\n\
+                "usage: repro <explain|cost|scenarios|run|resource|resource-opt|sweep|gdf|calibrate|plan> [options]\n\
                  \n\
                  explain --scenario <xs|xl1..xl4> [--level hops|runtime]\n\
                  \x20       [--backend cp|mr|spark] [--script ds|cg] [--iters N]\n\
@@ -51,18 +60,26 @@ fn main() {
                  resource [--scenario <name>] [--script ds|cg] [--iters N]\n\
                  \x20     [--grid heaps=512,2048:execmem=2048,20480:nodes=2,6:klocal=6,24]\n\
                  \x20     [--backends cp,mr,spark] [--threads T] [--no-prune]\n\
-                 \x20     [--no-cost-cache] [--all]\n\
+                 \x20     [--no-cost-cache] [--all] [--warm-cache F] [--save-cache F]\n\
+                 \x20     [--profile F]\n\
                  resource-opt --scenario <name> [--heaps 256,512,...]\n\
                  \x20       [--backend cp|mr|spark]\n\
                  sweep [--scenarios xs,xl1,...] [--heaps 512,1024,...]\n\
                  \x20     [--backends cp,mr,spark] [--script ds|cg] [--iters N]\n\
                  \x20     [--threads T] [--serial] [--no-cost-cache]\n\
+                 \x20     [--warm-cache F] [--save-cache F] [--profile F]\n\
                  gdf [--scenario <name>] [--script cg|ds] [--iters N]\n\
                  \x20   [--blocksizes 500,1000,2000] [--formats binaryblock,textcell]\n\
                  \x20   [--partitions 8,32] [--backends cp,mr,spark]\n\
                  \x20   [--threads T] [--no-diff] [--no-cost-cache] [--all]\n\
+                 \x20   [--warm-cache F] [--save-cache F] [--profile F]\n\
                  calibrate [--quick] [--simulated] [--noise F] [--seed N]\n\
-                 \x20         [--threads T] [--scratch DIR]"
+                 \x20         [--threads T] [--scratch DIR] [--profile F]\n\
+                 \x20         [--save-profile F]\n\
+                 plan save <path> [--scenario <name>] [--script cg|ds] [--iters N]\n\
+                 \x20              [--backend cp|mr|spark] [--profile F]\n\
+                 plan load <path>      (verify; regenerate synthesized data if stale)\n\
+                 plan diff <path>      (EXPLAIN diff: stored plan vs fresh compile)"
             );
             2
         }
@@ -72,6 +89,145 @@ fn main() {
 
 fn flag(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Strictly parse the value of `--name <value>`. `Ok(None)` when the
+/// flag is absent; a value that fails to parse is an error *naming the
+/// flag and the offending value* — flags like `--heap-mb 2O48` used to
+/// be swallowed by `.parse().ok().unwrap_or(default)` and silently run
+/// with the default.
+fn parse_flag_value<T: std::str::FromStr>(
+    args: &[String],
+    name: &str,
+    expected: &str,
+) -> Result<Option<T>, String> {
+    match flag(args, name) {
+        None => Ok(None),
+        Some(v) => v
+            .parse::<T>()
+            .map(Some)
+            .map_err(|_| format!("{name}: invalid value '{v}' (expected {expected})")),
+    }
+}
+
+/// [`parse_flag_value`], printed: `Err` carries the CLI exit code.
+fn parse_flag<T: std::str::FromStr>(
+    args: &[String],
+    name: &str,
+    expected: &str,
+) -> Result<Option<T>, i32> {
+    parse_flag_value(args, name, expected).map_err(|e| {
+        eprintln!("{e}");
+        2
+    })
+}
+
+/// Strictly parse a comma-separated `--name v1,v2,...` list of positive
+/// finite numbers (MB axes). `Ok(None)` when the flag is absent.
+fn parse_mb_list_flag(args: &[String], name: &str) -> Result<Option<Vec<f64>>, i32> {
+    let Some(raw) = flag(args, name) else {
+        return Ok(None);
+    };
+    let mut out = Vec::new();
+    for part in raw.split(',').filter(|p| !p.is_empty()) {
+        match part.trim().parse::<f64>() {
+            Ok(x) if x.is_finite() && x > 0.0 => out.push(x),
+            _ => {
+                eprintln!("{name}: invalid entry '{part}' (expected positive MB values, e.g. 512,1024,2048)");
+                return Err(2);
+            }
+        }
+    }
+    if out.is_empty() {
+        eprintln!("{name}: empty list");
+        return Err(2);
+    }
+    Ok(Some(out))
+}
+
+// ---------------------------------------------------------------------
+// Artifact flags shared by the optimizer commands
+// ---------------------------------------------------------------------
+
+/// Build the evaluator for an optimizer run, honouring `--warm-cache
+/// <path>` (pre-load a [`CacheSnapshot`] from disk). `Err` carries the
+/// exit code.
+fn warm_evaluator(args: &[String], threads: usize, cost_cache: bool) -> Result<Evaluator, i32> {
+    let threads =
+        if threads == 0 { systemds::util::par::default_threads() } else { threads };
+    let Some(path) = flag(args, "--warm-cache") else {
+        return Ok(if cost_cache {
+            Evaluator::new(threads)
+        } else {
+            Evaluator::without_cost_cache(threads)
+        });
+    };
+    if !cost_cache {
+        eprintln!("--warm-cache: incompatible with --no-cost-cache");
+        return Err(2);
+    }
+    match systemds::api::load_artifact(Path::new(&path)) {
+        Ok(Artifact::CacheSnapshot(snap)) => {
+            eprintln!("warm cache: {} entries loaded from {path}", snap.len());
+            Ok(Evaluator::with_cache(threads, Some(snap.into_cache())))
+        }
+        Ok(other) => {
+            eprintln!("--warm-cache: {path} holds a '{}' artifact, expected 'costcache'", other.kind());
+            Err(2)
+        }
+        Err(e) => {
+            eprintln!("--warm-cache: {e}");
+            Err(2)
+        }
+    }
+}
+
+/// Honour `--save-cache <path>` after a successful optimizer run:
+/// snapshot the evaluator's cost cache to disk. `Err` carries the exit
+/// code.
+fn save_cache_flag(args: &[String], eval: &Evaluator) -> Result<(), i32> {
+    let Some(path) = flag(args, "--save-cache") else {
+        return Ok(());
+    };
+    let Some(cache) = eval.cache() else {
+        eprintln!("--save-cache: the run kept no cost cache (--no-cost-cache?)");
+        return Err(2);
+    };
+    let snap = CacheSnapshot::from_cache(&cache);
+    let n = snap.len();
+    match systemds::api::save_artifact(Path::new(&path), &Artifact::CacheSnapshot(snap)) {
+        Ok(()) => {
+            eprintln!("saved cost-cache snapshot: {n} entries -> {path}");
+            Ok(())
+        }
+        Err(e) => {
+            eprintln!("--save-cache: {e}");
+            Err(1)
+        }
+    }
+}
+
+/// Honour `--profile <path>`: load a [`CalibrationProfile`] and return
+/// its calibrated constants (`None` when the flag is absent). `Err`
+/// carries the exit code.
+fn profile_constants_flag(args: &[String]) -> Result<Option<CostConstants>, i32> {
+    let Some(path) = flag(args, "--profile") else {
+        return Ok(None);
+    };
+    match systemds::api::load_artifact(Path::new(&path)) {
+        Ok(Artifact::Profile(p)) => {
+            eprintln!("{}", p.summary());
+            Ok(Some(p.constants().clone()))
+        }
+        Ok(other) => {
+            eprintln!("--profile: {path} holds a '{}' artifact, expected 'profile'", other.kind());
+            Err(2)
+        }
+        Err(e) => {
+            eprintln!("--profile: {e}");
+            Err(2)
+        }
+    }
 }
 
 fn scenario_by_name(name: &str) -> Option<Scenario> {
@@ -215,11 +371,24 @@ fn cmd_run(args: &[String]) -> i32 {
             i += 1;
         }
     }
-    let threads: usize =
-        flag(args, "--threads").and_then(|t| t.parse().ok()).unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-        });
-    let heap_mb: f64 = flag(args, "--heap-mb").and_then(|h| h.parse().ok()).unwrap_or(2048.0);
+    let threads: usize = match parse_flag(args, "--threads", "a positive integer") {
+        Ok(Some(0)) => {
+            eprintln!("--threads: invalid value '0' (expected a positive integer)");
+            return 2;
+        }
+        Ok(Some(n)) => n,
+        Ok(None) => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        Err(code) => return code,
+    };
+    let heap_mb: f64 = match parse_flag(args, "--heap-mb", "a positive size in MB") {
+        Ok(Some(h)) if h.is_finite() && h > 0.0 => h,
+        Ok(Some(h)) => {
+            eprintln!("--heap-mb: invalid value '{h}' (expected a positive size in MB)");
+            return 2;
+        }
+        Ok(None) => 2048.0,
+        Err(code) => return code,
+    };
     let opts = CompileOptions {
         cc: systemds::api::ClusterConfigOpt(ClusterConfig::local(threads, heap_mb * MB)),
         ..Default::default()
@@ -234,7 +403,7 @@ fn cmd_run(args: &[String]) -> i32 {
     let report =
         cost::cost_program(&compiled.runtime, &opts.cfg, &opts.cc.0, &CostConstants::default());
     eprintln!("estimated cost: {:.3}s", report.total);
-    let registry = KernelRegistry::load(std::path::Path::new("artifacts")).ok();
+    let registry = systemds::runtime::load_registry_or_warn("run");
     let scratch = std::env::temp_dir().join(format!("sysds_run_{}", std::process::id()));
     let mut exec = Executor::new(&opts.cfg, &opts.cc.0, registry.as_ref(), scratch);
     match exec.run(&compiled.runtime) {
@@ -350,14 +519,10 @@ fn cmd_resource(args: &[String]) -> i32 {
             return 2;
         }
     }
-    if let Some(t) = flag(args, "--threads") {
-        match t.parse::<usize>() {
-            Ok(n) => grid.threads = n,
-            Err(_) => {
-                eprintln!("--threads: invalid value '{t}' (expected a non-negative integer)");
-                return 2;
-            }
-        }
+    match parse_flag::<usize>(args, "--threads", "a non-negative integer") {
+        Ok(Some(n)) => grid.threads = n,
+        Ok(None) => {}
+        Err(code) => return code,
     }
     if args.iter().any(|a| a == "--no-prune") {
         grid.prune = false;
@@ -365,13 +530,25 @@ fn cmd_resource(args: &[String]) -> i32 {
     if args.iter().any(|a| a == "--no-cost-cache") {
         grid.cost_cache = false;
     }
-    let report = match systemds::api::optimize_resources(&grid) {
+    match profile_constants_flag(args) {
+        Ok(Some(k)) => grid.constants = k,
+        Ok(None) => {}
+        Err(code) => return code,
+    }
+    let mut eval = match warm_evaluator(args, grid.threads, grid.cost_cache) {
+        Ok(e) => e,
+        Err(code) => return code,
+    };
+    let report = match resource::optimize_grid_with(&grid, &mut eval) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("resource optimization failed: {e}");
             return 1;
         }
     };
+    if let Err(code) = save_cache_flag(args, &eval) {
+        return code;
+    }
     println!(
         "scenario {} / script {} — {} grid points (heap x exec-mem x nodes x k_local x backend)",
         s.name,
@@ -418,9 +595,11 @@ fn cmd_resource(args: &[String]) -> i32 {
 
 fn cmd_resource_opt(args: &[String]) -> i32 {
     let name = flag(args, "--scenario").unwrap_or_else(|| "xs".into());
-    let heaps: Vec<f64> = flag(args, "--heaps")
-        .map(|h| h.split(',').filter_map(|x| x.parse().ok()).collect())
-        .unwrap_or_else(|| vec![256.0, 512.0, 1024.0, 2048.0, 4096.0, 8192.0]);
+    let heaps: Vec<f64> = match parse_mb_list_flag(args, "--heaps") {
+        Ok(Some(h)) => h,
+        Ok(None) => vec![256.0, 512.0, 1024.0, 2048.0, 4096.0, 8192.0],
+        Err(code) => return code,
+    };
     let Some(s) = scenario_by_name(&name) else {
         eprintln!("unknown scenario '{name}'");
         return 2;
@@ -530,25 +709,33 @@ fn cmd_gdf(args: &[String]) -> i32 {
         }
         spec.partitions_mb = out;
     }
-    if let Some(t) = flag(args, "--threads") {
-        match t.parse::<usize>() {
-            Ok(n) => spec.threads = n,
-            Err(_) => {
-                eprintln!("--threads: invalid value '{t}' (expected a non-negative integer)");
-                return 2;
-            }
-        }
+    match parse_flag::<usize>(args, "--threads", "a non-negative integer") {
+        Ok(Some(n)) => spec.threads = n,
+        Ok(None) => {}
+        Err(code) => return code,
     }
     if args.iter().any(|a| a == "--no-cost-cache") {
         spec.cost_cache = false;
     }
-    let report = match systemds::api::optimize_global_dataflow(&spec) {
+    match profile_constants_flag(args) {
+        Ok(Some(k)) => spec.constants = k,
+        Ok(None) => {}
+        Err(code) => return code,
+    }
+    let mut eval = match warm_evaluator(args, spec.threads, spec.cost_cache) {
+        Ok(e) => e,
+        Err(code) => return code,
+    };
+    let report = match gdf::optimize_with(&spec, &mut eval) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("global data flow optimization failed: {e}");
             return 1;
         }
     };
+    if let Err(code) = save_cache_flag(args, &eval) {
+        return code;
+    }
     println!(
         "scenario {} / script {} — {} candidate data-flow configurations",
         s.name,
@@ -616,35 +803,44 @@ fn cmd_sweep(args: &[String]) -> i32 {
         }
         spec.scenarios = scenarios;
     }
-    if let Some(heaps) = flag(args, "--heaps") {
-        let mut heaps_mb = Vec::new();
-        for part in heaps.split(',') {
-            match part.trim().parse::<f64>() {
-                Ok(h) if h > 0.0 => heaps_mb.push(h),
-                _ => {
-                    eprintln!(
-                        "--heaps: invalid entry '{part}' (expected a positive MB list, e.g. 512,1024,2048)"
-                    );
-                    return 2;
-                }
-            }
-        }
-        spec.clusters = heap_clock_clusters(&heaps_mb);
+    match parse_mb_list_flag(args, "--heaps") {
+        Ok(Some(heaps_mb)) => spec.clusters = heap_clock_clusters(&heaps_mb),
+        Ok(None) => {}
+        Err(code) => return code,
     }
-    if let Some(t) = flag(args, "--threads") {
-        match t.parse::<usize>() {
-            Ok(n) => spec.threads = n,
-            Err(_) => {
-                eprintln!("--threads: invalid value '{t}' (expected a non-negative integer)");
-                return 2;
-            }
-        }
+    match parse_flag::<usize>(args, "--threads", "a non-negative integer") {
+        Ok(Some(n)) => spec.threads = n,
+        Ok(None) => {}
+        Err(code) => return code,
     }
     if args.iter().any(|a| a == "--no-cost-cache") {
         spec.cost_cache = false;
     }
+    match profile_constants_flag(args) {
+        Ok(Some(k)) => spec.constants = k,
+        Ok(None) => {}
+        Err(code) => return code,
+    }
     let serial = args.iter().any(|a| a == "--serial");
-    let result = if serial { sweep::sweep_serial(&spec) } else { sweep::sweep(&spec) };
+    if serial && (flag(args, "--warm-cache").is_some() || flag(args, "--save-cache").is_some()) {
+        eprintln!("--serial: incompatible with --warm-cache/--save-cache (the serial reference path keeps no evaluator)");
+        return 2;
+    }
+    let result = if serial {
+        sweep::sweep_serial(&spec)
+    } else {
+        let mut eval = match warm_evaluator(args, spec.threads, spec.cost_cache) {
+            Ok(e) => e,
+            Err(code) => return code,
+        };
+        let r = sweep::sweep_with(&spec, &mut eval);
+        if r.is_ok() {
+            if let Err(code) = save_cache_flag(args, &eval) {
+                return code;
+            }
+        }
+        r
+    };
     match result {
         Ok(report) => {
             print!("{}", report.table());
@@ -668,39 +864,37 @@ fn cmd_calibrate(args: &[String]) -> i32 {
         quick: args.iter().any(|a| a == "--quick"),
         ..Default::default()
     };
-    if let Some(s) = flag(args, "--seed") {
-        match s.parse::<u64>() {
-            Ok(n) => opts.seed = n,
-            Err(_) => {
-                eprintln!("--seed: invalid value '{s}' (expected an unsigned integer)");
-                return 2;
-            }
-        }
+    match parse_flag::<u64>(args, "--seed", "an unsigned integer") {
+        Ok(Some(n)) => opts.seed = n,
+        Ok(None) => {}
+        Err(code) => return code,
     }
-    if let Some(t) = flag(args, "--threads") {
-        match t.parse::<usize>() {
-            Ok(n) => opts.threads = n,
-            Err(_) => {
-                eprintln!("--threads: invalid value '{t}' (expected a non-negative integer)");
-                return 2;
-            }
-        }
+    match parse_flag::<usize>(args, "--threads", "a non-negative integer") {
+        Ok(Some(n)) => opts.threads = n,
+        Ok(None) => {}
+        Err(code) => return code,
     }
     if args.iter().any(|a| a == "--simulated") {
-        let noise = match flag(args, "--noise") {
-            None => 0.0,
-            Some(n) => match n.parse::<f64>() {
-                Ok(v) if v.is_finite() && v >= 0.0 => v,
-                _ => {
-                    eprintln!("--noise: invalid value '{n}' (expected a non-negative number)");
-                    return 2;
-                }
-            },
+        let noise = match parse_flag::<f64>(args, "--noise", "a non-negative number") {
+            Ok(Some(v)) if v.is_finite() && v >= 0.0 => v,
+            Ok(Some(v)) => {
+                eprintln!("--noise: invalid value '{v}' (expected a non-negative number)");
+                return 2;
+            }
+            Ok(None) => 0.0,
+            Err(code) => return code,
         };
         opts.mode = systemds::api::MeasureMode::Simulated { noise };
     }
     if let Some(dir) = flag(args, "--scratch") {
         opts.scratch = Some(std::path::PathBuf::from(dir));
+    }
+    // `--profile` continues calibration from an earlier run's calibrated
+    // constants instead of the Hadoop-derived defaults.
+    match profile_constants_flag(args) {
+        Ok(Some(k)) => opts.constants = k,
+        Ok(None) => {}
+        Err(code) => return code,
     }
     let report = match systemds::api::calibrate(&opts) {
         Ok(r) => r,
@@ -709,6 +903,16 @@ fn cmd_calibrate(args: &[String]) -> i32 {
             return 1;
         }
     };
+    if let Some(path) = flag(args, "--save-profile") {
+        let profile = CalibrationProfile::from_report(&report, &opts);
+        match systemds::api::save_artifact(Path::new(&path), &Artifact::Profile(profile)) {
+            Ok(()) => eprintln!("saved calibration profile -> {path}"),
+            Err(e) => {
+                eprintln!("--save-profile: {e}");
+                return 1;
+            }
+        }
+    }
     println!(
         "calibration: {} cases, {} block records ({})",
         report.cases,
@@ -773,4 +977,195 @@ fn cmd_calibrate(args: &[String]) -> i32 {
         if report.reopt.flipped() { "  (flipped)" } else { "" }
     );
     0
+}
+
+/// Persistent plan artifacts: `plan save <path>` compiles a scenario and
+/// writes the stable+synthesized artifact, `plan load <path>` verifies
+/// it against a fresh compile of the stable section (regenerating a
+/// stale synthesized section), and `plan diff <path>` prints the EXPLAIN
+/// diff between the stored plan and what the stable section compiles to
+/// today.
+fn cmd_plan(args: &[String]) -> i32 {
+    const USAGE: &str = "usage: repro plan <save|load|diff> <path> \
+                         [--scenario <xs|xl1..xl4>] [--script cg|ds] [--iters N] \
+                         [--backend cp|mr|spark] [--profile F]";
+    let (Some(action), Some(path_raw)) = (args.first(), args.get(1)) else {
+        eprintln!("{USAGE}");
+        return 2;
+    };
+    if path_raw.starts_with('-') {
+        eprintln!("{USAGE}");
+        return 2;
+    }
+    let path = Path::new(path_raw.as_str());
+    match action.as_str() {
+        "save" => cmd_plan_save(&args[2..], path),
+        "load" => {
+            let loaded = match load_plan_checked(path) {
+                Ok(l) => l,
+                Err(code) => return code,
+            };
+            println!("{}", loaded.artifact.describe());
+            match &loaded.reason {
+                Some(reason) => println!("synthesized section regenerated: {reason}"),
+                None => println!(
+                    "synthesized section verified (payload v{PLAN_FORMAT_VERSION}, structural hash match)"
+                ),
+            }
+            0
+        }
+        "diff" => {
+            let loaded = match load_plan_checked(path) {
+                Ok(l) => l,
+                Err(code) => return code,
+            };
+            if let Some(reason) = &loaded.reason {
+                println!("stale synthesized section ({reason}); diffing against the regenerated plan:");
+            }
+            if loaded.plan_unchanged() {
+                println!(
+                    "plans identical: stored EXPLAIN matches the fresh compile ({} lines)",
+                    loaded.artifact.explain.lines().count()
+                );
+            } else {
+                print!("{}", loaded.explain_diff());
+            }
+            0
+        }
+        other => {
+            eprintln!("plan: unknown action '{other}'\n{USAGE}");
+            2
+        }
+    }
+}
+
+fn cmd_plan_save(args: &[String], path: &Path) -> i32 {
+    let name = flag(args, "--scenario").unwrap_or_else(|| "xl1".into());
+    let Some(s) = scenario_by_name(&name) else {
+        eprintln!("unknown scenario '{name}'");
+        return 2;
+    };
+    let script = flag(args, "--script").unwrap_or_else(|| "cg".into());
+    let iters = match parse_iters_flag(args) {
+        Ok(n) => n,
+        Err(code) => return code,
+    };
+    let backend = match parse_backend_flag(args) {
+        Ok(b) => b,
+        Err(code) => return code,
+    };
+    let (src, script_args) = match script.as_str() {
+        "cg" => (LINREG_CG.to_string(), linreg_cg_args(iters)),
+        "ds" => (s.script().to_string(), s.args()),
+        other => {
+            eprintln!("--script: unknown script '{other}' (expected ds or cg)");
+            return 2;
+        }
+    };
+    let constants = match profile_constants_flag(args) {
+        Ok(Some(k)) => k,
+        Ok(None) => CostConstants::default(),
+        Err(code) => return code,
+    };
+    let opts = CompileOptions { backend, ..Default::default() };
+    let art = match PlanArtifact::capture(
+        &src,
+        &script_args,
+        &s.meta(opts.cfg.blocksize),
+        &opts,
+        &constants,
+    ) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("plan save: {e}");
+            return 1;
+        }
+    };
+    println!("{}", art.describe());
+    match systemds::api::save_artifact(path, &Artifact::Plan(art)) {
+        Ok(()) => {
+            println!("saved plan -> {}", path.display());
+            0
+        }
+        Err(e) => {
+            eprintln!("plan save: {e}");
+            1
+        }
+    }
+}
+
+/// Load a plan artifact and validate it against a fresh compile of its
+/// stable section. `Err` carries the exit code.
+fn load_plan_checked(path: &Path) -> Result<systemds::api::LoadedPlan, i32> {
+    let art = match systemds::api::load_artifact(path) {
+        Ok(Artifact::Plan(p)) => p,
+        Ok(other) => {
+            eprintln!(
+                "plan: {} holds a '{}' artifact, expected 'plan'",
+                path.display(),
+                other.kind()
+            );
+            return Err(2);
+        }
+        Err(e) => {
+            eprintln!("plan: {e}");
+            return Err(2);
+        }
+    };
+    art.load_checked().map_err(|e| {
+        eprintln!("plan: recompiling the stable section failed: {e}");
+        1
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flag_absent_is_none() {
+        let args = argv(&["--other", "3"]);
+        assert_eq!(parse_flag_value::<usize>(&args, "--threads", "int").unwrap(), None);
+    }
+
+    #[test]
+    fn parse_flag_valid_value_parses() {
+        let args = argv(&["--threads", "8"]);
+        assert_eq!(parse_flag_value::<usize>(&args, "--threads", "int").unwrap(), Some(8));
+    }
+
+    #[test]
+    fn parse_flag_garbage_names_flag_and_value() {
+        // the regression: `--heap-mb 2O48` (letter O) used to be swallowed
+        // by `.parse().ok().unwrap_or(2048.0)` and silently run with the
+        // default heap
+        let args = argv(&["--heap-mb", "2O48"]);
+        let err =
+            parse_flag_value::<f64>(&args, "--heap-mb", "a positive size in MB").unwrap_err();
+        assert!(err.contains("--heap-mb"), "{err}");
+        assert!(err.contains("2O48"), "{err}");
+    }
+
+    #[test]
+    fn parse_flag_missing_trailing_value_is_none() {
+        // a trailing flag with no value behaves like an absent flag (the
+        // `flag` helper's contract)
+        let args = argv(&["--threads"]);
+        assert_eq!(parse_flag_value::<usize>(&args, "--threads", "int").unwrap(), None);
+    }
+
+    #[test]
+    fn mb_list_rejects_garbage_entries() {
+        let bad = argv(&["--heaps", "512,1O24"]);
+        assert!(parse_mb_list_flag(&bad, "--heaps").is_err());
+        let good = argv(&["--heaps", "512,1024"]);
+        assert_eq!(
+            parse_mb_list_flag(&good, "--heaps").unwrap(),
+            Some(vec![512.0, 1024.0])
+        );
+    }
 }

@@ -226,6 +226,14 @@ impl Evaluator {
         self.threads
     }
 
+    /// The evaluator's cost cache (`None` when caching is disabled).
+    /// Cloning the `Arc` lets callers snapshot the cache to disk after a
+    /// run ([`crate::artifact::CacheSnapshot`]) or share it with another
+    /// evaluator.
+    pub fn cache(&self) -> Option<Arc<CostCache>> {
+        self.cache.clone()
+    }
+
     /// Begin a new optimizer run: resets the per-run duplicate-cost
     /// table and the cache-stats baseline. The compile memo and the cost
     /// cache intentionally survive, so repeated runs over the same

@@ -541,8 +541,9 @@ fn rt_block_label(b: &RtBlock) -> String {
 }
 
 /// Plain LCS line diff: shared lines indented, `- ` for lines only in
-/// `before`, `+ ` for lines only in `after`.
-fn line_diff(before: &str, after: &str) -> String {
+/// `before`, `+ ` for lines only in `after`. Also used by the plan
+/// artifact loader to diff stored vs freshly generated EXPLAINs.
+pub(crate) fn line_diff(before: &str, after: &str) -> String {
     let a: Vec<&str> = before.lines().collect();
     let b: Vec<&str> = after.lines().collect();
     let (n, m) = (a.len(), b.len());

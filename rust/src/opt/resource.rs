@@ -448,9 +448,27 @@ fn compile_point(
 /// return the argmin plus the (budget, time) Pareto frontier. See the
 /// module docs for the wave pipeline.
 pub fn optimize_grid(spec: &ResourceGrid) -> Result<ResourceReport, String> {
+    let threads = if spec.threads == 0 { par::default_threads() } else { spec.threads };
+    let mut eval = if spec.cost_cache {
+        Evaluator::new(threads)
+    } else {
+        Evaluator::without_cost_cache(threads)
+    };
+    optimize_grid_with(spec, &mut eval)
+}
+
+/// [`optimize_grid`] over a caller-provided evaluator: reruns keep the
+/// compile memo and cost cache warm, and a cache pre-loaded from a
+/// [`crate::artifact::CacheSnapshot`] (`--warm-cache`) replays earlier
+/// block costings from disk. `spec.threads`/`spec.cost_cache` are
+/// ignored — the evaluator already fixes both.
+pub fn optimize_grid_with(
+    spec: &ResourceGrid,
+    eval: &mut Evaluator,
+) -> Result<ResourceReport, String> {
     let t0 = Instant::now();
     spec.validate()?;
-    let threads = if spec.threads == 0 { par::default_threads() } else { spec.threads };
+    let threads = eval.threads();
     let meta = spec.scenario.meta(spec.cfg.blocksize);
     let floor_inputs: Vec<(MatrixCharacteristics, Format)> = spec
         .scenario
@@ -492,11 +510,6 @@ pub fn optimize_grid(spec: &ResourceGrid) -> Result<ResourceReport, String> {
     let mut order: Vec<usize> = (0..raw.len()).collect();
     order.sort_by(|&a, &b| raw[a].budget_mb.total_cmp(&raw[b].budget_mb).then(a.cmp(&b)));
 
-    let mut eval = if spec.cost_cache {
-        Evaluator::new(threads)
-    } else {
-        Evaluator::without_cost_cache(threads)
-    };
     eval.begin_run();
     // per point: (cost, cp_insts, mr_jobs, spark_jobs, plan_reused)
     let mut costed: Vec<Option<(f64, usize, usize, usize, bool)>> = vec![None; raw.len()];

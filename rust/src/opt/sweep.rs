@@ -530,17 +530,27 @@ fn cell_from_eval(spec: &SweepSpec, ci: usize, si: usize, bi: usize, ev: &Evalua
 /// block-level cost cache, and rank. See the module docs for the
 /// pipeline; [`sweep_serial`] is the unmemoized serial reference.
 pub fn sweep(spec: &SweepSpec) -> Result<SweepReport, String> {
-    let t0 = Instant::now();
-    validate_spec(spec)?;
     let threads = if spec.threads == 0 { par::default_threads() } else { spec.threads };
-    let grid = grid_of(spec);
-    let cands: Vec<CellCand> =
-        grid.iter().map(|&(ci, si, bi)| CellCand { spec, ci, si, bi }).collect();
     let mut eval = if spec.cost_cache {
         Evaluator::new(threads)
     } else {
         Evaluator::without_cost_cache(threads)
     };
+    sweep_with(spec, &mut eval)
+}
+
+/// [`sweep`] over a caller-provided evaluator: reruns keep the compile
+/// memo and cost cache warm, and a cache pre-loaded from a
+/// [`crate::artifact::CacheSnapshot`] (`--warm-cache`) replays earlier
+/// block costings from disk. `spec.threads`/`spec.cost_cache` are
+/// ignored — the evaluator already fixes both.
+pub fn sweep_with(spec: &SweepSpec, eval: &mut Evaluator) -> Result<SweepReport, String> {
+    let t0 = Instant::now();
+    validate_spec(spec)?;
+    let threads = eval.threads();
+    let grid = grid_of(spec);
+    let cands: Vec<CellCand> =
+        grid.iter().map(|&(ci, si, bi)| CellCand { spec, ci, si, bi }).collect();
     eval.begin_run();
     let evaluated = eval.evaluate(&cands)?;
     let cells: Vec<SweepCell> = grid

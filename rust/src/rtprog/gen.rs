@@ -83,7 +83,12 @@ pub fn generate_groups(
         hints,
         backend: default_backend,
         var_counter: 2,
-        scratch: format!("scratch_space//_p{}//_t0", std::process::id()),
+        // A fixed token, not std::process::id(): temp paths are never
+        // written to disk (the CP interpreter drops them — only
+        // non-temp createvars keep their path), and a pid here would
+        // leak into the structural plan hashes, making a persisted
+        // plan artifact regenerate on every cross-process load.
+        scratch: "scratch_space//_p0//_t0".to_string(),
     };
     let mut blocks = Vec::with_capacity(prog.blocks.len());
     for (i, b) in prog.blocks.iter().enumerate() {

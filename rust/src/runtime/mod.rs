@@ -26,6 +26,78 @@ mod stub;
 #[cfg(not(feature = "pjrt"))]
 pub use stub::KernelRegistry;
 
+/// Environment variable that overrides kernel-artifact directory
+/// resolution (see [`kernel_artifact_dir`]).
+pub const KERNEL_DIR_ENV: &str = "SYSDS_KERNEL_DIR";
+
+/// Locate the AOT kernel artifact directory.
+///
+/// `KernelRegistry::load(Path::new("artifacts"))` used to resolve the
+/// directory against whatever the process cwd happened to be, so running
+/// `repro` from outside the checkout silently lost the compiled kernels.
+/// Resolution order:
+///
+/// 1. `SYSDS_KERNEL_DIR` — used as given, even if it does not exist: an
+///    explicit override that points nowhere should be diagnosed by the
+///    caller, not silently skipped;
+/// 2. `artifacts/` under the current working directory;
+/// 3. `artifacts/` next to the running executable, then up through its
+///    ancestors (covers `target/release/repro` inside a checkout);
+/// 4. `artifacts/` under the workspace root the crate was built from
+///    (dev builds run from elsewhere).
+///
+/// Returns `None` when no candidate directory exists.
+pub fn kernel_artifact_dir() -> Option<std::path::PathBuf> {
+    use std::path::PathBuf;
+    if let Ok(dir) = std::env::var(KERNEL_DIR_ENV) {
+        return Some(PathBuf::from(dir));
+    }
+    let mut candidates: Vec<PathBuf> = vec![PathBuf::from("artifacts")];
+    if let Ok(exe) = std::env::current_exe() {
+        for dir in exe.ancestors().skip(1) {
+            candidates.push(dir.join("artifacts"));
+        }
+    }
+    if let Some(root) = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).parent() {
+        candidates.push(root.join("artifacts"));
+    }
+    candidates.into_iter().find(|c| c.is_dir())
+}
+
+/// Load the kernel registry for measured execution, resolving the
+/// artifact directory via [`kernel_artifact_dir`] and *warning* — instead
+/// of silently continuing — when compiled kernels were expected but none
+/// could be loaded. Returns `None` on any miss; callers fall back to the
+/// native Rust kernels.
+pub fn load_registry_or_warn(ctx: &str) -> Option<KernelRegistry> {
+    let Some(dir) = kernel_artifact_dir() else {
+        eprintln!(
+            "warning: {ctx}: no kernel artifact directory found (run `make artifacts` \
+             or set {KERNEL_DIR_ENV}); using native Rust kernels"
+        );
+        return None;
+    };
+    match KernelRegistry::load(&dir) {
+        Ok(reg) if !reg.is_empty() => Some(reg),
+        Ok(_) => {
+            eprintln!(
+                "warning: {ctx}: kernel artifact directory {} holds no loadable kernels; \
+                 using native Rust kernels",
+                dir.display()
+            );
+            None
+        }
+        Err(e) => {
+            eprintln!(
+                "warning: {ctx}: failed to load kernel registry from {}: {e}; \
+                 using native Rust kernels",
+                dir.display()
+            );
+            None
+        }
+    }
+}
+
 /// Build the registry key for an op over the given input shapes.
 pub fn kernel_key(op: &str, shapes: &[(usize, usize)]) -> String {
     let mut k = op.to_string();
@@ -38,6 +110,17 @@ pub fn kernel_key(op: &str, shapes: &[(usize, usize)]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn kernel_dir_env_override_wins() {
+        // The override is honoured verbatim even when it points nowhere:
+        // an explicit path that is wrong must surface downstream, not be
+        // silently replaced by a cwd-relative guess.
+        std::env::set_var(KERNEL_DIR_ENV, "/nonexistent/kernels");
+        let d = kernel_artifact_dir();
+        std::env::remove_var(KERNEL_DIR_ENV);
+        assert_eq!(d, Some(std::path::PathBuf::from("/nonexistent/kernels")));
+    }
 
     #[test]
     fn kernel_key_format() {

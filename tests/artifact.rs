@@ -1,0 +1,295 @@
+//! Integration tests for the persistent artifact layer (`src/artifact/`):
+//! filesystem round-trips for all three artifact kinds, the
+//! corruption/truncation/unknown-kind diagnostics (always an `Err`, never
+//! a panic), the regenerate-on-mismatch rule for stale plan payloads, and
+//! the cost-cache snapshot replay contract — a warm-from-disk optimizer
+//! run must reproduce the cold run's argmin and costs *bitwise* while
+//! serving nearly every costing from the loaded cache.
+
+use std::path::PathBuf;
+
+use systemds::api::{
+    calibrate, load_artifact, save_artifact, Artifact, CacheSnapshot, CalibrateOptions,
+    CalibrationProfile, CompileOptions, DataScenario, Evaluator, GdfSpec, MeasureMode,
+    PlanArtifact, Scenario, PLAN_FORMAT_VERSION,
+};
+use systemds::conf::CostConstants;
+use systemds::matrix::Format;
+use systemds::opt::gdf;
+
+/// Per-test scratch file under a pid-unique directory, so concurrent
+/// test binaries never race on the same artifact paths.
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sysds_artifact_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create artifact test dir");
+    dir.join(name)
+}
+
+/// A cheap plan artifact: the XS scenario under default options.
+fn xs_plan() -> PlanArtifact {
+    let s = Scenario::xs();
+    let opts = CompileOptions::default();
+    PlanArtifact::capture(
+        s.script(),
+        &s.args(),
+        &s.meta(opts.cfg.blocksize),
+        &opts,
+        &CostConstants::default(),
+    )
+    .expect("capture xs plan")
+}
+
+/// The reference GDF search space (mirrors tests/gdf.rs): LinReg CG on
+/// XL1 with a small deterministic axis set.
+fn cg_spec(threads: usize) -> GdfSpec {
+    let s = Scenario::xl1();
+    let mut spec = GdfSpec::linreg_cg(DataScenario::from(&s), 20);
+    spec.blocksizes = vec![1000, 2000];
+    spec.formats = vec![Format::BinaryBlock];
+    spec.partitions_mb = vec![32.0];
+    spec.threads = threads;
+    spec
+}
+
+fn simulated_opts(seed: u64) -> CalibrateOptions {
+    CalibrateOptions {
+        seed,
+        quick: true,
+        threads: 1,
+        mode: MeasureMode::Simulated { noise: 0.0 },
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Round trips through the filesystem
+// ---------------------------------------------------------------------
+
+/// Encode → save → load → decode is the identity for a plan artifact:
+/// the re-encoded text is byte-identical and the synthesized costs
+/// survive bitwise.
+#[test]
+fn plan_artifact_round_trips_through_the_filesystem() {
+    let plan = xs_plan();
+    assert!(plan.total.is_finite() && plan.total > 0.0);
+    assert!(!plan.blocks.is_empty());
+    assert!(!plan.explain.is_empty());
+
+    let encoded = plan.encode();
+    let path = tmp("roundtrip.plan");
+    save_artifact(&path, &Artifact::Plan(plan.clone())).expect("save plan");
+    let loaded = match load_artifact(&path).expect("load plan") {
+        Artifact::Plan(p) => p,
+        other => panic!("expected a plan artifact, got kind '{}'", other.kind()),
+    };
+
+    assert_eq!(loaded.encode(), encoded, "re-encode must be byte-identical");
+    assert_eq!(loaded.script, plan.script);
+    assert_eq!(loaded.args, plan.args);
+    assert_eq!(loaded.inputs, plan.inputs);
+    assert_eq!(loaded.root, plan.root);
+    assert_eq!(loaded.total.to_bits(), plan.total.to_bits(), "total must survive bitwise");
+    assert_eq!(loaded.blocks.len(), plan.blocks.len());
+    for ((ha, ca), (hb, cb)) in loaded.blocks.iter().zip(&plan.blocks) {
+        assert_eq!(ha, hb);
+        assert_eq!(ca.to_bits(), cb.to_bits(), "block costs must survive bitwise");
+    }
+    assert_eq!(loaded.explain, plan.explain);
+
+    // and the loaded artifact validates clean: same stable section, same
+    // structural hash, nothing to regenerate
+    let checked = loaded.load_checked().expect("recompile stable section");
+    assert!(!checked.regenerated, "fresh round trip must not regenerate: {:?}", checked.reason);
+    assert!(checked.plan_unchanged());
+}
+
+/// A calibration profile survives the filesystem with its calibrated
+/// constants intact (bitwise, via `PartialEq` over every f64 field).
+#[test]
+fn profile_round_trips_and_preserves_calibrated_constants() {
+    let opts = simulated_opts(42);
+    let report = calibrate(&opts).expect("simulated calibration");
+    let profile = CalibrationProfile::from_report(&report, &opts);
+    assert_eq!(profile.constants(), &report.calibrated);
+
+    let path = tmp("roundtrip.profile");
+    save_artifact(&path, &Artifact::Profile(profile.clone())).expect("save profile");
+    let loaded = match load_artifact(&path).expect("load profile") {
+        Artifact::Profile(p) => p,
+        other => panic!("expected a profile artifact, got kind '{}'", other.kind()),
+    };
+
+    assert_eq!(loaded.encode(), profile.encode(), "re-encode must be byte-identical");
+    assert_eq!(loaded.constants(), &report.calibrated, "calibrated constants must survive");
+    assert_eq!(loaded.corrections, report.corrections);
+    assert_eq!(loaded.seed, 42);
+    assert!(loaded.summary().contains("seed=42"), "{}", loaded.summary());
+}
+
+// ---------------------------------------------------------------------
+// Diagnostics: corrupted, truncated, unknown — never a panic
+// ---------------------------------------------------------------------
+
+/// Every malformed input is a diagnostic `Err` naming the problem; a
+/// half-written or bit-flipped artifact can never be half-loaded.
+#[test]
+fn corrupted_truncated_and_unknown_artifacts_fail_with_diagnostics() {
+    let text = Artifact::Plan(xs_plan()).encode();
+
+    // bit flip inside the body -> checksum mismatch
+    let corrupted = text.replacen("stable", "stab1e", 1);
+    let err = Artifact::decode(&corrupted).unwrap_err();
+    assert!(err.contains("checksum mismatch"), "{err}");
+
+    // truncation -> missing/mismatched checksum, named as such
+    for cut in [text.len() / 4, text.len() / 2, text.len() - 8] {
+        let err = Artifact::decode(&text[..cut]).unwrap_err();
+        assert!(err.contains("checksum") || err.contains("truncated"), "cut {cut}: {err}");
+    }
+
+    // unknown artifact kind (a valid container from a newer build):
+    // the checksum passes, the dispatch names the kind it cannot read
+    let mut w = systemds::artifact::codec::Writer::new("hologram");
+    w.section("meta");
+    w.put_u64("v", 1);
+    let err = Artifact::decode(&w.finish()).unwrap_err();
+    assert!(err.contains("unknown kind 'hologram'"), "{err}");
+
+    // unsupported container version
+    let mut w = systemds::artifact::codec::Writer::new("plan");
+    w.section("stable");
+    w.put_u64("synth_version", 1);
+    let v2 = w.finish().replacen("#! sysds-artifact v1", "#! sysds-artifact v9", 1);
+    let err = Artifact::decode(&v2).unwrap_err();
+    assert!(err.contains("checksum") || err.contains("version"), "{err}");
+
+    // not an artifact at all, and a missing file on the fs path
+    assert!(Artifact::decode("definitely not an artifact").is_err());
+    let err = load_artifact(&tmp("does_not_exist.plan")).unwrap_err();
+    assert!(err.contains("cannot read"), "{err}");
+}
+
+// ---------------------------------------------------------------------
+// Regenerate-on-mismatch
+// ---------------------------------------------------------------------
+
+/// A stale synthesized payload — wrong format version or tampered
+/// costs — is regenerated from the stable section on load, through a
+/// full save/load cycle, and the regenerated costs match a fresh
+/// capture bitwise.
+#[test]
+fn stale_synthesized_sections_are_regenerated_through_the_fs() {
+    let fresh = xs_plan();
+
+    // poison the payload: old version, garbage total, garbage explain
+    let mut stale = fresh.clone();
+    stale.synth_version = PLAN_FORMAT_VERSION + 1;
+    stale.total = -1.0;
+    stale.explain = "stale explain".to_string();
+
+    let path = tmp("stale.plan");
+    save_artifact(&path, &Artifact::Plan(stale)).expect("save stale plan");
+    let loaded = match load_artifact(&path).expect("load stale plan") {
+        Artifact::Plan(p) => p,
+        other => panic!("expected a plan artifact, got kind '{}'", other.kind()),
+    };
+    let checked = loaded.load_checked().expect("recompile stable section");
+
+    assert!(checked.regenerated, "version mismatch must force regeneration");
+    let reason = checked.reason.as_deref().unwrap_or_default();
+    assert!(reason.contains("version"), "{reason}");
+    assert_eq!(checked.stored_explain, "stale explain");
+    assert_eq!(
+        checked.artifact.total.to_bits(),
+        fresh.total.to_bits(),
+        "regenerated total must match a fresh capture bitwise"
+    );
+    assert_eq!(checked.artifact.synth_version, PLAN_FORMAT_VERSION);
+    assert_eq!(checked.artifact.explain, fresh.explain);
+    assert!(!checked.plan_unchanged());
+    let diff = checked.explain_diff();
+    assert!(diff.contains("- ") && diff.contains("+ "), "{diff}");
+}
+
+// ---------------------------------------------------------------------
+// Cost-cache snapshot replay
+// ---------------------------------------------------------------------
+
+/// The acceptance contract behind `--warm-cache`: run the GDF optimizer
+/// cold, snapshot its cost cache to disk, load the snapshot into a fresh
+/// evaluator, and re-run — the warm run must reproduce the cold argmin
+/// and every candidate cost bitwise, serving ≥90% of block costings from
+/// the loaded cache.
+#[test]
+fn snapshot_round_trip_replays_bitwise_identical_costs() {
+    let spec = cg_spec(2);
+
+    let mut cold = Evaluator::new(2);
+    let cold_report = gdf::optimize_with(&spec, &mut cold).expect("cold gdf run");
+    let cache = cold.cache().expect("default evaluator keeps a cost cache");
+    let snap = CacheSnapshot::from_cache(&cache);
+    assert!(!snap.is_empty(), "cold run must populate the cache");
+    assert!(snap.capacity() >= snap.len());
+
+    let path = tmp("warm.costcache");
+    save_artifact(&path, &Artifact::CacheSnapshot(snap)).expect("save snapshot");
+    let loaded = match load_artifact(&path).expect("load snapshot") {
+        Artifact::CacheSnapshot(s) => s,
+        other => panic!("expected a cost-cache snapshot, got kind '{}'", other.kind()),
+    };
+
+    let mut warm = Evaluator::with_cache(2, Some(loaded.into_cache()));
+    let warm_report = gdf::optimize_with(&spec, &mut warm).expect("warm gdf run");
+
+    assert_eq!(
+        cold_report.best().label(),
+        warm_report.best().label(),
+        "warm-from-disk must reproduce the cold argmin"
+    );
+    assert_eq!(cold_report.candidates.len(), warm_report.candidates.len());
+    for (a, b) in cold_report.candidates.iter().zip(&warm_report.candidates) {
+        assert_eq!(a.label(), b.label());
+        assert_eq!(
+            a.cost_secs.to_bits(),
+            b.cost_secs.to_bits(),
+            "candidate '{}' cost must replay bitwise",
+            a.label()
+        );
+    }
+
+    let stats = warm.run_cache_stats();
+    assert!(
+        stats.hit_rate() >= 0.9,
+        "warm-from-disk hit rate {:.3} below 0.9 ({} hits / {} misses)",
+        stats.hit_rate(),
+        stats.hits,
+        stats.misses
+    );
+}
+
+/// Applying a snapshot into an existing cache merges entries (the
+/// shard-merge path) rather than replacing them, and a decoded snapshot
+/// re-encodes byte-identically.
+#[test]
+fn snapshot_encode_is_stable_and_apply_merges() {
+    let spec = cg_spec(1);
+    let mut eval = Evaluator::new(1);
+    gdf::optimize_with(&spec, &mut eval).expect("gdf run");
+    let cache = eval.cache().expect("cost cache");
+    let snap = CacheSnapshot::from_cache(&cache);
+    let encoded = snap.encode();
+
+    let decoded = CacheSnapshot::decode(&encoded).expect("decode snapshot");
+    assert_eq!(decoded.len(), snap.len());
+    assert_eq!(decoded.encode(), encoded, "re-encode must be byte-identical");
+
+    // merging the snapshot back into the cache it came from changes
+    // nothing: every entry is already present
+    let before = cache.stats().entries;
+    decoded.apply(&cache);
+    assert_eq!(cache.stats().entries, before, "self-merge must not grow the cache");
+
+    // merging into an empty cache restores every entry
+    let restored = decoded.into_cache();
+    assert_eq!(restored.stats().entries, snap.len());
+}

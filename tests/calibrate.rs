@@ -209,6 +209,67 @@ fn cost_cache_never_serves_stale_totals_after_constants_change() {
     }
 }
 
+/// Regression test for the scratch-collision bug: execute-mode
+/// calibration used the fixed path `$TMPDIR/sysds_feedback`, so two
+/// concurrent runs raced on each other's spill files and the directory
+/// was never removed. Defaulted scratch is now unique per run (pid +
+/// seed + counter) and cleaned up on success — two concurrent executed
+/// calibrations must both succeed and leave no per-run directory behind.
+#[test]
+fn concurrent_executed_calibrations_use_disjoint_scratch_and_clean_up() {
+    let opts = |seed| CalibrateOptions {
+        seed,
+        quick: true,
+        threads: 1,
+        mode: MeasureMode::Execute,
+        ..Default::default()
+    };
+    let a = std::thread::spawn({
+        let o = opts(11);
+        move || calibrate(&o)
+    });
+    let b = std::thread::spawn({
+        let o = opts(13);
+        move || calibrate(&o)
+    });
+    a.join().expect("thread A").expect("calibration A");
+    b.join().expect("thread B").expect("calibration B");
+
+    // both per-run scratch directories were removed on success (other
+    // processes may own entries under the shared base — only this
+    // process's seed-11/seed-13 runs are ours to assert on)
+    let base = std::env::temp_dir().join("sysds_feedback");
+    if base.is_dir() {
+        let pid = std::process::id();
+        for entry in std::fs::read_dir(&base).expect("read scratch base") {
+            let name = entry.expect("dir entry").file_name().to_string_lossy().into_owned();
+            assert!(
+                !name.starts_with(&format!("run_{pid}_11_"))
+                    && !name.starts_with(&format!("run_{pid}_13_")),
+                "leftover per-run scratch dir: {name}"
+            );
+        }
+    }
+}
+
+/// An explicit `scratch` override is used as given and never cleaned up:
+/// the caller owns it (post-mortems, shared caches between runs).
+#[test]
+fn explicit_scratch_override_is_used_and_kept() {
+    let dir = std::env::temp_dir().join(format!("sysds_scratch_override_{}", std::process::id()));
+    let opts = CalibrateOptions {
+        seed: 5,
+        quick: true,
+        threads: 1,
+        mode: MeasureMode::Execute,
+        scratch: Some(dir.clone()),
+        ..Default::default()
+    };
+    calibrate(&opts).expect("calibration with explicit scratch");
+    assert!(dir.is_dir(), "explicit scratch must survive a successful calibration");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// The calibrated constants move toward the simulator-truth profile the
 /// simulated measurements were drawn from: job latency collapses by
 /// orders of magnitude and read bandwidth rises.
