@@ -1,0 +1,633 @@
+//! Dataflow lint: def-use / liveness analysis over runtime plans.
+//!
+//! Walks the runtime program exactly as the interpreter would — straight
+//! through generic blocks, into predicate programs, across If joins,
+//! through (par)for / while bodies and into called functions — threading
+//! a variable scope split into *definitely defined* and *conditionally
+//! defined* (`maybe`) names. Four lints share the walk:
+//!
+//! * **use-before-definition** (error) — an instruction reads a name no
+//!   prior instruction on every path defines;
+//! * **conditional definition** (warning) — a read of a variable written
+//!   in only one If-branch, or only inside a loop body that may execute
+//!   zero times;
+//! * **dead instruction** (warning) — a CP instruction or distributed
+//!   job whose temp results are never consumed by anything but `rmvar`;
+//! * **leaked temp** (warning) — a temp intermediate created inside a
+//!   block but never freed by an `rmvar` before the block ends (a leak
+//!   candidate for a long-lived serve daemon).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{Finding, Severity};
+use crate::rtprog::{CpOp, Instr, MrOp, PredProg, RtBlock, RtProgram};
+
+/// Variable scope at a program point.
+#[derive(Clone, Default)]
+struct Scope {
+    /// Defined on every path reaching this point.
+    defined: BTreeSet<String>,
+    /// Defined on some but not all paths; value is the reason shown in
+    /// the conditional-definition warning.
+    maybe: BTreeMap<String, &'static str>,
+}
+
+impl Scope {
+    fn define(&mut self, name: &str) {
+        self.defined.insert(name.to_string());
+        self.maybe.remove(name);
+    }
+
+    fn remove(&mut self, name: &str) {
+        self.defined.remove(name);
+        self.maybe.remove(name);
+    }
+}
+
+struct Ctx<'a> {
+    rt: &'a RtProgram,
+    findings: Vec<Finding>,
+    /// Dedupe key: (kind, variable, location) — each lint fires once per
+    /// variable per location, not once per read.
+    reported: BTreeSet<(&'static str, String, String)>,
+    /// Active function-call stack (recursion guard).
+    stack: Vec<String>,
+    /// `"in function f: "` while walking a function body, else empty.
+    fn_prefix: String,
+}
+
+impl Ctx<'_> {
+    fn emit(&mut self, kind: &'static str, var: &str, loc: &str, idx: usize, sev: Severity, msg: String) {
+        let key = (kind, var.to_string(), loc.to_string());
+        if self.reported.insert(key) {
+            self.findings.push((idx, sev, msg));
+        }
+    }
+}
+
+/// Run the dataflow lint over a whole runtime program.
+pub(crate) fn lint(rt: &RtProgram) -> Vec<Finding> {
+    let mut ctx = Ctx {
+        rt,
+        findings: Vec::new(),
+        reported: BTreeSet::new(),
+        stack: Vec::new(),
+        fn_prefix: String::new(),
+    };
+    let mut scope = Scope::default();
+    for (i, b) in rt.blocks.iter().enumerate() {
+        walk_block(b, &mut scope, i, &mut ctx);
+    }
+    ctx.findings
+}
+
+/// Invoke `f` for every variable name an instruction reads.
+fn for_each_read(inst: &Instr, f: &mut dyn FnMut(&str)) {
+    match inst {
+        Instr::CreateVar { .. } | Instr::AssignVar { .. } => {}
+        Instr::CpVar { src, .. } => f(src),
+        Instr::RmVar { .. } => {} // handled separately (removal, not a value read)
+        Instr::Cp(c) => {
+            for op in &c.inputs {
+                if let Some(n) = op.name() {
+                    f(n);
+                }
+            }
+        }
+        Instr::MrJob(j) => {
+            for n in &j.inputs {
+                f(n);
+            }
+            for mi in j.all_insts() {
+                if let MrOp::ScalarBin { scalar_var: Some(v), .. } = &mi.op {
+                    f(v);
+                }
+            }
+        }
+        Instr::SparkJob(j) => {
+            for n in &j.inputs {
+                f(n);
+            }
+            for mi in j.all_insts() {
+                if let MrOp::ScalarBin { scalar_var: Some(v), .. } = &mi.op {
+                    f(v);
+                }
+            }
+        }
+    }
+}
+
+/// Invoke `f` for every variable name an instruction defines.
+fn for_each_def(inst: &Instr, f: &mut dyn FnMut(&str)) {
+    match inst {
+        Instr::CreateVar { var, .. } | Instr::AssignVar { var, .. } => f(var),
+        Instr::CpVar { dst, .. } => f(dst),
+        Instr::RmVar { .. } => {}
+        Instr::Cp(c) => {
+            if let Some(n) = c.output.name() {
+                f(n);
+            }
+        }
+        Instr::MrJob(j) => {
+            for n in &j.outputs {
+                f(n);
+            }
+        }
+        Instr::SparkJob(j) => {
+            for n in &j.outputs {
+                f(n);
+            }
+        }
+    }
+}
+
+/// Collect every name a block list can define (used to pre-seed loop
+/// bodies so loop-carried reads resolve as *conditional*, not undefined).
+fn collect_defs(blocks: &[RtBlock], out: &mut BTreeSet<String>) {
+    let mut collect_insts = |insts: &[Instr], out: &mut BTreeSet<String>| {
+        for i in insts {
+            for_each_def(i, &mut |n| {
+                out.insert(n.to_string());
+            });
+        }
+    };
+    for b in blocks {
+        match b {
+            RtBlock::Generic { insts, .. } => collect_insts(insts, out),
+            RtBlock::If { pred, then_blocks, else_blocks, .. } => {
+                collect_insts(&pred.insts, out);
+                collect_defs(then_blocks, out);
+                collect_defs(else_blocks, out);
+            }
+            RtBlock::For { var, from, to, by, body, .. } => {
+                out.insert(var.clone());
+                collect_insts(&from.insts, out);
+                collect_insts(&to.insts, out);
+                if let Some(by) = by {
+                    collect_insts(&by.insts, out);
+                }
+                collect_defs(body, out);
+            }
+            RtBlock::While { pred, body, .. } => {
+                collect_insts(&pred.insts, out);
+                collect_defs(body, out);
+            }
+            RtBlock::FCall { outputs, .. } => {
+                for o in outputs {
+                    out.insert(o.clone());
+                }
+            }
+        }
+    }
+}
+
+/// Check one read against the scope.
+fn read_var(name: &str, scope: &Scope, loc: &str, idx: usize, ctx: &mut Ctx) {
+    if scope.defined.contains(name) {
+        return;
+    }
+    if let Some(reason) = scope.maybe.get(name).copied() {
+        ctx.emit(
+            "maybe",
+            name,
+            loc,
+            idx,
+            Severity::Warning,
+            format!("{}read of '{name}' {reason} ({loc})", ctx.fn_prefix),
+        );
+        return;
+    }
+    ctx.emit(
+        "undef",
+        name,
+        loc,
+        idx,
+        Severity::Error,
+        format!("{}use of undefined variable '{name}' ({loc})", ctx.fn_prefix),
+    );
+}
+
+/// Walk a straight-line instruction list, checking reads/defs in order.
+fn walk_insts(insts: &[Instr], scope: &mut Scope, loc: &str, idx: usize, ctx: &mut Ctx) {
+    for inst in insts {
+        let mut reads: Vec<String> = Vec::new();
+        for_each_read(inst, &mut |n| reads.push(n.to_string()));
+        for n in &reads {
+            read_var(n, scope, loc, idx, ctx);
+        }
+        if let Instr::RmVar { vars } = inst {
+            for v in vars {
+                if !scope.defined.contains(v) && !scope.maybe.contains_key(v) {
+                    ctx.emit(
+                        "undef",
+                        v,
+                        loc,
+                        idx,
+                        Severity::Error,
+                        format!("{}rmvar of undefined variable '{v}' ({loc})", ctx.fn_prefix),
+                    );
+                }
+                scope.remove(v);
+            }
+        }
+        let mut defs: Vec<String> = Vec::new();
+        for_each_def(inst, &mut |n| defs.push(n.to_string()));
+        for n in &defs {
+            scope.define(n);
+        }
+    }
+}
+
+/// Is this name a temp intermediate (the same convention
+/// `rtprog/gen.rs::insert_rmvars` frees by): a `createvar ... true`
+/// handle or a generated `_mVar` result name?
+fn temp_set(insts: &[Instr]) -> BTreeSet<String> {
+    let mut temps = BTreeSet::new();
+    for inst in insts {
+        if let Instr::CreateVar { var, temp: true, .. } = inst {
+            temps.insert(var.clone());
+        }
+        let mut defs: Vec<String> = Vec::new();
+        for_each_def(inst, &mut |n| defs.push(n.to_string()));
+        for n in defs {
+            if n.starts_with("_mVar") {
+                temps.insert(n);
+            }
+        }
+    }
+    temps
+}
+
+/// Dead-instruction + leaked-temp lint over one straight-line list.
+/// `keep` exempts a predicate program's result operand (consumed by the
+/// control-flow machinery, not by an instruction).
+fn liveness_lint(insts: &[Instr], keep: Option<&str>, loc: &str, idx: usize, ctx: &mut Ctx) {
+    let temps = temp_set(insts);
+    // Dead instructions: every temp result unconsumed downstream.
+    for (j, inst) in insts.iter().enumerate() {
+        let op_code = match inst {
+            Instr::Cp(c) => match &c.op {
+                CpOp::Write { .. } | CpOp::Print => continue, // side effects
+                op => op.code(),
+            },
+            Instr::MrJob(job) => format!("MR-{}", job.job_type.name()),
+            Instr::SparkJob(_) => "SPARK".to_string(),
+            _ => continue, // bookkeeping
+        };
+        let mut outs: Vec<String> = Vec::new();
+        for_each_def(inst, &mut |n| outs.push(n.to_string()));
+        if outs.is_empty()
+            || !outs.iter().all(|o| temps.contains(o) && Some(o.as_str()) != keep)
+        {
+            continue;
+        }
+        let consumed = outs.iter().any(|o| {
+            insts[j + 1..].iter().any(|later| {
+                let mut hit = false;
+                for_each_read(later, &mut |n| hit |= n == o);
+                hit
+            })
+        });
+        if !consumed {
+            let out = outs.join(", ");
+            ctx.emit(
+                "dead",
+                &out,
+                loc,
+                idx,
+                Severity::Warning,
+                format!(
+                    "{}dead instruction: result '{out}' of {op_code} is never consumed ({loc})",
+                    ctx.fn_prefix
+                ),
+            );
+        }
+    }
+    // Leaked temps: created but never freed before the block ends.
+    let mut freed = BTreeSet::new();
+    for inst in insts {
+        if let Instr::RmVar { vars } = inst {
+            for v in vars {
+                freed.insert(v.clone());
+            }
+        }
+    }
+    for t in &temps {
+        if !freed.contains(t) && Some(t.as_str()) != keep {
+            ctx.emit(
+                "leak",
+                t,
+                loc,
+                idx,
+                Severity::Warning,
+                format!(
+                    "{}temp '{t}' is created but never freed — leak candidate ({loc})",
+                    ctx.fn_prefix
+                ),
+            );
+        }
+    }
+}
+
+/// Walk one predicate program in the enclosing scope.
+fn walk_pred(pred: &PredProg, scope: &mut Scope, loc: &str, idx: usize, ctx: &mut Ctx) {
+    walk_insts(&pred.insts, scope, loc, idx, ctx);
+    if let Some(r) = &pred.result {
+        if let Some(n) = r.name() {
+            read_var(n, scope, loc, idx, ctx);
+        }
+    }
+    let keep = pred.result.as_ref().and_then(|r| r.name());
+    liveness_lint(&pred.insts, keep, loc, idx, ctx);
+}
+
+fn walk_blocks(blocks: &[RtBlock], scope: &mut Scope, idx: usize, ctx: &mut Ctx) {
+    for b in blocks {
+        walk_block(b, scope, idx, ctx);
+    }
+}
+
+fn walk_block(block: &RtBlock, scope: &mut Scope, idx: usize, ctx: &mut Ctx) {
+    match block {
+        RtBlock::Generic { insts, lines, .. } => {
+            let loc = format!("lines {}-{}", lines.0, lines.1);
+            walk_insts(insts, scope, &loc, idx, ctx);
+            liveness_lint(insts, None, &loc, idx, ctx);
+        }
+        RtBlock::If { pred, then_blocks, else_blocks, lines } => {
+            let loc = format!("if predicate, lines {}-{}", lines.0, lines.1);
+            walk_pred(pred, scope, &loc, idx, ctx);
+            let mut then_s = scope.clone();
+            let mut else_s = scope.clone();
+            walk_blocks(then_blocks, &mut then_s, idx, ctx);
+            walk_blocks(else_blocks, &mut else_s, idx, ctx);
+            let defined: BTreeSet<String> =
+                then_s.defined.intersection(&else_s.defined).cloned().collect();
+            let one_sided: Vec<String> = then_s
+                .defined
+                .symmetric_difference(&else_s.defined)
+                .cloned()
+                .collect();
+            let mut maybe = then_s.maybe;
+            for (k, v) in else_s.maybe {
+                maybe.entry(k).or_insert(v);
+            }
+            for v in one_sided {
+                maybe.entry(v).or_insert("defined in only one If-branch");
+            }
+            for v in &defined {
+                maybe.remove(v);
+            }
+            scope.defined = defined;
+            scope.maybe = maybe;
+        }
+        RtBlock::For { var, from, to, by, body, known_trip, lines, .. } => {
+            let loc = format!("for bounds, lines {}-{}", lines.0, lines.1);
+            walk_pred(from, scope, &loc, idx, ctx);
+            walk_pred(to, scope, &loc, idx, ctx);
+            if let Some(by) = by {
+                walk_pred(by, scope, &loc, idx, ctx);
+            }
+            scope.define(var);
+            walk_loop_body(body, scope, idx, ctx, known_trip.is_some_and(|n| n >= 1.0));
+        }
+        RtBlock::While { pred, body, lines } => {
+            let loc = format!("while predicate, lines {}-{}", lines.0, lines.1);
+            walk_pred(pred, scope, &loc, idx, ctx);
+            walk_loop_body(body, scope, idx, ctx, false);
+        }
+        RtBlock::FCall { fname, args, outputs, lines } => {
+            let loc = format!("fcall {fname}, lines {}-{}", lines.0, lines.1);
+            for a in args {
+                read_var(a, scope, &loc, idx, ctx);
+            }
+            if let Some(func) = ctx.rt.funcs.get(fname) {
+                if !ctx.stack.iter().any(|f| f == fname) {
+                    ctx.stack.push(fname.clone());
+                    let saved_prefix =
+                        std::mem::replace(&mut ctx.fn_prefix, format!("in function {fname}: "));
+                    let mut fscope = Scope::default();
+                    for p in &func.params {
+                        fscope.define(p);
+                    }
+                    walk_blocks(&func.blocks, &mut fscope, idx, ctx);
+                    ctx.fn_prefix = saved_prefix;
+                    ctx.stack.pop();
+                }
+            } else {
+                ctx.emit(
+                    "undef",
+                    fname,
+                    &loc,
+                    idx,
+                    Severity::Error,
+                    format!("{}call to unknown function '{fname}' ({loc})", ctx.fn_prefix),
+                );
+            }
+            for o in outputs {
+                scope.define(o);
+            }
+        }
+    }
+}
+
+/// Walk a loop body: pre-seed all body definitions as *conditional* so
+/// loop-carried reads resolve without false use-before-def errors, then
+/// downgrade anything newly defined back to conditional unless the loop
+/// is statically known to run at least once.
+fn walk_loop_body(
+    body: &[RtBlock],
+    scope: &mut Scope,
+    idx: usize,
+    ctx: &mut Ctx,
+    runs_at_least_once: bool,
+) {
+    let mut body_defs = BTreeSet::new();
+    collect_defs(body, &mut body_defs);
+    for d in &body_defs {
+        if !scope.defined.contains(d) {
+            scope
+                .maybe
+                .entry(d.clone())
+                .or_insert("defined only inside a loop that may run zero times");
+        }
+    }
+    let before: BTreeSet<String> = scope.defined.clone();
+    walk_blocks(body, scope, idx, ctx);
+    if !runs_at_least_once {
+        let new_defs: Vec<String> = scope.defined.difference(&before).cloned().collect();
+        for d in new_defs {
+            scope.defined.remove(&d);
+            scope
+                .maybe
+                .entry(d)
+                .or_insert("defined only inside a loop that may run zero times");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Lit;
+    use crate::matrix::{Format, MatrixCharacteristics};
+    use crate::rtprog::{CpInst, Operand};
+
+    fn mat(n: &str) -> Operand {
+        Operand::Mat(n.into())
+    }
+
+    fn createvar(var: &str, temp: bool) -> Instr {
+        Instr::CreateVar {
+            var: var.into(),
+            path: format!("scratch/{var}"),
+            temp,
+            format: Format::BinaryBlock,
+            mc: MatrixCharacteristics::dense(10, 10, 10),
+        }
+    }
+
+    fn transpose(input: &str, output: &str) -> Instr {
+        Instr::Cp(CpInst {
+            op: CpOp::Transpose,
+            inputs: vec![mat(input)],
+            output: mat(output),
+        })
+    }
+
+    fn generic(insts: Vec<Instr>) -> RtBlock {
+        RtBlock::Generic { insts, lines: (1, 1), recompile: false }
+    }
+
+    fn prog(blocks: Vec<RtBlock>) -> RtProgram {
+        RtProgram { blocks, funcs: BTreeMap::new() }
+    }
+
+    #[test]
+    fn use_before_def_is_an_error() {
+        let rt = prog(vec![generic(vec![transpose("X", "_mVar1")])]);
+        let f = lint(&rt);
+        assert!(
+            f.iter().any(|(_, s, m)| *s == Severity::Error
+                && m.contains("use of undefined variable 'X'")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn clean_block_has_no_findings() {
+        let rt = prog(vec![generic(vec![
+            createvar("X", false),
+            createvar("_mVar1", true),
+            transpose("X", "_mVar1"),
+            Instr::Cp(CpInst {
+                op: CpOp::Write { path: "out".into(), format: Format::BinaryBlock },
+                inputs: vec![mat("_mVar1")],
+                output: Operand::Lit(Lit::Str("out".into())),
+            }),
+            Instr::RmVar { vars: vec!["_mVar1".into()] },
+        ])]);
+        assert!(lint(&rt).is_empty(), "{:?}", lint(&rt));
+    }
+
+    #[test]
+    fn dead_instruction_and_leak_are_warnings() {
+        let rt = prog(vec![generic(vec![
+            createvar("X", false),
+            transpose("X", "_mVar1"), // never consumed, never freed
+        ])]);
+        let f = lint(&rt);
+        assert!(f.iter().any(|(_, s, m)| *s == Severity::Warning
+            && m.contains("dead instruction")), "{f:?}");
+        assert!(f.iter().any(|(_, s, m)| *s == Severity::Warning
+            && m.contains("never freed")), "{f:?}");
+        assert!(f.iter().all(|(_, s, _)| *s == Severity::Warning), "{f:?}");
+    }
+
+    #[test]
+    fn one_sided_branch_write_read_after_join_warns() {
+        let assign = |v: &str| Instr::AssignVar { lit: Lit::Int(1), var: v.into() };
+        let read_q = Instr::Cp(CpInst {
+            op: CpOp::Print,
+            inputs: vec![Operand::Scalar("q".into(), crate::ir::ValueType::Int)],
+            output: Operand::Lit(Lit::Int(0)),
+        });
+        let rt = prog(vec![
+            generic(vec![assign("c")]),
+            RtBlock::If {
+                pred: PredProg {
+                    insts: vec![],
+                    result: Some(Operand::Scalar("c".into(), crate::ir::ValueType::Int)),
+                },
+                then_blocks: vec![generic(vec![assign("q")])],
+                else_blocks: vec![],
+                lines: (2, 4),
+            },
+            generic(vec![read_q]),
+        ]);
+        let f = lint(&rt);
+        assert!(
+            f.iter().any(|(_, s, m)| *s == Severity::Warning
+                && m.contains("read of 'q'")
+                && m.contains("only one If-branch")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn loop_carried_defs_do_not_false_positive() {
+        // while body defines t then reads it next iteration: warning at
+        // worst (conditional), never an undefined-variable error.
+        let assign = |v: &str| Instr::AssignVar { lit: Lit::Int(1), var: v.into() };
+        let rt = prog(vec![
+            generic(vec![assign("c")]),
+            RtBlock::While {
+                pred: PredProg {
+                    insts: vec![],
+                    result: Some(Operand::Scalar("c".into(), crate::ir::ValueType::Int)),
+                },
+                body: vec![generic(vec![
+                    Instr::Cp(CpInst {
+                        op: CpOp::Print,
+                        inputs: vec![Operand::Scalar("t".into(), crate::ir::ValueType::Int)],
+                        output: Operand::Lit(Lit::Int(0)),
+                    }),
+                    assign("t"),
+                ])],
+                lines: (2, 5),
+            },
+        ]);
+        let f = lint(&rt);
+        assert!(f.iter().all(|(_, s, _)| *s == Severity::Warning), "{f:?}");
+        assert!(
+            f.iter().any(|(_, _, m)| m.contains("read of 't'") && m.contains("loop")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn for_with_known_trip_keeps_body_defs_definite() {
+        let assign = |v: &str| Instr::AssignVar { lit: Lit::Int(1), var: v.into() };
+        let read = |v: &str| {
+            Instr::Cp(CpInst {
+                op: CpOp::Print,
+                inputs: vec![Operand::Scalar(v.into(), crate::ir::ValueType::Int)],
+                output: Operand::Lit(Lit::Int(0)),
+            })
+        };
+        let rt = prog(vec![
+            RtBlock::For {
+                var: "i".into(),
+                from: PredProg { insts: vec![], result: Some(Operand::Lit(Lit::Int(1))) },
+                to: PredProg { insts: vec![], result: Some(Operand::Lit(Lit::Int(3))) },
+                by: None,
+                body: vec![generic(vec![assign("acc")])],
+                parfor: false,
+                known_trip: Some(3.0),
+                lines: (1, 3),
+            },
+            generic(vec![read("acc")]),
+        ]);
+        assert!(lint(&rt).is_empty(), "{:?}", lint(&rt));
+    }
+}

@@ -1,0 +1,402 @@
+//! Cost-invariant audit: re-costs the plan and checks the annotation
+//! tree against the properties every optimizer assumes.
+//!
+//! * every block and instruction cost is **finite and non-negative**
+//!   (an infinite or NaN cost silently corrupts every argmin built on
+//!   top of it);
+//! * block totals satisfy the paper's **Eq.-1 aggregation identities**:
+//!   Generic / If / FCall totals are recomputed exactly from their
+//!   children; For / While totals — whose steady-state iteration cost is
+//!   not materialised in the tree — are checked against the bounds
+//!   `pred + first ≤ total ≤ pred + w·first` implied by the §3.2
+//!   first/steady read-cost split (steady ≤ first), with the exact value
+//!   `pred + w·first` required when `w < 1`;
+//! * the **block-level cost cache** reproduces the uncached program
+//!   total bitwise ([`crate::cost::cost_total_cached`] against a fresh
+//!   cache) and the report total equals the sum of its top-level nodes.
+//!
+//! The walk mirrors the estimator's tree layout (leading `Inst` children
+//! for predicate/generic instructions, trailing `Block` children for
+//! nested blocks). A layout the walk does not recognise is reported as a
+//! structural *warning* and skipped, never guessed at.
+
+use super::{Finding, Severity, PROGRAM_SCOPE};
+use crate::conf::{ClusterConfig, CostConstants, SystemConfig};
+use crate::cost::cache::{self, CostCache};
+use crate::cost::{cost_program, cost_total_cached, CostNode};
+use crate::rtprog::{RtBlock, RtProgram};
+
+/// Relative comparison tolerance for exactly-recomputable totals. The
+/// recomputation replays the estimator's own summation order, so this
+/// only has to absorb noise, not reassociation.
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * b.abs().max(1.0)
+}
+
+struct Ctx<'a> {
+    rt: &'a RtProgram,
+    cfg: &'a SystemConfig,
+    cc: &'a ClusterConfig,
+    findings: Vec<Finding>,
+    call_stack: Vec<String>,
+}
+
+/// Run the cost-invariant audit over a whole runtime program.
+pub(crate) fn audit(
+    rt: &RtProgram,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    k: &CostConstants,
+) -> Vec<Finding> {
+    let report = cost_program(rt, cfg, cc, k);
+    let mut ctx = Ctx { rt, cfg, cc, findings: Vec::new(), call_stack: Vec::new() };
+    if report.nodes.len() != rt.blocks.len() {
+        ctx.findings.push((
+            PROGRAM_SCOPE,
+            Severity::Warning,
+            format!(
+                "cost tree shape mismatch: {} annotation nodes for {} blocks",
+                report.nodes.len(),
+                rt.blocks.len()
+            ),
+        ));
+        return ctx.findings;
+    }
+    for (i, (b, n)) in rt.blocks.iter().zip(report.nodes.iter()).enumerate() {
+        check_block(b, n, i, &mut ctx);
+    }
+    let top_sum: f64 = report.nodes.iter().map(|n| n.total()).sum();
+    if !close(report.total, top_sum) {
+        ctx.findings.push((
+            PROGRAM_SCOPE,
+            Severity::Error,
+            format!(
+                "program total {} is not the sum of its top-level block costs {}",
+                report.total, top_sum
+            ),
+        ));
+    }
+    let hashes = cache::program_hashes(rt);
+    let cached = cost_total_cached(rt, &hashes, cfg, cc, k, &CostCache::default());
+    if cached.to_bits() != report.total.to_bits() {
+        ctx.findings.push((
+            PROGRAM_SCOPE,
+            Severity::Error,
+            format!(
+                "cached cost total {cached} diverges from the uncached total {} \
+                 (block cache is not a bitwise replay)",
+                report.total
+            ),
+        ));
+    }
+    ctx.findings
+}
+
+fn structural_warning(what: &str, idx: usize, ctx: &mut Ctx) {
+    ctx.findings.push((
+        idx,
+        Severity::Warning,
+        format!("cost tree shape mismatch at {what}; skipping Eq.-1 recomputation"),
+    ));
+}
+
+/// Check one instruction-annotation node: finite, non-negative.
+fn check_inst_node(node: &CostNode, idx: usize, ctx: &mut Ctx) {
+    let CostNode::Inst { rendered, cost } = node else {
+        return;
+    };
+    let t = cost.total();
+    if !t.is_finite() || t < 0.0 {
+        let mut short = rendered.trim().to_string();
+        if short.len() > 60 {
+            short.truncate(60);
+            short.push('…');
+        }
+        ctx.findings.push((
+            idx,
+            Severity::Error,
+            format!("instruction cost {t} is not finite and non-negative: '{short}'"),
+        ));
+    }
+}
+
+/// Split a Block node's children into the leading `Inst` prefix
+/// (predicate / generic instructions) and the trailing `Block` suffix
+/// (nested blocks). Returns `None` when the layout is interleaved.
+fn split_children(children: &[CostNode]) -> Option<(&[CostNode], &[CostNode])> {
+    let n = children.iter().take_while(|c| matches!(c, CostNode::Inst { .. })).count();
+    if children[n..].iter().all(|c| matches!(c, CostNode::Block { .. })) {
+        Some(children.split_at(n))
+    } else {
+        None
+    }
+}
+
+fn sum(nodes: &[CostNode]) -> f64 {
+    nodes.iter().map(|n| n.total()).sum()
+}
+
+fn check_block(b: &RtBlock, node: &CostNode, idx: usize, ctx: &mut Ctx) {
+    let CostNode::Block { label, total, children } = node else {
+        structural_warning("a block annotated as an instruction", idx, ctx);
+        return;
+    };
+    if !total.is_finite() || *total < 0.0 {
+        ctx.findings.push((
+            idx,
+            Severity::Error,
+            format!("block cost {total} is not finite and non-negative ({label})"),
+        ));
+        // Still walk the children: the offending instruction pins the
+        // finding to its source.
+    }
+    for c in children {
+        check_inst_node(c, idx, ctx);
+    }
+    let Some((insts, blocks)) = split_children(children) else {
+        structural_warning(label, idx, ctx);
+        return;
+    };
+    match b {
+        RtBlock::Generic { insts: rins, .. } => {
+            if insts.len() != rins.len() || !blocks.is_empty() {
+                structural_warning(label, idx, ctx);
+                return;
+            }
+            let expected = sum(insts);
+            if total.is_finite() && !close(*total, expected) {
+                ctx.findings.push((
+                    idx,
+                    Severity::Error,
+                    format!(
+                        "{label}: total {total} deviates from the sum of its \
+                         instruction costs {expected}"
+                    ),
+                ));
+            }
+        }
+        RtBlock::If { pred, then_blocks, else_blocks, .. } => {
+            if insts.len() != pred.insts.len()
+                || blocks.len() != then_blocks.len() + else_blocks.len()
+            {
+                structural_warning(label, idx, ctx);
+                return;
+            }
+            let (tn, en) = blocks.split_at(then_blocks.len());
+            for (rb, cn) in then_blocks.iter().zip(tn).chain(else_blocks.iter().zip(en)) {
+                check_block(rb, cn, idx, ctx);
+            }
+            let pt = sum(insts);
+            let (tt, et) = (sum(tn), sum(en));
+            // Eq. 1: branch weight 1/2 per successor; a missing else is an
+            // empty branch costing 0.
+            let expected =
+                if else_blocks.is_empty() { pt + tt / 2.0 } else { pt + (tt + et) / 2.0 };
+            if total.is_finite() && !close(*total, expected) {
+                ctx.findings.push((
+                    idx,
+                    Severity::Error,
+                    format!("{label}: total {total} deviates from the Eq.-1 value {expected}"),
+                ));
+            }
+        }
+        RtBlock::For { from, to, by, body, parfor, known_trip, .. } => {
+            let np = from.insts.len() + to.insts.len() + by.as_ref().map_or(0, |p| p.insts.len());
+            if insts.len() != np || blocks.len() != body.len() {
+                structural_warning(label, idx, ctx);
+                return;
+            }
+            for (rb, cn) in body.iter().zip(blocks) {
+                check_block(rb, cn, idx, ctx);
+            }
+            let n_iter = known_trip.unwrap_or(ctx.cfg.unknown_iterations).max(0.0);
+            let w = if *parfor {
+                (n_iter / ctx.cc.k_local.max(1) as f64).ceil()
+            } else {
+                n_iter
+            };
+            check_loop_bounds(label, *total, sum(insts), sum(blocks), w, idx, ctx);
+        }
+        RtBlock::While { pred, body, .. } => {
+            if insts.len() != pred.insts.len() || blocks.len() != body.len() {
+                structural_warning(label, idx, ctx);
+                return;
+            }
+            for (rb, cn) in body.iter().zip(blocks) {
+                check_block(rb, cn, idx, ctx);
+            }
+            let n_iter = ctx.cfg.unknown_iterations.max(0.0);
+            // The predicate runs N̂+1 times, the body follows the For
+            // first/steady split with weight N̂.
+            check_loop_bounds(label, *total, sum(insts) * (n_iter + 1.0), sum(blocks), n_iter, idx, ctx);
+        }
+        RtBlock::FCall { fname, .. } => {
+            let recursive = ctx.call_stack.iter().any(|f| f == fname);
+            let func = ctx.rt.funcs.get(fname);
+            if recursive || func.is_none() {
+                // The estimator prices unknown / recursive calls at 0.
+                if *total != 0.0 || !children.is_empty() {
+                    ctx.findings.push((
+                        idx,
+                        Severity::Error,
+                        format!(
+                            "{label}: a {} call must cost exactly 0, got {total}",
+                            if recursive { "recursive" } else { "unknown-function" }
+                        ),
+                    ));
+                }
+                return;
+            }
+            let func = func.unwrap();
+            if !insts.is_empty() || blocks.len() != func.blocks.len() {
+                structural_warning(label, idx, ctx);
+                return;
+            }
+            ctx.call_stack.push(fname.clone());
+            for (rb, cn) in func.blocks.iter().zip(blocks) {
+                check_block(rb, cn, idx, ctx);
+            }
+            ctx.call_stack.pop();
+            let expected = sum(blocks);
+            if total.is_finite() && !close(*total, expected) {
+                ctx.findings.push((
+                    idx,
+                    Severity::Error,
+                    format!(
+                        "{label}: total {total} deviates from the sum of the \
+                         function body costs {expected}"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Bound-check a loop total. The tree materialises only the *first*
+/// iteration's body nodes; the steady-state cost satisfies
+/// `0 ≤ steady ≤ first`, so for `w ≥ 1`:
+/// `pred + first ≤ total ≤ pred + w·first`, and for `w < 1` the exact
+/// value `pred + w·first` is required.
+fn check_loop_bounds(
+    label: &str,
+    total: f64,
+    pred: f64,
+    first: f64,
+    w: f64,
+    idx: usize,
+    ctx: &mut Ctx,
+) {
+    if !total.is_finite() || !pred.is_finite() || !first.is_finite() {
+        return; // finiteness already reported at the source
+    }
+    if w >= 1.0 {
+        let lo = pred + first;
+        let hi = pred + w * first;
+        let eps = 1e-9 * hi.abs().max(1.0);
+        if total < lo - eps || total > hi + eps {
+            ctx.findings.push((
+                idx,
+                Severity::Error,
+                format!(
+                    "{label}: total {total} outside the Eq.-1 bounds \
+                     [{lo}, {hi}] (w={w})"
+                ),
+            ));
+        }
+    } else {
+        let expected = pred + w * first;
+        if !close(total, expected) {
+            ctx.findings.push((
+                idx,
+                Severity::Error,
+                format!("{label}: total {total} deviates from the Eq.-1 value {expected} (w={w})"),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{CompileOptions, Scenario};
+    use crate::ir::Lit;
+    use crate::matrix::{Format, MatrixCharacteristics};
+    use crate::rtprog::{CpInst, CpOp, Instr, Operand, PredProg};
+
+    fn defaults() -> (SystemConfig, ClusterConfig, CostConstants) {
+        (SystemConfig::default(), ClusterConfig::paper_cluster(), CostConstants::default())
+    }
+
+    #[test]
+    fn bundled_plans_satisfy_all_invariants() {
+        let (cfg, cc, k) = defaults();
+        for backend in crate::rtprog::ExecBackend::all() {
+            let opts = CompileOptions { backend, ..CompileOptions::default() };
+            let c = Scenario::xs().compile(&opts);
+            let f = audit(&c.runtime, &cfg, &cc, &k);
+            assert!(f.is_empty(), "[{}] {f:?}", backend.name());
+        }
+    }
+
+    #[test]
+    fn non_finite_cost_is_an_error() {
+        // Zero HDFS bandwidth prices the persistent read at +inf.
+        let (cfg, cc, _) = defaults();
+        let k = CostConstants { hdfs_read_binaryblock: 0.0, ..CostConstants::default() };
+        let rt = RtProgram {
+            blocks: vec![RtBlock::Generic {
+                insts: vec![
+                    Instr::CreateVar {
+                        var: "X".into(),
+                        path: "data/X".into(),
+                        temp: false,
+                        format: Format::BinaryBlock,
+                        mc: MatrixCharacteristics::dense(10_000, 1_000, 1_000),
+                    },
+                    Instr::Cp(CpInst {
+                        op: CpOp::AggUnary(crate::ir::AggOp::Sum, crate::ir::AggDir::All),
+                        inputs: vec![Operand::Mat("X".into())],
+                        output: Operand::Scalar("s".into(), crate::ir::ValueType::Double),
+                    }),
+                ],
+                lines: (1, 1),
+                recompile: false,
+            }],
+            funcs: Default::default(),
+        };
+        let f = audit(&rt, &cfg, &cc, &k);
+        assert!(
+            f.iter().any(|(_, s, m)| *s == Severity::Error && m.contains("not finite")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn while_loop_bounds_hold_on_a_synthetic_plan() {
+        let (cfg, cc, k) = defaults();
+        let body = RtBlock::Generic {
+            insts: vec![Instr::AssignVar { lit: Lit::Int(1), var: "t".into() }],
+            lines: (2, 2),
+            recompile: false,
+        };
+        let rt = RtProgram {
+            blocks: vec![
+                RtBlock::Generic {
+                    insts: vec![Instr::AssignVar { lit: Lit::Bool(true), var: "c".into() }],
+                    lines: (1, 1),
+                    recompile: false,
+                },
+                RtBlock::While {
+                    pred: PredProg {
+                        insts: vec![],
+                        result: Some(Operand::Scalar("c".into(), crate::ir::ValueType::Bool)),
+                    },
+                    body: vec![body],
+                    lines: (2, 3),
+                },
+            ],
+            funcs: Default::default(),
+        };
+        assert!(audit(&rt, &cfg, &cc, &k).is_empty(), "{:?}", audit(&rt, &cfg, &cc, &k));
+    }
+}

@@ -1,0 +1,282 @@
+//! Static plan verification: a three-pass analyzer over compiled
+//! [`RtProgram`]s that proves a winning plan is well-formed *before* it
+//! is reported, executed or persisted as an artifact.
+//!
+//! The paper's central claim — costing generated runtime plans
+//! "automatically reflects all successive optimization phases" — cuts
+//! both ways: every optimizer bug (sweep, resource grid, gdf rewrites,
+//! per-group backends) surfaces as a silently mispriced or semantically
+//! broken plan. The passes here re-derive, independently of plan
+//! generation, the properties the cost model takes on faith:
+//!
+//! 1. **dataflow lint** ([`dataflow`]) — def-use and liveness analysis
+//!    across runtime blocks and control flow, flagging
+//!    use-before-definition, dead instructions whose results are never
+//!    consumed, temp intermediates that are created but never freed
+//!    (leak candidates), and variables written in only one If-branch but
+//!    read after the join;
+//! 2. **shape & memory audit** ([`shape`]) — an independent
+//!    re-propagation of matrix dimensions through the runtime plan
+//!    (double-entry bookkeeping against the sizes
+//!    `ir/size_prop.rs` stamped into `createvar`/job metadata), plus a
+//!    static peak-operand-memory check per block against the configured
+//!    CP heap and broadcast budgets;
+//! 3. **cost-invariant audit** ([`invariants`]) — every costed block
+//!    must be finite, non-negative and consistent with the paper's
+//!    Eq.-1 control-flow aggregation identities, and the block-level
+//!    cost cache must reproduce the uncached total bitwise.
+//!
+//! Diagnostics are structured ([`Diagnostic`]) and deterministically
+//! ordered, keyed by the same 128-bit structural block hashes the cost
+//! cache uses ([`crate::cost::cache::program_hashes`]), so a diagnostic
+//! survives re-compilation of an identical plan. Entry points:
+//! [`verify`] here, [`crate::api::verify_plan`] for compiled programs,
+//! the `repro verify` subcommand, and the `--verify` flag on the sweep /
+//! resource / gdf optimizers (which audits the winning candidate and
+//! fails the run on error severity).
+
+#![warn(missing_docs)]
+
+pub mod dataflow;
+pub mod invariants;
+pub mod shape;
+
+use crate::conf::{ClusterConfig, CostConstants, SystemConfig};
+use crate::cost::cache;
+use crate::rtprog::{ExecBackend, RtProgram};
+
+/// Sentinel block index for program-level findings (e.g. the cached
+/// total diverging from the uncached total); mapped to the program's
+/// root hash instead of a block hash.
+pub(crate) const PROGRAM_SCOPE: usize = usize::MAX;
+
+/// Analyzer pass that produced a diagnostic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Pass {
+    /// Def-use / liveness lint over blocks and control flow.
+    Dataflow,
+    /// Independent shape re-propagation + static memory-budget audit.
+    Shape,
+    /// Finite/non-negative/Eq.-1/cache-consistency cost audit.
+    CostInvariants,
+}
+
+impl Pass {
+    /// Short lower-case label used in rendered diagnostics.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pass::Dataflow => "dataflow",
+            Pass::Shape => "shape",
+            Pass::CostInvariants => "cost",
+        }
+    }
+}
+
+/// Severity of a diagnostic.
+///
+/// Policy: **error** marks a plan the interpreter could execute
+/// incorrectly or not at all (use of an undefined variable, a shape
+/// contradiction, an over-budget operator on a distributed backend, a
+/// non-finite or inconsistent cost); **warning** marks waste or a
+/// deliberate degradation (dead instructions, leaked temps,
+/// conditionally-defined reads, over-budget operators on the CP-forced
+/// backend — where oversized single-node execution is the *point* of
+/// the plan family and the cost model charges it honestly).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    /// Suspicious but executable: waste, leaks, conditional definitions.
+    Warning,
+    /// The plan is malformed; optimizer `--verify` runs fail on these.
+    Error,
+}
+
+impl Severity {
+    /// Short lower-case label used in rendered diagnostics.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Warning => "warn",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One structured finding of the static analyzer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Diagnostic {
+    /// Pass that produced the finding.
+    pub pass: Pass,
+    /// Error-vs-warning classification (see [`Severity`] for the policy).
+    pub severity: Severity,
+    /// Structural hash (`h1` of the cost cache's 128-bit block hash) of
+    /// the enclosing *top-level* block — stable across re-compilations
+    /// of an identical plan; the program root hash for program-level
+    /// findings.
+    pub block_hash: u64,
+    /// Human-readable description of the finding.
+    pub message: String,
+}
+
+impl Diagnostic {
+    /// One-line rendering: `[pass] severity block=<16-hex> message`.
+    pub fn render(&self) -> String {
+        format!(
+            "[{}] {} block={:016x} {}",
+            self.pass.name(),
+            self.severity.name(),
+            self.block_hash,
+            self.message
+        )
+    }
+}
+
+/// Result of verifying one runtime plan: all diagnostics from all
+/// passes, in deterministic order (pass, block index, severity,
+/// message).
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    /// All findings, deterministically ordered.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Number of top-level blocks audited.
+    pub blocks: usize,
+    /// Backend the severity policy was applied for.
+    pub backend: ExecBackend,
+}
+
+impl VerifyReport {
+    /// Number of error-severity diagnostics.
+    pub fn errors(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    /// Number of warning-severity diagnostics.
+    pub fn warnings(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    /// A plan is clean when no error-severity diagnostic was raised.
+    pub fn is_clean(&self) -> bool {
+        self.errors() == 0
+    }
+
+    /// Deterministic multi-line rendering of every diagnostic (empty
+    /// string when the plan has none).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&d.render());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// One-line summary, e.g.
+    /// `verify: 2 diagnostics (0 errors, 2 warnings) over 4 blocks [mr]`.
+    pub fn summary(&self) -> String {
+        format!(
+            "verify: {} diagnostics ({} errors, {} warnings) over {} blocks [{}]",
+            self.diagnostics.len(),
+            self.errors(),
+            self.warnings(),
+            self.blocks,
+            self.backend.name()
+        )
+    }
+}
+
+/// A raw finding as the passes produce it: top-level block index (or
+/// [`PROGRAM_SCOPE`]), severity, message. The orchestrator attaches the
+/// pass tag and resolves the index to a structural hash.
+pub(crate) type Finding = (usize, Severity, String);
+
+/// Run all three verification passes over a runtime plan and return the
+/// deterministically ordered report.
+///
+/// `backend` is the plan's (effective) execution backend and only
+/// steers the severity policy: over-budget CP operators are warnings on
+/// [`ExecBackend::Cp`] (forcing oversized data through the single node
+/// is that plan family's contract) and errors otherwise.
+pub fn verify(
+    rt: &RtProgram,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    k: &CostConstants,
+    backend: ExecBackend,
+) -> VerifyReport {
+    let hashes = cache::program_hashes(rt);
+    let roots = hashes.block_roots();
+    let mut raw: Vec<(Pass, usize, Severity, String)> = Vec::new();
+    for (b, s, m) in dataflow::lint(rt) {
+        raw.push((Pass::Dataflow, b, s, m));
+    }
+    for (b, s, m) in shape::audit(rt, cfg, cc, backend) {
+        raw.push((Pass::Shape, b, s, m));
+    }
+    for (b, s, m) in invariants::audit(rt, cfg, cc, k) {
+        raw.push((Pass::CostInvariants, b, s, m));
+    }
+    raw.sort_by(|a, b| {
+        a.0.cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)).then(a.3.cmp(&b.3))
+    });
+    let diagnostics = raw
+        .into_iter()
+        .map(|(pass, block, severity, message)| Diagnostic {
+            pass,
+            severity,
+            block_hash: match roots.get(block) {
+                Some(&(h1, _)) => h1,
+                None => hashes.root().0,
+            },
+            message,
+        })
+        .collect();
+    VerifyReport { diagnostics, blocks: rt.blocks.len(), backend }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{CompileOptions, Scenario};
+
+    #[test]
+    fn severity_orders_warning_before_error() {
+        assert!(Severity::Warning < Severity::Error);
+    }
+
+    #[test]
+    fn clean_scenario_verifies_without_errors() {
+        let opts = CompileOptions::default();
+        let c = Scenario::xs().compile(&opts);
+        let r = verify(
+            &c.runtime,
+            &opts.cfg,
+            &opts.cc.0,
+            &CostConstants::default(),
+            opts.backend,
+        );
+        assert!(r.is_clean(), "XS/MR should verify clean:\n{}", r.render());
+        assert_eq!(r.blocks, c.runtime.blocks.len());
+    }
+
+    #[test]
+    fn report_rendering_is_deterministic() {
+        let opts = CompileOptions::default();
+        let c = Scenario::xl1().compile(&opts);
+        let k = CostConstants::default();
+        let a = verify(&c.runtime, &opts.cfg, &opts.cc.0, &k, opts.backend);
+        let b = verify(&c.runtime, &opts.cfg, &opts.cc.0, &k, opts.backend);
+        assert_eq!(a.render(), b.render());
+        assert_eq!(a.summary(), b.summary());
+    }
+
+    #[test]
+    fn diagnostic_renders_pass_severity_and_hash() {
+        let d = Diagnostic {
+            pass: Pass::Dataflow,
+            severity: Severity::Error,
+            block_hash: 0xabcd,
+            message: "boom".into(),
+        };
+        let s = d.render();
+        assert!(s.starts_with("[dataflow] error block=000000000000abcd boom"), "{s}");
+    }
+}

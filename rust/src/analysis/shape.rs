@@ -1,0 +1,715 @@
+//! Shape & memory audit: independent re-propagation of matrix
+//! dimensions through the runtime plan, double-entry-checked against the
+//! sizes `ir/size_prop.rs` stamped into `createvar` handles and MR/Spark
+//! instruction metadata, plus a static operand-memory check against the
+//! configured budgets.
+//!
+//! Dimension rules are re-derived per runtime operator (not reused from
+//! the compiler) so a bug in size propagation and a bug in plan
+//! generation cannot cancel out. Matrix-multiply shapes are checked
+//! transpose-tolerantly: plan generation may suppress an explicit `r'`
+//! and feed the untransposed operand to `mapmm`/`cpmm`, so the declared
+//! product is accepted when *any* orientation of the two operands
+//! produces it — a declared shape unrelated to both operands is still a
+//! contradiction.
+//!
+//! Memory policy (see [`super::Severity`]): a CP operator whose operand
+//! footprint exceeds the CP budget is an **error** on the distributed
+//! backends (execution-type selection promised it would fit) but only a
+//! **warning** on the CP-forced backend, where oversized single-node
+//! operators are the plan family's contract. Distributed-cache and
+//! broadcast pressure are always warnings: partitioned broadcasts read
+//! one partition at a time, so exceeding the budget is suspicious, not
+//! fatal.
+
+use std::collections::BTreeMap;
+
+use super::{Finding, Severity};
+use crate::conf::{ClusterConfig, SystemConfig};
+use crate::ir::{AggDir, BinOp, UnOp};
+use crate::matrix::MatrixCharacteristics;
+use crate::rtprog::{
+    CpInst, CpOp, ExecBackend, Instr, MrInst, MrJob, MrOp, Operand, PredProg, RtBlock, RtProgram,
+    SparkJob,
+};
+
+const MB: f64 = 1024.0 * 1024.0;
+
+struct Ctx<'a> {
+    rt: &'a RtProgram,
+    findings: Vec<Finding>,
+    sparse_threshold: f64,
+    blocksize: i64,
+    partition_bytes: f64,
+    cp_budget: f64,
+    map_budget: f64,
+    broadcast_budget: f64,
+    /// Severity for over-budget CP operators (warning on the CP backend).
+    cp_over: Severity,
+    stack: Vec<String>,
+}
+
+/// Run the shape & memory audit over a whole runtime program.
+pub(crate) fn audit(
+    rt: &RtProgram,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    backend: ExecBackend,
+) -> Vec<Finding> {
+    let mut ctx = Ctx {
+        rt,
+        findings: Vec::new(),
+        sparse_threshold: cfg.sparse_threshold,
+        blocksize: cfg.blocksize,
+        partition_bytes: cfg.partition_bytes,
+        cp_budget: cfg.cp_budget(cc),
+        map_budget: cfg.map_budget(cc),
+        broadcast_budget: cfg.spark_broadcast_budget(cc),
+        cp_over: if backend == ExecBackend::Cp { Severity::Warning } else { Severity::Error },
+        stack: Vec::new(),
+    };
+    let mut env: BTreeMap<String, MatrixCharacteristics> = BTreeMap::new();
+    for (i, b) in rt.blocks.iter().enumerate() {
+        walk_block(b, &mut env, i, &mut ctx);
+    }
+    ctx.findings
+}
+
+/// Known (rows, cols) of a non-scalar characteristics value.
+fn dims(mc: &MatrixCharacteristics) -> Option<(i64, i64)> {
+    if mc.dims_known() && !mc.is_scalar() {
+        Some((mc.rows, mc.cols))
+    } else {
+        None
+    }
+}
+
+/// Characteristics of a CP operand: variable lookup for matrices,
+/// scalar characteristics for scalar variables and literals.
+fn operand_mc(
+    op: &Operand,
+    env: &BTreeMap<String, MatrixCharacteristics>,
+) -> Option<MatrixCharacteristics> {
+    match op {
+        Operand::Mat(n) => env.get(n).copied(),
+        Operand::Scalar(..) | Operand::Lit(_) => Some(MatrixCharacteristics::scalar()),
+    }
+}
+
+/// In-memory size of a CP operand (infinite when unknown — callers skip
+/// non-finite footprints rather than flag them).
+fn operand_mem(op: &Operand, env: &BTreeMap<String, MatrixCharacteristics>, st: f64) -> f64 {
+    match operand_mc(op, env) {
+        Some(mc) => mc.mem_estimate(st),
+        None => f64::INFINITY,
+    }
+}
+
+/// Does any orientation of `l` × `r` produce the declared `out` product?
+/// (Plan generation may suppress explicit transposes on either side.)
+fn matmult_consistent(l: (i64, i64), r: (i64, i64), out: (i64, i64)) -> bool {
+    for la in [l, (l.1, l.0)] {
+        for ra in [r, (r.1, r.0)] {
+            if la.1 == ra.0 && out == (la.0, ra.1) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Operand shape class for elementwise derivation.
+#[derive(Clone, Copy)]
+enum Shape {
+    /// Scalar variable or literal.
+    Scalar,
+    /// Matrix with known (rows, cols).
+    Known((i64, i64)),
+    /// Matrix of unknown extent (or unbound name).
+    Unknown,
+}
+
+/// Elementwise binary with broadcast: per-dimension equal-or-one.
+/// Returns `None` (no finding) when shapes are compatible-unknown and an
+/// error string when two non-unit extents conflict.
+fn broadcast_dims(a: (i64, i64), b: (i64, i64)) -> Result<(i64, i64), ()> {
+    let dim = |x: i64, y: i64| {
+        if x == y || y == 1 {
+            Ok(x.max(y))
+        } else if x == 1 {
+            Ok(y)
+        } else {
+            Err(())
+        }
+    };
+    Ok((dim(a.0, b.0)?, dim(a.1, b.1)?))
+}
+
+fn walk_blocks(
+    blocks: &[RtBlock],
+    env: &mut BTreeMap<String, MatrixCharacteristics>,
+    idx: usize,
+    ctx: &mut Ctx,
+) {
+    for b in blocks {
+        walk_block(b, env, idx, ctx);
+    }
+}
+
+fn walk_block(
+    block: &RtBlock,
+    env: &mut BTreeMap<String, MatrixCharacteristics>,
+    idx: usize,
+    ctx: &mut Ctx,
+) {
+    match block {
+        RtBlock::Generic { insts, lines, .. } => {
+            let loc = format!("lines {}-{}", lines.0, lines.1);
+            walk_insts(insts, env, &loc, idx, ctx);
+        }
+        RtBlock::If { pred, then_blocks, else_blocks, lines } => {
+            let loc = format!("if predicate, lines {}-{}", lines.0, lines.1);
+            walk_pred(pred, env, &loc, idx, ctx);
+            let mut then_e = env.clone();
+            let mut else_e = env.clone();
+            walk_blocks(then_blocks, &mut then_e, idx, ctx);
+            walk_blocks(else_blocks, &mut else_e, idx, ctx);
+            // Keep only entries both branches agree on.
+            env.clear();
+            for (k, v) in &then_e {
+                if else_e.get(k) == Some(v) {
+                    env.insert(k.clone(), *v);
+                }
+            }
+        }
+        RtBlock::For { from, to, by, body, lines, .. } => {
+            let loc = format!("for bounds, lines {}-{}", lines.0, lines.1);
+            walk_pred(from, env, &loc, idx, ctx);
+            walk_pred(to, env, &loc, idx, ctx);
+            if let Some(by) = by {
+                walk_pred(by, env, &loc, idx, ctx);
+            }
+            walk_blocks(body, env, idx, ctx);
+        }
+        RtBlock::While { pred, body, lines } => {
+            let loc = format!("while predicate, lines {}-{}", lines.0, lines.1);
+            walk_pred(pred, env, &loc, idx, ctx);
+            walk_blocks(body, env, idx, ctx);
+        }
+        RtBlock::FCall { fname, .. } => {
+            if let Some(func) = ctx.rt.funcs.get(fname) {
+                if !ctx.stack.iter().any(|f| f == fname) {
+                    ctx.stack.push(fname.clone());
+                    let mut fenv = BTreeMap::new();
+                    let blocks = func.blocks.clone();
+                    walk_blocks(&blocks, &mut fenv, idx, ctx);
+                    ctx.stack.pop();
+                }
+            }
+        }
+    }
+}
+
+fn walk_pred(
+    pred: &PredProg,
+    env: &mut BTreeMap<String, MatrixCharacteristics>,
+    loc: &str,
+    idx: usize,
+    ctx: &mut Ctx,
+) {
+    walk_insts(&pred.insts, env, loc, idx, ctx);
+}
+
+fn walk_insts(
+    insts: &[Instr],
+    env: &mut BTreeMap<String, MatrixCharacteristics>,
+    loc: &str,
+    idx: usize,
+    ctx: &mut Ctx,
+) {
+    for inst in insts {
+        match inst {
+            Instr::CreateVar { var, mc, .. } => {
+                env.insert(var.clone(), *mc);
+            }
+            Instr::AssignVar { var, .. } => {
+                env.insert(var.clone(), MatrixCharacteristics::scalar());
+            }
+            Instr::CpVar { src, dst } => {
+                if let Some(mc) = env.get(src).copied() {
+                    env.insert(dst.clone(), mc);
+                }
+            }
+            Instr::RmVar { .. } => {}
+            Instr::Cp(c) => check_cp(c, env, loc, idx, ctx),
+            Instr::MrJob(j) => check_mr_job(j, env, loc, idx, ctx),
+            Instr::SparkJob(j) => check_spark_job(j, env, loc, idx, ctx),
+        }
+    }
+}
+
+/// Audit one CP instruction: operand-memory footprint against the CP
+/// budget, then output-shape double entry.
+fn check_cp(
+    c: &CpInst,
+    env: &mut BTreeMap<String, MatrixCharacteristics>,
+    loc: &str,
+    idx: usize,
+    ctx: &mut Ctx,
+) {
+    let st = ctx.sparse_threshold;
+    let in_mem: f64 = c.inputs.iter().map(|o| operand_mem(o, env, st)).sum();
+    let out_mem = operand_mem(&c.output, env, st);
+    // Mirrors `ir/memory.rs` op_mem: inputs + op intermediates + output.
+    // `partition` never went through execution-type selection — it is a
+    // generated streaming operator staging one partition at a time.
+    let footprint = match &c.op {
+        CpOp::Partition => in_mem.min(ctx.partition_bytes),
+        CpOp::Write { .. } => in_mem,
+        CpOp::Print => 0.0,
+        CpOp::Binary(BinOp::Solve) => {
+            in_mem + c.inputs.first().map_or(0.0, |a| operand_mem(a, env, st)) + out_mem
+        }
+        _ => in_mem + out_mem,
+    };
+    if footprint.is_finite() && footprint > ctx.cp_budget * (1.0 + 1e-9) {
+        ctx.findings.push((
+            idx,
+            ctx.cp_over,
+            format!(
+                "CP '{}' operand footprint {:.0} MB exceeds the CP memory budget {:.0} MB ({loc})",
+                c.op.code(),
+                footprint / MB,
+                ctx.cp_budget / MB
+            ),
+        ));
+    }
+
+    let Operand::Mat(out_name) = &c.output else {
+        return; // scalar results carry no matrix shape
+    };
+    let declared = env.get(out_name).copied();
+    let in_dims = |i: usize| c.inputs.get(i).and_then(|o| operand_mc(o, env)).and_then(|m| dims(&m));
+    let derived: Option<(i64, i64)> = match &c.op {
+        CpOp::Tsmm { left } => {
+            in_dims(0).map(|(r, co)| if *left { (co, co) } else { (r, r) })
+        }
+        CpOp::MatMult => {
+            if let (Some(l), Some(r), Some(d)) =
+                (in_dims(0), in_dims(1), declared.as_ref().and_then(dims))
+            {
+                if !matmult_consistent(l, r, d) {
+                    ctx.findings.push((
+                        idx,
+                        Severity::Error,
+                        format!(
+                            "shape mismatch: '{out_name}' declared {}x{} is not a product of \
+                             {}x{} and {}x{} under any orientation ({loc})",
+                            d.0, d.1, l.0, l.1, r.0, r.1
+                        ),
+                    ));
+                }
+            }
+            None
+        }
+        CpOp::Transpose => in_dims(0).map(|(r, co)| (co, r)),
+        CpOp::Diag => in_dims(0).map(|(r, co)| if co == 1 { (r, r) } else { (r, 1) }),
+        CpOp::AggUnary(_, dir) => match dir {
+            AggDir::Row => in_dims(0).map(|(r, _)| (r, 1)),
+            AggDir::Col => in_dims(0).map(|(_, co)| (1, co)),
+            AggDir::All => None,
+        },
+        CpOp::Append => {
+            if let (Some(a), Some(b)) = (in_dims(0), in_dims(1)) {
+                if a.0 != b.0 {
+                    ctx.findings.push((
+                        idx,
+                        Severity::Error,
+                        format!(
+                            "shape mismatch: append of {}x{} and {}x{} with unequal row counts ({loc})",
+                            a.0, a.1, b.0, b.1
+                        ),
+                    ));
+                    None
+                } else {
+                    Some((a.0, a.1 + b.1))
+                }
+            } else {
+                None
+            }
+        }
+        CpOp::Partition => in_dims(0),
+        CpOp::Binary(BinOp::Solve) => {
+            if let (Some(a), Some(b)) = (in_dims(0), in_dims(1)) {
+                Some((a.1, b.1))
+            } else {
+                None
+            }
+        }
+        CpOp::Binary(_) => {
+            let side = |i: usize| -> Shape {
+                match c.inputs.get(i).and_then(|o| operand_mc(o, env)) {
+                    Some(m) if m.is_scalar() => Shape::Scalar,
+                    Some(m) => dims(&m).map_or(Shape::Unknown, Shape::Known),
+                    None => Shape::Unknown,
+                }
+            };
+            match (side(0), side(1)) {
+                (Shape::Known(a), Shape::Known(b)) => match broadcast_dims(a, b) {
+                    Ok(d) => Some(d),
+                    Err(()) => {
+                        ctx.findings.push((
+                            idx,
+                            Severity::Error,
+                            format!(
+                                "shape mismatch: elementwise '{}' of incompatible \
+                                 {}x{} and {}x{} ({loc})",
+                                c.op.code(),
+                                a.0, a.1, b.0, b.1
+                            ),
+                        ));
+                        None
+                    }
+                },
+                // Matrix ⊙ scalar keeps the matrix shape exactly. With an
+                // unknown matrix on the other side, known extents > 1 pin
+                // the result, but a unit extent could still be broadcast
+                // over — derive nothing then.
+                (Shape::Known(a), Shape::Scalar) | (Shape::Scalar, Shape::Known(a)) => Some(a),
+                (Shape::Known(a), Shape::Unknown) | (Shape::Unknown, Shape::Known(a))
+                    if a.0 > 1 && a.1 > 1 =>
+                {
+                    Some(a)
+                }
+                _ => None,
+            }
+        }
+        CpOp::Unary(UnOp::CastMatrix) => Some((1, 1)),
+        CpOp::Unary(_) => in_dims(0),
+        CpOp::Rand { .. } | CpOp::Seq { .. } | CpOp::Write { .. } | CpOp::Print => None,
+    };
+    if let (Some(d), Some(want)) = (derived, declared.as_ref().and_then(dims)) {
+        if d != want {
+            ctx.findings.push((
+                idx,
+                Severity::Error,
+                format!(
+                    "shape mismatch: '{out_name}' declared {}x{} but '{}' derives {}x{} ({loc})",
+                    want.0, want.1,
+                    c.op.code(),
+                    d.0, d.1
+                ),
+            ));
+        }
+    }
+    // Double entry only: the declared size keeps feeding downstream
+    // derivations so one mismatch cannot cascade.
+    if declared.is_none() {
+        if let Some((r, co)) = derived {
+            env.insert(out_name.clone(), MatrixCharacteristics::new(r, co, ctx.blocksize, -1));
+        }
+    }
+}
+
+/// Audit one distributed instruction against its declared metadata,
+/// using a job-local byte-index environment.
+fn check_dist_inst(
+    mi: &MrInst,
+    jenv: &mut BTreeMap<usize, MatrixCharacteristics>,
+    job: &str,
+    loc: &str,
+    idx: usize,
+    ctx: &mut Ctx,
+) {
+    let in_dims =
+        |i: usize| mi.inputs.get(i).and_then(|ix| jenv.get(ix)).and_then(dims);
+    let declared = dims(&mi.mc);
+    let derived: Option<(i64, i64)> = match &mi.op {
+        MrOp::Tsmm { left } => {
+            in_dims(0).map(|(r, co)| if *left { (co, co) } else { (r, r) })
+        }
+        MrOp::MapMM { .. } | MrOp::Cpmm | MrOp::Rmm => {
+            if let (Some(l), Some(r), Some(d)) = (in_dims(0), in_dims(1), declared) {
+                if !matmult_consistent(l, r, d) {
+                    ctx.findings.push((
+                        idx,
+                        Severity::Error,
+                        format!(
+                            "shape mismatch: {job} '{}' declares {}x{} which is not a product of \
+                             {}x{} and {}x{} under any orientation ({loc})",
+                            mi.op.code(),
+                            d.0, d.1, l.0, l.1, r.0, r.1
+                        ),
+                    ));
+                }
+            }
+            None
+        }
+        MrOp::Transpose => in_dims(0).map(|(r, co)| (co, r)),
+        MrOp::Diag => in_dims(0).map(|(r, co)| if co == 1 { (r, r) } else { (r, 1) }),
+        MrOp::DataGen { rows, cols, .. } => Some((*rows, *cols)),
+        MrOp::Binary(_) => match (in_dims(0), in_dims(1)) {
+            (Some(a), Some(b)) => match broadcast_dims(a, b) {
+                Ok(d) => Some(d),
+                Err(()) => {
+                    ctx.findings.push((
+                        idx,
+                        Severity::Error,
+                        format!(
+                            "shape mismatch: {job} elementwise '{}' of incompatible \
+                             {}x{} and {}x{} ({loc})",
+                            mi.op.code(),
+                            a.0, a.1, b.0, b.1
+                        ),
+                    ));
+                    None
+                }
+            },
+            _ => None,
+        },
+        MrOp::ScalarBin { .. } | MrOp::Unary(_) => in_dims(0),
+        // Partial-result metadata (map-side aggregates, final ak+,
+        // offset appends) legitimately differs from a naive derivation.
+        MrOp::AggUnaryMap(..) | MrOp::Agg { .. } | MrOp::Append { .. } => None,
+    };
+    if let (Some(d), Some(want)) = (derived, declared) {
+        if d != want {
+            ctx.findings.push((
+                idx,
+                Severity::Error,
+                format!(
+                    "shape mismatch: {job} '{}' declares {}x{} but inputs derive {}x{} ({loc})",
+                    mi.op.code(),
+                    want.0, want.1, d.0, d.1
+                ),
+            ));
+        }
+    }
+    jenv.insert(mi.output, mi.mc);
+}
+
+fn seed_job_env(
+    inputs: &[String],
+    env: &BTreeMap<String, MatrixCharacteristics>,
+) -> BTreeMap<usize, MatrixCharacteristics> {
+    let mut jenv = BTreeMap::new();
+    for (i, name) in inputs.iter().enumerate() {
+        if let Some(mc) = env.get(name) {
+            jenv.insert(i, *mc);
+        }
+    }
+    jenv
+}
+
+fn export_job_outputs(
+    outputs: &[String],
+    result_indices: &[usize],
+    jenv: &BTreeMap<usize, MatrixCharacteristics>,
+    env: &mut BTreeMap<String, MatrixCharacteristics>,
+) {
+    for (k, name) in outputs.iter().enumerate() {
+        if let Some(mc) = result_indices.get(k).and_then(|ri| jenv.get(ri)) {
+            env.insert(name.clone(), *mc);
+        }
+    }
+}
+
+fn check_mr_job(
+    job: &MrJob,
+    env: &mut BTreeMap<String, MatrixCharacteristics>,
+    loc: &str,
+    idx: usize,
+    ctx: &mut Ctx,
+) {
+    let label = format!("MR-{}", job.job_type.name());
+    let mut jenv = seed_job_env(&job.inputs, env);
+    for mi in job.all_insts() {
+        check_dist_inst(mi, &mut jenv, &label, loc, idx, ctx);
+    }
+    export_job_outputs(&job.outputs, &job.result_indices, &jenv, env);
+    let dcache_mem: f64 = job
+        .dcache
+        .iter()
+        .map(|n| env.get(n).map_or(f64::INFINITY, |m| m.mem_estimate(ctx.sparse_threshold)))
+        .sum();
+    if dcache_mem.is_finite() && dcache_mem > ctx.map_budget {
+        ctx.findings.push((
+            idx,
+            Severity::Warning,
+            format!(
+                "{label} distributed-cache inputs ({:.0} MB) exceed the map-task budget \
+                 {:.0} MB ({loc})",
+                dcache_mem / MB,
+                ctx.map_budget / MB
+            ),
+        ));
+    }
+}
+
+fn check_spark_job(
+    job: &SparkJob,
+    env: &mut BTreeMap<String, MatrixCharacteristics>,
+    loc: &str,
+    idx: usize,
+    ctx: &mut Ctx,
+) {
+    let mut jenv = seed_job_env(&job.inputs, env);
+    for mi in job.all_insts() {
+        check_dist_inst(mi, &mut jenv, "SPARK", loc, idx, ctx);
+    }
+    export_job_outputs(&job.outputs, &job.result_indices, &jenv, env);
+    let bc_mem: f64 = job
+        .broadcasts
+        .iter()
+        .map(|n| env.get(n).map_or(f64::INFINITY, |m| m.mem_estimate(ctx.sparse_threshold)))
+        .sum();
+    if bc_mem.is_finite() && bc_mem > ctx.broadcast_budget {
+        ctx.findings.push((
+            idx,
+            Severity::Warning,
+            format!(
+                "SPARK broadcast inputs ({:.0} MB) exceed the broadcast budget {:.0} MB ({loc})",
+                bc_mem / MB,
+                ctx.broadcast_budget / MB
+            ),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conf::{ClusterConfig, SystemConfig};
+    use crate::matrix::Format;
+
+    fn mat(n: &str) -> Operand {
+        Operand::Mat(n.into())
+    }
+
+    fn createvar(var: &str, rows: i64, cols: i64) -> Instr {
+        Instr::CreateVar {
+            var: var.into(),
+            path: format!("scratch/{var}"),
+            temp: true,
+            format: Format::BinaryBlock,
+            mc: MatrixCharacteristics::dense(rows, cols, 1000),
+        }
+    }
+
+    fn prog(insts: Vec<Instr>) -> RtProgram {
+        RtProgram {
+            blocks: vec![RtBlock::Generic { insts, lines: (1, 1), recompile: false }],
+            funcs: Default::default(),
+        }
+    }
+
+    fn run(rt: &RtProgram, backend: ExecBackend) -> Vec<Finding> {
+        audit(rt, &SystemConfig::default(), &ClusterConfig::paper_cluster(), backend)
+    }
+
+    #[test]
+    fn transpose_shape_mismatch_is_an_error() {
+        let rt = prog(vec![
+            createvar("X", 100, 10),
+            createvar("_mVar1", 100, 10), // should be 10x100
+            Instr::Cp(CpInst {
+                op: CpOp::Transpose,
+                inputs: vec![mat("X")],
+                output: mat("_mVar1"),
+            }),
+        ]);
+        let f = run(&rt, ExecBackend::Mr);
+        assert!(
+            f.iter().any(|(_, s, m)| *s == Severity::Error && m.contains("shape mismatch")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn consistent_shapes_are_clean() {
+        let rt = prog(vec![
+            createvar("X", 100, 10),
+            createvar("_mVar1", 10, 100),
+            Instr::Cp(CpInst {
+                op: CpOp::Transpose,
+                inputs: vec![mat("X")],
+                output: mat("_mVar1"),
+            }),
+        ]);
+        assert!(run(&rt, ExecBackend::Mr).is_empty());
+    }
+
+    #[test]
+    fn matmult_accepts_any_orientation_but_not_nonsense() {
+        let mm = |out: &str| {
+            Instr::Cp(CpInst {
+                op: CpOp::MatMult,
+                inputs: vec![mat("A"), mat("B")],
+                output: mat(out),
+            })
+        };
+        // A: 100x10, B: 100x1 — valid only as t(A) %*% B = 10x1.
+        let ok = prog(vec![
+            createvar("A", 100, 10),
+            createvar("B", 100, 1),
+            createvar("ok", 10, 1),
+            mm("ok"),
+        ]);
+        assert!(run(&ok, ExecBackend::Mr).is_empty(), "{:?}", run(&ok, ExecBackend::Mr));
+        let bad = prog(vec![
+            createvar("A", 100, 10),
+            createvar("B", 100, 1),
+            createvar("bad", 7, 3),
+            mm("bad"),
+        ]);
+        let f = run(&bad, ExecBackend::Mr);
+        assert!(
+            f.iter().any(|(_, s, m)| *s == Severity::Error && m.contains("not a product")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn over_budget_cp_operator_severity_follows_backend() {
+        // 200M x 2000 dense = 3.2 TB, far over the 1.4 GB paper budget.
+        let rt = prog(vec![
+            createvar("X", 200_000_000, 2_000),
+            createvar("_mVar1", 2_000, 200_000_000),
+            Instr::Cp(CpInst {
+                op: CpOp::Transpose,
+                inputs: vec![mat("X")],
+                output: mat("_mVar1"),
+            }),
+        ]);
+        let on_mr = run(&rt, ExecBackend::Mr);
+        assert!(
+            on_mr.iter().any(|(_, s, m)| *s == Severity::Error && m.contains("exceeds the CP")),
+            "{on_mr:?}"
+        );
+        let on_cp = run(&rt, ExecBackend::Cp);
+        assert!(
+            on_cp.iter().any(|(_, s, m)| *s == Severity::Warning && m.contains("exceeds the CP")),
+            "{on_cp:?}"
+        );
+        assert!(on_cp.iter().all(|(_, s, _)| *s == Severity::Warning), "{on_cp:?}");
+    }
+
+    #[test]
+    fn elementwise_conflict_is_an_error() {
+        let rt = prog(vec![
+            createvar("A", 100, 10),
+            createvar("B", 100, 7),
+            createvar("C", 100, 10),
+            Instr::Cp(CpInst {
+                op: CpOp::Binary(BinOp::Add),
+                inputs: vec![mat("A"), mat("B")],
+                output: mat("C"),
+            }),
+        ]);
+        let f = run(&rt, ExecBackend::Mr);
+        assert!(
+            f.iter().any(|(_, s, m)| *s == Severity::Error && m.contains("incompatible")),
+            "{f:?}"
+        );
+    }
+}

@@ -30,7 +30,22 @@ pub use crate::opt::evaluate::{Candidate, CostContext, Evaluated, Evaluator};
 pub use crate::opt::gdf::{CutDecision, GdfCandidate, GdfReport, GdfSpec};
 pub use crate::opt::resource::{GridPoint, ResourceGrid, ResourceReport};
 pub use crate::opt::sweep::{DataScenario, NamedCluster, SweepCell, SweepReport, SweepSpec};
+pub use crate::analysis::{Diagnostic, Pass, Severity, VerifyReport};
 pub use crate::rtprog::ExecBackend;
+
+/// Statically verify a compiled runtime plan: dataflow lint, independent
+/// shape & memory audit, and cost-invariant audit (see [`crate::analysis`]).
+/// Returns the deterministically ordered diagnostic report; callers that
+/// enforce well-formedness should check [`VerifyReport::is_clean`].
+pub fn verify_plan(compiled: &CompiledProgram, opts: &CompileOptions) -> VerifyReport {
+    crate::analysis::verify(
+        &compiled.runtime,
+        &opts.cfg,
+        &opts.cc.0,
+        &crate::conf::CostConstants::default(),
+        opts.backend,
+    )
+}
 
 /// Run a parallel scenario sweep: compile the spec's script once per
 /// distinct plan shape across the ClusterConfig × data-size grid, cost

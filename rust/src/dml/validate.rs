@@ -260,4 +260,69 @@ write(beta, $4);
         let s = parse("s = 0; for (i in 1:10) { s = s + i; }").unwrap();
         assert!(validate(&s).is_ok());
     }
+
+    #[test]
+    fn duplicate_function_definition_rejected() {
+        let s = parse(
+            "f = function(a) return (b) { b = a; }\nf = function(a) return (b) { b = a + 1; }",
+        )
+        .unwrap();
+        let err = validate(&s).unwrap_err();
+        assert!(err.contains("duplicate function definition 'f'"), "{err}");
+    }
+
+    #[test]
+    fn builtin_arities_are_enforced() {
+        for (src, name) in [
+            ("a = read($1, $2);", "read"),
+            ("a = matrix(1, 2);", "matrix"),
+            ("a = rand(1);", "rand"),
+            ("a = seq(1, 10, 2, 4);", "seq"),
+            ("a = sum(1, 2);", "sum"),
+            ("a = min(1, 2, 3);", "min"),
+            ("a = cbind(matrix(1, 2, 2));", "cbind"),
+        ] {
+            let s = parse(src).unwrap();
+            let err = validate(&s).unwrap_err();
+            assert!(
+                err.contains("wrong number of arguments") && err.contains(name),
+                "{src}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn undefined_variable_in_while_condition_rejected() {
+        let s = parse("while (q > 0) { q = 1; }").unwrap();
+        assert!(validate(&s).unwrap_err().contains("undefined variable 'q'"));
+    }
+
+    #[test]
+    fn undefined_variable_in_for_bounds_rejected() {
+        let s = parse("for (i in 1:n) { s = i; }").unwrap();
+        assert!(validate(&s).unwrap_err().contains("undefined variable 'n'"));
+    }
+
+    #[test]
+    fn undefined_variable_in_write_and_print_rejected() {
+        let s = parse("write(beta, $1);").unwrap();
+        assert!(validate(&s).unwrap_err().contains("undefined variable 'beta'"));
+        let s = parse("print(msg);").unwrap();
+        assert!(validate(&s).unwrap_err().contains("undefined variable 'msg'"));
+    }
+
+    #[test]
+    fn function_body_does_not_see_outer_scope() {
+        // DML functions close over nothing: only params are in scope.
+        let s = parse("x = 1;\nf = function(a) return (b) { b = a + x; }\ny = f(x);").unwrap();
+        let err = validate(&s).unwrap_err();
+        assert!(err.contains("undefined variable 'x'"), "{err}");
+    }
+
+    #[test]
+    fn error_messages_carry_the_line_number() {
+        let s = parse("a = 1;\nb = a + c;").unwrap();
+        let err = validate(&s).unwrap_err();
+        assert!(err.starts_with("line 2:"), "{err}");
+    }
 }

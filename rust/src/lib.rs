@@ -50,8 +50,14 @@
 //!
 //! The high-level entry points live in [`api`]: compile a DML script into a
 //! runtime plan, cost it against a cluster configuration, explain it at any
-//! compilation level, execute it, or [`api::sweep`] a whole scenario grid.
+//! compilation level, execute it, verify it ([`api::verify_plan`]), or
+//! [`api::sweep`] a whole scenario grid. Static plan verification lives in
+//! [`analysis`]: a three-pass dataflow / shape-and-memory / cost-invariant
+//! audit over generated runtime plans.
 
+#![forbid(unsafe_code)]
+
+pub mod analysis;
 pub mod api;
 pub mod artifact;
 pub mod conf;

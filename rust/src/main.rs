@@ -3,6 +3,7 @@
 //! ```text
 //! repro explain --scenario xs --level hops|runtime      Figure 1 / 2 / 3
 //! repro cost    --scenario xl1                          Figure 4 / 5
+//! repro verify  --scenario xl1 [--backend spark]        static plan verification
 //! repro scenarios                                       Table 1 + §2 plans
 //! repro run <script.dml> [-a N=value ...]               execute a script
 //! repro resource --grid heaps=512,2048:nodes=2,6        grid resource optimizer
@@ -22,9 +23,9 @@ use std::collections::HashMap;
 use std::path::Path;
 
 use systemds::api::{
-    compile, compile_with_meta, linreg_cg_args, Artifact, CacheSnapshot, CalibrationProfile,
-    CompileOptions, Evaluator, ExecBackend, PlanArtifact, Scenario, LINREG_CG,
-    PLAN_FORMAT_VERSION,
+    compile, compile_with_meta, linreg_cg_args, verify_plan, Artifact, CacheSnapshot,
+    CalibrationProfile, CompileOptions, Evaluator, ExecBackend, PlanArtifact, Scenario,
+    LINREG_CG, PLAN_FORMAT_VERSION,
 };
 use systemds::conf::{ClusterConfig, CostConstants, MB};
 use systemds::cost;
@@ -39,6 +40,7 @@ fn main() {
     let code = match args.first().map(String::as_str) {
         Some("explain") => cmd_explain(&args[1..]),
         Some("cost") => cmd_cost(&args[1..]),
+        Some("verify") => cmd_verify(&args[1..]),
         Some("scenarios") => cmd_scenarios(),
         Some("run") => cmd_run(&args[1..]),
         Some("resource") => cmd_resource(&args[1..]),
@@ -49,30 +51,32 @@ fn main() {
         Some("plan") => cmd_plan(&args[1..]),
         _ => {
             eprintln!(
-                "usage: repro <explain|cost|scenarios|run|resource|resource-opt|sweep|gdf|calibrate|plan> [options]\n\
+                "usage: repro <explain|cost|verify|scenarios|run|resource|resource-opt|sweep|gdf|calibrate|plan> [options]\n\
                  \n\
                  explain --scenario <xs|xl1..xl4> [--level hops|runtime]\n\
                  \x20       [--backend cp|mr|spark] [--script ds|cg] [--iters N]\n\
                  cost    --scenario <xs|xl1..xl4> [--backend cp|mr|spark]\n\
                  \x20       [--script ds|cg] [--iters N]\n\
+                 verify  --scenario <xs|xl1..xl4> [--backend cp|mr|spark]\n\
+                 \x20       [--script ds|cg] [--iters N]   (exit 1 on error diagnostics)\n\
                  scenarios\n\
                  run <script.dml> [-a N=value ...] [--threads T] [--heap-mb H]\n\
                  resource [--scenario <name>] [--script ds|cg] [--iters N]\n\
                  \x20     [--grid heaps=512,2048:execmem=2048,20480:nodes=2,6:klocal=6,24]\n\
                  \x20     [--backends cp,mr,spark] [--threads T] [--no-prune]\n\
                  \x20     [--no-cost-cache] [--all] [--warm-cache F] [--save-cache F]\n\
-                 \x20     [--profile F]\n\
+                 \x20     [--profile F] [--verify]\n\
                  resource-opt --scenario <name> [--heaps 256,512,...]\n\
                  \x20       [--backend cp|mr|spark]\n\
                  sweep [--scenarios xs,xl1,...] [--heaps 512,1024,...]\n\
                  \x20     [--backends cp,mr,spark] [--script ds|cg] [--iters N]\n\
                  \x20     [--threads T] [--serial] [--no-cost-cache]\n\
-                 \x20     [--warm-cache F] [--save-cache F] [--profile F]\n\
+                 \x20     [--warm-cache F] [--save-cache F] [--profile F] [--verify]\n\
                  gdf [--scenario <name>] [--script cg|ds] [--iters N]\n\
                  \x20   [--blocksizes 500,1000,2000] [--formats binaryblock,textcell]\n\
                  \x20   [--partitions 8,32] [--backends cp,mr,spark]\n\
                  \x20   [--threads T] [--no-diff] [--no-cost-cache] [--all]\n\
-                 \x20   [--warm-cache F] [--save-cache F] [--profile F]\n\
+                 \x20   [--warm-cache F] [--save-cache F] [--profile F] [--verify]\n\
                  calibrate [--quick] [--simulated] [--noise F] [--seed N]\n\
                  \x20         [--threads T] [--scratch DIR] [--profile F]\n\
                  \x20         [--save-profile F]\n\
@@ -319,6 +323,21 @@ fn cmd_cost(args: &[String]) -> i32 {
     0
 }
 
+fn cmd_verify(args: &[String]) -> i32 {
+    let (compiled, opts) = match compile_flagged(args) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
+    let report = verify_plan(&compiled, &opts);
+    print!("{}", report.render());
+    println!("{}", report.summary());
+    if report.errors() == 0 {
+        0
+    } else {
+        1
+    }
+}
+
 fn cmd_scenarios() -> i32 {
     println!("{:<6} {:>14} {:>10} {:>8} {:>12}", "name", "X", "size", "MR jobs", "est. cost");
     let opts = CompileOptions::default();
@@ -530,6 +549,9 @@ fn cmd_resource(args: &[String]) -> i32 {
     if args.iter().any(|a| a == "--no-cost-cache") {
         grid.cost_cache = false;
     }
+    if args.iter().any(|a| a == "--verify") {
+        grid.verify = true;
+    }
     match profile_constants_flag(args) {
         Ok(Some(k)) => grid.constants = k,
         Ok(None) => {}
@@ -589,6 +611,10 @@ fn cmd_resource(args: &[String]) -> i32 {
         systemds::util::fmt::fmt_secs(best.cost_secs.unwrap_or(f64::NAN)),
         best.budget_mb as i64
     );
+    if let Some(v) = &report.verify {
+        print!("{}", v.render());
+        eprintln!("{}", v.summary());
+    }
     eprintln!("{}", report.summary());
     0
 }
@@ -717,6 +743,9 @@ fn cmd_gdf(args: &[String]) -> i32 {
     if args.iter().any(|a| a == "--no-cost-cache") {
         spec.cost_cache = false;
     }
+    if args.iter().any(|a| a == "--verify") {
+        spec.verify = true;
+    }
     match profile_constants_flag(args) {
         Ok(Some(k)) => spec.constants = k,
         Ok(None) => {}
@@ -816,6 +845,9 @@ fn cmd_sweep(args: &[String]) -> i32 {
     if args.iter().any(|a| a == "--no-cost-cache") {
         spec.cost_cache = false;
     }
+    if args.iter().any(|a| a == "--verify") {
+        spec.verify = true;
+    }
     match profile_constants_flag(args) {
         Ok(Some(k)) => spec.constants = k,
         Ok(None) => {}
@@ -824,6 +856,10 @@ fn cmd_sweep(args: &[String]) -> i32 {
     let serial = args.iter().any(|a| a == "--serial");
     if serial && (flag(args, "--warm-cache").is_some() || flag(args, "--save-cache").is_some()) {
         eprintln!("--serial: incompatible with --warm-cache/--save-cache (the serial reference path keeps no evaluator)");
+        return 2;
+    }
+    if serial && spec.verify {
+        eprintln!("--serial: incompatible with --verify (the serial reference path keeps no winning plan to audit)");
         return 2;
     }
     let result = if serial {
@@ -844,6 +880,10 @@ fn cmd_sweep(args: &[String]) -> i32 {
     match result {
         Ok(report) => {
             print!("{}", report.table());
+            if let Some(v) = &report.verify {
+                print!("{}", v.render());
+                eprintln!("{}", v.summary());
+            }
             eprintln!("{}", report.summary());
             0
         }

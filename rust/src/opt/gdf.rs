@@ -109,6 +109,10 @@ pub struct GdfSpec {
     pub cost_cache: bool,
     /// Worker threads; `0` = available parallelism.
     pub threads: usize,
+    /// Statically verify the argmin candidate's plan ([`crate::analysis`])
+    /// after ranking (`repro gdf --verify`). Error-severity diagnostics
+    /// fail the optimization; the decision trace records a verify line.
+    pub verify: bool,
 }
 
 impl GdfSpec {
@@ -136,6 +140,7 @@ impl GdfSpec {
             max_cuts: 4,
             cost_cache: true,
             threads: 0,
+            verify: false,
         }
     }
 
@@ -303,6 +308,10 @@ pub struct GdfReport {
     pub wall_secs: f64,
     /// Worker threads used.
     pub threads: usize,
+    /// Static verification of the argmin candidate's plan, present when
+    /// the spec asked for it. Always clean — a dirty argmin fails the
+    /// optimization instead.
+    pub verify: Option<crate::analysis::VerifyReport>,
 }
 
 impl GdfReport {
@@ -358,6 +367,10 @@ impl GdfReport {
             "duplicate candidates skipped (identical plan + knobs): {}\n",
             self.skipped_duplicates
         ));
+        if let Some(v) = &self.verify {
+            out.push_str(&v.summary());
+            out.push('\n');
+        }
         out
     }
 
@@ -836,6 +849,40 @@ pub fn optimize_with(spec: &GdfSpec, eval: &mut Evaluator) -> Result<GdfReport, 
         crate::rtprog::explain::ExplainOpts::default(),
     ));
 
+    // Statically verify the winning plan. The severity policy follows
+    // the plan's *effective* backend: all-CP group assignments are the
+    // CP-forced plan family (over-budget single-node operators are its
+    // contract — warnings), anything else is held to the distributed
+    // policy.
+    let verify = if spec.verify {
+        let all_cp = candidates[best].groups.iter().all(|&b| b == ExecBackend::Cp);
+        let vbackend = if all_cp {
+            ExecBackend::Cp
+        } else if spec.default_backend != ExecBackend::Cp {
+            spec.default_backend
+        } else {
+            ExecBackend::Mr
+        };
+        let report = crate::analysis::verify(
+            &best_plan.runtime,
+            &bases[all_raw[best].base].cfg,
+            &spec.cc,
+            &spec.constants,
+            vbackend,
+        );
+        if !report.is_clean() {
+            return Err(format!(
+                "plan verification failed for argmin candidate ({}): {} error(s)\n{}",
+                candidates[best].label(),
+                report.errors(),
+                report.render()
+            ));
+        }
+        Some(report)
+    } else {
+        None
+    };
+
     // Count memo hits from the per-candidate reuse flags: the distinct
     // count may include CP-probe compiles that are not candidates.
     let memo_hits = all_evals.iter().filter(|e| e.plan_reused).count();
@@ -856,6 +903,7 @@ pub fn optimize_with(spec: &GdfSpec, eval: &mut Evaluator) -> Result<GdfReport, 
         truncated_cuts,
         wall_secs: t0.elapsed().as_secs_f64(),
         threads,
+        verify,
     })
 }
 
@@ -929,6 +977,21 @@ mod tests {
         assert!(r.after_explain.contains("SPARK-Job["), "{}", r.after_explain);
         // pid normalisation keeps diffs stable across processes
         assert!(!r.before_explain.contains(&format!("_p{}", std::process::id())));
+    }
+
+    #[test]
+    fn verify_flag_audits_the_argmin_and_traces_it() {
+        let mut spec = tiny_spec();
+        spec.verify = true;
+        let r = optimize(&spec).unwrap();
+        let v = r.verify.as_ref().expect("verify requested");
+        assert!(v.is_clean(), "{}", v.render());
+        let table = r.decision_table();
+        assert!(table.contains("verify: "), "{table}");
+        spec.verify = false;
+        let r = optimize(&spec).unwrap();
+        assert!(r.verify.is_none());
+        assert!(!r.decision_table().contains("verify: "));
     }
 
     #[test]

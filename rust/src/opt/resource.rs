@@ -104,6 +104,10 @@ pub struct ResourceGrid {
     pub cost_cache: bool,
     /// Worker threads; `0` = available parallelism.
     pub threads: usize,
+    /// Statically verify the argmin point's plan ([`crate::analysis`])
+    /// after the search (`repro resource --verify`). Error-severity
+    /// diagnostics fail the optimization; the report carries the audit.
+    pub verify: bool,
 }
 
 impl ResourceGrid {
@@ -131,6 +135,7 @@ impl ResourceGrid {
             prune: true,
             cost_cache: true,
             threads: 0,
+            verify: false,
         }
     }
 
@@ -308,6 +313,10 @@ pub struct ResourceReport {
     pub wall_secs: f64,
     /// Worker threads used.
     pub threads: usize,
+    /// Static verification of the argmin point's plan, present when the
+    /// spec asked for it. Always clean — a dirty argmin fails the
+    /// optimization instead.
+    pub verify: Option<crate::analysis::VerifyReport>,
 }
 
 impl ResourceReport {
@@ -513,6 +522,9 @@ pub fn optimize_grid_with(
     eval.begin_run();
     // per point: (cost, cp_insts, mr_jobs, spark_jobs, plan_reused)
     let mut costed: Vec<Option<(f64, usize, usize, usize, bool)>> = vec![None; raw.len()];
+    // `Arc`-shared plan per costed point, kept so `--verify` can audit
+    // the argmin without recompiling it.
+    let mut plans: Vec<Option<std::sync::Arc<CompiledProgram>>> = vec![None; raw.len()];
     let mut best_time = f64::INFINITY;
     let mut i = 0;
     while i < order.len() {
@@ -534,6 +546,7 @@ pub fn optimize_grid_with(
             let ev = &wave[s];
             costed[p] =
                 Some((ev.cost_secs, ev.cp_insts, ev.mr_jobs, ev.spark_jobs, ev.plan_reused));
+            plans[p] = Some(std::sync::Arc::clone(&ev.plan));
             if ev.cost_secs < best_time {
                 best_time = ev.cost_secs;
             }
@@ -593,6 +606,28 @@ pub fn optimize_grid_with(
         }
     }
 
+    let verify = if spec.verify {
+        let plan = plans[best].as_ref().expect("argmin points are costed, so their plan is kept");
+        let report = crate::analysis::verify(
+            &plan.runtime,
+            &spec.cfg,
+            &raw[best].cc,
+            &spec.constants,
+            raw[best].backend,
+        );
+        if !report.is_clean() {
+            return Err(format!(
+                "plan verification failed for argmin point ({}): {} error(s)\n{}",
+                raw[best].label(),
+                report.errors(),
+                report.render()
+            ));
+        }
+        Some(report)
+    } else {
+        None
+    };
+
     let n_costed = points.iter().filter(|p| !p.pruned()).count();
     Ok(ResourceReport {
         pruned: points.len() - n_costed,
@@ -603,6 +638,7 @@ pub fn optimize_grid_with(
         points,
         wall_secs: t0.elapsed().as_secs_f64(),
         threads,
+        verify,
     })
 }
 
@@ -840,6 +876,18 @@ mod tests {
         // the argmin is always on the frontier (it is undominated on time)
         assert!(r.frontier.contains(&r.best));
         assert_eq!(r.best().cost_secs, f.last().unwrap().cost_secs);
+    }
+
+    #[test]
+    fn verify_flag_audits_the_argmin_point() {
+        let mut g = xs_grid();
+        g.verify = true;
+        let r = optimize_grid(&g).unwrap();
+        let v = r.verify.as_ref().expect("verify requested");
+        assert!(v.is_clean(), "{}", v.render());
+        assert_eq!(v.backend, r.best().backend);
+        g.verify = false;
+        assert!(optimize_grid(&g).unwrap().verify.is_none());
     }
 
     #[test]

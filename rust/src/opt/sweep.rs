@@ -168,6 +168,10 @@ pub struct SweepSpec {
     pub cost_cache: bool,
     /// Worker threads; `0` = available parallelism.
     pub threads: usize,
+    /// Statically verify the winning cell's plan ([`crate::analysis`])
+    /// after ranking (`repro sweep --verify`). Error-severity
+    /// diagnostics fail the sweep; the report carries the audit.
+    pub verify: bool,
 }
 
 impl SweepSpec {
@@ -189,6 +193,7 @@ impl SweepSpec {
             backends: vec![ExecBackend::Mr],
             cost_cache: true,
             threads: 0,
+            verify: false,
         }
     }
 
@@ -256,6 +261,10 @@ pub struct SweepReport {
     pub wall_secs: f64,
     /// Worker threads used.
     pub threads: usize,
+    /// Static verification of the winning (rank-1) cell's plan, present
+    /// when the spec asked for it. Always clean — a dirty winner fails
+    /// the sweep instead.
+    pub verify: Option<crate::analysis::VerifyReport>,
 }
 
 impl SweepReport {
@@ -560,6 +569,31 @@ pub fn sweep_with(spec: &SweepSpec, eval: &mut Evaluator) -> Result<SweepReport,
         .collect();
 
     let ranking = rank(&cells);
+    let verify = if spec.verify {
+        let win = ranking[0];
+        let (ci, _, bi) = grid[win];
+        let report = crate::analysis::verify(
+            &evaluated[win].plan.runtime,
+            &spec.cfg,
+            &spec.clusters[ci].cc,
+            &spec.constants,
+            spec.backends[bi],
+        );
+        if !report.is_clean() {
+            return Err(format!(
+                "plan verification failed for winning cell (scenario '{}' on cluster '{}' \
+                 backend '{}'): {} error(s)\n{}",
+                cells[win].scenario,
+                cells[win].cluster,
+                cells[win].backend,
+                report.errors(),
+                report.render()
+            ));
+        }
+        Some(report)
+    } else {
+        None
+    };
     let distinct_plans = eval.distinct_plans();
     Ok(SweepReport {
         memo_hits: cells.len() - distinct_plans,
@@ -568,6 +602,7 @@ pub fn sweep_with(spec: &SweepSpec, eval: &mut Evaluator) -> Result<SweepReport,
         ranking,
         wall_secs: t0.elapsed().as_secs_f64(),
         threads,
+        verify,
     })
 }
 
@@ -615,6 +650,7 @@ pub fn sweep_serial(spec: &SweepSpec) -> Result<SweepReport, String> {
         ranking,
         wall_secs: t0.elapsed().as_secs_f64(),
         threads: 1,
+        verify: None,
     })
 }
 
@@ -723,6 +759,19 @@ mod tests {
         let mut spec = tiny_spec();
         spec.constants.hdfs_read_binaryblock = 0.0;
         assert!(sweep(&spec).is_err());
+    }
+
+    #[test]
+    fn verify_flag_audits_the_winning_cell() {
+        let mut spec = tiny_spec();
+        spec.verify = true;
+        let r = sweep(&spec).unwrap();
+        let v = r.verify.as_ref().expect("verify requested");
+        assert!(v.is_clean(), "{}", v.render());
+        assert_eq!(v.backend.name(), r.ranked().next().unwrap().backend);
+        // without the flag no audit is run
+        spec.verify = false;
+        assert!(sweep(&spec).unwrap().verify.is_none());
     }
 
     #[test]

@@ -155,7 +155,13 @@ fn gen_pred(dag: &HopDag, ctx: &mut GenCtx) -> PredProg {
     let mut state = DagGen::new(dag, ctx);
     state.run();
     let result = dag.roots.first().map(|r| state.done[r].clone());
-    PredProg { insts: state.insts, result }
+    // Free materialized temps here too — a matrix-valued predicate
+    // sub-expression (e.g. `sum(X %*% v) > 0`) would otherwise leak its
+    // intermediates for the rest of the program. The predicate result
+    // itself must stay live for the enclosing control-flow block.
+    let keep = result.as_ref().and_then(|o| o.name().map(str::to_string));
+    let insts = insert_rmvars_except(state.insts, keep.as_deref());
+    PredProg { insts, result }
 }
 
 /// Generate instructions for one DAG.
@@ -953,6 +959,12 @@ fn scalar_vt(dt: &ir::DataType) -> ir::ValueType {
 
 /// Insert `rmvar` instructions after the last use of each `_mVar` temp.
 fn insert_rmvars(insts: Vec<Instr>) -> Vec<Instr> {
+    insert_rmvars_except(insts, None)
+}
+
+/// [`insert_rmvars`], but `keep` (a predicate's result operand) is never
+/// freed — the enclosing control-flow block reads it after the program.
+fn insert_rmvars_except(insts: Vec<Instr>, keep: Option<&str>) -> Vec<Instr> {
     let mut last_use: HashMap<String, usize> = HashMap::new();
     let mut temps: HashSet<String> = HashSet::new();
     for (i, inst) in insts.iter().enumerate() {
@@ -999,7 +1011,7 @@ fn insert_rmvars(insts: Vec<Instr>) -> Vec<Instr> {
     }
     let mut by_pos: HashMap<usize, Vec<String>> = HashMap::new();
     for (var, pos) in last_use {
-        if temps.contains(&var) {
+        if temps.contains(&var) && keep != Some(var.as_str()) {
             by_pos.entry(pos).or_default().push(var);
         }
     }

@@ -1,0 +1,250 @@
+//! Integration tests for the static plan verifier (`src/analysis/`):
+//! every bundled scenario × backend × script must verify with zero
+//! error-severity diagnostics, plan generation must stay free of
+//! leaked-temp / dead-instruction lint (the `gen_pred` rmvar regression),
+//! injected faults must be caught by the right pass, and the verify
+//! report for the LinReg CG plan is pinned by golden snapshots under
+//! `tests/golden/` (bless-on-first-run, same convention as
+//! `tests/golden.rs`).
+
+use std::path::PathBuf;
+
+use systemds::analysis::{self, Pass, Severity};
+use systemds::api::{
+    compile_with_meta, linreg_cg_args, verify_plan, CompileOptions, CompiledProgram, ExecBackend,
+    Scenario, LINREG_CG,
+};
+use systemds::conf::{ClusterConfig, CostConstants, SystemConfig};
+use systemds::ir::{AggDir, AggOp, Lit, ValueType};
+use systemds::matrix::{Format, MatrixCharacteristics};
+use systemds::rtprog::{CpInst, CpOp, Instr, Operand, RtBlock, RtProgram};
+
+fn compile(s: &Scenario, backend: ExecBackend, script: &str) -> (CompiledProgram, CompileOptions) {
+    let opts = CompileOptions { backend, ..Default::default() };
+    let compiled = match script {
+        "cg" => compile_with_meta(LINREG_CG, &linreg_cg_args(20), &s.meta(opts.cfg.blocksize), &opts)
+            .expect("LinReg CG compiles"),
+        _ => s.compile(&opts),
+    };
+    (compiled, opts)
+}
+
+/// Every bundled scenario, on every backend, for both bundled scripts,
+/// verifies with zero error-severity diagnostics — the analyzer's
+/// double-entry checks agree with plan generation and the cost model.
+#[test]
+fn all_bundled_plans_verify_without_errors() {
+    for s in Scenario::all() {
+        for backend in ExecBackend::all() {
+            for script in ["ds", "cg"] {
+                let (compiled, opts) = compile(&s, backend, script);
+                let r = verify_plan(&compiled, &opts);
+                assert!(
+                    r.is_clean(),
+                    "{}/{}/{}: expected no errors:\n{}",
+                    s.name,
+                    backend.name(),
+                    script,
+                    r.render()
+                );
+                assert_eq!(r.blocks, compiled.runtime.blocks.len());
+            }
+        }
+    }
+}
+
+/// Plan generation frees every `_mVar` temp it materializes — including
+/// predicate sub-expressions (`gen_pred` regression: a matrix-valued
+/// While/If predicate used to leak its intermediates) — and never emits
+/// an instruction whose result is unconsumed.
+#[test]
+fn bundled_plans_have_no_leaked_temps_or_dead_instructions() {
+    for s in Scenario::all() {
+        for backend in ExecBackend::all() {
+            for script in ["ds", "cg"] {
+                let (compiled, opts) = compile(&s, backend, script);
+                let r = verify_plan(&compiled, &opts);
+                for d in &r.diagnostics {
+                    assert!(
+                        !d.message.contains("leak candidate")
+                            && !d.message.contains("dead instruction"),
+                        "{}/{}/{}: {}",
+                        s.name,
+                        backend.name(),
+                        script,
+                        d.render()
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn generic(insts: Vec<Instr>) -> RtProgram {
+    RtProgram {
+        blocks: vec![RtBlock::Generic { insts, lines: (1, 1), recompile: false }],
+        funcs: Default::default(),
+    }
+}
+
+fn verify_rt(rt: &RtProgram, k: &CostConstants, backend: ExecBackend) -> analysis::VerifyReport {
+    analysis::verify(rt, &SystemConfig::default(), &ClusterConfig::paper_cluster(), k, backend)
+}
+
+/// Injected fault 1 (dataflow): an instruction reading a variable no one
+/// defined is caught by the dataflow pass with error severity.
+#[test]
+fn injected_use_before_def_is_caught_by_the_dataflow_pass() {
+    let rt = generic(vec![Instr::Cp(CpInst {
+        op: CpOp::Transpose,
+        inputs: vec![Operand::Mat("X".into())],
+        output: Operand::Mat("_mVar1".into()),
+    })]);
+    let r = verify_rt(&rt, &CostConstants::default(), ExecBackend::Cp);
+    assert!(
+        r.diagnostics.iter().any(|d| d.pass == Pass::Dataflow
+            && d.severity == Severity::Error
+            && d.message.contains("undefined variable 'X'")),
+        "{}",
+        r.render()
+    );
+}
+
+/// Injected fault 2 (shape): declared output metadata contradicting the
+/// operator's dimension rule is caught by the shape pass.
+#[test]
+fn injected_shape_contradiction_is_caught_by_the_shape_pass() {
+    let cv = |var: &str, rows: i64, cols: i64| Instr::CreateVar {
+        var: var.into(),
+        path: format!("scratch/{var}"),
+        temp: true,
+        format: Format::BinaryBlock,
+        mc: MatrixCharacteristics::dense(rows, cols, 1000),
+    };
+    let rt = generic(vec![
+        cv("X", 100, 10),
+        cv("_mVar1", 100, 10), // transpose of 100x10 must be 10x100
+        Instr::Cp(CpInst {
+            op: CpOp::Transpose,
+            inputs: vec![Operand::Mat("X".into())],
+            output: Operand::Mat("_mVar1".into()),
+        }),
+        Instr::RmVar { vars: vec!["X".into(), "_mVar1".into()] },
+    ]);
+    let r = verify_rt(&rt, &CostConstants::default(), ExecBackend::Cp);
+    assert!(
+        r.diagnostics.iter().any(|d| d.pass == Pass::Shape
+            && d.severity == Severity::Error
+            && d.message.contains("shape mismatch")),
+        "{}",
+        r.render()
+    );
+}
+
+/// Injected fault 3 (cost invariants): a calibration profile with zero
+/// HDFS bandwidth prices the persistent read at +inf, which the cost
+/// audit reports as an error.
+#[test]
+fn injected_non_finite_cost_is_caught_by_the_cost_pass() {
+    let k = CostConstants { hdfs_read_binaryblock: 0.0, ..CostConstants::default() };
+    let rt = generic(vec![
+        Instr::CreateVar {
+            var: "X".into(),
+            path: "data/X".into(),
+            temp: false,
+            format: Format::BinaryBlock,
+            mc: MatrixCharacteristics::dense(10_000, 1_000, 1_000),
+        },
+        Instr::Cp(CpInst {
+            op: CpOp::AggUnary(AggOp::Sum, AggDir::All),
+            inputs: vec![Operand::Mat("X".into())],
+            output: Operand::Scalar("s".into(), ValueType::Double),
+        }),
+    ]);
+    let r = verify_rt(&rt, &k, ExecBackend::Cp);
+    assert!(
+        r.diagnostics.iter().any(|d| d.pass == Pass::CostInvariants
+            && d.severity == Severity::Error
+            && d.message.contains("not finite")),
+        "{}",
+        r.render()
+    );
+}
+
+/// Diagnostics carry the structural block hash of the enclosing
+/// top-level block, so a finding survives re-compilation of an
+/// identical plan bit-for-bit.
+#[test]
+fn diagnostics_are_stable_across_recompilation() {
+    let s = Scenario::xl1();
+    let (a, opts) = compile(&s, ExecBackend::Mr, "cg");
+    let (b, _) = compile(&s, ExecBackend::Mr, "cg");
+    let ra = verify_plan(&a, &opts);
+    let rb = verify_plan(&b, &opts);
+    assert_eq!(ra.render(), rb.render());
+    assert_eq!(ra.summary(), rb.summary());
+}
+
+/// `AssignVar`-only scalar plans (no matrices at all) verify clean —
+/// the analyzer does not require matrix metadata to exist.
+#[test]
+fn scalar_only_plan_verifies_clean() {
+    let rt = generic(vec![Instr::AssignVar { lit: Lit::Int(7), var: "n".into() }]);
+    let r = verify_rt(&rt, &CostConstants::default(), ExecBackend::Cp);
+    assert!(r.diagnostics.is_empty(), "{}", r.render());
+}
+
+// ---------------------------------------------------------------------
+// Golden snapshots: summary + rendered diagnostics for the LinReg CG
+// XL1 plan, one per backend. Bless-on-first-run; regenerate with
+// `rm tests/golden/verify_*.txt && cargo test --test verify`.
+// ---------------------------------------------------------------------
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../tests/golden")
+}
+
+fn verify_text(backend: ExecBackend) -> String {
+    let (compiled, opts) = compile(&Scenario::xl1(), backend, "cg");
+    let r = verify_plan(&compiled, &opts);
+    let text = format!("{}\n{}", r.summary(), r.render());
+    systemds::util::fmt::normalize_scratch_pid(&text)
+}
+
+fn check_golden(backend: ExecBackend) {
+    let first = verify_text(backend);
+    let second = verify_text(backend);
+    assert_eq!(first, second, "{}: verify output must be deterministic", backend.name());
+
+    let dir = golden_dir();
+    let path = dir.join(format!("verify_linreg_cg_{}.txt", backend.name()));
+    if !path.exists() {
+        std::fs::create_dir_all(&dir).expect("create tests/golden");
+        std::fs::write(&path, &first).expect("write golden snapshot");
+        eprintln!("blessed new golden snapshot: {}", path.display());
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).expect("read golden snapshot");
+    assert_eq!(
+        first,
+        expected,
+        "{}: verify output diverged from {} — delete the snapshot and re-run to re-bless",
+        backend.name(),
+        path.display()
+    );
+}
+
+#[test]
+fn golden_verify_linreg_cg_cp() {
+    check_golden(ExecBackend::Cp);
+}
+
+#[test]
+fn golden_verify_linreg_cg_mr() {
+    check_golden(ExecBackend::Mr);
+}
+
+#[test]
+fn golden_verify_linreg_cg_spark() {
+    check_golden(ExecBackend::Spark);
+}
