@@ -1,0 +1,270 @@
+//! Bench: the `repro serve` daemon at steady state — one warm process
+//! answering a stream of identical `optimize` requests off the shared
+//! plan memo + cost cache, against the cold baseline of paying full
+//! startup + compilation per request.
+//!
+//! Modes:
+//!
+//! ```text
+//! cargo bench --bench serve                  # human-readable only
+//! cargo bench --bench serve -- --quick       # short measurement budget
+//! cargo bench --bench serve -- --json [PATH] # also emit BENCH_SERVE.json
+//! ```
+//!
+//! The cold side prefers a true process-per-request baseline (spawning
+//! the `repro` binary with `serve` on a one-line stdin session); when
+//! the binary is not built it falls back to a fresh in-process
+//! [`ServeState`] per request and says so in the JSON (`cold.mode`).
+//! Either way the daemon's whole value proposition is the gap: CI
+//! regenerates `BENCH_SERVE.json` in `--quick` mode and fails when the
+//! warm daemon is less than 5x the cold baseline, when the repeated
+//! phase's cache hit rate drops below 0.5, or when the p99 latency is
+//! not a finite positive number.
+//!
+//! Uses plain timed loops rather than `util::bench::Bencher` because the
+//! per-request latency distribution (p50/p99) is itself a measured,
+//! gated quantity.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use systemds::serve::{ServeOptions, ServeState};
+use systemds::util::par;
+
+/// The repeated request: backend argmin for the heaviest bundled
+/// workload (LinReg CG, XL1, 20 iterations — three backend compiles
+/// when cold, pure cache/memo service when warm).
+const REQUEST: &str = "cmd=optimize scenario=xl1 script=cg iters=20";
+
+fn state(threads: usize) -> ServeState {
+    ServeState::new(&ServeOptions { threads, ..Default::default() })
+        .expect("serve state boots")
+}
+
+/// Nearest-rank percentile over unsorted microsecond samples.
+fn percentile_us(samples: &mut [u64], p: f64) -> u64 {
+    if samples.is_empty() {
+        return 0;
+    }
+    samples.sort_unstable();
+    let rank = ((p / 100.0) * samples.len() as f64).ceil() as usize;
+    samples[rank.clamp(1, samples.len()) - 1]
+}
+
+struct WarmSide {
+    requests: usize,
+    total_secs: f64,
+    rps: f64,
+    p50_us: u64,
+    p99_us: u64,
+    hits_delta: u64,
+    misses_delta: u64,
+    hit_rate: f64,
+}
+
+/// Boot one daemon, absorb the cold first request, then measure the
+/// repeated steady-state phase request by request.
+fn measure_warm(threads: usize, requests: usize) -> WarmSide {
+    let state = state(threads);
+    let first = state.handle_line(REQUEST).expect("first (cold) response");
+    assert!(first.contains("ok=true"), "cold request must succeed: {first}");
+
+    let before = state.cache_stats();
+    let mut lat_us: Vec<u64> = Vec::with_capacity(requests);
+    let t0 = Instant::now();
+    for _ in 0..requests {
+        let t = Instant::now();
+        let resp = state.handle_line(REQUEST).expect("warm response");
+        lat_us.push(t.elapsed().as_micros().min(u128::from(u64::MAX)) as u64);
+        debug_assert!(resp.contains("ok=true"), "{resp}");
+    }
+    let total_secs = t0.elapsed().as_secs_f64().max(1e-9);
+    let after = state.cache_stats();
+
+    let hits_delta = after.hits.saturating_sub(before.hits);
+    let misses_delta = after.misses.saturating_sub(before.misses);
+    let lookups = (hits_delta + misses_delta).max(1);
+    WarmSide {
+        requests,
+        total_secs,
+        rps: requests as f64 / total_secs,
+        p50_us: percentile_us(&mut lat_us, 50.0),
+        p99_us: percentile_us(&mut lat_us, 99.0),
+        hits_delta,
+        misses_delta,
+        hit_rate: hits_delta as f64 / lookups as f64,
+    }
+}
+
+/// Locate the built `repro` binary next to this bench executable
+/// (`target/<profile>/deps/serve-*` → `target/<profile>/repro`).
+fn repro_binary() -> Option<PathBuf> {
+    let exe = std::env::current_exe().ok()?;
+    let deps = exe.parent()?;
+    for cand in [deps.join("repro"), deps.parent()?.join("repro")] {
+        if cand.is_file() {
+            return Some(cand);
+        }
+    }
+    None
+}
+
+/// One full cold process: spawn `repro serve`, feed one request line on
+/// stdin, read the one response line, wait for exit.
+fn cold_process_request(bin: &Path) -> Result<(), String> {
+    let mut child = std::process::Command::new(bin)
+        .arg("serve")
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .map_err(|e| format!("spawn {}: {e}", bin.display()))?;
+    child
+        .stdin
+        .take()
+        .ok_or("child stdin")?
+        .write_all(format!("{REQUEST}\n").as_bytes())
+        .map_err(|e| format!("write request: {e}"))?;
+    let out = child.wait_with_output().map_err(|e| format!("wait: {e}"))?;
+    let resp = String::from_utf8_lossy(&out.stdout);
+    if !out.status.success() || !resp.contains("ok=true") {
+        return Err(format!("cold process answered: {} / {resp}", out.status));
+    }
+    Ok(())
+}
+
+struct ColdSide {
+    mode: &'static str,
+    requests: usize,
+    total_secs: f64,
+    rps: f64,
+}
+
+/// Cold baseline: full startup cost per request — a fresh OS process
+/// when the `repro` binary is available, a fresh in-process daemon
+/// state (full recompilation, empty caches) otherwise.
+fn measure_cold(threads: usize, requests: usize) -> ColdSide {
+    let (mode, total_secs) = match repro_binary() {
+        Some(bin) => {
+            let t0 = Instant::now();
+            for _ in 0..requests {
+                cold_process_request(&bin).expect("cold process request");
+            }
+            ("process", t0.elapsed().as_secs_f64().max(1e-9))
+        }
+        None => {
+            eprintln!("(repro binary not built — cold side falls back to in-process states)");
+            let t0 = Instant::now();
+            for _ in 0..requests {
+                let st = state(threads);
+                let resp = st.handle_line(REQUEST).expect("cold response");
+                assert!(resp.contains("ok=true"), "{resp}");
+            }
+            ("in-process", t0.elapsed().as_secs_f64().max(1e-9))
+        }
+    };
+    ColdSide { mode, requests, total_secs, rps: requests as f64 / total_secs }
+}
+
+fn write_json(path: &Path, threads: usize, quick: bool, warm: &WarmSide, cold: &ColdSide) {
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"schema\": \"bench-serve/v1\",\n",
+            "  \"generated\": \"cargo bench --bench serve -- --json{quickflag}\",\n",
+            "  \"workload\": {{\n",
+            "    \"request\": \"{request}\",\n",
+            "    \"measurement\": \"one warm daemon vs full startup cost per request\"\n",
+            "  }},\n",
+            "  \"threads\": {threads},\n",
+            "  \"quick\": {quick},\n",
+            "  \"warm\": {{\n",
+            "    \"requests\": {wreq},\n",
+            "    \"total_secs\": {wsecs:.6},\n",
+            "    \"requests_per_sec\": {wrps:.1},\n",
+            "    \"p50_us\": {p50},\n",
+            "    \"p99_us\": {p99}\n",
+            "  }},\n",
+            "  \"cold\": {{\n",
+            "    \"mode\": \"{cmode}\",\n",
+            "    \"requests\": {creq},\n",
+            "    \"total_secs\": {csecs:.6},\n",
+            "    \"requests_per_sec\": {crps:.1}\n",
+            "  }},\n",
+            "  \"cache\": {{\n",
+            "    \"hits\": {hits},\n",
+            "    \"misses\": {misses},\n",
+            "    \"hit_rate\": {hit_rate:.4}\n",
+            "  }},\n",
+            "  \"speedup\": {{\n",
+            "    \"warm_vs_cold\": {speedup:.2}\n",
+            "  }}\n",
+            "}}\n",
+        ),
+        quickflag = if quick { " --quick" } else { "" },
+        request = REQUEST,
+        threads = threads,
+        quick = quick,
+        wreq = warm.requests,
+        wsecs = warm.total_secs,
+        wrps = warm.rps,
+        p50 = warm.p50_us,
+        p99 = warm.p99_us,
+        cmode = cold.mode,
+        creq = cold.requests,
+        csecs = cold.total_secs,
+        crps = cold.rps,
+        hits = warm.hits_delta,
+        misses = warm.misses_delta,
+        hit_rate = warm.hit_rate,
+        speedup = warm.rps / cold.rps.max(1e-9),
+    );
+    std::fs::write(path, json).expect("write BENCH_SERVE.json");
+    println!("wrote {}", path.display());
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args.iter().position(|a| a == "--json").map(|i| {
+        match args.get(i + 1).filter(|p| !p.starts_with("--")) {
+            Some(p) => PathBuf::from(p),
+            None => PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_SERVE.json"),
+        }
+    });
+    let (warm_requests, cold_requests) = if quick { (200, 3) } else { (1000, 8) };
+
+    let threads = par::default_threads();
+    println!("== serve: one warm daemon vs cold startup per request, {threads} worker threads ==");
+
+    let warm = measure_warm(threads, warm_requests);
+    println!(
+        "warm daemon: {} requests in {:.3}s -> {:.0} req/s (p50 {}us, p99 {}us)",
+        warm.requests, warm.total_secs, warm.rps, warm.p50_us, warm.p99_us
+    );
+    println!(
+        "steady-state cache: {} hits / {} misses ({:.1}% hit rate)",
+        warm.hits_delta,
+        warm.misses_delta,
+        100.0 * warm.hit_rate
+    );
+
+    let cold = measure_cold(threads, cold_requests);
+    println!(
+        "cold {}: {} requests in {:.3}s -> {:.2} req/s",
+        cold.mode, cold.requests, cold.total_secs, cold.rps
+    );
+
+    let speedup = warm.rps / cold.rps.max(1e-9);
+    println!("-> warm daemon is {speedup:.1}x the cold baseline");
+    if speedup >= 5.0 {
+        println!("-> DAEMON WINS (>= 5x acceptance target)");
+    } else {
+        println!("-> below the 5x target on this machine/budget");
+    }
+
+    if let Some(path) = json_path {
+        write_json(&path, threads, quick, &warm, &cold);
+    }
+}

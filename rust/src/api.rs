@@ -26,7 +26,10 @@ pub use crate::feedback::{
     BlockClass, BlockRecord, CalibrateOptions, CalibrationReport, Corrections, MeasureMode,
     QErrorSummary, ReoptReport,
 };
-pub use crate::opt::evaluate::{Candidate, CostContext, Evaluated, Evaluator};
+pub use crate::opt::evaluate::{
+    budget_error_reason, Budget, Candidate, CostContext, Evaluated, Evaluator, PlanMemo,
+    BUDGET_ERROR_PREFIX, BUDGET_REASON_CANDIDATES, BUDGET_REASON_DEADLINE,
+};
 pub use crate::opt::gdf::{CutDecision, GdfCandidate, GdfReport, GdfSpec};
 pub use crate::opt::resource::{GridPoint, ResourceGrid, ResourceReport};
 pub use crate::opt::sweep::{DataScenario, NamedCluster, SweepCell, SweepReport, SweepSpec};

@@ -72,6 +72,7 @@ pub mod mr;
 pub mod opt;
 pub mod rtprog;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub use api::{

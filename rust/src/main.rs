@@ -23,7 +23,7 @@ use std::collections::HashMap;
 use std::path::Path;
 
 use systemds::api::{
-    compile, compile_with_meta, linreg_cg_args, verify_plan, Artifact, CacheSnapshot,
+    compile, compile_with_meta, linreg_cg_args, verify_plan, Artifact, Budget, CacheSnapshot,
     CalibrationProfile, CompileOptions, Evaluator, ExecBackend, PlanArtifact, Scenario,
     LINREG_CG, PLAN_FORMAT_VERSION,
 };
@@ -34,6 +34,7 @@ use systemds::matrix::Format;
 use systemds::opt::gdf;
 use systemds::opt::resource;
 use systemds::opt::sweep::{self, heap_clock_clusters, DataScenario, SweepSpec};
+use systemds::serve::{serve_lines, serve_tcp, ServeOptions, ServeState};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -49,9 +50,10 @@ fn main() {
         Some("gdf") => cmd_gdf(&args[1..]),
         Some("calibrate") => cmd_calibrate(&args[1..]),
         Some("plan") => cmd_plan(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         _ => {
             eprintln!(
-                "usage: repro <explain|cost|verify|scenarios|run|resource|resource-opt|sweep|gdf|calibrate|plan> [options]\n\
+                "usage: repro <explain|cost|verify|scenarios|run|resource|resource-opt|sweep|gdf|calibrate|plan|serve> [options]\n\
                  \n\
                  explain --scenario <xs|xl1..xl4> [--level hops|runtime]\n\
                  \x20       [--backend cp|mr|spark] [--script ds|cg] [--iters N]\n\
@@ -65,7 +67,7 @@ fn main() {
                  \x20     [--grid heaps=512,2048:execmem=2048,20480:nodes=2,6:klocal=6,24]\n\
                  \x20     [--backends cp,mr,spark] [--threads T] [--no-prune]\n\
                  \x20     [--no-cost-cache] [--all] [--warm-cache F] [--save-cache F]\n\
-                 \x20     [--profile F] [--verify]\n\
+                 \x20     [--profile F] [--verify] [--budget-ms N] [--budget-candidates N]\n\
                  resource-opt --scenario <name> [--heaps 256,512,...]\n\
                  \x20       [--backend cp|mr|spark]\n\
                  sweep [--scenarios xs,xl1,...] [--heaps 512,1024,...]\n\
@@ -77,13 +79,17 @@ fn main() {
                  \x20   [--partitions 8,32] [--backends cp,mr,spark]\n\
                  \x20   [--threads T] [--no-diff] [--no-cost-cache] [--all]\n\
                  \x20   [--warm-cache F] [--save-cache F] [--profile F] [--verify]\n\
+                 \x20   [--budget-ms N] [--budget-candidates N]\n\
                  calibrate [--quick] [--simulated] [--noise F] [--seed N]\n\
                  \x20         [--threads T] [--scratch DIR] [--profile F]\n\
                  \x20         [--save-profile F]\n\
                  plan save <path> [--scenario <name>] [--script cg|ds] [--iters N]\n\
                  \x20              [--backend cp|mr|spark] [--profile F]\n\
                  plan load <path>      (verify; regenerate synthesized data if stale)\n\
-                 plan diff <path>      (EXPLAIN diff: stored plan vs fresh compile)"
+                 plan diff <path>      (EXPLAIN diff: stored plan vs fresh compile)\n\
+                 serve [--listen ADDR:PORT] [--threads T] [--no-cost-cache]\n\
+                 \x20     [--warm-cache F] [--profile F]   (line protocol on stdin/stdout\n\
+                 \x20     or TCP; see README \"Serving\")"
             );
             2
         }
@@ -184,6 +190,20 @@ fn warm_evaluator(args: &[String], threads: usize, cost_cache: bool) -> Result<E
             Err(2)
         }
     }
+}
+
+/// Honour `--budget-ms <N>` / `--budget-candidates <N>`: build the
+/// cooperative [`Budget`] the evaluator checks between candidate
+/// batches. `Ok(None)` when neither flag is present (unbudgeted runs
+/// stay on the exact same code path as before). `Err` carries the exit
+/// code.
+fn budget_flag(args: &[String]) -> Result<Option<std::sync::Arc<Budget>>, i32> {
+    let ms = parse_flag::<u64>(args, "--budget-ms", "a non-negative integer (milliseconds)")?;
+    let cand = parse_flag::<u64>(args, "--budget-candidates", "a non-negative integer")?;
+    if ms.is_none() && cand.is_none() {
+        return Ok(None);
+    }
+    Ok(Some(Budget::new(ms, cand)))
 }
 
 /// Honour `--save-cache <path>` after a successful optimizer run:
@@ -561,6 +581,10 @@ fn cmd_resource(args: &[String]) -> i32 {
         Ok(e) => e,
         Err(code) => return code,
     };
+    match budget_flag(args) {
+        Ok(b) => eval.set_budget(b),
+        Err(code) => return code,
+    }
     let report = match resource::optimize_grid_with(&grid, &mut eval) {
         Ok(r) => r,
         Err(e) => {
@@ -755,6 +779,10 @@ fn cmd_gdf(args: &[String]) -> i32 {
         Ok(e) => e,
         Err(code) => return code,
     };
+    match budget_flag(args) {
+        Ok(b) => eval.set_budget(b),
+        Err(code) => return code,
+    }
     let report = match gdf::optimize_with(&spec, &mut eval) {
         Ok(r) => r,
         Err(e) => {
@@ -1156,6 +1184,67 @@ fn load_plan_checked(path: &Path) -> Result<systemds::api::LoadedPlan, i32> {
         eprintln!("plan: recompiling the stable section failed: {e}");
         1
     })
+}
+
+/// Optimizer-as-a-service: run the long-lived `repro serve` daemon.
+/// Without `--listen` it speaks the line protocol on stdin/stdout (one
+/// response line per request line, EOF ends the session); with
+/// `--listen ADDR:PORT` it accepts concurrent TCP connections, all
+/// sharing one plan memo and cost cache.
+fn cmd_serve(args: &[String]) -> i32 {
+    let mut opts = ServeOptions::default();
+    match parse_flag::<usize>(args, "--threads", "a non-negative integer") {
+        Ok(Some(n)) => opts.threads = n,
+        Ok(None) => {}
+        Err(code) => return code,
+    }
+    if args.iter().any(|a| a == "--no-cost-cache") {
+        opts.no_cost_cache = true;
+    }
+    opts.warm_cache = flag(args, "--warm-cache").map(std::path::PathBuf::from);
+    opts.profile = flag(args, "--profile").map(std::path::PathBuf::from);
+    let state = match ServeState::new(&opts) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve: {e}");
+            return 2;
+        }
+    };
+    // Banner goes to stderr: stdout carries only protocol responses.
+    eprintln!("{}", state.boot_summary());
+    match flag(args, "--listen") {
+        Some(addr) => {
+            let listener = match std::net::TcpListener::bind(&addr) {
+                Ok(l) => l,
+                Err(e) => {
+                    eprintln!("serve: bind {addr}: {e}");
+                    return 1;
+                }
+            };
+            match listener.local_addr() {
+                Ok(a) => eprintln!("serve: listening on {a}"),
+                Err(_) => eprintln!("serve: listening on {addr}"),
+            }
+            match serve_tcp(std::sync::Arc::new(state), listener) {
+                Ok(()) => 0,
+                Err(e) => {
+                    eprintln!("serve: {e}");
+                    1
+                }
+            }
+        }
+        None => {
+            let stdin = std::io::stdin();
+            let stdout = std::io::stdout();
+            match serve_lines(&state, stdin.lock(), stdout.lock()) {
+                Ok(()) => 0,
+                Err(e) => {
+                    eprintln!("serve: {e}");
+                    1
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -30,9 +30,23 @@
 //! Every stage preserves bitwise determinism: results are independent of
 //! thread count and of whether the cache or the duplicate skip fired
 //! (`tests/costcache.rs` asserts this across optimizers).
+//!
+//! Two pieces serve the multi-tenant daemon ([`crate::serve`]):
+//!
+//! - [`PlanMemo`] is internally synchronized (sharded mutexes, like
+//!   [`CostCache`]) so one memo can back many concurrent evaluators via
+//!   [`Evaluator::with_parts`]; only completed, valid compiles are ever
+//!   published, so a failed batch never poisons sharers.
+//! - [`Budget`] is a cooperative wall-clock/candidate-count bound checked
+//!   between candidate evaluations ([`Evaluator::set_budget`]); exhaustion
+//!   surfaces as a [`BUDGET_ERROR_PREFIX`]-tagged error whose
+//!   machine-readable reason [`budget_error_reason`] recovers.
 
 use std::collections::{HashMap, HashSet};
-use std::sync::Arc;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::api::CompiledProgram;
 use crate::conf::{ClusterConfig, CostConstants, SystemConfig};
@@ -110,45 +124,172 @@ struct CostStats {
 #[derive(Clone, Copy, PartialEq, Eq, Hash)]
 struct CostKey(u64, u64, u64, u64);
 
+/// Stable machine-readable prefix every budget-exhaustion error starts
+/// with; the remainder begins with the reason code (`deadline` or
+/// `candidates`). See [`budget_error_reason`].
+pub const BUDGET_ERROR_PREFIX: &str = "budget-exceeded:";
+
+/// Reason code for a wall-clock budget expiry.
+pub const BUDGET_REASON_DEADLINE: &str = "deadline";
+/// Reason code for a candidate-count budget expiry.
+pub const BUDGET_REASON_CANDIDATES: &str = "candidates";
+
+/// Recover the machine-readable reason code from a budget-exhaustion
+/// error string (`None` when the error is not a budget error).
+pub fn budget_error_reason(err: &str) -> Option<&'static str> {
+    let rest = err.strip_prefix(BUDGET_ERROR_PREFIX)?;
+    if rest.starts_with(BUDGET_REASON_DEADLINE) {
+        Some(BUDGET_REASON_DEADLINE)
+    } else if rest.starts_with(BUDGET_REASON_CANDIDATES) {
+        Some(BUDGET_REASON_CANDIDATES)
+    } else {
+        None
+    }
+}
+
+/// Cooperative per-request resource bound: an optional wall-clock
+/// deadline and an optional candidate-count ceiling, shared (`Arc`)
+/// between the request handler and the evaluator it drives.
+///
+/// Checks happen *between* candidate evaluations — before each batch and
+/// between per-candidate costings inside a batch — so a running costing
+/// is never interrupted mid-block and every published cache entry stays
+/// valid. The candidate check is clock-free and therefore fully
+/// deterministic: a batch is rejected iff `charged + batch > max`,
+/// where `charged` counts candidates of previously *completed* batches.
+/// When both bounds would trip at once the candidate reason wins, so
+/// replayed request streams report identical reason codes.
+pub struct Budget {
+    deadline: Option<Instant>,
+    max_candidates: Option<u64>,
+    charged: AtomicU64,
+}
+
+impl Budget {
+    /// Budget from optional bounds: `budget_ms` milliseconds of wall
+    /// clock from now, and/or at most `max_candidates` evaluated
+    /// candidates. `Budget::new(None, None)` never trips.
+    pub fn new(budget_ms: Option<u64>, max_candidates: Option<u64>) -> Arc<Budget> {
+        Arc::new(Budget {
+            // an unrepresentable (astronomically far) deadline is no
+            // deadline at all, not a panic
+            deadline: budget_ms
+                .and_then(|ms| Instant::now().checked_add(Duration::from_millis(ms))),
+            max_candidates,
+            charged: AtomicU64::new(0),
+        })
+    }
+
+    /// Candidates charged by completed batches so far.
+    pub fn charged(&self) -> u64 {
+        self.charged.load(Ordering::Relaxed)
+    }
+
+    /// Whether the wall-clock deadline (if any) has passed. This is the
+    /// cooperative cancellation probe the costing loop polls between
+    /// candidates.
+    pub fn deadline_expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// Admission check for a batch of `upcoming` candidates. The
+    /// deterministic candidate-count bound is checked first, then the
+    /// wall clock; the error carries [`BUDGET_ERROR_PREFIX`] plus the
+    /// reason code.
+    pub fn check(&self, upcoming: usize) -> Result<(), String> {
+        if let Some(max) = self.max_candidates {
+            let would = self.charged().saturating_add(upcoming as u64);
+            if would > max {
+                return Err(format!(
+                    "{BUDGET_ERROR_PREFIX}{BUDGET_REASON_CANDIDATES}: \
+                     {would} candidates would exceed the budget of {max}"
+                ));
+            }
+        }
+        if self.deadline_expired() {
+            return Err(format!(
+                "{BUDGET_ERROR_PREFIX}{BUDGET_REASON_DEADLINE}: wall-clock budget expired"
+            ));
+        }
+        Ok(())
+    }
+
+    fn charge(&self, n: usize) {
+        self.charged.fetch_add(n as u64, Ordering::Relaxed);
+    }
+}
+
+const MEMO_SHARDS: usize = 16;
+
+type MemoEntry = (Arc<CompiledProgram>, Arc<ProgramHashes>);
+
 /// Plan-signature-keyed compile memo: each distinct signature is
-/// compiled exactly once over the memo's lifetime (batches fan distinct
-/// missing signatures out over the thread pool), stored as an
-/// `Arc<CompiledProgram>` next to its precomputed structural hash tree.
-struct PlanMemo {
-    progs: Vec<(Arc<CompiledProgram>, Arc<ProgramHashes>)>,
-    by_sig: HashMap<Arc<str>, usize>,
+/// compiled once and stored as an `Arc<CompiledProgram>` next to its
+/// precomputed structural hash tree.
+///
+/// The memo is internally synchronized (sharded mutexes, mirroring
+/// [`CostCache`]) and designed to be shared: the serve daemon holds one
+/// `Arc<PlanMemo>` and hands it to a fresh [`Evaluator`] per request
+/// ([`Evaluator::with_parts`]). Signatures are published only after a
+/// successful compile, so failed batches leave the memo consistent; if
+/// two sharers race on one signature both compile (compilation is
+/// deterministic) and the first insert wins.
+pub struct PlanMemo {
+    shards: Vec<Mutex<HashMap<Arc<str>, MemoEntry>>>,
+}
+
+impl Default for PlanMemo {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl PlanMemo {
-    fn new() -> Self {
-        PlanMemo { progs: Vec::new(), by_sig: HashMap::new() }
+    /// Empty memo.
+    pub fn new() -> Self {
+        PlanMemo { shards: (0..MEMO_SHARDS).map(|_| Mutex::new(HashMap::new())).collect() }
     }
 
-    fn distinct(&self) -> usize {
-        self.progs.len()
+    /// Distinct plans compiled over the memo's lifetime.
+    pub fn distinct(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap_or_else(|e| e.into_inner()).len()).sum()
     }
 
-    fn get(&self, idx: usize) -> (&Arc<CompiledProgram>, &Arc<ProgramHashes>) {
-        let (p, h) = &self.progs[idx];
-        (p, h)
+    fn shard(&self, sig: &str) -> &Mutex<HashMap<Arc<str>, MemoEntry>> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        sig.hash(&mut h);
+        &self.shards[(h.finish() as usize) % MEMO_SHARDS]
+    }
+
+    fn lookup(&self, sig: &str) -> Option<MemoEntry> {
+        self.shard(sig).lock().unwrap_or_else(|e| e.into_inner()).get(sig).cloned()
+    }
+
+    /// Publish a compiled entry; if another sharer raced us to the same
+    /// signature the earlier insert wins and is returned.
+    fn insert_if_absent(&self, sig: Arc<str>, entry: MemoEntry) -> MemoEntry {
+        let mut shard = self.shard(&sig).lock().unwrap_or_else(|e| e.into_inner());
+        shard.entry(sig).or_insert(entry).clone()
     }
 
     /// Ensure every signature in `sigs` has a compiled plan. Distinct
     /// signatures not yet memoized compile concurrently; `compile(i)`
     /// must compile the plan for `sigs[i]` and is called once per new
     /// signature, at its first occurrence in the batch. Returns, aligned
-    /// with `sigs`, `(plan index, reused)` — `reused` is false only for
-    /// the first occurrence ever seen of a signature.
+    /// with `sigs`, `(entry, reused)` — `reused` is false only for the
+    /// first occurrence this memo has ever seen of a signature.
     fn ensure(
-        &mut self,
+        &self,
         sigs: &[Arc<str>],
         threads: usize,
         compile: impl Fn(usize) -> Result<CompiledProgram, String> + Sync,
-    ) -> Result<Vec<(usize, bool)>, String> {
+    ) -> Result<Vec<(MemoEntry, bool)>, String> {
+        let mut resolved: Vec<Option<MemoEntry>> =
+            sigs.iter().map(|sig| self.lookup(sig)).collect();
         let mut missing: Vec<usize> = Vec::new();
         let mut seen_in_batch: HashSet<&str> = HashSet::new();
         for (i, sig) in sigs.iter().enumerate() {
-            if !self.by_sig.contains_key(sig.as_ref()) && seen_in_batch.insert(sig.as_ref()) {
+            if resolved[i].is_none() && seen_in_batch.insert(sig.as_ref()) {
                 missing.push(i);
             }
         }
@@ -160,19 +301,25 @@ impl PlanMemo {
                 Ok((prog, hashes))
             });
         for (&cell, r) in missing.iter().zip(compiled) {
-            // record the signature only once its compile succeeded, so a
+            // publish the signature only once its compile succeeded, so a
             // failed batch leaves the memo consistent for retries
             let (prog, hashes) = r?;
-            self.by_sig.insert(Arc::clone(&sigs[cell]), self.progs.len());
-            self.progs.push((Arc::new(prog), Arc::new(hashes)));
+            let entry = self
+                .insert_if_absent(Arc::clone(&sigs[cell]), (Arc::new(prog), Arc::new(hashes)));
+            resolved[cell] = Some(entry);
         }
+        // in-batch duplicates of a fresh signature resolve from the memo
         Ok(sigs
             .iter()
             .enumerate()
             .map(|(i, sig)| {
+                let entry = match resolved[i].take() {
+                    Some(e) => e,
+                    None => self.lookup(sig).expect("signature published above"),
+                };
                 // `missing` is ascending, so binary_search identifies the
                 // fresh (first-occurrence) positions.
-                (self.by_sig[sig.as_ref()], missing.binary_search(&i).is_err())
+                (entry, missing.binary_search(&i).is_err())
             })
             .collect())
     }
@@ -183,11 +330,14 @@ impl PlanMemo {
 /// the module docs. One instance serves a whole optimizer run (several
 /// batches); sharing an instance across runs additionally keeps the
 /// compile memo and cost cache warm (the steady state the
-/// `costcache` bench measures).
+/// `costcache` bench measures). The memo and cache can also be shared
+/// *across* evaluators ([`Self::with_parts`]) — the serve daemon's
+/// multi-tenant configuration.
 pub struct Evaluator {
-    memo: PlanMemo,
+    memo: Arc<PlanMemo>,
     cache: Option<Arc<CostCache>>,
     threads: usize,
+    budget: Option<Arc<Budget>>,
     costed: HashMap<CostKey, CostStats>,
     duplicates_skipped: usize,
     cache_baseline: CacheStats,
@@ -207,12 +357,26 @@ impl Evaluator {
     }
 
     /// Evaluator over an explicit (possibly shared, possibly absent)
-    /// cost cache.
+    /// cost cache and a fresh private compile memo.
     pub fn with_cache(threads: usize, cache: Option<Arc<CostCache>>) -> Self {
+        Self::with_parts(threads, Arc::new(PlanMemo::new()), cache)
+    }
+
+    /// Evaluator over explicitly shared parts: a compile memo and an
+    /// optional cost cache, both of which may concurrently back other
+    /// evaluators. This is the serve daemon's constructor — one memo and
+    /// one cache, a fresh evaluator (run-local duplicate table, budget)
+    /// per request.
+    pub fn with_parts(
+        threads: usize,
+        memo: Arc<PlanMemo>,
+        cache: Option<Arc<CostCache>>,
+    ) -> Self {
         let mut e = Evaluator {
-            memo: PlanMemo::new(),
+            memo,
             cache,
             threads: threads.max(1),
+            budget: None,
             costed: HashMap::new(),
             duplicates_skipped: 0,
             cache_baseline: CacheStats::default(),
@@ -234,6 +398,20 @@ impl Evaluator {
         self.cache.clone()
     }
 
+    /// The evaluator's compile memo, shareable with other evaluators via
+    /// [`Self::with_parts`].
+    pub fn memo(&self) -> Arc<PlanMemo> {
+        Arc::clone(&self.memo)
+    }
+
+    /// Attach (or detach, with `None`) a cooperative per-run budget.
+    /// Subsequent [`Self::evaluate`] batches are admission-checked
+    /// against it and charged to it; the costing loop polls its deadline
+    /// between candidates.
+    pub fn set_budget(&mut self, budget: Option<Arc<Budget>>) {
+        self.budget = budget;
+    }
+
     /// Begin a new optimizer run: resets the per-run duplicate-cost
     /// table and the cache-stats baseline. The compile memo and the cost
     /// cache intentionally survive, so repeated runs over the same
@@ -244,7 +422,8 @@ impl Evaluator {
         self.cache_baseline = self.cache_stats();
     }
 
-    /// Distinct plans compiled over the evaluator's lifetime.
+    /// Distinct plans compiled over the (possibly shared) memo's
+    /// lifetime.
     pub fn distinct_plans(&self) -> usize {
         self.memo.distinct()
     }
@@ -268,26 +447,32 @@ impl Evaluator {
     /// Stage 1–2 only: signature-dedupe and memoized parallel compile,
     /// without costing. Used for classification probes (the GDF
     /// optimizer compiles an MR probe plan per base configuration when
-    /// the default backend is CP). Returns `(plan, reused)` per item.
+    /// the default backend is CP). Probes honor the wall-clock budget
+    /// but never charge the candidate count. Returns `(plan, reused)`
+    /// per item.
     pub fn compile_batch<C: Candidate>(
         &mut self,
         items: &[C],
     ) -> Result<Vec<(Arc<CompiledProgram>, bool)>, String> {
+        if let Some(b) = &self.budget {
+            b.check(0)?;
+        }
         let sigs: Vec<Arc<str>> =
             items.iter().map(|c| Arc::<str>::from(c.signature())).collect();
         let plan_of = self.memo.ensure(&sigs, self.threads, |i| items[i].compile())?;
-        Ok(plan_of
-            .into_iter()
-            .map(|(idx, reused)| (Arc::clone(self.memo.get(idx).0), reused))
-            .collect())
+        Ok(plan_of.into_iter().map(|((prog, _), reused)| (prog, reused)).collect())
     }
 
     /// Run the full pipeline over one batch of candidates. Results align
-    /// with `items`; the only error cases are a failed compile or a
-    /// non-finite cost estimate (both carry the candidate's label).
+    /// with `items`; the error cases are a failed compile, a non-finite
+    /// cost estimate (both carry the candidate's label) or an exhausted
+    /// [`Budget`] (tagged with [`BUDGET_ERROR_PREFIX`]).
     pub fn evaluate<C: Candidate>(&mut self, items: &[C]) -> Result<Vec<Evaluated>, String> {
         if items.is_empty() {
             return Ok(Vec::new());
+        }
+        if let Some(b) = &self.budget {
+            b.check(items.len())?;
         }
         let sigs: Vec<Arc<str>> =
             items.iter().map(|c| Arc::<str>::from(c.signature())).collect();
@@ -297,7 +482,7 @@ impl Evaluator {
         // knob fingerprint restricted to what the program can read).
         let keys: Vec<CostKey> = (0..items.len())
             .map(|i| {
-                let (_, hashes) = self.memo.get(plan_of[i].0);
+                let hashes = &plan_of[i].0 .1;
                 let ctx = items[i].context();
                 let root = hashes.root();
                 let (c1, c2) =
@@ -318,12 +503,24 @@ impl Evaluator {
         }
 
         // Stage 4: cost the first occurrences concurrently through the
-        // block cache (totals-only fast path).
-        let computed: Vec<CostStats> = {
-            let memo = &self.memo;
+        // block cache (totals-only fast path). The budget deadline is
+        // polled cooperatively between candidates: an expiry abandons
+        // the remaining costings but never a costing in flight, so the
+        // shared cache only ever gains valid entries.
+        let computed: Vec<Result<CostStats, String>> = {
+            let plan_of = &plan_of;
             let cache = self.cache.as_deref();
+            let budget = self.budget.as_deref();
             par::par_map(&to_cost, self.threads, |_, &i| {
-                let (prog, hashes) = memo.get(plan_of[i].0);
+                if let Some(b) = budget {
+                    if b.deadline_expired() {
+                        return Err(format!(
+                            "{BUDGET_ERROR_PREFIX}{BUDGET_REASON_DEADLINE}: \
+                             wall-clock budget expired during candidate evaluation"
+                        ));
+                    }
+                }
+                let (prog, hashes) = &plan_of[i].0;
                 let ctx = items[i].context();
                 let total = match cache {
                     Some(cache) => cost::cost_total_cached(
@@ -337,13 +534,20 @@ impl Evaluator {
                     None => cost::cost_total(&prog.runtime, ctx.cfg, ctx.cc, ctx.constants),
                 };
                 let (cp, mr, sp) = prog.runtime.size3();
-                CostStats { total, cp, mr, sp }
+                Ok(CostStats { total, cp, mr, sp })
             })
         };
-        for (&i, stats) in to_cost.iter().zip(&computed) {
+        let mut computed_ok = Vec::with_capacity(computed.len());
+        for r in computed {
+            computed_ok.push(r?);
+        }
+        for (&i, stats) in to_cost.iter().zip(&computed_ok) {
             self.costed.insert(keys[i], *stats);
         }
         self.duplicates_skipped += items.len() - to_cost.len();
+        if let Some(b) = &self.budget {
+            b.charge(items.len());
+        }
 
         let mut out = Vec::with_capacity(items.len());
         for i in 0..items.len() {
@@ -355,10 +559,10 @@ impl Evaluator {
                     items[i].label()
                 ));
             }
-            let (idx, reused) = plan_of[i];
+            let (entry, reused) = &plan_of[i];
             out.push(Evaluated {
-                plan: Arc::clone(self.memo.get(idx).0),
-                plan_reused: reused,
+                plan: Arc::clone(&entry.0),
+                plan_reused: *reused,
                 cost_secs: stats.total,
                 cp_insts: stats.cp,
                 mr_jobs: stats.mr,
@@ -510,5 +714,95 @@ mod tests {
         assert!(e.evaluate(&[Bad]).unwrap_err().contains("nope"));
         // the memo stays consistent: nothing was recorded
         assert_eq!(e.distinct_plans(), 0);
+    }
+
+    #[test]
+    fn shared_memo_backs_multiple_evaluators() {
+        let memo = Arc::new(PlanMemo::new());
+        let cache = Arc::new(CostCache::default());
+        let mut a = Evaluator::with_parts(2, Arc::clone(&memo), Some(Arc::clone(&cache)));
+        a.begin_run();
+        let ra = a.evaluate(&[ScenCand::new(Scenario::xs(), ExecBackend::Mr)]).unwrap();
+        assert!(!ra[0].plan_reused);
+        // a second evaluator over the same parts reuses the compiled plan
+        let mut b = Evaluator::with_parts(2, memo, Some(cache));
+        b.begin_run();
+        let rb = b.evaluate(&[ScenCand::new(Scenario::xs(), ExecBackend::Mr)]).unwrap();
+        assert!(rb[0].plan_reused, "shared memo must answer the second evaluator");
+        assert!(Arc::ptr_eq(&ra[0].plan, &rb[0].plan), "one Arc across evaluators");
+        assert_eq!(b.distinct_plans(), 1);
+        assert_eq!(ra[0].cost_secs.to_bits(), rb[0].cost_secs.to_bits());
+        assert!(b.run_cache_stats().hits > 0, "shared cache must answer the re-cost");
+    }
+
+    #[test]
+    fn candidate_budget_trips_deterministically() {
+        let items = vec![
+            ScenCand::new(Scenario::xs(), ExecBackend::Cp),
+            ScenCand::new(Scenario::xs(), ExecBackend::Mr),
+            ScenCand::new(Scenario::xs(), ExecBackend::Spark),
+        ];
+        let mut e = Evaluator::new(2);
+        e.set_budget(Some(Budget::new(None, Some(2))));
+        e.begin_run();
+        let err = e.evaluate(&items).unwrap_err();
+        assert!(err.starts_with(BUDGET_ERROR_PREFIX), "{err}");
+        assert_eq!(budget_error_reason(&err), Some(BUDGET_REASON_CANDIDATES));
+        // nothing was charged by the rejected batch; a batch within the
+        // bound still evaluates
+        let ok = e.evaluate(&items[..2]).unwrap();
+        assert_eq!(ok.len(), 2);
+        // ...and the next batch finds the budget exhausted
+        let err = e.evaluate(&items[..1]).unwrap_err();
+        assert_eq!(budget_error_reason(&err), Some(BUDGET_REASON_CANDIDATES));
+    }
+
+    #[test]
+    fn expired_deadline_trips_before_work() {
+        let mut e = Evaluator::new(2);
+        e.set_budget(Some(Budget::new(Some(0), None)));
+        e.begin_run();
+        let err = e.evaluate(&[ScenCand::new(Scenario::xs(), ExecBackend::Mr)]).unwrap_err();
+        assert_eq!(budget_error_reason(&err), Some(BUDGET_REASON_DEADLINE));
+        assert_eq!(e.distinct_plans(), 0, "admission check precedes compilation");
+        // detaching the budget restores normal operation bitwise
+        e.set_budget(None);
+        let r = e.evaluate(&[ScenCand::new(Scenario::xs(), ExecBackend::Mr)]).unwrap();
+        let mut plain = Evaluator::new(2);
+        plain.begin_run();
+        let p = plain.evaluate(&[ScenCand::new(Scenario::xs(), ExecBackend::Mr)]).unwrap();
+        assert_eq!(r[0].cost_secs.to_bits(), p[0].cost_secs.to_bits());
+    }
+
+    #[test]
+    fn generous_budget_never_interferes() {
+        let items = vec![
+            ScenCand::new(Scenario::xs(), ExecBackend::Cp),
+            ScenCand::new(Scenario::xs(), ExecBackend::Mr),
+        ];
+        let mut budgeted = Evaluator::new(2);
+        budgeted.set_budget(Some(Budget::new(Some(3_600_000), Some(1_000_000))));
+        budgeted.begin_run();
+        let a = budgeted.evaluate(&items).unwrap();
+        let mut plain = Evaluator::new(2);
+        plain.begin_run();
+        let b = plain.evaluate(&items).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.cost_secs.to_bits(), y.cost_secs.to_bits());
+        }
+    }
+
+    #[test]
+    fn budget_reason_parser_roundtrips() {
+        assert_eq!(
+            budget_error_reason("budget-exceeded:deadline: wall-clock budget expired"),
+            Some("deadline")
+        );
+        assert_eq!(
+            budget_error_reason("budget-exceeded:candidates: 4 candidates would exceed"),
+            Some("candidates")
+        );
+        assert_eq!(budget_error_reason("non-finite cost estimate"), None);
+        assert_eq!(budget_error_reason("budget-exceeded:other"), None);
     }
 }

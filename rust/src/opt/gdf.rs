@@ -647,7 +647,15 @@ fn gdf_signature(
     };
     format!(
         "{};fmt={};grp={}",
-        plan_signature(&base.cfg, &spec.hints, &spec.cc, &spec.scenario, default_backend),
+        plan_signature(
+            &spec.script,
+            &spec.args,
+            &base.cfg,
+            &spec.hints,
+            &spec.cc,
+            &spec.scenario,
+            default_backend,
+        ),
         base.format.name(),
         grp
     )

@@ -413,6 +413,8 @@ struct PointCand<'a> {
 impl Candidate for PointCand<'_> {
     fn signature(&self) -> String {
         plan_signature(
+            &self.spec.script,
+            &self.spec.args,
             &self.spec.cfg,
             &self.spec.hints,
             &self.raw.cc,
@@ -629,9 +631,12 @@ pub fn optimize_grid_with(
     };
 
     let n_costed = points.iter().filter(|p| !p.pruned()).count();
+    // counted from the reuse flags, not `costed - distinct`: a shared
+    // memo (serve daemon) may hold more plans than this run costed
+    let memo_hits = costed.iter().flatten().filter(|c| c.4).count();
     Ok(ResourceReport {
         pruned: points.len() - n_costed,
-        memo_hits: n_costed - eval.distinct_plans(),
+        memo_hits,
         distinct_plans: eval.distinct_plans(),
         best,
         frontier,

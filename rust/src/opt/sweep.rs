@@ -330,14 +330,22 @@ impl SweepReport {
 ///
 /// Shared with the grid resource optimizer ([`crate::opt::resource`]),
 /// whose node/`k_local` axes are cost-only and therefore memo-friendly.
+///
+/// The leading `sc<hash>` component fingerprints the script text and
+/// its `$N` bindings: one [`crate::opt::evaluate::PlanMemo`] may back
+/// requests over *different* scripts (the serve daemon shares a memo
+/// across all requests), so plan identity must cover the program
+/// source, not just its configuration.
 pub(crate) fn plan_signature(
+    script: &str,
+    args: &HashMap<usize, String>,
     cfg: &SystemConfig,
     hints: &SelectionHints,
     cc: &ClusterConfig,
     scenario: &DataScenario,
     backend: ExecBackend,
 ) -> String {
-    let mut sig = String::new();
+    let mut sig = format!("sc{:016x};", script_fingerprint(script, args));
     for (path, r, c) in &scenario.inputs {
         sig.push_str(&format!("{path}={r}x{c};"));
     }
@@ -362,6 +370,21 @@ pub(crate) fn plan_signature(
     sig
 }
 
+/// Order-independent fingerprint of a script's source text and its
+/// `$N` bindings (the plan-identity component of [`plan_signature`]).
+pub(crate) fn script_fingerprint(script: &str, args: &HashMap<usize, String>) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    script.hash(&mut h);
+    let mut bound: Vec<(&usize, &String)> = args.iter().collect();
+    bound.sort();
+    for (k, v) in bound {
+        k.hash(&mut h);
+        v.hash(&mut h);
+    }
+    h.finish()
+}
+
 /// One grid cell viewed as an evaluator candidate (the adapter the
 /// unified evaluation core consumes).
 struct CellCand<'a> {
@@ -374,6 +397,8 @@ struct CellCand<'a> {
 impl Candidate for CellCand<'_> {
     fn signature(&self) -> String {
         plan_signature(
+            &self.spec.script,
+            &self.spec.args,
             &self.spec.cfg,
             &self.spec.hints,
             &self.spec.clusters[self.ci].cc,
@@ -594,10 +619,12 @@ pub fn sweep_with(spec: &SweepSpec, eval: &mut Evaluator) -> Result<SweepReport,
     } else {
         None
     };
-    let distinct_plans = eval.distinct_plans();
+    // counted from the reuse flags, not `cells - distinct`: a shared
+    // memo (serve daemon) may hold more plans than this run's cells
+    let memo_hits = evaluated.iter().filter(|e| e.plan_reused).count();
     Ok(SweepReport {
-        memo_hits: cells.len() - distinct_plans,
-        distinct_plans,
+        memo_hits,
+        distinct_plans: eval.distinct_plans(),
         cells,
         ranking,
         wall_secs: t0.elapsed().as_secs_f64(),
@@ -618,6 +645,8 @@ pub fn sweep_serial(spec: &SweepSpec) -> Result<SweepReport, String> {
         .iter()
         .map(|&(ci, si, bi)| {
             plan_signature(
+                &spec.script,
+                &spec.args,
                 &spec.cfg,
                 &spec.hints,
                 &spec.clusters[ci].cc,

@@ -1,0 +1,643 @@
+//! The daemon state machine: shared caches, per-request evaluators, the
+//! budget-driven downgrade ladder, and the request handlers.
+//!
+//! One [`ServeState`] lives for the whole daemon process. Every request
+//! gets a *fresh* [`Evaluator`] over the state's shared
+//! [`PlanMemo`] + [`CostCache`], so per-run state (duplicate-cost table,
+//! budget) is request-isolated while compiled plans and block costs are
+//! shared across requests and connections. Failed or over-budget
+//! requests never publish partial state: the memo and cache only ever
+//! gain entries from completed compiles/costings.
+//!
+//! ## The downgrade ladder
+//!
+//! Optimizer requests (`optimize | sweep | gdf`) descend a deterministic
+//! one-way ladder when their [`Budget`] trips:
+//!
+//! | rung | `level=` | `optimize` | `sweep` | `gdf` |
+//! |------|----------|-----------|---------|-------|
+//! | 1 | `full`   | backend argmin | full cluster grid | full GDF enumeration |
+//! | 2 | `sweep`  | —         | backend argmin | backend argmin |
+//! | 3 | `cached` | argmin-table lookup, else un-budgeted default plan | same | same |
+//!
+//! Rungs are attempted in order; a budget error records its reason code
+//! (`deadline` / `candidates`, in the `downgrade=` trail) and drops one
+//! rung — never back up. The terminal `cached` rung runs with **no**
+//! budget attached, so every request that parses returns a valid plan.
+//! The candidate-count check is clock-free and the deadline check with
+//! `budget_ms=0` trips before any work, so forced downgrades replay
+//! with identical reason codes.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::api::{
+    compile_with_meta, linreg_cg_args, verify_plan, ClusterConfigOpt, CompileOptions,
+    CompiledProgram, Scenario, LINREG_CG, LINREG_DS,
+};
+use crate::artifact::Artifact;
+use crate::conf::{ClusterConfig, CostConstants, SystemConfig};
+use crate::cost::cache::{CacheStats, CostCache};
+use crate::lop::SelectionHints;
+use crate::matrix::Format;
+use crate::opt::evaluate::{budget_error_reason, Budget, Candidate, CostContext, Evaluator, PlanMemo};
+use crate::opt::gdf::{optimize_with as gdf_optimize_with, GdfSpec};
+use crate::opt::sweep::{
+    heap_clock_clusters, plan_signature, sweep_with, DataScenario, SweepSpec,
+};
+use crate::rtprog::ExecBackend;
+use crate::serve::protocol::{
+    parse_request, peek_id, ReqCmd, ReqScript, Request, Response, CODE_OPTIMIZER_ERROR,
+    CODE_UNKNOWN_SCENARIO, DOWNGRADE_NONE, LEVEL_CACHED, LEVEL_FULL, LEVEL_SWEEP,
+};
+use crate::serve::stats::ServeStats;
+use crate::util::par;
+
+/// Daemon startup configuration (`repro serve` flags).
+#[derive(Clone, Debug, Default)]
+pub struct ServeOptions {
+    /// Evaluator worker threads per request (0 = all cores).
+    pub threads: usize,
+    /// Keep the shared block-level cost cache (`false` =
+    /// `--no-cost-cache`).
+    pub no_cost_cache: bool,
+    /// Pre-load a [`crate::artifact::CacheSnapshot`] into the shared
+    /// cache at boot (`--warm-cache`).
+    pub warm_cache: Option<PathBuf>,
+    /// Replace the default cost constants with a
+    /// [`crate::artifact::CalibrationProfile`]'s (`--profile`).
+    pub profile: Option<PathBuf>,
+}
+
+/// A remembered backend-argmin decision (the terminal ladder rung's
+/// lookup table). Only backend-argmin rungs (`optimize` full, the
+/// `sweep` fallback rung) write entries — their semantics are uniform:
+/// best backend for one scenario × script × iteration count on the
+/// default configuration.
+#[derive(Clone, Copy, Debug)]
+struct ArgminEntry {
+    backend: ExecBackend,
+    cost_secs: f64,
+    cp: usize,
+    mr: usize,
+    spark: usize,
+}
+
+/// Long-lived, shareable daemon state: one compile memo, one cost
+/// cache, one calibrated constants set, and the observability counters.
+pub struct ServeState {
+    memo: Arc<PlanMemo>,
+    cache: Option<Arc<CostCache>>,
+    constants: CostConstants,
+    threads: usize,
+    warm_entries: usize,
+    calibrated: bool,
+    stats: Mutex<ServeStats>,
+    argmins: Mutex<HashMap<String, ArgminEntry>>,
+}
+
+impl ServeState {
+    /// Boot the daemon state, loading `--warm-cache` / `--profile`
+    /// artifacts (checksummed, regenerate-don't-trust — see
+    /// [`crate::artifact`]).
+    pub fn new(opts: &ServeOptions) -> Result<ServeState, String> {
+        let threads =
+            if opts.threads == 0 { par::default_threads() } else { opts.threads };
+        let mut warm_entries = 0usize;
+        let cache = if opts.no_cost_cache {
+            if opts.warm_cache.is_some() {
+                return Err("--warm-cache: incompatible with --no-cost-cache".into());
+            }
+            None
+        } else {
+            match &opts.warm_cache {
+                None => Some(Arc::new(CostCache::default())),
+                Some(path) => match crate::api::load_artifact(path)? {
+                    Artifact::CacheSnapshot(snap) => {
+                        warm_entries = snap.len();
+                        Some(snap.into_cache())
+                    }
+                    other => {
+                        return Err(format!(
+                            "--warm-cache: {} holds a '{}' artifact, expected 'costcache'",
+                            path.display(),
+                            other.kind()
+                        ))
+                    }
+                },
+            }
+        };
+        let (constants, calibrated) = match &opts.profile {
+            None => (CostConstants::default(), false),
+            Some(path) => match crate::api::load_artifact(path)? {
+                Artifact::Profile(p) => (p.constants().clone(), true),
+                other => {
+                    return Err(format!(
+                        "--profile: {} holds a '{}' artifact, expected 'profile'",
+                        path.display(),
+                        other.kind()
+                    ))
+                }
+            },
+        };
+        Ok(ServeState {
+            memo: Arc::new(PlanMemo::new()),
+            cache,
+            constants,
+            threads,
+            warm_entries,
+            calibrated,
+            stats: Mutex::new(ServeStats::default()),
+            argmins: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// One-line boot banner (stderr, so stdout stays pure protocol).
+    pub fn boot_summary(&self) -> String {
+        format!(
+            "serve: ready threads={} cache={} constants={}",
+            self.threads,
+            match (&self.cache, self.warm_entries) {
+                (None, _) => "off".to_string(),
+                (Some(_), 0) => "on".to_string(),
+                (Some(_), n) => format!("on(warm={n})"),
+            },
+            if self.calibrated { "calibrated" } else { "default" }
+        )
+    }
+
+    /// The shared cost cache (`None` under `--no-cost-cache`).
+    pub fn cache(&self) -> Option<Arc<CostCache>> {
+        self.cache.clone()
+    }
+
+    /// Absolute shared-cache counters (zeros when caching is off).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.as_deref().map(CostCache::stats).unwrap_or_default()
+    }
+
+    /// The shared compile memo.
+    pub fn memo(&self) -> Arc<PlanMemo> {
+        Arc::clone(&self.memo)
+    }
+
+    /// Snapshot of the observability counters.
+    pub fn stats_snapshot(&self) -> ServeStats {
+        self.lock_stats().clone()
+    }
+
+    fn lock_stats(&self) -> std::sync::MutexGuard<'_, ServeStats> {
+        self.stats.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn lock_argmins(&self) -> std::sync::MutexGuard<'_, HashMap<String, ArgminEntry>> {
+        self.argmins.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// A fresh per-request evaluator over the shared memo + cache.
+    fn evaluator(&self) -> Evaluator {
+        Evaluator::with_parts(self.threads, Arc::clone(&self.memo), self.cache.clone())
+    }
+
+    /// Handle one raw input line. Returns the rendered response line, or
+    /// `None` for blank lines and `#` comments.
+    pub fn handle_line(&self, line: &str) -> Option<String> {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            return None;
+        }
+        let t0 = Instant::now();
+        let id = peek_id(line);
+        let (cmd, resp, reasons) = match parse_request(line) {
+            Err(e) => (None, Response::error(e.code, &e.detail), Vec::new()),
+            Ok(req) => {
+                let (resp, reasons) = self.answer(&req);
+                (Some(req.cmd), resp, reasons)
+            }
+        };
+        let ok = resp.get("ok") == Some("true");
+        let us = t0.elapsed().as_micros().min(u128::from(u64::MAX)) as u64;
+        self.lock_stats().record(cmd, ok, &reasons, us);
+        Some(resp.render(id.as_deref()))
+    }
+
+    /// Dispatch one parsed request; returns the response plus the
+    /// downgrade-reason trail (for the stats counters).
+    fn answer(&self, req: &Request) -> (Response, Vec<&'static str>) {
+        match req.cmd {
+            ReqCmd::Stats => (self.stats_response(), Vec::new()),
+            ReqCmd::Verify => (self.verify_response(req), Vec::new()),
+            ReqCmd::Optimize | ReqCmd::Sweep | ReqCmd::Gdf => self.ladder(req),
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // The downgrade ladder
+    // -----------------------------------------------------------------
+
+    fn ladder(&self, req: &Request) -> (Response, Vec<&'static str>) {
+        let Some(scenario) = self.scenario_of(req) else {
+            let detail =
+                format!("unknown scenario '{}'", req.scenario.as_deref().unwrap_or(""));
+            return (Response::error(CODE_UNKNOWN_SCENARIO, &detail), Vec::new());
+        };
+        let budget = (req.budget_ms.is_some() || req.budget_candidates.is_some())
+            .then(|| Budget::new(req.budget_ms, req.budget_candidates));
+        let mut eval = self.evaluator();
+        eval.set_budget(budget);
+        let mut reasons: Vec<&'static str> = Vec::new();
+
+        // Rung 1: full fidelity.
+        let full = match req.cmd {
+            ReqCmd::Optimize => self
+                .backend_argmin(req, &scenario, &mut eval)
+                .map(|a| self.argmin_response(req, &scenario, LEVEL_FULL, &[], a)),
+            ReqCmd::Sweep => self.full_sweep(req, &scenario, &mut eval),
+            ReqCmd::Gdf => self.full_gdf(req, &scenario, &mut eval),
+            _ => unreachable!("ladder only handles optimizer requests"),
+        };
+        match full {
+            Ok(resp) => return (resp, reasons),
+            Err(e) => match budget_error_reason(&e) {
+                Some(r) => reasons.push(r),
+                None => return (Response::error(CODE_OPTIMIZER_ERROR, &e), reasons),
+            },
+        }
+
+        // Rung 2: backend argmin (sweep/gdf only — it *is* rung 1 for
+        // optimize requests).
+        if req.cmd != ReqCmd::Optimize {
+            match self.backend_argmin(req, &scenario, &mut eval) {
+                Ok(a) => {
+                    let resp =
+                        self.argmin_response(req, &scenario, LEVEL_SWEEP, &reasons, a);
+                    return (resp, reasons);
+                }
+                Err(e) => match budget_error_reason(&e) {
+                    Some(r) => reasons.push(r),
+                    None => return (Response::error(CODE_OPTIMIZER_ERROR, &e), reasons),
+                },
+            }
+        }
+
+        // Rung 3: cached argmin — never budgeted, always answers.
+        eval.set_budget(None);
+        match self.cached_answer(req, &scenario, &mut eval) {
+            Ok(resp) => (resp, reasons),
+            Err(e) => (Response::error(CODE_OPTIMIZER_ERROR, &e), reasons),
+        }
+    }
+
+    fn scenario_of(&self, req: &Request) -> Option<Scenario> {
+        let name = req.scenario.as_deref()?;
+        Scenario::all().into_iter().find(|s| s.name.eq_ignore_ascii_case(name))
+    }
+
+    fn argmin_key(req: &Request, scenario: &Scenario) -> String {
+        let iters = match req.script {
+            ReqScript::Ds => 0,
+            ReqScript::Cg => req.iters,
+        };
+        format!("{}|{}|{}", scenario.name, req.script.name(), iters)
+    }
+
+    /// Evaluate the three backends of one scenario on the default
+    /// configuration and return the argmin (ties break toward the
+    /// CP → MR → Spark enumeration order).
+    fn backend_argmin(
+        &self,
+        req: &Request,
+        scenario: &Scenario,
+        eval: &mut Evaluator,
+    ) -> Result<ArgminEntry, String> {
+        let (script, args) = script_and_args(req);
+        let dscen = DataScenario::from(scenario);
+        let cands: Vec<BackendCand> = ExecBackend::all()
+            .into_iter()
+            .map(|backend| BackendCand {
+                script,
+                args: args.clone(),
+                scenario: dscen.clone(),
+                backend,
+                cfg: SystemConfig::default(),
+                cc: ClusterConfig::paper_cluster(),
+                hints: SelectionHints::default(),
+                constants: self.constants.clone(),
+            })
+            .collect();
+        eval.begin_run();
+        let evaluated = eval.evaluate(&cands)?;
+        let best = (0..evaluated.len())
+            .min_by(|&a, &b| evaluated[a].cost_secs.total_cmp(&evaluated[b].cost_secs))
+            .expect("three backends evaluated");
+        let ev = &evaluated[best];
+        let entry = ArgminEntry {
+            backend: cands[best].backend,
+            cost_secs: ev.cost_secs,
+            cp: ev.cp_insts,
+            mr: ev.mr_jobs,
+            spark: ev.spark_jobs,
+        };
+        self.lock_argmins().insert(Self::argmin_key(req, scenario), entry);
+        Ok(entry)
+    }
+
+    fn argmin_response(
+        &self,
+        req: &Request,
+        scenario: &Scenario,
+        level: &'static str,
+        reasons: &[&'static str],
+        a: ArgminEntry,
+    ) -> Response {
+        let mut r = self.response_head(req, scenario, level, reasons);
+        r.push("backend", a.backend.name());
+        r.push_cost("cost", a.cost_secs);
+        r.push("cp", a.cp.to_string());
+        r.push("mr", a.mr.to_string());
+        r.push("spark", a.spark.to_string());
+        r
+    }
+
+    fn full_sweep(
+        &self,
+        req: &Request,
+        scenario: &Scenario,
+        eval: &mut Evaluator,
+    ) -> Result<Response, String> {
+        let (script, args) = script_and_args(req);
+        let spec = SweepSpec {
+            script: script.to_string(),
+            args,
+            clusters: heap_clock_clusters(&req.heaps),
+            scenarios: vec![DataScenario::from(scenario)],
+            cfg: SystemConfig::default(),
+            hints: SelectionHints::default(),
+            constants: self.constants.clone(),
+            backends: ExecBackend::all().to_vec(),
+            cost_cache: true,
+            threads: self.threads,
+            verify: false,
+        };
+        let report = sweep_with(&spec, eval)?;
+        let best = &report.cells[report.ranking[0]];
+        let mut r = self.response_head(req, scenario, LEVEL_FULL, &[]);
+        r.push("cells", report.cells.len().to_string());
+        r.push("best_cluster", &best.cluster);
+        r.push("backend", &best.backend);
+        r.push_cost("cost", best.cost_secs);
+        r.push("cp", best.cp_insts.to_string());
+        r.push("mr", best.mr_jobs.to_string());
+        r.push("spark", best.spark_jobs.to_string());
+        Ok(r)
+    }
+
+    fn full_gdf(
+        &self,
+        req: &Request,
+        scenario: &Scenario,
+        eval: &mut Evaluator,
+    ) -> Result<Response, String> {
+        let dscen = DataScenario::from(scenario);
+        let mut spec = match req.script {
+            ReqScript::Cg => GdfSpec::linreg_cg(dscen, req.iters),
+            ReqScript::Ds => GdfSpec::new(LINREG_DS, scenario.args(), dscen),
+        };
+        spec.constants = self.constants.clone();
+        spec.threads = self.threads;
+        let report = gdf_optimize_with(&spec, eval)?;
+        let best = report.best();
+        let mut r = self.response_head(req, scenario, LEVEL_FULL, &[]);
+        r.push("candidates", report.candidates.len().to_string());
+        r.push("blocksize", best.blocksize.to_string());
+        r.push("format", best.format.name());
+        r.push("partition_mb", fmt_mb_axis(best.partition_mb));
+        r.push(
+            "groups",
+            best.groups.iter().map(|b| b.name()).collect::<Vec<_>>().join(","),
+        );
+        r.push_cost("cost", best.cost_secs);
+        r.push("improvement_pct", format!("{:.2}", report.improvement_pct()));
+        Ok(r)
+    }
+
+    /// The terminal rung: answer from the argmin table when this
+    /// scenario × script × iters was decided before, else compile and
+    /// cost the single default-backend plan — with no budget attached,
+    /// so it always completes.
+    fn cached_answer(
+        &self,
+        req: &Request,
+        scenario: &Scenario,
+        eval: &mut Evaluator,
+    ) -> Result<Response, String> {
+        let (source, entry) =
+            match self.lock_argmins().get(&Self::argmin_key(req, scenario)).copied() {
+                Some(entry) => ("argmin-table", entry),
+                None => ("default-plan", self.default_plan(req, scenario, eval)?),
+            };
+        let reasons: Vec<&'static str> = Vec::new();
+        let mut r = self.response_head(req, scenario, LEVEL_CACHED, &reasons);
+        r.push("source", source);
+        r.push("backend", entry.backend.name());
+        r.push("blocksize", SystemConfig::default().blocksize.to_string());
+        r.push("format", Format::BinaryBlock.name());
+        r.push_cost("cost", entry.cost_secs);
+        r.push("cp", entry.cp.to_string());
+        r.push("mr", entry.mr.to_string());
+        r.push("spark", entry.spark.to_string());
+        Ok(r)
+    }
+
+    fn default_plan(
+        &self,
+        req: &Request,
+        scenario: &Scenario,
+        eval: &mut Evaluator,
+    ) -> Result<ArgminEntry, String> {
+        let (script, args) = script_and_args(req);
+        let cand = BackendCand {
+            script,
+            args,
+            scenario: DataScenario::from(scenario),
+            backend: ExecBackend::Mr,
+            cfg: SystemConfig::default(),
+            cc: ClusterConfig::paper_cluster(),
+            hints: SelectionHints::default(),
+            constants: self.constants.clone(),
+        };
+        eval.begin_run();
+        let evaluated = eval.evaluate(std::slice::from_ref(&cand))?;
+        let ev = &evaluated[0];
+        Ok(ArgminEntry {
+            backend: cand.backend,
+            cost_secs: ev.cost_secs,
+            cp: ev.cp_insts,
+            mr: ev.mr_jobs,
+            spark: ev.spark_jobs,
+        })
+    }
+
+    /// Common response prefix: ladder level, downgrade trail, request
+    /// echo. All fields here are bitwise deterministic across thread
+    /// counts and interleavings (wall-clock and cache counters live in
+    /// `stats` only).
+    fn response_head(
+        &self,
+        req: &Request,
+        scenario: &Scenario,
+        level: &'static str,
+        reasons: &[&'static str],
+    ) -> Response {
+        let mut r = Response::ok(req.cmd);
+        r.push("level", level);
+        r.push(
+            "downgrade",
+            if reasons.is_empty() { DOWNGRADE_NONE.to_string() } else { reasons.join(",") },
+        );
+        r.push("scenario", scenario.name);
+        r.push("script", req.script.name());
+        if req.script == ReqScript::Cg {
+            r.push("iters", req.iters.to_string());
+        }
+        r
+    }
+
+    // -----------------------------------------------------------------
+    // verify + stats
+    // -----------------------------------------------------------------
+
+    fn verify_response(&self, req: &Request) -> Response {
+        let Some(scenario) = self.scenario_of(req) else {
+            let detail =
+                format!("unknown scenario '{}'", req.scenario.as_deref().unwrap_or(""));
+            return Response::error(CODE_UNKNOWN_SCENARIO, &detail);
+        };
+        let backend = req.backend.unwrap_or(ExecBackend::Mr);
+        let compiled = match self.compile_default(req, &scenario, backend) {
+            Ok(c) => c,
+            Err(e) => return Response::error(CODE_OPTIMIZER_ERROR, &e),
+        };
+        let opts = CompileOptions { backend, ..Default::default() };
+        let report = verify_plan(&compiled, &opts);
+        let mut r = self.response_head(req, &scenario, LEVEL_FULL, &[]);
+        r.push("backend", backend.name());
+        r.push("blocks", report.blocks.to_string());
+        r.push("diagnostics", report.diagnostics.len().to_string());
+        r.push("errors", report.errors().to_string());
+        r.push("warnings", report.warnings().to_string());
+        r.push("clean", if report.is_clean() { "true" } else { "false" });
+        r
+    }
+
+    fn compile_default(
+        &self,
+        req: &Request,
+        scenario: &Scenario,
+        backend: ExecBackend,
+    ) -> Result<CompiledProgram, String> {
+        let (script, args) = script_and_args(req);
+        let opts = CompileOptions {
+            backend,
+            cc: ClusterConfigOpt(ClusterConfig::paper_cluster()),
+            ..Default::default()
+        };
+        compile_with_meta(script, &args, &scenario.meta(opts.cfg.blocksize), &opts)
+    }
+
+    /// `stats` never touches the optimizers; its counters describe the
+    /// requests handled *before* it (the stats request itself is
+    /// recorded after its response is built).
+    fn stats_response(&self) -> Response {
+        let stats = self.stats_snapshot();
+        let cache = self.cache_stats();
+        let mut r = Response::ok(ReqCmd::Stats);
+        r.push("downgrade", DOWNGRADE_NONE);
+        r.push("requests", stats.requests.to_string());
+        r.push("served", stats.ok.to_string());
+        r.push("errors", stats.errors.to_string());
+        for cmd in ReqCmd::ALL {
+            r.push(cmd.name(), stats.by_cmd[cmd.index()].to_string());
+        }
+        r.push("downgraded", stats.downgraded.to_string());
+        r.push("downgrade_deadline", stats.downgrade_deadline.to_string());
+        r.push("downgrade_candidates", stats.downgrade_candidates.to_string());
+        r.push("cache_hits", cache.hits.to_string());
+        r.push("cache_misses", cache.misses.to_string());
+        r.push("cache_hit_rate", format!("{:.3}", cache.hit_rate()));
+        r.push("cache_entries", cache.entries.to_string());
+        r.push("distinct_plans", self.memo.distinct().to_string());
+        r.push("argmin_entries", self.lock_argmins().len().to_string());
+        r.push("p50_us", stats.latency_percentile_us(50.0).to_string());
+        r.push("p99_us", stats.latency_percentile_us(99.0).to_string());
+        r.push("threads", self.threads.to_string());
+        r
+    }
+}
+
+/// The bundled script + `$N` bindings a request targets.
+fn script_and_args(req: &Request) -> (&'static str, HashMap<usize, String>) {
+    match req.script {
+        ReqScript::Ds => (LINREG_DS, Scenario::xs().args()),
+        ReqScript::Cg => (LINREG_CG, linreg_cg_args(req.iters)),
+    }
+}
+
+/// Megabyte axis rendering that keeps fractional entries (`32`, `0.5`).
+fn fmt_mb_axis(mb: f64) -> String {
+    if mb.fract() == 0.0 {
+        format!("{}", mb as i64)
+    } else {
+        format!("{mb}")
+    }
+}
+
+/// One scenario × backend on the default configuration, viewed as an
+/// evaluator candidate — the serve-side adapter behind the backend
+/// argmin and default-plan rungs.
+struct BackendCand {
+    script: &'static str,
+    args: HashMap<usize, String>,
+    scenario: DataScenario,
+    backend: ExecBackend,
+    cfg: SystemConfig,
+    cc: ClusterConfig,
+    hints: SelectionHints,
+    constants: CostConstants,
+}
+
+impl Candidate for BackendCand {
+    fn signature(&self) -> String {
+        plan_signature(
+            self.script,
+            &self.args,
+            &self.cfg,
+            &self.hints,
+            &self.cc,
+            &self.scenario,
+            self.backend,
+        )
+    }
+    fn compile(&self) -> Result<CompiledProgram, String> {
+        let opts = CompileOptions {
+            cfg: self.cfg.clone(),
+            cc: ClusterConfigOpt(self.cc.clone()),
+            hints: self.hints.clone(),
+            backend: self.backend,
+        };
+        compile_with_meta(
+            self.script,
+            &self.args,
+            &self.scenario.meta(self.cfg.blocksize),
+            &opts,
+        )
+    }
+    fn context(&self) -> CostContext<'_> {
+        CostContext { cfg: &self.cfg, cc: &self.cc, constants: &self.constants }
+    }
+    fn label(&self) -> String {
+        format!("{}@{}", self.scenario.name, self.backend.name())
+    }
+}

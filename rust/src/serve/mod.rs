@@ -1,0 +1,92 @@
+//! **Optimizer-as-a-service**: the long-lived multi-tenant daemon
+//! behind `repro serve`.
+//!
+//! The paper's thesis is that costing generated runtime plans is cheap
+//! enough for a higher-level optimizer to invoke constantly; this
+//! module makes that literal — one warm process answers streams of
+//! `optimize | sweep | gdf | verify | stats` requests off **one shared,
+//! sharded [`PlanMemo`](crate::opt::evaluate::PlanMemo) +
+//! [`CostCache`](crate::cost::cache::CostCache)**, so the steady state
+//! is thousands of cached decisions per second (measured by
+//! `benches/serve.rs` → `BENCH_SERVE.json`).
+//!
+//! Three layers:
+//!
+//! * [`protocol`] — the newline-delimited `key=value` request/response
+//!   grammar, error codes, and byte-stable response rendering.
+//! * [`daemon`] — [`ServeState`]: shared caches, per-request
+//!   evaluators, the budget-driven **one-way downgrade ladder**
+//!   (full → sweep → cached, with machine-readable `downgrade=` reason
+//!   codes), and `--warm-cache` / `--profile` artifact boot.
+//! * [`stats`] — observability counters (requests, downgrades by
+//!   reason, cache hit/miss, p50/p99 latency) behind the `stats`
+//!   request.
+//!
+//! Transport is pluggable and trivial: [`serve_lines`] runs the
+//! stdin/stdout session (requests strictly sequential, one response
+//! line per request line, flushed immediately), [`serve_tcp`] accepts
+//! concurrent TCP connections, one thread per connection, all sharing
+//! one [`ServeState`]. `--threads` controls only the per-request
+//! evaluator fan-out — responses are byte-stable across thread counts
+//! (`tests/serve.rs` asserts this).
+
+#![warn(missing_docs)]
+
+pub mod daemon;
+pub mod protocol;
+pub mod stats;
+
+pub use daemon::{ServeOptions, ServeState};
+pub use protocol::{Request, Response};
+pub use stats::ServeStats;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// Run a line-oriented serve session: read request lines from `input`,
+/// write one response line per request to `output` (flushed after each,
+/// so pipes see responses promptly). Requests are handled strictly in
+/// order; blank lines and `#` comments are skipped. Returns when the
+/// input reaches EOF.
+pub fn serve_lines(
+    state: &ServeState,
+    input: impl BufRead,
+    mut output: impl Write,
+) -> std::io::Result<()> {
+    for line in input.lines() {
+        let line = line?;
+        if let Some(resp) = state.handle_line(&line) {
+            output.write_all(resp.as_bytes())?;
+            output.write_all(b"\n")?;
+            output.flush()?;
+        }
+    }
+    Ok(())
+}
+
+/// Accept TCP connections forever, one handler thread per connection,
+/// every connection sharing `state` (and therefore the one memo/cache).
+/// Each connection speaks the same line protocol as [`serve_lines`] and
+/// ends at client EOF. Accept errors on one connection are logged to
+/// stderr and do not take the daemon down.
+pub fn serve_tcp(state: Arc<ServeState>, listener: TcpListener) -> std::io::Result<()> {
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let state = Arc::clone(&state);
+                std::thread::spawn(move || {
+                    if let Err(e) = serve_connection(&state, stream) {
+                        eprintln!("serve: connection {peer}: {e}");
+                    }
+                });
+            }
+            Err(e) => eprintln!("serve: accept failed: {e}"),
+        }
+    }
+}
+
+fn serve_connection(state: &ServeState, stream: TcpStream) -> std::io::Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    serve_lines(state, reader, stream)
+}

@@ -1,0 +1,428 @@
+//! The serve line protocol: newline-delimited requests of
+//! space-separated `key=value` tokens, answered by exactly one response
+//! line of the same shape.
+//!
+//! Grammar (one request per line):
+//!
+//! ```text
+//! request  := pair (SP pair)* NL
+//! pair     := key "=" value          ; value = first "=" onward, no SP
+//! key      := cmd | id | scenario | script | iters | backend
+//!           | budget_ms | budget_candidates | heaps
+//! ```
+//!
+//! `cmd` is required (`optimize | sweep | gdf | verify | stats`); every
+//! other key is optional. Blank lines and `#` comments are skipped.
+//! Responses always carry `ok=`, and successful optimizer responses
+//! carry `level=` (the ladder rung that answered) and `downgrade=`
+//! (reason-code trail, [`DOWNGRADE_NONE`] at full fidelity). Error
+//! responses carry `code=` (one of the `CODE_*` constants) and a
+//! sanitized `detail=`. An `id=` pair is echoed back verbatim, first.
+
+use crate::rtprog::ExecBackend;
+
+/// Request line could not be parsed into `key=value` pairs.
+pub const CODE_MALFORMED: &str = "malformed";
+/// A key outside the protocol vocabulary.
+pub const CODE_UNKNOWN_KEY: &str = "unknown-key";
+/// A key given more than once.
+pub const CODE_DUPLICATE_KEY: &str = "duplicate-key";
+/// `cmd=` value outside `optimize|sweep|gdf|verify|stats`.
+pub const CODE_UNKNOWN_CMD: &str = "unknown-cmd";
+/// A required key (e.g. `scenario=` on optimizer requests) is absent.
+pub const CODE_MISSING_KEY: &str = "missing-key";
+/// A value failed validation (non-numeric budget, bad backend, ...).
+pub const CODE_BAD_VALUE: &str = "bad-value";
+/// `scenario=` names no bundled Table-1 scenario.
+pub const CODE_UNKNOWN_SCENARIO: &str = "unknown-scenario";
+/// The optimizer itself failed (compile error, non-finite cost).
+pub const CODE_OPTIMIZER_ERROR: &str = "optimizer-error";
+
+/// `downgrade=` value when the request was answered at full fidelity.
+pub const DOWNGRADE_NONE: &str = "none";
+
+/// Ladder-rung names reported in `level=`.
+pub const LEVEL_FULL: &str = "full";
+/// See [`LEVEL_FULL`]: the backend-argmin fallback rung.
+pub const LEVEL_SWEEP: &str = "sweep";
+/// See [`LEVEL_FULL`]: the terminal cached/default rung.
+pub const LEVEL_CACHED: &str = "cached";
+
+/// The five request kinds.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ReqCmd {
+    /// Backend argmin for one scenario (the cheapest decision).
+    Optimize,
+    /// Full cluster-grid sweep ([`crate::opt::sweep`]).
+    Sweep,
+    /// Global data flow enumeration ([`crate::opt::gdf`]).
+    Gdf,
+    /// Static plan verification ([`crate::analysis`]).
+    Verify,
+    /// Observability counters; never touches the optimizers.
+    Stats,
+}
+
+impl ReqCmd {
+    /// All request kinds, in stats-reporting order.
+    pub const ALL: [ReqCmd; 5] =
+        [ReqCmd::Optimize, ReqCmd::Sweep, ReqCmd::Gdf, ReqCmd::Verify, ReqCmd::Stats];
+
+    /// Wire name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReqCmd::Optimize => "optimize",
+            ReqCmd::Sweep => "sweep",
+            ReqCmd::Gdf => "gdf",
+            ReqCmd::Verify => "verify",
+            ReqCmd::Stats => "stats",
+        }
+    }
+
+    /// Index into per-command counter arrays.
+    pub fn index(&self) -> usize {
+        match self {
+            ReqCmd::Optimize => 0,
+            ReqCmd::Sweep => 1,
+            ReqCmd::Gdf => 2,
+            ReqCmd::Verify => 3,
+            ReqCmd::Stats => 4,
+        }
+    }
+
+    fn parse(s: &str) -> Option<ReqCmd> {
+        Self::ALL.into_iter().find(|c| c.name() == s)
+    }
+}
+
+/// Which bundled DML script a request targets.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ReqScript {
+    /// Direct-solve LinReg (`linreg_ds`), the default.
+    Ds,
+    /// Iterative conjugate-gradient LinReg (`linreg_cg`).
+    Cg,
+}
+
+impl ReqScript {
+    /// Wire name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReqScript::Ds => "ds",
+            ReqScript::Cg => "cg",
+        }
+    }
+}
+
+/// A parsed, validated request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Client correlation token, echoed first in the response.
+    pub id: Option<String>,
+    /// Request kind.
+    pub cmd: ReqCmd,
+    /// Table-1 scenario name (required for every kind except `stats`).
+    pub scenario: Option<String>,
+    /// Script selector (default `ds`).
+    pub script: ReqScript,
+    /// CG iteration count (default 20; ignored by `ds`).
+    pub iters: usize,
+    /// Backend for `verify` requests (default MR).
+    pub backend: Option<ExecBackend>,
+    /// Wall-clock budget in milliseconds.
+    pub budget_ms: Option<u64>,
+    /// Candidate-count budget.
+    pub budget_candidates: Option<u64>,
+    /// Heap axis in MB for `sweep` requests.
+    pub heaps: Vec<f64>,
+}
+
+/// A request-level failure: machine-readable `code` plus sanitized
+/// human detail.
+#[derive(Clone, Debug)]
+pub struct ProtocolError {
+    /// One of the `CODE_*` constants.
+    pub code: &'static str,
+    /// Free-text diagnostic (sanitized before rendering).
+    pub detail: String,
+}
+
+impl ProtocolError {
+    fn new(code: &'static str, detail: impl Into<String>) -> Self {
+        ProtocolError { code, detail: detail.into() }
+    }
+}
+
+/// Extract the `id=` value from a raw request line without full
+/// parsing, so even malformed requests echo their correlation token.
+pub fn peek_id(line: &str) -> Option<String> {
+    line.split_whitespace().find_map(|tok| tok.strip_prefix("id=")).map(sanitize)
+}
+
+/// Replace whitespace with `-` and `=` with `:` so a free-text
+/// diagnostic stays one well-formed `key=value` token.
+pub fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| match c {
+            c if c.is_whitespace() => '-',
+            '=' => ':',
+            c => c,
+        })
+        .collect()
+}
+
+/// Parse and validate one request line. Blank/comment filtering is the
+/// caller's job; `line` must be non-empty.
+pub fn parse_request(line: &str) -> Result<Request, ProtocolError> {
+    let mut req = Request {
+        id: None,
+        cmd: ReqCmd::Stats,
+        scenario: None,
+        script: ReqScript::Ds,
+        iters: 20,
+        backend: None,
+        budget_ms: None,
+        budget_candidates: None,
+        heaps: vec![2048.0],
+    };
+    let mut cmd: Option<ReqCmd> = None;
+    let mut script: Option<ReqScript> = None;
+    let mut seen: Vec<&str> = Vec::new();
+    for tok in line.split_whitespace() {
+        let Some((key, value)) = tok.split_once('=') else {
+            return Err(ProtocolError::new(
+                CODE_MALFORMED,
+                format!("token '{tok}' is not key=value"),
+            ));
+        };
+        if value.is_empty() {
+            return Err(ProtocolError::new(CODE_MALFORMED, format!("empty value for '{key}'")));
+        }
+        if seen.contains(&key) {
+            return Err(ProtocolError::new(
+                CODE_DUPLICATE_KEY,
+                format!("key '{key}' given twice"),
+            ));
+        }
+        match key {
+            "cmd" => {
+                cmd = Some(ReqCmd::parse(value).ok_or_else(|| {
+                    ProtocolError::new(CODE_UNKNOWN_CMD, format!("unknown cmd '{value}'"))
+                })?);
+            }
+            "id" => req.id = Some(sanitize(value)),
+            "scenario" => req.scenario = Some(value.to_string()),
+            "script" => {
+                script = Some(match value {
+                    "ds" => ReqScript::Ds,
+                    "cg" => ReqScript::Cg,
+                    _ => {
+                        return Err(ProtocolError::new(
+                            CODE_BAD_VALUE,
+                            format!("script '{value}' (expected ds or cg)"),
+                        ))
+                    }
+                });
+            }
+            "iters" => match value.parse::<usize>() {
+                Ok(n) if n >= 1 => req.iters = n,
+                _ => {
+                    return Err(ProtocolError::new(
+                        CODE_BAD_VALUE,
+                        format!("iters '{value}' (expected a positive integer)"),
+                    ))
+                }
+            },
+            "backend" => {
+                req.backend = Some(ExecBackend::parse(value).ok_or_else(|| {
+                    ProtocolError::new(
+                        CODE_BAD_VALUE,
+                        format!("backend '{value}' (expected cp, mr or spark)"),
+                    )
+                })?);
+            }
+            "budget_ms" => match value.parse::<u64>() {
+                Ok(n) => req.budget_ms = Some(n),
+                _ => {
+                    return Err(ProtocolError::new(
+                        CODE_BAD_VALUE,
+                        format!("budget_ms '{value}' (expected a non-negative integer)"),
+                    ))
+                }
+            },
+            "budget_candidates" => match value.parse::<u64>() {
+                Ok(n) => req.budget_candidates = Some(n),
+                _ => {
+                    return Err(ProtocolError::new(
+                        CODE_BAD_VALUE,
+                        format!("budget_candidates '{value}' (expected a non-negative integer)"),
+                    ))
+                }
+            },
+            "heaps" => {
+                let mut heaps = Vec::new();
+                for part in value.split(',').filter(|p| !p.is_empty()) {
+                    match part.parse::<f64>() {
+                        Ok(x) if x.is_finite() && x > 0.0 => heaps.push(x),
+                        _ => {
+                            return Err(ProtocolError::new(
+                                CODE_BAD_VALUE,
+                                format!("heaps entry '{part}' (expected positive MB)"),
+                            ))
+                        }
+                    }
+                }
+                if heaps.is_empty() {
+                    return Err(ProtocolError::new(CODE_BAD_VALUE, "heaps list is empty"));
+                }
+                req.heaps = heaps;
+            }
+            _ => {
+                return Err(ProtocolError::new(
+                    CODE_UNKNOWN_KEY,
+                    format!("unknown key '{key}'"),
+                ))
+            }
+        }
+        seen.push(key);
+    }
+    let Some(cmd) = cmd else {
+        return Err(ProtocolError::new(CODE_MISSING_KEY, "cmd is required"));
+    };
+    req.cmd = cmd;
+    if let Some(s) = script {
+        req.script = s;
+    }
+    if req.cmd != ReqCmd::Stats && req.scenario.is_none() {
+        return Err(ProtocolError::new(
+            CODE_MISSING_KEY,
+            format!("scenario is required for cmd={}", cmd.name()),
+        ));
+    }
+    Ok(req)
+}
+
+/// An ordered `key=value` response line under construction. Field order
+/// is fixed by insertion order, so rendered responses are byte-stable.
+#[derive(Clone, Debug, Default)]
+pub struct Response {
+    fields: Vec<(&'static str, String)>,
+}
+
+impl Response {
+    /// Successful response skeleton: `ok=true cmd=<name>`.
+    pub fn ok(cmd: ReqCmd) -> Self {
+        let mut r = Response::default();
+        r.push("ok", "true");
+        r.push("cmd", cmd.name());
+        r
+    }
+
+    /// Error response: `ok=false code=<code> detail=<sanitized>`.
+    pub fn error(code: &'static str, detail: &str) -> Self {
+        let mut r = Response::default();
+        r.push("ok", "false");
+        r.push("code", code);
+        r.push("detail", sanitize(detail));
+        r
+    }
+
+    /// Append a field (values are sanitized to stay token-safe).
+    pub fn push(&mut self, key: &'static str, value: impl AsRef<str>) {
+        self.fields.push((key, sanitize(value.as_ref())));
+    }
+
+    /// Append a cost field as both a human-readable fixed-point value
+    /// and the exact bit pattern (`<key>_bits`, 16 hex digits) for
+    /// bitwise-equality assertions.
+    pub fn push_cost(&mut self, key: &'static str, secs: f64) {
+        self.fields.push((key, format!("{secs:.6}")));
+        match key {
+            "cost" => self.fields.push(("cost_bits", format!("{:016x}", secs.to_bits()))),
+            _ => self.fields.push(("bits", format!("{:016x}", secs.to_bits()))),
+        }
+    }
+
+    /// Look up a field by key (tests and the stats recorder use this).
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.fields.iter().find(|(k, _)| *k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// Render the response line, echoing `id` first when present (no
+    /// trailing newline).
+    pub fn render(&self, id: Option<&str>) -> String {
+        let mut out = String::new();
+        if let Some(id) = id {
+            out.push_str("id=");
+            out.push_str(&sanitize(id));
+        }
+        for (k, v) in &self.fields {
+            if !out.is_empty() {
+                out.push(' ');
+            }
+            out.push_str(k);
+            out.push('=');
+            out.push_str(v);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_full_request() {
+        let r = parse_request(
+            "cmd=gdf id=r1 scenario=XL1 script=cg iters=10 budget_ms=250 budget_candidates=64",
+        )
+        .unwrap();
+        assert_eq!(r.cmd, ReqCmd::Gdf);
+        assert_eq!(r.id.as_deref(), Some("r1"));
+        assert_eq!(r.scenario.as_deref(), Some("XL1"));
+        assert_eq!(r.script, ReqScript::Cg);
+        assert_eq!(r.iters, 10);
+        assert_eq!(r.budget_ms, Some(250));
+        assert_eq!(r.budget_candidates, Some(64));
+    }
+
+    #[test]
+    fn rejects_malformed_and_unknown() {
+        assert_eq!(parse_request("optimize now").unwrap_err().code, CODE_MALFORMED);
+        assert_eq!(parse_request("cmd=optimize flavor=red").unwrap_err().code, CODE_UNKNOWN_KEY);
+        assert_eq!(parse_request("cmd=explode scenario=XS").unwrap_err().code, CODE_UNKNOWN_CMD);
+        assert_eq!(parse_request("scenario=XS").unwrap_err().code, CODE_MISSING_KEY);
+        assert_eq!(parse_request("cmd=optimize").unwrap_err().code, CODE_MISSING_KEY);
+        assert_eq!(
+            parse_request("cmd=optimize scenario=XS iters=zero").unwrap_err().code,
+            CODE_BAD_VALUE
+        );
+        assert_eq!(
+            parse_request("cmd=stats cmd=stats").unwrap_err().code,
+            CODE_DUPLICATE_KEY
+        );
+    }
+
+    #[test]
+    fn id_survives_malformed_lines() {
+        assert_eq!(peek_id("cmd=? id=x7 what").as_deref(), Some("x7"));
+        assert_eq!(peek_id("cmd=stats"), None);
+    }
+
+    #[test]
+    fn response_renders_in_insertion_order() {
+        let mut r = Response::ok(ReqCmd::Optimize);
+        r.push("level", LEVEL_FULL);
+        r.push_cost("cost", 1.5);
+        assert_eq!(
+            r.render(Some("a")),
+            format!("id=a ok=true cmd=optimize level=full cost=1.500000 cost_bits={:016x}", 1.5f64.to_bits())
+        );
+    }
+
+    #[test]
+    fn sanitize_keeps_tokens_wellformed() {
+        assert_eq!(sanitize("two words\tand=eq"), "two-words-and:eq");
+    }
+}

@@ -1,0 +1,113 @@
+//! Serve-side observability counters: request/outcome totals, downgrade
+//! reasons, and a bounded latency reservoir for p50/p99.
+
+use crate::serve::protocol::ReqCmd;
+
+/// Latency samples kept (ring buffer — old samples are overwritten once
+/// the daemon has served this many requests).
+const LATENCY_CAP: usize = 65_536;
+
+/// Mutable counter state behind the daemon's stats mutex.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// Total requests handled (including failed ones).
+    pub requests: u64,
+    /// Requests answered `ok=true`.
+    pub ok: u64,
+    /// Requests answered `ok=false`.
+    pub errors: u64,
+    /// Per-command totals, indexed by [`ReqCmd::index`] (parse failures
+    /// with no recognizable command count toward none of them).
+    pub by_cmd: [u64; 5],
+    /// Requests that were answered below full fidelity.
+    pub downgraded: u64,
+    /// Downgrade steps taken because the wall-clock budget expired.
+    pub downgrade_deadline: u64,
+    /// Downgrade steps taken because the candidate budget was exceeded.
+    pub downgrade_candidates: u64,
+    lat_us: Vec<u64>,
+    lat_pos: usize,
+}
+
+impl ServeStats {
+    /// Record one handled request: its command (when the line parsed
+    /// far enough to know it), outcome, downgrade-reason trail and
+    /// handling latency.
+    pub fn record(&mut self, cmd: Option<ReqCmd>, ok: bool, reasons: &[&str], latency_us: u64) {
+        self.requests += 1;
+        if ok {
+            self.ok += 1;
+        } else {
+            self.errors += 1;
+        }
+        if let Some(cmd) = cmd {
+            self.by_cmd[cmd.index()] += 1;
+        }
+        if !reasons.is_empty() {
+            self.downgraded += 1;
+        }
+        for r in reasons {
+            match *r {
+                "deadline" => self.downgrade_deadline += 1,
+                "candidates" => self.downgrade_candidates += 1,
+                _ => {}
+            }
+        }
+        if self.lat_us.len() < LATENCY_CAP {
+            self.lat_us.push(latency_us);
+        } else {
+            self.lat_us[self.lat_pos] = latency_us;
+            self.lat_pos = (self.lat_pos + 1) % LATENCY_CAP;
+        }
+    }
+
+    /// Nearest-rank latency percentile in microseconds over the
+    /// retained reservoir (0 when nothing was recorded yet). `p` is in
+    /// percent, e.g. `50.0` or `99.0`.
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        if self.lat_us.is_empty() {
+            return 0;
+        }
+        let mut sorted = self.lat_us.clone();
+        sorted.sort_unstable();
+        let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+        sorted[rank.clamp(1, sorted.len()) - 1]
+    }
+
+    /// Latency samples currently retained.
+    pub fn latency_samples(&self) -> usize {
+        self.lat_us.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut s = ServeStats::default();
+        s.record(Some(ReqCmd::Optimize), true, &[], 100);
+        s.record(Some(ReqCmd::Gdf), true, &["deadline", "deadline"], 300);
+        s.record(None, false, &[], 10);
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.ok, 2);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.by_cmd[ReqCmd::Optimize.index()], 1);
+        assert_eq!(s.by_cmd[ReqCmd::Gdf.index()], 1);
+        assert_eq!(s.downgraded, 1);
+        assert_eq!(s.downgrade_deadline, 2);
+        assert_eq!(s.downgrade_candidates, 0);
+    }
+
+    #[test]
+    fn percentiles_use_nearest_rank() {
+        let mut s = ServeStats::default();
+        for v in [50u64, 10, 40, 20, 30] {
+            s.record(None, true, &[], v);
+        }
+        assert_eq!(s.latency_percentile_us(50.0), 30);
+        assert_eq!(s.latency_percentile_us(99.0), 50);
+        assert_eq!(ServeStats::default().latency_percentile_us(50.0), 0);
+    }
+}

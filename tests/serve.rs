@@ -1,0 +1,501 @@
+//! Integration battery for the `repro serve` daemon (`src/serve/`):
+//!
+//! * **Golden protocol transcript** — a fixed request script covering
+//!   every request kind plus the malformed/unknown-key/over-budget error
+//!   paths, compared byte-for-byte against a checked-in snapshot
+//!   (bless-on-first-run, like `tests/golden.rs`) and asserted
+//!   byte-stable across `--threads` settings.
+//! * **Concurrency stress** — N OS threads hammering one shared
+//!   [`ServeState`] must each receive responses bitwise identical to a
+//!   serial run on a fresh state.
+//! * **Interleaving property** — shuffled request orders never change
+//!   any request's outcome, ladder level, or downgrade reason codes.
+//! * **Warm-start regressions** — a `--warm-cache` boot answers its
+//!   first request with cache hits > 0 and the cold argmin bitwise; a
+//!   `--profile` boot runs under calibrated constants.
+//! * **One-shot budget regressions** — `Evaluator::set_budget` makes
+//!   `gdf`/`resource` runs fail softly with the stable
+//!   `budget-exceeded:<reason>` error, and a generous or absent budget
+//!   leaves results bitwise unchanged.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use systemds::api::{
+    budget_error_reason, calibrate, linreg_cg_args, save_artifact, Artifact, Budget,
+    CacheSnapshot, CalibrateOptions, CalibrationProfile, DataScenario, Evaluator, GdfSpec,
+    MeasureMode, ResourceGrid, Scenario, BUDGET_ERROR_PREFIX, BUDGET_REASON_CANDIDATES,
+    BUDGET_REASON_DEADLINE, LINREG_CG,
+};
+use systemds::opt::{gdf, resource};
+use systemds::serve::{serve_lines, ServeOptions, ServeState};
+use systemds::util::prop::forall;
+
+// ---------------------------------------------------------------------
+// Helpers
+// ---------------------------------------------------------------------
+
+fn state(threads: usize) -> ServeState {
+    ServeState::new(&ServeOptions { threads, ..Default::default() })
+        .expect("default serve state boots")
+}
+
+/// Per-test scratch file under a pid-unique directory, so concurrent
+/// test binaries never race on the same artifact paths.
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sysds_serve_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create serve test dir");
+    dir.join(name)
+}
+
+/// Extract `key=` from a rendered response line.
+fn field<'a>(resp: &'a str, key: &str) -> Option<&'a str> {
+    resp.split_whitespace()
+        .filter_map(|tok| tok.split_once('='))
+        .find(|(k, _)| *k == key)
+        .map(|(_, v)| v)
+}
+
+// ---------------------------------------------------------------------
+// Golden protocol transcript
+// ---------------------------------------------------------------------
+
+/// The fixed request script. Budgeted lines only use bounds whose
+/// outcome is deterministic: `budget_candidates=1` (clock-free; every
+/// multi-candidate batch trips) and `budget_ms=0` (the deadline is
+/// already in the past when the first check runs).
+const TRANSCRIPT: &[&str] = &[
+    "# serve golden transcript — regenerate: rm tests/golden/serve_transcript.txt",
+    "cmd=stats id=s0",
+    "cmd=optimize id=o1 scenario=xs",
+    "cmd=optimize id=o2 scenario=xs",
+    "cmd=optimize id=o3 scenario=xl1 script=cg iters=5",
+    "cmd=sweep id=w1 scenario=xs heaps=512,2048",
+    "cmd=gdf id=g1 scenario=xs script=cg iters=2",
+    "cmd=verify id=v1 scenario=xs",
+    "cmd=verify id=v2 scenario=xs backend=spark script=cg iters=2",
+    "what is this",
+    "cmd=optimize",
+    "cmd=bogus id=e1 scenario=xs",
+    "cmd=optimize id=e2 scenario=atlantis",
+    "cmd=optimize id=e3 scenario=xs iters=zero",
+    "cmd=optimize id=e4 scenario=xs flavor=red",
+    "cmd=optimize id=e5 scenario=xs scenario=xs",
+    "cmd=gdf id=b1 scenario=xs script=cg iters=2 budget_candidates=1",
+    "cmd=gdf id=b2 scenario=xs script=cg iters=2 budget_ms=0",
+    "cmd=sweep id=b3 scenario=xs budget_ms=0",
+    "cmd=stats id=s1",
+];
+
+/// Stats-only fields whose values are inherently volatile (wall-clock
+/// latencies, shared-cache race outcomes, host thread count). Every
+/// other response byte must be stable across runs and `--threads`.
+const VOLATILE_KEYS: &[&str] = &[
+    "cache_hits",
+    "cache_misses",
+    "cache_hit_rate",
+    "cache_entries",
+    "p50_us",
+    "p99_us",
+    "threads",
+];
+
+fn normalize(line: &str) -> String {
+    line.split_whitespace()
+        .map(|tok| match tok.split_once('=') {
+            Some((k, _)) if VOLATILE_KEYS.contains(&k) => format!("{k}=_"),
+            _ => tok.to_string(),
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// Run the transcript through the stdin/stdout transport
+/// ([`serve_lines`]) on a fresh state and return normalized response
+/// lines.
+fn run_transcript(threads: usize) -> Vec<String> {
+    let state = state(threads);
+    let input = TRANSCRIPT.join("\n");
+    let mut out: Vec<u8> = Vec::new();
+    serve_lines(&state, std::io::Cursor::new(input), &mut out).expect("in-memory serve session");
+    String::from_utf8(out)
+        .expect("responses are utf-8")
+        .lines()
+        .map(normalize)
+        .collect()
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../tests/golden/serve_transcript.txt")
+}
+
+/// One response line per non-comment request line, byte-stable across
+/// thread counts, matching the checked-in snapshot (blessed on first
+/// run).
+#[test]
+fn golden_transcript_is_byte_stable_across_threads() {
+    let t1 = run_transcript(1);
+    let comments =
+        TRANSCRIPT.iter().filter(|l| l.trim().is_empty() || l.trim().starts_with('#')).count();
+    assert_eq!(
+        t1.len(),
+        TRANSCRIPT.len() - comments,
+        "exactly one response per non-comment request line"
+    );
+    let t4 = run_transcript(4);
+    assert_eq!(t1, t4, "responses must be byte-stable across --threads");
+
+    let rendered = t1.join("\n") + "\n";
+    let path = golden_path();
+    if !path.exists() {
+        std::fs::create_dir_all(path.parent().expect("golden dir")).expect("create golden dir");
+        std::fs::write(&path, &rendered).expect("write golden transcript");
+        eprintln!("blessed new golden snapshot: {}", path.display());
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).expect("read golden transcript");
+    assert_eq!(
+        rendered,
+        expected,
+        "serve transcript diverged from {} — delete the snapshot and re-run to re-bless",
+        path.display()
+    );
+}
+
+/// Structural pins that hold regardless of snapshot state: error codes,
+/// ladder levels and downgrade trails land where the protocol promises.
+#[test]
+fn transcript_structure_pins() {
+    let resp = run_transcript(1);
+    let by_id = |id: &str| -> &String {
+        resp.iter()
+            .find(|l| field(l, "id") == Some(id))
+            .unwrap_or_else(|| panic!("response for id={id}"))
+    };
+
+    // Repeated identical request: identical bitwise answer.
+    let o1 = by_id("o1");
+    let o2 = by_id("o2");
+    assert_eq!(field(o1, "cost_bits"), field(o2, "cost_bits"));
+    assert_eq!(field(o1, "backend"), field(o2, "backend"));
+    for id in ["o1", "o2", "o3", "w1", "g1"] {
+        let l = by_id(id);
+        assert_eq!(field(l, "ok"), Some("true"), "{l}");
+        assert_eq!(field(l, "level"), Some("full"), "{l}");
+        assert_eq!(field(l, "downgrade"), Some("none"), "{l}");
+    }
+    for (id, code) in [
+        ("e1", "unknown-cmd"),
+        ("e2", "unknown-scenario"),
+        ("e3", "bad-value"),
+        ("e4", "unknown-key"),
+        ("e5", "duplicate-key"),
+    ] {
+        let l = by_id(id);
+        assert_eq!(field(l, "ok"), Some("false"), "{l}");
+        assert_eq!(field(l, "code"), Some(code), "{l}");
+    }
+    // Over-budget optimizer requests fail soft: terminal cached rung,
+    // machine-readable reason trail, still a full answer.
+    for (id, reason) in [
+        ("b1", "candidates,candidates"),
+        ("b2", "deadline,deadline"),
+        ("b3", "deadline,deadline"),
+    ] {
+        let l = by_id(id);
+        assert_eq!(field(l, "ok"), Some("true"), "{l}");
+        assert_eq!(field(l, "level"), Some("cached"), "{l}");
+        assert_eq!(field(l, "downgrade"), Some(reason), "{l}");
+        assert!(field(l, "cost_bits").is_some(), "{l}");
+    }
+    // b3's scenario/script was decided by o1 at full fidelity, so the
+    // cached rung answers from the argmin table; b1/b2's key was never
+    // decided, so they fall back to the un-budgeted default plan.
+    assert_eq!(field(by_id("b3"), "source"), Some("argmin-table"));
+    assert_eq!(field(by_id("b3"), "cost_bits"), field(by_id("o1"), "cost_bits"));
+    assert_eq!(field(by_id("b1"), "source"), Some("default-plan"));
+    assert_eq!(field(by_id("b2"), "source"), Some("default-plan"));
+    assert_eq!(field(by_id("b1"), "cost_bits"), field(by_id("b2"), "cost_bits"));
+
+    // The trailing stats response saw every earlier request.
+    let s1 = by_id("s1");
+    let n = (TRANSCRIPT.len() - 1) as u64; // minus the comment line
+    assert_eq!(field(s1, "requests"), Some(format!("{}", n - 1).as_str()), "{s1}");
+    // "what is this", the cmd-less line, and e1..e5.
+    assert_eq!(field(s1, "errors"), Some("7"), "{s1}");
+    assert_eq!(field(s1, "downgraded"), Some("3"), "{s1}");
+    assert_eq!(field(s1, "downgrade_deadline"), Some("4"), "{s1}");
+    assert_eq!(field(s1, "downgrade_candidates"), Some("2"), "{s1}");
+}
+
+// ---------------------------------------------------------------------
+// Concurrency stress
+// ---------------------------------------------------------------------
+
+/// Request mix used by the stress and interleaving tests: no `stats`
+/// lines (their counters are intentionally volatile), everything else
+/// deterministic by design.
+fn stress_requests() -> Vec<String> {
+    vec![
+        "cmd=optimize id=q1 scenario=xs".to_string(),
+        "cmd=optimize id=q2 scenario=xl1".to_string(),
+        "cmd=optimize id=q3 scenario=xl1 script=cg iters=3".to_string(),
+        "cmd=verify id=q4 scenario=xs backend=spark".to_string(),
+        "cmd=gdf id=q5 scenario=xs script=cg iters=2".to_string(),
+    ]
+}
+
+/// N concurrent clients of one shared state each see responses bitwise
+/// identical to a serial client on a fresh state — the shared memo and
+/// cache are invisible in response bytes.
+#[test]
+fn concurrent_clients_match_serial_bitwise() {
+    let reqs = stress_requests();
+    let serial = state(1);
+    let baseline: Vec<String> =
+        reqs.iter().map(|r| serial.handle_line(r).expect("response")).collect();
+
+    let shared = Arc::new(state(2));
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let shared = Arc::clone(&shared);
+            let reqs = reqs.clone();
+            std::thread::spawn(move || {
+                reqs.iter()
+                    .map(|r| shared.handle_line(r).expect("response"))
+                    .collect::<Vec<String>>()
+            })
+        })
+        .collect();
+    for h in handles {
+        let got = h.join().expect("client thread");
+        assert_eq!(got, baseline, "concurrent responses must match the serial run bitwise");
+    }
+
+    let stats = shared.stats_snapshot();
+    assert_eq!(stats.requests, (reqs.len() * 4) as u64);
+    assert_eq!(stats.errors, 0);
+}
+
+// ---------------------------------------------------------------------
+// Interleaving property
+// ---------------------------------------------------------------------
+
+/// Shuffling the request order never changes any request's outcome
+/// tuple (ok, level/code, downgrade trail, cost bits). Budgeted
+/// requests use scenario × script × iters keys no full-fidelity request
+/// writes, so even the terminal cached rung is order-independent.
+#[test]
+fn interleaving_order_never_changes_outcomes() {
+    let reqs: Vec<String> = vec![
+        "cmd=optimize id=f1 scenario=xs".to_string(),
+        "cmd=optimize id=f2 scenario=xl1".to_string(),
+        "cmd=gdf id=b1 scenario=xl2 script=cg iters=3 budget_candidates=1".to_string(),
+        "cmd=sweep id=b2 scenario=xl3 budget_ms=0".to_string(),
+        "cmd=flying id=e1 scenario=xs".to_string(),
+        "cmd=optimize id=e2 scenario=xs budget_candidates=zero".to_string(),
+    ];
+    let outcome = |line: &str| -> (String, String, String, String) {
+        (
+            field(line, "ok").unwrap_or("").to_string(),
+            field(line, "level").or_else(|| field(line, "code")).unwrap_or("").to_string(),
+            field(line, "downgrade").unwrap_or("").to_string(),
+            field(line, "cost_bits").unwrap_or("").to_string(),
+        )
+    };
+    let run = |order: &[usize]| -> Vec<(String, (String, String, String, String))> {
+        let st = state(1);
+        let mut got: Vec<_> = order
+            .iter()
+            .map(|&i| {
+                let resp = st.handle_line(&reqs[i]).expect("response");
+                (field(&resp, "id").expect("id echoed").to_string(), outcome(&resp))
+            })
+            .collect();
+        got.sort();
+        got
+    };
+
+    let baseline = run(&(0..reqs.len()).collect::<Vec<_>>());
+    forall(
+        6,
+        0xC0FFEE,
+        |rng| {
+            // Fisher–Yates over the request indices.
+            let mut order: Vec<usize> = (0..reqs.len()).collect();
+            for i in (1..order.len()).rev() {
+                order.swap(i, rng.below(i as u64 + 1) as usize);
+            }
+            order
+        },
+        |order| {
+            let got = run(order);
+            if got == baseline {
+                Ok(())
+            } else {
+                Err(format!("outcomes changed under reordering:\n{got:?}\nvs\n{baseline:?}"))
+            }
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Warm-start regressions
+// ---------------------------------------------------------------------
+
+/// A daemon booted from a cost-cache snapshot answers its first request
+/// with cache hits > 0 and reproduces the cold argmin bitwise.
+#[test]
+fn warm_cache_boot_replays_cold_argmin_with_hits() {
+    let cold = state(1);
+    let req = "cmd=optimize id=c scenario=xl1";
+    let cold_resp = cold.handle_line(req).expect("cold response");
+    assert_eq!(field(&cold_resp, "ok"), Some("true"));
+    let cache = cold.cache().expect("cost cache is on by default");
+    let snap = CacheSnapshot::from_cache(&cache);
+    assert!(!snap.is_empty(), "cold run must populate the shared cache");
+
+    let path = tmp("warm_boot.costcache");
+    save_artifact(&path, &Artifact::CacheSnapshot(snap)).expect("save snapshot");
+
+    let warm = ServeState::new(&ServeOptions {
+        threads: 1,
+        warm_cache: Some(path),
+        ..Default::default()
+    })
+    .expect("warm serve state boots");
+    assert!(
+        warm.boot_summary().contains("warm="),
+        "boot banner must report the warmed entries: {}",
+        warm.boot_summary()
+    );
+    let before = warm.cache_stats();
+    let warm_resp = warm.handle_line(req).expect("warm response");
+    let after = warm.cache_stats();
+    assert!(
+        after.hits > before.hits,
+        "first warm request must be served with cache hits (before {} / after {})",
+        before.hits,
+        after.hits
+    );
+    assert_eq!(field(&warm_resp, "cost_bits"), field(&cold_resp, "cost_bits"));
+    assert_eq!(field(&warm_resp, "backend"), field(&cold_resp, "backend"));
+}
+
+/// `--warm-cache` under `--no-cost-cache` is a boot-time contradiction,
+/// and a wrong-kind artifact is a diagnostic, not a panic.
+#[test]
+fn warm_cache_boot_diagnostics() {
+    let err = ServeState::new(&ServeOptions {
+        no_cost_cache: true,
+        warm_cache: Some(tmp("unused.costcache")),
+        ..Default::default()
+    })
+    .expect_err("contradictory boot must fail");
+    assert!(err.contains("--no-cost-cache"), "{err}");
+
+    let err = ServeState::new(&ServeOptions {
+        warm_cache: Some(tmp("missing.costcache")),
+        ..Default::default()
+    })
+    .expect_err("missing snapshot must fail");
+    assert!(!err.is_empty());
+}
+
+/// A daemon booted under a calibration profile runs every request with
+/// the calibrated constants — deterministically so.
+#[test]
+fn profile_boot_serves_under_calibrated_constants() {
+    let opts = CalibrateOptions {
+        seed: 7,
+        quick: true,
+        threads: 1,
+        mode: MeasureMode::Simulated { noise: 0.0 },
+        ..Default::default()
+    };
+    let report = calibrate(&opts).expect("simulated calibration");
+    let profile = CalibrationProfile::from_report(&report, &opts);
+    let path = tmp("boot.profile");
+    save_artifact(&path, &Artifact::Profile(profile)).expect("save profile");
+
+    let boot = || {
+        ServeState::new(&ServeOptions {
+            threads: 1,
+            profile: Some(path.clone()),
+            ..Default::default()
+        })
+        .expect("profile serve state boots")
+    };
+    let a = boot();
+    assert!(a.boot_summary().contains("calibrated"), "{}", a.boot_summary());
+    let ra = a.handle_line("cmd=optimize id=p scenario=xs").expect("response");
+    assert_eq!(field(&ra, "ok"), Some("true"));
+    let rb = boot().handle_line("cmd=optimize id=p scenario=xs").expect("response");
+    assert_eq!(ra, rb, "calibrated answers must be deterministic across boots");
+}
+
+// ---------------------------------------------------------------------
+// One-shot budget regressions (the `--budget-ms` / `--budget-candidates`
+// CLI path: Evaluator::set_budget + the cooperative checks in
+// opt/evaluate.rs)
+// ---------------------------------------------------------------------
+
+fn xs_cg_gdf_spec() -> GdfSpec {
+    let mut spec = GdfSpec::linreg_cg(DataScenario::from(&Scenario::xs()), 2);
+    spec.threads = 1;
+    spec
+}
+
+/// A candidate budget of 1 trips the gdf run with the stable
+/// machine-readable error, every time.
+#[test]
+fn gdf_candidate_budget_fails_soft_and_deterministically() {
+    let mut reasons = Vec::new();
+    for _ in 0..3 {
+        let mut eval = Evaluator::new(1);
+        eval.set_budget(Some(Budget::new(None, Some(1))));
+        let err = gdf::optimize_with(&xs_cg_gdf_spec(), &mut eval)
+            .expect_err("budget of 1 candidate cannot cover a gdf enumeration");
+        assert!(err.starts_with(BUDGET_ERROR_PREFIX), "{err}");
+        reasons.push(budget_error_reason(&err).expect("budget reason"));
+    }
+    assert_eq!(reasons, vec![BUDGET_REASON_CANDIDATES; 3], "same reason code every run");
+}
+
+/// An already-expired wall-clock budget trips the resource grid before
+/// any candidate is compiled.
+#[test]
+fn resource_deadline_budget_fails_soft() {
+    let grid = ResourceGrid::new(
+        LINREG_CG,
+        linreg_cg_args(2),
+        DataScenario::from(&Scenario::xs()),
+    );
+    let mut eval = Evaluator::new(1);
+    eval.set_budget(Some(Budget::new(Some(0), None)));
+    let err = resource::optimize_grid_with(&grid, &mut eval)
+        .expect_err("expired deadline must trip the run");
+    assert_eq!(budget_error_reason(&err), Some(BUDGET_REASON_DEADLINE), "{err}");
+    assert_eq!(eval.distinct_plans(), 0, "no plan may be compiled after expiry");
+}
+
+/// A generous budget is invisible: the gdf run produces bitwise the
+/// same report as an unbudgeted one.
+#[test]
+fn generous_budget_leaves_results_bitwise_unchanged() {
+    let spec = xs_cg_gdf_spec();
+    let mut plain = Evaluator::new(1);
+    let a = gdf::optimize_with(&spec, &mut plain).expect("unbudgeted gdf run");
+
+    let mut budgeted = Evaluator::new(1);
+    budgeted.set_budget(Some(Budget::new(Some(3_600_000), Some(1_000_000))));
+    let b = gdf::optimize_with(&spec, &mut budgeted).expect("generously budgeted gdf run");
+
+    assert_eq!(a.candidates.len(), b.candidates.len());
+    assert_eq!(a.best().label(), b.best().label());
+    assert_eq!(
+        a.best().cost_secs.to_bits(),
+        b.best().cost_secs.to_bits(),
+        "budget plumbing must not perturb costs"
+    );
+}
