@@ -21,9 +21,9 @@
 //! structural *warning* and skipped, never guessed at.
 
 use super::{Finding, Severity, PROGRAM_SCOPE};
-use crate::conf::{ClusterConfig, CostConstants, SystemConfig};
+use crate::conf::{ClusterConfig, CostConstants, FaultProfile, SystemConfig};
 use crate::cost::cache::{self, CostCache};
-use crate::cost::{cost_program, cost_total_cached, CostNode};
+use crate::cost::{cost_program_faults, cost_total_cached_faults, CostNode};
 use crate::rtprog::{RtBlock, RtProgram};
 
 /// Relative comparison tolerance for exactly-recomputable totals. The
@@ -48,7 +48,22 @@ pub(crate) fn audit(
     cc: &ClusterConfig,
     k: &CostConstants,
 ) -> Vec<Finding> {
-    let report = cost_program(rt, cfg, cc, k);
+    audit_faults(rt, cfg, cc, k, &FaultProfile::none())
+}
+
+/// [`audit`] under a failure profile: the plan is re-costed with the
+/// same retry/straggler pricing the optimizer used, so the Eq.-1
+/// identities and the bitwise cache-replay check audit the costs that
+/// actually decided the plan — not a fault-free shadow of them. With
+/// [`FaultProfile::none`] this is bitwise-identical to [`audit`].
+pub(crate) fn audit_faults(
+    rt: &RtProgram,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    k: &CostConstants,
+    fault: &FaultProfile,
+) -> Vec<Finding> {
+    let report = cost_program_faults(rt, cfg, cc, k, fault);
     let mut ctx = Ctx { rt, cfg, cc, findings: Vec::new(), call_stack: Vec::new() };
     if report.nodes.len() != rt.blocks.len() {
         ctx.findings.push((
@@ -77,7 +92,8 @@ pub(crate) fn audit(
         ));
     }
     let hashes = cache::program_hashes(rt);
-    let cached = cost_total_cached(rt, &hashes, cfg, cc, k, &CostCache::default());
+    let cached =
+        cost_total_cached_faults(rt, &hashes, cfg, cc, k, fault, &CostCache::default());
     if cached.to_bits() != report.total.to_bits() {
         ctx.findings.push((
             PROGRAM_SCOPE,
@@ -334,6 +350,21 @@ mod tests {
             let opts = CompileOptions { backend, ..CompileOptions::default() };
             let c = Scenario::xs().compile(&opts);
             let f = audit(&c.runtime, &cfg, &cc, &k);
+            assert!(f.is_empty(), "[{}] {f:?}", backend.name());
+        }
+    }
+
+    #[test]
+    fn bundled_plans_satisfy_all_invariants_under_faults() {
+        // The Eq.-1 identities and the bitwise cache replay must hold
+        // for fault-priced costs too — retries inflate the numbers, not
+        // the structure of the aggregation.
+        let (cfg, cc, k) = defaults();
+        let chaos = FaultProfile::chaos();
+        for backend in crate::rtprog::ExecBackend::all() {
+            let opts = CompileOptions { backend, ..CompileOptions::default() };
+            let c = Scenario::xs().compile(&opts);
+            let f = audit_faults(&c.runtime, &cfg, &cc, &k, &chaos);
             assert!(f.is_empty(), "[{}] {f:?}", backend.name());
         }
     }

@@ -41,7 +41,7 @@ pub mod dataflow;
 pub mod invariants;
 pub mod shape;
 
-use crate::conf::{ClusterConfig, CostConstants, SystemConfig};
+use crate::conf::{ClusterConfig, CostConstants, FaultProfile, SystemConfig};
 use crate::cost::cache;
 use crate::rtprog::{ExecBackend, RtProgram};
 
@@ -202,6 +202,23 @@ pub fn verify(
     k: &CostConstants,
     backend: ExecBackend,
 ) -> VerifyReport {
+    verify_faults(rt, cfg, cc, k, &FaultProfile::none(), backend)
+}
+
+/// [`verify`] under a failure profile: the cost-invariant pass re-costs
+/// the plan with the same retry/straggler pricing the optimizer used
+/// (see [`crate::conf::FaultProfile`]), so a `--verify` run audits the
+/// exact numbers that decided the plan. Dataflow and shape passes are
+/// fault-independent. With [`FaultProfile::none`] this is
+/// bitwise-identical to [`verify`].
+pub fn verify_faults(
+    rt: &RtProgram,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    k: &CostConstants,
+    fault: &FaultProfile,
+    backend: ExecBackend,
+) -> VerifyReport {
     let hashes = cache::program_hashes(rt);
     let roots = hashes.block_roots();
     let mut raw: Vec<(Pass, usize, Severity, String)> = Vec::new();
@@ -211,7 +228,7 @@ pub fn verify(
     for (b, s, m) in shape::audit(rt, cfg, cc, backend) {
         raw.push((Pass::Shape, b, s, m));
     }
-    for (b, s, m) in invariants::audit(rt, cfg, cc, k) {
+    for (b, s, m) in invariants::audit_faults(rt, cfg, cc, k, fault) {
         raw.push((Pass::CostInvariants, b, s, m));
     }
     raw.sort_by(|a, b| {

@@ -19,8 +19,10 @@ use crate::matrix::{Format, MatrixCharacteristics};
 use crate::rtprog::{self, RtProgram};
 
 pub use crate::artifact::{
-    Artifact, CacheSnapshot, CalibrationProfile, LoadedPlan, PlanArtifact, PLAN_FORMAT_VERSION,
+    ArgminRow, ArgminTable, Artifact, CacheSnapshot, CalibrationProfile, LoadedPlan,
+    PlanArtifact, PLAN_FORMAT_VERSION,
 };
+pub use crate::conf::FaultProfile;
 pub use crate::cost::cache::{CacheStats, CostCache};
 pub use crate::feedback::{
     BlockClass, BlockRecord, CalibrateOptions, CalibrationReport, Corrections, MeasureMode,
@@ -41,11 +43,25 @@ pub use crate::rtprog::ExecBackend;
 /// Returns the deterministically ordered diagnostic report; callers that
 /// enforce well-formedness should check [`VerifyReport::is_clean`].
 pub fn verify_plan(compiled: &CompiledProgram, opts: &CompileOptions) -> VerifyReport {
-    crate::analysis::verify(
+    verify_plan_faults(compiled, opts, &FaultProfile::none())
+}
+
+/// [`verify_plan`] under a failure profile: the cost-invariant pass
+/// audits retry-aware costs (see [`FaultProfile`]), so plans picked by a
+/// fault-aware optimizer are checked against the numbers that actually
+/// decided them. [`FaultProfile::none`] is bitwise-identical to
+/// [`verify_plan`].
+pub fn verify_plan_faults(
+    compiled: &CompiledProgram,
+    opts: &CompileOptions,
+    fault: &FaultProfile,
+) -> VerifyReport {
+    crate::analysis::verify_faults(
         &compiled.runtime,
         &opts.cfg,
         &opts.cc.0,
         &crate::conf::CostConstants::default(),
+        fault,
         opts.backend,
     )
 }

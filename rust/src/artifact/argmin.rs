@@ -1,0 +1,218 @@
+//! Persisted backend-argmin tables: the serve daemon's terminal-rung
+//! lookup table ([`crate::serve`]) as a versioned, checksummed artifact.
+//!
+//! The daemon's argmin table maps `scenario|script|iters` keys to the
+//! backend-argmin decision made for them (best backend, estimated cost,
+//! plan statistics). Without persistence the table dies with the
+//! process, so a restarted daemon answers its first `cached`-rung
+//! requests from a freshly costed default plan instead of the decisions
+//! it already made. `repro serve --spill-argmin <path>` spills the table
+//! after every insert (atomic tmp+rename via [`super::save`]) and
+//! reloads it at boot; reloaded keys answer with `source=persisted`.
+//!
+//! Like every artifact the table is **regenerate-don't-trust**: rows are
+//! stamped with the context they were decided under (cost constants and
+//! [`FaultProfile`]), and a daemon booting with a different context
+//! discards the rows — silently answering from decisions priced under
+//! different constants would be wrong, not stale.
+
+use crate::conf::{CostConstants, FaultProfile};
+use crate::rtprog::ExecBackend;
+
+use super::codec::{Reader, Writer};
+
+/// Header kind token for argmin tables.
+pub const KIND: &str = "argmin";
+
+/// One persisted backend-argmin decision.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgminRow {
+    /// Table key: `scenario|script|iters`.
+    pub key: String,
+    /// The winning backend.
+    pub backend: ExecBackend,
+    /// Estimated execution time of the winning plan, seconds.
+    pub cost_secs: f64,
+    /// CP instruction count of the winning plan.
+    pub cp: usize,
+    /// MR-job count of the winning plan.
+    pub mr: usize,
+    /// Spark-job count of the winning plan.
+    pub spark: usize,
+}
+
+/// A persisted argmin table: the decision rows plus the costing context
+/// they were decided under.
+#[derive(Clone, Debug)]
+pub struct ArgminTable {
+    /// Cost constants the decisions were priced with.
+    pub constants: CostConstants,
+    /// Failure profile the decisions were priced with.
+    pub fault: FaultProfile,
+    /// Decision rows, sorted by key (so the encoding — and therefore the
+    /// on-disk artifact — is deterministic regardless of insert order).
+    pub rows: Vec<ArgminRow>,
+}
+
+impl ArgminTable {
+    /// Build a table over the given rows; rows are sorted by key.
+    pub fn new(constants: CostConstants, fault: FaultProfile, mut rows: Vec<ArgminRow>) -> Self {
+        rows.sort_by(|a, b| a.key.cmp(&b.key));
+        ArgminTable { constants, fault, rows }
+    }
+
+    /// Whether a loaded table's context matches the booting daemon's —
+    /// rows priced under different constants or a different failure
+    /// profile must be regenerated, never trusted.
+    pub fn context_matches(&self, constants: &CostConstants, fault: &FaultProfile) -> bool {
+        self.constants == *constants && self.fault == *fault
+    }
+
+    /// Serialize to the artifact text form.
+    pub fn encode(&self) -> String {
+        let mut w = Writer::new(KIND);
+        w.section("context");
+        super::put_constants(&mut w, "constants", &self.constants);
+        super::put_fault(&mut w, "fault", &self.fault);
+        w.section("rows");
+        w.put_usize("n", self.rows.len());
+        for (i, row) in self.rows.iter().enumerate() {
+            w.put_str(&format!("row.{i}.key"), &row.key);
+            w.put_str(&format!("row.{i}.backend"), row.backend.name());
+            w.put_f64(&format!("row.{i}.cost_secs"), row.cost_secs);
+            w.put_usize(&format!("row.{i}.cp"), row.cp);
+            w.put_usize(&format!("row.{i}.mr"), row.mr);
+            w.put_usize(&format!("row.{i}.spark"), row.spark);
+        }
+        w.finish()
+    }
+
+    /// Parse from the artifact text form.
+    pub fn decode(text: &str) -> Result<Self, String> {
+        let reader = Reader::parse(text)?;
+        if reader.kind() != KIND {
+            return Err(format!(
+                "artifact: expected a '{KIND}' artifact, got '{}'",
+                reader.kind()
+            ));
+        }
+        Self::decode_from(&reader)
+    }
+
+    pub(crate) fn decode_from(reader: &Reader) -> Result<Self, String> {
+        let ctx = reader.section("context")?;
+        let constants = super::get_constants(&ctx, "constants")?;
+        let fault = super::get_fault(&ctx, "fault")?;
+        fault
+            .validate()
+            .map_err(|e| format!("artifact: argmin table carries an unusable profile: {e}"))?;
+        let rows_s = reader.section("rows")?;
+        let n = rows_s.usize("n")?;
+        let mut rows = Vec::with_capacity(n);
+        for i in 0..n {
+            let name = rows_s.str(&format!("row.{i}.backend"))?;
+            let backend = ExecBackend::parse(&name)
+                .ok_or_else(|| format!("artifact: unknown backend '{name}' in argmin row {i}"))?;
+            let cost_secs = rows_s.f64(&format!("row.{i}.cost_secs"))?;
+            if !cost_secs.is_finite() {
+                return Err(format!(
+                    "artifact: non-finite cost {cost_secs} in argmin row {i}"
+                ));
+            }
+            rows.push(ArgminRow {
+                key: rows_s.str(&format!("row.{i}.key"))?,
+                backend,
+                cost_secs,
+                cp: rows_s.usize(&format!("row.{i}.cp"))?,
+                mr: rows_s.usize(&format!("row.{i}.mr"))?,
+                spark: rows_s.usize(&format!("row.{i}.spark"))?,
+            });
+        }
+        Ok(ArgminTable::new(constants, fault, rows))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ArgminTable {
+        ArgminTable::new(
+            CostConstants::default(),
+            FaultProfile::chaos(),
+            vec![
+                ArgminRow {
+                    key: "XL1|cg|10".to_string(),
+                    backend: ExecBackend::Cp,
+                    cost_secs: 1234.5,
+                    cp: 91,
+                    mr: 0,
+                    spark: 0,
+                },
+                ArgminRow {
+                    key: "XS|ds|0".to_string(),
+                    backend: ExecBackend::Cp,
+                    cost_secs: 2.25,
+                    cp: 17,
+                    mr: 0,
+                    spark: 0,
+                },
+            ],
+        )
+    }
+
+    #[test]
+    fn argmin_table_round_trips_bitwise() {
+        let t = sample();
+        let text = t.encode();
+        let back = ArgminTable::decode(&text).unwrap();
+        assert_eq!(back.constants, t.constants);
+        assert_eq!(back.fault, t.fault);
+        assert_eq!(back.rows.len(), t.rows.len());
+        for (a, b) in back.rows.iter().zip(&t.rows) {
+            assert_eq!(a.key, b.key);
+            assert_eq!(a.backend, b.backend);
+            assert_eq!(a.cost_secs.to_bits(), b.cost_secs.to_bits());
+            assert_eq!((a.cp, a.mr, a.spark), (b.cp, b.mr, b.spark));
+        }
+        assert_eq!(back.encode(), text);
+    }
+
+    #[test]
+    fn rows_are_sorted_regardless_of_insert_order() {
+        let mut t = sample();
+        t.rows.reverse();
+        let resorted = ArgminTable::new(t.constants.clone(), t.fault.clone(), t.rows.clone());
+        assert_eq!(resorted.encode(), sample().encode());
+    }
+
+    #[test]
+    fn context_mismatch_is_detected() {
+        let t = sample();
+        assert!(t.context_matches(&CostConstants::default(), &FaultProfile::chaos()));
+        assert!(!t.context_matches(&CostConstants::default(), &FaultProfile::none()));
+        let mut k = CostConstants::default();
+        k.mem_bw *= 2.0;
+        assert!(!t.context_matches(&k, &FaultProfile::chaos()));
+    }
+
+    #[test]
+    fn corrupt_rows_are_diagnostics() {
+        let mut t = sample();
+        t.rows[0].cost_secs = f64::NAN;
+        let err = ArgminTable::decode(&t.encode()).unwrap_err();
+        assert!(err.contains("non-finite"), "{err}");
+        // wrong-kind header
+        let w = Writer::new("profile");
+        let err = ArgminTable::decode(&w.finish()).unwrap_err();
+        assert!(err.contains("expected a 'argmin'"), "{err}");
+    }
+
+    #[test]
+    fn degenerate_profile_is_rejected_at_load() {
+        let mut t = sample();
+        t.fault.max_attempts = 0;
+        let err = ArgminTable::decode(&t.encode()).unwrap_err();
+        assert!(err.contains("unusable profile"), "{err}");
+    }
+}

@@ -27,6 +27,7 @@
 //! [`crate::api::load_artifact`] and the `repro plan save|load|diff`
 //! CLI plus the `--warm-cache` / `--profile` flags.
 
+pub mod argmin;
 pub mod codec;
 pub mod plan;
 pub mod profile;
@@ -34,10 +35,11 @@ pub mod snapshot;
 
 use std::path::Path;
 
-use crate::conf::{ClusterConfig, CostConstants, SystemConfig};
+use crate::conf::{ClusterConfig, CostConstants, FaultProfile, SystemConfig};
 use crate::feedback::Corrections;
 use codec::{Reader, Section, Writer};
 
+pub use argmin::{ArgminRow, ArgminTable};
 pub use plan::{LoadedPlan, PlanArtifact, PlanInput, PLAN_FORMAT_VERSION};
 pub use profile::CalibrationProfile;
 pub use snapshot::CacheSnapshot;
@@ -51,6 +53,8 @@ pub enum Artifact {
     CacheSnapshot(CacheSnapshot),
     /// A calibration profile.
     Profile(CalibrationProfile),
+    /// A serve-daemon backend-argmin table.
+    Argmin(ArgminTable),
 }
 
 impl Artifact {
@@ -60,6 +64,7 @@ impl Artifact {
             Artifact::Plan(_) => plan::KIND,
             Artifact::CacheSnapshot(_) => snapshot::KIND,
             Artifact::Profile(_) => profile::KIND,
+            Artifact::Argmin(_) => argmin::KIND,
         }
     }
 
@@ -69,6 +74,7 @@ impl Artifact {
             Artifact::Plan(p) => p.encode(),
             Artifact::CacheSnapshot(s) => s.encode(),
             Artifact::Profile(p) => p.encode(),
+            Artifact::Argmin(t) => t.encode(),
         }
     }
 
@@ -79,11 +85,13 @@ impl Artifact {
             plan::KIND => Ok(Artifact::Plan(PlanArtifact::decode_from(&reader)?)),
             snapshot::KIND => Ok(Artifact::CacheSnapshot(CacheSnapshot::decode_from(&reader)?)),
             profile::KIND => Ok(Artifact::Profile(CalibrationProfile::decode_from(&reader)?)),
+            argmin::KIND => Ok(Artifact::Argmin(ArgminTable::decode_from(&reader)?)),
             other => Err(format!(
-                "artifact: unknown kind '{other}' (this build reads '{}', '{}', '{}')",
+                "artifact: unknown kind '{other}' (this build reads '{}', '{}', '{}', '{}')",
                 plan::KIND,
                 snapshot::KIND,
-                profile::KIND
+                profile::KIND,
+                argmin::KIND
             )),
         }
     }
@@ -223,6 +231,28 @@ pub(crate) fn get_constants(s: &Section<'_>, prefix: &str) -> Result<CostConstan
     })
 }
 
+pub(crate) fn put_fault(w: &mut Writer, prefix: &str, fp: &FaultProfile) {
+    w.put_f64(&format!("{prefix}.mr_fail_p"), fp.mr_fail_p);
+    w.put_f64(&format!("{prefix}.spark_fail_p"), fp.spark_fail_p);
+    w.put_f64(&format!("{prefix}.straggler_frac"), fp.straggler_frac);
+    w.put_f64(&format!("{prefix}.straggler_slowdown"), fp.straggler_slowdown);
+    w.put_usize(&format!("{prefix}.max_attempts"), fp.max_attempts);
+    w.put_f64(&format!("{prefix}.backoff_base"), fp.backoff_base);
+    w.put_bool(&format!("{prefix}.speculative"), fp.speculative);
+}
+
+pub(crate) fn get_fault(s: &Section<'_>, prefix: &str) -> Result<FaultProfile, String> {
+    Ok(FaultProfile {
+        mr_fail_p: s.f64(&format!("{prefix}.mr_fail_p"))?,
+        spark_fail_p: s.f64(&format!("{prefix}.spark_fail_p"))?,
+        straggler_frac: s.f64(&format!("{prefix}.straggler_frac"))?,
+        straggler_slowdown: s.f64(&format!("{prefix}.straggler_slowdown"))?,
+        max_attempts: s.usize(&format!("{prefix}.max_attempts"))?,
+        backoff_base: s.f64(&format!("{prefix}.backoff_base"))?,
+        speculative: s.bool(&format!("{prefix}.speculative"))?,
+    })
+}
+
 pub(crate) fn put_corrections(w: &mut Writer, prefix: &str, c: &Corrections) {
     w.put_f64(&format!("{prefix}.compute"), c.compute);
     w.put_f64(&format!("{prefix}.read"), c.read);
@@ -250,17 +280,20 @@ mod tests {
         let cc = ClusterConfig::paper_cluster();
         let cfg = SystemConfig::default();
         let k = CostConstants::default();
+        let fp = FaultProfile::chaos();
         let mut w = Writer::new("plan");
         w.section("s");
         put_cluster(&mut w, "cc", &cc);
         put_sysconf(&mut w, "cfg", &cfg);
         put_constants(&mut w, "k", &k);
+        put_fault(&mut w, "fp", &fp);
         let text = w.finish();
         let r = Reader::parse(&text).unwrap();
         let s = r.section("s").unwrap();
         assert_eq!(get_cluster(&s, "cc").unwrap(), cc);
         assert_eq!(get_sysconf(&s, "cfg").unwrap(), cfg);
         assert_eq!(get_constants(&s, "k").unwrap(), k);
+        assert_eq!(get_fault(&s, "fp").unwrap(), fp);
     }
 
     #[test]

@@ -424,6 +424,239 @@ impl CostConstants {
     }
 }
 
+/// Failure model for distributed (MR/Spark) task execution.
+///
+/// The paper's Eq. 1 prices *expected* execution time, but its expectation
+/// ignores the cluster pathologies that dominate long-running jobs: task
+/// failures with retry/backoff, stragglers, and speculative re-execution.
+/// A `FaultProfile` makes those a first-class costed dimension — the
+/// deterministic simulator ([`crate::mr`]) injects faults from it, and the
+/// cost model ([`crate::cost`]) prices the same expectation analytically
+/// (geometric retries, backoff latency, straggler tail). The default
+/// profile is [`FaultProfile::none`], under which both injection and
+/// costing are exact identities: every cost, fingerprint, and golden
+/// output is bitwise-identical to a build without the fault layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultProfile {
+    /// Per-attempt failure probability of an MR task, in `[0, 1)`.
+    /// A failed attempt is re-run from scratch after backoff (Hadoop's
+    /// `mapreduce.map.maxattempts` retry semantics).
+    pub mr_fail_p: f64,
+    /// Per-attempt failure probability of a Spark task, in `[0, 1)`.
+    /// Spark re-schedules failed tasks within the running executors, so
+    /// retries skip the container-startup latency but still redo the work.
+    pub spark_fail_p: f64,
+    /// Fraction of tasks that straggle, in `[0, 1]` (the LATE-scheduler
+    /// observation: a small tail of tasks runs far slower than the median).
+    pub straggler_frac: f64,
+    /// Slowdown factor of a straggling task relative to the median task,
+    /// `>= 1`. A value of 1 means stragglers are indistinguishable.
+    pub straggler_slowdown: f64,
+    /// Maximum attempts per task (first run + retries), `>= 1`. A task
+    /// that fails `max_attempts` times fails the job; the cost model
+    /// truncates the retry expectation at this bound.
+    pub max_attempts: usize,
+    /// Base of the exponential retry backoff, seconds: attempt `a`
+    /// (1-indexed retry) waits `backoff_base * 2^(a-1)` before re-running.
+    /// Must be finite and `>= 0`.
+    pub backoff_base: f64,
+    /// Speculative execution toggle: when set, a backup copy of each
+    /// straggling task is launched and the earlier finisher wins, capping
+    /// the effective straggler slowdown (at the cost of duplicate work).
+    pub speculative: bool,
+}
+
+impl FaultProfile {
+    /// The identity profile: no failures, no stragglers, one attempt.
+    /// Under this profile fault-aware costing and injection are exact
+    /// no-ops, bitwise.
+    pub fn none() -> Self {
+        FaultProfile {
+            mr_fail_p: 0.0,
+            spark_fail_p: 0.0,
+            straggler_frac: 0.0,
+            straggler_slowdown: 1.0,
+            max_attempts: 1,
+            backoff_base: 0.0,
+            speculative: false,
+        }
+    }
+
+    /// The bundled chaos profile used by `repro chaos` and the CI chaos
+    /// smoke: a lossy cluster where MR tasks fail 8% of attempts, Spark
+    /// tasks 18%, a tenth of all tasks straggle at 4x, and tasks retry up
+    /// to 4 times under a 0.5 s exponential backoff. Retry-heavy
+    /// distributed plans pay enough expected latency here that the
+    /// backend argmin of the bundled scenario flips to CP.
+    pub fn chaos() -> Self {
+        FaultProfile {
+            mr_fail_p: 0.08,
+            spark_fail_p: 0.18,
+            straggler_frac: 0.10,
+            straggler_slowdown: 4.0,
+            max_attempts: 4,
+            backoff_base: 0.5,
+            speculative: false,
+        }
+    }
+
+    /// True when this profile is the identity ([`FaultProfile::none`]):
+    /// costing must then skip the fault terms entirely so results stay
+    /// bitwise-identical to the fault-unaware model, and fingerprints
+    /// must not include the fault knob group (pre-existing cost-cache
+    /// snapshots keep replaying).
+    pub fn is_none(&self) -> bool {
+        self == &FaultProfile::none()
+    }
+
+    /// Reject profiles the model cannot price: probabilities outside
+    /// `[0, 1)` make the geometric retry expectation `1/(1-p)` divide by
+    /// zero or go negative, a slowdown below 1 would *reward* stragglers,
+    /// and zero attempts means no task ever runs. Called alongside
+    /// [`ClusterConfig::validate`] at optimizer/sweep entry points.
+    pub fn validate(&self) -> Result<(), String> {
+        let prob = |name: &str, v: f64| {
+            if v.is_finite() && (0.0..1.0).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("invalid FaultProfile: {name} must be in [0, 1), got {v}"))
+            }
+        };
+        prob("mr_fail_p", self.mr_fail_p)?;
+        prob("spark_fail_p", self.spark_fail_p)?;
+        if !(self.straggler_frac.is_finite() && (0.0..=1.0).contains(&self.straggler_frac)) {
+            return Err(format!(
+                "invalid FaultProfile: straggler_frac must be in [0, 1], got {}",
+                self.straggler_frac
+            ));
+        }
+        if !(self.straggler_slowdown.is_finite() && self.straggler_slowdown >= 1.0) {
+            return Err(format!(
+                "invalid FaultProfile: straggler_slowdown must be finite and >= 1, got {}",
+                self.straggler_slowdown
+            ));
+        }
+        if self.max_attempts == 0 {
+            return Err("invalid FaultProfile: max_attempts must be >= 1, got 0".to_string());
+        }
+        if !(self.backoff_base.is_finite() && self.backoff_base >= 0.0) {
+            return Err(format!(
+                "invalid FaultProfile: backoff_base must be finite and >= 0, got {}",
+                self.backoff_base
+            ));
+        }
+        Ok(())
+    }
+
+    /// Parse a `--fault-profile` CLI spec: `none`, `chaos`, or a
+    /// comma-separated `key=value` list applied on top of `none` (a
+    /// leading profile name seeds the base, e.g.
+    /// `chaos,spark=0.3,attempts=6`). Keys: `mr`, `spark`, `frac`,
+    /// `slow`, `attempts`, `backoff`, `speculative` (bool). The result is
+    /// validated before it is returned.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut fp = FaultProfile::none();
+        for (i, tok) in spec.split(',').enumerate() {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            match tok {
+                "none" if i == 0 => fp = FaultProfile::none(),
+                "chaos" if i == 0 => fp = FaultProfile::chaos(),
+                _ => {
+                    let (key, val) = tok.split_once('=').ok_or_else(|| {
+                        format!("invalid fault-profile token {tok:?}: expected key=value, 'none' or 'chaos'")
+                    })?;
+                    let num = |v: &str| {
+                        v.parse::<f64>()
+                            .map_err(|_| format!("invalid fault-profile value for {key}: {v:?}"))
+                    };
+                    match key {
+                        "mr" | "mr_fail_p" => fp.mr_fail_p = num(val)?,
+                        "spark" | "spark_fail_p" => fp.spark_fail_p = num(val)?,
+                        "frac" | "straggler_frac" => fp.straggler_frac = num(val)?,
+                        "slow" | "straggler_slowdown" => fp.straggler_slowdown = num(val)?,
+                        "backoff" | "backoff_base" => fp.backoff_base = num(val)?,
+                        "attempts" | "max_attempts" => {
+                            fp.max_attempts = val.parse::<usize>().map_err(|_| {
+                                format!("invalid fault-profile value for attempts: {val:?}")
+                            })?
+                        }
+                        "speculative" | "spec" => {
+                            fp.speculative = match val {
+                                "true" | "on" | "1" => true,
+                                "false" | "off" | "0" => false,
+                                _ => {
+                                    return Err(format!(
+                                        "invalid fault-profile value for speculative: {val:?}"
+                                    ))
+                                }
+                            }
+                        }
+                        _ => {
+                            return Err(format!(
+                                "unknown fault-profile key {key:?} (known: mr, spark, frac, slow, attempts, backoff, speculative)"
+                            ))
+                        }
+                    }
+                }
+            }
+        }
+        fp.validate()?;
+        Ok(fp)
+    }
+
+    /// Expected number of attempts per task at per-attempt failure
+    /// probability `p`, truncated at [`FaultProfile::max_attempts`]:
+    /// `E[A] = (1 - p^m) / (1 - p)` — the partial-sum form of the
+    /// geometric `1/(1-p)`, which it approaches as `m → ∞`. Exactly 1.0
+    /// when `p == 0`.
+    pub fn expected_attempts(&self, p: f64) -> f64 {
+        if p <= 0.0 {
+            return 1.0;
+        }
+        (1.0 - p.powi(self.max_attempts.max(1) as i32)) / (1.0 - p)
+    }
+
+    /// Expected exponential-backoff wait per task at failure probability
+    /// `p`, seconds: retry `a` happens with probability `p^a` and waits
+    /// `backoff_base * 2^(a-1)`, summed over the `max_attempts - 1`
+    /// possible retries. Exactly 0.0 when `p == 0` or the base is 0.
+    pub fn expected_backoff(&self, p: f64) -> f64 {
+        if p <= 0.0 || self.backoff_base <= 0.0 {
+            return 0.0;
+        }
+        let mut sum = 0.0;
+        let mut pa = 1.0;
+        for a in 1..self.max_attempts.max(1) {
+            pa *= p;
+            sum += pa * self.backoff_base * 2f64.powi(a as i32 - 1);
+        }
+        sum
+    }
+
+    /// Straggler tail multiplier (`>= 1`) applied to the last wave of a
+    /// task phase: `1 + frac * (s_eff - 1)` where `s_eff` is the
+    /// straggler slowdown, capped at 2 when speculative execution is on
+    /// (the backup copy bounds the observable slowdown at roughly one
+    /// extra task length). Exactly 1.0 when no tasks straggle.
+    pub fn straggler_tail(&self) -> f64 {
+        let s_eff = if self.speculative {
+            self.straggler_slowdown.min(2.0)
+        } else {
+            self.straggler_slowdown
+        };
+        1.0 + self.straggler_frac * (s_eff - 1.0).max(0.0)
+    }
+}
+
+impl Default for FaultProfile {
+    fn default() -> Self {
+        FaultProfile::none()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -554,5 +787,88 @@ mod tests {
         assert_eq!(cc.spark_executors, 12);
         assert_eq!(cc.k_local, 8);
         cc.validate().unwrap();
+    }
+
+    #[test]
+    fn fault_profile_none_is_identity() {
+        let fp = FaultProfile::none();
+        fp.validate().unwrap();
+        assert!(fp.is_none());
+        assert_eq!(fp, FaultProfile::default());
+        assert_eq!(fp.expected_attempts(fp.mr_fail_p), 1.0);
+        assert_eq!(fp.expected_backoff(fp.mr_fail_p), 0.0);
+        assert_eq!(fp.straggler_tail(), 1.0);
+    }
+
+    #[test]
+    fn fault_profile_chaos_validates_and_is_not_none() {
+        let fp = FaultProfile::chaos();
+        fp.validate().unwrap();
+        assert!(!fp.is_none());
+        assert!(fp.expected_attempts(fp.spark_fail_p) > 1.0);
+        assert!(fp.expected_backoff(fp.spark_fail_p) > 0.0);
+        assert!(fp.straggler_tail() > 1.0);
+    }
+
+    #[test]
+    fn fault_profile_rejects_degenerate_values() {
+        let mut fp = FaultProfile::chaos();
+        fp.mr_fail_p = 1.0; // 1/(1-p) would divide by zero
+        assert!(fp.validate().unwrap_err().contains("mr_fail_p"));
+        let mut fp = FaultProfile::chaos();
+        fp.spark_fail_p = -0.1;
+        assert!(fp.validate().unwrap_err().contains("spark_fail_p"));
+        let mut fp = FaultProfile::chaos();
+        fp.straggler_slowdown = 0.5; // would reward stragglers
+        assert!(fp.validate().unwrap_err().contains("straggler_slowdown"));
+        let mut fp = FaultProfile::chaos();
+        fp.max_attempts = 0;
+        assert!(fp.validate().unwrap_err().contains("max_attempts"));
+        let mut fp = FaultProfile::chaos();
+        fp.backoff_base = f64::NAN;
+        assert!(fp.validate().unwrap_err().contains("backoff_base"));
+    }
+
+    #[test]
+    fn fault_profile_parse_names_and_overrides() {
+        assert_eq!(FaultProfile::parse("none").unwrap(), FaultProfile::none());
+        assert_eq!(FaultProfile::parse("chaos").unwrap(), FaultProfile::chaos());
+        let fp = FaultProfile::parse("chaos,spark=0.3,attempts=6,speculative=on").unwrap();
+        assert_eq!(fp.spark_fail_p, 0.3);
+        assert_eq!(fp.max_attempts, 6);
+        assert!(fp.speculative);
+        assert_eq!(fp.mr_fail_p, FaultProfile::chaos().mr_fail_p);
+        let fp = FaultProfile::parse("mr=0.05,slow=3.0,frac=0.2,backoff=0.25").unwrap();
+        assert_eq!(fp.mr_fail_p, 0.05);
+        assert_eq!(fp.straggler_slowdown, 3.0);
+        assert_eq!(fp.straggler_frac, 0.2);
+        assert_eq!(fp.backoff_base, 0.25);
+        assert_eq!(fp.spark_fail_p, 0.0);
+        assert!(FaultProfile::parse("bogus").is_err());
+        assert!(FaultProfile::parse("mr=nope").is_err());
+        assert!(FaultProfile::parse("mr=1.5").is_err()); // parse validates
+    }
+
+    #[test]
+    fn fault_profile_expectation_math() {
+        // E[A] truncated geometric: p=0.5, m=4 -> (1 - 0.0625) / 0.5 = 1.875
+        let fp = FaultProfile {
+            mr_fail_p: 0.5,
+            max_attempts: 4,
+            backoff_base: 1.0,
+            ..FaultProfile::none()
+        };
+        assert!((fp.expected_attempts(0.5) - 1.875).abs() < 1e-12);
+        // Backoff: 0.5*1 + 0.25*2 + 0.125*4 = 1.5
+        assert!((fp.expected_backoff(0.5) - 1.5).abs() < 1e-12);
+        // Straggler tail: frac=0.1, slow=4 -> 1.3; speculation caps at 2 -> 1.1
+        let fp = FaultProfile {
+            straggler_frac: 0.1,
+            straggler_slowdown: 4.0,
+            ..FaultProfile::none()
+        };
+        assert!((fp.straggler_tail() - 1.3).abs() < 1e-12);
+        let fp = FaultProfile { speculative: true, ..fp };
+        assert!((fp.straggler_tail() - 1.1).abs() < 1e-12);
     }
 }

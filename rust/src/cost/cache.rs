@@ -54,7 +54,7 @@ use std::sync::{Arc, Mutex};
 
 use super::vars::VarTracker;
 use super::CostNode;
-use crate::conf::{ClusterConfig, CostConstants, SystemConfig};
+use crate::conf::{ClusterConfig, CostConstants, FaultProfile, SystemConfig};
 use crate::rtprog::{Instr, RtBlock, RtProgram};
 
 // ---------------------------------------------------------------------
@@ -277,6 +277,7 @@ pub(crate) fn hash_knobs<H: Hasher>(
     cfg: &SystemConfig,
     cc: &ClusterConfig,
     k: &CostConstants,
+    fp: &FaultProfile,
     h: &mut H,
 ) {
     fn f64b<H: Hasher>(h: &mut H, v: f64) {
@@ -331,6 +332,21 @@ pub(crate) fn hash_knobs<H: Hasher>(
         f64b(h, k.spark_shuffle_read);
         f64b(h, k.spark_broadcast_bw);
     }
+    // fault knob group: only distributed-job blocks read the fault model,
+    // and the identity profile contributes nothing — fingerprints under
+    // `FaultProfile::none()` are bitwise-identical to a fault-unaware
+    // build, so pre-existing cost-cache snapshots keep replaying, while
+    // faulty and fault-free entries can never alias.
+    if !fp.is_none() && feats & (F_MR | F_SPARK) != 0 {
+        h.write_u8(1); // group marker
+        f64b(h, fp.mr_fail_p);
+        f64b(h, fp.spark_fail_p);
+        f64b(h, fp.straggler_frac);
+        f64b(h, fp.straggler_slowdown);
+        h.write_usize(fp.max_attempts);
+        f64b(h, fp.backoff_base);
+        h.write_u8(fp.speculative as u8);
+    }
 }
 
 /// 128-bit fingerprint of the configuration knobs a whole program can
@@ -343,11 +359,12 @@ pub(crate) fn hash_context(
     cfg: &SystemConfig,
     cc: &ClusterConfig,
     k: &CostConstants,
+    fp: &FaultProfile,
 ) -> (u64, u64) {
     let mut h1 = DefaultHasher::new();
     let mut h2 = Fnv::new();
-    hash_knobs(feats, cfg, cc, k, &mut h1);
-    hash_knobs(feats, cfg, cc, k, &mut h2);
+    hash_knobs(feats, cfg, cc, k, fp, &mut h1);
+    hash_knobs(feats, cfg, cc, k, fp, &mut h2);
     (h1.finish(), h2.finish())
 }
 
@@ -377,13 +394,14 @@ pub(crate) fn knob_fingerprint(
     cfg: &SystemConfig,
     cc: &ClusterConfig,
     k: &CostConstants,
+    fp: &FaultProfile,
 ) -> (u64, u64) {
     let mut k1 = DefaultHasher::new();
     let mut k2 = Fnv::new();
     k1.write_u8(emit_nodes as u8);
     k2.write_u8(emit_nodes as u8);
-    hash_knobs(feats, cfg, cc, k, &mut k1);
-    hash_knobs(feats, cfg, cc, k, &mut k2);
+    hash_knobs(feats, cfg, cc, k, fp, &mut k1);
+    hash_knobs(feats, cfg, cc, k, fp, &mut k2);
     (k1.finish(), k2.finish())
 }
 
@@ -705,28 +723,76 @@ mod tests {
     fn feature_flags_select_knob_groups() {
         let cfg = SystemConfig::default();
         let k = CostConstants::default();
+        let fp = FaultProfile::none();
         let cc1 = ClusterConfig::paper_cluster();
         let mut cc2 = cc1.clone();
         cc2.k_local = 7; // parfor-only knob
         // without the parfor flag the two clusters fingerprint equal...
-        assert_eq!(hash_context(0, &cfg, &cc1, &k), hash_context(0, &cfg, &cc2, &k));
+        assert_eq!(hash_context(0, &cfg, &cc1, &k, &fp), hash_context(0, &cfg, &cc2, &k, &fp));
         // ...with it they differ
         assert_ne!(
-            hash_context(F_PARFOR, &cfg, &cc1, &k),
-            hash_context(F_PARFOR, &cfg, &cc2, &k)
+            hash_context(F_PARFOR, &cfg, &cc1, &k, &fp),
+            hash_context(F_PARFOR, &cfg, &cc2, &k, &fp)
         );
         // clock is in the base group: always observable
         let mut cc3 = cc1.clone();
         cc3.clock_hz *= 2.0;
-        assert_ne!(hash_context(0, &cfg, &cc1, &k), hash_context(0, &cfg, &cc3, &k));
+        assert_ne!(hash_context(0, &cfg, &cc1, &k, &fp), hash_context(0, &cfg, &cc3, &k, &fp));
         // spark knobs only observable with the spark flag
         let mut cc4 = cc1.clone();
         cc4.spark_executors = 99;
-        assert_eq!(hash_context(F_MR, &cfg, &cc1, &k), hash_context(F_MR, &cfg, &cc4, &k));
-        assert_ne!(
-            hash_context(F_SPARK, &cfg, &cc1, &k),
-            hash_context(F_SPARK, &cfg, &cc4, &k)
+        assert_eq!(
+            hash_context(F_MR, &cfg, &cc1, &k, &fp),
+            hash_context(F_MR, &cfg, &cc4, &k, &fp)
         );
+        assert_ne!(
+            hash_context(F_SPARK, &cfg, &cc1, &k, &fp),
+            hash_context(F_SPARK, &cfg, &cc4, &k, &fp)
+        );
+    }
+
+    /// The fault knob group fingerprints only for distributed blocks under
+    /// a non-identity profile: `FaultProfile::none()` must be bitwise
+    /// invisible (pre-existing cost-cache snapshots keep replaying), while
+    /// faulty and fault-free entries must never alias.
+    #[test]
+    fn fault_profile_selects_knob_group() {
+        let cfg = SystemConfig::default();
+        let k = CostConstants::default();
+        let cc = ClusterConfig::paper_cluster();
+        let none = FaultProfile::none();
+        let chaos = FaultProfile::chaos();
+        // CP-only blocks never observe the fault model, whatever profile
+        assert_eq!(hash_context(0, &cfg, &cc, &k, &none), hash_context(0, &cfg, &cc, &k, &chaos));
+        assert_eq!(
+            hash_context(F_PARFOR, &cfg, &cc, &k, &none),
+            hash_context(F_PARFOR, &cfg, &cc, &k, &chaos)
+        );
+        // distributed blocks under a nonzero profile fingerprint apart
+        for feats in [F_MR, F_SPARK, F_MR | F_SPARK] {
+            assert_ne!(
+                hash_context(feats, &cfg, &cc, &k, &none),
+                hash_context(feats, &cfg, &cc, &k, &chaos),
+                "feats={feats}"
+            );
+        }
+        // every fault field is observable once the group is active
+        for tweak in [
+            |f: &mut FaultProfile| f.mr_fail_p = 0.11,
+            |f: &mut FaultProfile| f.spark_fail_p = 0.22,
+            |f: &mut FaultProfile| f.straggler_frac = 0.33,
+            |f: &mut FaultProfile| f.straggler_slowdown = 5.0,
+            |f: &mut FaultProfile| f.max_attempts = 7,
+            |f: &mut FaultProfile| f.backoff_base = 0.75,
+            |f: &mut FaultProfile| f.speculative = true,
+        ] {
+            let mut fp2 = chaos.clone();
+            tweak(&mut fp2);
+            assert_ne!(
+                hash_context(F_MR, &cfg, &cc, &k, &chaos),
+                hash_context(F_MR, &cfg, &cc, &k, &fp2)
+            );
+        }
     }
 
     /// Every constant online calibration can rewrite must be observable in
@@ -737,17 +803,26 @@ mod tests {
         let cfg = SystemConfig::default();
         let cc = ClusterConfig::paper_cluster();
         let k1 = CostConstants::default();
+        let fp = FaultProfile::none();
         for feats in [0u8, F_PARFOR, F_MR, F_SPARK, F_MR | F_SPARK] {
-            let base = hash_context(feats, &cfg, &cc, &k1);
+            let base = hash_context(feats, &cfg, &cc, &k1, &fp);
             let mut k2 = k1.clone();
             k2.flop_efficiency = 2.0;
-            assert_ne!(base, hash_context(feats, &cfg, &cc, &k2), "flop_efficiency, feats={feats}");
+            assert_ne!(
+                base,
+                hash_context(feats, &cfg, &cc, &k2, &fp),
+                "flop_efficiency, feats={feats}"
+            );
             let mut k3 = k1.clone();
             k3.local_read *= 2.0;
-            assert_ne!(base, hash_context(feats, &cfg, &cc, &k3), "local_read, feats={feats}");
+            assert_ne!(base, hash_context(feats, &cfg, &cc, &k3, &fp), "local_read, feats={feats}");
             let mut k4 = k1.clone();
             k4.local_write *= 2.0;
-            assert_ne!(base, hash_context(feats, &cfg, &cc, &k4), "local_write, feats={feats}");
+            assert_ne!(
+                base,
+                hash_context(feats, &cfg, &cc, &k4, &fp),
+                "local_write, feats={feats}"
+            );
         }
     }
 

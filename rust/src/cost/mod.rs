@@ -25,7 +25,7 @@ pub mod vars;
 
 use std::sync::Arc;
 
-use crate::conf::{ClusterConfig, CostConstants, SystemConfig};
+use crate::conf::{ClusterConfig, CostConstants, FaultProfile, SystemConfig};
 use crate::ir::BinOp;
 use crate::matrix::{Format, MatrixCharacteristics};
 use crate::rtprog::*;
@@ -110,7 +110,21 @@ pub fn cost_program(
     cc: &ClusterConfig,
     k: &CostConstants,
 ) -> CostReport {
-    cost_with(rt, None, cfg, cc, k, true, None)
+    cost_with(rt, None, cfg, cc, k, &FaultProfile::none(), true, None)
+}
+
+/// [`cost_program`] under a failure model: distributed-job terms are
+/// expanded to their retry-aware expectation (geometric retries, backoff
+/// latency, straggler tail — see [`mr::cost_mr_job_faults`]). With
+/// [`FaultProfile::none`] this is bitwise-identical to [`cost_program`].
+pub fn cost_program_faults(
+    rt: &RtProgram,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    k: &CostConstants,
+    fault: &FaultProfile,
+) -> CostReport {
+    cost_with(rt, None, cfg, cc, k, fault, true, None)
 }
 
 /// [`cost_program`] with block-level cost caching: subtrees whose
@@ -128,7 +142,23 @@ pub fn cost_program_cached(
     k: &CostConstants,
     cache: &CostCache,
 ) -> CostReport {
-    cost_with(rt, Some(hashes), cfg, cc, k, true, Some(cache))
+    cost_with(rt, Some(hashes), cfg, cc, k, &FaultProfile::none(), true, Some(cache))
+}
+
+/// [`cost_program_cached`] under a failure model (see
+/// [`cost_program_faults`]); the fault profile participates in the knob
+/// fingerprint for distributed blocks, so faulty and fault-free entries
+/// share one [`CostCache`] without aliasing.
+pub fn cost_program_cached_faults(
+    rt: &RtProgram,
+    hashes: &ProgramHashes,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    k: &CostConstants,
+    fault: &FaultProfile,
+    cache: &CostCache,
+) -> CostReport {
+    cost_with(rt, Some(hashes), cfg, cc, k, fault, true, Some(cache))
 }
 
 /// Totals-only costing: identical arithmetic to [`cost_program`] (the
@@ -142,7 +172,18 @@ pub fn cost_total(
     cc: &ClusterConfig,
     k: &CostConstants,
 ) -> f64 {
-    cost_with(rt, None, cfg, cc, k, false, None).total
+    cost_with(rt, None, cfg, cc, k, &FaultProfile::none(), false, None).total
+}
+
+/// [`cost_total`] under a failure model (see [`cost_program_faults`]).
+pub fn cost_total_faults(
+    rt: &RtProgram,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    k: &CostConstants,
+    fault: &FaultProfile,
+) -> f64 {
+    cost_with(rt, None, cfg, cc, k, fault, false, None).total
 }
 
 /// [`cost_total`] with block-level cost caching (see
@@ -156,7 +197,23 @@ pub fn cost_total_cached(
     k: &CostConstants,
     cache: &CostCache,
 ) -> f64 {
-    cost_with(rt, Some(hashes), cfg, cc, k, false, Some(cache)).total
+    cost_with(rt, Some(hashes), cfg, cc, k, &FaultProfile::none(), false, Some(cache)).total
+}
+
+/// [`cost_total_cached`] under a failure model. The fault profile is part
+/// of the knob fingerprint for distributed blocks (see
+/// [`cache::hash_knobs`]), so faulty and fault-free cache entries never
+/// alias and both can share one [`CostCache`].
+pub fn cost_total_cached_faults(
+    rt: &RtProgram,
+    hashes: &ProgramHashes,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    k: &CostConstants,
+    fault: &FaultProfile,
+    cache: &CostCache,
+) -> f64 {
+    cost_with(rt, Some(hashes), cfg, cc, k, fault, false, Some(cache)).total
 }
 
 fn cost_with(
@@ -165,6 +222,7 @@ fn cost_with(
     cfg: &SystemConfig,
     cc: &ClusterConfig,
     k: &CostConstants,
+    fault: &FaultProfile,
     emit_nodes: bool,
     cache: Option<&CostCache>,
 ) -> CostReport {
@@ -172,6 +230,7 @@ fn cost_with(
         cfg,
         cc,
         k,
+        fault,
         funcs: &rt.funcs,
         call_stack: Vec::new(),
         emit_nodes,
@@ -189,6 +248,11 @@ struct Estimator<'a> {
     cfg: &'a SystemConfig,
     cc: &'a ClusterConfig,
     k: &'a CostConstants,
+    /// Failure model applied to distributed-job terms; the identity
+    /// profile (`FaultProfile::none()`) skips the fault arithmetic
+    /// structurally, keeping totals bitwise-identical to a fault-unaware
+    /// walk.
+    fault: &'a FaultProfile,
     funcs: &'a std::collections::BTreeMap<String, RtFunction>,
     call_stack: Vec<String>,
     /// Materialise `CostNode` annotations (labels, rendered instruction
@@ -241,8 +305,14 @@ impl<'a> Estimator<'a> {
         if let Some(fp) = self.knob_fps[idx] {
             return fp;
         }
-        let fp =
-            cache::knob_fingerprint(feats & 0x0F, self.emit_nodes, self.cfg, self.cc, self.k);
+        let fp = cache::knob_fingerprint(
+            feats & 0x0F,
+            self.emit_nodes,
+            self.cfg,
+            self.cc,
+            self.k,
+            self.fault,
+        );
         self.knob_fps[idx] = Some(fp);
         fp
     }
@@ -487,11 +557,12 @@ impl<'a> Estimator<'a> {
             }
             Instr::Cp(c) => self.cost_cp(c, t),
             Instr::MrJob(j) => {
-                let jc = mr::cost_mr_job(j, t, self.cfg, self.cc, self.k);
+                let jc = mr::cost_mr_job_faults(j, t, self.cfg, self.cc, self.k, self.fault);
                 InstCost { mr: Some(jc), ..InstCost::default() }
             }
             Instr::SparkJob(j) => {
-                let jc = spark::cost_spark_job(j, t, self.cfg, self.cc, self.k);
+                let jc =
+                    spark::cost_spark_job_faults(j, t, self.cfg, self.cc, self.k, self.fault);
                 InstCost { spark: Some(jc), ..InstCost::default() }
             }
         }
@@ -1006,6 +1077,68 @@ write(y, $4);
             // warm annotated replay renders the identical costed EXPLAIN
             assert_eq!(explain_costed(&full), explain_costed(&warm), "{}", s.name);
         }
+    }
+
+    /// The tentpole identity guarantee: under `FaultProfile::none()` the
+    /// fault-aware entry points are bitwise-identical to the fault-unaware
+    /// ones, cached or not, and the rendered EXPLAIN matches byte-for-byte.
+    #[test]
+    fn none_fault_profile_costs_bitwise_identical() {
+        let k = CostConstants::default();
+        let none = FaultProfile::none();
+        for s in [Scenario::xs(), Scenario::xl1()] {
+            let opts = CompileOptions::default();
+            let c = s.compile(&opts);
+            let base = cost_program(&c.runtime, &opts.cfg, &opts.cc.0, &k);
+            let faulty = cost_program_faults(&c.runtime, &opts.cfg, &opts.cc.0, &k, &none);
+            assert_eq!(base.total.to_bits(), faulty.total.to_bits(), "{}", s.name);
+            assert_eq!(explain_costed(&base), explain_costed(&faulty), "{}", s.name);
+            assert_eq!(
+                cost_total(&c.runtime, &opts.cfg, &opts.cc.0, &k).to_bits(),
+                cost_total_faults(&c.runtime, &opts.cfg, &opts.cc.0, &k, &none).to_bits(),
+                "{}",
+                s.name
+            );
+            let hashes = cache::program_hashes(&c.runtime);
+            let cache = cache::CostCache::default();
+            let cached =
+                cost_total_cached_faults(&c.runtime, &hashes, &opts.cfg, &opts.cc.0, &k, &none, &cache);
+            assert_eq!(base.total.to_bits(), cached.to_bits(), "{} cached", s.name);
+        }
+    }
+
+    /// A nonzero profile inflates distributed plans but leaves pure-CP
+    /// plans untouched — failures are priced only where tasks can fail.
+    #[test]
+    fn chaos_profile_inflates_distributed_but_not_cp() {
+        let k = CostConstants::default();
+        let chaos = FaultProfile::chaos();
+        let opts = CompileOptions::default();
+        // XS compiles pure-CP: no MR/Spark job instructions to fail
+        let xs = Scenario::xs().compile(&opts);
+        let xs_base = cost_total(&xs.runtime, &opts.cfg, &opts.cc.0, &k);
+        let xs_chaos = cost_total_faults(&xs.runtime, &opts.cfg, &opts.cc.0, &k, &chaos);
+        assert_eq!(xs_base.to_bits(), xs_chaos.to_bits(), "CP plans have no fault terms");
+        // XL1 carries the Figure-5 MR job: chaos must cost strictly more
+        let xl1 = Scenario::xl1().compile(&opts);
+        let xl1_base = cost_total(&xl1.runtime, &opts.cfg, &opts.cc.0, &k);
+        let xl1_chaos = cost_total_faults(&xl1.runtime, &opts.cfg, &opts.cc.0, &k, &chaos);
+        assert!(xl1_chaos > xl1_base, "{xl1_chaos} > {xl1_base}");
+        assert!(xl1_chaos.is_finite());
+        // cached fault-aware costing replays bitwise, and shares a cache
+        // with fault-free entries without aliasing
+        let hashes = cache::program_hashes(&xl1.runtime);
+        let cache = cache::CostCache::default();
+        let cold = cost_total_cached_faults(
+            &xl1.runtime, &hashes, &opts.cfg, &opts.cc.0, &k, &chaos, &cache,
+        );
+        let free = cost_total_cached(&xl1.runtime, &hashes, &opts.cfg, &opts.cc.0, &k, &cache);
+        let warm = cost_total_cached_faults(
+            &xl1.runtime, &hashes, &opts.cfg, &opts.cc.0, &k, &chaos, &cache,
+        );
+        assert_eq!(cold.to_bits(), xl1_chaos.to_bits());
+        assert_eq!(warm.to_bits(), xl1_chaos.to_bits());
+        assert_eq!(free.to_bits(), xl1_base.to_bits(), "fault-free entries must not alias");
     }
 
     #[test]

@@ -6,7 +6,7 @@
 
 use super::vars::{DataState, VarTracker};
 use super::flops;
-use crate::conf::{ClusterConfig, CostConstants, SystemConfig};
+use crate::conf::{ClusterConfig, CostConstants, FaultProfile, SystemConfig};
 use crate::matrix::{Format, MatrixCharacteristics};
 use crate::rtprog::*;
 
@@ -253,6 +253,74 @@ pub fn cost_mr_job(
     c
 }
 
+/// [`cost_mr_job`] expanded to its expectation under a failure model
+/// (the retry-aware extension of Eq. 1):
+///
+/// * **Geometric retries** — every per-task work term (HDFS read, dcache
+///   read, map/reduce compute, shuffle, output write) is multiplied by
+///   `E[attempts] = (1 - p^m)/(1 - p)`, the truncated form of the
+///   geometric `1/(1-p)`: a failed attempt redoes the task's work from
+///   scratch.
+/// * **Backoff latency** — retries wait `backoff_base · 2^(a-1)` before
+///   re-running; the expected wait is added to the latency term once per
+///   task *wave* (`⌈n_tasks / k_eff⌉` waves per phase), since tasks
+///   within a wave back off concurrently.
+/// * **Straggler tail** — a phase does not finish until its slowest
+///   last-wave task does, so the last wave's share of each compute term
+///   (`term / waves`) is inflated by the straggler tail multiplier.
+///   Speculative execution caps the observable slowdown (see
+///   [`FaultProfile::straggler_tail`]) but pays the duplicate work of
+///   the backup copies.
+///
+/// With [`FaultProfile::none`] the fault arithmetic is skipped entirely,
+/// so the breakdown is bitwise-identical to [`cost_mr_job`].
+pub fn cost_mr_job_faults(
+    j: &MrJob,
+    t: &mut VarTracker,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    k: &CostConstants,
+    fp: &FaultProfile,
+) -> MrJobCost {
+    let mut c = cost_mr_job(j, t, cfg, cc, k);
+    if fp.is_none() {
+        return c;
+    }
+    let p = fp.mr_fail_p;
+    let retry = fp.expected_attempts(p);
+    let tail = fp.straggler_tail();
+    // mirror cost_mr_job's effective-parallelism math to count waves
+    let k_map_eff = ((cc.effective_k_map().min(c.n_map) as f64) * k.dop_scale).max(1.0);
+    let k_red_eff = if c.n_red > 0 {
+        ((cc.effective_k_reduce().min(c.n_red) as f64) * k.dop_scale).max(1.0)
+    } else {
+        1.0
+    };
+    let map_waves = (c.n_map as f64 / k_map_eff).ceil().max(1.0);
+    let red_waves = if c.n_red > 0 { (c.n_red as f64 / k_red_eff).ceil().max(1.0) } else { 0.0 };
+    // geometric retries redo per-task work
+    c.hdfs_read *= retry;
+    c.dcache_read *= retry;
+    c.map_exec *= retry;
+    c.shuffle *= retry;
+    c.red_exec *= retry;
+    c.hdfs_write *= retry;
+    // speculative backup copies duplicate the straggling fraction's work
+    if fp.speculative && fp.straggler_frac > 0.0 {
+        let dup = 1.0 + fp.straggler_frac;
+        c.map_exec *= dup;
+        c.red_exec *= dup;
+    }
+    // straggler tail: the last wave finishes at the straggler's pace
+    c.map_exec += c.map_exec / map_waves * (tail - 1.0);
+    if red_waves > 0.0 {
+        c.red_exec += c.red_exec / red_waves * (tail - 1.0);
+    }
+    // expected backoff wait, paid once per wave per phase
+    c.latency += fp.expected_backoff(p) * (map_waves + red_waves);
+    c
+}
+
 /// Resolve per-byte-index characteristics: job inputs then instruction
 /// outputs. Shared with the Spark cost model ([`crate::cost::spark`]),
 /// which uses the same byte-index dataflow encoding.
@@ -417,5 +485,50 @@ mod tests {
         let c = cost_mr_job(&job, &mut t, &cfg, &cc, &k);
         assert!(c.latency >= 20.0, "job latency floor");
         assert!(c.latency / c.total() > 0.95);
+    }
+
+    #[test]
+    fn none_fault_profile_is_bitwise_identity() {
+        let (job, mut t1) = xl1_job();
+        let (_, mut t2) = xl1_job();
+        let (cfg, cc, k) = paper_env();
+        let base = cost_mr_job(&job, &mut t1, &cfg, &cc, &k);
+        let none = cost_mr_job_faults(&job, &mut t2, &cfg, &cc, &k, &FaultProfile::none());
+        assert_eq!(base.total().to_bits(), none.total().to_bits());
+        assert_eq!(base.latency.to_bits(), none.latency.to_bits());
+        assert_eq!(base.map_exec.to_bits(), none.map_exec.to_bits());
+    }
+
+    #[test]
+    fn chaos_profile_inflates_every_retried_term() {
+        let (job, mut t1) = xl1_job();
+        let (_, mut t2) = xl1_job();
+        let (cfg, cc, k) = paper_env();
+        let base = cost_mr_job(&job, &mut t1, &cfg, &cc, &k);
+        let chaos = cost_mr_job_faults(&job, &mut t2, &cfg, &cc, &k, &FaultProfile::chaos());
+        assert!(chaos.total() > base.total());
+        assert!(chaos.hdfs_read > base.hdfs_read, "retries re-read inputs");
+        assert!(chaos.map_exec > base.map_exec, "retries + tail redo compute");
+        assert!(chaos.latency > base.latency, "backoff adds latency");
+        // expectation stays finite and sane
+        assert!(chaos.total().is_finite());
+        let fp = FaultProfile::chaos();
+        let bound = fp.expected_attempts(fp.mr_fail_p) * fp.straggler_tail()
+            * (1.0 + fp.straggler_frac);
+        assert!(chaos.map_exec <= base.map_exec * bound * (1.0 + 1e-12));
+    }
+
+    #[test]
+    fn speculation_caps_the_tail_but_pays_duplicate_work() {
+        let (job, mut t1) = xl1_job();
+        let (_, mut t2) = xl1_job();
+        let (cfg, cc, k) = paper_env();
+        let eager = FaultProfile { speculative: true, ..FaultProfile::chaos() };
+        let lazy = FaultProfile::chaos();
+        let with_spec = cost_mr_job_faults(&job, &mut t1, &cfg, &cc, &k, &eager);
+        let without = cost_mr_job_faults(&job, &mut t2, &cfg, &cc, &k, &lazy);
+        // both price the same retries; they differ only in tail-vs-duplicate
+        assert!(with_spec.total().is_finite() && without.total().is_finite());
+        assert_ne!(with_spec.map_exec.to_bits(), without.map_exec.to_bits());
     }
 }

@@ -19,7 +19,7 @@
 use super::flops;
 use super::mr::{inst_flops, output_groups, resolve_mcs};
 use super::vars::{DataState, VarTracker};
-use crate::conf::{ClusterConfig, CostConstants, SystemConfig};
+use crate::conf::{ClusterConfig, CostConstants, FaultProfile, SystemConfig};
 use crate::matrix::{Format, MatrixCharacteristics};
 use crate::rtprog::*;
 
@@ -272,6 +272,64 @@ pub fn cost_spark_job(
     c
 }
 
+/// [`cost_spark_job`] expanded to its expectation under a failure model —
+/// the Spark twin of [`crate::cost::mr::cost_mr_job_faults`]: geometric
+/// retries multiply per-task work terms, the expected exponential backoff
+/// is added to the latency term once per task wave, and the straggler
+/// tail inflates the last wave's share of the compute term. Spark
+/// re-schedules failed tasks inside running executors, so retries pay no
+/// extra container startup (the latency term is not retried) — but the
+/// per-attempt failure probability is typically *higher* than MR's
+/// (lineage-recomputation on executor loss re-runs whole stages), which
+/// is what makes retry-heavy Spark plans lose to CP under chaos. With
+/// [`FaultProfile::none`] the breakdown is bitwise-identical to
+/// [`cost_spark_job`].
+pub fn cost_spark_job_faults(
+    j: &SparkJob,
+    t: &mut VarTracker,
+    cfg: &SystemConfig,
+    cc: &ClusterConfig,
+    k: &CostConstants,
+    fp: &FaultProfile,
+) -> SparkJobCost {
+    let mut c = cost_spark_job(j, t, cfg, cc, k);
+    if fp.is_none() {
+        return c;
+    }
+    let p = fp.spark_fail_p;
+    let retry = fp.expected_attempts(p);
+    let tail = fp.straggler_tail();
+    // mirror cost_spark_job's effective-parallelism math to count waves
+    let k_slots = cc.k_spark();
+    let k_narrow = ((k_slots.min(c.n_tasks) as f64) * k.dop_scale).max(1.0);
+    let k_wide = if c.n_shuffle_tasks > 0 {
+        ((k_slots.min(c.n_shuffle_tasks) as f64) * k.dop_scale).max(1.0)
+    } else {
+        1.0
+    };
+    let narrow_waves = (c.n_tasks as f64 / k_narrow).ceil().max(1.0);
+    let wide_waves = if c.n_shuffle_tasks > 0 {
+        (c.n_shuffle_tasks as f64 / k_wide).ceil().max(1.0)
+    } else {
+        0.0
+    };
+    // geometric retries redo per-task work
+    c.hdfs_read *= retry;
+    c.broadcast *= retry;
+    c.exec *= retry;
+    c.shuffle *= retry;
+    c.hdfs_write *= retry;
+    // speculative backup copies duplicate the straggling fraction's work
+    if fp.speculative && fp.straggler_frac > 0.0 {
+        c.exec *= 1.0 + fp.straggler_frac;
+    }
+    // straggler tail: the last wave finishes at the straggler's pace
+    c.exec += c.exec / narrow_waves * (tail - 1.0);
+    // expected backoff wait, paid once per wave per stage class
+    c.latency += fp.expected_backoff(p) * (narrow_waves + wide_waves);
+    c
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -465,5 +523,42 @@ mod tests {
         let c = cost_spark_job(&job, &mut t, &cfg, &cc, &k);
         assert!(c.latency < 2.0, "spark floor is small: {}", c.latency);
         assert!(c.total() < 5.0);
+    }
+
+    #[test]
+    fn none_fault_profile_is_bitwise_identity() {
+        let (job, mut t1) = xl1_spark_job();
+        let (_, mut t2) = xl1_spark_job();
+        let (cfg, cc, k) = paper_env();
+        let base = cost_spark_job(&job, &mut t1, &cfg, &cc, &k);
+        let none = cost_spark_job_faults(&job, &mut t2, &cfg, &cc, &k, &FaultProfile::none());
+        assert_eq!(base.total().to_bits(), none.total().to_bits());
+        assert_eq!(base.exec.to_bits(), none.exec.to_bits());
+        assert_eq!(base.latency.to_bits(), none.latency.to_bits());
+    }
+
+    #[test]
+    fn chaos_hits_spark_harder_than_mr_per_attempt() {
+        // The chaos profile's spark_fail_p > mr_fail_p models lineage
+        // recomputation; the relative inflation of the Spark exec term
+        // must exceed MR's under the same profile.
+        let fp = FaultProfile::chaos();
+        let (job, mut t1) = xl1_spark_job();
+        let (_, mut t2) = xl1_spark_job();
+        let (cfg, cc, k) = paper_env();
+        let base = cost_spark_job(&job, &mut t1, &cfg, &cc, &k);
+        let chaos = cost_spark_job_faults(&job, &mut t2, &cfg, &cc, &k, &fp);
+        assert!(chaos.total() > base.total());
+        assert!(chaos.exec > base.exec);
+        assert!(chaos.latency > base.latency, "backoff adds latency");
+        let spark_inflation = chaos.exec / base.exec;
+        assert!(
+            spark_inflation >= fp.expected_attempts(fp.spark_fail_p),
+            "retries then tail: {spark_inflation}"
+        );
+        assert!(
+            fp.expected_attempts(fp.spark_fail_p) > fp.expected_attempts(fp.mr_fail_p),
+            "chaos prices Spark attempts as more failure-prone"
+        );
     }
 }

@@ -29,6 +29,17 @@ pub struct ExecStats {
     pub pjrt_calls: usize,
     pub pool_evictions: usize,
     pub elapsed_secs: f64,
+    /// Injected map-task attempts that failed and were re-executed
+    /// (zero unless fault injection is armed; see
+    /// [`Executor::set_fault_injection`]).
+    pub failed_attempts: usize,
+    /// Injected straggler tasks.
+    pub straggler_tasks: usize,
+    /// Speculative backup copies launched for stragglers.
+    pub speculative_copies: usize,
+    /// Simulated seconds of retry backoff and straggler tail accrued to
+    /// the delay ledger (accounted, never slept).
+    pub fault_delay_secs: f64,
 }
 
 /// The interpreter.
@@ -43,6 +54,18 @@ pub struct Executor<'a> {
     threads: usize,
     /// Adaptive PJRT-vs-native dispatch decisions per kernel key.
     dispatch: std::collections::HashMap<String, bool>,
+    /// Fault-injection profile (none = faithful execution).
+    pub(crate) fault: crate::conf::FaultProfile,
+    /// Base seed of the counter-mode fault RNG (see
+    /// [`crate::util::rng::fault_roll`]).
+    pub(crate) fault_seed: u64,
+    /// Monotone per-run distributed-job counter: the `job` key of the
+    /// fault RNG, so replays are bitwise-stable for a fixed seed no
+    /// matter how `--threads` schedules the task pool.
+    pub(crate) fault_jobs: u64,
+    /// Whether the job currently being simulated came from a Spark
+    /// instruction (selects `spark_fail_p` over `mr_fail_p`).
+    pub(crate) fault_spark: bool,
 }
 
 impl<'a> Executor<'a> {
@@ -63,7 +86,22 @@ impl<'a> Executor<'a> {
             funcs: Default::default(),
             threads: cc.k_local.max(1),
             dispatch: Default::default(),
+            fault: crate::conf::FaultProfile::none(),
+            fault_seed: 0,
+            fault_jobs: 0,
+            fault_spark: false,
         }
+    }
+
+    /// Arm deterministic fault injection: every subsequent distributed
+    /// job draws task failures and stragglers from the counter-mode RNG
+    /// keyed `(seed, job, task, attempt)` — bitwise-identical schedules
+    /// for a fixed seed across thread counts and re-runs. Pass
+    /// [`crate::conf::FaultProfile::none`] to disarm.
+    pub fn set_fault_injection(&mut self, profile: crate::conf::FaultProfile, seed: u64) {
+        self.fault = profile;
+        self.fault_seed = seed;
+        self.fault_jobs = 0;
     }
 
     /// Execute a whole runtime program; returns the stats.
@@ -71,7 +109,8 @@ impl<'a> Executor<'a> {
         self.funcs = rt.funcs.clone();
         let t0 = Instant::now();
         self.exec_blocks(&rt.blocks)?;
-        self.stats.elapsed_secs = t0.elapsed().as_secs_f64();
+        self.stats.elapsed_secs =
+            t0.elapsed().as_secs_f64() + self.stats.fault_delay_secs;
         self.stats.pool_evictions = self.pool.evictions;
         Ok(self.stats.clone())
     }
@@ -88,10 +127,18 @@ impl<'a> Executor<'a> {
         let mut block_secs = Vec::with_capacity(rt.blocks.len());
         for b in &rt.blocks {
             let tb = Instant::now();
+            let ledger0 = self.stats.fault_delay_secs;
             self.exec_block(b)?;
-            block_secs.push(tb.elapsed().as_secs_f64());
+            // Injected retry backoff is accounted, never slept: fold the
+            // block's ledger delta into its measured wall time so the
+            // calibration loop sees what a real cluster would have
+            // waited (zero when fault injection is disarmed).
+            block_secs.push(
+                tb.elapsed().as_secs_f64() + (self.stats.fault_delay_secs - ledger0),
+            );
         }
-        self.stats.elapsed_secs = t0.elapsed().as_secs_f64();
+        self.stats.elapsed_secs =
+            t0.elapsed().as_secs_f64() + self.stats.fault_delay_secs;
         self.stats.pool_evictions = self.pool.evictions;
         Ok((self.stats.clone(), block_secs))
     }
@@ -271,10 +318,9 @@ impl<'a> Executor<'a> {
             }
             Instr::MrJob(j) => {
                 self.stats.mr_jobs += 1;
+                self.fault_spark = false;
                 let report = mr::simulate(j, self)?;
-                self.stats.map_tasks += report.map_tasks;
-                self.stats.shuffle_bytes += report.shuffle_bytes;
-                self.stats.hdfs_read_bytes += report.input_bytes;
+                self.absorb_job_report(&report);
                 Ok(())
             }
             Instr::SparkJob(j) => {
@@ -283,13 +329,23 @@ impl<'a> Executor<'a> {
                 // simulator runs its phase-classified equivalent (costing
                 // uses the native Spark model, never this conversion).
                 self.stats.mr_jobs += 1;
+                self.fault_spark = true;
                 let report = mr::simulate(&j.as_mr_job(), self)?;
-                self.stats.map_tasks += report.map_tasks;
-                self.stats.shuffle_bytes += report.shuffle_bytes;
-                self.stats.hdfs_read_bytes += report.input_bytes;
+                self.fault_spark = false;
+                self.absorb_job_report(&report);
                 Ok(())
             }
         }
+    }
+
+    fn absorb_job_report(&mut self, report: &mr::MrRunReport) {
+        self.stats.map_tasks += report.map_tasks;
+        self.stats.shuffle_bytes += report.shuffle_bytes;
+        self.stats.hdfs_read_bytes += report.input_bytes;
+        self.stats.failed_attempts += report.failed_attempts;
+        self.stats.straggler_tasks += report.stragglers;
+        self.stats.speculative_copies += report.speculative_copies;
+        self.stats.fault_delay_secs += report.fault_delay_secs;
     }
 
     /// Try the PJRT kernel registry; fall back to native Rust kernels.

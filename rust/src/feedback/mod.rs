@@ -36,9 +36,9 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::api::{compile_with_meta, ClusterConfigOpt, CompileOptions};
-use crate::conf::CostConstants;
+use crate::conf::{CostConstants, FaultProfile};
 use crate::cost::cache::{program_hashes, CostCache};
-use crate::cost::{cost_program_cached, cost_total_cached};
+use crate::cost::{cost_program_cached_faults, cost_total_cached_faults};
 use crate::ir::build::StaticMeta;
 use crate::matrix::{Format, MatrixCharacteristics};
 use crate::rtprog::ExecBackend;
@@ -47,7 +47,8 @@ pub use qerror::{qerror, summarize, QErrorSummary};
 pub use records::{BlockClass, BlockRecord, CostBreakdown};
 pub use regression::{fit, repredict, Corrections};
 pub use runner::{
-    bundled_cases, measure_case, simulator_truth, CalibrationCase, MeasureMode, MeasuredCase,
+    bundled_cases, measure_case, measure_case_faults, simulator_truth, CalibrationCase,
+    MeasureMode, MeasuredCase,
 };
 
 /// Options for [`calibrate`].
@@ -76,6 +77,12 @@ pub struct CalibrateOptions {
     /// when calibration succeeds. An explicit path is used as given and
     /// never cleaned up.
     pub scratch: Option<PathBuf>,
+    /// Failure model both sides of the loop run under: executions inject
+    /// deterministic seeded faults, predictions price their retry-aware
+    /// expectation, and the re-optimization re-costs each backend with
+    /// the same profile. [`FaultProfile::none`] (the default) keeps the
+    /// whole pipeline bitwise-identical to fault-unaware calibration.
+    pub fault: FaultProfile,
 }
 
 impl Default for CalibrateOptions {
@@ -87,6 +94,7 @@ impl Default for CalibrateOptions {
             mode: MeasureMode::Execute,
             constants: CostConstants::default(),
             scratch: None,
+            fault: FaultProfile::none(),
         }
     }
 }
@@ -183,6 +191,7 @@ fn default_scratch(seed: u64) -> PathBuf {
 /// module docs for the pipeline.
 pub fn calibrate(opts: &CalibrateOptions) -> Result<CalibrationReport, String> {
     opts.constants.validate()?;
+    opts.fault.validate()?;
     let threads = if opts.threads == 0 {
         crate::util::par::default_threads()
     } else {
@@ -205,11 +214,12 @@ pub fn calibrate(opts: &CalibrateOptions) -> Result<CalibrationReport, String> {
     let cases = bundled_cases(opts.quick);
     let mut measured: Vec<MeasuredCase> = Vec::with_capacity(cases.len());
     for case in &cases {
-        measured.push(measure_case(
+        measured.push(measure_case_faults(
             case,
             opts.mode,
             threads,
             &opts.constants,
+            &opts.fault,
             opts.seed,
             &scratch,
             registry.as_ref(),
@@ -231,7 +241,8 @@ pub fn calibrate(opts: &CalibrateOptions) -> Result<CalibrationReport, String> {
     let after_q_of = |k: &CostConstants| -> Vec<f64> {
         let mut qs = Vec::with_capacity(before_q.len());
         for m in &measured {
-            let rep = cost_program_cached(&m.rt, &m.hashes, &m.cfg, &m.cc, k, &cache);
+            let rep =
+                cost_program_cached_faults(&m.rt, &m.hashes, &m.cfg, &m.cc, k, &opts.fault, &cache);
             for (node, r0) in rep.nodes.iter().zip(&m.records) {
                 qs.push(qerror(node.total(), r0.measured_secs));
             }
@@ -267,7 +278,7 @@ pub fn calibrate(opts: &CalibrateOptions) -> Result<CalibrationReport, String> {
         per_class.push(ClassQError { class, before: summarize(&b), after: summarize(&a) });
     }
 
-    let reopt = reoptimize(&opts.constants, &calibrated, &cache)?;
+    let reopt = reoptimize(&opts.constants, &calibrated, &opts.fault, &cache)?;
     if owns_scratch && executed {
         // Calibration succeeded, so the per-run scratch (measured
         // inputs/outputs) is no longer needed; on failure it is left in
@@ -299,17 +310,24 @@ pub fn calibrate(opts: &CalibrateOptions) -> Result<CalibrationReport, String> {
 /// dop-divided exec win the argmin back. The shape is sized so both
 /// margins are wide (CP beats the Spark latency floor before; an 8-slot
 /// dop beats single-threaded CP by ~4x after).
-const REOPT_CASE: CalibrationCase = CalibrationCase {
+/// Also the scenario `repro chaos` and the chaos integration tests price
+/// failures against: under the in-process [`runner::simulator_truth`]
+/// constants the distributed plans win it fault-free, and the chaos
+/// [`FaultProfile`]'s retry expectation, per-wave backoff and straggler
+/// tail price them back above CP.
+pub const REOPT_CASE: CalibrationCase = CalibrationCase {
     name: "linreg 16384x256",
     script: crate::api::LINREG_DS,
     rows: 16_384,
     cols: 256,
     heap_mb: 0.12,
+    iters: 0,
 };
 
 fn reoptimize(
     k_before: &CostConstants,
     k_after: &CostConstants,
+    fault: &FaultProfile,
     cache: &CostCache,
 ) -> Result<ReoptReport, String> {
     // fixed 8-slot geometry: the report is about constants, not machines
@@ -345,10 +363,24 @@ fn reoptimize(
             );
         let compiled = compile_with_meta(REOPT_CASE.script, &args, &meta, &opts)?;
         let hashes = program_hashes(&compiled.runtime);
-        let before_secs =
-            cost_total_cached(&compiled.runtime, &hashes, &opts.cfg, &cc, k_before, cache);
-        let after_secs =
-            cost_total_cached(&compiled.runtime, &hashes, &opts.cfg, &cc, k_after, cache);
+        let before_secs = cost_total_cached_faults(
+            &compiled.runtime,
+            &hashes,
+            &opts.cfg,
+            &cc,
+            k_before,
+            fault,
+            cache,
+        );
+        let after_secs = cost_total_cached_faults(
+            &compiled.runtime,
+            &hashes,
+            &opts.cfg,
+            &cc,
+            k_after,
+            fault,
+            cache,
+        );
         choices.push(ReoptChoice { backend, before_secs, after_secs });
     }
     let argmin = |f: &dyn Fn(&ReoptChoice) -> f64| {

@@ -21,9 +21,9 @@ use std::collections::HashMap;
 use std::path::Path;
 
 use crate::api::{compile, compile_with_meta, ClusterConfigOpt, CompileOptions, LINREG_DS};
-use crate::conf::{ClusterConfig, CostConstants, SystemConfig, GB, MB};
+use crate::conf::{ClusterConfig, CostConstants, FaultProfile, SystemConfig, GB, MB};
 use crate::cost::cache::{program_hashes, ProgramHashes};
-use crate::cost::cost_program;
+use crate::cost::cost_program_faults;
 use crate::cp::interp::{ExecStats, Executor};
 use crate::ir::build::StaticMeta;
 use crate::matrix::{io, ops, DenseMatrix, Format, MatrixCharacteristics};
@@ -58,25 +58,34 @@ pub struct CalibrationCase {
     pub cols: usize,
     /// Client/task heap in MB; tiny heaps force MR jobs.
     pub heap_mb: f64,
+    /// Value bound to `$3`: the intercept flag for [`LINREG_DS`] /
+    /// [`LOOP_SCRIPT`] (0 = off) or the iteration count for
+    /// [`crate::api::LINREG_CG`].
+    pub iters: usize,
 }
 
 /// The bundled calibration workloads: CP-resident linear regression at
-/// two shapes, an MR-forced shape (heap far below the data size), and a
-/// control-flow loop. `quick` halves the shapes for test/CI budgets.
+/// two shapes, an MR-forced shape (heap far below the data size), a
+/// control-flow loop, and the iterative conjugate-gradient variant
+/// (every iteration touches X twice — the per-iteration job-latency
+/// workload the retry-aware fault pricing leans on). `quick` halves the
+/// shapes for test/CI budgets.
 pub fn bundled_cases(quick: bool) -> Vec<CalibrationCase> {
     if quick {
         vec![
-            CalibrationCase { name: "linreg CP 512x64", script: LINREG_DS, rows: 512, cols: 64, heap_mb: 2048.0 },
-            CalibrationCase { name: "linreg CP 1024x96", script: LINREG_DS, rows: 1024, cols: 96, heap_mb: 2048.0 },
-            CalibrationCase { name: "linreg MR 4096x128", script: LINREG_DS, rows: 4096, cols: 128, heap_mb: 0.12 },
-            CalibrationCase { name: "loop   CP 512x64", script: LOOP_SCRIPT, rows: 512, cols: 64, heap_mb: 2048.0 },
+            CalibrationCase { name: "linreg CP 512x64", script: LINREG_DS, rows: 512, cols: 64, heap_mb: 2048.0, iters: 0 },
+            CalibrationCase { name: "linreg CP 1024x96", script: LINREG_DS, rows: 1024, cols: 96, heap_mb: 2048.0, iters: 0 },
+            CalibrationCase { name: "linreg MR 4096x128", script: LINREG_DS, rows: 4096, cols: 128, heap_mb: 0.12, iters: 0 },
+            CalibrationCase { name: "loop   CP 512x64", script: LOOP_SCRIPT, rows: 512, cols: 64, heap_mb: 2048.0, iters: 0 },
+            CalibrationCase { name: "linreg CG 512x64", script: crate::api::LINREG_CG, rows: 512, cols: 64, heap_mb: 2048.0, iters: 4 },
         ]
     } else {
         vec![
-            CalibrationCase { name: "linreg CP 2048x128", script: LINREG_DS, rows: 2048, cols: 128, heap_mb: 2048.0 },
-            CalibrationCase { name: "linreg CP 4096x256", script: LINREG_DS, rows: 4096, cols: 256, heap_mb: 2048.0 },
-            CalibrationCase { name: "linreg MR 8192x256", script: LINREG_DS, rows: 8192, cols: 256, heap_mb: 0.12 },
-            CalibrationCase { name: "loop   CP 2048x128", script: LOOP_SCRIPT, rows: 2048, cols: 128, heap_mb: 2048.0 },
+            CalibrationCase { name: "linreg CP 2048x128", script: LINREG_DS, rows: 2048, cols: 128, heap_mb: 2048.0, iters: 0 },
+            CalibrationCase { name: "linreg CP 4096x256", script: LINREG_DS, rows: 4096, cols: 256, heap_mb: 2048.0, iters: 0 },
+            CalibrationCase { name: "linreg MR 8192x256", script: LINREG_DS, rows: 8192, cols: 256, heap_mb: 0.12, iters: 0 },
+            CalibrationCase { name: "loop   CP 2048x128", script: LOOP_SCRIPT, rows: 2048, cols: 128, heap_mb: 2048.0, iters: 0 },
+            CalibrationCase { name: "linreg CG 2048x128", script: crate::api::LINREG_CG, rows: 2048, cols: 128, heap_mb: 2048.0, iters: 8 },
         ]
     }
 }
@@ -169,6 +178,26 @@ pub fn measure_case(
     scratch: &Path,
     registry: Option<&KernelRegistry>,
 ) -> Result<MeasuredCase, String> {
+    measure_case_faults(case, mode, threads, k0, &FaultProfile::none(), seed, scratch, registry)
+}
+
+/// [`measure_case`] under a failure profile. Predictions are priced with
+/// the retry-aware cost model; measurements see the same profile —
+/// execute mode arms deterministic fault injection on the interpreter
+/// (failed attempts re-run task bodies, backoff accrues to the measured
+/// block times), simulated mode re-costs the truth profile fault-aware.
+/// [`FaultProfile::none`] is bitwise-identical to [`measure_case`].
+#[allow(clippy::too_many_arguments)]
+pub fn measure_case_faults(
+    case: &CalibrationCase,
+    mode: MeasureMode,
+    threads: usize,
+    k0: &CostConstants,
+    fault: &FaultProfile,
+    seed: u64,
+    scratch: &Path,
+    registry: Option<&KernelRegistry>,
+) -> Result<MeasuredCase, String> {
     let geometry = match mode {
         MeasureMode::Execute => threads.max(1),
         MeasureMode::Simulated { .. } => 8,
@@ -180,7 +209,7 @@ pub fn measure_case(
     match mode {
         MeasureMode::Simulated { noise } => {
             let tag = format!("calib/{}x{}", case.rows, case.cols);
-            let args = case_args(&tag);
+            let args = case_args(&tag, case.iters);
             let meta = StaticMeta::default()
                 .with(
                     &format!("{tag}/X"),
@@ -195,8 +224,9 @@ pub fn measure_case(
             let compiled = compile_with_meta(case.script, &args, &meta, &opts)?;
             let rt = compiled.runtime;
             let hashes = program_hashes(&rt);
-            let report = cost_program(&rt, &opts.cfg, &cc, k0);
-            let truth = cost_program(&rt, &opts.cfg, &cc, &simulator_truth());
+            let report = cost_program_faults(&rt, &opts.cfg, &cc, k0, fault);
+            let truth =
+                cost_program_faults(&rt, &opts.cfg, &cc, &simulator_truth(), fault);
             let mut rng = Rng::new(seed ^ fnv64(case.name));
             let block_secs: Vec<f64> = truth
                 .nodes
@@ -221,13 +251,13 @@ pub fn measure_case(
             let mut args = HashMap::new();
             args.insert(1, xp);
             args.insert(2, yp);
-            args.insert(3, "0".to_string());
+            args.insert(3, case.iters.to_string());
             args.insert(4, scratch.join(format!("out_{tag}")).to_string_lossy().to_string());
 
             let compiled = compile(case.script, &args, &opts)?;
             let rt = compiled.runtime;
             let hashes = program_hashes(&rt);
-            let report = cost_program(&rt, &opts.cfg, &cc, k0);
+            let report = cost_program_faults(&rt, &opts.cfg, &cc, k0, fault);
 
             // Warm run first (adaptive PJRT dispatch settles once per
             // process), then keep the per-block minimum of three
@@ -235,11 +265,13 @@ pub fn measure_case(
             // sees scheduler noise, this just trims the worst of it.
             let scratch_dir = |i: usize| scratch.join(format!("scratch_{tag}_{i}"));
             let mut warm = Executor::new(&opts.cfg, &cc, registry, scratch_dir(0));
+            warm.set_fault_injection(fault.clone(), seed);
             warm.run(&rt).map_err(|e| e.to_string())?;
             let mut best: Vec<f64> = vec![f64::INFINITY; rt.blocks.len()];
             let mut stats = None;
             for i in 1..=3 {
                 let mut exec = Executor::new(&opts.cfg, &cc, registry, scratch_dir(i));
+                exec.set_fault_injection(fault.clone(), seed);
                 let (s, secs) = exec.run_instrumented(&rt).map_err(|e| e.to_string())?;
                 for (b, m) in best.iter_mut().zip(secs) {
                     *b = b.min(m);
@@ -252,12 +284,13 @@ pub fn measure_case(
     }
 }
 
-/// `$N` bindings shared by the bundled scripts.
-fn case_args(tag: &str) -> HashMap<usize, String> {
+/// `$N` bindings shared by the bundled scripts (`$3` is the case's
+/// intercept flag or iteration count).
+fn case_args(tag: &str, iters: usize) -> HashMap<usize, String> {
     let mut args = HashMap::new();
     args.insert(1, format!("{tag}/X"));
     args.insert(2, format!("{tag}/y"));
-    args.insert(3, "0".to_string());
+    args.insert(3, iters.to_string());
     args.insert(4, format!("{tag}/out"));
     args
 }

@@ -23,14 +23,14 @@ use std::collections::HashMap;
 use std::path::Path;
 
 use systemds::api::{
-    compile, compile_with_meta, linreg_cg_args, verify_plan, Artifact, Budget, CacheSnapshot,
-    CalibrationProfile, CompileOptions, Evaluator, ExecBackend, PlanArtifact, Scenario,
-    LINREG_CG, PLAN_FORMAT_VERSION,
+    compile, compile_with_meta, linreg_cg_args, verify_plan_faults, Artifact, Budget,
+    CacheSnapshot, CalibrationProfile, CompileOptions, Evaluator, ExecBackend, PlanArtifact,
+    Scenario, LINREG_CG, PLAN_FORMAT_VERSION,
 };
-use systemds::conf::{ClusterConfig, CostConstants, MB};
+use systemds::conf::{ClusterConfig, CostConstants, FaultProfile, MB};
 use systemds::cost;
-use systemds::cp::interp::Executor;
-use systemds::matrix::Format;
+use systemds::cp::interp::{ExecStats, Executor};
+use systemds::matrix::{io, ops, DenseMatrix, Format};
 use systemds::opt::gdf;
 use systemds::opt::resource;
 use systemds::opt::sweep::{self, heap_clock_clusters, DataScenario, SweepSpec};
@@ -51,16 +51,18 @@ fn main() {
         Some("calibrate") => cmd_calibrate(&args[1..]),
         Some("plan") => cmd_plan(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("chaos") => cmd_chaos(&args[1..]),
         _ => {
             eprintln!(
-                "usage: repro <explain|cost|verify|scenarios|run|resource|resource-opt|sweep|gdf|calibrate|plan|serve> [options]\n\
+                "usage: repro <explain|cost|verify|scenarios|run|resource|resource-opt|sweep|gdf|calibrate|plan|serve|chaos> [options]\n\
                  \n\
                  explain --scenario <xs|xl1..xl4> [--level hops|runtime]\n\
                  \x20       [--backend cp|mr|spark] [--script ds|cg] [--iters N]\n\
                  cost    --scenario <xs|xl1..xl4> [--backend cp|mr|spark]\n\
-                 \x20       [--script ds|cg] [--iters N]\n\
+                 \x20       [--script ds|cg] [--iters N] [--fault-profile SPEC]\n\
                  verify  --scenario <xs|xl1..xl4> [--backend cp|mr|spark]\n\
-                 \x20       [--script ds|cg] [--iters N]   (exit 1 on error diagnostics)\n\
+                 \x20       [--script ds|cg] [--iters N] [--fault-profile SPEC]\n\
+                 \x20       (exit 1 on error diagnostics)\n\
                  scenarios\n\
                  run <script.dml> [-a N=value ...] [--threads T] [--heap-mb H]\n\
                  resource [--scenario <name>] [--script ds|cg] [--iters N]\n\
@@ -68,28 +70,38 @@ fn main() {
                  \x20     [--backends cp,mr,spark] [--threads T] [--no-prune]\n\
                  \x20     [--no-cost-cache] [--all] [--warm-cache F] [--save-cache F]\n\
                  \x20     [--profile F] [--verify] [--budget-ms N] [--budget-candidates N]\n\
+                 \x20     [--fault-profile SPEC]\n\
                  resource-opt --scenario <name> [--heaps 256,512,...]\n\
                  \x20       [--backend cp|mr|spark]\n\
                  sweep [--scenarios xs,xl1,...] [--heaps 512,1024,...]\n\
                  \x20     [--backends cp,mr,spark] [--script ds|cg] [--iters N]\n\
                  \x20     [--threads T] [--serial] [--no-cost-cache]\n\
                  \x20     [--warm-cache F] [--save-cache F] [--profile F] [--verify]\n\
+                 \x20     [--fault-profile SPEC]\n\
                  gdf [--scenario <name>] [--script cg|ds] [--iters N]\n\
                  \x20   [--blocksizes 500,1000,2000] [--formats binaryblock,textcell]\n\
                  \x20   [--partitions 8,32] [--backends cp,mr,spark]\n\
                  \x20   [--threads T] [--no-diff] [--no-cost-cache] [--all]\n\
                  \x20   [--warm-cache F] [--save-cache F] [--profile F] [--verify]\n\
-                 \x20   [--budget-ms N] [--budget-candidates N]\n\
+                 \x20   [--budget-ms N] [--budget-candidates N] [--fault-profile SPEC]\n\
                  calibrate [--quick] [--simulated] [--noise F] [--seed N]\n\
                  \x20         [--threads T] [--scratch DIR] [--profile F]\n\
-                 \x20         [--save-profile F]\n\
+                 \x20         [--save-profile F] [--fault-profile SPEC]\n\
                  plan save <path> [--scenario <name>] [--script cg|ds] [--iters N]\n\
                  \x20              [--backend cp|mr|spark] [--profile F]\n\
                  plan load <path>      (verify; regenerate synthesized data if stale)\n\
                  plan diff <path>      (EXPLAIN diff: stored plan vs fresh compile)\n\
                  serve [--listen ADDR:PORT] [--threads T] [--no-cost-cache]\n\
-                 \x20     [--warm-cache F] [--profile F]   (line protocol on stdin/stdout\n\
-                 \x20     or TCP; see README \"Serving\")"
+                 \x20     [--warm-cache F] [--profile F] [--fault-profile SPEC]\n\
+                 \x20     [--spill-argmin F] [--idle-timeout MS]\n\
+                 \x20     (line protocol on stdin/stdout or TCP; see README \"Serving\")\n\
+                 chaos [--seed N] [--fault-profile SPEC]   (failure-aware argmin-flip\n\
+                 \x20     smoke: price faults, flip the backend choice, confirm by\n\
+                 \x20     executing both winners under injected faults)\n\
+                 \n\
+                 SPEC for --fault-profile: 'none', 'chaos', or key=value pairs\n\
+                 (mr, spark, frac, slow, attempts, backoff, speculative), e.g.\n\
+                 'chaos,spark=0.3' — see docs/COST_MODEL.md \u{00a7}10"
             );
             2
         }
@@ -269,6 +281,20 @@ fn parse_backend_flag(args: &[String]) -> Result<ExecBackend, i32> {
     }
 }
 
+/// Parse `--fault-profile <spec>` (`none`, `chaos`, or a `key=value`
+/// list — see [`FaultProfile::parse`]). Absent flag means the identity
+/// profile, keeping every command bitwise-identical to its fault-unaware
+/// behaviour. `Err` carries the exit code.
+fn parse_fault_flag(args: &[String]) -> Result<FaultProfile, i32> {
+    match flag(args, "--fault-profile") {
+        None => Ok(FaultProfile::none()),
+        Some(spec) => FaultProfile::parse(&spec).map_err(|e| {
+            eprintln!("--fault-profile: {e}");
+            2
+        }),
+    }
+}
+
 /// Parse `--iters N` (default 20, N >= 1). `Err` carries the exit code.
 fn parse_iters_flag(args: &[String]) -> Result<usize, i32> {
     match flag(args, "--iters") {
@@ -337,8 +363,17 @@ fn cmd_cost(args: &[String]) -> i32 {
         Ok(v) => v,
         Err(code) => return code,
     };
-    let report =
-        cost::cost_program(&compiled.runtime, &opts.cfg, &opts.cc.0, &CostConstants::default());
+    let fault = match parse_fault_flag(args) {
+        Ok(f) => f,
+        Err(code) => return code,
+    };
+    let report = cost::cost_program_faults(
+        &compiled.runtime,
+        &opts.cfg,
+        &opts.cc.0,
+        &CostConstants::default(),
+        &fault,
+    );
     print!("{}", cost::explain_costed(&report));
     0
 }
@@ -348,7 +383,11 @@ fn cmd_verify(args: &[String]) -> i32 {
         Ok(v) => v,
         Err(code) => return code,
     };
-    let report = verify_plan(&compiled, &opts);
+    let fault = match parse_fault_flag(args) {
+        Ok(f) => f,
+        Err(code) => return code,
+    };
+    let report = verify_plan_faults(&compiled, &opts, &fault);
     print!("{}", report.render());
     println!("{}", report.summary());
     if report.errors() == 0 {
@@ -572,6 +611,10 @@ fn cmd_resource(args: &[String]) -> i32 {
     if args.iter().any(|a| a == "--verify") {
         grid.verify = true;
     }
+    match parse_fault_flag(args) {
+        Ok(f) => grid.fault = f,
+        Err(code) => return code,
+    }
     match profile_constants_flag(args) {
         Ok(Some(k)) => grid.constants = k,
         Ok(None) => {}
@@ -770,6 +813,10 @@ fn cmd_gdf(args: &[String]) -> i32 {
     if args.iter().any(|a| a == "--verify") {
         spec.verify = true;
     }
+    match parse_fault_flag(args) {
+        Ok(f) => spec.fault = f,
+        Err(code) => return code,
+    }
     match profile_constants_flag(args) {
         Ok(Some(k)) => spec.constants = k,
         Ok(None) => {}
@@ -876,6 +923,10 @@ fn cmd_sweep(args: &[String]) -> i32 {
     if args.iter().any(|a| a == "--verify") {
         spec.verify = true;
     }
+    match parse_fault_flag(args) {
+        Ok(f) => spec.fault = f,
+        Err(code) => return code,
+    }
     match profile_constants_flag(args) {
         Ok(Some(k)) => spec.constants = k,
         Ok(None) => {}
@@ -956,6 +1007,10 @@ fn cmd_calibrate(args: &[String]) -> i32 {
     }
     if let Some(dir) = flag(args, "--scratch") {
         opts.scratch = Some(std::path::PathBuf::from(dir));
+    }
+    match parse_fault_flag(args) {
+        Ok(f) => opts.fault = f,
+        Err(code) => return code,
     }
     // `--profile` continues calibration from an earlier run's calibrated
     // constants instead of the Hadoop-derived defaults.
@@ -1203,6 +1258,16 @@ fn cmd_serve(args: &[String]) -> i32 {
     }
     opts.warm_cache = flag(args, "--warm-cache").map(std::path::PathBuf::from);
     opts.profile = flag(args, "--profile").map(std::path::PathBuf::from);
+    opts.spill_argmin = flag(args, "--spill-argmin").map(std::path::PathBuf::from);
+    match parse_flag::<u64>(args, "--idle-timeout", "a non-negative integer (milliseconds)") {
+        Ok(Some(ms)) => opts.idle_timeout_ms = ms,
+        Ok(None) => {}
+        Err(code) => return code,
+    }
+    match parse_fault_flag(args) {
+        Ok(f) => opts.fault = f,
+        Err(code) => return code,
+    }
     let state = match ServeState::new(&opts) {
         Ok(s) => s,
         Err(e) => {
@@ -1245,6 +1310,206 @@ fn cmd_serve(args: &[String]) -> i32 {
             }
         }
     }
+}
+
+/// Failure-aware argmin-flip smoke (`repro chaos`): cost the bundled
+/// MR-forced calibration scenario once per backend under the in-process
+/// simulator-truth constants — fault-free and with the fault profile
+/// priced in — then confirm the flipped choice by actually executing
+/// both winners under deterministic seeded fault injection.
+///
+/// Fault-free, a distributed plan wins (8 slots, millisecond job
+/// latency); under the chaos profile its retry expectation, backoff
+/// latency and straggler tail price it above the CP plan, so the argmin
+/// flips to `cp` — and the injected execution must show the same
+/// ordering in measured seconds. Exit 0 only when the flip is confirmed
+/// end to end.
+fn cmd_chaos(args: &[String]) -> i32 {
+    let fault = match flag(args, "--fault-profile") {
+        None => FaultProfile::chaos(),
+        Some(spec) => match FaultProfile::parse(&spec) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("--fault-profile: {e}");
+                return 2;
+            }
+        },
+    };
+    if fault.is_none() {
+        eprintln!(
+            "chaos: profile 'none' prices no failures — nothing to flip \
+             (the default is the bundled chaos profile)"
+        );
+        return 2;
+    }
+    let base_seed = match parse_flag::<u64>(args, "--seed", "an unsigned integer") {
+        Ok(Some(n)) => n,
+        Ok(None) => 42,
+        Err(code) => return code,
+    };
+    let case = systemds::feedback::REOPT_CASE;
+    let cc = systemds::feedback::runner::cluster_for(8, &case);
+    let k = systemds::feedback::simulator_truth();
+
+    // Synthesize the scenario's data once; every backend reads it.
+    let scratch = std::env::temp_dir().join(format!("sysds_chaos_{}", std::process::id()));
+    if let Err(e) = std::fs::create_dir_all(&scratch) {
+        eprintln!("chaos: cannot create scratch {}: {e}", scratch.display());
+        return 1;
+    }
+    let x = DenseMatrix::rand(case.rows, case.cols, -1.0, 1.0, 1.0, 42);
+    let beta = DenseMatrix::rand(case.cols, 1, -0.5, 0.5, 1.0, 43);
+    let y = ops::matmult(&x, &beta, 8);
+    let xp = scratch.join("X").to_string_lossy().to_string();
+    let yp = scratch.join("y").to_string_lossy().to_string();
+    for (path, m) in [(&xp, &x), (&yp, &y)] {
+        if let Err(e) = io::write_binary_block(path, m, 1000) {
+            eprintln!("chaos: cannot write scenario data: {e}");
+            return 1;
+        }
+    }
+    let mut script_args: HashMap<usize, String> = HashMap::new();
+    script_args.insert(1, xp);
+    script_args.insert(2, yp);
+    script_args.insert(3, case.iters.to_string());
+    script_args.insert(4, scratch.join("out").to_string_lossy().to_string());
+
+    println!(
+        "chaos scenario: {} (heap {} MB, 8 slots), in-process simulator-truth constants",
+        case.name, case.heap_mb
+    );
+    println!("fault profile: {fault:?}");
+
+    struct Cand {
+        backend: ExecBackend,
+        rt: systemds::rtprog::RtProgram,
+        cfg: systemds::conf::SystemConfig,
+        plain: f64,
+        faulty: f64,
+    }
+    let mut cands: Vec<Cand> = Vec::new();
+    for backend in ExecBackend::all() {
+        let opts = CompileOptions {
+            cc: systemds::api::ClusterConfigOpt(cc.clone()),
+            backend,
+            ..Default::default()
+        };
+        let compiled = match compile(case.script, &script_args, &opts) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("chaos: compile for {}: {e}", backend.name());
+                return 1;
+            }
+        };
+        let plain = cost::cost_total(&compiled.runtime, &opts.cfg, &cc, &k);
+        let faulty = cost::cost_total_faults(&compiled.runtime, &opts.cfg, &cc, &k, &fault);
+        cands.push(Cand { backend, rt: compiled.runtime, cfg: opts.cfg, plain, faulty });
+    }
+    println!("\n{:<6} {:>14} {:>14}", "plan", "fault-free", "fault-aware");
+    for c in &cands {
+        println!(
+            "{:<6} {:>14} {:>14}",
+            c.backend.name(),
+            systemds::util::fmt::fmt_secs(c.plain),
+            systemds::util::fmt::fmt_secs(c.faulty)
+        );
+    }
+    let argmin = |f: &dyn Fn(&Cand) -> f64| -> usize {
+        (0..cands.len()).min_by(|&a, &b| f(&cands[a]).total_cmp(&f(&cands[b]))).unwrap()
+    };
+    let i_plain = argmin(&|c| c.plain);
+    let i_fault = argmin(&|c| c.faulty);
+    let flipped = cands[i_plain].backend != cands[i_fault].backend;
+    println!(
+        "argmin: {} -> {}{}",
+        cands[i_plain].backend.name(),
+        cands[i_fault].backend.name(),
+        if flipped { "  (flipped)" } else { "" }
+    );
+    if !flipped || cands[i_fault].backend != ExecBackend::Cp {
+        eprintln!("chaos: FAIL — pricing the failures did not flip the argmin to cp");
+        return 1;
+    }
+
+    // Execute both winners under injected faults. Seeds are scanned
+    // deterministically from --seed until the distributed schedule fires
+    // at least one retry (each retry accounts >= backoff_base seconds of
+    // ledger delay, so the measured comparison has a real margin).
+    let registry = systemds::runtime::load_registry_or_warn("chaos");
+    let mut run_no = 0usize;
+    let mut run_under = |rt: &systemds::rtprog::RtProgram,
+                         cfg: &systemds::conf::SystemConfig,
+                         seed: u64|
+     -> Result<ExecStats, i32> {
+        run_no += 1;
+        let mut exec =
+            Executor::new(cfg, &cc, registry.as_ref(), scratch.join(format!("run{run_no}")));
+        exec.set_fault_injection(fault.clone(), seed);
+        exec.run(rt).map_err(|e| {
+            eprintln!("chaos: execution error: {e:#}");
+            1
+        })
+    };
+    let (dist, cp) = (&cands[i_plain], &cands[i_fault]);
+    let mut chosen = None;
+    for s in base_seed..base_seed + 16 {
+        let stats = match run_under(&dist.rt, &dist.cfg, s) {
+            Ok(st) => st,
+            Err(code) => return code,
+        };
+        if stats.failed_attempts > 0 {
+            chosen = Some((s, stats));
+            break;
+        }
+    }
+    let Some((seed, d1)) = chosen else {
+        eprintln!(
+            "chaos: FAIL — no retry fired on the {} plan in seeds {base_seed}..{}",
+            dist.backend.name(),
+            base_seed + 16
+        );
+        return 1;
+    };
+    // Bitwise replay: the same seed must reproduce the same schedule.
+    let d2 = match run_under(&dist.rt, &dist.cfg, seed) {
+        Ok(s) => s,
+        Err(code) => return code,
+    };
+    if d1.failed_attempts != d2.failed_attempts
+        || d1.straggler_tasks != d2.straggler_tasks
+        || d1.speculative_copies != d2.speculative_copies
+        || d1.fault_delay_secs.to_bits() != d2.fault_delay_secs.to_bits()
+    {
+        eprintln!("chaos: FAIL — the fault schedule did not replay bitwise across reruns");
+        return 1;
+    }
+    let c1 = match run_under(&cp.rt, &cp.cfg, seed) {
+        Ok(s) => s,
+        Err(code) => return code,
+    };
+    println!("\nexecuted under injected faults (seed {seed}):");
+    let show = |name: &str, s: &ExecStats| {
+        println!(
+            "  {:<6} elapsed {:>10}  ({} failed attempts, {} stragglers, {} speculative, {:.3}s backoff)",
+            name,
+            systemds::util::fmt::fmt_secs(s.elapsed_secs),
+            s.failed_attempts,
+            s.straggler_tasks,
+            s.speculative_copies,
+            s.fault_delay_secs
+        );
+    };
+    show(dist.backend.name(), &d1);
+    show(cp.backend.name(), &c1);
+    if c1.elapsed_secs >= d1.elapsed_secs {
+        eprintln!(
+            "chaos: FAIL — the fault-aware winner (cp) did not run faster under injected faults"
+        );
+        return 1;
+    }
+    println!("\nchaos: OK — pricing failures flips the argmin to cp, and injected execution agrees");
+    let _ = std::fs::remove_dir_all(&scratch);
+    0
 }
 
 #[cfg(test)]

@@ -31,6 +31,81 @@ pub struct MrRunReport {
     pub reduce_groups: usize,
     pub shuffle_bytes: f64,
     pub input_bytes: f64,
+    /// Injected map-task attempts that failed (each failed attempt ran
+    /// the task body and discarded the result, like a re-executed
+    /// Hadoop attempt). Zero unless fault injection is armed.
+    pub failed_attempts: usize,
+    /// Injected straggler tasks.
+    pub stragglers: usize,
+    /// Speculative backup copies launched for stragglers.
+    pub speculative_copies: usize,
+    /// Simulated retry-backoff seconds accrued to the delay ledger
+    /// (accounted so measured times reflect waiting, never slept).
+    pub fault_delay_secs: f64,
+}
+
+/// Deterministic per-task fault schedule, drawn from the counter-mode
+/// RNG before any worker thread starts — the schedule (and therefore
+/// the simulated result and every counter) is bitwise-identical for a
+/// fixed `(seed, job)` regardless of `k_local` or thread interleaving.
+#[derive(Clone, Copy, Debug, Default)]
+struct TaskFaults {
+    /// Failed attempts: the task body runs and its output is discarded.
+    retries: usize,
+    /// Straggler tail re-executions (discarded re-runs that stretch the
+    /// task's wall time by ~`straggler_slowdown`×, or the one backup
+    /// copy under speculative execution).
+    extra_runs: usize,
+    straggler: bool,
+    speculative: bool,
+    /// Retry-backoff seconds (base·2^(a−1) after the a-th failure).
+    delay_secs: f64,
+}
+
+/// Draw the fault schedule for `n_tasks` map tasks of job `job`.
+///
+/// Attempt keys: `0` is reserved for the straggler draw; failure draws
+/// use attempts `1..max_attempts`. The final attempt always completes —
+/// the truncated-geometric expectation the cost model prices,
+/// `E[attempts] = (1−p^m)/(1−p)`, is exactly the mean of this
+/// success-by-the-last-attempt process, so measured and estimated
+/// retry counts agree in distribution.
+fn fault_schedule(
+    fp: &crate::conf::FaultProfile,
+    fail_p: f64,
+    seed: u64,
+    job: u64,
+    n_tasks: usize,
+) -> Vec<TaskFaults> {
+    let mut schedule = vec![TaskFaults::default(); n_tasks];
+    if fp.is_none() || (fail_p <= 0.0 && fp.straggler_frac <= 0.0) {
+        return schedule;
+    }
+    for (t, tf) in schedule.iter_mut().enumerate() {
+        for a in 1..fp.max_attempts as u64 {
+            if crate::util::rng::fault_roll(seed, job, t as u64, a) < fail_p {
+                tf.retries += 1;
+                tf.delay_secs += fp.backoff_base * 2f64.powi(tf.retries as i32 - 1);
+            } else {
+                break;
+            }
+        }
+        if fp.straggler_frac > 0.0
+            && crate::util::rng::fault_roll(seed, job, t as u64, 0) < fp.straggler_frac
+        {
+            tf.straggler = true;
+            if fp.speculative {
+                // One backup copy; the effective slowdown is capped at
+                // 2× (original + backup racing), as the cost model's
+                // speculative tail assumes.
+                tf.speculative = true;
+                tf.extra_runs = 1;
+            } else {
+                tf.extra_runs = (fp.straggler_slowdown.ceil() as usize).saturating_sub(1);
+            }
+        }
+    }
+    schedule
 }
 
 /// Placement of a per-task partial in the final result.
@@ -111,6 +186,19 @@ pub fn simulate(job: &MrJob, exec: &mut Executor) -> Result<MrRunReport> {
     }
     report.map_tasks = tasks.len();
 
+    // ---- fault schedule (drawn before any thread runs; see TaskFaults)
+    let fail_p =
+        if exec.fault_spark { exec.fault.spark_fail_p } else { exec.fault.mr_fail_p };
+    let job_id = exec.fault_jobs;
+    exec.fault_jobs += 1;
+    let schedule = fault_schedule(&exec.fault, fail_p, exec.fault_seed, job_id, tasks.len());
+    for tf in &schedule {
+        report.failed_attempts += tf.retries;
+        report.stragglers += tf.straggler as usize;
+        report.speculative_copies += tf.speculative as usize;
+        report.fault_delay_secs += tf.delay_secs;
+    }
+
     // full-input (non-sliceable) map instructions: datagen, diag
     let mut pre_full: Partials = HashMap::new();
     for inst in &job.map_insts {
@@ -143,17 +231,26 @@ pub fn simulate(job: &MrJob, exec: &mut Executor) -> Result<MrRunReport> {
     partials.lock().unwrap().extend(pre_full);
 
     // run tasks across a worker pool
-    let chunk = (tasks.len() + threads - 1) / threads.max(1);
-    if !tasks.is_empty() {
+    let work: Vec<((usize, usize, usize), TaskFaults)> =
+        tasks.iter().copied().zip(schedule).collect();
+    let chunk = (work.len() + threads - 1) / threads.max(1);
+    if !work.is_empty() {
         std::thread::scope(|s| -> Result<()> {
             let mut handles = Vec::new();
-            for tchunk in tasks.chunks(chunk.max(1)) {
+            for tchunk in work.chunks(chunk.max(1)) {
                 let inputs = &inputs;
                 let partials = &partials;
                 let job_ref = job;
                 let inst_driver = &inst_driver;
                 handles.push(s.spawn(move || -> Result<()> {
-                    for &(input, r0, r1) in tchunk {
+                    for &((input, r0, r1), tf) in tchunk {
+                        // Failed attempts and straggler tail copies run
+                        // the task body for real and discard the output
+                        // — wall time inflates, the dataflow does not.
+                        for _ in 0..tf.retries + tf.extra_runs {
+                            let scrap: Mutex<Partials> = Mutex::new(HashMap::new());
+                            run_map_task(job_ref, inputs, inst_driver, input, r0, r1, &scrap)?;
+                        }
                         run_map_task(job_ref, inputs, inst_driver, input, r0, r1, partials)?;
                     }
                     Ok(())
@@ -535,6 +632,103 @@ mod tests {
         let got = exec.symbols.matrix_data("out", &mut exec.pool).unwrap();
         let expect = ops::tsmm_left(&x, 2);
         assert!(got.max_abs_diff(&expect) < 1e-9);
+    }
+
+    fn tsmm_job() -> MrJob {
+        MrJob {
+            job_type: JobType::Gmr,
+            inputs: vec!["X".into()],
+            dcache: vec![],
+            map_insts: vec![MrInst {
+                op: MrOp::Tsmm { left: true },
+                inputs: vec![0],
+                output: 1,
+                mc: mc(30, 30),
+            }],
+            shuffle_insts: vec![],
+            agg_insts: vec![MrInst {
+                op: MrOp::Agg { kahan: true },
+                inputs: vec![1],
+                output: 2,
+                mc: mc(30, 30),
+            }],
+            other_insts: vec![],
+            outputs: vec!["out".into()],
+            result_indices: vec![2],
+            num_reducers: 4,
+            replication: 1,
+        }
+    }
+
+    #[test]
+    fn fault_injection_replays_bitwise_across_thread_counts() {
+        let cfg = SystemConfig::default();
+        let x = DenseMatrix::rand(200, 30, -1.0, 1.0, 1.0, 5);
+        let job = tsmm_job();
+        let mut runs = Vec::new();
+        for k_local in [1usize, 4] {
+            let mut cc = ClusterConfig::local(k_local, 256.0 * 1024.0 * 1024.0);
+            cc.hdfs_block_bytes = 16.0 * 1024.0;
+            let mut exec = test_exec(&cfg, &cc);
+            exec.set_fault_injection(crate::conf::FaultProfile::chaos(), 42);
+            bind(&mut exec, "X", x.clone());
+            exec.exec_inst(&crate::rtprog::Instr::CreateVar {
+                var: "out".into(),
+                path: String::new(),
+                temp: true,
+                format: Format::BinaryBlock,
+                mc: mc(30, 30),
+            })
+            .unwrap();
+            let report = simulate(&job, &mut exec).unwrap();
+            let out = exec.symbols.matrix_data("out", &mut exec.pool).unwrap();
+            runs.push((report, (*out).clone()));
+        }
+        let (r1, m1) = &runs[0];
+        let (r4, m4) = &runs[1];
+        // schedule is drawn before the pool runs: counters and delay
+        // ledger are identical no matter how many workers execute it
+        assert_eq!(r1.failed_attempts, r4.failed_attempts);
+        assert_eq!(r1.stragglers, r4.stragglers);
+        assert_eq!(r1.speculative_copies, r4.speculative_copies);
+        assert_eq!(r1.fault_delay_secs.to_bits(), r4.fault_delay_secs.to_bits());
+        // chaos has a 10% straggler fraction and 8% failure rate over
+        // many splits: a deterministic seed=42 draw hits at least one
+        assert!(
+            r1.failed_attempts + r1.stragglers > 0,
+            "chaos @ seed 42 drew no faults over {} tasks",
+            r1.map_tasks
+        );
+        // and the simulated result is unchanged by the injected faults
+        // (partials sum in completion order, so equality is numeric,
+        // not bitwise — same tolerance as the fault-free tests)
+        assert!(m1.max_abs_diff(m4) < 1e-9);
+        let expect = ops::tsmm_left(&x, 2);
+        assert!(m1.max_abs_diff(&expect) < 1e-9);
+    }
+
+    #[test]
+    fn disarmed_fault_injection_reports_zero_faults() {
+        let cfg = SystemConfig::default();
+        let cc = tiny_cluster();
+        let mut exec = test_exec(&cfg, &cc);
+        let x = DenseMatrix::rand(200, 30, -1.0, 1.0, 1.0, 5);
+        bind(&mut exec, "X", x.clone());
+        exec.exec_inst(&crate::rtprog::Instr::CreateVar {
+            var: "out".into(),
+            path: String::new(),
+            temp: true,
+            format: Format::BinaryBlock,
+            mc: mc(30, 30),
+        })
+        .unwrap();
+        let report = simulate(&tsmm_job(), &mut exec).unwrap();
+        assert_eq!(report.failed_attempts, 0);
+        assert_eq!(report.stragglers, 0);
+        assert_eq!(report.speculative_copies, 0);
+        assert_eq!(report.fault_delay_secs, 0.0);
+        let got = exec.symbols.matrix_data("out", &mut exec.pool).unwrap();
+        assert!(got.max_abs_diff(&ops::tsmm_left(&x, 2)) < 1e-9);
     }
 
     #[test]

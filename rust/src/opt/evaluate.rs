@@ -49,7 +49,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::api::CompiledProgram;
-use crate::conf::{ClusterConfig, CostConstants, SystemConfig};
+use crate::conf::{ClusterConfig, CostConstants, FaultProfile, SystemConfig};
 use crate::cost::{self, cache};
 use crate::cost::cache::{CacheStats, CostCache, ProgramHashes};
 use crate::util::par;
@@ -66,6 +66,12 @@ pub struct CostContext<'a> {
     pub cc: &'a ClusterConfig,
     /// White-box cost-model constants.
     pub constants: &'a CostConstants,
+    /// Failure profile the candidate is costed under. `FaultProfile::none()`
+    /// keeps costing bitwise-identical to the fault-free model; a nonzero
+    /// profile prices geometric retries, backoff, and straggler tails into
+    /// every distributed job (and into the cost-cache knob fingerprint, so
+    /// faulty and fault-free entries never alias).
+    pub fault: &'a FaultProfile,
 }
 
 /// One candidate of a batch evaluation. Implementations are thin
@@ -485,8 +491,13 @@ impl Evaluator {
                 let hashes = &plan_of[i].0 .1;
                 let ctx = items[i].context();
                 let root = hashes.root();
-                let (c1, c2) =
-                    cache::hash_context(hashes.feats(), ctx.cfg, ctx.cc, ctx.constants);
+                let (c1, c2) = cache::hash_context(
+                    hashes.feats(),
+                    ctx.cfg,
+                    ctx.cc,
+                    ctx.constants,
+                    ctx.fault,
+                );
                 CostKey(root.0, root.1, c1, c2)
             })
             .collect();
@@ -523,15 +534,22 @@ impl Evaluator {
                 let (prog, hashes) = &plan_of[i].0;
                 let ctx = items[i].context();
                 let total = match cache {
-                    Some(cache) => cost::cost_total_cached(
+                    Some(cache) => cost::cost_total_cached_faults(
                         &prog.runtime,
                         hashes,
                         ctx.cfg,
                         ctx.cc,
                         ctx.constants,
+                        ctx.fault,
                         cache,
                     ),
-                    None => cost::cost_total(&prog.runtime, ctx.cfg, ctx.cc, ctx.constants),
+                    None => cost::cost_total_faults(
+                        &prog.runtime,
+                        ctx.cfg,
+                        ctx.cc,
+                        ctx.constants,
+                        ctx.fault,
+                    ),
                 };
                 let (cp, mr, sp) = prog.runtime.size3();
                 Ok(CostStats { total, cp, mr, sp })
@@ -589,6 +607,7 @@ mod tests {
         cfg: SystemConfig,
         cc: ClusterConfig,
         k: CostConstants,
+        fp: FaultProfile,
     }
 
     impl ScenCand {
@@ -599,6 +618,7 @@ mod tests {
                 cfg: SystemConfig::default(),
                 cc: ClusterConfig::paper_cluster(),
                 k: CostConstants::default(),
+                fp: FaultProfile::none(),
             }
         }
     }
@@ -612,7 +632,7 @@ mod tests {
             compile_with_meta(self.s.script(), &self.s.args(), &self.s.meta(1000), &opts)
         }
         fn context(&self) -> CostContext<'_> {
-            CostContext { cfg: &self.cfg, cc: &self.cc, constants: &self.k }
+            CostContext { cfg: &self.cfg, cc: &self.cc, constants: &self.k, fault: &self.fp }
         }
         fn label(&self) -> String {
             self.signature()

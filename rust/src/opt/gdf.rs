@@ -51,7 +51,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::api::{compile_with_groups, ClusterConfigOpt, CompileOptions, CompiledProgram};
-use crate::conf::{ClusterConfig, CostConstants, SystemConfig, MB};
+use crate::conf::{ClusterConfig, CostConstants, FaultProfile, SystemConfig, MB};
 use crate::cost::cache::CacheStats;
 use crate::lop::SelectionHints;
 use crate::matrix::Format;
@@ -86,6 +86,12 @@ pub struct GdfSpec {
     pub hints: SelectionHints,
     /// Cost-model constants shared by all candidates.
     pub constants: CostConstants,
+    /// Failure profile shared by all candidates (`repro gdf
+    /// --fault-profile`). [`FaultProfile::none`] is a bitwise no-op; a
+    /// nonzero profile prices retries, backoff, and straggler tails into
+    /// every distributed candidate, which can flip the per-cut backend
+    /// argmin toward CP (retry-free) groups.
+    pub fault: FaultProfile,
     /// Block-size axis (the default `cfg.blocksize` is always included).
     pub blocksizes: Vec<i64>,
     /// On-disk format axis for the persistent inputs (binary-block is
@@ -132,6 +138,7 @@ impl GdfSpec {
             cfg: SystemConfig::default(),
             hints: SelectionHints::default(),
             constants: CostConstants::default(),
+            fault: FaultProfile::none(),
             blocksizes: vec![500, 1000, 2000],
             formats: vec![Format::BinaryBlock, Format::TextCell],
             partitions_mb: vec![8.0, 32.0],
@@ -160,6 +167,7 @@ impl GdfSpec {
     pub fn validate(&self) -> Result<(), String> {
         self.cc.validate()?;
         self.constants.validate()?;
+        self.fault.validate()?;
         if self.backends.is_empty() {
             return Err("empty GDF backend axis".to_string());
         }
@@ -445,6 +453,7 @@ impl Candidate for GdfCand<'_> {
             cfg: &self.bases[self.cand.base].cfg,
             cc: &self.spec.cc,
             constants: &self.spec.constants,
+            fault: &self.spec.fault,
         }
     }
     fn label(&self) -> String {
@@ -871,11 +880,12 @@ pub fn optimize_with(spec: &GdfSpec, eval: &mut Evaluator) -> Result<GdfReport, 
         } else {
             ExecBackend::Mr
         };
-        let report = crate::analysis::verify(
+        let report = crate::analysis::verify_faults(
             &best_plan.runtime,
             &bases[all_raw[best].base].cfg,
             &spec.cc,
             &spec.constants,
+            &spec.fault,
             vbackend,
         );
         if !report.is_clean() {
@@ -1017,6 +1027,33 @@ mod tests {
         spec.cc.cp_heap_bytes = 0.0;
         let err = optimize(&spec).unwrap_err();
         assert!(err.contains("cp_heap_bytes"), "{err}");
+    }
+
+    #[test]
+    fn fault_profile_inflates_distributed_candidates_only() {
+        let base = optimize(&tiny_spec()).unwrap();
+        // none() is a bitwise no-op on every candidate cost
+        let mut spec = tiny_spec();
+        spec.fault = FaultProfile::none();
+        let none = optimize(&spec).unwrap();
+        for (a, b) in base.candidates.iter().zip(&none.candidates) {
+            assert_eq!(a.cost_secs.to_bits(), b.cost_secs.to_bits(), "{}", a.label());
+        }
+        // chaos strictly inflates candidates with distributed jobs and
+        // leaves pure-CP candidates untouched
+        spec.fault = FaultProfile::chaos();
+        let chaos = optimize(&spec).unwrap();
+        assert_eq!(base.candidates.len(), chaos.candidates.len());
+        for (a, c) in base.candidates.iter().zip(&chaos.candidates) {
+            if c.mr_jobs + c.spark_jobs == 0 {
+                assert_eq!(a.cost_secs.to_bits(), c.cost_secs.to_bits(), "{}", c.label());
+            } else {
+                assert!(c.cost_secs > a.cost_secs, "{} not inflated", c.label());
+            }
+        }
+        // degenerate profiles are rejected up front
+        spec.fault.max_attempts = 0;
+        assert!(optimize(&spec).unwrap_err().contains("FaultProfile"));
     }
 
     #[test]

@@ -43,7 +43,7 @@ use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::api::{compile_with_meta, ClusterConfigOpt, CompileOptions, CompiledProgram};
-use crate::conf::{ClusterConfig, CostConstants, SystemConfig, MB};
+use crate::conf::{ClusterConfig, CostConstants, FaultProfile, SystemConfig, MB};
 use crate::cost;
 use crate::ir::build::MetaProvider;
 use crate::lop::SelectionHints;
@@ -83,6 +83,12 @@ pub struct ResourceGrid {
     pub hints: SelectionHints,
     /// Cost-model constants shared by all points.
     pub constants: CostConstants,
+    /// Failure profile shared by all points (`repro resource
+    /// --fault-profile`). [`FaultProfile::none`] is a bitwise no-op; a
+    /// nonzero profile prices retries, backoff, and straggler tails into
+    /// every distributed point, shifting the argmin and the Pareto
+    /// frontier toward retry-free CP configurations.
+    pub fault: FaultProfile,
     /// Client/task heap axis, MB (plan-shaping: §2 memory budgets).
     pub heaps_mb: Vec<f64>,
     /// Spark executor-memory axis, MB (plan-shaping on Spark only:
@@ -127,6 +133,7 @@ impl ResourceGrid {
             cfg: SystemConfig::default(),
             hints: SelectionHints::default(),
             constants: CostConstants::default(),
+            fault: FaultProfile::none(),
             heaps_mb: vec![512.0, 2048.0, 8192.0],
             exec_mem_mb: vec![2048.0, 20480.0],
             nodes: vec![2, 6],
@@ -144,6 +151,7 @@ impl ResourceGrid {
     pub fn validate(&self) -> Result<(), String> {
         self.base.validate()?;
         self.constants.validate()?;
+        self.fault.validate()?;
         let non_empty = |name: &str, len: usize| {
             if len == 0 {
                 Err(format!("empty resource grid axis: {name}"))
@@ -426,7 +434,12 @@ impl Candidate for PointCand<'_> {
         compile_point(self.spec, self.meta, self.raw)
     }
     fn context(&self) -> CostContext<'_> {
-        CostContext { cfg: &self.spec.cfg, cc: &self.raw.cc, constants: &self.spec.constants }
+        CostContext {
+            cfg: &self.spec.cfg,
+            cc: &self.raw.cc,
+            constants: &self.spec.constants,
+            fault: &self.spec.fault,
+        }
     }
     fn label(&self) -> String {
         format!("grid point {} — degenerate configuration", self.raw.label())
@@ -610,11 +623,12 @@ pub fn optimize_grid_with(
 
     let verify = if spec.verify {
         let plan = plans[best].as_ref().expect("argmin points are costed, so their plan is kept");
-        let report = crate::analysis::verify(
+        let report = crate::analysis::verify_faults(
             &plan.runtime,
             &spec.cfg,
             &raw[best].cc,
             &spec.constants,
+            &spec.fault,
             raw[best].backend,
         );
         if !report.is_clean() {
@@ -893,6 +907,35 @@ mod tests {
         assert_eq!(v.backend, r.best().backend);
         g.verify = false;
         assert!(optimize_grid(&g).unwrap().verify.is_none());
+    }
+
+    #[test]
+    fn fault_profile_shifts_distributed_points_only() {
+        // a 64 MB heap forces XS onto distributed plans, so the grid is
+        // guaranteed to cost at least one point with MR/Spark jobs
+        let mut g = xs_grid();
+        g.heaps_mb = vec![64.0, 2048.0];
+        g.prune = false;
+        let base = optimize_grid(&g).unwrap();
+        g.fault = FaultProfile::chaos();
+        let chaos = optimize_grid(&g).unwrap();
+        // pruning depends on costs, so compare unpruned-in-both points
+        let mut saw_inflated = false;
+        for (a, c) in base.points.iter().zip(&chaos.points) {
+            let (Some(ca), Some(cc_)) = (a.cost_secs, c.cost_secs) else { continue };
+            if c.mr_jobs + c.spark_jobs == 0 {
+                assert_eq!(ca.to_bits(), cc_.to_bits(), "{}", c.label());
+            } else {
+                assert!(cc_ > ca, "{} not inflated", c.label());
+                saw_inflated = true;
+            }
+        }
+        assert!(saw_inflated, "grid should cost at least one distributed point");
+        // XS fits the heap: failure pricing cannot dethrone the CP argmin
+        assert_eq!(chaos.best().backend, ExecBackend::Cp);
+        // degenerate profiles are rejected up front
+        g.fault.straggler_slowdown = 0.5;
+        assert!(optimize_grid(&g).unwrap_err().contains("FaultProfile"));
     }
 
     #[test]

@@ -36,7 +36,7 @@ use crate::api::{
     compile_with_meta, linreg_cg_args, ClusterConfigOpt, CompileOptions, CompiledProgram,
     Scenario, LINREG_CG, LINREG_DS,
 };
-use crate::conf::{ClusterConfig, CostConstants, SystemConfig, MB};
+use crate::conf::{ClusterConfig, CostConstants, FaultProfile, SystemConfig, MB};
 use crate::cost;
 use crate::ir::build::StaticMeta;
 use crate::lop::SelectionHints;
@@ -158,6 +158,11 @@ pub struct SweepSpec {
     pub hints: SelectionHints,
     /// Cost-model constants shared by all cells.
     pub constants: CostConstants,
+    /// Failure profile shared by all cells (`repro sweep
+    /// --fault-profile`). [`FaultProfile::none`] keeps every estimate
+    /// bitwise-identical to fault-free costing; a nonzero profile prices
+    /// retries, backoff, and straggler tails into distributed cells.
+    pub fault: FaultProfile,
     /// Execution-backend axis of the grid (CP / MR / Spark plan
     /// families; `repro sweep --backends cp,mr,spark`).
     pub backends: Vec<ExecBackend>,
@@ -190,6 +195,7 @@ impl SweepSpec {
             cfg: SystemConfig::default(),
             hints: SelectionHints::default(),
             constants: CostConstants::default(),
+            fault: FaultProfile::none(),
             backends: vec![ExecBackend::Mr],
             cost_cache: true,
             threads: 0,
@@ -414,6 +420,7 @@ impl Candidate for CellCand<'_> {
             cfg: &self.spec.cfg,
             cc: &self.spec.clusters[self.ci].cc,
             constants: &self.spec.constants,
+            fault: &self.spec.fault,
         }
     }
     fn label(&self) -> String {
@@ -475,8 +482,13 @@ fn cost_cell(
     sig: &str,
     reused: bool,
 ) -> SweepCell {
-    let report =
-        cost::cost_program(&prog.runtime, &spec.cfg, &spec.clusters[ci].cc, &spec.constants);
+    let report = cost::cost_program_faults(
+        &prog.runtime,
+        &spec.cfg,
+        &spec.clusters[ci].cc,
+        &spec.constants,
+        &spec.fault,
+    );
     let (cp, mr, sp) = prog.runtime.size3();
     let sc = &spec.scenarios[si];
     SweepCell {
@@ -522,7 +534,8 @@ fn validate_spec(spec: &SweepSpec) -> Result<(), String> {
     for c in &spec.clusters {
         c.cc.validate().map_err(|e| format!("cluster '{}': {e}", c.name))?;
     }
-    spec.constants.validate()
+    spec.constants.validate()?;
+    spec.fault.validate()
 }
 
 /// Reject non-finite cost estimates with a diagnostic naming the cell
@@ -597,11 +610,12 @@ pub fn sweep_with(spec: &SweepSpec, eval: &mut Evaluator) -> Result<SweepReport,
     let verify = if spec.verify {
         let win = ranking[0];
         let (ci, _, bi) = grid[win];
-        let report = crate::analysis::verify(
+        let report = crate::analysis::verify_faults(
             &evaluated[win].plan.runtime,
             &spec.cfg,
             &spec.clusters[ci].cc,
             &spec.constants,
+            &spec.fault,
             spec.backends[bi],
         );
         if !report.is_clean() {
@@ -801,6 +815,34 @@ mod tests {
         // without the flag no audit is run
         spec.verify = false;
         assert!(sweep(&spec).unwrap().verify.is_none());
+    }
+
+    #[test]
+    fn fault_profile_prices_failures_in_both_sweep_paths() {
+        // none() must be a bitwise no-op relative to the default spec.
+        let base = sweep(&tiny_spec()).unwrap();
+        let mut spec = tiny_spec();
+        spec.fault = FaultProfile::none();
+        let none = sweep(&spec).unwrap();
+        for (a, b) in base.cells.iter().zip(&none.cells) {
+            assert_eq!(a.cost_secs.to_bits(), b.cost_secs.to_bits(), "{a:?}");
+        }
+        // chaos inflates MR cells, leaves pure-CP cells untouched, and
+        // the serial reference stays bitwise-equal to the parallel path.
+        spec.fault = FaultProfile::chaos();
+        let chaos = sweep(&spec).unwrap();
+        let chaos_serial = sweep_serial(&spec).unwrap();
+        for ((b, c), cs) in base.cells.iter().zip(&chaos.cells).zip(&chaos_serial.cells) {
+            assert_eq!(c.cost_secs.to_bits(), cs.cost_secs.to_bits(), "{c:?}");
+            if c.mr_jobs + c.spark_jobs == 0 {
+                assert_eq!(b.cost_secs.to_bits(), c.cost_secs.to_bits(), "{c:?}");
+            } else {
+                assert!(c.cost_secs > b.cost_secs, "{c:?} vs {b:?}");
+            }
+        }
+        // a degenerate profile is rejected at the entry point
+        spec.fault.mr_fail_p = 1.5;
+        assert!(sweep(&spec).unwrap_err().contains("FaultProfile"));
     }
 
     #[test]

@@ -37,8 +37,8 @@ use crate::api::{
     compile_with_meta, linreg_cg_args, verify_plan, ClusterConfigOpt, CompileOptions,
     CompiledProgram, Scenario, LINREG_CG, LINREG_DS,
 };
-use crate::artifact::Artifact;
-use crate::conf::{ClusterConfig, CostConstants, SystemConfig};
+use crate::artifact::{Artifact, ArgminRow, ArgminTable};
+use crate::conf::{ClusterConfig, CostConstants, FaultProfile, SystemConfig};
 use crate::cost::cache::{CacheStats, CostCache};
 use crate::lop::SelectionHints;
 use crate::matrix::Format;
@@ -69,6 +69,17 @@ pub struct ServeOptions {
     /// Replace the default cost constants with a
     /// [`crate::artifact::CalibrationProfile`]'s (`--profile`).
     pub profile: Option<PathBuf>,
+    /// Failure profile every optimizer request is costed under
+    /// (`--fault-profile`). The default [`FaultProfile::none`] keeps all
+    /// answers bitwise-identical to fault-free costing.
+    pub fault: FaultProfile,
+    /// Spill the backend-argmin table to this path after every insert
+    /// and reload it at boot (`--spill-argmin`). Reloaded keys answer
+    /// the terminal ladder rung with `source=persisted`.
+    pub spill_argmin: Option<PathBuf>,
+    /// Per-connection idle read timeout in milliseconds for TCP serving
+    /// (`--idle-timeout`); `0` disables the timeout.
+    pub idle_timeout_ms: u64,
 }
 
 /// A remembered backend-argmin decision (the terminal ladder rung's
@@ -83,6 +94,9 @@ struct ArgminEntry {
     cp: usize,
     mr: usize,
     spark: usize,
+    /// Whether the entry was reloaded from a `--spill-argmin` artifact
+    /// rather than decided by this process (`source=persisted`).
+    persisted: bool,
 }
 
 /// Long-lived, shareable daemon state: one compile memo, one cost
@@ -91,6 +105,10 @@ pub struct ServeState {
     memo: Arc<PlanMemo>,
     cache: Option<Arc<CostCache>>,
     constants: CostConstants,
+    fault: FaultProfile,
+    spill: Option<PathBuf>,
+    persisted_entries: usize,
+    idle_timeout_ms: u64,
     threads: usize,
     warm_entries: usize,
     calibrated: bool,
@@ -142,21 +160,66 @@ impl ServeState {
                 }
             },
         };
+        opts.fault
+            .validate()
+            .map_err(|e| format!("--fault-profile: {e}"))?;
+        // Reload a spilled argmin table, regenerate-don't-trust: a
+        // missing file is a cold start, a table decided under different
+        // constants or a different failure profile is discarded (its
+        // decisions would be priced wrong, not just stale), and any
+        // other artifact kind at the path is a hard boot error.
+        let mut argmins: HashMap<String, ArgminEntry> = HashMap::new();
+        let mut persisted_entries = 0usize;
+        if let Some(path) = &opts.spill_argmin {
+            if path.exists() {
+                match crate::api::load_artifact(path)? {
+                    Artifact::Argmin(table) => {
+                        if table.context_matches(&constants, &opts.fault) {
+                            for row in &table.rows {
+                                argmins.insert(
+                                    row.key.clone(),
+                                    ArgminEntry {
+                                        backend: row.backend,
+                                        cost_secs: row.cost_secs,
+                                        cp: row.cp,
+                                        mr: row.mr,
+                                        spark: row.spark,
+                                        persisted: true,
+                                    },
+                                );
+                            }
+                            persisted_entries = argmins.len();
+                        }
+                    }
+                    other => {
+                        return Err(format!(
+                            "--spill-argmin: {} holds a '{}' artifact, expected 'argmin'",
+                            path.display(),
+                            other.kind()
+                        ))
+                    }
+                }
+            }
+        }
         Ok(ServeState {
             memo: Arc::new(PlanMemo::new()),
             cache,
             constants,
+            fault: opts.fault.clone(),
+            spill: opts.spill_argmin.clone(),
+            persisted_entries,
+            idle_timeout_ms: opts.idle_timeout_ms,
             threads,
             warm_entries,
             calibrated,
             stats: Mutex::new(ServeStats::default()),
-            argmins: Mutex::new(HashMap::new()),
+            argmins: Mutex::new(argmins),
         })
     }
 
     /// One-line boot banner (stderr, so stdout stays pure protocol).
     pub fn boot_summary(&self) -> String {
-        format!(
+        let mut banner = format!(
             "serve: ready threads={} cache={} constants={}",
             self.threads,
             match (&self.cache, self.warm_entries) {
@@ -165,12 +228,30 @@ impl ServeState {
                 (Some(_), n) => format!("on(warm={n})"),
             },
             if self.calibrated { "calibrated" } else { "default" }
-        )
+        );
+        if !self.fault.is_none() {
+            banner.push_str(" fault=on");
+        }
+        if self.spill.is_some() {
+            banner.push_str(&format!(" argmin=persisted({})", self.persisted_entries));
+        }
+        banner
     }
 
     /// The shared cost cache (`None` under `--no-cost-cache`).
     pub fn cache(&self) -> Option<Arc<CostCache>> {
         self.cache.clone()
+    }
+
+    /// Per-connection idle read timeout (`--idle-timeout`), or `None`
+    /// when disabled (`0`). Transport code applies this to sockets so a
+    /// silent client cannot pin a handler thread forever.
+    pub fn idle_timeout(&self) -> Option<std::time::Duration> {
+        if self.idle_timeout_ms == 0 {
+            None
+        } else {
+            Some(std::time::Duration::from_millis(self.idle_timeout_ms))
+        }
     }
 
     /// Absolute shared-cache counters (zeros when caching is off).
@@ -325,6 +406,7 @@ impl ServeState {
                 cc: ClusterConfig::paper_cluster(),
                 hints: SelectionHints::default(),
                 constants: self.constants.clone(),
+                fault: self.fault.clone(),
             })
             .collect();
         eval.begin_run();
@@ -339,9 +421,35 @@ impl ServeState {
             cp: ev.cp_insts,
             mr: ev.mr_jobs,
             spark: ev.spark_jobs,
+            persisted: false,
         };
         self.lock_argmins().insert(Self::argmin_key(req, scenario), entry);
+        self.spill_argmins();
         Ok(entry)
+    }
+
+    /// Spill the argmin table to the `--spill-argmin` path (atomic
+    /// tmp+rename). Fail-soft: the decision was already made and the
+    /// response must still go out, so a spill error is reported on
+    /// stderr instead of failing the request — the next insert retries.
+    fn spill_argmins(&self) {
+        let Some(path) = &self.spill else { return };
+        let rows: Vec<ArgminRow> = self
+            .lock_argmins()
+            .iter()
+            .map(|(key, e)| ArgminRow {
+                key: key.clone(),
+                backend: e.backend,
+                cost_secs: e.cost_secs,
+                cp: e.cp,
+                mr: e.mr,
+                spark: e.spark,
+            })
+            .collect();
+        let table = ArgminTable::new(self.constants.clone(), self.fault.clone(), rows);
+        if let Err(e) = crate::artifact::save(path, &Artifact::Argmin(table)) {
+            eprintln!("serve: argmin spill failed: {e}");
+        }
     }
 
     fn argmin_response(
@@ -376,6 +484,7 @@ impl ServeState {
             cfg: SystemConfig::default(),
             hints: SelectionHints::default(),
             constants: self.constants.clone(),
+            fault: self.fault.clone(),
             backends: ExecBackend::all().to_vec(),
             cost_cache: true,
             threads: self.threads,
@@ -406,6 +515,7 @@ impl ServeState {
             ReqScript::Ds => GdfSpec::new(LINREG_DS, scenario.args(), dscen),
         };
         spec.constants = self.constants.clone();
+        spec.fault = self.fault.clone();
         spec.threads = self.threads;
         let report = gdf_optimize_with(&spec, eval)?;
         let best = report.best();
@@ -435,6 +545,7 @@ impl ServeState {
     ) -> Result<Response, String> {
         let (source, entry) =
             match self.lock_argmins().get(&Self::argmin_key(req, scenario)).copied() {
+                Some(entry) if entry.persisted => ("persisted", entry),
                 Some(entry) => ("argmin-table", entry),
                 None => ("default-plan", self.default_plan(req, scenario, eval)?),
             };
@@ -467,6 +578,7 @@ impl ServeState {
             cc: ClusterConfig::paper_cluster(),
             hints: SelectionHints::default(),
             constants: self.constants.clone(),
+            fault: self.fault.clone(),
         };
         eval.begin_run();
         let evaluated = eval.evaluate(std::slice::from_ref(&cand))?;
@@ -477,6 +589,7 @@ impl ServeState {
             cp: ev.cp_insts,
             mr: ev.mr_jobs,
             spark: ev.spark_jobs,
+            persisted: false,
         })
     }
 
@@ -606,6 +719,7 @@ struct BackendCand {
     cc: ClusterConfig,
     hints: SelectionHints,
     constants: CostConstants,
+    fault: FaultProfile,
 }
 
 impl Candidate for BackendCand {
@@ -635,7 +749,12 @@ impl Candidate for BackendCand {
         )
     }
     fn context(&self) -> CostContext<'_> {
-        CostContext { cfg: &self.cfg, cc: &self.cc, constants: &self.constants }
+        CostContext {
+            cfg: &self.cfg,
+            cc: &self.cc,
+            constants: &self.constants,
+            fault: &self.fault,
+        }
     }
     fn label(&self) -> String {
         format!("{}@{}", self.scenario.name, self.backend.name())

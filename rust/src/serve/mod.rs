@@ -17,18 +17,27 @@
 //! * [`daemon`] — [`ServeState`]: shared caches, per-request
 //!   evaluators, the budget-driven **one-way downgrade ladder**
 //!   (full → sweep → cached, with machine-readable `downgrade=` reason
-//!   codes), and `--warm-cache` / `--profile` artifact boot.
+//!   codes), and `--warm-cache` / `--profile` / `--spill-argmin`
+//!   artifact boot.
 //! * [`stats`] — observability counters (requests, downgrades by
 //!   reason, cache hit/miss, p50/p99 latency) behind the `stats`
 //!   request.
 //!
-//! Transport is pluggable and trivial: [`serve_lines`] runs the
-//! stdin/stdout session (requests strictly sequential, one response
-//! line per request line, flushed immediately), [`serve_tcp`] accepts
-//! concurrent TCP connections, one thread per connection, all sharing
-//! one [`ServeState`]. `--threads` controls only the per-request
-//! evaluator fan-out — responses are byte-stable across thread counts
-//! (`tests/serve.rs` asserts this).
+//! Transport is pluggable and hardened against misbehaving clients:
+//! [`serve_lines`] runs the line session (requests strictly
+//! sequential, one response line per request line, flushed
+//! immediately) with **bounded line buffering** — a line longer than
+//! [`protocol::MAX_LINE_BYTES`] is drained without buffering and
+//! answered with a [`protocol::CODE_REQUEST_TOO_LARGE`] error instead
+//! of growing memory without limit. [`serve_tcp`] accepts concurrent
+//! TCP connections, one thread per connection, all sharing one
+//! [`ServeState`]; each socket gets the `--idle-timeout` read deadline
+//! (a silent client is closed cleanly, never pinning a handler thread
+//! forever), and [`serve_tcp_until`] adds a graceful drain: stop
+//! accepting when the shutdown flag flips, then join the in-flight
+//! handlers so every accepted request is answered. `--threads`
+//! controls only the per-request evaluator fan-out — responses are
+//! byte-stable across thread counts (`tests/serve.rs` asserts this).
 
 #![warn(missing_docs)]
 
@@ -40,53 +49,251 @@ pub use daemon::{ServeOptions, ServeState};
 pub use protocol::{Request, Response};
 pub use stats::ServeStats;
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
+
+/// One bounded read: a line within the cap, or the byte count of an
+/// oversized line that was drained without being buffered.
+enum BoundedLine {
+    /// A complete line (newline stripped) of at most `cap` bytes.
+    Line(String),
+    /// The line exceeded the cap; it was consumed from the reader (so
+    /// the session can continue at the next line) but never buffered
+    /// beyond the cap. Carries the full line length in bytes.
+    Oversized(usize),
+}
+
+/// Read one newline-terminated line, buffering at most `cap` bytes.
+///
+/// `BufRead::lines` buffers an entire line before returning it, so one
+/// client sending an unbounded line grows daemon memory without limit.
+/// This reader works chunk-by-chunk off `fill_buf`/`consume`: once the
+/// running total passes `cap` the partial buffer is dropped and the
+/// remainder of the line is drained (counted, not stored). Returns
+/// `None` at clean EOF; a final line without a trailing newline is
+/// still delivered.
+fn read_line_bounded(
+    input: &mut impl BufRead,
+    cap: usize,
+) -> std::io::Result<Option<BoundedLine>> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut total = 0usize;
+    let mut oversized = false;
+    let mut saw_any = false;
+    loop {
+        // The chunk borrow must end before `consume`, so compute how
+        // much to take (and copy what we keep) inside this block.
+        let (take, done) = {
+            let chunk = input.fill_buf()?;
+            if chunk.is_empty() {
+                break; // EOF — deliver whatever the line holds so far
+            }
+            saw_any = true;
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(pos) => (pos + 1, true),
+                None => (chunk.len(), false),
+            }
+        };
+        let content = if done { take - 1 } else { take };
+        if !oversized {
+            if total + content > cap {
+                oversized = true;
+                buf.clear();
+            } else {
+                let chunk = input.fill_buf()?;
+                buf.extend_from_slice(&chunk[..content]);
+            }
+        }
+        total += content;
+        input.consume(take);
+        if done {
+            return Ok(Some(finish_line(buf, total, oversized)));
+        }
+    }
+    if !saw_any {
+        return Ok(None);
+    }
+    Ok(Some(finish_line(buf, total, oversized)))
+}
+
+fn finish_line(mut buf: Vec<u8>, total: usize, oversized: bool) -> BoundedLine {
+    if oversized {
+        return BoundedLine::Oversized(total);
+    }
+    if buf.last() == Some(&b'\r') {
+        buf.pop(); // match `BufRead::lines`: CRLF clients see the same grammar
+    }
+    BoundedLine::Line(String::from_utf8_lossy(&buf).into_owned())
+}
 
 /// Run a line-oriented serve session: read request lines from `input`,
 /// write one response line per request to `output` (flushed after each,
 /// so pipes see responses promptly). Requests are handled strictly in
-/// order; blank lines and `#` comments are skipped. Returns when the
-/// input reaches EOF.
+/// order; blank lines and `#` comments are skipped. Lines longer than
+/// [`protocol::MAX_LINE_BYTES`] are drained without buffering and
+/// answered with a stable [`protocol::CODE_REQUEST_TOO_LARGE`] error —
+/// the session continues at the next line. Returns when the input
+/// reaches EOF.
 pub fn serve_lines(
     state: &ServeState,
-    input: impl BufRead,
+    mut input: impl BufRead,
     mut output: impl Write,
 ) -> std::io::Result<()> {
-    for line in input.lines() {
-        let line = line?;
-        if let Some(resp) = state.handle_line(&line) {
-            output.write_all(resp.as_bytes())?;
-            output.write_all(b"\n")?;
-            output.flush()?;
-        }
+    loop {
+        let resp = match read_line_bounded(&mut input, protocol::MAX_LINE_BYTES)? {
+            None => return Ok(()),
+            Some(BoundedLine::Line(line)) => match state.handle_line(&line) {
+                Some(resp) => resp,
+                None => continue,
+            },
+            Some(BoundedLine::Oversized(bytes)) => Response::error(
+                protocol::CODE_REQUEST_TOO_LARGE,
+                &format!(
+                    "request line is {bytes} bytes (cap {})",
+                    protocol::MAX_LINE_BYTES
+                ),
+            )
+            .render(None),
+        };
+        output.write_all(resp.as_bytes())?;
+        output.write_all(b"\n")?;
+        output.flush()?;
     }
-    Ok(())
 }
 
 /// Accept TCP connections forever, one handler thread per connection,
 /// every connection sharing `state` (and therefore the one memo/cache).
 /// Each connection speaks the same line protocol as [`serve_lines`] and
-/// ends at client EOF. Accept errors on one connection are logged to
-/// stderr and do not take the daemon down.
+/// ends at client EOF or after the `--idle-timeout` read deadline.
+/// Accept errors on one connection are logged to stderr and do not take
+/// the daemon down.
 pub fn serve_tcp(state: Arc<ServeState>, listener: TcpListener) -> std::io::Result<()> {
-    loop {
+    serve_tcp_until(state, listener, Arc::new(AtomicBool::new(false)))
+}
+
+/// [`serve_tcp`] with a graceful drain: accept connections until
+/// `shutdown` flips to `true`, then stop accepting and **join every
+/// in-flight handler thread** before returning — accepted requests are
+/// answered, never dropped mid-response. The accept loop polls the flag
+/// at ~10ms granularity (non-blocking accept), so shutdown latency is
+/// the longest in-flight request, not a blocked `accept(2)`.
+pub fn serve_tcp_until(
+    state: Arc<ServeState>,
+    listener: TcpListener,
+    shutdown: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    listener.set_nonblocking(true)?;
+    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !shutdown.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, peer)) => {
+                // Handler I/O is blocking (with an optional read
+                // deadline); only the accept loop polls.
+                if let Err(e) = stream.set_nonblocking(false) {
+                    eprintln!("serve: connection {peer}: {e}");
+                    continue;
+                }
                 let state = Arc::clone(&state);
-                std::thread::spawn(move || {
+                handles.push(std::thread::spawn(move || {
                     if let Err(e) = serve_connection(&state, stream) {
                         eprintln!("serve: connection {peer}: {e}");
                     }
-                });
+                }));
+                handles.retain(|h| !h.is_finished());
             }
-            Err(e) => eprintln!("serve: accept failed: {e}"),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                eprintln!("serve: accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
         }
     }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
 }
 
 fn serve_connection(state: &ServeState, stream: TcpStream) -> std::io::Result<()> {
+    if let Some(deadline) = state.idle_timeout() {
+        stream.set_read_timeout(Some(deadline))?;
+    }
     let reader = BufReader::new(stream.try_clone()?);
-    serve_lines(state, reader, stream)
+    match serve_lines(state, reader, stream) {
+        // An idle-timeout expiry is a clean close, not a failure: the
+        // client simply went silent past the `--idle-timeout` deadline.
+        Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => Ok(()),
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn read_all(text: &str, cap: usize) -> Vec<Result<String, usize>> {
+        let mut input = Cursor::new(text.as_bytes().to_vec());
+        let mut out = Vec::new();
+        while let Some(line) = read_line_bounded(&mut input, cap).unwrap() {
+            out.push(match line {
+                BoundedLine::Line(s) => Ok(s),
+                BoundedLine::Oversized(n) => Err(n),
+            });
+        }
+        out
+    }
+
+    #[test]
+    fn bounded_reader_matches_lines_semantics_within_cap() {
+        assert_eq!(
+            read_all("a\nbb\r\n\nfinal-no-newline", 64),
+            vec![
+                Ok("a".to_string()),
+                Ok("bb".to_string()),
+                Ok(String::new()),
+                Ok("final-no-newline".to_string()),
+            ]
+        );
+        assert_eq!(read_all("", 64), Vec::<Result<String, usize>>::new());
+    }
+
+    #[test]
+    fn oversized_lines_are_drained_not_buffered() {
+        let long = "x".repeat(100);
+        let text = format!("{long}\nok\n");
+        // The oversized line reports its full length and the session
+        // resumes cleanly at the next line.
+        assert_eq!(read_all(&text, 16), vec![Err(100), Ok("ok".to_string())]);
+        // A line exactly at the cap is delivered whole.
+        let exact = "y".repeat(16);
+        let text = format!("{exact}\n");
+        assert_eq!(read_all(&text, 16), vec![Ok(exact)]);
+        // One byte over — even without a trailing newline — is refused.
+        assert_eq!(read_all(&"z".repeat(17), 16), vec![Err(17)]);
+    }
+
+    #[test]
+    fn serve_lines_answers_oversized_requests_with_a_stable_code() {
+        let state = ServeState::new(&ServeOptions::default()).unwrap();
+        let giant = format!("id=r1 cmd=stats pad={}\n", "p".repeat(protocol::MAX_LINE_BYTES));
+        let input = Cursor::new(format!("{giant}id=r2 cmd=stats\n").into_bytes());
+        let mut out = Vec::new();
+        serve_lines(&state, input, &mut out).unwrap();
+        let out = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2, "{out}");
+        assert!(
+            lines[0].contains("ok=false")
+                && lines[0].contains(&format!("code={}", protocol::CODE_REQUEST_TOO_LARGE)),
+            "{}",
+            lines[0]
+        );
+        assert!(lines[1].starts_with("id=r2 ok=true"), "{}", lines[1]);
+    }
 }

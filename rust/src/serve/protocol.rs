@@ -37,6 +37,17 @@ pub const CODE_BAD_VALUE: &str = "bad-value";
 pub const CODE_UNKNOWN_SCENARIO: &str = "unknown-scenario";
 /// The optimizer itself failed (compile error, non-finite cost).
 pub const CODE_OPTIMIZER_ERROR: &str = "optimizer-error";
+/// Request exceeded the line-length or field-count cap. The transport
+/// discards the oversized bytes instead of buffering them, so one
+/// hostile client cannot balloon daemon memory.
+pub const CODE_REQUEST_TOO_LARGE: &str = "request-too-large";
+
+/// Hard cap on one request line, bytes (excluding the newline). Lines
+/// beyond it are drained and answered with
+/// [`CODE_REQUEST_TOO_LARGE`] — never accumulated in memory.
+pub const MAX_LINE_BYTES: usize = 8192;
+/// Hard cap on `key=value` tokens in one request line.
+pub const MAX_FIELDS: usize = 64;
 
 /// `downgrade=` value when the request was answered at full fidelity.
 pub const DOWNGRADE_NONE: &str = "none";
@@ -174,6 +185,21 @@ pub fn sanitize(s: &str) -> String {
 /// Parse and validate one request line. Blank/comment filtering is the
 /// caller's job; `line` must be non-empty.
 pub fn parse_request(line: &str) -> Result<Request, ProtocolError> {
+    if line.len() > MAX_LINE_BYTES {
+        return Err(ProtocolError::new(
+            CODE_REQUEST_TOO_LARGE,
+            format!("request line is {} bytes (cap {MAX_LINE_BYTES})", line.len()),
+        ));
+    }
+    if line.split_whitespace().count() > MAX_FIELDS {
+        return Err(ProtocolError::new(
+            CODE_REQUEST_TOO_LARGE,
+            format!(
+                "request has {} fields (cap {MAX_FIELDS})",
+                line.split_whitespace().count()
+            ),
+        ));
+    }
     let mut req = Request {
         id: None,
         cmd: ReqCmd::Stats,
@@ -402,6 +428,20 @@ mod tests {
             parse_request("cmd=stats cmd=stats").unwrap_err().code,
             CODE_DUPLICATE_KEY
         );
+    }
+
+    #[test]
+    fn oversized_requests_get_a_stable_code() {
+        // byte cap: a single huge token
+        let long = format!("cmd=stats pad={}", "x".repeat(MAX_LINE_BYTES));
+        assert_eq!(parse_request(&long).unwrap_err().code, CODE_REQUEST_TOO_LARGE);
+        // field cap: many tiny duplicate-looking tokens (the size check
+        // must fire before duplicate-key validation walks them all)
+        let wide = ["k=v"; MAX_FIELDS + 1].join(" ");
+        assert_eq!(parse_request(&wide).unwrap_err().code, CODE_REQUEST_TOO_LARGE);
+        // exactly at the field cap the normal validation applies
+        let at_cap = ["k=v"; MAX_FIELDS].join(" ");
+        assert_eq!(parse_request(&at_cap).unwrap_err().code, CODE_DUPLICATE_KEY);
     }
 
     #[test]

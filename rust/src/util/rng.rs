@@ -71,6 +71,29 @@ impl Rng {
     }
 }
 
+/// SplitMix64 finalizer: one stateless avalanche round over a counter.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Counter-mode fault-injection hash: a uniform f64 in `[0, 1)` keyed by
+/// `(seed, job, task, attempt)`. Stateless — every (key, counter) tuple
+/// maps to the same value regardless of evaluation order, which is what
+/// makes fault injection bitwise-stable across `--threads` settings: the
+/// thread that happens to run a task cannot perturb whether it fails.
+/// Built from chained SplitMix64 finalizer rounds (one per key component)
+/// so adjacent counters decorrelate fully.
+pub fn fault_roll(seed: u64, job: u64, task: u64, attempt: u64) -> f64 {
+    let mut z = splitmix64(seed);
+    z = splitmix64(z ^ job.wrapping_mul(0xA24BAED4963EE407));
+    z = splitmix64(z ^ task.wrapping_mul(0x9FB21C651E98DF25));
+    z = splitmix64(z ^ attempt.wrapping_mul(0xD6E8FEB86659FD93));
+    (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,5 +152,33 @@ mod tests {
             seen_hi |= v == 2;
         }
         assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn fault_roll_is_stateless_and_keyed() {
+        // Same key -> same roll, bitwise, in any evaluation order.
+        assert_eq!(
+            fault_roll(42, 3, 17, 1).to_bits(),
+            fault_roll(42, 3, 17, 1).to_bits()
+        );
+        // Each key component perturbs the roll.
+        let base = fault_roll(42, 3, 17, 1);
+        assert_ne!(base.to_bits(), fault_roll(43, 3, 17, 1).to_bits());
+        assert_ne!(base.to_bits(), fault_roll(42, 4, 17, 1).to_bits());
+        assert_ne!(base.to_bits(), fault_roll(42, 3, 18, 1).to_bits());
+        assert_ne!(base.to_bits(), fault_roll(42, 3, 17, 2).to_bits());
+    }
+
+    #[test]
+    fn fault_roll_uniform_in_unit_interval() {
+        let n = 10_000;
+        let mut sum = 0.0;
+        for t in 0..n {
+            let x = fault_roll(7, 0, t, 0);
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
     }
 }

@@ -159,6 +159,7 @@ fn cost_cache_never_serves_stale_totals_after_constants_change() {
         rows: 4096,
         cols: 128,
         heap_mb: 0.12,
+        iters: 0,
     };
     let cc = cluster_for(8, &case);
     let mut args = HashMap::new();

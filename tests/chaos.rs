@@ -1,0 +1,335 @@
+//! Chaos battery for failure-aware costing and deterministic fault
+//! injection (`conf::FaultProfile`, `cost::*_faults`, the `mr::`
+//! simulator's seeded schedules):
+//!
+//! * **The checked-in flip** — under the in-process
+//!   [`simulator_truth`] constants the distributed plans win
+//!   [`REOPT_CASE`] fault-free; pricing the bundled chaos profile flips
+//!   the backend argmin to CP. `repro chaos` (and the CI chaos smoke)
+//!   confirms the same flip by *executing* both winners under injected
+//!   faults; this test pins the pricing side hermetically.
+//! * **Bitwise replay** — a seeded fault schedule is keyed
+//!   `(seed, job, task, attempt)` and drawn before the thread pool
+//!   runs, so whole-program chaos runs report identical counters and
+//!   delay ledgers across worker counts.
+//! * **Disarmed identity** — `FaultProfile::none()` is a no-op both for
+//!   costing (bitwise) and execution (zero counters, empty ledger).
+//! * **Monotonicity property** — expected cost never decreases in the
+//!   per-attempt failure probability or the straggler fraction, for
+//!   random shapes, heaps, and distributed backends.
+
+use std::collections::HashMap;
+
+use systemds::api::{compile, compile_with_meta, ClusterConfigOpt, CompileOptions, Scenario};
+use systemds::conf::{CostConstants, FaultProfile};
+use systemds::cost;
+use systemds::cp::interp::{ExecStats, Executor};
+use systemds::feedback::runner::cluster_for;
+use systemds::feedback::{bundled_cases, simulator_truth, CalibrationCase, REOPT_CASE};
+use systemds::ir::build::StaticMeta;
+use systemds::matrix::{io, ops, DenseMatrix, Format, MatrixCharacteristics};
+use systemds::rtprog::{ExecBackend, RtProgram};
+use systemds::util::prop::forall;
+
+/// Per-test scratch directory (tests run in parallel in one process).
+fn scratch(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("sysds_chaos_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Compile [`REOPT_CASE`] for one backend on the fixed 8-slot geometry
+/// `repro chaos` uses — metadata-only, no data files needed to cost.
+fn compile_reopt(backend: ExecBackend) -> (RtProgram, CompileOptions) {
+    let cc = cluster_for(8, &REOPT_CASE);
+    let opts = CompileOptions {
+        cc: ClusterConfigOpt(cc),
+        backend,
+        ..Default::default()
+    };
+    let mut args = HashMap::new();
+    args.insert(1, "chaos/X".to_string());
+    args.insert(2, "chaos/y".to_string());
+    args.insert(3, "0".to_string());
+    args.insert(4, "chaos/out".to_string());
+    let meta = StaticMeta::default()
+        .with(
+            "chaos/X",
+            MatrixCharacteristics::dense(
+                REOPT_CASE.rows as i64,
+                REOPT_CASE.cols as i64,
+                opts.cfg.blocksize,
+            ),
+            Format::BinaryBlock,
+        )
+        .with(
+            "chaos/y",
+            MatrixCharacteristics::dense(REOPT_CASE.rows as i64, 1, opts.cfg.blocksize),
+            Format::BinaryBlock,
+        );
+    let compiled =
+        compile_with_meta(REOPT_CASE.script, &args, &meta, &opts).expect("compile reopt case");
+    (compiled.runtime, opts)
+}
+
+/// The checked-in chaos scenario: fault-free, a distributed backend wins
+/// `REOPT_CASE` under the in-process constants; priced under the bundled
+/// chaos profile, the argmin flips to CP. The disarmed profile stays
+/// bitwise-invisible and pricing failures never makes a plan cheaper.
+#[test]
+fn chaos_pricing_flips_the_reopt_argmin_to_cp() {
+    let k = simulator_truth();
+    let chaos = FaultProfile::chaos();
+    let mut plain: Vec<(ExecBackend, f64)> = Vec::new();
+    let mut faulty: Vec<(ExecBackend, f64)> = Vec::new();
+    for backend in ExecBackend::all() {
+        let (rt, opts) = compile_reopt(backend);
+        let p = cost::cost_total(&rt, &opts.cfg, &opts.cc.0, &k);
+        let f = cost::cost_total_faults(&rt, &opts.cfg, &opts.cc.0, &k, &chaos);
+        let disarmed =
+            cost::cost_total_faults(&rt, &opts.cfg, &opts.cc.0, &k, &FaultProfile::none());
+        assert_eq!(
+            disarmed.to_bits(),
+            p.to_bits(),
+            "{backend:?}: FaultProfile::none must be bitwise-invisible"
+        );
+        assert!(f >= p, "{backend:?}: pricing failures must never cut cost ({f} < {p})");
+        plain.push((backend, p));
+        faulty.push((backend, f));
+    }
+    let argmin = |v: &[(ExecBackend, f64)]| {
+        v.iter().min_by(|a, b| a.1.total_cmp(&b.1)).expect("three backends").0
+    };
+    let before = argmin(&plain);
+    let after = argmin(&faulty);
+    assert_ne!(
+        before,
+        ExecBackend::Cp,
+        "fault-free argmin must be distributed under simulator-truth constants: {plain:?}"
+    );
+    assert_eq!(
+        after,
+        ExecBackend::Cp,
+        "chaos pricing must flip the argmin to CP: {faulty:?}"
+    );
+    // A pure-CP plan runs no distributed tasks, so there is nothing for
+    // the chaos profile to retry: its price is bitwise unchanged.
+    let cp = |v: &[(ExecBackend, f64)]| {
+        v.iter().find(|(b, _)| *b == ExecBackend::Cp).expect("cp candidate").1
+    };
+    assert_eq!(cp(&plain).to_bits(), cp(&faulty).to_bits());
+}
+
+/// Generate the case's data under `dir`, compile against its bundled
+/// cluster (same shape as `tests/accuracy.rs`), and return the plan.
+fn compile_case(
+    case: &CalibrationCase,
+    dir: &std::path::Path,
+    threads: usize,
+) -> (RtProgram, CompileOptions) {
+    let x = DenseMatrix::rand(case.rows, case.cols, -1.0, 1.0, 1.0, 42);
+    let beta = DenseMatrix::rand(case.cols, 1, -0.5, 0.5, 1.0, 43);
+    let y = ops::matmult(&x, &beta, threads);
+    let xp = dir.join("X").to_string_lossy().to_string();
+    let yp = dir.join("y").to_string_lossy().to_string();
+    io::write_binary_block(&xp, &x, 1000).unwrap();
+    io::write_binary_block(&yp, &y, 1000).unwrap();
+    let mut args = HashMap::new();
+    args.insert(1, xp);
+    args.insert(2, yp);
+    args.insert(3, case.iters.to_string());
+    args.insert(4, dir.join("out").to_string_lossy().to_string());
+    let cc = cluster_for(threads, case);
+    let opts = CompileOptions { cc: ClusterConfigOpt(cc), ..Default::default() };
+    let compiled = compile(case.script, &args, &opts).expect("compile bundled case");
+    (compiled.runtime, opts)
+}
+
+/// The bundled distributed calibration case (tiny task heap, so the
+/// whole LinReg pipeline runs as simulated MR jobs).
+fn mr_case() -> CalibrationCase {
+    let case = bundled_cases(true)[2];
+    assert!(case.heap_mb < 1.0, "expected the tiny-heap MR case, got {case:?}");
+    case
+}
+
+/// Deterministic counters of one armed whole-program run.
+fn chaos_counters(stats: &ExecStats) -> (usize, usize, usize, u64) {
+    (
+        stats.failed_attempts,
+        stats.straggler_tasks,
+        stats.speculative_copies,
+        stats.fault_delay_secs.to_bits(),
+    )
+}
+
+/// Whole-program chaos runs replay bitwise across worker counts: the
+/// fault schedule is keyed `(seed, job, task, attempt)` and drawn before
+/// the pool runs, so only wall-clock may differ between a 1-thread and a
+/// 4-thread execution of the same plan — and some seed in a short
+/// deterministic scan must actually inject events.
+#[test]
+fn program_fault_schedule_replays_bitwise_across_thread_counts() {
+    let case = mr_case();
+    let dir = scratch("replay");
+    let (rt, opts) = compile_case(&case, &dir, 4);
+    let chaos = FaultProfile::chaos();
+    let run = |threads: usize, seed: u64, tag: &str| -> ExecStats {
+        let cc = cluster_for(threads, &case);
+        let mut exec = Executor::new(&opts.cfg, &cc, None, dir.join(tag));
+        exec.set_fault_injection(chaos.clone(), seed);
+        exec.run(&rt).expect("chaos run completes")
+    };
+    let mut hit = None;
+    for seed in 42..42 + 16 {
+        let s1 = run(1, seed, &format!("t1_s{seed}"));
+        let s4 = run(4, seed, &format!("t4_s{seed}"));
+        assert_eq!(
+            chaos_counters(&s1),
+            chaos_counters(&s4),
+            "seed {seed}: counters and delay ledger must replay bitwise across threads"
+        );
+        assert_eq!(s1.mr_jobs, s4.mr_jobs);
+        assert_eq!(s1.map_tasks, s4.map_tasks);
+        if s1.failed_attempts > 0 {
+            hit = Some((seed, s1));
+            break;
+        }
+    }
+    let (seed, s1) = hit.expect("chaos at 8% per-attempt failure must hit within 16 seeds");
+    // A failed attempt pays at least one backoff interval into the
+    // simulated delay ledger.
+    assert!(
+        s1.fault_delay_secs >= chaos.backoff_base,
+        "seed {seed}: {} failed attempts accrued only {}s of delay",
+        s1.failed_attempts,
+        s1.fault_delay_secs
+    );
+    // Replaying the exact run reproduces the exact schedule.
+    let again = run(1, seed, &format!("t1_s{seed}_again"));
+    assert_eq!(chaos_counters(&s1), chaos_counters(&again));
+}
+
+/// Arming the executor with the disarmed profile is indistinguishable
+/// from never arming it: zero fault counters, empty delay ledger, and
+/// identical deterministic work counters.
+#[test]
+fn disarmed_profile_executes_identically_to_no_injection() {
+    let case = mr_case();
+    let dir = scratch("disarmed");
+    let (rt, opts) = compile_case(&case, &dir, 2);
+    let cc = cluster_for(2, &case);
+
+    let mut plain = Executor::new(&opts.cfg, &cc, None, dir.join("plain"));
+    let sp = plain.run(&rt).expect("plain run completes");
+
+    let mut armed = Executor::new(&opts.cfg, &cc, None, dir.join("armed"));
+    armed.set_fault_injection(FaultProfile::none(), 42);
+    let sa = armed.run(&rt).expect("disarmed run completes");
+
+    for s in [&sp, &sa] {
+        assert_eq!(s.failed_attempts, 0);
+        assert_eq!(s.straggler_tasks, 0);
+        assert_eq!(s.speculative_copies, 0);
+        assert_eq!(s.fault_delay_secs, 0.0);
+    }
+    assert_eq!(sp.cp_insts, sa.cp_insts);
+    assert_eq!(sp.mr_jobs, sa.mr_jobs);
+    assert_eq!(sp.map_tasks, sa.map_tasks);
+    assert_eq!(sp.shuffle_bytes.to_bits(), sa.shuffle_bytes.to_bits());
+    assert_eq!(sp.hdfs_read_bytes.to_bits(), sa.hdfs_read_bytes.to_bits());
+    assert_eq!(sp.hdfs_write_bytes.to_bits(), sa.hdfs_write_bytes.to_bits());
+}
+
+/// Compile one LinReg plan for a random shape/heap/backend (same helper
+/// shape as `tests/properties.rs`).
+fn compile_random_backend(
+    rows: i64,
+    cols: i64,
+    heap_mb: f64,
+    backend: ExecBackend,
+) -> (RtProgram, CompileOptions) {
+    use systemds::conf::{ClusterConfig, SystemConfig, MB};
+    let mut cc = ClusterConfig::paper_cluster();
+    cc.cp_heap_bytes = heap_mb * MB;
+    cc.map_heap_bytes = heap_mb * MB;
+    let opts = CompileOptions {
+        cc: ClusterConfigOpt(cc),
+        cfg: SystemConfig::default(),
+        backend,
+        ..Default::default()
+    };
+    let meta = StaticMeta::default()
+        .with("data/X", MatrixCharacteristics::dense(rows, cols, 1000), Format::BinaryBlock)
+        .with("data/y", MatrixCharacteristics::dense(rows, 1, 1000), Format::BinaryBlock);
+    let c = compile_with_meta(
+        systemds::api::LINREG_DS,
+        &Scenario::xs().args(),
+        &meta,
+        &opts,
+    )
+    .expect("compile random scenario");
+    (c.runtime, opts)
+}
+
+/// Expected cost under failures is monotone: raising the per-attempt
+/// failure probability or the straggler fraction never makes a plan
+/// cheaper, and the disarmed profile is the bitwise anchor of the
+/// ladder — for random shapes, heaps, and distributed backends.
+#[test]
+fn prop_fault_pricing_is_monotone_in_failure_severity() {
+    let k = CostConstants::default();
+    forall(
+        12,
+        0xFA17,
+        |rng| {
+            let rows = 512 + rng.below(8192) as i64;
+            let cols = 32 + rng.below(224) as i64;
+            let heap_mb = if rng.below(2) == 0 { 0.12 } else { 64.0 };
+            let backend =
+                if rng.below(2) == 0 { ExecBackend::Mr } else { ExecBackend::Spark };
+            let p_lo = rng.below(10) as f64 / 100.0;
+            let p_hi = p_lo + 0.05 + rng.below(10) as f64 / 100.0;
+            let frac = rng.below(30) as f64 / 100.0;
+            (rows, cols, heap_mb, backend, p_lo, p_hi, frac)
+        },
+        |&(rows, cols, heap_mb, backend, p_lo, p_hi, frac)| {
+            let (rt, opts) = compile_random_backend(rows, cols, heap_mb, backend);
+            let total = |fault: &FaultProfile| {
+                cost::cost_total_faults(&rt, &opts.cfg, &opts.cc.0, &k, fault)
+            };
+            let fail_only = |p: f64| FaultProfile {
+                mr_fail_p: p,
+                spark_fail_p: p,
+                max_attempts: 4,
+                backoff_base: 0.5,
+                ..FaultProfile::none()
+            };
+            let base = cost::cost_total(&rt, &opts.cfg, &opts.cc.0, &k);
+            let anchored = total(&FaultProfile::none());
+            if anchored.to_bits() != base.to_bits() {
+                return Err(format!("none() not bitwise-invisible: {anchored} vs {base}"));
+            }
+            let lo = total(&fail_only(p_lo));
+            let hi = total(&fail_only(p_hi));
+            if lo < base || hi < lo {
+                return Err(format!(
+                    "cost not monotone in failure probability: base {base}, p={p_lo} -> {lo}, p={p_hi} -> {hi}"
+                ));
+            }
+            let straggly = |f: f64| FaultProfile {
+                straggler_frac: f,
+                straggler_slowdown: 4.0,
+                ..FaultProfile::none()
+            };
+            let tail = total(&straggly(frac));
+            let taller = total(&straggly((frac + 0.2).min(1.0)));
+            if tail < base || taller < tail {
+                return Err(format!(
+                    "cost not monotone in straggler fraction: base {base}, frac={frac} -> {tail}, frac+0.2 -> {taller}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}

@@ -27,8 +27,9 @@ use systemds::api::{
     MeasureMode, ResourceGrid, Scenario, BUDGET_ERROR_PREFIX, BUDGET_REASON_CANDIDATES,
     BUDGET_REASON_DEADLINE, LINREG_CG,
 };
+use systemds::api::FaultProfile;
 use systemds::opt::{gdf, resource};
-use systemds::serve::{serve_lines, ServeOptions, ServeState};
+use systemds::serve::{serve_lines, serve_tcp_until, ServeOptions, ServeState};
 use systemds::util::prop::forall;
 
 // ---------------------------------------------------------------------
@@ -114,10 +115,13 @@ fn normalize(line: &str) -> String {
 /// ([`serve_lines`]) on a fresh state and return normalized response
 /// lines.
 fn run_transcript(threads: usize) -> Vec<String> {
-    let state = state(threads);
+    run_transcript_on(&state(threads))
+}
+
+fn run_transcript_on(state: &ServeState) -> Vec<String> {
     let input = TRANSCRIPT.join("\n");
     let mut out: Vec<u8> = Vec::new();
-    serve_lines(&state, std::io::Cursor::new(input), &mut out).expect("in-memory serve session");
+    serve_lines(state, std::io::Cursor::new(input), &mut out).expect("in-memory serve session");
     String::from_utf8(out)
         .expect("responses are utf-8")
         .lines()
@@ -477,6 +481,231 @@ fn resource_deadline_budget_fails_soft() {
         .expect_err("expired deadline must trip the run");
     assert_eq!(budget_error_reason(&err), Some(BUDGET_REASON_DEADLINE), "{err}");
     assert_eq!(eval.distinct_plans(), 0, "no plan may be compiled after expiry");
+}
+
+// ---------------------------------------------------------------------
+// Chaos + crash safety (`--fault-profile`, `--spill-argmin`,
+// `--idle-timeout`)
+// ---------------------------------------------------------------------
+
+/// The full golden transcript served under the bundled chaos profile:
+/// still one well-formed response per request, byte-stable across
+/// thread counts, snapshotted separately (bless-on-first-run) because
+/// fault-aware costs differ from the fault-free transcript.
+#[test]
+fn chaos_transcript_is_byte_stable_across_threads() {
+    let chaos_state = |threads: usize| {
+        ServeState::new(&ServeOptions {
+            threads,
+            fault: FaultProfile::chaos(),
+            ..Default::default()
+        })
+        .expect("chaos serve state boots")
+    };
+    let s1 = chaos_state(1);
+    assert!(s1.boot_summary().contains("fault=on"), "{}", s1.boot_summary());
+    let t1 = run_transcript_on(&s1);
+    let t4 = run_transcript_on(&chaos_state(4));
+    assert_eq!(t1, t4, "chaos responses must be byte-stable across --threads");
+    for line in &t1 {
+        assert!(
+            field(line, "ok").is_some(),
+            "every chaos response must be well-formed: {line}"
+        );
+    }
+
+    let rendered = t1.join("\n") + "\n";
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../tests/golden/serve_transcript_chaos.txt");
+    if !path.exists() {
+        std::fs::create_dir_all(path.parent().expect("golden dir")).expect("create golden dir");
+        std::fs::write(&path, &rendered).expect("write chaos transcript");
+        eprintln!("blessed new golden snapshot: {}", path.display());
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).expect("read chaos transcript");
+    assert_eq!(
+        rendered,
+        expected,
+        "chaos serve transcript diverged from {} — delete the snapshot and re-run to re-bless",
+        path.display()
+    );
+}
+
+/// Ladder property under deadline jitter and fault profiles: budgeted
+/// requests always descend the one-way ladder to `level=cached` with
+/// the same machine-readable reason trail, bitwise-identically across
+/// repeats, thread counts, and the fault dimension — the profile may
+/// change costs, never outcomes or reason codes.
+#[test]
+fn prop_downgrade_ladder_is_stable_under_jitter_and_faults() {
+    let requests = [
+        ("cmd=sweep id=j1 scenario=xs budget_ms=0", "deadline,deadline"),
+        ("cmd=gdf id=j2 scenario=xs script=cg iters=2 budget_candidates=1", "candidates,candidates"),
+        ("cmd=gdf id=j3 scenario=xs script=cg iters=2 budget_ms=0", "deadline,deadline"),
+    ];
+    forall(
+        8,
+        0xDE1A7,
+        |rng| {
+            let chaos = rng.below(2) == 1;
+            let threads = 1 + rng.below(3) as usize;
+            let which = rng.below(requests.len() as u64) as usize;
+            (chaos, threads, which)
+        },
+        |&(chaos, threads, which)| {
+            let fault =
+                if chaos { FaultProfile::chaos() } else { FaultProfile::none() };
+            let st = ServeState::new(&ServeOptions { threads, fault, ..Default::default() })
+                .map_err(|e| format!("boot: {e}"))?;
+            let (req, trail) = requests[which];
+            let first = st.handle_line(req).ok_or("no response")?;
+            if field(&first, "ok") != Some("true") {
+                return Err(format!("budgeted request must fail soft: {first}"));
+            }
+            if field(&first, "level") != Some("cached") {
+                return Err(format!("ladder must land on the terminal rung: {first}"));
+            }
+            if field(&first, "downgrade") != Some(trail) {
+                return Err(format!("reason trail must be {trail}: {first}"));
+            }
+            for _ in 0..2 {
+                let again = st.handle_line(req).ok_or("no response")?;
+                if again != first {
+                    return Err(format!("replay drifted:\n{first}\nvs\n{again}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Crash safety: a daemon with `--spill-argmin` persists its terminal
+/// rung. A second boot on the same path reloads the table
+/// (`argmin=persisted(n)` in the banner) and answers forced-downgrade
+/// requests from it with `source=persisted`, bitwise-identical to the
+/// pre-restart decision.
+#[test]
+fn spilled_argmin_survives_a_daemon_restart_bitwise() {
+    let path = tmp("restart.argmin");
+    let _ = std::fs::remove_file(&path);
+    let boot = || {
+        ServeState::new(&ServeOptions {
+            threads: 1,
+            spill_argmin: Some(path.clone()),
+            ..Default::default()
+        })
+        .expect("spill serve state boots")
+    };
+
+    let a = boot();
+    let decided = a.handle_line("cmd=optimize id=o scenario=xs").expect("response");
+    assert_eq!(field(&decided, "ok"), Some("true"));
+    assert!(path.exists(), "argmin table must spill after the decision");
+    let own = a.handle_line("cmd=sweep id=c1 scenario=xs budget_ms=0").expect("response");
+    assert_eq!(field(&own, "source"), Some("argmin-table"));
+    drop(a);
+
+    let b = boot();
+    assert!(
+        b.boot_summary().contains("argmin=persisted(1)"),
+        "restarted banner must report the reloaded table: {}",
+        b.boot_summary()
+    );
+    let replay = b.handle_line("cmd=sweep id=c2 scenario=xs budget_ms=0").expect("response");
+    assert_eq!(field(&replay, "ok"), Some("true"));
+    assert_eq!(field(&replay, "level"), Some("cached"));
+    assert_eq!(field(&replay, "source"), Some("persisted"));
+    assert_eq!(
+        field(&replay, "cost_bits"),
+        field(&decided, "cost_bits"),
+        "restart must answer bitwise-identically from the persisted table"
+    );
+    assert_eq!(field(&replay, "backend"), field(&decided, "backend"));
+}
+
+/// Regenerate-don't-trust: a spilled table decided under a different
+/// failure profile is priced wrong, not merely stale — the boot
+/// discards it and the terminal rung re-decides.
+#[test]
+fn stale_spilled_argmin_is_discarded_at_boot() {
+    let path = tmp("stale.argmin");
+    let _ = std::fs::remove_file(&path);
+    let a = ServeState::new(&ServeOptions {
+        threads: 1,
+        spill_argmin: Some(path.clone()),
+        ..Default::default()
+    })
+    .expect("spill serve state boots");
+    a.handle_line("cmd=optimize id=o scenario=xs").expect("response");
+    drop(a);
+
+    let b = ServeState::new(&ServeOptions {
+        threads: 1,
+        spill_argmin: Some(path),
+        fault: FaultProfile::chaos(),
+        ..Default::default()
+    })
+    .expect("chaos spill serve state boots");
+    assert!(
+        b.boot_summary().contains("argmin=persisted(0)"),
+        "mismatched-context table must be discarded: {}",
+        b.boot_summary()
+    );
+    let resp = b.handle_line("cmd=sweep id=c scenario=xs budget_ms=0").expect("response");
+    assert_eq!(field(&resp, "source"), Some("default-plan"));
+}
+
+/// `--idle-timeout` on the TCP transport: a client that goes silent
+/// past the deadline is closed cleanly (EOF on the client side, no
+/// pinned handler thread), and the graceful drain still joins.
+#[test]
+fn idle_timeout_closes_silent_tcp_connections_cleanly() {
+    use std::io::{BufRead, BufReader, ErrorKind, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let state = Arc::new(
+        ServeState::new(&ServeOptions {
+            threads: 1,
+            idle_timeout_ms: 200,
+            ..Default::default()
+        })
+        .expect("serve state boots"),
+    );
+    assert_eq!(state.idle_timeout(), Some(std::time::Duration::from_millis(200)));
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+    let addr = listener.local_addr().expect("local addr");
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let server = {
+        let state = Arc::clone(&state);
+        let shutdown = Arc::clone(&shutdown);
+        std::thread::spawn(move || serve_tcp_until(state, listener, shutdown))
+    };
+
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    conn.write_all(b"cmd=stats id=t1\n").expect("send request");
+    let mut reader = BufReader::new(conn.try_clone().expect("clone socket"));
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("read response");
+    assert!(line.starts_with("id=t1 ok=true"), "{line}");
+
+    // Go silent past the deadline: the daemon closes the socket, so the
+    // next read sees EOF (or a reset, depending on the platform).
+    line.clear();
+    match reader.read_line(&mut line) {
+        Ok(n) => assert_eq!(n, 0, "idle connection must be closed, got {line:?}"),
+        Err(e) => assert!(
+            matches!(e.kind(), ErrorKind::ConnectionReset | ErrorKind::ConnectionAborted),
+            "unexpected error from closed socket: {e}"
+        ),
+    }
+
+    shutdown.store(true, Ordering::SeqCst);
+    server
+        .join()
+        .expect("accept loop joins")
+        .expect("serve_tcp_until returns cleanly");
 }
 
 /// A generous budget is invisible: the gdf run produces bitwise the
